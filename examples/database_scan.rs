@@ -1,0 +1,84 @@
+//! Database scan through the full three-layer stack: the fused
+//! popcount(A AND B) bitmap-scan kernel (L1 Pallas -> L2 JAX -> AOT
+//! HLO) executed from rust via PJRT, next to the coordinator's
+//! PUD/fallback dispatch for the same query.
+//!
+//! This example REQUIRES the artifacts (`make artifacts`) because the
+//! fused scan only exists as an XLA executable.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example database_scan
+//! ```
+
+use puma::alloc::puma::{FitPolicy, PumaAlloc};
+use puma::config;
+use puma::coordinator::system::{System, SystemConfig};
+use puma::runtime::{XlaRuntime, ROW_BYTES};
+use puma::util::rng::Pcg64;
+use puma::util::units::fmt_ns;
+use puma::workloads::bitmap_index::BitmapIndex;
+
+fn main() -> anyhow::Result<()> {
+    let Some(artifacts) = config::default_artifacts() else {
+        eprintln!("artifacts/ missing — run `make artifacts` first");
+        std::process::exit(2);
+    };
+
+    // --- Path 1: the fused bitmapscan XLA kernel, straight from rust.
+    let mut rt = XlaRuntime::load(&artifacts)?;
+    let rows = 96u32; // 96 DRAM rows = 768 KiB per bitmap
+    let n = rows as usize * ROW_BYTES;
+    let mut rng = Pcg64::new(42);
+    let mut a = vec![0u8; n];
+    let mut b = vec![0u8; n];
+    rng.fill_bytes(&mut a);
+    rng.fill_bytes(&mut b);
+    let t0 = std::time::Instant::now();
+    let matches = rt.bitmap_scan(rows, &a, &b)?;
+    let wall = t0.elapsed();
+    let want: i64 = a
+        .iter()
+        .zip(&b)
+        .map(|(x, y)| (x & y).count_ones() as i64)
+        .sum();
+    assert_eq!(matches, want, "fused scan must match host popcount");
+    println!(
+        "fused XLA bitmap scan: {} matching bits over {} ({} dispatches, {:?} wall)",
+        matches,
+        puma::util::units::fmt_bytes(n as u64),
+        rt.dispatches,
+        wall
+    );
+
+    // --- Path 2: the same query through the coordinator (AND in-DRAM
+    //     under PUMA placement, count on readback).
+    let mut sys = System::boot(SystemConfig {
+        huge_pages: 64,
+        artifacts: Some(artifacts),
+        ..Default::default()
+    })?;
+    let pid = sys.spawn();
+    let mut puma = PumaAlloc::new(
+        sys.os.scheme.geometry.row_bytes as u64,
+        FitPolicy::WorstFit,
+    );
+    puma.pim_preallocate(&mut sys.os, 16)?;
+    let idx = BitmapIndex::build(
+        &mut sys,
+        &mut puma,
+        pid,
+        &["color=red", "size=large"],
+        (n * 8) as u64,
+        0.5,
+        42,
+    )?;
+    let (ns, count) = idx.query_and(&mut sys, &[0, 1])?;
+    assert_eq!(count, idx.expected_count(&[0, 1]));
+    println!(
+        "coordinator scan: {count} rows in {} simulated ({:.0}% in-DRAM)",
+        fmt_ns(ns),
+        sys.coord.stats.pud_row_fraction() * 100.0
+    );
+    println!("database_scan OK");
+    Ok(())
+}

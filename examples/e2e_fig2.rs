@@ -1,0 +1,80 @@
+//! END-TO-END DRIVER: reproduce the paper's Figure 2 on the full
+//! three-layer stack.
+//!
+//! For every micro-benchmark (`*-zero`, `*-copy`, `*-aand`) and every
+//! allocation size in the paper's sweep (2000 bits ... 6 Mb), this
+//! boots a fresh 8 GiB machine, allocates operands with PUMA
+//! (pim_alloc / pim_alloc_align) and with malloc, dispatches the bulk
+//! operations through the coordinator — in-DRAM when legal, through
+//! the AOT-compiled XLA kernels otherwise — and reports the speedup
+//! series exactly like the paper's figure. Results land in
+//! `out/figure2.csv` and are summarized in EXPERIMENTS.md.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example e2e_fig2
+//! ```
+//!
+//! Runtime is a few minutes with XLA (set PUMA_E2E_FAST=1 for a quick
+//! subset).
+
+use puma::alloc::puma::FitPolicy;
+use puma::config;
+use puma::report;
+use puma::workloads::microbench::{AllocatorKind, Micro};
+use puma::workloads::sweep::{self, SweepConfig};
+
+fn main() -> anyhow::Result<()> {
+    let fast = std::env::var("PUMA_E2E_FAST").is_ok();
+    let mut cfg = SweepConfig {
+        artifacts: config::default_artifacts(),
+        ..Default::default()
+    };
+    if cfg.artifacts.is_none() {
+        eprintln!("note: artifacts/ missing — falling back to scalar CPU path");
+    }
+    if fast {
+        cfg.sizes = vec![250, 64 << 10, 768 << 10];
+    }
+
+    let mut series = Vec::new();
+    for micro in Micro::ALL {
+        eprintln!("[e2e] sweeping {}-micro ({} sizes)...", micro.name(), cfg.sizes.len());
+        let cells = sweep::run_micro_sweep(
+            &cfg,
+            AllocatorKind::Puma(FitPolicy::WorstFit),
+            micro,
+        )?;
+        for c in &cells {
+            eprintln!(
+                "[e2e]   {}  size {:>8}  speedup {:>6.2}x  pud {:>4.0}%  xla {} dispatches",
+                micro.name(),
+                c.result.size,
+                c.speedup(),
+                c.result.pud_fraction() * 100.0,
+                c.result.coord.xla_dispatches,
+            );
+        }
+        series.push((micro, cells));
+    }
+
+    let out = std::path::Path::new("out");
+    println!("{}", report::figure2(&series, Some(out))?);
+
+    // headline checks (the paper's two observations)
+    for (micro, cells) in &series {
+        let first = cells.first().unwrap().speedup();
+        let last = cells.last().unwrap().speedup();
+        assert!(
+            last >= 1.0,
+            "{}: PUMA should win at the top size (got {last:.2}x)",
+            micro.name()
+        );
+        assert!(
+            last > first * 0.8,
+            "{}: speedup should not collapse with size ({first:.2}x -> {last:.2}x)",
+            micro.name()
+        );
+    }
+    println!("e2e_fig2 OK — raw series in out/figure2.csv");
+    Ok(())
+}

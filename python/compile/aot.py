@@ -1,0 +1,75 @@
+"""AOT bridge: lower every L2 entry point to HLO *text* artifacts.
+
+Run once at build time (``make artifacts``); rust loads the text via
+``HloModuleProto::from_text_file`` and compiles it on the PJRT CPU
+client. Text — NOT ``.serialize()`` — is the interchange format: jax
+>= 0.5 emits HloModuleProtos with 64-bit instruction ids which the
+image's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the
+text parser reassigns ids and round-trips cleanly.
+(See /opt/xla-example/README.md and gen_hlo.py.)
+
+Outputs, under --out (default ../artifacts):
+  <name>.hlo.txt        one per entry point ("and_r8", "bitmapscan_r64", ...)
+  manifest.tsv          name / op / rows / lanes / arity / dtype / file
+The manifest is the runtime's source of truth for the executable cache.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-reassigning path)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_entry(name: str, fn, arity: int, rows: int) -> str:
+    args = model.example_args(arity, rows)
+    return to_hlo_text(jax.jit(fn).lower(*args))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts",
+                    help="artifact output directory")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated entry-point names (debug aid)")
+    ns = ap.parse_args()
+    os.makedirs(ns.out, exist_ok=True)
+
+    eps = model.entry_points()
+    if ns.only:
+        keep = set(ns.only.split(","))
+        eps = {k: v for k, v in eps.items() if k in keep}
+
+    manifest_rows = []
+    for name, (fn, arity, rows) in sorted(eps.items()):
+        text = lower_entry(name, fn, arity, rows)
+        path = os.path.join(ns.out, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        op = name.rsplit("_r", 1)[0]
+        manifest_rows.append(
+            (name, op, rows, model.LANES, arity, "i32", f"{name}.hlo.txt"))
+        print(f"  {name}: {len(text)} chars -> {path}")
+
+    with open(os.path.join(ns.out, "manifest.tsv"), "w") as f:
+        f.write("# name\top\trows\tlanes\tarity\tdtype\tfile\n")
+        for row in manifest_rows:
+            f.write("\t".join(str(c) for c in row) + "\n")
+    print(f"wrote {len(manifest_rows)} artifacts + manifest.tsv to {ns.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,202 @@
+"""L1 — Pallas kernels for the PUD operation set.
+
+These kernels are the *CPU-fallback* implementations of exactly the
+operations the modeled PUD substrate (Ambit + RowClone) can execute
+in-DRAM:
+
+  ===========  =========================  ==========================
+  kernel       PUD analogue               mechanism modeled
+  -----------  -------------------------  --------------------------
+  copy         RowClone FPM               ACT src -> ACT dst (AAP)
+  zero         RowClone zero-init         AAP from reserved zero row
+  and_ / or_   Ambit triple-row act.      maj(A, B, C=0/1)
+  not_         Ambit dual-contact cell    bitline inversion
+  xor_         Ambit composite            3x TRA + 2x NOT sequence
+  maj3         Ambit TRA primitive        maj(A, B, C) on bitlines
+  and_popcount bitmap-scan fused op       TRA + host reduce
+  ===========  =========================  ==========================
+
+Hardware adaptation (see DESIGN.md §Hardware-Adaptation): the paper's
+substrate operates on whole DRAM rows (8 KiB = 65536 bitlines at once).
+We mirror that structure: arrays are shaped ``(rows, LANES)`` with
+``LANES = 2048`` int32 lanes == one 8 KiB DRAM row per grid step, and
+each kernel tiles with ``BlockSpec((block_rows, LANES))`` so the
+HBM->VMEM block schedule corresponds to ACTIVATE(row)->row-buffer.
+
+All kernels are lowered with ``interpret=True``: the CPU PJRT plugin
+cannot execute Mosaic custom-calls, and correctness (vs ``ref.py``) is
+the signal we need — PUD timing is analytic, in the rust simulator.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# One DRAM row = 8 KiB = 2048 x int32 lanes. Keep in sync with
+# rust/src/dram/geometry.rs::ROW_BYTES.
+LANES = 2048
+
+# Rows per VMEM block. 8 rows x 8 KiB = 64 KiB per operand block —
+# comfortably inside a ~16 MiB VMEM budget even for 3-operand kernels,
+# wide enough to amortize the grid loop. See EXPERIMENTS.md §Perf for
+# the block-shape sweep that picked this value.
+DEFAULT_BLOCK_ROWS = 8
+
+
+def _block_rows(rows: int, block_rows: int | None) -> int:
+    """Largest divisor of ``rows`` not exceeding the requested block."""
+    b = min(block_rows or DEFAULT_BLOCK_ROWS, rows)
+    while rows % b:
+        b -= 1
+    return b
+
+
+def _row_spec(block_rows: int, lanes: int) -> pl.BlockSpec:
+    return pl.BlockSpec((block_rows, lanes), lambda i: (i, 0))
+
+
+def _pallas_rowwise(kernel, n_in: int, rows: int, lanes: int,
+                    block_rows: int | None, dtype=jnp.int32,
+                    out_lanes: int | None = None):
+    """Common wrapper: row-tiled elementwise kernel over (rows, lanes)."""
+    b = _block_rows(rows, block_rows)
+    out_lanes = lanes if out_lanes is None else out_lanes
+    return pl.pallas_call(
+        kernel,
+        grid=(rows // b,),
+        in_specs=[_row_spec(b, lanes)] * n_in,
+        out_specs=_row_spec(b, out_lanes),
+        out_shape=jax.ShapeDtypeStruct((rows, out_lanes), dtype),
+        interpret=True,
+    )
+
+
+# ---------------------------------------------------------------- kernels
+
+def _and_kernel(x_ref, y_ref, o_ref):
+    o_ref[...] = x_ref[...] & y_ref[...]
+
+
+def _or_kernel(x_ref, y_ref, o_ref):
+    o_ref[...] = x_ref[...] | y_ref[...]
+
+
+def _xor_kernel(x_ref, y_ref, o_ref):
+    o_ref[...] = x_ref[...] ^ y_ref[...]
+
+
+def _not_kernel(x_ref, o_ref):
+    o_ref[...] = ~x_ref[...]
+
+
+def _copy_kernel(x_ref, o_ref):
+    # RowClone-FPM analogue: the block transits VMEM the way a row
+    # transits the row buffer.
+    o_ref[...] = x_ref[...]
+
+
+def _zero_kernel(o_ref):
+    # RowClone zero-init: copy from the reserved all-zeros row.
+    o_ref[...] = jnp.zeros_like(o_ref)
+
+
+def _maj3_kernel(a_ref, b_ref, c_ref, o_ref):
+    # Ambit TRA primitive: bitline majority of three simultaneously
+    # activated rows.
+    a, b, c = a_ref[...], b_ref[...], c_ref[...]
+    o_ref[...] = (a & b) | (b & c) | (c & a)
+
+
+def _popcount_i32(v):
+    """SWAR popcount per int32 lane (Hacker's Delight 5-2)."""
+    v = v.astype(jnp.uint32)
+    v = v - ((v >> 1) & jnp.uint32(0x55555555))
+    v = (v & jnp.uint32(0x33333333)) + ((v >> 2) & jnp.uint32(0x33333333))
+    v = (v + (v >> 4)) & jnp.uint32(0x0F0F0F0F)
+    return ((v * jnp.uint32(0x01010101)) >> 24).astype(jnp.int32)
+
+
+def _and_popcount_kernel(x_ref, y_ref, o_ref):
+    # Fused bitmap-scan op: popcount(A AND B) reduced per row-block.
+    # o_ref is (block_rows, 1): one partial count per row.
+    v = x_ref[...] & y_ref[...]
+    o_ref[...] = jnp.sum(_popcount_i32(v), axis=1, keepdims=True)
+
+
+# ------------------------------------------------------------ public API
+#
+# Each op_* builds the row-tiled pallas computation for a concrete
+# (rows, lanes, dtype) shape; model.py composes these into the L2 graph.
+
+def op_and(rows: int, lanes: int = LANES, block_rows: int | None = None,
+           dtype=jnp.int32):
+    return _pallas_rowwise(_and_kernel, 2, rows, lanes, block_rows, dtype)
+
+
+def op_or(rows: int, lanes: int = LANES, block_rows: int | None = None,
+          dtype=jnp.int32):
+    return _pallas_rowwise(_or_kernel, 2, rows, lanes, block_rows, dtype)
+
+
+def op_xor(rows: int, lanes: int = LANES, block_rows: int | None = None,
+           dtype=jnp.int32):
+    return _pallas_rowwise(_xor_kernel, 2, rows, lanes, block_rows, dtype)
+
+
+def op_not(rows: int, lanes: int = LANES, block_rows: int | None = None,
+           dtype=jnp.int32):
+    return _pallas_rowwise(_not_kernel, 1, rows, lanes, block_rows, dtype)
+
+
+def op_copy(rows: int, lanes: int = LANES, block_rows: int | None = None,
+            dtype=jnp.int32):
+    return _pallas_rowwise(_copy_kernel, 1, rows, lanes, block_rows, dtype)
+
+
+def op_zero(rows: int, lanes: int = LANES, block_rows: int | None = None,
+            dtype=jnp.int32):
+    return _pallas_rowwise(_zero_kernel, 0, rows, lanes, block_rows, dtype)
+
+
+def op_maj3(rows: int, lanes: int = LANES, block_rows: int | None = None,
+            dtype=jnp.int32):
+    return _pallas_rowwise(_maj3_kernel, 3, rows, lanes, block_rows, dtype)
+
+
+def op_and_popcount(rows: int, lanes: int = LANES,
+                    block_rows: int | None = None, dtype=jnp.int32):
+    """Fused popcount(A AND B) -> (rows, 1) int32 partial sums."""
+    return _pallas_rowwise(_and_popcount_kernel, 2, rows, lanes,
+                           block_rows, jnp.int32, out_lanes=1)
+
+
+#: name -> (builder, arity). Arity is the number of array inputs.
+OPS = {
+    "and": (op_and, 2),
+    "or": (op_or, 2),
+    "xor": (op_xor, 2),
+    "not": (op_not, 1),
+    "copy": (op_copy, 1),
+    "zero": (op_zero, 0),
+    "maj3": (op_maj3, 3),
+    "andpop": (op_and_popcount, 2),
+}
+
+
+@functools.lru_cache(maxsize=None)
+def vmem_bytes(op: str, rows: int, lanes: int = LANES,
+               block_rows: int | None = None) -> int:
+    """Static VMEM footprint estimate for one grid step of ``op``.
+
+    Used by the §Perf structural analysis (interpret=True gives no real
+    VMEM numbers): sum of all operand blocks resident per step.
+    """
+    builder, arity = OPS[op]
+    b = _block_rows(rows, block_rows)
+    out_lanes = 1 if op == "andpop" else lanes
+    per_lane = 4  # int32
+    return b * per_lane * (arity * lanes + out_lanes)

@@ -1,0 +1,68 @@
+"""Pure-jnp correctness oracles for the L1 Pallas kernels.
+
+Every kernel in ``bitwise.py`` has a one-line reference here; pytest
+(``python/tests/test_kernel.py``) asserts bit-exact agreement across a
+hypothesis sweep of shapes and dtypes. This file is the single source
+of truth for functional semantics — the rust PUD substrate's unit
+tests encode the same identities independently.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def ref_and(x, y):
+    return x & y
+
+
+def ref_or(x, y):
+    return x | y
+
+
+def ref_xor(x, y):
+    return x ^ y
+
+
+def ref_not(x):
+    return ~x
+
+
+def ref_copy(x):
+    return x
+
+
+def ref_zero(rows: int, lanes: int, dtype=jnp.int32):
+    return jnp.zeros((rows, lanes), dtype)
+
+
+def ref_maj3(a, b, c):
+    """Bitwise majority — the Ambit triple-row-activation primitive."""
+    return (a & b) | (b & c) | (c & a)
+
+
+def ref_popcount_i32(v):
+    """Per-lane popcount of an int32/uint32 array (SWAR, matches kernel)."""
+    v = v.astype(jnp.uint32)
+    v = v - ((v >> 1) & jnp.uint32(0x55555555))
+    v = (v & jnp.uint32(0x33333333)) + ((v >> 2) & jnp.uint32(0x33333333))
+    v = (v + (v >> 4)) & jnp.uint32(0x0F0F0F0F)
+    return ((v * jnp.uint32(0x01010101)) >> 24).astype(jnp.int32)
+
+
+def ref_and_popcount(x, y):
+    """popcount(x & y) summed per row -> (rows, 1) int32."""
+    return jnp.sum(ref_popcount_i32(x & y), axis=1, keepdims=True,
+                   dtype=jnp.int32)
+
+
+#: name -> (reference fn over arrays, arity) — mirrors bitwise.OPS.
+REF_OPS = {
+    "and": (ref_and, 2),
+    "or": (ref_or, 2),
+    "xor": (ref_xor, 2),
+    "not": (ref_not, 1),
+    "copy": (ref_copy, 1),
+    "maj3": (ref_maj3, 3),
+    "andpop": (ref_and_popcount, 2),
+}

@@ -1,0 +1,97 @@
+"""L2 — the JAX compute graphs that the rust coordinator executes as its
+CPU-fallback path.
+
+The paper's system dispatches each bulk memory operation either to the
+PUD substrate (in-DRAM, when operands are subarray-co-located and
+row-aligned) or to the host CPU. Our host-CPU path is this module:
+batched bulk operators over row-shaped buffers, each calling the L1
+Pallas kernel (``kernels/bitwise.py``), jit-lowered once by ``aot.py``
+to HLO text and executed from rust via PJRT.
+
+Shape-bucketing: HLO is shape-specialized, so we lower every op at a
+small set of row-count buckets (vLLM-style). The rust runtime
+(rust/src/runtime/exe_cache.rs) picks the largest bucket <= remaining
+rows and loops; the tail goes through progressively smaller buckets.
+
+All buffers are ``(rows, LANES) int32`` — one DRAM row per array row.
+"""
+
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import bitwise
+
+#: Row-count buckets lowered ahead of time. Powers of 8-ish keep the
+#: executable cache small (4 entries/op) while bounding tail waste;
+#: with greedy bucketing any request is covered by <= 2x the optimal
+#: number of dispatches.
+ROW_BUCKETS = (1, 8, 64, 256)
+
+LANES = bitwise.LANES
+
+
+def make_bulk_op(op: str, rows: int, lanes: int = LANES) -> Callable:
+    """Build the L2 graph for one (op, rows) bucket.
+
+    Returns a function of ``arity`` arrays of shape (rows, lanes) int32
+    returning a 1-tuple (the AOT bridge lowers with return_tuple=True).
+    """
+    builder, arity = bitwise.OPS[op]
+    computation = builder(rows, lanes)
+
+    if arity == 0:
+        def fn():
+            return (computation(),)
+    elif arity == 1:
+        def fn(x):
+            return (computation(x),)
+    elif arity == 2:
+        def fn(x, y):
+            return (computation(x, y),)
+    else:
+        def fn(x, y, z):
+            return (computation(x, y, z),)
+    fn.__name__ = f"bulk_{op}_r{rows}"
+    return fn, arity
+
+
+def make_bitmap_scan(rows: int, lanes: int = LANES) -> Callable:
+    """Fused bitmap-index scan: total = sum(popcount(A AND B)).
+
+    The motivating database workload for Ambit-style PUD (bitmap index
+    intersections); used by examples/database_scan.rs. The AND runs on
+    the Pallas kernel; the final scalar reduce is plain jnp and fuses
+    into the same HLO module.
+    """
+    andpop = bitwise.op_and_popcount(rows, lanes)
+
+    def fn(x, y):
+        per_row = andpop(x, y)              # (rows, 1) partial counts
+        return (jnp.sum(per_row, dtype=jnp.int32).reshape((1, 1)),)
+
+    fn.__name__ = f"bitmap_scan_r{rows}"
+    return fn, 2
+
+
+def example_args(arity: int, rows: int, lanes: int = LANES):
+    """ShapeDtypeStructs used to trace/lower a bucket."""
+    spec = jax.ShapeDtypeStruct((rows, lanes), jnp.int32)
+    return (spec,) * arity
+
+
+#: Every entry point lowered by aot.py: name -> (fn factory, arity).
+#: Keys are the artifact base names ("<op>_r<rows>").
+def entry_points():
+    eps = {}
+    for op in bitwise.OPS:
+        for rows in ROW_BUCKETS:
+            fn, arity = make_bulk_op(op, rows)
+            eps[f"{op}_r{rows}"] = (fn, arity, rows)
+    for rows in ROW_BUCKETS:
+        fn, arity = make_bitmap_scan(rows)
+        eps[f"bitmapscan_r{rows}"] = (fn, arity, rows)
+    return eps

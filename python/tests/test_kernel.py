@@ -1,0 +1,179 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle (ref.py).
+
+Hypothesis sweeps shapes (rows x lanes) and dtypes; every comparison is
+bit-exact (assert_array_equal — these are integer bitwise ops, not
+float math). This is the CORE correctness signal for the CPU-fallback
+path the rust coordinator executes.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import bitwise, ref
+
+jax.config.update("jax_enable_x64", False)
+
+# Lanes must be meaningful but small enough for fast interpret-mode
+# runs; hardware lanes (2048) are exercised in the AOT smoke test.
+LANE_CHOICES = (8, 32, 128)
+DTYPES = (jnp.int32, jnp.uint32)
+
+
+def _np_dtype(dt):
+    return np.int32 if dt == jnp.int32 else np.uint32
+
+
+def make_inputs(seed, arity, rows, lanes, dt=jnp.int32):
+    rng = np.random.default_rng(seed)
+    return tuple(
+        jnp.asarray(rng.integers(0, 2**32, size=(rows, lanes),
+                                 dtype=np.uint64).astype(np.uint32)
+                    .view(_np_dtype(dt)))
+        for _ in range(arity)
+    )
+
+
+@pytest.mark.parametrize("op", sorted(bitwise.OPS))
+def test_op_matches_ref_fixed_shape(op):
+    """Every op, canonical small shape, kernel vs oracle bit-exact."""
+    builder, arity = bitwise.OPS[op]
+    rows, lanes = 4, 64
+    computation = builder(rows, lanes)
+    xs = make_inputs(0xC0FFEE, arity, rows, lanes)
+    got = computation(*xs)
+    if op == "zero":
+        want = ref.ref_zero(rows, lanes)
+    else:
+        want = ref.REF_OPS[op][0](*xs)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("op", ["and", "copy", "zero"])
+def test_op_hardware_lane_width(op):
+    """The real artifact shape: full 2048-lane DRAM row."""
+    builder, arity = bitwise.OPS[op]
+    computation = builder(2, bitwise.LANES)
+    xs = make_inputs(7, arity, 2, bitwise.LANES)
+    got = computation(*xs)
+    if op == "zero":
+        want = ref.ref_zero(2, bitwise.LANES)
+    else:
+        want = ref.REF_OPS[op][0](*xs)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    op=st.sampled_from(sorted(bitwise.OPS)),
+    rows=st.integers(min_value=1, max_value=24),
+    lanes=st.sampled_from(LANE_CHOICES),
+    dt=st.sampled_from(DTYPES),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_op_matches_ref_hypothesis(op, rows, lanes, dt, seed):
+    """Hypothesis sweep: arbitrary rows (incl. counts not divisible by
+    the default block), multiple lane widths and dtypes."""
+    if op == "andpop":
+        dt = jnp.int32  # fused popcount path is defined over i32
+    builder, arity = bitwise.OPS[op]
+    computation = builder(rows, lanes, dtype=dt)
+    xs = make_inputs(seed, arity, rows, lanes, dt)
+    got = computation(*xs)
+    if op == "zero":
+        want = ref.ref_zero(rows, lanes, dt)
+    else:
+        want = ref.REF_OPS[op][0](*xs)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    rows=st.integers(min_value=1, max_value=16),
+    lanes=st.sampled_from(LANE_CHOICES),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_ambit_identities(rows, lanes, seed):
+    """Substrate identities the rust PUD model relies on:
+    maj(A,B,0) == AND, maj(A,B,~0) == OR, XOR via AND/NOT composition."""
+    a, b = make_inputs(seed, 2, rows, lanes)
+    zeros = jnp.zeros_like(a)
+    ones = jnp.full_like(a, -1)
+    maj = bitwise.op_maj3(rows, lanes)
+    np.testing.assert_array_equal(np.asarray(maj(a, b, zeros)),
+                                  np.asarray(a & b))
+    np.testing.assert_array_equal(np.asarray(maj(a, b, ones)),
+                                  np.asarray(a | b))
+    # Ambit composes XOR as (A AND NOT B) OR (NOT A AND B).
+    np.testing.assert_array_equal(np.asarray((a & ~b) | (~a & b)),
+                                  np.asarray(a ^ b))
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    rows=st.integers(min_value=1, max_value=12),
+    lanes=st.sampled_from(LANE_CHOICES),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_maj3_commutative(rows, lanes, seed):
+    """TRA is order-insensitive: maj(a,b,c) == maj(c,a,b) == maj(b,c,a)."""
+    a, b, c = make_inputs(seed, 3, rows, lanes)
+    maj = bitwise.op_maj3(rows, lanes)
+    first = np.asarray(maj(a, b, c))
+    np.testing.assert_array_equal(first, np.asarray(maj(c, a, b)))
+    np.testing.assert_array_equal(first, np.asarray(maj(b, c, a)))
+
+
+def test_popcount_extremes():
+    zero = jnp.zeros((2, 8), jnp.int32)
+    np.testing.assert_array_equal(np.asarray(ref.ref_popcount_i32(zero)),
+                                  np.zeros((2, 8), np.int32))
+    allones = jnp.full((2, 8), -1, jnp.int32)
+    np.testing.assert_array_equal(np.asarray(ref.ref_popcount_i32(allones)),
+                                  np.full((2, 8), 32, np.int32))
+
+
+def test_popcount_single_bit_positions():
+    vals = jnp.asarray(
+        [[np.uint32(1 << i).astype(np.uint32).view(np.int32)
+          for i in range(32)]], dtype=jnp.int32)
+    got = ref.ref_popcount_i32(vals)
+    np.testing.assert_array_equal(np.asarray(got),
+                                  np.ones((1, 32), np.int32))
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    rows=st.integers(min_value=1, max_value=8),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_andpop_equals_numpy_bitcount(rows, seed):
+    """Cross-check the SWAR popcount against numpy's unpackbits."""
+    x, y = make_inputs(seed, 2, rows, 32)
+    got = np.asarray(bitwise.op_and_popcount(rows, 32)(x, y))[:, 0]
+    raw = (np.asarray(x).view(np.uint32) & np.asarray(y).view(np.uint32))
+    want = np.array([
+        np.unpackbits(raw[r].view(np.uint8)).sum() for r in range(rows)
+    ], dtype=np.int32)
+    np.testing.assert_array_equal(got, want)
+
+
+def test_vmem_estimate_structural():
+    """Structural §Perf helper: footprint = blk_rows*(arity*lanes+out)*4."""
+    assert bitwise.vmem_bytes("and", 8) == 3 * 8 * 2048 * 4
+    assert bitwise.vmem_bytes("maj3", 8) == 4 * 8 * 2048 * 4
+    assert bitwise.vmem_bytes("zero", 8) == 1 * 8 * 2048 * 4
+    assert bitwise.vmem_bytes("andpop", 8) == 8 * (2 * 2048 + 1) * 4
+    assert bitwise.vmem_bytes("and", 1) < bitwise.vmem_bytes("and", 8)
+
+
+def test_block_rows_divisibility():
+    """_block_rows always divides rows and never exceeds the request."""
+    for rows in range(1, 50):
+        b = bitwise._block_rows(rows, None)
+        assert rows % b == 0
+        assert 1 <= b <= min(rows, bitwise.DEFAULT_BLOCK_ROWS)

@@ -1,0 +1,103 @@
+"""L2 tests: entry-point inventory, shapes, and HLO lowering sanity.
+
+These validate the build-time contract between python and the rust
+runtime: every manifest entry lowers to parseable HLO text with the
+declared arity/shape, and the bitmap-scan fusion returns the exact
+scalar the oracle predicts.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, model
+from compile.kernels import bitwise, ref
+
+
+def test_entry_point_inventory():
+    eps = model.entry_points()
+    # 8 bulk ops x 4 buckets + bitmapscan x 4 buckets
+    assert len(eps) == (len(bitwise.OPS) + 1) * len(model.ROW_BUCKETS)
+    for op in bitwise.OPS:
+        for rows in model.ROW_BUCKETS:
+            assert f"{op}_r{rows}" in eps
+    for rows in model.ROW_BUCKETS:
+        assert f"bitmapscan_r{rows}" in eps
+
+
+def test_entry_point_arity_matches_ops():
+    eps = model.entry_points()
+    for name, (_fn, arity, rows) in eps.items():
+        op = name.rsplit("_r", 1)[0]
+        if op == "bitmapscan":
+            assert arity == 2
+        else:
+            assert arity == bitwise.OPS[op][1]
+        assert rows in model.ROW_BUCKETS
+
+
+@pytest.mark.parametrize("op,rows", [("and", 1), ("zero", 8), ("copy", 1),
+                                     ("maj3", 1)])
+def test_bulk_op_executes(op, rows):
+    fn, arity = model.make_bulk_op(op, rows, lanes=64)
+    rng = np.random.default_rng(1)
+    xs = tuple(jnp.asarray(rng.integers(-2**31, 2**31, size=(rows, 64),
+                                        dtype=np.int64).astype(np.int32))
+               for _ in range(arity))
+    out = fn(*xs)
+    assert isinstance(out, tuple) and len(out) == 1
+    assert out[0].shape == (rows, 64)
+    if op == "zero":
+        np.testing.assert_array_equal(np.asarray(out[0]),
+                                      np.zeros((rows, 64), np.int32))
+    elif op == "copy":
+        np.testing.assert_array_equal(np.asarray(out[0]), np.asarray(xs[0]))
+
+
+def test_bitmap_scan_scalar_matches_oracle():
+    rows, lanes = 8, 32
+    fn, arity = model.make_bitmap_scan(rows, lanes)
+    assert arity == 2
+    rng = np.random.default_rng(2)
+    x, y = (jnp.asarray(rng.integers(0, 2**32, size=(rows, lanes),
+                                     dtype=np.uint64).astype(np.uint32)
+                        .view(np.int32)) for _ in range(2))
+    (got,) = fn(x, y)
+    assert got.shape == (1, 1)
+    want = int(np.asarray(ref.ref_and_popcount(x, y)).sum())
+    assert int(np.asarray(got)[0, 0]) == want
+
+
+@pytest.mark.parametrize("name", ["and_r1", "zero_r1", "not_r1",
+                                  "bitmapscan_r1"])
+def test_lowering_produces_hlo_text(name):
+    eps = model.entry_points()
+    fn, arity, rows = eps[name]
+    text = aot.lower_entry(name, fn, arity, rows)
+    # Plausible HLO text: module header + ROOT instruction + tuple return
+    assert text.startswith("HloModule")
+    assert "ROOT" in text
+    assert "s32[" in text
+    # return_tuple=True => root is a tuple shape
+    assert "(s32[" in text
+
+
+def test_lowered_parameter_count_matches_arity():
+    eps = model.entry_points()
+    for name in ["and_r1", "not_r1", "zero_r1", "maj3_r1"]:
+        fn, arity, rows = eps[name]
+        text = aot.lower_entry(name, fn, arity, rows)
+        # count distinct parameter instructions in the entry computation
+        nparams = text.count("parameter(")
+        assert nparams >= arity  # nested computations may add more
+        if arity == 0:
+            assert "parameter(0)" not in text.split("ENTRY")[1]
+
+
+def test_example_args_shapes():
+    args = model.example_args(2, 8, 16)
+    assert len(args) == 2
+    assert all(a.shape == (8, 16) and a.dtype == jnp.int32 for a in args)

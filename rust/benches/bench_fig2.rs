@@ -1,0 +1,67 @@
+//! E2 / Figure 2 — PUMA speedup over malloc for the three
+//! micro-benchmarks across the paper's allocation-size sweep.
+//!
+//! The primary output is the *simulated-time* speedup series (the
+//! paper's y-axis); the harness also reports wall-clock per sweep cell
+//! for §Perf. Raw series land in out/figure2.csv.
+//!
+//! Run: `cargo bench --bench bench_fig2`
+//! Fast: `PUMA_BENCH_FAST=1 cargo bench --bench bench_fig2`
+//! With the XLA runtime on the fallback path: `PUMA_BENCH_XLA=1 ...`
+
+use puma::alloc::puma::FitPolicy;
+use puma::report;
+use puma::workloads::microbench::{AllocatorKind, Micro};
+use puma::workloads::sweep::{self, SweepConfig};
+
+fn main() -> anyhow::Result<()> {
+    let fast = std::env::var("PUMA_BENCH_FAST").is_ok();
+    let use_xla = std::env::var("PUMA_BENCH_XLA").is_ok();
+    let mut cfg = SweepConfig::default();
+    if use_xla {
+        cfg.artifacts = puma::config::default_artifacts();
+        if cfg.artifacts.is_none() {
+            eprintln!("PUMA_BENCH_XLA set but artifacts/ missing; scalar fallback");
+        }
+    }
+    if fast {
+        cfg.sizes = vec![250, 64 << 10, 768 << 10];
+        cfg.huge_pages = 64;
+        cfg.churn_rounds = 5_000;
+    }
+
+    println!("# bench_fig2 — reproduces paper Figure 2");
+    let mut series = Vec::new();
+    for micro in Micro::ALL {
+        let t0 = std::time::Instant::now();
+        let cells = sweep::run_micro_sweep(
+            &cfg,
+            AllocatorKind::Puma(FitPolicy::WorstFit),
+            micro,
+        )?;
+        println!(
+            "{:<6} sweep: {} cells in {:.2?} wall",
+            micro.name(),
+            cells.len(),
+            t0.elapsed()
+        );
+        series.push((micro, cells));
+    }
+    println!();
+    println!("{}", report::figure2(&series, Some(std::path::Path::new("out")))?);
+
+    // Paper-shape assertions: PUMA wins at the large end, and the
+    // speedup at the top size exceeds the smallest size's.
+    for (micro, cells) in &series {
+        let first = cells.first().unwrap().speedup();
+        let last = cells.last().unwrap().speedup();
+        assert!(last > 1.0, "{}: top-size speedup {last:.2}x <= 1", micro.name());
+        assert!(
+            last > first,
+            "{}: speedup must grow with size ({first:.2}x -> {last:.2}x)",
+            micro.name()
+        );
+    }
+    println!("fig2 shape checks passed (PUMA wins; speedup grows with size)");
+    Ok(())
+}

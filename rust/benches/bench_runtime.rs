@@ -1,0 +1,70 @@
+//! E6 — XLA/PJRT fallback runtime throughput (wall-clock).
+//!
+//! Measures the CPU-fallback hot path in isolation: bulk ops through
+//! the AOT-compiled kernels, across shape buckets, plus the effect of
+//! greedy bucketing on odd row counts. This is the §Perf measurement
+//! harness for L3's fallback dispatch and the L1 kernels' CPU
+//! execution. Requires `make artifacts`; skips cleanly without it.
+//!
+//! Run: `cargo bench --bench bench_runtime`
+
+use puma::runtime::{XlaRuntime, ROW_BYTES};
+use puma::util::bench::{bench, black_box, BenchOpts};
+use puma::util::csvio::Csv;
+use puma::util::rng::Pcg64;
+
+fn main() -> anyhow::Result<()> {
+    println!("# bench_runtime — XLA fallback throughput (E6 / §Perf)");
+    let Some(dir) = puma::config::default_artifacts() else {
+        println!("artifacts/ missing — run `make artifacts`; skipping");
+        return Ok(());
+    };
+    let t0 = std::time::Instant::now();
+    let mut rt = XlaRuntime::load(&dir)?;
+    println!("loaded + compiled {} ops in {:.2?}\n", rt.ops().len(), t0.elapsed());
+
+    let opts = BenchOpts::from_env();
+    let mut rng = Pcg64::new(0xBE);
+    let mut csv = Csv::new(vec!["op", "rows", "mean_ns", "gib_per_s"]);
+
+    for op in ["and", "copy", "zero", "xor"] {
+        for rows in [1u32, 8, 64, 256] {
+            let n = rows as usize * ROW_BYTES;
+            let mut a = vec![0u8; n];
+            let mut b = vec![0u8; n];
+            rng.fill_bytes(&mut a);
+            rng.fill_bytes(&mut b);
+            let srcs: Vec<&[u8]> = match op {
+                "and" | "xor" => vec![&a, &b],
+                "copy" => vec![&a],
+                _ => vec![],
+            };
+            let res = bench(&format!("{op}@{rows}rows"), &opts, |_| {
+                let out = rt.run_op(op, rows, &srcs).expect("run_op");
+                black_box(out);
+            });
+            let gibps = n as f64 / res.wall_ns.mean / 1.073_741_824;
+            csv.row(vec![
+                op.to_string(),
+                rows.to_string(),
+                format!("{:.0}", res.wall_ns.mean),
+                format!("{gibps:.2}"),
+            ]);
+        }
+    }
+
+    // bucketing overhead: 257 rows = 256+1 vs two native dispatches
+    let rows = 257u32;
+    let n = rows as usize * ROW_BYTES;
+    let mut a = vec![0u8; n];
+    rng.fill_bytes(&mut a);
+    let srcs: Vec<&[u8]> = vec![&a];
+    bench("copy@257rows (bucketed 256+1)", &opts, |_| {
+        let out = rt.run_op("copy", rows, &srcs).expect("run_op");
+        black_box(out);
+    });
+
+    csv.write("out/runtime.csv")?;
+    println!("\n(raw: out/runtime.csv; dispatches so far: {})", rt.dispatches);
+    Ok(())
+}

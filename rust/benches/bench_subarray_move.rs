@@ -1,0 +1,96 @@
+//! E5 — the cost of operands landing in *different* subarrays: the
+//! penalty PUMA exists to avoid.
+//!
+//! Compares, for a row-granular copy of increasing size:
+//!   * FPM        — same-subarray RowClone (PUMA placement),
+//!   * PSM        — inter-subarray in-DRAM move (LISA-class),
+//!   * CPU        — over-the-channel fallback (malloc placement).
+//!
+//! The paper cites LISA for the "extra latency due to inter-subarray
+//! data movement"; this bench regenerates that latency gap from our
+//! timing model and the functional engine.
+//!
+//! Run: `cargo bench --bench bench_subarray_move`
+
+use puma::dram::address::InterleaveScheme;
+use puma::dram::device::DramDevice;
+use puma::dram::geometry::{DramGeometry, SubarrayId};
+use puma::dram::timing::TimingParams;
+use puma::pud::rowclone;
+use puma::util::csvio::Csv;
+use puma::util::table::{fnum, Table};
+use puma::util::units::fmt_bytes;
+
+fn main() -> anyhow::Result<()> {
+    println!("# bench_subarray_move — FPM vs PSM vs CPU copy latency (E5)");
+    let scheme = InterleaveScheme::row_major(DramGeometry::default());
+    let timing = TimingParams::default();
+    let row_bytes = scheme.geometry.row_bytes;
+    let mut dev = DramDevice::new(scheme.clone());
+
+    let mut table = Table::new(vec![
+        "size",
+        "rows",
+        "FPM(us)",
+        "PSM(us)",
+        "CPU(us)",
+        "PSM/FPM",
+        "CPU/FPM",
+    ])
+    .left(0);
+    let mut csv = Csv::new(vec!["bytes", "rows", "fpm_ns", "psm_ns", "cpu_ns"]);
+
+    for rows in [1u64, 8, 32, 128, 512] {
+        let bytes = rows * row_bytes as u64;
+        // functional check on a couple of rows: PSM really moves data
+        if rows <= 8 {
+            for r in 0..rows as u32 {
+                let src = dev
+                    .scheme
+                    .decode(dev.scheme.row_start_addr(SubarrayId(0), r));
+                let dst = dev
+                    .scheme
+                    .decode(dev.scheme.row_start_addr(SubarrayId(1), r));
+                let data = vec![(r + 1) as u8; row_bytes as usize];
+                dev.write_row(&src, &data);
+                rowclone::psm_copy(&mut dev, &timing, &src, &dst)?;
+                assert_eq!(dev.read_row(&dst), data);
+            }
+        }
+        let fpm = timing.rowclone_fpm_ns(rows);
+        let psm = timing.rowclone_psm_ns(rows, row_bytes);
+        let cpu = timing.cpu_bulk_ns(bytes, bytes);
+        table.row(vec![
+            fmt_bytes(bytes),
+            rows.to_string(),
+            fnum(fpm / 1000.0),
+            fnum(psm / 1000.0),
+            fnum(cpu / 1000.0),
+            format!("{}x", fnum(psm / fpm)),
+            format!("{}x", fnum(cpu / fpm)),
+        ]);
+        csv.row(vec![
+            bytes.to_string(),
+            rows.to_string(),
+            format!("{fpm:.0}"),
+            format!("{psm:.0}"),
+            format!("{cpu:.0}"),
+        ]);
+    }
+    println!("{}", table.render());
+    csv.write("out/subarray_move.csv")?;
+    println!("(raw: out/subarray_move.csv)");
+
+    // ordering invariants at realistic row counts
+    let fpm = timing.rowclone_fpm_ns(128);
+    let psm = timing.rowclone_psm_ns(128, row_bytes);
+    let cpu = timing.cpu_bulk_ns(128 * row_bytes as u64, 128 * row_bytes as u64);
+    assert!(fpm < psm && psm < cpu, "FPM < PSM < CPU must hold");
+    assert!(cpu / fpm > 10.0, "channel copy should be >10x FPM");
+    println!(
+        "subarray-move check passed (PSM {:.1}x FPM, CPU {:.1}x FPM at 1 MiB)",
+        psm / fpm,
+        cpu / fpm
+    );
+    Ok(())
+}

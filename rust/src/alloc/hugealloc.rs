@@ -1,0 +1,221 @@
+//! Huge-page-backed allocation (the strongest baseline).
+//!
+//! Allocations are served from 2 MiB huge pages: physically contiguous
+//! within each page and row-aligned when the request is at least a row
+//! long (mmap-like natural alignment). What this baseline *lacks* is
+//! subarray awareness: operands of one PUD operation are bump-placed
+//! wherever the arena cursor happens to be, across huge pages drawn
+//! from the general (THP-style) allocator — so whether two operands'
+//! rows co-locate in a subarray is luck, improving with allocation
+//! size but never guaranteed. That is the paper's observed "up to 60%
+//! at large sizes" behaviour.
+//!
+//! Pages come from the buddy allocator at order 9 (transparent-huge-
+//! page style) rather than from PUMA's reserved pool, which models the
+//! paper's baseline (ordinary hugetlb/THP usage, no PUD pool).
+
+use anyhow::{bail, Result};
+use rustc_hash::FxHashMap;
+
+use crate::os::process::Process;
+use crate::os::vma::VmaKind;
+use crate::os::{align_up, HUGE_PAGE_ORDER, HUGE_PAGE_SIZE, PAGE_SIZE};
+
+use super::traits::{AllocStats, Allocator, OsCtx};
+
+struct ArenaPage {
+    va: u64,
+    pfn: u64,
+    used: u64,
+}
+
+#[derive(Debug, Clone, Copy)]
+struct Live {
+    /// Huge pages exclusively owned by this allocation (large path).
+    owned_va: u64,
+    owned_pages: u64,
+}
+
+/// Huge-page arena allocator.
+pub struct HugeAlloc {
+    row_bytes: u64,
+    arena: Option<ArenaPage>,
+    /// arena pages kept alive for the allocator's lifetime
+    arena_pages: Vec<(u64, u64)>, // (va, pfn)
+    live: FxHashMap<u64, Live>,
+    stats: AllocStats,
+}
+
+impl HugeAlloc {
+    pub fn new(row_bytes: u64) -> Self {
+        Self {
+            row_bytes,
+            arena: None,
+            arena_pages: Vec::new(),
+            live: FxHashMap::default(),
+            stats: AllocStats::default(),
+        }
+    }
+
+    fn new_huge_page(
+        &mut self,
+        ctx: &mut OsCtx,
+        proc: &mut Process,
+    ) -> Result<ArenaPage> {
+        let pfn = ctx.buddy.alloc(HUGE_PAGE_ORDER)?;
+        let va = proc.mmap(HUGE_PAGE_SIZE, HUGE_PAGE_SIZE, VmaKind::Huge)?;
+        proc.map_huge(va, pfn * PAGE_SIZE)?;
+        self.stats.alloc_ns += ctx.timing.syscall_ns + ctx.timing.huge_fault_ns;
+        self.stats.pages_mapped += HUGE_PAGE_SIZE / PAGE_SIZE;
+        self.arena_pages.push((va, pfn));
+        Ok(ArenaPage { va, pfn, used: 0 })
+    }
+}
+
+impl Allocator for HugeAlloc {
+    fn name(&self) -> &'static str {
+        "hugepages"
+    }
+
+    fn alloc(&mut self, ctx: &mut OsCtx, proc: &mut Process, len: u64) -> Result<u64> {
+        if len == 0 {
+            bail!("hugealloc(0)");
+        }
+        self.stats.allocs += 1;
+        self.stats.bytes_requested += len;
+
+        if len > HUGE_PAGE_SIZE {
+            // multi-page path: dedicated consecutive huge pages; VA is
+            // contiguous, physical pages are whatever order-9 blocks
+            // the buddy returns (not necessarily adjacent).
+            let npages = align_up(len, HUGE_PAGE_SIZE) / HUGE_PAGE_SIZE;
+            let va = proc.mmap(npages * HUGE_PAGE_SIZE, HUGE_PAGE_SIZE, VmaKind::Huge)?;
+            self.stats.alloc_ns += ctx.timing.syscall_ns;
+            for i in 0..npages {
+                let pfn = ctx.buddy.alloc(HUGE_PAGE_ORDER)?;
+                proc.map_huge(va + i * HUGE_PAGE_SIZE, pfn * PAGE_SIZE)?;
+                self.stats.alloc_ns += ctx.timing.huge_fault_ns;
+                self.stats.pages_mapped += HUGE_PAGE_SIZE / PAGE_SIZE;
+            }
+            self.live.insert(
+                va,
+                Live {
+                    owned_va: va,
+                    owned_pages: npages,
+                },
+            );
+            return Ok(va);
+        }
+
+        // arena path: bump inside the current huge page, row-aligning
+        // requests of at least one row (glibc aligns big chunks too)
+        let align = if len >= self.row_bytes {
+            self.row_bytes
+        } else {
+            16
+        };
+        let need_from = |used: u64| -> u64 { align_up(used, align) };
+        let mut arena = match self.arena.take() {
+            Some(a) if need_from(a.used) + len <= HUGE_PAGE_SIZE => a,
+            _ => self.new_huge_page(ctx, proc)?,
+        };
+        let off = need_from(arena.used);
+        let va = arena.va + off;
+        arena.used = off + len;
+        self.arena = Some(arena);
+        self.live.insert(
+            va,
+            Live {
+                owned_va: 0,
+                owned_pages: 0,
+            },
+        );
+        Ok(va)
+    }
+
+    fn free(&mut self, ctx: &mut OsCtx, proc: &mut Process, va: u64) -> Result<()> {
+        let live = match self.live.remove(&va) {
+            Some(l) => l,
+            None => bail!("free of unknown pointer {va:#x}"),
+        };
+        self.stats.frees += 1;
+        if live.owned_pages > 0 {
+            for i in 0..live.owned_pages {
+                let t = proc.page_table.unmap(live.owned_va + i * HUGE_PAGE_SIZE)?;
+                ctx.buddy.free(t.paddr / PAGE_SIZE, HUGE_PAGE_ORDER);
+            }
+            proc.vmas.unmap(live.owned_va)?;
+            self.stats.alloc_ns += ctx.timing.syscall_ns;
+        }
+        // arena chunks are recycled with the arena (glibc-like)
+        Ok(())
+    }
+
+    fn stats(&self) -> AllocStats {
+        self.stats
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dram::address::InterleaveScheme;
+    use crate::dram::geometry::DramGeometry;
+    use crate::os::process::Pid;
+
+    fn ctx() -> OsCtx {
+        let scheme = InterleaveScheme::row_major(DramGeometry::default());
+        OsCtx::boot(scheme, 8, 0, 0).unwrap()
+    }
+
+    #[test]
+    fn arena_allocs_physically_contiguous() {
+        let mut ctx = ctx();
+        let mut proc = Process::new(Pid(1));
+        let mut h = HugeAlloc::new(8192);
+        let va = h.alloc(&mut ctx, &mut proc, 64 * 1024).unwrap();
+        let ext = proc.phys_extents(va, 64 * 1024).unwrap();
+        assert_eq!(ext.len(), 1, "inside one huge page");
+    }
+
+    #[test]
+    fn row_sized_allocs_are_row_aligned() {
+        let mut ctx = ctx();
+        let mut proc = Process::new(Pid(1));
+        let mut h = HugeAlloc::new(8192);
+        let small = h.alloc(&mut ctx, &mut proc, 100).unwrap();
+        let big = h.alloc(&mut ctx, &mut proc, 16 * 1024).unwrap();
+        let _ = small;
+        let ext = proc.phys_extents(big, 16 * 1024).unwrap();
+        assert_eq!(ext[0].paddr % 8192, 0, "row-aligned physical start");
+    }
+
+    #[test]
+    fn multi_page_path_owns_pages() {
+        let mut ctx = ctx();
+        let mut proc = Process::new(Pid(1));
+        let mut h = HugeAlloc::new(8192);
+        let before = ctx.buddy.free_frames();
+        let va = h.alloc(&mut ctx, &mut proc, 5 * 1024 * 1024).unwrap();
+        assert_eq!(va % HUGE_PAGE_SIZE, 0);
+        assert!(proc.phys_extents(va, 5 * 1024 * 1024).is_ok());
+        h.free(&mut ctx, &mut proc, va).unwrap();
+        assert_eq!(ctx.buddy.free_frames(), before);
+    }
+
+    #[test]
+    fn arena_rolls_to_next_page_when_full() {
+        let mut ctx = ctx();
+        let mut proc = Process::new(Pid(1));
+        let mut h = HugeAlloc::new(8192);
+        let a = h.alloc(&mut ctx, &mut proc, HUGE_PAGE_SIZE - 4096).unwrap();
+        let b = h.alloc(&mut ctx, &mut proc, 8192).unwrap();
+        let ea = proc.phys_extents(a, 1024).unwrap();
+        let eb = proc.phys_extents(b, 1024).unwrap();
+        // b lives in a different huge page
+        assert_ne!(
+            ea[0].paddr / HUGE_PAGE_SIZE,
+            eb[0].paddr / HUGE_PAGE_SIZE
+        );
+    }
+}

@@ -1,0 +1,234 @@
+//! glibc-style `malloc` simulation.
+//!
+//! Models the two glibc paths that matter for physical placement:
+//!
+//! * **small** (< `MMAP_THRESHOLD`): bump allocation inside an arena,
+//!   16-byte aligned after a 16-byte chunk header — so returned
+//!   pointers are virtually *unaligned* to rows/pages; arena pages
+//!   fault in one 4 KiB frame at a time.
+//! * **large** (>= threshold): a fresh anonymous mmap — page-aligned
+//!   VA, but still demand-paged frame-by-frame.
+//!
+//! Physical frames come from the churned buddy allocator, so
+//! consecutive virtual pages land on scattered physical frames: row
+//! alignment and subarray co-location essentially never happen, which
+//! is why the paper measures 0% PUD-executable operations here.
+
+use anyhow::{bail, Result};
+use rustc_hash::FxHashMap;
+
+use crate::os::process::Process;
+use crate::os::vma::VmaKind;
+use crate::os::{align_up, PAGE_SIZE};
+
+use super::traits::{AllocStats, Allocator, OsCtx};
+
+/// glibc's default M_MMAP_THRESHOLD.
+pub const MMAP_THRESHOLD: u64 = 128 * 1024;
+/// Chunk header + alignment, as in glibc (16 bytes on 64-bit).
+const CHUNK_HEADER: u64 = 16;
+const ARENA_CHUNK: u64 = 1 << 20; // arena grows 1 MiB at a time
+
+#[derive(Debug, Clone, Copy)]
+enum AllocKind {
+    Small { len: u64 },
+    Large { start: u64, pages: u64 },
+}
+
+/// The malloc simulator (one instance per process under test).
+#[derive(Default)]
+pub struct MallocSim {
+    /// current arena bump region: (next_free_va, end_va)
+    arena: Option<(u64, u64)>,
+    /// VA actually faulted in so far within the arena (page-granular).
+    arena_mapped_to: u64,
+    live: FxHashMap<u64, AllocKind>,
+    stats: AllocStats,
+}
+
+impl MallocSim {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Fault in frames for `[from, to)` of the arena.
+    fn fault_arena(
+        &mut self,
+        ctx: &mut OsCtx,
+        proc: &mut Process,
+        to: u64,
+    ) -> Result<()> {
+        while self.arena_mapped_to < to {
+            let va = self.arena_mapped_to;
+            let pfn = ctx.buddy.alloc(0)?;
+            proc.populate_base(va, 1, || Ok(pfn))?;
+            self.stats.pages_mapped += 1;
+            self.stats.alloc_ns += ctx.timing.minor_fault_ns;
+            self.arena_mapped_to = va + PAGE_SIZE;
+        }
+        Ok(())
+    }
+}
+
+impl Allocator for MallocSim {
+    fn name(&self) -> &'static str {
+        "malloc"
+    }
+
+    fn alloc(&mut self, ctx: &mut OsCtx, proc: &mut Process, len: u64) -> Result<u64> {
+        if len == 0 {
+            bail!("malloc(0)");
+        }
+        self.stats.allocs += 1;
+        self.stats.bytes_requested += len;
+        let va = if len >= MMAP_THRESHOLD {
+            // large path: fresh mmap, demand-paged scattered frames
+            let pages = align_up(len, PAGE_SIZE) / PAGE_SIZE;
+            let start = proc.mmap(pages * PAGE_SIZE, PAGE_SIZE, VmaKind::Anon)?;
+            self.stats.alloc_ns += ctx.timing.syscall_ns;
+            for i in 0..pages {
+                let pfn = ctx.buddy.alloc(0)?;
+                proc.populate_base(start + i * PAGE_SIZE, 1, || Ok(pfn))?;
+                self.stats.pages_mapped += 1;
+                self.stats.alloc_ns += ctx.timing.minor_fault_ns;
+            }
+            self.live.insert(start, AllocKind::Large { start, pages });
+            start
+        } else {
+            // small path: arena bump with chunk header
+            let need = align_up(len + CHUNK_HEADER, 16);
+            let (mut next, mut end) = match self.arena {
+                Some(a) => a,
+                None => (0, 0),
+            };
+            if next == 0 || next + need > end {
+                let grow = align_up(need.max(ARENA_CHUNK), PAGE_SIZE);
+                let start = proc.mmap(grow, PAGE_SIZE, VmaKind::Anon)?;
+                self.stats.alloc_ns += ctx.timing.syscall_ns;
+                next = start;
+                end = start + grow;
+                self.arena_mapped_to = start;
+            }
+            let user_va = next + CHUNK_HEADER;
+            let new_next = next + need;
+            self.arena = Some((new_next, end));
+            self.fault_arena(ctx, proc, align_up(new_next, PAGE_SIZE))?;
+            self.live.insert(user_va, AllocKind::Small { len });
+            user_va
+        };
+        Ok(va)
+    }
+
+    fn free(&mut self, ctx: &mut OsCtx, proc: &mut Process, va: u64) -> Result<()> {
+        let kind = match self.live.remove(&va) {
+            Some(k) => k,
+            None => bail!("free of unknown pointer {va:#x}"),
+        };
+        self.stats.frees += 1;
+        match kind {
+            AllocKind::Small { .. } => {
+                // glibc keeps small chunks in free lists; frames stay
+                // with the arena. Nothing to return to the OS.
+            }
+            AllocKind::Large { start, pages } => {
+                for i in 0..pages {
+                    let t = proc.page_table.unmap(start + i * PAGE_SIZE)?;
+                    ctx.buddy.free(t.paddr / PAGE_SIZE, 0);
+                }
+                proc.vmas.unmap(start)?;
+                self.stats.alloc_ns += ctx.timing.syscall_ns;
+            }
+        }
+        Ok(())
+    }
+
+    fn stats(&self) -> AllocStats {
+        self.stats
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dram::address::InterleaveScheme;
+    use crate::dram::geometry::DramGeometry;
+    use crate::os::process::Pid;
+
+    fn ctx() -> OsCtx {
+        let scheme = InterleaveScheme::row_major(DramGeometry {
+            channels: 1,
+            ranks_per_channel: 1,
+            banks_per_rank: 4,
+            subarrays_per_bank: 8,
+            rows_per_subarray: 256,
+            row_bytes: 4096,
+        }); // 32 MiB
+        OsCtx::boot(scheme, 4, 2_000, 11).unwrap()
+    }
+
+    #[test]
+    fn small_allocs_are_unaligned_and_live_in_arena() {
+        let mut ctx = ctx();
+        let mut proc = Process::new(Pid(1));
+        let mut m = MallocSim::new();
+        let a = m.alloc(&mut ctx, &mut proc, 100).unwrap();
+        let b = m.alloc(&mut ctx, &mut proc, 100).unwrap();
+        // chunk headers break page/row alignment
+        assert_ne!(a % PAGE_SIZE, 0);
+        assert_eq!(a % 16, 0);
+        assert!(b > a);
+        assert!(b - a < PAGE_SIZE, "same arena");
+        assert!(proc.phys_extents(a, 100).is_ok());
+    }
+
+    #[test]
+    fn large_allocs_get_scattered_frames() {
+        let mut ctx = ctx();
+        let mut proc = Process::new(Pid(1));
+        let mut m = MallocSim::new();
+        let va = m.alloc(&mut ctx, &mut proc, 256 * 1024).unwrap();
+        assert_eq!(va % PAGE_SIZE, 0);
+        let ext = proc.phys_extents(va, 256 * 1024).unwrap();
+        // churned buddy => many discontiguous extents
+        assert!(
+            ext.len() > 8,
+            "expected scattered frames, got {} extents",
+            ext.len()
+        );
+    }
+
+    #[test]
+    fn free_returns_large_frames() {
+        let mut ctx = ctx();
+        let mut proc = Process::new(Pid(1));
+        let mut m = MallocSim::new();
+        let before = ctx.buddy.free_frames();
+        let va = m.alloc(&mut ctx, &mut proc, 256 * 1024).unwrap();
+        assert!(ctx.buddy.free_frames() < before);
+        m.free(&mut ctx, &mut proc, va).unwrap();
+        assert_eq!(ctx.buddy.free_frames(), before);
+        assert!(m.free(&mut ctx, &mut proc, va).is_err());
+    }
+
+    #[test]
+    fn stats_accumulate() {
+        let mut ctx = ctx();
+        let mut proc = Process::new(Pid(1));
+        let mut m = MallocSim::new();
+        m.alloc(&mut ctx, &mut proc, 100).unwrap();
+        m.alloc(&mut ctx, &mut proc, 200 * 1024).unwrap();
+        let s = m.stats();
+        assert_eq!(s.allocs, 2);
+        assert_eq!(s.bytes_requested, 100 + 200 * 1024);
+        assert!(s.alloc_ns > 0.0);
+        assert!(s.pages_mapped >= 50);
+    }
+
+    #[test]
+    fn zero_len_rejected() {
+        let mut ctx = ctx();
+        let mut proc = Process::new(Pid(1));
+        let mut m = MallocSim::new();
+        assert!(m.alloc(&mut ctx, &mut proc, 0).is_err());
+    }
+}

@@ -1,0 +1,24 @@
+//! The allocators under study.
+//!
+//! * [`mallocsim`] — glibc-style `malloc`: virtually contiguous, but
+//!   demand-paged 4 KiB frames from a churned buddy allocator, i.e.
+//!   physically scattered (paper §1: 0% PUD-executable).
+//! * [`memalign`] — `posix_memalign`: virtual alignment only; the
+//!   physical story is identical to malloc.
+//! * [`hugealloc`] — huge-page-backed allocation: physically
+//!   contiguous 2 MiB chunks, but operand placement within/across huge
+//!   pages is not subarray-aware (paper §1: up to ~60% at large sizes).
+//! * [`puma`] — the paper's contribution: subarray-aware region
+//!   allocation from a reserved huge-page pool with worst-fit
+//!   placement and hint-aligned co-location.
+//!
+//! All allocators implement [`Allocator`] against the shared
+//! [`OsCtx`], so the benchmarks sweep them interchangeably.
+
+pub mod hugealloc;
+pub mod mallocsim;
+pub mod memalign;
+pub mod puma;
+pub mod traits;
+
+pub use traits::{AllocStats, Allocator, OsCtx, OsTiming};

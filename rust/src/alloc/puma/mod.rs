@@ -1,0 +1,409 @@
+//! PUMA — the paper's allocator.
+//!
+//! Three user-facing APIs (paper §2):
+//!
+//! * [`PumaAlloc::pim_preallocate`] — move huge pages from the boot
+//!   pool into PUMA's region store (the user decides how many, since
+//!   huge pages are scarce).
+//! * `pim_alloc` (via [`Allocator::alloc`]) — first-operand
+//!   allocation: worst-fit over the subarray-indexed ordered array,
+//!   maximizing leftover space per subarray so future operands can
+//!   co-locate.
+//! * `pim_alloc_align` (via [`Allocator::alloc_align`]) — subsequent
+//!   operands: look the hint up in the allocation hashmap, then place
+//!   each region in the *same subarray* as the corresponding hint
+//!   region, falling back to worst-fit only when that subarray is
+//!   full. Scattered regions are re-mmapped into contiguous VA.
+//!
+//! Regions are row-granular (see [`region`]): allocations are rounded
+//! up to whole DRAM rows, which is what makes every PUMA operand
+//! row-aligned by construction.
+
+pub mod ordered;
+pub mod region;
+
+use anyhow::{bail, Context, Result};
+use rustc_hash::FxHashMap;
+
+use crate::os::process::Process;
+use crate::os::vma::VmaKind;
+use crate::os::PAGE_SIZE;
+
+use super::traits::{AllocStats, Allocator, OsCtx};
+use ordered::OrderedArray;
+use region::{split_huge_page, Region};
+
+/// Region placement policy (the paper uses worst-fit; the others are
+/// for the E3 ablation).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FitPolicy {
+    WorstFit,
+    BestFit,
+    FirstFit,
+}
+
+/// A live PUMA allocation: the ordered list of regions backing a
+/// contiguous VA range.
+#[derive(Debug, Clone)]
+pub struct Allocation {
+    pub va: u64,
+    pub len: u64,
+    pub regions: Vec<Region>,
+}
+
+/// The PUMA allocator state (kernel-module equivalent).
+pub struct PumaAlloc {
+    free: OrderedArray,
+    /// The allocation hashmap, "indexed by the allocation's virtual
+    /// address" (paper §2).
+    allocations: FxHashMap<u64, Allocation>,
+    pub policy: FitPolicy,
+    row_bytes: u64,
+    preallocated_pages: usize,
+    stats: AllocStats,
+}
+
+impl PumaAlloc {
+    pub fn new(row_bytes: u64, policy: FitPolicy) -> Self {
+        assert!(row_bytes % PAGE_SIZE == 0 || PAGE_SIZE % row_bytes == 0,
+            "row size and page size must nest");
+        Self {
+            free: OrderedArray::new(),
+            allocations: FxHashMap::default(),
+            policy,
+            row_bytes,
+            preallocated_pages: 0,
+            stats: AllocStats::default(),
+        }
+    }
+
+    /// `pim_preallocate`: dedicate `n` huge pages from the boot pool
+    /// to PUD allocations, splitting them into subarray-indexed
+    /// regions.
+    pub fn pim_preallocate(&mut self, ctx: &mut OsCtx, n: usize) -> Result<()> {
+        for i in 0..n {
+            let page = ctx
+                .pool
+                .alloc()
+                .with_context(|| format!("pim_preallocate page {i}/{n}"))?;
+            for r in split_huge_page(&ctx.scheme, &page) {
+                self.free.insert(r);
+            }
+            self.preallocated_pages += 1;
+            self.stats.alloc_ns += ctx.timing.huge_fault_ns;
+        }
+        Ok(())
+    }
+
+    /// Free regions currently available.
+    pub fn free_regions(&self) -> usize {
+        self.free.total_free()
+    }
+
+    /// Look up a live allocation (used by the coordinator to reach
+    /// region metadata without a page-table walk).
+    pub fn lookup(&self, va: u64) -> Option<&Allocation> {
+        self.allocations.get(&va)
+    }
+
+    fn regions_needed(&self, len: u64) -> usize {
+        (len.div_ceil(self.row_bytes)) as usize
+    }
+
+    fn take_policy(&mut self) -> Option<Region> {
+        match self.policy {
+            FitPolicy::WorstFit => self.free.take_worst_fit(),
+            FitPolicy::BestFit => self.free.take_best_fit(),
+            FitPolicy::FirstFit => self.free.take_first_fit(),
+        }
+    }
+
+    /// Map `regions` into fresh contiguous VA in `proc` and record the
+    /// allocation. This is the re-mmap step: regions may come from
+    /// different huge pages, yet the user sees one contiguous object.
+    fn map_regions(
+        &mut self,
+        ctx: &mut OsCtx,
+        proc: &mut Process,
+        regions: Vec<Region>,
+        len: u64,
+    ) -> Result<u64> {
+        let total = regions.len() as u64 * self.row_bytes;
+        let va = proc.mmap(total, self.row_bytes.max(PAGE_SIZE), VmaKind::Pud)?;
+        self.stats.alloc_ns += ctx.timing.syscall_ns;
+        let pages_per_region = self.row_bytes / PAGE_SIZE;
+        for (i, r) in regions.iter().enumerate() {
+            let base_va = va + i as u64 * self.row_bytes;
+            for p in 0..pages_per_region {
+                proc.page_table.map(
+                    base_va + p * PAGE_SIZE,
+                    r.paddr + p * PAGE_SIZE,
+                    crate::os::page_table::PageKind::Base,
+                )?;
+            }
+            self.stats.alloc_ns += ctx.timing.remap_region_ns;
+            self.stats.pages_mapped += pages_per_region;
+        }
+        self.allocations.insert(
+            va,
+            Allocation {
+                va,
+                len,
+                regions,
+            },
+        );
+        Ok(va)
+    }
+}
+
+impl Allocator for PumaAlloc {
+    fn name(&self) -> &'static str {
+        "puma"
+    }
+
+    /// `pim_alloc`: worst-fit first allocation.
+    fn alloc(&mut self, ctx: &mut OsCtx, proc: &mut Process, len: u64) -> Result<u64> {
+        if len == 0 {
+            bail!("pim_alloc(0)");
+        }
+        self.stats.allocs += 1;
+        self.stats.bytes_requested += len;
+        let need = self.regions_needed(len);
+        if need > self.free.total_free() {
+            bail!(
+                "PUD region pool exhausted: need {need}, have {} \
+                 (pim_preallocate more huge pages)",
+                self.free.total_free()
+            );
+        }
+        let mut regions = Vec::with_capacity(need);
+        for _ in 0..need {
+            let r = self.take_policy().expect("checked total above");
+            self.stats.alloc_ns += ctx.timing.puma_region_ns;
+            regions.push(r);
+        }
+        self.map_regions(ctx, proc, regions, len)
+    }
+
+    /// `pim_alloc_align`: co-locate with the hint allocation.
+    fn alloc_align(
+        &mut self,
+        ctx: &mut OsCtx,
+        proc: &mut Process,
+        len: u64,
+        hint: u64,
+    ) -> Result<u64> {
+        if len == 0 {
+            bail!("pim_alloc_align(0)");
+        }
+        // 1. hashmap lookup; a miss is an error (paper §2 step 1)
+        let hint_regions: Vec<Region> = match self.allocations.get(&hint) {
+            Some(a) => a.regions.clone(),
+            None => bail!("pim_alloc_align: hint {hint:#x} is not a PUMA allocation"),
+        };
+        self.stats.allocs += 1;
+        self.stats.bytes_requested += len;
+        let need = self.regions_needed(len);
+        if need > self.free.total_free() {
+            bail!(
+                "PUD region pool exhausted: need {need}, have {}",
+                self.free.total_free()
+            );
+        }
+        // 2-4. walk the hint's regions; try same-subarray first, then
+        // policy fallback
+        let mut regions = Vec::with_capacity(need);
+        for i in 0..need {
+            let preferred = hint_regions.get(i % hint_regions.len().max(1));
+            let r = match preferred.and_then(|p| self.free.take_from(p.sid)) {
+                Some(r) => {
+                    self.stats.hint_colocated += 1;
+                    r
+                }
+                None => {
+                    self.stats.hint_missed += 1;
+                    self.take_policy().expect("checked total above")
+                }
+            };
+            self.stats.alloc_ns += ctx.timing.puma_region_ns;
+            regions.push(r);
+        }
+        // 5. re-mmap into contiguous VA
+        self.map_regions(ctx, proc, regions, len)
+    }
+
+    fn free(&mut self, ctx: &mut OsCtx, proc: &mut Process, va: u64) -> Result<()> {
+        let alloc = match self.allocations.remove(&va) {
+            Some(a) => a,
+            None => bail!("pim_free of unknown pointer {va:#x}"),
+        };
+        self.stats.frees += 1;
+        let pages_per_region = self.row_bytes / PAGE_SIZE;
+        for (i, r) in alloc.regions.iter().enumerate() {
+            let base_va = va + i as u64 * self.row_bytes;
+            for p in 0..pages_per_region {
+                proc.page_table.unmap(base_va + p * PAGE_SIZE)?;
+            }
+            self.free.insert(*r);
+        }
+        proc.vmas.unmap(va)?;
+        self.stats.alloc_ns += ctx.timing.syscall_ns;
+        Ok(())
+    }
+
+    fn stats(&self) -> AllocStats {
+        self.stats
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dram::address::InterleaveScheme;
+    use crate::dram::geometry::DramGeometry;
+    use crate::os::process::Pid;
+
+    fn ctx() -> OsCtx {
+        let scheme = InterleaveScheme::row_major(DramGeometry::default());
+        OsCtx::boot(scheme, 32, 1_000, 3).unwrap()
+    }
+
+    fn puma(ctx: &mut OsCtx, pages: usize) -> PumaAlloc {
+        let mut p = PumaAlloc::new(
+            ctx.scheme.geometry.row_bytes as u64,
+            FitPolicy::WorstFit,
+        );
+        p.pim_preallocate(ctx, pages).unwrap();
+        p
+    }
+
+    #[test]
+    fn preallocate_splits_pages_into_regions() {
+        let mut ctx = ctx();
+        let p = puma(&mut ctx, 4);
+        // 4 pages x 256 rows, minus reserved overlaps
+        assert!(p.free_regions() > 900 && p.free_regions() <= 1024);
+    }
+
+    #[test]
+    fn alloc_returns_row_aligned_contiguous_va() {
+        let mut ctx = ctx();
+        let mut proc = Process::new(Pid(1));
+        let mut p = puma(&mut ctx, 4);
+        let row = ctx.scheme.geometry.row_bytes as u64;
+        let va = p.alloc(&mut ctx, &mut proc, 5 * row + 10).unwrap();
+        assert_eq!(va % row, 0);
+        // 6 regions mapped contiguously in VA
+        let ext = proc.phys_extents(va, 6 * row).unwrap();
+        let total: u64 = ext.iter().map(|e| e.len).sum();
+        assert_eq!(total, 6 * row);
+        // every region row-aligned physically
+        let alloc = p.lookup(va).unwrap();
+        assert_eq!(alloc.regions.len(), 6);
+        for r in &alloc.regions {
+            assert_eq!(r.paddr % row, 0);
+        }
+    }
+
+    #[test]
+    fn worst_fit_draws_from_fullest_subarrays() {
+        // pim_alloc takes each region from the currently-fullest
+        // subarray (paper §2). With a fresh pool all subarrays are
+        // equally full, so an 8-region allocation spreads over the 8
+        // lowest sids — and crucially leaves every touched subarray
+        // with maximal remaining space for the hint-aligned operands.
+        let mut ctx = ctx();
+        let mut proc = Process::new(Pid(1));
+        let mut p = puma(&mut ctx, 8);
+        let row = ctx.scheme.geometry.row_bytes as u64;
+        let max_before = p.free.occupancy()[0].1;
+        let va = p.alloc(&mut ctx, &mut proc, 8 * row).unwrap();
+        let alloc = p.lookup(va).unwrap();
+        for r in &alloc.regions {
+            // every drawn subarray still has plenty of room for the
+            // aligned second/third operands
+            assert!(p.free.free_in(r.sid) >= max_before - 2);
+        }
+    }
+
+    #[test]
+    fn alloc_align_colocates_with_hint() {
+        let mut ctx = ctx();
+        let mut proc = Process::new(Pid(1));
+        let mut p = puma(&mut ctx, 8);
+        let row = ctx.scheme.geometry.row_bytes as u64;
+        let a = p.alloc(&mut ctx, &mut proc, 4 * row).unwrap();
+        let b = p.alloc_align(&mut ctx, &mut proc, 4 * row, a).unwrap();
+        let c = p.alloc_align(&mut ctx, &mut proc, 4 * row, a).unwrap();
+        let ra = p.lookup(a).unwrap().regions.clone();
+        let rb = p.lookup(b).unwrap().regions.clone();
+        let rc = p.lookup(c).unwrap().regions.clone();
+        let colocated = ra
+            .iter()
+            .zip(&rb)
+            .zip(&rc)
+            .filter(|((x, y), z)| x.sid == y.sid && y.sid == z.sid)
+            .count();
+        assert_eq!(colocated, 4, "all rows of A/B/C share subarrays");
+        assert!(p.stats().hint_colocated >= 8);
+    }
+
+    #[test]
+    fn alloc_align_requires_valid_hint() {
+        let mut ctx = ctx();
+        let mut proc = Process::new(Pid(1));
+        let mut p = puma(&mut ctx, 2);
+        assert!(p.alloc_align(&mut ctx, &mut proc, 4096, 0xDEAD000).is_err());
+    }
+
+    #[test]
+    fn exhaustion_reports_helpfully() {
+        let mut ctx = ctx();
+        let mut proc = Process::new(Pid(1));
+        let mut p = puma(&mut ctx, 1);
+        let row = ctx.scheme.geometry.row_bytes as u64;
+        let err = p
+            .alloc(&mut ctx, &mut proc, 10_000 * row)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("pim_preallocate"), "{err}");
+    }
+
+    #[test]
+    fn free_recycles_regions() {
+        let mut ctx = ctx();
+        let mut proc = Process::new(Pid(1));
+        let mut p = puma(&mut ctx, 2);
+        let row = ctx.scheme.geometry.row_bytes as u64;
+        let before = p.free_regions();
+        let va = p.alloc(&mut ctx, &mut proc, 10 * row).unwrap();
+        assert_eq!(p.free_regions(), before - 10);
+        p.free(&mut ctx, &mut proc, va).unwrap();
+        assert_eq!(p.free_regions(), before);
+        assert!(p.free(&mut ctx, &mut proc, va).is_err());
+    }
+
+    #[test]
+    fn colocated_allocations_pass_pud_legality() {
+        // the whole point: A, B, C from pim_alloc/pim_alloc_align must
+        // produce 100% PUD-legal row plans
+        let mut ctx = ctx();
+        let mut proc = Process::new(Pid(1));
+        let mut p = puma(&mut ctx, 8);
+        let row = ctx.scheme.geometry.row_bytes as u64;
+        let len = 16 * row;
+        let a = p.alloc(&mut ctx, &mut proc, len).unwrap();
+        let b = p.alloc_align(&mut ctx, &mut proc, len, a).unwrap();
+        let c = p.alloc_align(&mut ctx, &mut proc, len, a).unwrap();
+        let ea = proc.phys_extents(a, len).unwrap();
+        let eb = proc.phys_extents(b, len).unwrap();
+        let ec = proc.phys_extents(c, len).unwrap();
+        let plan =
+            crate::pud::legality::check_rowwise(&ctx.scheme, &[&ec, &ea, &eb], len);
+        let frac = crate::pud::legality::pud_fraction(&plan);
+        assert!(
+            frac > 0.95,
+            "PUMA operands should be nearly fully PUD-legal, got {frac}"
+        );
+    }
+}

@@ -1,0 +1,228 @@
+//! The per-subarray ordered free structure behind worst-fit selection.
+//!
+//! Paper §2: "PUMA uses an ordered array data structure similar to the
+//! one used in the Linux Kernel buddy allocator algorithm, where each
+//! entry represents the number of memory regions in a single
+//! subarray." `pim_alloc` scans for the subarray with the *largest*
+//! count (worst-fit); `pim_alloc_align` asks for a region of a
+//! *specific* subarray.
+//!
+//! Implementation: per-sid region stacks plus a count-bucketed index
+//! (`BTreeMap<count, set<sid>>`) so worst-fit selection is O(log n)
+//! instead of a linear scan — the scan showed up hot in the E2 sweep
+//! profile (see EXPERIMENTS.md §Perf).
+
+use std::collections::BTreeMap;
+
+use rustc_hash::{FxHashMap, FxHashSet};
+
+use crate::dram::geometry::SubarrayId;
+
+use super::region::Region;
+
+/// Free-region index over subarrays.
+#[derive(Debug, Default)]
+pub struct OrderedArray {
+    per_sid: FxHashMap<SubarrayId, Vec<Region>>,
+    /// count -> sids currently holding exactly `count` free regions.
+    by_count: BTreeMap<usize, FxHashSet<SubarrayId>>,
+    total: usize,
+}
+
+impl OrderedArray {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn total_free(&self) -> usize {
+        self.total
+    }
+
+    pub fn free_in(&self, sid: SubarrayId) -> usize {
+        self.per_sid.get(&sid).map_or(0, |v| v.len())
+    }
+
+    /// Number of subarrays with at least one free region.
+    pub fn populated_subarrays(&self) -> usize {
+        self.per_sid.values().filter(|v| !v.is_empty()).count()
+    }
+
+    fn reindex(&mut self, sid: SubarrayId, old: usize, new: usize) {
+        if old == new {
+            return;
+        }
+        if old > 0 {
+            if let Some(set) = self.by_count.get_mut(&old) {
+                set.remove(&sid);
+                if set.is_empty() {
+                    self.by_count.remove(&old);
+                }
+            }
+        }
+        if new > 0 {
+            self.by_count.entry(new).or_default().insert(sid);
+        }
+    }
+
+    /// Add a free region.
+    pub fn insert(&mut self, region: Region) {
+        let list = self.per_sid.entry(region.sid).or_default();
+        let old = list.len();
+        list.push(region);
+        self.total += 1;
+        let sid = region.sid;
+        self.reindex(sid, old, old + 1);
+    }
+
+    /// Take one region from subarray `sid`, if available.
+    pub fn take_from(&mut self, sid: SubarrayId) -> Option<Region> {
+        let list = self.per_sid.get_mut(&sid)?;
+        let old = list.len();
+        let region = list.pop()?;
+        self.total -= 1;
+        self.reindex(sid, old, old - 1);
+        Some(region)
+    }
+
+    /// Worst-fit: take one region from the subarray with the most
+    /// free regions (ties broken toward the lowest sid, for
+    /// reproducibility).
+    pub fn take_worst_fit(&mut self) -> Option<Region> {
+        let (_, set) = self.by_count.iter().next_back()?;
+        let sid = *set.iter().min().expect("non-empty bucket");
+        self.take_from(sid)
+    }
+
+    /// Best-fit (ablation E3): take from the *least*-populated
+    /// non-empty subarray (ties toward the lowest sid).
+    pub fn take_best_fit(&mut self) -> Option<Region> {
+        let (_, set) = self.by_count.iter().next()?;
+        let sid = *set.iter().min().expect("non-empty bucket");
+        self.take_from(sid)
+    }
+
+    /// First-fit (ablation E3): take from the lowest-numbered
+    /// non-empty subarray.
+    pub fn take_first_fit(&mut self) -> Option<Region> {
+        let sid = self
+            .per_sid
+            .iter()
+            .filter(|(_, v)| !v.is_empty())
+            .map(|(sid, _)| *sid)
+            .min()?;
+        self.take_from(sid)
+    }
+
+    /// Sids ordered by descending free count (for diagnostics).
+    pub fn occupancy(&self) -> Vec<(SubarrayId, usize)> {
+        let mut v: Vec<(SubarrayId, usize)> = self
+            .per_sid
+            .iter()
+            .filter(|(_, l)| !l.is_empty())
+            .map(|(sid, l)| (*sid, l.len()))
+            .collect();
+        v.sort_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(&b.0)));
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn region(sid: u32, n: u64) -> Region {
+        Region {
+            paddr: n * 8192,
+            sid: SubarrayId(sid),
+        }
+    }
+
+    #[test]
+    fn insert_and_counts() {
+        let mut oa = OrderedArray::new();
+        oa.insert(region(1, 0));
+        oa.insert(region(1, 1));
+        oa.insert(region(2, 2));
+        assert_eq!(oa.total_free(), 3);
+        assert_eq!(oa.free_in(SubarrayId(1)), 2);
+        assert_eq!(oa.free_in(SubarrayId(2)), 1);
+        assert_eq!(oa.free_in(SubarrayId(9)), 0);
+        assert_eq!(oa.populated_subarrays(), 2);
+    }
+
+    #[test]
+    fn worst_fit_picks_largest() {
+        let mut oa = OrderedArray::new();
+        for i in 0..5 {
+            oa.insert(region(7, i));
+        }
+        oa.insert(region(3, 100));
+        // counts: sid7=5, sid3=1. With min-sid tie breaking the take
+        // order is fully deterministic: 7,7,7,7 (5->1), then the tie
+        // {3:1, 7:1} resolves to 3, then 7.
+        let order: Vec<u32> = (0..6)
+            .map(|_| oa.take_worst_fit().unwrap().sid.0)
+            .collect();
+        assert_eq!(order, vec![7, 7, 7, 7, 3, 7]);
+        assert!(oa.take_worst_fit().is_none());
+    }
+
+    #[test]
+    fn best_and_first_fit_differ() {
+        let mut oa = OrderedArray::new();
+        for i in 0..5 {
+            oa.insert(region(7, i));
+        }
+        oa.insert(region(3, 100));
+        assert_eq!(oa.take_best_fit().unwrap().sid, SubarrayId(3));
+        oa.insert(region(9, 200));
+        oa.insert(region(9, 201));
+        // first-fit = lowest sid with space = 7
+        assert_eq!(oa.take_first_fit().unwrap().sid, SubarrayId(7));
+    }
+
+    #[test]
+    fn take_from_specific_sid() {
+        let mut oa = OrderedArray::new();
+        oa.insert(region(4, 1));
+        assert!(oa.take_from(SubarrayId(5)).is_none());
+        assert_eq!(oa.take_from(SubarrayId(4)).unwrap().sid, SubarrayId(4));
+        assert!(oa.take_from(SubarrayId(4)).is_none());
+        assert_eq!(oa.total_free(), 0);
+    }
+
+    #[test]
+    fn empty_behaviour() {
+        let mut oa = OrderedArray::new();
+        assert!(oa.take_worst_fit().is_none());
+        assert!(oa.take_best_fit().is_none());
+        assert!(oa.take_first_fit().is_none());
+        assert_eq!(oa.occupancy(), vec![]);
+    }
+
+    #[test]
+    fn occupancy_sorted_desc() {
+        let mut oa = OrderedArray::new();
+        oa.insert(region(1, 0));
+        oa.insert(region(2, 1));
+        oa.insert(region(2, 2));
+        let occ = oa.occupancy();
+        assert_eq!(occ[0], (SubarrayId(2), 2));
+        assert_eq!(occ[1], (SubarrayId(1), 1));
+    }
+
+    #[test]
+    fn index_consistent_under_mixed_ops() {
+        let mut oa = OrderedArray::new();
+        for i in 0..20 {
+            oa.insert(region(i % 4, i as u64));
+        }
+        for _ in 0..10 {
+            assert!(oa.take_worst_fit().is_some());
+        }
+        // remaining counts must sum to total
+        let sum: usize = oa.occupancy().iter().map(|(_, c)| c).sum();
+        assert_eq!(sum, oa.total_free());
+        assert_eq!(sum, 10);
+    }
+}

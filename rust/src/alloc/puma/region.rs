@@ -1,0 +1,118 @@
+//! PUMA memory regions: the row-granular allocation units carved from
+//! reserved huge pages.
+//!
+//! The allocation routine "uses the DRAM address mapping knowledge to
+//! split the huge pages into different memory regions. Then, it uses
+//! the DRAM interleaving scheme to index each memory region based on
+//! their subarray ID" (paper §2). A region is one DRAM row: aligned to
+//! the row address and size, and the atom of PUD operand placement.
+
+use crate::dram::address::InterleaveScheme;
+use crate::dram::geometry::SubarrayId;
+use crate::os::hugepage::HugePage;
+use crate::pud::reserved::is_reserved;
+
+/// One memory region: a row-sized, row-aligned slice of a reserved
+/// huge page, tagged with its subarray.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Region {
+    /// Physical byte address of the region start (row-aligned).
+    pub paddr: u64,
+    /// The subarray this region's row lives in.
+    pub sid: SubarrayId,
+}
+
+/// Split a huge page into row-granular regions, skipping any that land
+/// on Ambit-reserved rows.
+pub fn split_huge_page(scheme: &InterleaveScheme, page: &HugePage) -> Vec<Region> {
+    let row_bytes = scheme.geometry.row_bytes as u64;
+    let base = page.phys_addr();
+    debug_assert_eq!(base % row_bytes, 0, "huge pages are row-aligned");
+    let mut regions = Vec::with_capacity((page.len() / row_bytes) as usize);
+    let mut off = 0;
+    while off < page.len() {
+        let paddr = base + off;
+        let loc = scheme.decode(paddr);
+        debug_assert_eq!(loc.column, 0, "stride preserves row alignment");
+        if !is_reserved(&scheme.geometry, loc.row) {
+            regions.push(Region {
+                paddr,
+                sid: scheme.geometry.subarray_id(&loc),
+            });
+        }
+        off += row_bytes;
+    }
+    regions
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dram::geometry::DramGeometry;
+
+    fn scheme() -> InterleaveScheme {
+        InterleaveScheme::row_major(DramGeometry::default())
+    }
+
+    #[test]
+    fn splits_whole_page_into_row_regions() {
+        let s = scheme();
+        let page = HugePage { pfn: 512 }; // 2 MiB mark
+        let regions = split_huge_page(&s, &page);
+        let row_bytes = s.geometry.row_bytes as u64;
+        // 2 MiB / 8 KiB = 256 candidate rows, minus any reserved ones
+        assert!(regions.len() <= 256);
+        assert!(regions.len() >= 240);
+        for r in &regions {
+            assert_eq!(r.paddr % row_bytes, 0);
+            assert_eq!(s.subarray_id(r.paddr), r.sid);
+        }
+        // regions are unique addresses
+        let mut addrs: Vec<u64> = regions.iter().map(|r| r.paddr).collect();
+        addrs.dedup();
+        assert_eq!(addrs.len(), regions.len());
+    }
+
+    #[test]
+    fn regions_grouped_by_subarray() {
+        let s = scheme();
+        let page = HugePage { pfn: 0 };
+        let regions = split_huge_page(&s, &page);
+        // in the default row-major scheme a huge page touches one
+        // subarray per bank (bank bits lie inside the page span)
+        let mut sids: Vec<u32> = regions.iter().map(|r| r.sid.0).collect();
+        sids.sort_unstable();
+        sids.dedup();
+        assert_eq!(sids.len(), s.geometry.banks_per_rank as usize);
+    }
+
+    #[test]
+    fn reserved_rows_are_skipped() {
+        // a huge page overlapping the reserved top rows of a subarray
+        // must skip them; find one by scanning.
+        let s = scheme();
+        let g = &s.geometry;
+        let usable = crate::pud::reserved::usable_rows(g);
+        // reserved rows start at `usable`; pick the page containing
+        // such a row for subarray 0 / bank 0
+        let loc = crate::dram::geometry::Loc {
+            channel: 0,
+            rank: 0,
+            bank: 0,
+            subarray: 0,
+            row: usable,
+            column: 0,
+        };
+        let addr = s.encode(&loc);
+        let page = HugePage {
+            pfn: crate::os::align_down(addr, crate::os::HUGE_PAGE_SIZE)
+                / crate::os::PAGE_SIZE,
+        };
+        let regions = split_huge_page(&s, &page);
+        assert!(regions.len() < 256, "some rows were reserved");
+        for r in &regions {
+            let l = s.decode(r.paddr);
+            assert!(!is_reserved(g, l.row));
+        }
+    }
+}

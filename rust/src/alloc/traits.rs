@@ -1,0 +1,155 @@
+//! Shared allocator interface and the OS context they operate on.
+
+use anyhow::Result;
+
+use crate::dram::address::InterleaveScheme;
+use crate::os::buddy::BuddyAllocator;
+use crate::os::hugepage::HugePagePool;
+use crate::os::process::Process;
+
+/// OS-side cost model for allocation paths (simulated ns). These make
+/// the small-allocation end of Figure 2 honest: fixed costs dominate
+/// there, so speedups shrink — exactly the paper's observed trend.
+#[derive(Debug, Clone, PartialEq)]
+pub struct OsTiming {
+    /// One mmap/brk syscall.
+    pub syscall_ns: f64,
+    /// One minor fault: allocate + map one 4 KiB frame.
+    pub minor_fault_ns: f64,
+    /// One huge-page fault: allocate + map one 2 MiB page.
+    pub huge_fault_ns: f64,
+    /// PUMA: selecting + mapping one memory region (hashmap + ordered
+    /// array bookkeeping + PTE writes).
+    pub puma_region_ns: f64,
+    /// PUMA: re-mmap of one region when stitching VA (PTE rewrite +
+    /// TLB shootdown).
+    pub remap_region_ns: f64,
+}
+
+impl Default for OsTiming {
+    fn default() -> Self {
+        Self {
+            syscall_ns: 700.0,
+            minor_fault_ns: 600.0,
+            huge_fault_ns: 1_800.0,
+            puma_region_ns: 350.0,
+            remap_region_ns: 450.0,
+        }
+    }
+}
+
+/// Cumulative allocator-side statistics.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct AllocStats {
+    pub allocs: u64,
+    pub frees: u64,
+    pub bytes_requested: u64,
+    /// Simulated ns spent in allocation paths.
+    pub alloc_ns: f64,
+    /// 4 KiB pages mapped (either directly or within huge pages).
+    pub pages_mapped: u64,
+    /// PUMA: regions placed via the co-location (hint) path.
+    pub hint_colocated: u64,
+    /// PUMA: regions that had to fall back to worst-fit despite a hint.
+    pub hint_missed: u64,
+}
+
+/// Shared machine state the allocators draw from.
+pub struct OsCtx {
+    pub buddy: BuddyAllocator,
+    pub pool: HugePagePool,
+    pub scheme: InterleaveScheme,
+    pub timing: OsTiming,
+}
+
+impl OsCtx {
+    /// Build the standard evaluation machine: geometry from `scheme`,
+    /// buddy covering the whole capacity, `huge_pages` reserved at
+    /// boot, and the buddy churned with `churn_rounds` to model a
+    /// long-running system.
+    pub fn boot(
+        scheme: InterleaveScheme,
+        huge_pages: usize,
+        churn_rounds: usize,
+        seed: u64,
+    ) -> Result<Self> {
+        let mut buddy =
+            BuddyAllocator::with_capacity_bytes(scheme.geometry.capacity_bytes())?;
+        // reserve the boot-time pool *before* fragmentation, like Linux
+        let pool = HugePagePool::reserve(&mut buddy, huge_pages)?;
+        if churn_rounds > 0 {
+            let mut rng = crate::util::rng::Pcg64::new(seed);
+            buddy.churn(&mut rng, churn_rounds);
+        }
+        Ok(Self {
+            buddy,
+            pool,
+            scheme,
+            timing: OsTiming::default(),
+        })
+    }
+}
+
+/// Common allocator interface.
+///
+/// `alloc_align` is PUMA's `pim_alloc_align`: allocate `len` bytes
+/// placed for PUD co-location with the allocation at `hint` (a VA
+/// previously returned by `alloc`). Baseline allocators ignore the
+/// hint — that is precisely their deficiency.
+pub trait Allocator {
+    fn name(&self) -> &'static str;
+
+    /// Allocate `len` bytes in `proc`; returns the virtual address.
+    fn alloc(&mut self, ctx: &mut OsCtx, proc: &mut Process, len: u64) -> Result<u64>;
+
+    /// Allocate `len` bytes co-located with `hint` where supported.
+    fn alloc_align(
+        &mut self,
+        ctx: &mut OsCtx,
+        proc: &mut Process,
+        len: u64,
+        hint: u64,
+    ) -> Result<u64> {
+        let _ = hint;
+        self.alloc(ctx, proc, len)
+    }
+
+    /// Release the allocation at `va`.
+    fn free(&mut self, ctx: &mut OsCtx, proc: &mut Process, va: u64) -> Result<()>;
+
+    fn stats(&self) -> AllocStats;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dram::geometry::DramGeometry;
+
+    #[test]
+    fn boot_builds_machine() {
+        let scheme = InterleaveScheme::row_major(DramGeometry {
+            channels: 1,
+            ranks_per_channel: 1,
+            banks_per_rank: 2,
+            subarrays_per_bank: 2,
+            rows_per_subarray: 1024,
+            row_bytes: 4096,
+        }); // 16 MiB
+        let ctx = OsCtx::boot(scheme, 2, 500, 7).unwrap();
+        assert_eq!(ctx.pool.available(), 2);
+        assert!(ctx.buddy.free_frames() > 0);
+    }
+
+    #[test]
+    fn boot_fails_if_pool_exceeds_memory() {
+        let scheme = InterleaveScheme::row_major(DramGeometry {
+            channels: 1,
+            ranks_per_channel: 1,
+            banks_per_rank: 1,
+            subarrays_per_bank: 1,
+            rows_per_subarray: 1024,
+            row_bytes: 4096,
+        }); // 4 MiB total
+        assert!(OsCtx::boot(scheme, 3, 0, 0).is_err());
+    }
+}

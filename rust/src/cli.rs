@@ -1,0 +1,329 @@
+//! Hand-rolled CLI (clap is not in the offline vendor set).
+//!
+//! ```text
+//! puma <command> [--config FILE] [--key value ...]
+//!
+//! commands:
+//!   fig2         reproduce Figure 2 (three micro-benchmarks x sizes)
+//!   motivation   reproduce the §1 allocator-eligibility study
+//!   micro        run one micro-benchmark cell
+//!                  (--micro zero|copy|aand --alloc NAME --size SIZE)
+//!   info         print the machine description (geometry, scheme,
+//!                  timing, artifact inventory)
+//!   help         this text
+//! ```
+
+use anyhow::{bail, Context, Result};
+use rustc_hash::FxHashMap;
+
+use crate::alloc::puma::FitPolicy;
+use crate::config::Config;
+use crate::coordinator::system::{System, SystemConfig};
+use crate::report;
+use crate::util::units::{fmt_bytes, fmt_ns, parse_size};
+use crate::workloads::microbench::{self, AllocatorKind, Micro};
+use crate::workloads::sweep;
+
+/// Parsed command line.
+#[derive(Debug)]
+pub struct Cli {
+    pub command: String,
+    pub flags: FxHashMap<String, String>,
+}
+
+/// Parse `args` (without argv[0]): one positional command plus
+/// `--key value` pairs.
+pub fn parse_args(args: &[String]) -> Result<Cli> {
+    let mut command = None;
+    let mut flags = FxHashMap::default();
+    let mut it = args.iter().peekable();
+    while let Some(arg) = it.next() {
+        if let Some(key) = arg.strip_prefix("--") {
+            let value = match it.peek() {
+                Some(v) if !v.starts_with("--") => it.next().unwrap().clone(),
+                _ => "true".to_string(), // bare flag
+            };
+            flags.insert(key.to_string(), value);
+        } else if command.is_none() {
+            command = Some(arg.clone());
+        } else {
+            bail!("unexpected positional argument {arg:?}");
+        }
+    }
+    Ok(Cli {
+        command: command.unwrap_or_else(|| "help".to_string()),
+        flags,
+    })
+}
+
+/// Build the config from `--config FILE` plus per-flag overrides.
+pub fn build_config(cli: &Cli) -> Result<Config> {
+    let mut cfg = match cli.flags.get("config") {
+        Some(path) => Config::load_file(path)?,
+        None => Config::default(),
+    };
+    let mut overrides = cli.flags.clone();
+    overrides.remove("config");
+    // command-specific flags are not config keys
+    for k in ["micro", "alloc", "size"] {
+        overrides.remove(k);
+    }
+    cfg.apply(&overrides)?;
+    Ok(cfg)
+}
+
+fn parse_alloc(name: &str) -> Result<AllocatorKind> {
+    Ok(match name {
+        "malloc" => AllocatorKind::Malloc,
+        "posix_memalign" | "memalign" => AllocatorKind::Memalign,
+        "hugepages" | "huge" => AllocatorKind::HugePages,
+        "puma" => AllocatorKind::Puma(FitPolicy::WorstFit),
+        "puma-bestfit" => AllocatorKind::Puma(FitPolicy::BestFit),
+        "puma-firstfit" => AllocatorKind::Puma(FitPolicy::FirstFit),
+        other => bail!("unknown allocator {other:?}"),
+    })
+}
+
+fn parse_micro(name: &str) -> Result<Micro> {
+    Ok(match name {
+        "zero" => Micro::Zero,
+        "copy" => Micro::Copy,
+        "aand" | "and" => Micro::Aand,
+        other => bail!("unknown micro-benchmark {other:?}"),
+    })
+}
+
+/// Run the CLI; returns the process exit code.
+pub fn run(args: &[String]) -> Result<i32> {
+    let cli = parse_args(args)?;
+    match cli.command.as_str() {
+        "help" | "--help" | "-h" => {
+            println!("{}", HELP);
+            Ok(0)
+        }
+        "info" => {
+            let cfg = build_config(&cli)?;
+            cmd_info(&cfg)
+        }
+        "fig2" => {
+            let cfg = build_config(&cli)?;
+            cmd_fig2(&cfg)
+        }
+        "motivation" => {
+            let cfg = build_config(&cli)?;
+            cmd_motivation(&cfg)
+        }
+        "micro" => {
+            let cfg = build_config(&cli)?;
+            let micro = parse_micro(
+                cli.flags
+                    .get("micro")
+                    .map(String::as_str)
+                    .unwrap_or("aand"),
+            )?;
+            let alloc = parse_alloc(
+                cli.flags
+                    .get("alloc")
+                    .map(String::as_str)
+                    .unwrap_or("puma"),
+            )?;
+            let size = parse_size(
+                cli.flags.get("size").map(String::as_str).unwrap_or("64KiB"),
+            )?;
+            cmd_micro(&cfg, micro, alloc, size)
+        }
+        other => bail!("unknown command {other:?} (try `puma help`)"),
+    }
+}
+
+const HELP: &str = "\
+puma — PUMA (PUD memory allocation) full-system reproduction
+
+usage: puma <command> [--config FILE] [--key value ...]
+
+commands:
+  fig2         reproduce Figure 2 (zero/copy/aand x allocation sizes)
+  motivation   reproduce the §1 allocator-eligibility study
+  micro        one cell: --micro zero|copy|aand --alloc NAME --size SIZE
+  info         print machine description and artifact inventory
+  help         this text
+
+config keys (also accepted as --flags): devicetree, scheme, huge_pages,
+puma_pages, churn_rounds, reps, seed, sizes, artifacts, out";
+
+fn cmd_info(cfg: &Config) -> Result<i32> {
+    let g = &cfg.scheme.geometry;
+    println!("machine:");
+    println!("  capacity        {}", fmt_bytes(g.capacity_bytes()));
+    println!(
+        "  geometry        {} ch x {} rank x {} bank x {} subarrays x {} rows x {}",
+        g.channels,
+        g.ranks_per_channel,
+        g.banks_per_rank,
+        g.subarrays_per_bank,
+        g.rows_per_subarray,
+        fmt_bytes(g.row_bytes as u64)
+    );
+    println!("  subarrays       {}", g.total_subarrays());
+    println!(
+        "  hugetlb pool    {} pages ({})",
+        cfg.huge_pages,
+        fmt_bytes(cfg.huge_pages as u64 * crate::os::HUGE_PAGE_SIZE)
+    );
+    println!("\ndevice tree:\n{}", crate::dram::devicetree::render(&cfg.scheme));
+    match &cfg.artifacts {
+        Some(dir) => {
+            let entries = crate::runtime::manifest::load(dir)?;
+            println!("artifacts ({}): {} HLO modules", dir.display(), entries.len());
+            let mut ops: Vec<&str> =
+                entries.iter().map(|e| e.op.as_str()).collect();
+            ops.sort();
+            ops.dedup();
+            println!("  ops: {}", ops.join(", "));
+        }
+        None => println!("artifacts: none (scalar fallback)"),
+    }
+    Ok(0)
+}
+
+fn cmd_fig2(cfg: &Config) -> Result<i32> {
+    let sweep_cfg = cfg.sweep();
+    let mut series = Vec::new();
+    for micro in Micro::ALL {
+        eprintln!("running {}-sweep ...", micro.name());
+        let cells = sweep::run_micro_sweep(
+            &sweep_cfg,
+            AllocatorKind::Puma(FitPolicy::WorstFit),
+            micro,
+        )?;
+        series.push((micro, cells));
+    }
+    println!("{}", report::figure2(&series, Some(&cfg.out))?);
+    println!("(raw series: {}/figure2.csv)", cfg.out.display());
+    Ok(0)
+}
+
+fn cmd_motivation(cfg: &Config) -> Result<i32> {
+    let sweep_cfg = cfg.sweep();
+    let kinds = [
+        AllocatorKind::Malloc,
+        AllocatorKind::Memalign,
+        AllocatorKind::HugePages,
+        AllocatorKind::Puma(FitPolicy::WorstFit),
+    ];
+    let rows = sweep::run_motivation(&sweep_cfg, &kinds)?;
+    println!("{}", report::motivation(&rows, Some(&cfg.out))?);
+    println!("(raw series: {}/motivation.csv)", cfg.out.display());
+    Ok(0)
+}
+
+fn cmd_micro(
+    cfg: &Config,
+    micro: Micro,
+    alloc: AllocatorKind,
+    size: u64,
+) -> Result<i32> {
+    let mut sys = System::boot(SystemConfig {
+        scheme: cfg.scheme.clone(),
+        huge_pages: cfg.huge_pages,
+        churn_rounds: cfg.churn_rounds,
+        seed: cfg.seed,
+        artifacts: cfg.artifacts.clone(),
+        ..Default::default()
+    })?;
+    let r = microbench::run(
+        &mut sys,
+        alloc,
+        micro,
+        size,
+        cfg.reps,
+        cfg.puma_pages,
+        true,
+        cfg.seed,
+    )
+    .context("micro-benchmark run")?;
+    println!(
+        "{}-{}  size {}  reps {}",
+        r.allocator,
+        r.micro.name(),
+        fmt_bytes(r.size),
+        r.reps
+    );
+    println!(
+        "  PUD rows      {} / {} ({:.1}%)",
+        r.coord.pud_rows,
+        r.coord.pud_rows + r.coord.fallback_rows,
+        r.pud_fraction() * 100.0
+    );
+    println!("  sim time      {}", fmt_ns(r.sim_ns));
+    println!("    alloc       {}", fmt_ns(r.alloc.alloc_ns));
+    println!("    pud         {}", fmt_ns(r.coord.pud_ns));
+    println!("    fallback    {}", fmt_ns(r.coord.fallback_ns));
+    println!("  xla           {} dispatches", r.coord.xla_dispatches);
+    println!("  verify        OK (memory image matches oracle)");
+    Ok(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_command_and_flags() {
+        let cli = parse_args(&args(&["fig2", "--reps", "2", "--out", "/tmp/x"])).unwrap();
+        assert_eq!(cli.command, "fig2");
+        assert_eq!(cli.flags["reps"], "2");
+        assert_eq!(cli.flags["out"], "/tmp/x");
+    }
+
+    #[test]
+    fn bare_flags_are_true() {
+        let cli = parse_args(&args(&["info", "--verbose"])).unwrap();
+        assert_eq!(cli.flags["verbose"], "true");
+    }
+
+    #[test]
+    fn defaults_to_help() {
+        let cli = parse_args(&[]).unwrap();
+        assert_eq!(cli.command, "help");
+    }
+
+    #[test]
+    fn rejects_double_positional() {
+        assert!(parse_args(&args(&["a", "b"])).is_err());
+    }
+
+    #[test]
+    fn alloc_and_micro_names() {
+        assert!(matches!(parse_alloc("puma").unwrap(), AllocatorKind::Puma(_)));
+        assert_eq!(parse_alloc("malloc").unwrap(), AllocatorKind::Malloc);
+        assert!(parse_alloc("slab").is_err());
+        assert_eq!(parse_micro("aand").unwrap(), Micro::Aand);
+        assert!(parse_micro("sort").is_err());
+    }
+
+    #[test]
+    fn build_config_applies_overrides() {
+        let cli = parse_args(&args(&[
+            "micro", "--micro", "copy", "--alloc", "malloc", "--size", "1KiB",
+            "--reps", "7",
+        ]))
+        .unwrap();
+        let cfg = build_config(&cli).unwrap();
+        assert_eq!(cfg.reps, 7);
+    }
+
+    #[test]
+    fn unknown_command_errors() {
+        assert!(run(&args(&["frobnicate"])).is_err());
+    }
+
+    #[test]
+    fn help_runs() {
+        assert_eq!(run(&args(&["help"])).unwrap(), 0);
+    }
+}

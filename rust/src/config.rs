@@ -1,0 +1,231 @@
+//! Run configuration: defaults, key=value config files, and CLI
+//! overrides.
+//!
+//! Config files are simple `key = value` lines (with `#` comments);
+//! the same keys are accepted as `--key value` CLI flags. This is the
+//! framework-style config system the launcher (`puma` binary) uses.
+//!
+//! Keys:
+//! ```text
+//! devicetree    = path to a DRAM device-tree description (default: builtin 8 GiB)
+//! scheme        = row_major | bank_xor | subarray_low (ignored with devicetree)
+//! huge_pages    = boot-time hugetlb pool size            (default 256)
+//! puma_pages    = pages pim_preallocate moves to PUMA    (default 64)
+//! churn_rounds  = buddy aging rounds before workloads    (default 20000)
+//! reps          = bulk ops per micro-benchmark cell      (default 4)
+//! seed          = PRNG seed                              (default 0xF16)
+//! sizes         = comma-separated allocation sizes ("250,64KiB,6Mb")
+//! artifacts     = artifacts dir for the XLA runtime ("none" disables)
+//! out           = output directory for CSVs              (default "out")
+//! ```
+
+use std::path::PathBuf;
+
+use anyhow::{bail, Context, Result};
+use rustc_hash::FxHashMap;
+
+use crate::dram::address::InterleaveScheme;
+use crate::dram::devicetree;
+use crate::dram::geometry::DramGeometry;
+use crate::util::units::parse_size;
+use crate::workloads::sweep::{paper_sizes, SweepConfig};
+
+/// Parsed run configuration.
+#[derive(Debug, Clone)]
+pub struct Config {
+    pub scheme: InterleaveScheme,
+    pub huge_pages: usize,
+    pub puma_pages: usize,
+    pub churn_rounds: usize,
+    pub reps: u32,
+    pub seed: u64,
+    pub sizes: Vec<u64>,
+    pub artifacts: Option<PathBuf>,
+    pub out: PathBuf,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Self {
+            scheme: InterleaveScheme::row_major(DramGeometry::default()),
+            huge_pages: 256,
+            puma_pages: 64,
+            churn_rounds: 20_000,
+            reps: 16,
+            seed: 0xF16,
+            sizes: paper_sizes(),
+            artifacts: default_artifacts(),
+            out: PathBuf::from("out"),
+        }
+    }
+}
+
+/// The artifacts directory if it exists in the working directory.
+pub fn default_artifacts() -> Option<PathBuf> {
+    let p = PathBuf::from("artifacts");
+    p.join("manifest.tsv").exists().then_some(p)
+}
+
+impl Config {
+    /// Apply `key = value` pairs.
+    pub fn apply(&mut self, pairs: &FxHashMap<String, String>) -> Result<()> {
+        for (k, v) in pairs {
+            match k.as_str() {
+                "devicetree" => {
+                    let text = std::fs::read_to_string(v)
+                        .with_context(|| format!("reading devicetree {v}"))?;
+                    self.scheme = devicetree::parse(&text)?;
+                }
+                "scheme" => {
+                    let g = self.scheme.geometry.clone();
+                    self.scheme = match v.as_str() {
+                        "row_major" => InterleaveScheme::row_major(g),
+                        "bank_xor" => InterleaveScheme::bank_xor(g),
+                        "subarray_low" => InterleaveScheme::subarray_low(g),
+                        other => bail!("unknown scheme {other:?}"),
+                    };
+                }
+                "huge_pages" => self.huge_pages = v.parse().context("huge_pages")?,
+                "puma_pages" => self.puma_pages = v.parse().context("puma_pages")?,
+                "churn_rounds" => {
+                    self.churn_rounds = v.parse().context("churn_rounds")?
+                }
+                "reps" => self.reps = v.parse().context("reps")?,
+                "seed" => {
+                    self.seed = if let Some(hex) = v.strip_prefix("0x") {
+                        u64::from_str_radix(hex, 16).context("seed")?
+                    } else {
+                        v.parse().context("seed")?
+                    }
+                }
+                "sizes" => {
+                    self.sizes = v
+                        .split(',')
+                        .map(|s| parse_size(s.trim()))
+                        .collect::<Result<Vec<u64>>>()?;
+                    if self.sizes.is_empty() {
+                        bail!("empty sizes list");
+                    }
+                }
+                "artifacts" => {
+                    self.artifacts = match v.as_str() {
+                        "none" | "" => None,
+                        p => Some(PathBuf::from(p)),
+                    }
+                }
+                "out" => self.out = PathBuf::from(v),
+                other => bail!("unknown config key {other:?}"),
+            }
+        }
+        Ok(())
+    }
+
+    /// Load a config file of `key = value` lines.
+    pub fn load_file(path: &str) -> Result<Config> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading config {path}"))?;
+        let mut pairs = FxHashMap::default();
+        for (i, line) in text.lines().enumerate() {
+            let line = line.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .with_context(|| format!("{path}:{}: expected key = value", i + 1))?;
+            pairs.insert(k.trim().to_string(), v.trim().to_string());
+        }
+        let mut cfg = Config::default();
+        cfg.apply(&pairs)?;
+        Ok(cfg)
+    }
+
+    /// Convert to a sweep configuration.
+    pub fn sweep(&self) -> SweepConfig {
+        SweepConfig {
+            scheme: self.scheme.clone(),
+            sizes: self.sizes.clone(),
+            reps: self.reps,
+            huge_pages: self.huge_pages,
+            puma_pages: self.puma_pages,
+            churn_rounds: self.churn_rounds,
+            seed: self.seed,
+            artifacts: self.artifacts.clone(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pairs(kv: &[(&str, &str)]) -> FxHashMap<String, String> {
+        kv.iter()
+            .map(|(k, v)| (k.to_string(), v.to_string()))
+            .collect()
+    }
+
+    #[test]
+    fn defaults_are_sane() {
+        let c = Config::default();
+        assert_eq!(c.scheme.geometry.capacity_bytes(), 8 << 30);
+        assert_eq!(c.sizes, paper_sizes());
+    }
+
+    #[test]
+    fn apply_overrides() {
+        let mut c = Config::default();
+        c.apply(&pairs(&[
+            ("huge_pages", "32"),
+            ("seed", "0xABC"),
+            ("sizes", "250, 4KiB, 6Mb"),
+            ("scheme", "bank_xor"),
+            ("artifacts", "none"),
+        ]))
+        .unwrap();
+        assert_eq!(c.huge_pages, 32);
+        assert_eq!(c.seed, 0xABC);
+        assert_eq!(c.sizes, vec![250, 4096, 6 * (1 << 20) / 8]);
+        assert!(c.scheme.xor_bank_with_row_low);
+        assert!(c.artifacts.is_none());
+    }
+
+    #[test]
+    fn rejects_unknown_keys_and_bad_values() {
+        let mut c = Config::default();
+        assert!(c.apply(&pairs(&[("nope", "1")])).is_err());
+        assert!(c.apply(&pairs(&[("reps", "many")])).is_err());
+        assert!(c.apply(&pairs(&[("scheme", "diagonal")])).is_err());
+        assert!(c.apply(&pairs(&[("sizes", "")])).is_err());
+    }
+
+    #[test]
+    fn config_file_roundtrip() {
+        let dir = std::env::temp_dir().join("puma_cfg_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("run.conf");
+        std::fs::write(
+            &path,
+            "# test config\nhuge_pages = 16\nreps = 2  # inline comment\n",
+        )
+        .unwrap();
+        let c = Config::load_file(path.to_str().unwrap()).unwrap();
+        assert_eq!(c.huge_pages, 16);
+        assert_eq!(c.reps, 2);
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    #[test]
+    fn devicetree_key_loads_scheme() {
+        let dir = std::env::temp_dir().join("puma_cfg_dt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("dram.dts");
+        let scheme = InterleaveScheme::bank_xor(DramGeometry::default());
+        std::fs::write(&path, crate::dram::devicetree::render(&scheme)).unwrap();
+        let mut c = Config::default();
+        c.apply(&pairs(&[("devicetree", path.to_str().unwrap())]))
+            .unwrap();
+        assert_eq!(c.scheme, scheme);
+        let _ = std::fs::remove_dir_all(dir);
+    }
+}

@@ -1,0 +1,121 @@
+//! Fallback-row batching.
+//!
+//! The legality plan marks individual rows as fallback; issuing one
+//! XLA dispatch per 8 KiB row would drown in dispatch overhead. The
+//! batcher groups *consecutive* fallback rows of one operation into
+//! runs, which the runtime then covers with its largest shape buckets.
+//! (Grouping only consecutive rows keeps gather/scatter on the DRAM
+//! side trivial: each run is one virtually-contiguous span per
+//! operand.)
+
+use crate::pud::legality::RowPlan;
+
+/// A run of consecutive fallback rows.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct FallbackRun {
+    /// Index of the first plan entry in the run.
+    pub first_row_idx: usize,
+    /// Number of rows in the run.
+    pub rows: usize,
+    /// Total bytes (sum of per-row bytes; the final row may be short).
+    pub bytes: u64,
+}
+
+/// Group the fallback entries of `plan` into maximal consecutive runs.
+pub fn fallback_runs(plan: &[RowPlan]) -> Vec<FallbackRun> {
+    let mut runs = Vec::new();
+    let mut cur: Option<FallbackRun> = None;
+    for (i, entry) in plan.iter().enumerate() {
+        match entry {
+            RowPlan::Fallback { bytes, .. } => {
+                match &mut cur {
+                    Some(run) if run.first_row_idx + run.rows == i => {
+                        run.rows += 1;
+                        run.bytes += *bytes as u64;
+                    }
+                    _ => {
+                        if let Some(run) = cur.take() {
+                            runs.push(run);
+                        }
+                        cur = Some(FallbackRun {
+                            first_row_idx: i,
+                            rows: 1,
+                            bytes: *bytes as u64,
+                        });
+                    }
+                }
+            }
+            RowPlan::Pud { .. } => {
+                if let Some(run) = cur.take() {
+                    runs.push(run);
+                }
+            }
+        }
+    }
+    if let Some(run) = cur.take() {
+        runs.push(run);
+    }
+    runs
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pud() -> RowPlan {
+        RowPlan::Pud {
+            sid: crate::dram::geometry::SubarrayId(0),
+            dst: crate::dram::geometry::Loc {
+                channel: 0,
+                rank: 0,
+                bank: 0,
+                subarray: 0,
+                row: 0,
+                column: 0,
+            },
+            srcs: vec![],
+            bytes: 8192,
+        }
+    }
+
+    fn fb(bytes: u32) -> RowPlan {
+        RowPlan::Fallback {
+            dst: vec![crate::os::process::PhysExtent {
+                paddr: 0,
+                len: bytes as u64,
+            }],
+            srcs: vec![],
+            bytes,
+        }
+    }
+
+    #[test]
+    fn empty_plan_no_runs() {
+        assert!(fallback_runs(&[]).is_empty());
+        assert!(fallback_runs(&[pud(), pud()]).is_empty());
+    }
+
+    #[test]
+    fn single_run_of_all_fallback() {
+        let plan = vec![fb(8192), fb(8192), fb(100)];
+        let runs = fallback_runs(&plan);
+        assert_eq!(
+            runs,
+            vec![FallbackRun {
+                first_row_idx: 0,
+                rows: 3,
+                bytes: 8192 * 2 + 100
+            }]
+        );
+    }
+
+    #[test]
+    fn pud_rows_split_runs() {
+        let plan = vec![fb(1), pud(), fb(2), fb(3), pud(), pud(), fb(4)];
+        let runs = fallback_runs(&plan);
+        assert_eq!(runs.len(), 3);
+        assert_eq!(runs[0], FallbackRun { first_row_idx: 0, rows: 1, bytes: 1 });
+        assert_eq!(runs[1], FallbackRun { first_row_idx: 2, rows: 2, bytes: 5 });
+        assert_eq!(runs[2], FallbackRun { first_row_idx: 6, rows: 1, bytes: 4 });
+    }
+}

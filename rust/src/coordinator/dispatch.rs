@@ -1,0 +1,320 @@
+//! Per-operation planning and execution.
+//!
+//! [`Coordinator::submit`] is the request path: translate -> legality
+//! plan -> PUD execute -> fallback execute (XLA or scalar). Python is
+//! never involved; the XLA executables were compiled AOT at build
+//! time.
+
+use anyhow::{bail, Result};
+
+use crate::os::process::Process;
+use crate::pud::exec::PudEngine;
+use crate::pud::isa::{BulkRequest, PudOp};
+use crate::pud::legality::{check_rowwise, RowPlan};
+use crate::runtime::{XlaRuntime, ROW_BYTES};
+
+use super::batch::fallback_runs;
+use super::stats::CoordStats;
+
+/// How fallback rows are executed.
+pub enum FallbackMode {
+    /// Through the AOT-compiled XLA executables (the real stack).
+    Xla(XlaRuntime),
+    /// Scalar reference (simulation-only runs and tests).
+    Scalar,
+}
+
+/// The coordinator: owns the PUD engine and the fallback runtime.
+pub struct Coordinator {
+    pub engine: PudEngine,
+    pub fallback: FallbackMode,
+    pub stats: CoordStats,
+}
+
+impl Coordinator {
+    pub fn new(engine: PudEngine, fallback: FallbackMode) -> Self {
+        Self {
+            engine,
+            fallback,
+            stats: CoordStats::default(),
+        }
+    }
+
+    /// Dispatch one bulk operation for `proc`. Returns the simulated
+    /// nanoseconds this operation took.
+    pub fn submit(&mut self, proc: &Process, req: &BulkRequest) -> Result<f64> {
+        if req.len == 0 {
+            bail!("zero-length bulk op");
+        }
+        // 1. virtual -> physical extents
+        let dst_ext = proc.phys_extents(req.dst, req.len)?;
+        let mut src_exts = Vec::with_capacity(req.srcs.len());
+        for s in &req.srcs {
+            src_exts.push(proc.phys_extents(*s, req.len)?);
+        }
+        let mut operands: Vec<&[crate::os::process::PhysExtent]> =
+            Vec::with_capacity(1 + src_exts.len());
+        operands.push(&dst_ext);
+        for e in &src_exts {
+            operands.push(e);
+        }
+        // 2. legality plan
+        let plan = check_rowwise(&self.engine.device.scheme, &operands, req.len);
+        // 3. PUD rows (functional + simulated timing); fallback rows
+        //    get DRAM-side accounting here, functional execution below
+        let exec = self
+            .engine
+            .execute(req.op, &plan, matches!(self.fallback, FallbackMode::Scalar))?;
+        // 4. fallback runs through XLA
+        if let FallbackMode::Xla(_) = self.fallback {
+            self.run_fallback_xla(req.op, &plan)?;
+        }
+        self.stats.ops += 1;
+        self.stats
+            .ops_fully_pud
+            .record(exec.fallback_rows == 0 && exec.pud_rows > 0);
+        self.stats.absorb_exec(&exec);
+        Ok(exec.total_ns())
+    }
+
+    /// Execute the fallback rows of `plan` via the XLA runtime:
+    /// gather operand bytes from the device, run the kernel, scatter
+    /// the result back.
+    fn run_fallback_xla(&mut self, op: PudOp, plan: &[RowPlan]) -> Result<()> {
+        let runs = fallback_runs(plan);
+        if runs.is_empty() {
+            return Ok(());
+        }
+        debug_assert!(matches!(self.fallback, FallbackMode::Xla(_)));
+        for run in runs {
+            // whole rows for the kernel; the tail is zero-padded and
+            // the scatter truncates back to `run.bytes`
+            let rows = run.bytes.div_ceil(ROW_BYTES as u64) as u32;
+            let padded = rows as usize * ROW_BYTES;
+            let arity = op.arity();
+            // gather each operand's (scattered) bytes row-by-row
+            let mut srcs: Vec<Vec<u8>> = vec![vec![0u8; padded]; arity];
+            let mut off = 0usize;
+            for entry in &plan[run.first_row_idx..run.first_row_idx + run.rows] {
+                let RowPlan::Fallback { srcs: s_exts, bytes, .. } = entry else {
+                    bail!("run covers a non-fallback row");
+                };
+                let b = *bytes as usize;
+                for (k, ext) in s_exts.iter().enumerate() {
+                    let chunk = self.engine.gather(ext, b as u64);
+                    srcs[k][off..off + b].copy_from_slice(&chunk);
+                }
+                off += b;
+            }
+            let FallbackMode::Xla(rt) = &mut self.fallback else {
+                unreachable!("caller checked");
+            };
+            let src_refs: Vec<&[u8]> = srcs.iter().map(|v| v.as_slice()).collect();
+            let t0 = std::time::Instant::now();
+            let out = rt.run_op(op.kernel_name(), rows, &src_refs)?;
+            self.stats.xla_wall_ns += t0.elapsed().as_nanos() as u64;
+            self.stats.xla_dispatches += 1;
+            // scatter the result back to the destination extents
+            let mut off = 0usize;
+            for entry in &plan[run.first_row_idx..run.first_row_idx + run.rows] {
+                let RowPlan::Fallback { dst, bytes, .. } = entry else {
+                    unreachable!()
+                };
+                let b = *bytes as usize;
+                self.engine.scatter(dst, &out[off..off + b]);
+                off += b;
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dram::address::InterleaveScheme;
+    use crate::dram::device::DramDevice;
+    use crate::dram::geometry::{DramGeometry, SubarrayId};
+    use crate::dram::timing::TimingParams;
+    use crate::os::process::{Pid, Process};
+    use crate::os::vma::VmaKind;
+    use crate::os::PAGE_SIZE;
+
+    /// Build a process whose VA range maps 1:1 onto given physical rows.
+    fn map_rows(
+        proc: &mut Process,
+        scheme: &InterleaveScheme,
+        sid: u32,
+        rows: &[u32],
+    ) -> u64 {
+        let row_bytes = scheme.geometry.row_bytes as u64;
+        let pages = row_bytes / PAGE_SIZE;
+        let va = proc
+            .mmap(rows.len() as u64 * row_bytes, row_bytes, VmaKind::Pud)
+            .unwrap();
+        for (i, r) in rows.iter().enumerate() {
+            let pa = scheme.row_start_addr(SubarrayId(sid), *r);
+            for p in 0..pages {
+                proc.page_table
+                    .map(
+                        va + i as u64 * row_bytes + p * PAGE_SIZE,
+                        pa + p * PAGE_SIZE,
+                        crate::os::page_table::PageKind::Base,
+                    )
+                    .unwrap();
+            }
+        }
+        va
+    }
+
+    fn coordinator() -> Coordinator {
+        let scheme = InterleaveScheme::row_major(DramGeometry::default());
+        let engine = PudEngine::new(DramDevice::new(scheme), TimingParams::default());
+        Coordinator::new(engine, FallbackMode::Scalar)
+    }
+
+    #[test]
+    fn colocated_and_runs_fully_in_pud() {
+        let mut c = coordinator();
+        let scheme = c.engine.device.scheme.clone();
+        let mut proc = Process::new(Pid(1));
+        let row_bytes = scheme.geometry.row_bytes as u64;
+        let dst = map_rows(&mut proc, &scheme, 3, &[10, 11]);
+        let a = map_rows(&mut proc, &scheme, 3, &[20, 21]);
+        let b = map_rows(&mut proc, &scheme, 3, &[30, 31]);
+        // seed operands
+        c.engine.device.write(
+            scheme.row_start_addr(SubarrayId(3), 20),
+            &vec![0xF0u8; row_bytes as usize],
+        );
+        c.engine.device.write(
+            scheme.row_start_addr(SubarrayId(3), 30),
+            &vec![0x3Cu8; row_bytes as usize],
+        );
+        let req = BulkRequest::new(PudOp::And, dst, vec![a, b], 2 * row_bytes);
+        let ns = c.submit(&proc, &req).unwrap();
+        assert!(ns > 0.0);
+        assert_eq!(c.stats.pud_rows, 2);
+        assert_eq!(c.stats.fallback_rows, 0);
+        assert!((c.stats.pud_row_fraction() - 1.0).abs() < 1e-12);
+        let mut got = vec![0u8; row_bytes as usize];
+        c.engine
+            .device
+            .read(scheme.row_start_addr(SubarrayId(3), 10), &mut got);
+        assert_eq!(got, vec![0xF0 & 0x3C; row_bytes as usize]);
+    }
+
+    #[test]
+    fn cross_subarray_operands_fall_back() {
+        let mut c = coordinator();
+        let scheme = c.engine.device.scheme.clone();
+        let mut proc = Process::new(Pid(1));
+        let row_bytes = scheme.geometry.row_bytes as u64;
+        let dst = map_rows(&mut proc, &scheme, 1, &[5]);
+        let a = map_rows(&mut proc, &scheme, 2, &[6]); // different sid
+        let req = BulkRequest::new(PudOp::Copy, dst, vec![a], row_bytes);
+        c.submit(&proc, &req).unwrap();
+        assert_eq!(c.stats.pud_rows, 0);
+        assert_eq!(c.stats.fallback_rows, 1);
+        assert_eq!(c.stats.ops_fully_pud.hits, 0);
+    }
+
+    #[test]
+    fn unmapped_operand_is_an_error() {
+        let mut c = coordinator();
+        let proc = Process::new(Pid(1));
+        let req = BulkRequest::new(PudOp::Zero, 0x5000, vec![], 4096);
+        assert!(c.submit(&proc, &req).is_err());
+    }
+
+    #[test]
+    fn fallback_is_slower_than_pud_in_sim_time() {
+        let mut c = coordinator();
+        let scheme = c.engine.device.scheme.clone();
+        let mut proc = Process::new(Pid(1));
+        let row_bytes = scheme.geometry.row_bytes as u64;
+        // PUD-placed copy
+        let dst1 = map_rows(&mut proc, &scheme, 4, &[1]);
+        let src1 = map_rows(&mut proc, &scheme, 4, &[2]);
+        let pud_ns = c
+            .submit(&proc, &BulkRequest::new(PudOp::Copy, dst1, vec![src1], row_bytes))
+            .unwrap();
+        // cross-subarray copy (fallback)
+        let dst2 = map_rows(&mut proc, &scheme, 5, &[1]);
+        let src2 = map_rows(&mut proc, &scheme, 6, &[2]);
+        let fb_ns = c
+            .submit(&proc, &BulkRequest::new(PudOp::Copy, dst2, vec![src2], row_bytes))
+            .unwrap();
+        assert!(
+            fb_ns > 3.0 * pud_ns,
+            "fallback {fb_ns} ns should dwarf PUD {pud_ns} ns"
+        );
+    }
+
+    #[test]
+    fn xla_fallback_matches_scalar() {
+        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !dir.join("manifest.tsv").exists() {
+            return;
+        }
+        let scheme = InterleaveScheme::row_major(DramGeometry::default());
+        let row_bytes = scheme.geometry.row_bytes as u64;
+        let mk = |mode: FallbackMode| {
+            let engine = PudEngine::new(
+                DramDevice::new(scheme.clone()),
+                TimingParams::default(),
+            );
+            Coordinator::new(engine, mode)
+        };
+        let rt = XlaRuntime::load(&dir).unwrap();
+        let mut rng = crate::util::rng::Pcg64::new(77);
+        let mut va_bytes = vec![0u8; 2 * row_bytes as usize];
+        let mut vb_bytes = vec![0u8; 2 * row_bytes as usize];
+        rng.fill_bytes(&mut va_bytes);
+        rng.fill_bytes(&mut vb_bytes);
+
+        let mut run = |mut c: Coordinator| -> Vec<u8> {
+            let mut proc = Process::new(Pid(1));
+            // misaligned dst forces fallback on both rows
+            let dst = map_rows(&mut proc, &scheme, 7, &[40, 41, 42]);
+            let dst_off = dst + 128; // break row alignment
+            let a = map_rows(&mut proc, &scheme, 7, &[50, 51, 52]);
+            let b = map_rows(&mut proc, &scheme, 7, &[60, 61, 62]);
+            c.engine
+                .device
+                .write(scheme.row_start_addr(SubarrayId(7), 50), &va_bytes[..row_bytes as usize]);
+            c.engine
+                .device
+                .write(scheme.row_start_addr(SubarrayId(7), 51), &va_bytes[row_bytes as usize..]);
+            c.engine
+                .device
+                .write(scheme.row_start_addr(SubarrayId(7), 60), &vb_bytes[..row_bytes as usize]);
+            c.engine
+                .device
+                .write(scheme.row_start_addr(SubarrayId(7), 61), &vb_bytes[row_bytes as usize..]);
+            let req =
+                BulkRequest::new(PudOp::Xor, dst_off, vec![a, b], 2 * row_bytes);
+            c.submit(&proc, &req).unwrap();
+            assert_eq!(c.stats.fallback_rows, 2);
+            // read result through the process mapping
+            let ext = proc.phys_extents(dst_off, 2 * row_bytes).unwrap();
+            let mut out = Vec::new();
+            for e in ext {
+                let mut buf = vec![0u8; e.len as usize];
+                c.engine.device.read(e.paddr, &mut buf);
+                out.extend(buf);
+            }
+            out
+        };
+
+        let scalar_out = run(mk(FallbackMode::Scalar));
+        let xla_out = run(mk(FallbackMode::Xla(rt)));
+        assert_eq!(scalar_out, xla_out, "XLA and scalar fallback agree");
+        let want: Vec<u8> = va_bytes
+            .iter()
+            .zip(&vb_bytes)
+            .map(|(x, y)| x ^ y)
+            .collect();
+        assert_eq!(xla_out, want);
+    }
+}

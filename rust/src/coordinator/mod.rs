@@ -1,0 +1,25 @@
+//! The coordinator: the dispatch layer between workloads and the two
+//! execution substrates.
+//!
+//! For every submitted bulk operation it (1) translates virtual
+//! operands to physical extents through the owning process's page
+//! table, (2) runs the PUD legality check, (3) executes the eligible
+//! rows in-DRAM via [`crate::pud::PudEngine`], and (4) routes the rest
+//! to the CPU fallback — the XLA/PJRT runtime when loaded, else the
+//! scalar reference. It owns all cross-cutting statistics.
+//!
+//! * [`dispatch`] — per-operation planning + execution.
+//! * [`batch`] — fallback-row batching into bucket-sized XLA calls.
+//! * [`stats`] — cumulative counters for reports.
+//! * [`system`] — [`system::System`]: the fully-assembled machine
+//!   (OS context + PUD engine + allocators + processes + runtime),
+//!   the top-level object examples and benches drive.
+
+pub mod batch;
+pub mod dispatch;
+pub mod stats;
+pub mod system;
+
+pub use dispatch::{Coordinator, FallbackMode};
+pub use stats::CoordStats;
+pub use system::System;

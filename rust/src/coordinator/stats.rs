@@ -1,0 +1,110 @@
+//! Cumulative coordinator statistics.
+
+use crate::pud::exec::ExecStats;
+use crate::util::stats::HitRate;
+
+/// Counters accumulated across every dispatched bulk operation.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct CoordStats {
+    /// Bulk operations submitted.
+    pub ops: u64,
+    /// Operations whose *entire* plan ran in-DRAM (the paper's
+    /// "executed in the PUD substrate" criterion).
+    pub ops_fully_pud: HitRate,
+    /// Row-granular split.
+    pub pud_rows: u64,
+    pub fallback_rows: u64,
+    pub pud_bytes: u64,
+    pub fallback_bytes: u64,
+    /// Simulated time, by path.
+    pub pud_ns: f64,
+    pub fallback_ns: f64,
+    /// Allocation-side simulated time attributed to the workload.
+    pub alloc_ns: f64,
+    /// XLA dispatches issued by the fallback path.
+    pub xla_dispatches: u64,
+    /// Wall-clock nanoseconds spent inside XLA execution (real time,
+    /// not simulated — used by §Perf only).
+    pub xla_wall_ns: u64,
+}
+
+impl CoordStats {
+    /// Total simulated time including allocation costs.
+    pub fn total_sim_ns(&self) -> f64 {
+        self.pud_ns + self.fallback_ns + self.alloc_ns
+    }
+
+    /// Fraction of rows executed in-DRAM.
+    pub fn pud_row_fraction(&self) -> f64 {
+        let total = self.pud_rows + self.fallback_rows;
+        if total == 0 {
+            0.0
+        } else {
+            self.pud_rows as f64 / total as f64
+        }
+    }
+
+    pub fn absorb_exec(&mut self, e: &ExecStats) {
+        self.pud_rows += e.pud_rows;
+        self.fallback_rows += e.fallback_rows;
+        self.pud_bytes += e.pud_bytes;
+        self.fallback_bytes += e.fallback_bytes;
+        self.pud_ns += e.pud_ns;
+        self.fallback_ns += e.fallback_ns;
+    }
+
+    pub fn merge(&mut self, o: &CoordStats) {
+        self.ops += o.ops;
+        self.ops_fully_pud.merge(o.ops_fully_pud);
+        self.pud_rows += o.pud_rows;
+        self.fallback_rows += o.fallback_rows;
+        self.pud_bytes += o.pud_bytes;
+        self.fallback_bytes += o.fallback_bytes;
+        self.pud_ns += o.pud_ns;
+        self.fallback_ns += o.fallback_ns;
+        self.alloc_ns += o.alloc_ns;
+        self.xla_dispatches += o.xla_dispatches;
+        self.xla_wall_ns += o.xla_wall_ns;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fractions_and_totals() {
+        let mut s = CoordStats::default();
+        assert_eq!(s.pud_row_fraction(), 0.0);
+        s.absorb_exec(&ExecStats {
+            pud_rows: 3,
+            fallback_rows: 1,
+            pud_bytes: 300,
+            fallback_bytes: 100,
+            pud_ns: 10.0,
+            fallback_ns: 90.0,
+        });
+        s.alloc_ns = 5.0;
+        assert!((s.pud_row_fraction() - 0.75).abs() < 1e-12);
+        assert_eq!(s.total_sim_ns(), 105.0);
+    }
+
+    #[test]
+    fn merge_adds_everything() {
+        let mut a = CoordStats {
+            ops: 1,
+            pud_rows: 2,
+            ..Default::default()
+        };
+        let b = CoordStats {
+            ops: 3,
+            pud_rows: 5,
+            xla_dispatches: 7,
+            ..Default::default()
+        };
+        a.merge(&b);
+        assert_eq!(a.ops, 4);
+        assert_eq!(a.pud_rows, 7);
+        assert_eq!(a.xla_dispatches, 7);
+    }
+}

@@ -1,0 +1,280 @@
+//! The fully assembled machine.
+//!
+//! [`System`] bundles the OS context (buddy + huge-page pool), the
+//! DRAM/PUD engine, the coordinator, and a process table — everything
+//! a workload needs. It is the single entry point the CLI, examples,
+//! and benchmarks construct; allocators plug in per workload run.
+
+use anyhow::Result;
+use rustc_hash::FxHashMap;
+
+use crate::alloc::traits::{Allocator, OsCtx};
+use crate::dram::address::InterleaveScheme;
+use crate::dram::device::DramDevice;
+use crate::dram::timing::TimingParams;
+use crate::os::process::{Pid, Process};
+use crate::pud::exec::PudEngine;
+use crate::pud::isa::BulkRequest;
+use crate::runtime::XlaRuntime;
+
+use super::dispatch::{Coordinator, FallbackMode};
+
+/// System construction options.
+pub struct SystemConfig {
+    pub scheme: InterleaveScheme,
+    pub timing: TimingParams,
+    /// Huge pages reserved at boot for the PUD pool.
+    pub huge_pages: usize,
+    /// Buddy churn rounds before workloads start (fragmentation).
+    pub churn_rounds: usize,
+    pub seed: u64,
+    /// Artifacts directory to load the XLA runtime from; None =
+    /// scalar fallback (simulation-only).
+    pub artifacts: Option<std::path::PathBuf>,
+}
+
+impl Default for SystemConfig {
+    fn default() -> Self {
+        Self {
+            scheme: InterleaveScheme::row_major(Default::default()),
+            timing: TimingParams::default(),
+            huge_pages: 256, // 512 MiB PUD pool out of 8 GiB
+            churn_rounds: 20_000,
+            seed: 0xDEC0DE,
+            artifacts: None,
+        }
+    }
+}
+
+/// The machine: OS + DRAM/PUD + coordinator + processes.
+pub struct System {
+    pub os: OsCtx,
+    pub coord: Coordinator,
+    processes: FxHashMap<Pid, Process>,
+    next_pid: u32,
+}
+
+impl System {
+    pub fn boot(cfg: SystemConfig) -> Result<Self> {
+        let os = OsCtx::boot(
+            cfg.scheme.clone(),
+            cfg.huge_pages,
+            cfg.churn_rounds,
+            cfg.seed,
+        )?;
+        let engine = PudEngine::new(DramDevice::new(cfg.scheme), cfg.timing);
+        let fallback = match cfg.artifacts {
+            Some(dir) => FallbackMode::Xla(XlaRuntime::load(dir)?),
+            None => FallbackMode::Scalar,
+        };
+        Ok(Self {
+            os,
+            coord: Coordinator::new(engine, fallback),
+            processes: FxHashMap::default(),
+            next_pid: 1,
+        })
+    }
+
+    /// Spawn a fresh process address space.
+    pub fn spawn(&mut self) -> Pid {
+        let pid = Pid(self.next_pid);
+        self.next_pid += 1;
+        self.processes.insert(pid, Process::new(pid));
+        pid
+    }
+
+    pub fn process(&self, pid: Pid) -> &Process {
+        &self.processes[&pid]
+    }
+
+    pub fn process_mut(&mut self, pid: Pid) -> &mut Process {
+        self.processes.get_mut(&pid).expect("live pid")
+    }
+
+    /// Allocate `len` bytes in `pid` with `alloc`.
+    pub fn alloc(
+        &mut self,
+        alloc: &mut dyn Allocator,
+        pid: Pid,
+        len: u64,
+    ) -> Result<u64> {
+        let proc = self.processes.get_mut(&pid).expect("live pid");
+        alloc.alloc(&mut self.os, proc, len)
+    }
+
+    /// Allocate co-located with `hint` (PUMA's pim_alloc_align; the
+    /// baselines ignore the hint).
+    pub fn alloc_align(
+        &mut self,
+        alloc: &mut dyn Allocator,
+        pid: Pid,
+        len: u64,
+        hint: u64,
+    ) -> Result<u64> {
+        let proc = self.processes.get_mut(&pid).expect("live pid");
+        alloc.alloc_align(&mut self.os, proc, len, hint)
+    }
+
+    /// Free an allocation.
+    pub fn free(
+        &mut self,
+        alloc: &mut dyn Allocator,
+        pid: Pid,
+        va: u64,
+    ) -> Result<()> {
+        let proc = self.processes.get_mut(&pid).expect("live pid");
+        alloc.free(&mut self.os, proc, va)
+    }
+
+    /// Submit a bulk operation for `pid`; returns simulated ns.
+    pub fn submit(&mut self, pid: Pid, req: &BulkRequest) -> Result<f64> {
+        let proc = self.processes.get(&pid).expect("live pid");
+        self.coord.submit(proc, req)
+    }
+
+    /// Write bytes through a process's virtual mapping (test/workload
+    /// seeding).
+    pub fn write_virt(&mut self, pid: Pid, va: u64, data: &[u8]) -> Result<()> {
+        let proc = self.processes.get(&pid).expect("live pid");
+        for (off, ext) in extents_with_offsets(proc, va, data.len() as u64)? {
+            self.coord
+                .engine
+                .device
+                .write(ext.paddr, &data[off as usize..(off + ext.len) as usize]);
+        }
+        Ok(())
+    }
+
+    /// Read bytes through a process's virtual mapping.
+    pub fn read_virt(&mut self, pid: Pid, va: u64, len: u64) -> Result<Vec<u8>> {
+        let proc = self.processes.get(&pid).expect("live pid");
+        let mut out = vec![0u8; len as usize];
+        for (off, ext) in extents_with_offsets(proc, va, len)? {
+            let mut buf = vec![0u8; ext.len as usize];
+            self.coord.engine.device.read(ext.paddr, &mut buf);
+            out[off as usize..(off + ext.len) as usize].copy_from_slice(&buf);
+        }
+        Ok(out)
+    }
+}
+
+fn extents_with_offsets(
+    proc: &Process,
+    va: u64,
+    len: u64,
+) -> Result<Vec<(u64, crate::os::process::PhysExtent)>> {
+    let exts = proc.phys_extents(va, len)?;
+    let mut out = Vec::with_capacity(exts.len());
+    let mut off = 0u64;
+    for e in exts {
+        out.push((off, e));
+        off += e.len;
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::alloc::puma::{FitPolicy, PumaAlloc};
+    use crate::alloc::mallocsim::MallocSim;
+    use crate::pud::isa::PudOp;
+
+    fn small_system() -> System {
+        let scheme = InterleaveScheme::row_major(crate::dram::geometry::DramGeometry {
+            channels: 1,
+            ranks_per_channel: 1,
+            banks_per_rank: 4,
+            subarrays_per_bank: 8,
+            rows_per_subarray: 256,
+            row_bytes: 8192,
+        }); // 64 MiB
+        System::boot(SystemConfig {
+            scheme,
+            huge_pages: 8,
+            churn_rounds: 3_000,
+            seed: 9,
+            timing: TimingParams::default(),
+            artifacts: None,
+        })
+        .unwrap()
+    }
+
+    #[test]
+    fn virt_io_roundtrip() {
+        let mut sys = small_system();
+        let pid = sys.spawn();
+        let mut m = MallocSim::new();
+        let va = sys.alloc(&mut m, pid, 50_000).unwrap();
+        let data: Vec<u8> = (0..50_000u32).map(|i| (i % 251) as u8).collect();
+        sys.write_virt(pid, va, &data).unwrap();
+        assert_eq!(sys.read_virt(pid, va, 50_000).unwrap(), data);
+    }
+
+    #[test]
+    fn puma_flow_end_to_end() {
+        let mut sys = small_system();
+        let pid = sys.spawn();
+        let row = sys.os.scheme.geometry.row_bytes as u64;
+        let mut puma = PumaAlloc::new(row, FitPolicy::WorstFit);
+        puma.pim_preallocate(&mut sys.os, 6).unwrap();
+        let len = 8 * row;
+        let a = sys.alloc(&mut puma, pid, len).unwrap();
+        let b = sys.alloc_align(&mut puma, pid, len, a).unwrap();
+        let c = sys.alloc_align(&mut puma, pid, len, a).unwrap();
+        let va: Vec<u8> = (0..len).map(|i| (i % 256) as u8).collect();
+        let vb: Vec<u8> = (0..len).map(|i| ((i / 3) % 256) as u8).collect();
+        sys.write_virt(pid, a, &va).unwrap();
+        sys.write_virt(pid, b, &vb).unwrap();
+        let req = BulkRequest::new(PudOp::And, c, vec![a, b], len);
+        sys.submit(pid, &req).unwrap();
+        assert!(
+            sys.coord.stats.pud_row_fraction() > 0.99,
+            "PUMA placement should be fully PUD-executable"
+        );
+        let want: Vec<u8> = va.iter().zip(&vb).map(|(x, y)| x & y).collect();
+        assert_eq!(sys.read_virt(pid, c, len).unwrap(), want);
+    }
+
+    #[test]
+    fn malloc_flow_falls_back_but_stays_correct() {
+        let mut sys = small_system();
+        let pid = sys.spawn();
+        let row = sys.os.scheme.geometry.row_bytes as u64;
+        let mut m = MallocSim::new();
+        let len = 4 * row;
+        let a = sys.alloc(&mut m, pid, len).unwrap();
+        let b = sys.alloc(&mut m, pid, len).unwrap();
+        let c = sys.alloc(&mut m, pid, len).unwrap();
+        let va = vec![0xAAu8; len as usize];
+        let vb = vec![0x0Fu8; len as usize];
+        sys.write_virt(pid, a, &va).unwrap();
+        sys.write_virt(pid, b, &vb).unwrap();
+        let req = BulkRequest::new(PudOp::Or, c, vec![a, b], len);
+        sys.submit(pid, &req).unwrap();
+        assert!(
+            sys.coord.stats.pud_row_fraction() < 0.01,
+            "malloc placement should be ~0% PUD (got {})",
+            sys.coord.stats.pud_row_fraction()
+        );
+        assert_eq!(
+            sys.read_virt(pid, c, len).unwrap(),
+            vec![0xAFu8; len as usize]
+        );
+    }
+
+    #[test]
+    fn multiple_processes_isolated() {
+        let mut sys = small_system();
+        let p1 = sys.spawn();
+        let p2 = sys.spawn();
+        let mut m1 = MallocSim::new();
+        let mut m2 = MallocSim::new();
+        let a1 = sys.alloc(&mut m1, p1, 4096).unwrap();
+        let a2 = sys.alloc(&mut m2, p2, 4096).unwrap();
+        sys.write_virt(p1, a1, &[1u8; 4096]).unwrap();
+        sys.write_virt(p2, a2, &[2u8; 4096]).unwrap();
+        assert_eq!(sys.read_virt(p1, a1, 4096).unwrap(), [1u8; 4096]);
+        assert_eq!(sys.read_virt(p2, a2, 4096).unwrap(), [2u8; 4096]);
+    }
+}

@@ -1,0 +1,157 @@
+//! Per-bank row-buffer state machine.
+//!
+//! Tracks which row is open in each bank so CPU access streams get
+//! row-hit/row-miss timing; PUD command sequences (AAP/TRA) leave the
+//! bank precharged.
+
+use rustc_hash::FxHashMap;
+
+use super::geometry::{DramGeometry, Loc};
+use super::timing::TimingParams;
+
+/// Bank state: open row (per bank, identified by the dense bank id).
+#[derive(Debug, Default)]
+pub struct BankState {
+    /// bank id -> open (subarray, row), None when precharged
+    open: FxHashMap<u32, (u32, u32)>,
+    pub hits: u64,
+    pub misses: u64,
+}
+
+impl BankState {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn bank_id(geom: &DramGeometry, loc: &Loc) -> u32 {
+        (loc.channel * geom.ranks_per_channel + loc.rank) * geom.banks_per_rank
+            + loc.bank
+    }
+
+    /// Account a column access at `loc`; returns its latency and
+    /// updates hit/miss counters and the open row.
+    pub fn access(
+        &mut self,
+        geom: &DramGeometry,
+        timing: &TimingParams,
+        loc: &Loc,
+    ) -> f64 {
+        let bid = Self::bank_id(geom, loc);
+        let target = (loc.subarray, loc.row);
+        match self.open.get(&bid) {
+            Some(&open) if open == target => {
+                self.hits += 1;
+                timing.row_hit_ns()
+            }
+            _ => {
+                self.misses += 1;
+                self.open.insert(bid, target);
+                timing.row_miss_ns()
+            }
+        }
+    }
+
+    /// PUD sequences close the rows they touch (AAP ends precharged).
+    pub fn precharge(&mut self, geom: &DramGeometry, loc: &Loc) {
+        self.open.remove(&Self::bank_id(geom, loc));
+    }
+
+    /// Precharge-all (e.g. refresh boundary).
+    pub fn precharge_all(&mut self) {
+        self.open.clear();
+    }
+
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn loc(bank: u32, subarray: u32, row: u32, column: u32) -> Loc {
+        Loc {
+            channel: 0,
+            rank: 0,
+            bank,
+            subarray,
+            row,
+            column,
+        }
+    }
+
+    #[test]
+    fn first_access_misses_then_hits() {
+        let g = DramGeometry::default();
+        let t = TimingParams::default();
+        let mut b = BankState::new();
+        let l = loc(0, 0, 5, 0);
+        let first = b.access(&g, &t, &l);
+        let second = b.access(&g, &t, &loc(0, 0, 5, 64));
+        assert_eq!(first, t.row_miss_ns());
+        assert_eq!(second, t.row_hit_ns());
+        assert_eq!((b.hits, b.misses), (1, 1));
+    }
+
+    #[test]
+    fn row_conflict_misses() {
+        let g = DramGeometry::default();
+        let t = TimingParams::default();
+        let mut b = BankState::new();
+        b.access(&g, &t, &loc(0, 0, 5, 0));
+        let conflict = b.access(&g, &t, &loc(0, 0, 6, 0));
+        assert_eq!(conflict, t.row_miss_ns());
+    }
+
+    #[test]
+    fn different_banks_independent() {
+        let g = DramGeometry::default();
+        let t = TimingParams::default();
+        let mut b = BankState::new();
+        b.access(&g, &t, &loc(0, 0, 5, 0));
+        b.access(&g, &t, &loc(1, 0, 9, 0));
+        // bank 0 row 5 still open
+        assert_eq!(b.access(&g, &t, &loc(0, 0, 5, 64)), t.row_hit_ns());
+    }
+
+    #[test]
+    fn same_bank_different_subarray_is_conflict() {
+        // two subarrays of one bank share the bank-level open-row slot
+        // in our model (one row buffer active per bank at a time)
+        let g = DramGeometry::default();
+        let t = TimingParams::default();
+        let mut b = BankState::new();
+        b.access(&g, &t, &loc(0, 0, 5, 0));
+        assert_eq!(b.access(&g, &t, &loc(0, 1, 5, 0)), t.row_miss_ns());
+    }
+
+    #[test]
+    fn precharge_forces_miss() {
+        let g = DramGeometry::default();
+        let t = TimingParams::default();
+        let mut b = BankState::new();
+        let l = loc(0, 0, 5, 0);
+        b.access(&g, &t, &l);
+        b.precharge(&g, &l);
+        assert_eq!(b.access(&g, &t, &l), t.row_miss_ns());
+    }
+
+    #[test]
+    fn hit_rate_math() {
+        let g = DramGeometry::default();
+        let t = TimingParams::default();
+        let mut b = BankState::new();
+        assert_eq!(b.hit_rate(), 0.0);
+        let l = loc(0, 0, 1, 0);
+        b.access(&g, &t, &l);
+        b.access(&g, &t, &l);
+        b.access(&g, &t, &l);
+        assert!((b.hit_rate() - 2.0 / 3.0).abs() < 1e-12);
+    }
+}

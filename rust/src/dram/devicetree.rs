@@ -1,0 +1,308 @@
+//! Parser for the device-tree-style DRAM description.
+//!
+//! The paper (§2, component ii) obtains the DRAM interleaving scheme
+//! from an open-firmware device tree provided by the memory
+//! controller. We model the same information path: geometry and
+//! interleaving come from an external text description rather than
+//! being hardcoded, e.g.:
+//!
+//! ```text
+//! dram {
+//!     channels = 1;
+//!     ranks-per-channel = 1;
+//!     banks-per-rank = 16;
+//!     subarrays-per-bank = 64;
+//!     rows-per-subarray = 1024;
+//!     row-bytes = 8192;
+//!     interleave {
+//!         column   = 0-12;
+//!         channel  = ;
+//!         rank     = ;
+//!         bank     = 13-16;
+//!         row      = 17-26;
+//!         subarray = 27-32;
+//!         xor-bank = 0;
+//!     };
+//! };
+//! ```
+//!
+//! Bit ranges are `lo-hi` inclusive (LSB-first), comma-separated
+//! ranges compose (`0-3,8-9`), and an empty value means zero bits
+//! (field width 1 value 0 — e.g. single channel).
+
+use anyhow::{anyhow, bail, Context, Result};
+use rustc_hash::FxHashMap;
+
+use super::address::{Field, InterleaveScheme};
+use super::geometry::DramGeometry;
+
+/// Parse a device-tree-style description into an interleave scheme.
+pub fn parse(text: &str) -> Result<InterleaveScheme> {
+    let props = tokenize(text)?;
+    let geom = DramGeometry {
+        channels: get_num(&props, "dram.channels")? as u32,
+        ranks_per_channel: get_num(&props, "dram.ranks-per-channel")? as u32,
+        banks_per_rank: get_num(&props, "dram.banks-per-rank")? as u32,
+        subarrays_per_bank: get_num(&props, "dram.subarrays-per-bank")? as u32,
+        rows_per_subarray: get_num(&props, "dram.rows-per-subarray")? as u32,
+        row_bytes: get_num(&props, "dram.row-bytes")? as u32,
+    };
+    geom.validate()?;
+
+    let mut bits = Vec::new();
+    for f in Field::ALL {
+        let key = format!("dram.interleave.{}", f.name());
+        let raw = props
+            .get(key.as_str())
+            .ok_or_else(|| anyhow!("missing property {key}"))?;
+        bits.push((f, parse_bit_list(raw)?));
+    }
+    let xor = props
+        .get("dram.interleave.xor-bank")
+        .map(|v| v.trim() == "1" || v.trim() == "true")
+        .unwrap_or(false);
+
+    let scheme = InterleaveScheme {
+        geometry: geom,
+        bits,
+        xor_bank_with_row_low: xor,
+    };
+    scheme.validate().context("device tree describes an invalid scheme")?;
+    Ok(scheme)
+}
+
+/// Render a scheme back to device-tree text (round-trips via [`parse`]).
+pub fn render(s: &InterleaveScheme) -> String {
+    let g = &s.geometry;
+    let mut out = String::from("dram {\n");
+    for (k, v) in [
+        ("channels", g.channels),
+        ("ranks-per-channel", g.ranks_per_channel),
+        ("banks-per-rank", g.banks_per_rank),
+        ("subarrays-per-bank", g.subarrays_per_bank),
+        ("rows-per-subarray", g.rows_per_subarray),
+        ("row-bytes", g.row_bytes),
+    ] {
+        out.push_str(&format!("    {k} = {v};\n"));
+    }
+    out.push_str("    interleave {\n");
+    for (f, fbits) in &s.bits {
+        out.push_str(&format!(
+            "        {} = {};\n",
+            f.name(),
+            render_bit_list(fbits)
+        ));
+    }
+    out.push_str(&format!(
+        "        xor-bank = {};\n",
+        s.xor_bank_with_row_low as u8
+    ));
+    out.push_str("    };\n};\n");
+    out
+}
+
+fn render_bit_list(bits: &[u8]) -> String {
+    // compress consecutive runs into lo-hi
+    let mut parts = Vec::new();
+    let mut i = 0;
+    while i < bits.len() {
+        let lo = bits[i];
+        let mut hi = lo;
+        while i + 1 < bits.len() && bits[i + 1] == hi + 1 {
+            i += 1;
+            hi += 1;
+        }
+        if lo == hi {
+            parts.push(format!("{lo}"));
+        } else {
+            parts.push(format!("{lo}-{hi}"));
+        }
+        i += 1;
+    }
+    parts.join(",")
+}
+
+fn parse_bit_list(raw: &str) -> Result<Vec<u8>> {
+    let raw = raw.trim();
+    if raw.is_empty() {
+        return Ok(Vec::new());
+    }
+    let mut bits = Vec::new();
+    for part in raw.split(',') {
+        let part = part.trim();
+        if let Some((lo, hi)) = part.split_once('-') {
+            let lo: u8 = lo.trim().parse().context("bit range lo")?;
+            let hi: u8 = hi.trim().parse().context("bit range hi")?;
+            if lo > hi {
+                bail!("inverted bit range {part:?}");
+            }
+            bits.extend(lo..=hi);
+        } else {
+            bits.push(part.parse().context("bit index")?);
+        }
+    }
+    Ok(bits)
+}
+
+/// Flatten `name { key = value; ... }` nesting into dotted keys.
+fn tokenize(text: &str) -> Result<FxHashMap<String, String>> {
+    let mut props = FxHashMap::default();
+    let mut path: Vec<String> = Vec::new();
+    // strip comments
+    let mut clean = String::new();
+    for line in text.lines() {
+        let line = match line.find("//") {
+            Some(idx) => &line[..idx],
+            None => line,
+        };
+        clean.push_str(line);
+        clean.push('\n');
+    }
+    let mut buf = String::new();
+    for ch in clean.chars() {
+        match ch {
+            '{' => {
+                let name = buf.trim().trim_end_matches(';').trim();
+                if name.is_empty() {
+                    bail!("anonymous block");
+                }
+                path.push(name.to_string());
+                buf.clear();
+            }
+            '}' => {
+                if !buf.trim().is_empty() {
+                    record(&mut props, &path, &buf)?;
+                    buf.clear();
+                }
+                path.pop().ok_or_else(|| anyhow!("unbalanced '}}'"))?;
+            }
+            ';' => {
+                if !buf.trim().is_empty() {
+                    record(&mut props, &path, &buf)?;
+                }
+                buf.clear();
+            }
+            c => buf.push(c),
+        }
+    }
+    if !path.is_empty() {
+        bail!("unbalanced '{{' — unclosed block {:?}", path.join("."));
+    }
+    Ok(props)
+}
+
+fn record(
+    props: &mut FxHashMap<String, String>,
+    path: &[String],
+    stmt: &str,
+) -> Result<()> {
+    let (k, v) = stmt
+        .split_once('=')
+        .ok_or_else(|| anyhow!("expected key = value, got {stmt:?}"))?;
+    let mut key = path.join(".");
+    if !key.is_empty() {
+        key.push('.');
+    }
+    key.push_str(k.trim());
+    props.insert(key, v.trim().to_string());
+    Ok(())
+}
+
+fn get_num(props: &FxHashMap<String, String>, key: &str) -> Result<u64> {
+    let raw = props
+        .get(key)
+        .ok_or_else(|| anyhow!("missing property {key}"))?;
+    raw.trim()
+        .parse()
+        .with_context(|| format!("property {key} = {raw:?} is not a number"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_row_major_default() {
+        let s = InterleaveScheme::row_major(DramGeometry::default());
+        let text = render(&s);
+        let parsed = parse(&text).unwrap();
+        assert_eq!(parsed, s);
+    }
+
+    #[test]
+    fn roundtrip_bank_xor() {
+        let s = InterleaveScheme::bank_xor(DramGeometry::default());
+        assert_eq!(parse(&render(&s)).unwrap(), s);
+    }
+
+    #[test]
+    fn parses_handwritten() {
+        let text = "
+// comment line
+dram {
+    channels = 1; ranks-per-channel = 1;
+    banks-per-rank = 2;
+    subarrays-per-bank = 2;
+    rows-per-subarray = 4;
+    row-bytes = 16;
+    interleave {
+        column = 0-3;
+        channel = ;
+        rank = ;
+        bank = 4;
+        row = 5-6;
+        subarray = 7;
+        xor-bank = 0;
+    };
+};";
+        let s = parse(text).unwrap();
+        assert_eq!(s.geometry.banks_per_rank, 2);
+        assert_eq!(s.addr_bits(), 8);
+        assert!(s.row_aligned(0));
+        assert!(!s.row_aligned(5));
+    }
+
+    #[test]
+    fn rejects_missing_property() {
+        let text = "dram { channels = 1; };";
+        let err = parse(text).unwrap_err().to_string();
+        assert!(err.contains("missing property"), "{err}");
+    }
+
+    #[test]
+    fn rejects_unbalanced_braces() {
+        assert!(parse("dram { channels = 1;").is_err());
+        assert!(parse("dram { } }").is_err());
+    }
+
+    #[test]
+    fn rejects_invalid_scheme() {
+        // bank needs 1 bit but gets none
+        let text = "
+dram {
+    channels = 1; ranks-per-channel = 1; banks-per-rank = 2;
+    subarrays-per-bank = 2; rows-per-subarray = 4; row-bytes = 16;
+    interleave {
+        column = 0-3; channel = ; rank = ; bank = ;
+        row = 4-5; subarray = 6; xor-bank = 0;
+    };
+};";
+        assert!(parse(text).is_err());
+    }
+
+    #[test]
+    fn bit_list_forms() {
+        assert_eq!(parse_bit_list("").unwrap(), Vec::<u8>::new());
+        assert_eq!(parse_bit_list("3").unwrap(), vec![3]);
+        assert_eq!(parse_bit_list("0-2").unwrap(), vec![0, 1, 2]);
+        assert_eq!(parse_bit_list("0-1, 5, 7-8").unwrap(), vec![0, 1, 5, 7, 8]);
+        assert!(parse_bit_list("5-2").is_err());
+        assert!(parse_bit_list("x").is_err());
+    }
+
+    #[test]
+    fn render_compresses_ranges() {
+        assert_eq!(render_bit_list(&[0, 1, 2, 5, 7, 8]), "0-2,5,7-8");
+        assert_eq!(render_bit_list(&[]), "");
+    }
+}

@@ -1,0 +1,94 @@
+//! Per-command energy accounting.
+//!
+//! Rough DDR4-class constants (nanojoules); the absolute values are
+//! estimates, but the *ratios* follow the RowClone/Ambit results the
+//! paper builds on: in-DRAM copy avoids the channel I/O energy that
+//! dominates CPU-path bulk transfers, so FPM copy is an order of
+//! magnitude cheaper per byte than moving the data out and back.
+
+use super::device::DramCounters;
+
+/// Energy constants in nanojoules per event.
+#[derive(Debug, Clone, PartialEq)]
+pub struct EnergyParams {
+    /// One ACTIVATE+PRECHARGE pair.
+    pub act_pre_nj: f64,
+    /// One 64-byte line transferred over the channel (incl. I/O).
+    pub line_io_nj: f64,
+    /// One AAP sequence (two activations, no channel I/O).
+    pub aap_nj: f64,
+    /// One triple-row activation.
+    pub tra_nj: f64,
+    /// One row moved by PSM (internal column reads/writes).
+    pub psm_row_nj: f64,
+}
+
+impl Default for EnergyParams {
+    fn default() -> Self {
+        Self {
+            act_pre_nj: 2.5,
+            line_io_nj: 1.3,
+            aap_nj: 5.5,     // ~2 activations + margin
+            tra_nj: 8.0,     // three simultaneous activations
+            psm_row_nj: 95.0, // 128 internal line moves per 8 KiB row
+        }
+    }
+}
+
+impl EnergyParams {
+    /// Total energy (nJ) implied by a counter snapshot.
+    pub fn total_nj(&self, c: &DramCounters) -> f64 {
+        c.activates as f64 * self.act_pre_nj
+            + (c.line_reads + c.line_writes) as f64 * self.line_io_nj
+            + c.aaps as f64 * self.aap_nj
+            + c.tras as f64 * self.tra_nj
+            + c.psm_rows as f64 * self.psm_row_nj
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zero_counters_zero_energy() {
+        let e = EnergyParams::default();
+        assert_eq!(e.total_nj(&DramCounters::default()), 0.0);
+    }
+
+    #[test]
+    fn fpm_copy_cheaper_than_channel_copy() {
+        let e = EnergyParams::default();
+        // copy one 8 KiB row in-DRAM: 1 AAP
+        let fpm = DramCounters {
+            aaps: 1,
+            ..Default::default()
+        };
+        // copy the same row over the channel: 128 line reads + 128
+        // line writes + 2 activations
+        let cpu = DramCounters {
+            activates: 2,
+            line_reads: 128,
+            line_writes: 128,
+            ..Default::default()
+        };
+        let ratio = e.total_nj(&cpu) / e.total_nj(&fpm);
+        assert!(ratio > 10.0, "expected >10x energy gap, got {ratio}");
+    }
+
+    #[test]
+    fn linear_in_counters() {
+        let e = EnergyParams::default();
+        let one = DramCounters {
+            aaps: 1,
+            tras: 1,
+            ..Default::default()
+        };
+        let two = DramCounters {
+            aaps: 2,
+            tras: 2,
+            ..Default::default()
+        };
+        assert!((e.total_nj(&two) - 2.0 * e.total_nj(&one)).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,228 @@
+//! DRAM organization: sizes and typed coordinates.
+//!
+//! The paper's reference organization (§1, footnote 1): a subarray has
+//! 1024 rows sharing a row buffer; with 8 KiB rows a subarray holds
+//! 8 MiB per rank-wide row (1 MiB per chip in the paper's per-chip
+//! view — we model rank-wide rows, the granularity PUD operates on).
+
+use anyhow::{bail, Result};
+
+/// Geometry of the simulated DRAM.
+///
+/// All counts are powers of two so that address interleaving can be a
+/// pure bit-field mapping (as real controllers do).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct DramGeometry {
+    pub channels: u32,
+    pub ranks_per_channel: u32,
+    pub banks_per_rank: u32,
+    pub subarrays_per_bank: u32,
+    pub rows_per_subarray: u32,
+    /// Bytes per (rank-wide) DRAM row — the PUD operand granularity.
+    pub row_bytes: u32,
+}
+
+impl Default for DramGeometry {
+    /// 8 GiB, matching the paper's evaluated system: 1 channel, 1 rank,
+    /// 16 banks, 64 subarrays/bank, 1024 rows/subarray, 8 KiB rows.
+    fn default() -> Self {
+        Self {
+            channels: 1,
+            ranks_per_channel: 1,
+            banks_per_rank: 16,
+            subarrays_per_bank: 64,
+            rows_per_subarray: 1024,
+            row_bytes: 8192,
+        }
+    }
+}
+
+/// Global subarray identifier (dense, 0..total_subarrays).
+///
+/// The paper indexes PUMA's ordered array "by subarray ID (obtained by
+/// ORing subarray, bank, channel, and rank mask bits)": a dense id over
+/// every (channel, rank, bank, subarray) tuple. See
+/// [`InterleaveScheme::subarray_id`](super::address::InterleaveScheme).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct SubarrayId(pub u32);
+
+/// Fully decomposed DRAM coordinate of a physical byte address.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Loc {
+    pub channel: u32,
+    pub rank: u32,
+    pub bank: u32,
+    pub subarray: u32,
+    pub row: u32,
+    pub column: u32, // byte offset within the row
+}
+
+impl DramGeometry {
+    /// Validate all fields are nonzero powers of two.
+    pub fn validate(&self) -> Result<()> {
+        for (name, v) in [
+            ("channels", self.channels),
+            ("ranks_per_channel", self.ranks_per_channel),
+            ("banks_per_rank", self.banks_per_rank),
+            ("subarrays_per_bank", self.subarrays_per_bank),
+            ("rows_per_subarray", self.rows_per_subarray),
+            ("row_bytes", self.row_bytes),
+        ] {
+            if v == 0 || !v.is_power_of_two() {
+                bail!("geometry field {name} = {v} must be a nonzero power of two");
+            }
+        }
+        Ok(())
+    }
+
+    pub fn total_banks(&self) -> u32 {
+        self.channels * self.ranks_per_channel * self.banks_per_rank
+    }
+
+    pub fn total_subarrays(&self) -> u32 {
+        self.total_banks() * self.subarrays_per_bank
+    }
+
+    /// Bytes stored by one subarray (rows x row size).
+    pub fn subarray_bytes(&self) -> u64 {
+        self.rows_per_subarray as u64 * self.row_bytes as u64
+    }
+
+    /// Total device capacity in bytes.
+    pub fn capacity_bytes(&self) -> u64 {
+        self.total_subarrays() as u64 * self.subarray_bytes()
+    }
+
+    /// Rows in the whole device.
+    pub fn total_rows(&self) -> u64 {
+        self.total_subarrays() as u64 * self.rows_per_subarray as u64
+    }
+
+    /// Dense global subarray id for a location.
+    pub fn subarray_id(&self, loc: &Loc) -> SubarrayId {
+        let mut id = loc.channel;
+        id = id * self.ranks_per_channel + loc.rank;
+        id = id * self.banks_per_rank + loc.bank;
+        id = id * self.subarrays_per_bank + loc.subarray;
+        SubarrayId(id)
+    }
+
+    /// Dense global row index (subarray-major) for a location.
+    pub fn global_row(&self, loc: &Loc) -> u64 {
+        self.subarray_id(loc).0 as u64 * self.rows_per_subarray as u64
+            + loc.row as u64
+    }
+
+    /// Validate a location against this geometry.
+    pub fn contains(&self, loc: &Loc) -> bool {
+        loc.channel < self.channels
+            && loc.rank < self.ranks_per_channel
+            && loc.bank < self.banks_per_rank
+            && loc.subarray < self.subarrays_per_bank
+            && loc.row < self.rows_per_subarray
+            && loc.column < self.row_bytes
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_8gib() {
+        let g = DramGeometry::default();
+        g.validate().unwrap();
+        assert_eq!(g.capacity_bytes(), 8 << 30);
+        assert_eq!(g.total_subarrays(), 1024);
+        assert_eq!(g.subarray_bytes(), 8 << 20);
+    }
+
+    #[test]
+    fn validate_rejects_non_pow2() {
+        let mut g = DramGeometry::default();
+        g.banks_per_rank = 12;
+        assert!(g.validate().is_err());
+        g.banks_per_rank = 0;
+        assert!(g.validate().is_err());
+    }
+
+    #[test]
+    fn subarray_id_is_dense_and_unique() {
+        let g = DramGeometry {
+            channels: 2,
+            ranks_per_channel: 2,
+            banks_per_rank: 4,
+            subarrays_per_bank: 8,
+            rows_per_subarray: 16,
+            row_bytes: 64,
+        };
+        let mut seen = std::collections::HashSet::new();
+        for channel in 0..g.channels {
+            for rank in 0..g.ranks_per_channel {
+                for bank in 0..g.banks_per_rank {
+                    for subarray in 0..g.subarrays_per_bank {
+                        let loc = Loc {
+                            channel,
+                            rank,
+                            bank,
+                            subarray,
+                            row: 0,
+                            column: 0,
+                        };
+                        let id = g.subarray_id(&loc);
+                        assert!(id.0 < g.total_subarrays());
+                        assert!(seen.insert(id), "duplicate id {id:?}");
+                    }
+                }
+            }
+        }
+        assert_eq!(seen.len(), g.total_subarrays() as usize);
+    }
+
+    #[test]
+    fn global_row_unique_per_row() {
+        let g = DramGeometry {
+            channels: 1,
+            ranks_per_channel: 1,
+            banks_per_rank: 2,
+            subarrays_per_bank: 2,
+            rows_per_subarray: 4,
+            row_bytes: 64,
+        };
+        let mut seen = std::collections::HashSet::new();
+        for bank in 0..2 {
+            for subarray in 0..2 {
+                for row in 0..4 {
+                    let loc = Loc {
+                        channel: 0,
+                        rank: 0,
+                        bank,
+                        subarray,
+                        row,
+                        column: 0,
+                    };
+                    assert!(seen.insert(g.global_row(&loc)));
+                }
+            }
+        }
+        assert_eq!(seen.len() as u64, g.total_rows());
+    }
+
+    #[test]
+    fn contains_bounds() {
+        let g = DramGeometry::default();
+        let ok = Loc {
+            channel: 0,
+            rank: 0,
+            bank: 15,
+            subarray: 63,
+            row: 1023,
+            column: 8191,
+        };
+        assert!(g.contains(&ok));
+        let bad = Loc { bank: 16, ..ok };
+        assert!(!g.contains(&bad));
+        let bad = Loc { column: 8192, ..ok };
+        assert!(!g.contains(&bad));
+    }
+}

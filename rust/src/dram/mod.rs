@@ -1,0 +1,30 @@
+//! DRAM device model.
+//!
+//! Everything the paper's evaluation needs from the memory system:
+//!
+//! * [`geometry`] — organization (channels/ranks/banks/subarrays/rows/
+//!   columns) and typed coordinates.
+//! * [`address`] — the configurable physical-address interleaving
+//!   scheme (bit-field mapping) and the subarray-ID extraction PUMA
+//!   keys its ordered array on.
+//! * [`devicetree`] — parser for the device-tree-style description the
+//!   memory controller exposes (paper §2, component ii).
+//! * [`timing`] — DDR4-style command timing, including the PUD command
+//!   sequences (AAP, TRA) used for analytic latency accounting.
+//! * [`bank`] — per-bank row-buffer state machine (open-row tracking).
+//! * [`device`] — the functional backing store: byte-addressable,
+//!   lazily materialized rows, access counters.
+//! * [`energy`] — per-command energy accounting (RowClone/Ambit data).
+
+pub mod address;
+pub mod bank;
+pub mod device;
+pub mod devicetree;
+pub mod energy;
+pub mod geometry;
+pub mod timing;
+
+pub use address::{Field, InterleaveScheme};
+pub use device::DramDevice;
+pub use geometry::{DramGeometry, Loc, SubarrayId};
+pub use timing::TimingParams;

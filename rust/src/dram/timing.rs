@@ -1,0 +1,199 @@
+//! Analytic DRAM command timing, including the PUD command sequences.
+//!
+//! All results in the reproduction are reported in *simulated
+//! nanoseconds* derived from these parameters (DESIGN.md §3). Defaults
+//! model a DDR4-2400-class part; the PUD sequence costs follow the
+//! RowClone and Ambit papers' command counts:
+//!
+//! * `AAP` (ACTIVATE-ACTIVATE-PRECHARGE) — RowClone-FPM's back-to-back
+//!   activation; one AAP copies a full row inside a subarray (~90 ns,
+//!   vs ~1000 ns to move the same row over the channel).
+//! * Ambit `bbop_and/or` — 4 AAPs (copy A,B and a control row into the
+//!   designated TRA rows, triple-activate, copy out).
+//! * Ambit `bbop_not` — 2 AAPs through the dual-contact row.
+//! * RowClone-PSM — inter-subarray copy: the row transits the bank I/O
+//!   as column reads+writes (no channel transfer, but serialized).
+//!
+//! The CPU fallback streams both operands over the channel and writes
+//! the result back; its cost is `bytes / effective_bandwidth` plus a
+//! fixed per-operation dispatch overhead. This reproduces the paper's
+//! observation that the penalty of a failed PUD op grows linearly with
+//! allocation size.
+
+/// Timing parameters (nanoseconds unless noted).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TimingParams {
+    /// ACTIVATE to column command (tRCD).
+    pub t_rcd: f64,
+    /// Row-active minimum (tRAS).
+    pub t_ras: f64,
+    /// PRECHARGE latency (tRP).
+    pub t_rp: f64,
+    /// Column access strobe latency (tCL).
+    pub t_cl: f64,
+    /// Data-burst time for one 64-byte transfer (BL8 @ DDR4-2400).
+    pub t_burst: f64,
+    /// One AAP (RowClone-FPM intra-subarray row copy).
+    pub t_aap: f64,
+    /// Effective CPU streaming bandwidth, bytes/ns (= GB/s).
+    pub cpu_stream_bw: f64,
+    /// Fixed per-bulk-op dispatch overhead on the CPU path (syscall +
+    /// driver, ns).
+    pub cpu_dispatch_overhead: f64,
+    /// Fixed per-bulk-op overhead on the PUD path (command injection
+    /// via the memory controller, ns).
+    pub pud_dispatch_overhead: f64,
+}
+
+impl Default for TimingParams {
+    fn default() -> Self {
+        Self {
+            t_rcd: 13.32,
+            t_ras: 32.0,
+            t_rp: 13.32,
+            t_cl: 13.32,
+            t_burst: 3.33,
+            t_aap: 90.0,
+            cpu_stream_bw: 12.0, // ~12 GB/s effective single-core stream
+            cpu_dispatch_overhead: 1_000.0,
+            pud_dispatch_overhead: 200.0,
+        }
+    }
+}
+
+/// Cache-line size used for channel transfers.
+pub const LINE_BYTES: u64 = 64;
+
+impl TimingParams {
+    /// Time to read (or write) one full row over the channel after the
+    /// row is open: column bursts back-to-back.
+    pub fn row_stream_ns(&self, row_bytes: u32) -> f64 {
+        (row_bytes as u64).div_ceil(LINE_BYTES) as f64 * self.t_burst
+    }
+
+    /// Row-miss access: PRE + ACT + CAS + one burst.
+    pub fn row_miss_ns(&self) -> f64 {
+        self.t_rp + self.t_rcd + self.t_cl + self.t_burst
+    }
+
+    /// Row-hit access: CAS + one burst.
+    pub fn row_hit_ns(&self) -> f64 {
+        self.t_cl + self.t_burst
+    }
+
+    // ------------------------------------------------ PUD sequences
+
+    /// RowClone-FPM: one AAP per row (both operands in one subarray).
+    pub fn rowclone_fpm_ns(&self, rows: u64) -> f64 {
+        rows as f64 * self.t_aap
+    }
+
+    /// RowClone zero-init: one AAP from the reserved zero row.
+    pub fn rowclone_zero_ns(&self, rows: u64) -> f64 {
+        rows as f64 * self.t_aap
+    }
+
+    /// RowClone-PSM: inter-subarray (same bank) copy — the row moves
+    /// through the bank's global sense amps as serialized column
+    /// reads and writes, with an ACT/PRE pair on each side.
+    pub fn rowclone_psm_ns(&self, rows: u64, row_bytes: u32) -> f64 {
+        let per_row = 2.0 * (self.t_rcd + self.t_rp)
+            + 2.0 * self.row_stream_ns(row_bytes);
+        rows as f64 * per_row
+    }
+
+    /// Ambit AND/OR: 4 AAPs per row (stage A, stage B, stage control,
+    /// TRA + copy-out).
+    pub fn ambit_and_or_ns(&self, rows: u64) -> f64 {
+        rows as f64 * 4.0 * self.t_aap
+    }
+
+    /// Ambit NOT: 2 AAPs per row (through the dual-contact row).
+    pub fn ambit_not_ns(&self, rows: u64) -> f64 {
+        rows as f64 * 2.0 * self.t_aap
+    }
+
+    /// Ambit XOR: composed of AND/NOT sequences — 7 AAPs per row.
+    pub fn ambit_xor_ns(&self, rows: u64) -> f64 {
+        rows as f64 * 7.0 * self.t_aap
+    }
+
+    // ------------------------------------------------ CPU fallback
+
+    /// CPU bulk path: stream `read_bytes` in and `write_bytes` out at
+    /// the effective bandwidth, plus dispatch overhead.
+    pub fn cpu_bulk_ns(&self, read_bytes: u64, write_bytes: u64) -> f64 {
+        self.cpu_dispatch_overhead
+            + (read_bytes + write_bytes) as f64 / self.cpu_stream_bw
+    }
+
+    /// Inter-subarray data relocation cost used when PUMA must migrate
+    /// a region (re-mmap keeps VA stable; the physical copy is PSM).
+    pub fn migrate_ns(&self, rows: u64, row_bytes: u32) -> f64 {
+        self.rowclone_psm_ns(rows, row_bytes)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fpm_beats_cpu_by_an_order_of_magnitude() {
+        let t = TimingParams::default();
+        let rows = 16u64;
+        let row_bytes = 8192u32;
+        let bytes = rows * row_bytes as u64;
+        let fpm = t.rowclone_fpm_ns(rows);
+        let cpu = t.cpu_bulk_ns(bytes, bytes);
+        assert!(
+            cpu / fpm > 10.0,
+            "FPM {fpm} ns vs CPU {cpu} ns — expected >10x gap"
+        );
+    }
+
+    #[test]
+    fn psm_between_fpm_and_cpu() {
+        let t = TimingParams::default();
+        let rows = 8;
+        let rb = 8192;
+        let fpm = t.rowclone_fpm_ns(rows);
+        let psm = t.rowclone_psm_ns(rows, rb);
+        let cpu = t.cpu_bulk_ns(rows * rb as u64, rows * rb as u64);
+        assert!(fpm < psm, "fpm {fpm} < psm {psm}");
+        assert!(psm < cpu, "psm {psm} < cpu {cpu}");
+    }
+
+    #[test]
+    fn ambit_sequences_scale_with_rows() {
+        let t = TimingParams::default();
+        assert_eq!(t.ambit_and_or_ns(2), 2.0 * 4.0 * t.t_aap);
+        assert_eq!(t.ambit_not_ns(3), 3.0 * 2.0 * t.t_aap);
+        assert!(t.ambit_xor_ns(1) > t.ambit_and_or_ns(1));
+    }
+
+    #[test]
+    fn row_stream_counts_lines() {
+        let t = TimingParams::default();
+        assert_eq!(t.row_stream_ns(8192), 128.0 * t.t_burst);
+        // partial line rounds up
+        assert_eq!(t.row_stream_ns(65), 2.0 * t.t_burst);
+    }
+
+    #[test]
+    fn cpu_cost_linear_in_bytes() {
+        let t = TimingParams::default();
+        let small = t.cpu_bulk_ns(1 << 10, 1 << 10);
+        let big = t.cpu_bulk_ns(1 << 20, 1 << 20);
+        // subtracting the fixed overhead, big/small == 1024
+        let ratio = (big - t.cpu_dispatch_overhead)
+            / (small - t.cpu_dispatch_overhead);
+        assert!((ratio - 1024.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn hit_cheaper_than_miss() {
+        let t = TimingParams::default();
+        assert!(t.row_hit_ns() < t.row_miss_ns());
+    }
+}

@@ -1,0 +1,42 @@
+//! # PUMA — full-system reproduction
+//!
+//! Library root for the reproduction of *PUMA: Efficient and Low-Cost
+//! Memory Allocation and Alignment Support for Processing-Using-Memory
+//! Architectures* (Oliveira et al., ETH Zürich, 2024).
+//!
+//! The crate contains the complete simulated stack the paper's
+//! evaluation needs (see DESIGN.md for the inventory):
+//!
+//! * [`dram`] — DRAM device model: geometry, configurable address
+//!   interleaving (device-tree style), DDR command timing, energy, and
+//!   a functional backing store.
+//! * [`os`] — OS memory substrate: buddy frame allocator, Sv39-like
+//!   page tables, VMA manager, boot-time huge-page pool, processes.
+//! * [`alloc`] — the allocators under study: `malloc`/`posix_memalign`
+//!   simulations, huge-page-backed allocation, and **PUMA** itself.
+//! * [`pud`] — the processing-using-DRAM substrate (Ambit + RowClone):
+//!   legality checks, functional execution, command timing.
+//! * [`coordinator`] — the dispatch layer: routes each bulk operation
+//!   to PUD when operand placement allows, else to the CPU fallback.
+//! * [`runtime`] — XLA/PJRT CPU runtime executing the AOT-compiled
+//!   JAX + Pallas kernels (`artifacts/*.hlo.txt`) for the fallback.
+//! * [`workloads`] — the paper's micro-benchmarks and app workloads.
+//! * [`report`] — regenerates every figure/table of the paper.
+//! * [`util`], [`proptest`] — support code that is ordinarily a crates
+//!   dependency (offline build; see DESIGN.md §7).
+
+pub mod alloc;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod dram;
+pub mod os;
+pub mod proptest;
+pub mod pud;
+pub mod report;
+pub mod runtime;
+pub mod util;
+pub mod workloads;
+
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;

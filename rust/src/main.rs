@@ -1,0 +1,17 @@
+//! `puma` — leader entrypoint + CLI.
+//!
+//! See `puma help` for commands; the heavy lifting lives in
+//! [`puma::cli`]. The binary is fully self-contained after
+//! `make artifacts`: python never runs on this path.
+
+fn main() {
+    puma::util::logging::init();
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match puma::cli::run(&args) {
+        Ok(code) => std::process::exit(code),
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            std::process::exit(1);
+        }
+    }
+}

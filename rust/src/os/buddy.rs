@@ -1,0 +1,321 @@
+//! Buddy physical-frame allocator (Linux-page-allocator style).
+//!
+//! Per-order free lists over a physical frame range; allocation splits
+//! higher orders, freeing coalesces with the buddy block. Order 0 is a
+//! 4 KiB frame; order 9 a 2 MiB huge page.
+//!
+//! The free lists are LIFO, and [`BuddyAllocator::churn`] simulates a
+//! long-running system: it allocates and frees random blocks so the
+//! lists end up in scrambled order. That is what makes the simulated
+//! `malloc` realistic — consecutive virtual pages of a fresh process
+//! get physically scattered frames, which is exactly why the paper
+//! measures 0% PUD-executable operations under `malloc`.
+
+use anyhow::{bail, Result};
+use rustc_hash::FxHashSet;
+
+use crate::util::rng::Pcg64;
+
+use super::PAGE_SIZE;
+
+/// Maximum block order (2^10 frames = 4 MiB blocks).
+pub const MAX_ORDER: u8 = 10;
+
+/// A physical frame number (frame address = pfn * PAGE_SIZE).
+pub type Pfn = u64;
+
+/// Buddy allocator over frames `[0, nframes)`.
+pub struct BuddyAllocator {
+    nframes: u64,
+    /// free_lists[order] holds the first PFN of each free 2^order block.
+    free_lists: Vec<Vec<Pfn>>,
+    /// All free (pfn, order) blocks for O(1) buddy lookup on free().
+    free_index: FxHashSet<(Pfn, u8)>,
+    /// Outstanding allocations, for double-free detection and
+    /// invariant checks.
+    outstanding: FxHashSet<(Pfn, u8)>,
+    /// Blocks pinned by [`churn`] to model long-lived allocations of
+    /// other processes (released by [`release_pinned`]).
+    pinned: Vec<(Pfn, u8)>,
+    pub allocated_frames: u64,
+}
+
+impl BuddyAllocator {
+    /// Create an allocator with every frame free. `nframes` must be a
+    /// multiple of the max block size so the initial free lists tile
+    /// exactly.
+    pub fn new(nframes: u64) -> Result<Self> {
+        let block = 1u64 << MAX_ORDER;
+        if nframes == 0 || nframes % block != 0 {
+            bail!("nframes {nframes} must be a nonzero multiple of {block}");
+        }
+        let mut a = Self {
+            nframes,
+            free_lists: vec![Vec::new(); MAX_ORDER as usize + 1],
+            free_index: FxHashSet::default(),
+            outstanding: FxHashSet::default(),
+            pinned: Vec::new(),
+            allocated_frames: 0,
+        };
+        let mut pfn = 0;
+        while pfn < nframes {
+            a.push_free(pfn, MAX_ORDER);
+            pfn += block;
+        }
+        Ok(a)
+    }
+
+    /// Allocator sized to back `bytes` of physical memory.
+    pub fn with_capacity_bytes(bytes: u64) -> Result<Self> {
+        Self::new(bytes.div_ceil(PAGE_SIZE))
+    }
+
+    pub fn nframes(&self) -> u64 {
+        self.nframes
+    }
+
+    pub fn free_frames(&self) -> u64 {
+        self.nframes - self.allocated_frames
+    }
+
+    fn push_free(&mut self, pfn: Pfn, order: u8) {
+        self.free_lists[order as usize].push(pfn);
+        self.free_index.insert((pfn, order));
+    }
+
+    /// Remove a specific free block (used for coalescing); true if it
+    /// was present.
+    fn take_free(&mut self, pfn: Pfn, order: u8) -> bool {
+        if self.free_index.remove(&(pfn, order)) {
+            let list = &mut self.free_lists[order as usize];
+            let idx = list
+                .iter()
+                .rposition(|&p| p == pfn)
+                .expect("index and list agree");
+            list.swap_remove(idx);
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Allocate a 2^order-frame block; the returned PFN is aligned to
+    /// the block size.
+    pub fn alloc(&mut self, order: u8) -> Result<Pfn> {
+        if order > MAX_ORDER {
+            bail!("order {order} > MAX_ORDER {MAX_ORDER}");
+        }
+        // find the smallest order with a free block
+        let mut o = order;
+        while o <= MAX_ORDER && self.free_lists[o as usize].is_empty() {
+            o += 1;
+        }
+        if o > MAX_ORDER {
+            bail!("out of physical memory (order {order})");
+        }
+        let pfn = self.free_lists[o as usize].pop().expect("nonempty");
+        self.free_index.remove(&(pfn, o));
+        // split down to the requested order, freeing the upper halves
+        while o > order {
+            o -= 1;
+            self.push_free(pfn + (1 << o), o);
+        }
+        self.allocated_frames += 1 << order;
+        self.outstanding.insert((pfn, order));
+        Ok(pfn)
+    }
+
+    /// Free a block previously returned by [`alloc`] with this order.
+    pub fn free(&mut self, pfn: Pfn, order: u8) {
+        assert!(order <= MAX_ORDER);
+        assert_eq!(pfn % (1 << order), 0, "pfn {pfn} misaligned for order {order}");
+        assert!(pfn + (1 << order) <= self.nframes, "pfn beyond range");
+        assert!(
+            self.outstanding.remove(&(pfn, order)),
+            "double free (or never allocated): pfn {pfn} order {order}"
+        );
+        self.allocated_frames -= 1 << order;
+        let mut pfn = pfn;
+        let mut order = order;
+        // coalesce while the buddy is free
+        while order < MAX_ORDER {
+            let buddy = pfn ^ (1u64 << order);
+            if !self.take_free(buddy, order) {
+                break;
+            }
+            pfn = pfn.min(buddy);
+            order += 1;
+        }
+        self.push_free(pfn, order);
+    }
+
+    /// Simulate allocator aging: perform `rounds` random alloc/free
+    /// pairs so free lists lose their boot-time ordering, and *pin*
+    /// roughly half of the touched blocks to model other processes'
+    /// long-lived allocations (full release would simply coalesce
+    /// everything back into ordered max-order blocks). Afterwards,
+    /// consecutive [`alloc`] calls return scattered frames — the
+    /// realistic starting condition for the malloc baseline.
+    pub fn churn(&mut self, rng: &mut Pcg64, rounds: usize) {
+        let mut held: Vec<(Pfn, u8)> = Vec::new();
+        for _ in 0..rounds {
+            if held.is_empty() || (rng.chance(0.6) && self.free_frames() > (1 << MAX_ORDER)) {
+                let order = rng.below(4) as u8; // small blocks scramble most
+                if let Ok(pfn) = self.alloc(order) {
+                    held.push((pfn, order));
+                }
+            } else {
+                let idx = rng.below(held.len() as u64) as usize;
+                let (pfn, order) = held.swap_remove(idx);
+                self.free(pfn, order);
+            }
+        }
+        // keep ~half pinned (fragmentation), release the rest randomly
+        rng.shuffle(&mut held);
+        let keep = held.len() / 2;
+        for (pfn, order) in held.drain(keep..).collect::<Vec<_>>() {
+            self.free(pfn, order);
+        }
+        self.pinned.extend(held);
+    }
+
+    /// Frames currently pinned by [`churn`].
+    pub fn pinned_frames(&self) -> u64 {
+        self.pinned.iter().map(|&(_, o)| 1u64 << o).sum()
+    }
+
+    /// Release every block pinned by [`churn`].
+    pub fn release_pinned(&mut self) {
+        for (pfn, order) in std::mem::take(&mut self.pinned) {
+            self.free(pfn, order);
+        }
+    }
+
+    /// Sanity check: free lists tile disjoint frames and counters add up
+    /// (test/property support).
+    pub fn check_invariants(&self) -> Result<()> {
+        let mut seen = FxHashSet::default();
+        let mut free = 0u64;
+        for (order, list) in self.free_lists.iter().enumerate() {
+            for &pfn in list {
+                if pfn % (1 << order) != 0 {
+                    bail!("free block {pfn} misaligned for order {order}");
+                }
+                for f in pfn..pfn + (1 << order) {
+                    if !seen.insert(f) {
+                        bail!("frame {f} on two free lists");
+                    }
+                }
+                if !self.free_index.contains(&(pfn, order as u8)) {
+                    bail!("list/index mismatch at ({pfn}, {order})");
+                }
+                free += 1 << order;
+            }
+        }
+        if free != self.free_frames() {
+            bail!(
+                "free list total {free} != counter {}",
+                self.free_frames()
+            );
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fresh_allocator_is_fully_free() {
+        let a = BuddyAllocator::new(2048).unwrap();
+        assert_eq!(a.free_frames(), 2048);
+        a.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn rejects_bad_sizes() {
+        assert!(BuddyAllocator::new(0).is_err());
+        assert!(BuddyAllocator::new(1000).is_err());
+    }
+
+    #[test]
+    fn alloc_returns_aligned_blocks() {
+        let mut a = BuddyAllocator::new(2048).unwrap();
+        for order in [0u8, 1, 3, 9] {
+            let pfn = a.alloc(order).unwrap();
+            assert_eq!(pfn % (1 << order), 0, "order {order}");
+        }
+        a.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn split_and_coalesce_roundtrip() {
+        let mut a = BuddyAllocator::new(1024).unwrap();
+        let p0 = a.alloc(0).unwrap();
+        assert_eq!(a.free_frames(), 1023);
+        a.free(p0, 0);
+        assert_eq!(a.free_frames(), 1024);
+        a.check_invariants().unwrap();
+        // after full coalescing a max-order alloc succeeds again
+        let big = a.alloc(MAX_ORDER).unwrap();
+        assert_eq!(big % (1 << MAX_ORDER), 0);
+    }
+
+    #[test]
+    fn exhaustion_errors_cleanly() {
+        let mut a = BuddyAllocator::new(1024).unwrap();
+        let _ = a.alloc(MAX_ORDER).unwrap();
+        assert!(a.alloc(0).is_err());
+    }
+
+    #[test]
+    fn distinct_blocks_never_overlap() {
+        let mut a = BuddyAllocator::new(2048).unwrap();
+        let mut frames = FxHashSet::default();
+        for _ in 0..64 {
+            let pfn = a.alloc(2).unwrap(); // 4-frame blocks
+            for f in pfn..pfn + 4 {
+                assert!(frames.insert(f), "overlap at {f}");
+            }
+        }
+        a.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn churn_scrambles_allocation_order() {
+        let mut a = BuddyAllocator::new(4096).unwrap();
+        let mut rng = Pcg64::new(42);
+        a.churn(&mut rng, 2000);
+        a.check_invariants().unwrap();
+        assert_eq!(
+            a.free_frames() + a.pinned_frames(),
+            4096,
+            "churn accounts for every frame"
+        );
+        assert!(a.pinned_frames() > 0, "churn pins some blocks");
+        // consecutive allocs should now be non-consecutive frames
+        let xs: Vec<Pfn> = (0..8).map(|_| a.alloc(0).unwrap()).collect();
+        let consecutive = xs.windows(2).filter(|w| w[1] == w[0] + 1).count();
+        assert!(
+            consecutive < 4,
+            "free lists still ordered after churn: {xs:?}"
+        );
+        // and pinned blocks can be released to restore a clean machine
+        for pfn in xs {
+            a.free(pfn, 0);
+        }
+        a.release_pinned();
+        assert_eq!(a.free_frames(), 4096);
+        a.check_invariants().unwrap();
+    }
+
+    #[test]
+    #[should_panic(expected = "double free")]
+    fn double_free_panics_in_debug() {
+        let mut a = BuddyAllocator::new(1024).unwrap();
+        let p = a.alloc(0).unwrap();
+        a.free(p, 0);
+        a.free(p, 0);
+    }
+}

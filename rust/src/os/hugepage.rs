@@ -1,0 +1,125 @@
+//! Boot-time huge-page pool (hugetlbfs semantics).
+//!
+//! Linux reserves huge pages at boot (`hugepages=N`); they are
+//! physically contiguous 2 MiB blocks carved from the buddy allocator.
+//! PUMA's `pim_preallocate` draws from this pool (paper §2: "a huge
+//! pages pool for PUD memory objects (configured during boot time),
+//! which guarantees that virtual addresses assigned to a PUD memory
+//! object are contiguous in the physical address space").
+
+use anyhow::{bail, Context, Result};
+
+use super::buddy::{BuddyAllocator, Pfn};
+use super::{HUGE_PAGE_ORDER, HUGE_PAGE_SIZE, PAGE_SIZE};
+
+/// A reserved huge page: 2 MiB of physically contiguous memory.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct HugePage {
+    /// First frame of the page (aligned to 512 frames).
+    pub pfn: Pfn,
+}
+
+impl HugePage {
+    pub fn phys_addr(&self) -> u64 {
+        self.pfn * PAGE_SIZE
+    }
+
+    pub fn len(&self) -> u64 {
+        HUGE_PAGE_SIZE
+    }
+}
+
+/// The boot-time pool.
+#[derive(Debug)]
+pub struct HugePagePool {
+    free: Vec<HugePage>,
+    pub reserved: usize,
+}
+
+impl HugePagePool {
+    /// Reserve `count` huge pages from the buddy allocator. Done "at
+    /// boot" — i.e. before churn fragments physical memory — or it may
+    /// fail exactly the way hugetlb reservation fails on a busy system.
+    pub fn reserve(buddy: &mut BuddyAllocator, count: usize) -> Result<Self> {
+        let mut free = Vec::with_capacity(count);
+        for i in 0..count {
+            let pfn = buddy
+                .alloc(HUGE_PAGE_ORDER)
+                .with_context(|| format!("reserving huge page {i}/{count}"))?;
+            free.push(HugePage { pfn });
+        }
+        // LIFO order is fine; keep deterministic (lowest first).
+        free.sort_by_key(|h| h.pfn);
+        free.reverse();
+        Ok(Self {
+            free,
+            reserved: count,
+        })
+    }
+
+    pub fn available(&self) -> usize {
+        self.free.len()
+    }
+
+    /// Take one huge page from the pool.
+    pub fn alloc(&mut self) -> Result<HugePage> {
+        match self.free.pop() {
+            Some(h) => Ok(h),
+            None => bail!(
+                "huge page pool exhausted ({} reserved)",
+                self.reserved
+            ),
+        }
+    }
+
+    /// Return a huge page to the pool.
+    pub fn release(&mut self, page: HugePage) {
+        debug_assert!(
+            !self.free.contains(&page),
+            "double release of huge page {page:?}"
+        );
+        self.free.push(page);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reserve_yields_aligned_contiguous_pages() {
+        let mut buddy = BuddyAllocator::new(8192).unwrap();
+        let pool = HugePagePool::reserve(&mut buddy, 4).unwrap();
+        assert_eq!(pool.available(), 4);
+        for h in &pool.free {
+            assert_eq!(h.pfn % 512, 0, "huge page must be 2 MiB aligned");
+        }
+        assert_eq!(buddy.free_frames(), 8192 - 4 * 512);
+    }
+
+    #[test]
+    fn alloc_release_roundtrip() {
+        let mut buddy = BuddyAllocator::new(4096).unwrap();
+        let mut pool = HugePagePool::reserve(&mut buddy, 2).unwrap();
+        let a = pool.alloc().unwrap();
+        let b = pool.alloc().unwrap();
+        assert_ne!(a.pfn, b.pfn);
+        assert!(pool.alloc().is_err());
+        pool.release(a);
+        assert_eq!(pool.available(), 1);
+        assert_eq!(pool.alloc().unwrap(), a);
+    }
+
+    #[test]
+    fn reservation_fails_when_memory_exhausted() {
+        let mut buddy = BuddyAllocator::new(1024).unwrap(); // 4 MiB
+        assert!(HugePagePool::reserve(&mut buddy, 3).is_err());
+    }
+
+    #[test]
+    fn phys_addr_math() {
+        let h = HugePage { pfn: 512 };
+        assert_eq!(h.phys_addr(), HUGE_PAGE_SIZE);
+        assert_eq!(h.len(), HUGE_PAGE_SIZE);
+    }
+}

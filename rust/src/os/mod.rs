@@ -1,0 +1,62 @@
+//! Simulated OS memory substrate.
+//!
+//! PUMA is a kernel-level allocator; its behaviour depends on the OS
+//! machinery around it, which we therefore model with Linux semantics
+//! (DESIGN.md §6):
+//!
+//! * [`buddy`] — physical frame allocator (per-order free lists, split
+//!   and coalesce), as in the Linux page allocator.
+//! * [`page_table`] — radix page tables with 4 KiB and 2 MiB leaves
+//!   (Sv39-like three-level walk).
+//! * [`vma`] — per-process virtual-area manager: `mmap`-style region
+//!   allocation, fixed mapping, unmapping, and the *re-mmap* primitive
+//!   PUMA uses to stitch scattered regions into contiguous VA.
+//! * [`hugepage`] — the boot-time huge-page pool (hugetlbfs-like):
+//!   physically contiguous, 2 MiB aligned.
+//! * [`process`] — an address space bundling the above.
+
+pub mod buddy;
+pub mod hugepage;
+pub mod page_table;
+pub mod process;
+pub mod vma;
+
+/// Base page size (4 KiB).
+pub const PAGE_SIZE: u64 = 4096;
+/// Huge page size (2 MiB).
+pub const HUGE_PAGE_SIZE: u64 = 2 << 20;
+/// Buddy order of a huge page (2 MiB / 4 KiB = 512 = 2^9).
+pub const HUGE_PAGE_ORDER: u8 = 9;
+
+/// Round `v` up to a multiple of `align` (power of two).
+#[inline]
+pub fn align_up(v: u64, align: u64) -> u64 {
+    debug_assert!(align.is_power_of_two());
+    (v + align - 1) & !(align - 1)
+}
+
+/// Round `v` down to a multiple of `align` (power of two).
+#[inline]
+pub fn align_down(v: u64, align: u64) -> u64 {
+    debug_assert!(align.is_power_of_two());
+    v & !(align - 1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alignment_helpers() {
+        assert_eq!(align_up(0, 4096), 0);
+        assert_eq!(align_up(1, 4096), 4096);
+        assert_eq!(align_up(4096, 4096), 4096);
+        assert_eq!(align_down(4097, 4096), 4096);
+        assert_eq!(align_down(4095, 4096), 0);
+    }
+
+    #[test]
+    fn huge_page_constants_consistent() {
+        assert_eq!(PAGE_SIZE << HUGE_PAGE_ORDER, HUGE_PAGE_SIZE);
+    }
+}

@@ -1,0 +1,329 @@
+//! Radix page tables with 4 KiB and 2 MiB leaves (Sv39-like walk).
+//!
+//! Three levels of 512-entry tables over a 39-bit virtual space, as in
+//! RISC-V Sv39 (the paper's evaluation platform is an emulated RISC-V
+//! machine). A level-1 entry may be a 2 MiB leaf (huge page) or point
+//! to a level-0 table of 4 KiB leaves.
+
+use anyhow::{bail, Result};
+
+use super::{HUGE_PAGE_SIZE, PAGE_SIZE};
+
+/// Mapping granularity of a leaf entry.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PageKind {
+    Base, // 4 KiB
+    Huge, // 2 MiB
+}
+
+impl PageKind {
+    pub fn bytes(&self) -> u64 {
+        match self {
+            PageKind::Base => PAGE_SIZE,
+            PageKind::Huge => HUGE_PAGE_SIZE,
+        }
+    }
+}
+
+/// A translated physical address plus its mapping granularity.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Translation {
+    pub paddr: u64,
+    pub kind: PageKind,
+}
+
+#[derive(Debug)]
+enum Entry {
+    Empty,
+    Table(Box<Level>),
+    /// Leaf: physical base address of the mapped page.
+    Leaf(u64),
+}
+
+#[derive(Debug)]
+struct Level {
+    entries: Vec<Entry>,
+}
+
+impl Level {
+    fn new() -> Self {
+        Self {
+            entries: (0..512).map(|_| Entry::Empty).collect(),
+        }
+    }
+}
+
+/// One process's page table.
+#[derive(Debug)]
+pub struct PageTable {
+    root: Level, // level 2 (1 GiB per entry)
+    pub mapped_base_pages: u64,
+    pub mapped_huge_pages: u64,
+}
+
+const VA_BITS: u32 = 39;
+
+fn vpn(vaddr: u64, level: u32) -> usize {
+    ((vaddr >> (12 + 9 * level)) & 0x1FF) as usize
+}
+
+impl Default for PageTable {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl PageTable {
+    pub fn new() -> Self {
+        Self {
+            root: Level::new(),
+            mapped_base_pages: 0,
+            mapped_huge_pages: 0,
+        }
+    }
+
+    fn check_va(vaddr: u64) -> Result<()> {
+        if vaddr >> VA_BITS != 0 {
+            bail!("virtual address {vaddr:#x} beyond Sv39 range");
+        }
+        Ok(())
+    }
+
+    /// Map a page of `kind` at `vaddr` -> `paddr` (both aligned).
+    /// Fails on misalignment or an existing conflicting mapping.
+    pub fn map(&mut self, vaddr: u64, paddr: u64, kind: PageKind) -> Result<()> {
+        Self::check_va(vaddr)?;
+        let sz = kind.bytes();
+        if vaddr % sz != 0 || paddr % sz != 0 {
+            bail!("map misaligned: va {vaddr:#x} pa {paddr:#x} size {sz:#x}");
+        }
+        let l2 = &mut self.root.entries[vpn(vaddr, 2)];
+        let l1_table = match l2 {
+            Entry::Empty => {
+                *l2 = Entry::Table(Box::new(Level::new()));
+                match l2 {
+                    Entry::Table(t) => t,
+                    _ => unreachable!(),
+                }
+            }
+            Entry::Table(t) => t,
+            Entry::Leaf(_) => bail!("1 GiB leaf conflicts at {vaddr:#x}"),
+        };
+        let l1 = &mut l1_table.entries[vpn(vaddr, 1)];
+        match kind {
+            PageKind::Huge => match l1 {
+                Entry::Empty => {
+                    *l1 = Entry::Leaf(paddr);
+                    self.mapped_huge_pages += 1;
+                    Ok(())
+                }
+                _ => bail!("mapping conflict at {vaddr:#x} (huge)"),
+            },
+            PageKind::Base => {
+                let l0_table = match l1 {
+                    Entry::Empty => {
+                        *l1 = Entry::Table(Box::new(Level::new()));
+                        match l1 {
+                            Entry::Table(t) => t,
+                            _ => unreachable!(),
+                        }
+                    }
+                    Entry::Table(t) => t,
+                    Entry::Leaf(_) => {
+                        bail!("base map under huge leaf at {vaddr:#x}")
+                    }
+                };
+                let l0 = &mut l0_table.entries[vpn(vaddr, 0)];
+                match l0 {
+                    Entry::Empty => {
+                        *l0 = Entry::Leaf(paddr);
+                        self.mapped_base_pages += 1;
+                        Ok(())
+                    }
+                    _ => bail!("mapping conflict at {vaddr:#x} (base)"),
+                }
+            }
+        }
+    }
+
+    /// Remove the mapping containing `vaddr`; returns what was mapped.
+    pub fn unmap(&mut self, vaddr: u64) -> Result<Translation> {
+        Self::check_va(vaddr)?;
+        let l2 = &mut self.root.entries[vpn(vaddr, 2)];
+        let l1_table = match l2 {
+            Entry::Table(t) => t,
+            _ => bail!("unmap: nothing mapped at {vaddr:#x}"),
+        };
+        let l1 = &mut l1_table.entries[vpn(vaddr, 1)];
+        match l1 {
+            Entry::Leaf(paddr) => {
+                let t = Translation {
+                    paddr: *paddr,
+                    kind: PageKind::Huge,
+                };
+                *l1 = Entry::Empty;
+                self.mapped_huge_pages -= 1;
+                Ok(t)
+            }
+            Entry::Table(l0_table) => {
+                let l0 = &mut l0_table.entries[vpn(vaddr, 0)];
+                match l0 {
+                    Entry::Leaf(paddr) => {
+                        let t = Translation {
+                            paddr: *paddr,
+                            kind: PageKind::Base,
+                        };
+                        *l0 = Entry::Empty;
+                        self.mapped_base_pages -= 1;
+                        Ok(t)
+                    }
+                    _ => bail!("unmap: nothing mapped at {vaddr:#x}"),
+                }
+            }
+            Entry::Empty => bail!("unmap: nothing mapped at {vaddr:#x}"),
+        }
+    }
+
+    /// Translate an arbitrary virtual address (any offset).
+    pub fn translate(&self, vaddr: u64) -> Option<Translation> {
+        if vaddr >> VA_BITS != 0 {
+            return None;
+        }
+        let l2 = &self.root.entries[vpn(vaddr, 2)];
+        let l1_table = match l2 {
+            Entry::Table(t) => t,
+            _ => return None,
+        };
+        match &l1_table.entries[vpn(vaddr, 1)] {
+            Entry::Leaf(paddr) => Some(Translation {
+                paddr: paddr + (vaddr & (HUGE_PAGE_SIZE - 1)),
+                kind: PageKind::Huge,
+            }),
+            Entry::Table(l0_table) => match &l0_table.entries[vpn(vaddr, 0)] {
+                Entry::Leaf(paddr) => Some(Translation {
+                    paddr: paddr + (vaddr & (PAGE_SIZE - 1)),
+                    kind: PageKind::Base,
+                }),
+                _ => None,
+            },
+            Entry::Empty => None,
+        }
+    }
+
+    /// Is the whole `[vaddr, vaddr+len)` range mapped?
+    pub fn range_mapped(&self, vaddr: u64, len: u64) -> bool {
+        let mut cur = super::align_down(vaddr, PAGE_SIZE);
+        let end = vaddr + len;
+        while cur < end {
+            match self.translate(cur) {
+                Some(t) => {
+                    let page = match t.kind {
+                        PageKind::Base => PAGE_SIZE,
+                        PageKind::Huge => HUGE_PAGE_SIZE,
+                    };
+                    cur = super::align_down(cur, page) + page;
+                }
+                None => return false,
+            }
+        }
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn base_map_translate_roundtrip() {
+        let mut pt = PageTable::new();
+        pt.map(0x1000, 0xABC000, PageKind::Base).unwrap();
+        let t = pt.translate(0x1234).unwrap();
+        assert_eq!(t.paddr, 0xABC234);
+        assert_eq!(t.kind, PageKind::Base);
+        assert_eq!(pt.translate(0x2000), None);
+    }
+
+    #[test]
+    fn huge_map_translates_interior_offsets() {
+        let mut pt = PageTable::new();
+        pt.map(HUGE_PAGE_SIZE, 4 * HUGE_PAGE_SIZE, PageKind::Huge)
+            .unwrap();
+        let t = pt.translate(HUGE_PAGE_SIZE + 0x12345).unwrap();
+        assert_eq!(t.paddr, 4 * HUGE_PAGE_SIZE + 0x12345);
+        assert_eq!(t.kind, PageKind::Huge);
+    }
+
+    #[test]
+    fn rejects_misaligned_and_conflicting() {
+        let mut pt = PageTable::new();
+        assert!(pt.map(0x1001, 0x2000, PageKind::Base).is_err());
+        assert!(pt.map(0x1000, 0x2001, PageKind::Base).is_err());
+        pt.map(0x1000, 0x2000, PageKind::Base).unwrap();
+        assert!(pt.map(0x1000, 0x3000, PageKind::Base).is_err());
+        // base page under an established huge leaf
+        pt.map(HUGE_PAGE_SIZE, 0, PageKind::Huge).unwrap();
+        assert!(pt
+            .map(HUGE_PAGE_SIZE + PAGE_SIZE, 0x4000, PageKind::Base)
+            .is_err());
+    }
+
+    #[test]
+    fn rejects_va_beyond_sv39() {
+        let mut pt = PageTable::new();
+        assert!(pt.map(1 << 39, 0, PageKind::Base).is_err());
+        assert_eq!(pt.translate(1 << 40), None);
+    }
+
+    #[test]
+    fn unmap_returns_previous_mapping() {
+        let mut pt = PageTable::new();
+        pt.map(0x4000, 0x8000, PageKind::Base).unwrap();
+        let t = pt.unmap(0x4000).unwrap();
+        assert_eq!(t.paddr, 0x8000);
+        assert_eq!(pt.translate(0x4000), None);
+        assert!(pt.unmap(0x4000).is_err());
+        assert_eq!(pt.mapped_base_pages, 0);
+    }
+
+    #[test]
+    fn counters_track_mappings() {
+        let mut pt = PageTable::new();
+        pt.map(0, 0, PageKind::Base).unwrap();
+        pt.map(PAGE_SIZE, PAGE_SIZE, PageKind::Base).unwrap();
+        pt.map(HUGE_PAGE_SIZE, 0, PageKind::Huge).unwrap();
+        assert_eq!(pt.mapped_base_pages, 2);
+        assert_eq!(pt.mapped_huge_pages, 1);
+        pt.unmap(HUGE_PAGE_SIZE).unwrap();
+        assert_eq!(pt.mapped_huge_pages, 0);
+    }
+
+    #[test]
+    fn range_mapped_mixed_granularity() {
+        let mut pt = PageTable::new();
+        // map [2M, 4M) huge and [4M, 4M+8K) base
+        pt.map(HUGE_PAGE_SIZE, 0, PageKind::Huge).unwrap();
+        pt.map(2 * HUGE_PAGE_SIZE, HUGE_PAGE_SIZE, PageKind::Base)
+            .unwrap();
+        pt.map(
+            2 * HUGE_PAGE_SIZE + PAGE_SIZE,
+            HUGE_PAGE_SIZE + PAGE_SIZE,
+            PageKind::Base,
+        )
+        .unwrap();
+        assert!(pt.range_mapped(HUGE_PAGE_SIZE, HUGE_PAGE_SIZE + 2 * PAGE_SIZE));
+        assert!(!pt.range_mapped(HUGE_PAGE_SIZE, HUGE_PAGE_SIZE + 3 * PAGE_SIZE));
+        assert!(!pt.range_mapped(0, PAGE_SIZE));
+    }
+
+    #[test]
+    fn remap_pattern_for_puma() {
+        // PUMA's re-mmap: unmap a page and map a different physical
+        // frame at the same VA.
+        let mut pt = PageTable::new();
+        pt.map(0x10000, 0xAAAA000, PageKind::Base).unwrap();
+        pt.unmap(0x10000).unwrap();
+        pt.map(0x10000, 0xBBBB000, PageKind::Base).unwrap();
+        assert_eq!(pt.translate(0x10000).unwrap().paddr, 0xBBBB000);
+    }
+}

@@ -1,0 +1,194 @@
+//! A simulated process: address space = page table + VMA set.
+//!
+//! Processes give each workload its own virtual address space on the
+//! shared physical machine, and provide the translate-and-access
+//! helpers the coordinator uses to turn virtual bulk-op operands into
+//! physical extents.
+
+use anyhow::{bail, Context, Result};
+
+use super::page_table::{PageKind, PageTable};
+use super::vma::{VmaKind, VmaManager};
+use super::{HUGE_PAGE_SIZE, PAGE_SIZE};
+
+/// Process id.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Pid(pub u32);
+
+/// A simulated process address space.
+#[derive(Debug)]
+pub struct Process {
+    pub pid: Pid,
+    pub page_table: PageTable,
+    pub vmas: VmaManager,
+    /// Minor page faults taken (first-touch frame assignment).
+    pub minor_faults: u64,
+}
+
+/// A physically contiguous extent of a virtual range.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PhysExtent {
+    pub paddr: u64,
+    pub len: u64,
+}
+
+impl Process {
+    pub fn new(pid: Pid) -> Self {
+        Self {
+            pid,
+            page_table: PageTable::new(),
+            vmas: VmaManager::new(),
+            minor_faults: 0,
+        }
+    }
+
+    /// Reserve a virtual range of `len` bytes (rounded to pages) with
+    /// `align`, without populating translations (demand paging).
+    pub fn mmap(&mut self, len: u64, align: u64, kind: VmaKind) -> Result<u64> {
+        self.vmas.map(len, align, kind)
+    }
+
+    /// Map `npages` base frames starting at `vaddr`, pulling each
+    /// frame from `frame_source` (simulates first-touch population;
+    /// counts minor faults).
+    pub fn populate_base(
+        &mut self,
+        vaddr: u64,
+        npages: u64,
+        mut frame_source: impl FnMut() -> Result<u64>,
+    ) -> Result<()> {
+        for i in 0..npages {
+            let pa = frame_source().context("demand paging")? * PAGE_SIZE;
+            self.page_table
+                .map(vaddr + i * PAGE_SIZE, pa, PageKind::Base)?;
+            self.minor_faults += 1;
+        }
+        Ok(())
+    }
+
+    /// Map a physically contiguous huge page at `vaddr`.
+    pub fn map_huge(&mut self, vaddr: u64, paddr: u64) -> Result<()> {
+        self.page_table.map(vaddr, paddr, PageKind::Huge)?;
+        self.minor_faults += 1;
+        Ok(())
+    }
+
+    /// Translate a virtual range into its physically contiguous
+    /// extents (merging adjacent pages that happen to be contiguous).
+    /// Fails if any page is unmapped.
+    pub fn phys_extents(&self, vaddr: u64, len: u64) -> Result<Vec<PhysExtent>> {
+        if len == 0 {
+            return Ok(Vec::new());
+        }
+        let mut extents: Vec<PhysExtent> = Vec::new();
+        let mut cur = vaddr;
+        let end = vaddr + len;
+        while cur < end {
+            let t = match self.page_table.translate(cur) {
+                Some(t) => t,
+                None => bail!("unmapped address {cur:#x} in range"),
+            };
+            let page = match t.kind {
+                PageKind::Base => PAGE_SIZE,
+                PageKind::Huge => HUGE_PAGE_SIZE,
+            };
+            let page_end = super::align_down(cur, page) + page;
+            let n = (page_end - cur).min(end - cur);
+            match extents.last_mut() {
+                Some(last) if last.paddr + last.len == t.paddr => {
+                    last.len += n;
+                }
+                _ => extents.push(PhysExtent {
+                    paddr: t.paddr,
+                    len: n,
+                }),
+            }
+            cur += n;
+        }
+        Ok(extents)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mmap_and_populate_roundtrip() {
+        let mut p = Process::new(Pid(1));
+        let va = p.mmap(3 * PAGE_SIZE, PAGE_SIZE, VmaKind::Anon).unwrap();
+        let mut next = 100u64;
+        p.populate_base(va, 3, || {
+            next += 1;
+            Ok(next - 1)
+        })
+        .unwrap();
+        assert_eq!(p.minor_faults, 3);
+        let t = p.page_table.translate(va + PAGE_SIZE).unwrap();
+        assert_eq!(t.paddr, 101 * PAGE_SIZE);
+    }
+
+    #[test]
+    fn phys_extents_merges_contiguous_frames() {
+        let mut p = Process::new(Pid(1));
+        let va = p.mmap(4 * PAGE_SIZE, PAGE_SIZE, VmaKind::Anon).unwrap();
+        // frames 10,11,12 contiguous; 50 breaks the run
+        let frames = [10u64, 11, 12, 50];
+        let mut it = frames.iter().copied();
+        p.populate_base(va, 4, || Ok(it.next().unwrap())).unwrap();
+        let ext = p.phys_extents(va, 4 * PAGE_SIZE).unwrap();
+        assert_eq!(
+            ext,
+            vec![
+                PhysExtent {
+                    paddr: 10 * PAGE_SIZE,
+                    len: 3 * PAGE_SIZE
+                },
+                PhysExtent {
+                    paddr: 50 * PAGE_SIZE,
+                    len: PAGE_SIZE
+                },
+            ]
+        );
+    }
+
+    #[test]
+    fn phys_extents_partial_pages() {
+        let mut p = Process::new(Pid(1));
+        let va = p.mmap(2 * PAGE_SIZE, PAGE_SIZE, VmaKind::Anon).unwrap();
+        let frames = [7u64, 9];
+        let mut it = frames.iter().copied();
+        p.populate_base(va, 2, || Ok(it.next().unwrap())).unwrap();
+        // range starting mid-page
+        let ext = p.phys_extents(va + 100, PAGE_SIZE).unwrap();
+        assert_eq!(ext.len(), 2);
+        assert_eq!(ext[0].paddr, 7 * PAGE_SIZE + 100);
+        assert_eq!(ext[0].len, PAGE_SIZE - 100);
+        assert_eq!(ext[1].len, 100);
+    }
+
+    #[test]
+    fn phys_extents_fails_on_hole() {
+        let mut p = Process::new(Pid(1));
+        let va = p.mmap(2 * PAGE_SIZE, PAGE_SIZE, VmaKind::Anon).unwrap();
+        p.populate_base(va, 1, || Ok(3)).unwrap();
+        assert!(p.phys_extents(va, 2 * PAGE_SIZE).is_err());
+    }
+
+    #[test]
+    fn huge_mapping_single_extent() {
+        let mut p = Process::new(Pid(2));
+        let va = p
+            .mmap(HUGE_PAGE_SIZE, HUGE_PAGE_SIZE, VmaKind::Huge)
+            .unwrap();
+        p.map_huge(va, 4 * HUGE_PAGE_SIZE).unwrap();
+        let ext = p.phys_extents(va, HUGE_PAGE_SIZE).unwrap();
+        assert_eq!(
+            ext,
+            vec![PhysExtent {
+                paddr: 4 * HUGE_PAGE_SIZE,
+                len: HUGE_PAGE_SIZE
+            }]
+        );
+    }
+}

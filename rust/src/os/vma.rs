@@ -1,0 +1,235 @@
+//! Virtual-area manager: mmap-style region bookkeeping per process.
+//!
+//! Tracks which virtual ranges are in use, finds free ranges with a
+//! requested alignment, and supports the fixed-address re-mapping PUMA
+//! needs when it stitches memory regions from different huge pages
+//! into one virtually-contiguous allocation.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+use super::{align_up, PAGE_SIZE};
+
+/// What a VMA is backed by (bookkeeping only; the page table holds the
+/// actual translations).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum VmaKind {
+    /// Ordinary anonymous memory (malloc arenas, stacks, ...).
+    Anon,
+    /// hugetlbfs-style mapping.
+    Huge,
+    /// A PUMA allocation (pim_alloc / pim_alloc_align).
+    Pud,
+}
+
+/// One virtual memory area.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Vma {
+    pub start: u64,
+    pub len: u64,
+    pub kind: VmaKind,
+}
+
+impl Vma {
+    pub fn end(&self) -> u64 {
+        self.start + self.len
+    }
+}
+
+/// The per-process VMA set.
+#[derive(Debug, Default)]
+pub struct VmaManager {
+    /// start -> Vma, non-overlapping, page-aligned.
+    areas: BTreeMap<u64, Vma>,
+}
+
+/// Bottom of the mmap area (keep low VA clear, like Linux).
+pub const MMAP_BASE: u64 = 0x10_0000_0000 >> 3; // 2 GiB, inside Sv39
+/// Top of the usable VA (Sv39 user half).
+pub const MMAP_TOP: u64 = 1 << 38;
+
+impl VmaManager {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &Vma> {
+        self.areas.values()
+    }
+
+    pub fn len(&self) -> usize {
+        self.areas.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.areas.is_empty()
+    }
+
+    /// The VMA containing `vaddr`, if any.
+    pub fn find(&self, vaddr: u64) -> Option<&Vma> {
+        self.areas
+            .range(..=vaddr)
+            .next_back()
+            .map(|(_, v)| v)
+            .filter(|v| vaddr < v.end())
+    }
+
+    fn overlaps(&self, start: u64, len: u64) -> bool {
+        let end = start + len;
+        if let Some((_, prev)) = self.areas.range(..start).next_back() {
+            if prev.end() > start {
+                return true;
+            }
+        }
+        self.areas.range(start..end).next().is_some()
+    }
+
+    /// Find a free, `align`-aligned range of `len` bytes (both page
+    /// multiples) scanning upward from `MMAP_BASE`.
+    pub fn find_free(&self, len: u64, align: u64) -> Result<u64> {
+        if len == 0 || len % PAGE_SIZE != 0 {
+            bail!("find_free: len {len} not a positive page multiple");
+        }
+        let align = align.max(PAGE_SIZE);
+        if !align.is_power_of_two() {
+            bail!("find_free: align {align} not a power of two");
+        }
+        let mut candidate = align_up(MMAP_BASE, align);
+        // walk VMAs in order, jumping over collisions
+        loop {
+            if candidate + len > MMAP_TOP {
+                bail!("virtual address space exhausted");
+            }
+            if !self.overlaps(candidate, len) {
+                return Ok(candidate);
+            }
+            // jump past the blocking VMA
+            let (_, blocker) = self
+                .areas
+                .range(..candidate + len)
+                .next_back()
+                .expect("overlap implies a blocker");
+            candidate = align_up(blocker.end(), align);
+        }
+    }
+
+    /// Reserve a range at a chosen address (mmap MAP_FIXED semantics,
+    /// but refusing overlap instead of clobbering).
+    pub fn map_fixed(&mut self, start: u64, len: u64, kind: VmaKind) -> Result<()> {
+        if start % PAGE_SIZE != 0 || len == 0 || len % PAGE_SIZE != 0 {
+            bail!("map_fixed: misaligned ({start:#x}, {len:#x})");
+        }
+        if self.overlaps(start, len) {
+            bail!("map_fixed: range [{start:#x}, +{len:#x}) overlaps");
+        }
+        self.areas.insert(
+            start,
+            Vma {
+                start,
+                len,
+                kind,
+            },
+        );
+        Ok(())
+    }
+
+    /// Allocate a fresh range (find + map).
+    pub fn map(&mut self, len: u64, align: u64, kind: VmaKind) -> Result<u64> {
+        let len = align_up(len, PAGE_SIZE);
+        let start = self.find_free(len, align)?;
+        self.map_fixed(start, len, kind)?;
+        Ok(start)
+    }
+
+    /// Remove the VMA starting exactly at `start`.
+    pub fn unmap(&mut self, start: u64) -> Result<Vma> {
+        self.areas
+            .remove(&start)
+            .ok_or_else(|| anyhow::anyhow!("unmap: no VMA at {start:#x}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn map_finds_disjoint_ranges() {
+        let mut m = VmaManager::new();
+        let a = m.map(3 * PAGE_SIZE, PAGE_SIZE, VmaKind::Anon).unwrap();
+        let b = m.map(PAGE_SIZE, PAGE_SIZE, VmaKind::Anon).unwrap();
+        assert!(b >= a + 3 * PAGE_SIZE || a >= b + PAGE_SIZE);
+        assert_eq!(m.len(), 2);
+    }
+
+    #[test]
+    fn alignment_respected() {
+        let mut m = VmaManager::new();
+        let a = m
+            .map(PAGE_SIZE, 1 << 21, VmaKind::Huge)
+            .unwrap();
+        assert_eq!(a % (1 << 21), 0);
+    }
+
+    #[test]
+    fn find_locates_containing_vma() {
+        let mut m = VmaManager::new();
+        let a = m.map(2 * PAGE_SIZE, PAGE_SIZE, VmaKind::Pud).unwrap();
+        assert_eq!(m.find(a).unwrap().start, a);
+        assert_eq!(m.find(a + PAGE_SIZE + 5).unwrap().start, a);
+        assert!(m.find(a + 2 * PAGE_SIZE).is_none());
+        assert!(m.find(0).is_none());
+    }
+
+    #[test]
+    fn map_fixed_rejects_overlap() {
+        let mut m = VmaManager::new();
+        m.map_fixed(MMAP_BASE, 4 * PAGE_SIZE, VmaKind::Anon).unwrap();
+        assert!(m
+            .map_fixed(MMAP_BASE + PAGE_SIZE, PAGE_SIZE, VmaKind::Anon)
+            .is_err());
+        // adjacent is fine
+        m.map_fixed(MMAP_BASE + 4 * PAGE_SIZE, PAGE_SIZE, VmaKind::Anon)
+            .unwrap();
+    }
+
+    #[test]
+    fn map_fixed_rejects_misaligned() {
+        let mut m = VmaManager::new();
+        assert!(m.map_fixed(123, PAGE_SIZE, VmaKind::Anon).is_err());
+        assert!(m.map_fixed(PAGE_SIZE, 100, VmaKind::Anon).is_err());
+        assert!(m.map_fixed(PAGE_SIZE, 0, VmaKind::Anon).is_err());
+    }
+
+    #[test]
+    fn unmap_then_remap_reuses_space() {
+        let mut m = VmaManager::new();
+        let a = m.map(PAGE_SIZE, PAGE_SIZE, VmaKind::Anon).unwrap();
+        let vma = m.unmap(a).unwrap();
+        assert_eq!(vma.start, a);
+        let b = m.map(PAGE_SIZE, PAGE_SIZE, VmaKind::Anon).unwrap();
+        assert_eq!(a, b, "freed range is reused");
+    }
+
+    #[test]
+    fn find_free_skips_over_blockers() {
+        let mut m = VmaManager::new();
+        let base = align_up(MMAP_BASE, PAGE_SIZE);
+        m.map_fixed(base, PAGE_SIZE, VmaKind::Anon).unwrap();
+        m.map_fixed(base + 2 * PAGE_SIZE, PAGE_SIZE, VmaKind::Anon)
+            .unwrap();
+        // a 2-page request cannot use the 1-page hole at base+1
+        let got = m.find_free(2 * PAGE_SIZE, PAGE_SIZE).unwrap();
+        assert!(got >= base + 3 * PAGE_SIZE);
+        // but a 1-page request can
+        let got1 = m.find_free(PAGE_SIZE, PAGE_SIZE).unwrap();
+        assert_eq!(got1, base + PAGE_SIZE);
+    }
+
+    #[test]
+    fn exhaustion_is_an_error() {
+        let m = VmaManager::new();
+        assert!(m.find_free(MMAP_TOP, PAGE_SIZE).is_err());
+    }
+}

@@ -1,0 +1,277 @@
+//! Minimal property-based testing framework (the `proptest` crate is
+//! not in the offline vendor set — DESIGN.md §7).
+//!
+//! Features: seeded deterministic generation, configurable case count,
+//! and greedy shrinking of failing inputs. The failing seed and the
+//! shrunk input's `Debug` rendering are included in the panic message
+//! so failures reproduce with `PUMA_PROP_SEED=<seed>`.
+//!
+//! ```no_run
+//! // (no_run: doctest binaries lack the libxla rpath in this image)
+//! use puma::{assert_prop, proptest};
+//! proptest::check("sum commutes", |g| {
+//!     let a = g.u64(0..1000);
+//!     let b = g.u64(0..1000);
+//!     assert_prop!(a + b == b + a, "a={a} b={b}");
+//! });
+//! ```
+
+use crate::util::rng::Pcg64;
+
+/// Per-case value source handed to properties.
+pub struct Gen {
+    rng: Pcg64,
+    /// Trace of raw draws, kept so shrinking can replay a prefix.
+    log: Vec<u64>,
+    /// When replaying under shrink, values to force for each draw.
+    forced: Option<Vec<u64>>,
+    draw_idx: usize,
+}
+
+impl Gen {
+    fn new(seed: u64) -> Self {
+        Self {
+            rng: Pcg64::new(seed),
+            log: Vec::new(),
+            forced: None,
+            draw_idx: 0,
+        }
+    }
+
+    fn replay(seed: u64, forced: Vec<u64>) -> Self {
+        Self {
+            rng: Pcg64::new(seed),
+            log: Vec::new(),
+            forced: Some(forced),
+            draw_idx: 0,
+        }
+    }
+
+    /// Raw bounded draw; everything else routes through this so that
+    /// shrinking (which rewrites these raw values) covers all types.
+    fn draw(&mut self, bound: u64) -> u64 {
+        let fresh = self.rng.below(bound.max(1));
+        let v = match &self.forced {
+            Some(forced) if self.draw_idx < forced.len() => {
+                forced[self.draw_idx].min(bound.saturating_sub(1))
+            }
+            _ => fresh,
+        };
+        self.draw_idx += 1;
+        self.log.push(v);
+        v
+    }
+
+    /// Uniform u64 in `[range.start, range.end)`.
+    pub fn u64(&mut self, range: std::ops::Range<u64>) -> u64 {
+        assert!(range.start < range.end, "empty range");
+        range.start + self.draw(range.end - range.start)
+    }
+
+    /// Uniform usize in `[range.start, range.end)`.
+    pub fn usize(&mut self, range: std::ops::Range<usize>) -> usize {
+        self.u64(range.start as u64..range.end as u64) as usize
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.draw(2) == 1
+    }
+
+    /// Biased boolean, true with probability `num/denom`.
+    pub fn ratio(&mut self, num: u64, denom: u64) -> bool {
+        self.draw(denom) < num
+    }
+
+    /// Pick one item from a slice.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        assert!(!xs.is_empty(), "choose from empty slice");
+        &xs[self.draw(xs.len() as u64) as usize]
+    }
+
+    /// A vector of `len in len_range` elements built by `f`.
+    pub fn vec<T>(
+        &mut self,
+        len_range: std::ops::Range<usize>,
+        mut f: impl FnMut(&mut Gen) -> T,
+    ) -> Vec<T> {
+        let len = self.usize(len_range);
+        (0..len).map(|_| f(self)).collect()
+    }
+}
+
+/// Property outcome, captured via panic unwinding.
+type CaseResult = Result<(), String>;
+
+fn run_case(seed: u64, forced: Option<Vec<u64>>, prop: &dyn Fn(&mut Gen)) -> (CaseResult, Vec<u64>) {
+    let mut g = match forced {
+        Some(f) => Gen::replay(seed, f),
+        None => Gen::new(seed),
+    };
+    let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        prop(&mut g);
+    }));
+    let log = std::mem::take(&mut g.log);
+    match result {
+        Ok(()) => (Ok(()), log),
+        Err(payload) => {
+            let msg = payload
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            (Err(msg), log)
+        }
+    }
+}
+
+/// Number of cases per property; override with `PUMA_PROP_CASES`.
+pub fn default_cases() -> u32 {
+    std::env::var("PUMA_PROP_CASES")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(64)
+}
+
+/// Run `prop` for `default_cases()` random cases. On failure, shrink
+/// the raw draw trace (component-wise halving / zeroing) and panic
+/// with the seed + shrunk trace.
+pub fn check(name: &str, prop: impl Fn(&mut Gen)) {
+    check_cases(name, default_cases(), prop)
+}
+
+/// As [`check`] with an explicit case count.
+pub fn check_cases(name: &str, cases: u32, prop: impl Fn(&mut Gen)) {
+    let base_seed = std::env::var("PUMA_PROP_SEED")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(0x9E3779B97F4A7C15u64);
+    // Silence the default panic hook while we intentionally catch
+    // panics; restore it afterwards.
+    let hook = std::panic::take_hook();
+    std::panic::set_hook(Box::new(|_| {}));
+    let outcome = (|| {
+        for case in 0..cases {
+            let seed = base_seed ^ (case as u64).wrapping_mul(0xA24B_AED4_963E_E407);
+            let (res, log) = run_case(seed, None, &prop);
+            if let Err(msg) = res {
+                let (slog, smsg) = shrink(seed, log, msg, &prop);
+                return Err(format!(
+                    "property {name:?} failed (seed={seed}, case {case}/{cases})\n\
+                     shrunk raw trace: {slog:?}\nfailure: {smsg}"
+                ));
+            }
+        }
+        Ok(())
+    })();
+    std::panic::set_hook(hook);
+    if let Err(msg) = outcome {
+        panic!("{msg}");
+    }
+}
+
+/// Greedy shrink over the raw draw trace: try zeroing, halving, and
+/// decrementing each position while the property still fails.
+fn shrink(
+    seed: u64,
+    mut log: Vec<u64>,
+    mut msg: String,
+    prop: &dyn Fn(&mut Gen),
+) -> (Vec<u64>, String) {
+    let mut improved = true;
+    let mut budget = 2000u32;
+    while improved && budget > 0 {
+        improved = false;
+        for i in 0..log.len() {
+            if log[i] == 0 {
+                continue;
+            }
+            for candidate in [0, log[i] / 2, log[i] - 1] {
+                if candidate >= log[i] {
+                    continue;
+                }
+                budget = budget.saturating_sub(1);
+                if budget == 0 {
+                    break;
+                }
+                let mut trial = log.clone();
+                trial[i] = candidate;
+                let (res, _) = run_case(seed, Some(trial.clone()), prop);
+                if let Err(m) = res {
+                    log = trial;
+                    msg = m;
+                    improved = true;
+                    break;
+                }
+            }
+        }
+    }
+    (log, msg)
+}
+
+/// Assertion macro that formats a helpful message.
+#[macro_export]
+macro_rules! assert_prop {
+    ($cond:expr) => {
+        if !$cond {
+            panic!("assertion failed: {}", stringify!($cond));
+        }
+    };
+    ($cond:expr, $($fmt:tt)+) => {
+        if !$cond {
+            panic!("assertion failed: {} — {}", stringify!($cond), format!($($fmt)+));
+        }
+    };
+}
+pub use assert_prop;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check("xor involutive", |g| {
+            let a = g.u64(0..u64::MAX);
+            let b = g.u64(0..u64::MAX);
+            assert_prop!((a ^ b) ^ b == a);
+        });
+    }
+
+    #[test]
+    fn vec_gen_respects_len() {
+        check("vec len", |g| {
+            let v = g.vec(0..17, |g| g.bool());
+            assert_prop!(v.len() < 17);
+        });
+    }
+
+    #[test]
+    fn failing_property_reports_seed_and_shrinks() {
+        let res = std::panic::catch_unwind(|| {
+            check_cases("always fails above 10", 16, |g| {
+                let v = g.u64(0..1000);
+                assert_prop!(v <= 10, "v={v}");
+            });
+        });
+        let msg = match res {
+            Err(p) => p
+                .downcast_ref::<String>()
+                .cloned()
+                .unwrap_or_default(),
+            Ok(()) => panic!("property should have failed"),
+        };
+        assert!(msg.contains("seed="), "missing seed in: {msg}");
+        // the shrinker should reach the boundary value 11
+        assert!(msg.contains("[11]"), "not shrunk to minimum: {msg}");
+    }
+
+    #[test]
+    fn choose_and_ratio_draw() {
+        check("choose in slice", |g| {
+            let xs = [1, 2, 3];
+            let c = *g.choose(&xs);
+            assert_prop!(xs.contains(&c));
+            let _ = g.ratio(1, 3);
+        });
+    }
+}

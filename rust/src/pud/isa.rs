@@ -1,0 +1,162 @@
+//! The bulk-operation instruction set.
+//!
+//! These are the operations the modeled substrate supports in-DRAM
+//! (RowClone: `Zero`/`Copy`; Ambit: `And`/`Or`/`Not`/`Xor`) and that
+//! the CPU fallback must therefore also implement (the L1 Pallas
+//! kernel set mirrors this enum — see python/compile/kernels).
+
+use std::fmt;
+
+/// A bulk operation kind.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum PudOp {
+    /// dst = 0 (RowClone zero-init from the control zero row).
+    Zero,
+    /// dst = src (RowClone copy).
+    Copy,
+    /// dst = a & b (Ambit TRA with C=0).
+    And,
+    /// dst = a | b (Ambit TRA with C=1).
+    Or,
+    /// dst = !a (Ambit dual-contact row).
+    Not,
+    /// dst = a ^ b (Ambit composite sequence).
+    Xor,
+}
+
+impl PudOp {
+    /// Number of *source* operands (dst excluded).
+    pub fn arity(&self) -> usize {
+        match self {
+            PudOp::Zero => 0,
+            PudOp::Copy | PudOp::Not => 1,
+            PudOp::And | PudOp::Or | PudOp::Xor => 2,
+        }
+    }
+
+    /// All ops, for sweeps.
+    pub const ALL: [PudOp; 6] = [
+        PudOp::Zero,
+        PudOp::Copy,
+        PudOp::And,
+        PudOp::Or,
+        PudOp::Not,
+        PudOp::Xor,
+    ];
+
+    /// Artifact base name of the matching L1 kernel.
+    pub fn kernel_name(&self) -> &'static str {
+        match self {
+            PudOp::Zero => "zero",
+            PudOp::Copy => "copy",
+            PudOp::And => "and",
+            PudOp::Or => "or",
+            PudOp::Not => "not",
+            PudOp::Xor => "xor",
+        }
+    }
+
+    /// Apply the op to byte slices (the scalar reference used by the
+    /// simulator's own unit tests; the production fallback path runs
+    /// the XLA artifacts instead).
+    pub fn apply_bytes(&self, srcs: &[&[u8]], dst: &mut [u8]) {
+        match self {
+            PudOp::Zero => dst.fill(0),
+            PudOp::Copy => dst.copy_from_slice(srcs[0]),
+            PudOp::Not => {
+                for (d, s) in dst.iter_mut().zip(srcs[0]) {
+                    *d = !s;
+                }
+            }
+            PudOp::And => {
+                for ((d, a), b) in dst.iter_mut().zip(srcs[0]).zip(srcs[1]) {
+                    *d = a & b;
+                }
+            }
+            PudOp::Or => {
+                for ((d, a), b) in dst.iter_mut().zip(srcs[0]).zip(srcs[1]) {
+                    *d = a | b;
+                }
+            }
+            PudOp::Xor => {
+                for ((d, a), b) in dst.iter_mut().zip(srcs[0]).zip(srcs[1]) {
+                    *d = a ^ b;
+                }
+            }
+        }
+    }
+}
+
+impl fmt::Display for PudOp {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.kernel_name())
+    }
+}
+
+/// A bulk operation over *virtual* ranges of one process — what the
+/// workloads submit to the coordinator.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct BulkRequest {
+    pub op: PudOp,
+    /// Destination virtual address.
+    pub dst: u64,
+    /// Source virtual addresses (`op.arity()` of them).
+    pub srcs: Vec<u64>,
+    /// Length in bytes (common to all operands).
+    pub len: u64,
+}
+
+impl BulkRequest {
+    pub fn new(op: PudOp, dst: u64, srcs: Vec<u64>, len: u64) -> Self {
+        assert_eq!(srcs.len(), op.arity(), "arity mismatch for {op}");
+        Self { op, dst, srcs, len }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn arity_matches_semantics() {
+        assert_eq!(PudOp::Zero.arity(), 0);
+        assert_eq!(PudOp::Copy.arity(), 1);
+        assert_eq!(PudOp::Not.arity(), 1);
+        assert_eq!(PudOp::And.arity(), 2);
+        assert_eq!(PudOp::Or.arity(), 2);
+        assert_eq!(PudOp::Xor.arity(), 2);
+    }
+
+    #[test]
+    fn apply_bytes_semantics() {
+        let a = [0b1100u8, 0xFF];
+        let b = [0b1010u8, 0x0F];
+        let mut d = [0u8; 2];
+        PudOp::And.apply_bytes(&[&a, &b], &mut d);
+        assert_eq!(d, [0b1000, 0x0F]);
+        PudOp::Or.apply_bytes(&[&a, &b], &mut d);
+        assert_eq!(d, [0b1110, 0xFF]);
+        PudOp::Xor.apply_bytes(&[&a, &b], &mut d);
+        assert_eq!(d, [0b0110, 0xF0]);
+        PudOp::Not.apply_bytes(&[&a], &mut d);
+        assert_eq!(d, [0xF3, 0x00]);
+        PudOp::Copy.apply_bytes(&[&a], &mut d);
+        assert_eq!(d, a);
+        PudOp::Zero.apply_bytes(&[], &mut d);
+        assert_eq!(d, [0, 0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "arity mismatch")]
+    fn request_arity_checked() {
+        BulkRequest::new(PudOp::And, 0, vec![0], 64);
+    }
+
+    #[test]
+    fn kernel_names_match_artifacts() {
+        for op in PudOp::ALL {
+            assert!(!op.kernel_name().is_empty());
+        }
+        assert_eq!(PudOp::And.to_string(), "and");
+    }
+}

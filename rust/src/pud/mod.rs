@@ -1,0 +1,28 @@
+//! Processing-using-DRAM substrate (Ambit + RowClone).
+//!
+//! The PUD device the paper targets: bulk row-granular operations
+//! executed *inside* DRAM by exploiting analog row interactions —
+//! RowClone for copy/initialize, Ambit triple-row activation for
+//! AND/OR (and NOT via dual-contact cells).
+//!
+//! * [`isa`] — the bulk-op instruction set the coordinator dispatches.
+//! * [`reserved`] — per-subarray reserved row groups (temporary TRA
+//!   rows, control all-0/all-1 rows, dual-contact rows).
+//! * [`legality`] — the operand-placement rules: all operands of one
+//!   PUD instruction must be row-aligned and co-located in one
+//!   subarray (paper §1) — the rules PUMA exists to satisfy.
+//! * [`rowclone`] — functional + counted RowClone FPM/PSM execution.
+//! * [`ambit`] — functional + counted Ambit Boolean execution.
+//! * [`exec`] — [`exec::PudEngine`]: the device-level executor that
+//!   the coordinator drives; returns analytic latencies.
+
+pub mod ambit;
+pub mod exec;
+pub mod isa;
+pub mod legality;
+pub mod reserved;
+pub mod rowclone;
+
+pub use exec::PudEngine;
+pub use isa::PudOp;
+pub use legality::{check_rowwise, RowPlan};

@@ -1,0 +1,123 @@
+//! Per-subarray reserved rows for the Ambit substrate.
+//!
+//! Ambit dedicates a small group of rows in every subarray to
+//! computation: temporary rows for triple-row activation (the row
+//! triplet that is simultaneously activated), control rows holding
+//! all-zeros / all-ones (to specialize `maj` into AND / OR), and
+//! dual-contact rows whose complementary sense amplifies into NOT.
+//! These rows are invisible to the OS allocator: the usable capacity
+//! of each subarray shrinks accordingly, which PUMA's region split
+//! must respect.
+
+use crate::dram::geometry::{DramGeometry, Loc, SubarrayId};
+
+/// Rows reserved at the *top* of each subarray.
+pub const RESERVED_ROWS: u32 = 8;
+
+/// Roles of the reserved rows, offset from the top of the subarray.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ReservedRow {
+    /// TRA temporaries T0..T2 (offsets 0..=2).
+    Temp(u8),
+    /// Control all-zeros row.
+    Zero,
+    /// Control all-ones row.
+    One,
+    /// Dual-contact row (and its complement) for NOT.
+    Dcc(u8),
+}
+
+impl ReservedRow {
+    fn offset(&self) -> u32 {
+        match self {
+            ReservedRow::Temp(i) => {
+                debug_assert!(*i < 3);
+                *i as u32
+            }
+            ReservedRow::Zero => 3,
+            ReservedRow::One => 4,
+            ReservedRow::Dcc(i) => {
+                debug_assert!(*i < 2);
+                5 + *i as u32
+            } // 5, 6 (7 spare)
+        }
+    }
+}
+
+/// Number of rows in each subarray usable for data.
+pub fn usable_rows(geom: &DramGeometry) -> u32 {
+    geom.rows_per_subarray - RESERVED_ROWS
+}
+
+/// Usable data bytes per subarray.
+pub fn usable_bytes(geom: &DramGeometry) -> u64 {
+    usable_rows(geom) as u64 * geom.row_bytes as u64
+}
+
+/// Is `row` a reserved row?
+pub fn is_reserved(geom: &DramGeometry, row: u32) -> bool {
+    row >= usable_rows(geom)
+}
+
+/// Location of a reserved row within subarray `sid`.
+pub fn reserved_loc(geom: &DramGeometry, sid: SubarrayId, which: ReservedRow) -> Loc {
+    let mut rest = sid.0;
+    let subarray = rest % geom.subarrays_per_bank;
+    rest /= geom.subarrays_per_bank;
+    let bank = rest % geom.banks_per_rank;
+    rest /= geom.banks_per_rank;
+    let rank = rest % geom.ranks_per_channel;
+    let channel = rest / geom.ranks_per_channel;
+    Loc {
+        channel,
+        rank,
+        bank,
+        subarray,
+        row: usable_rows(geom) + which.offset(),
+        column: 0,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn usable_rows_excludes_reserved() {
+        let g = DramGeometry::default();
+        assert_eq!(usable_rows(&g), 1024 - RESERVED_ROWS);
+        assert_eq!(usable_bytes(&g), (1024 - RESERVED_ROWS) as u64 * 8192);
+    }
+
+    #[test]
+    fn reserved_rows_detected() {
+        let g = DramGeometry::default();
+        assert!(!is_reserved(&g, 0));
+        assert!(!is_reserved(&g, usable_rows(&g) - 1));
+        assert!(is_reserved(&g, usable_rows(&g)));
+        assert!(is_reserved(&g, 1023));
+    }
+
+    #[test]
+    fn reserved_locs_distinct_and_in_subarray() {
+        let g = DramGeometry::default();
+        let sid = SubarrayId(37);
+        let rows = [
+            ReservedRow::Temp(0),
+            ReservedRow::Temp(1),
+            ReservedRow::Temp(2),
+            ReservedRow::Zero,
+            ReservedRow::One,
+            ReservedRow::Dcc(0),
+            ReservedRow::Dcc(1),
+        ];
+        let mut seen = std::collections::HashSet::new();
+        for r in rows {
+            let loc = reserved_loc(&g, sid, r);
+            assert!(g.contains(&loc), "{loc:?}");
+            assert_eq!(g.subarray_id(&loc), sid);
+            assert!(is_reserved(&g, loc.row));
+            assert!(seen.insert(loc.row), "reserved rows collide: {r:?}");
+        }
+    }
+}

@@ -1,0 +1,165 @@
+//! RowClone: in-DRAM bulk copy and initialization.
+//!
+//! FPM (Fast Parallel Mode): two back-to-back activations (an "AAP")
+//! copy a source row into a destination row of the *same subarray*
+//! through the shared sense amplifiers. PSM (Pipelined Serial Mode)
+//! moves a row between subarrays/banks through the internal bus —
+//! slower, but still avoids the memory channel.
+//!
+//! Functional semantics execute on the [`DramDevice`] backing store;
+//! command counters and analytic latency follow the sequence costs in
+//! [`TimingParams`].
+
+use anyhow::{ensure, Result};
+
+use crate::dram::device::DramDevice;
+use crate::dram::geometry::Loc;
+use crate::dram::timing::TimingParams;
+
+/// Copy `src` row into `dst` row via FPM. Both must be row-aligned
+/// locations in the same subarray. Returns latency (ns).
+pub fn fpm_copy(
+    dev: &mut DramDevice,
+    timing: &TimingParams,
+    src: &Loc,
+    dst: &Loc,
+) -> Result<f64> {
+    ensure!(src.column == 0 && dst.column == 0, "FPM needs row-aligned operands");
+    let g = dev.geometry().clone();
+    ensure!(
+        g.subarray_id(src) == g.subarray_id(dst),
+        "FPM requires same-subarray src/dst"
+    );
+    if src.row == dst.row {
+        // copy-to-self: an identity — charge the AAP, move nothing
+        dev.counters.aaps += 1;
+        return Ok(timing.rowclone_fpm_ns(1));
+    }
+    let row = dev.read_row(src);
+    dev.write_row(dst, &row);
+    dev.counters.aaps += 1;
+    Ok(timing.rowclone_fpm_ns(1))
+}
+
+/// Zero-initialize `dst` row (AAP from the control all-zeros row).
+pub fn zero_row(
+    dev: &mut DramDevice,
+    timing: &TimingParams,
+    dst: &Loc,
+) -> Result<f64> {
+    ensure!(dst.column == 0, "zero-init needs a row-aligned destination");
+    let zeros = vec![0u8; dev.geometry().row_bytes as usize];
+    dev.write_row(dst, &zeros);
+    dev.counters.aaps += 1;
+    Ok(timing.rowclone_zero_ns(1))
+}
+
+/// Copy a row between *different* subarrays via PSM.
+pub fn psm_copy(
+    dev: &mut DramDevice,
+    timing: &TimingParams,
+    src: &Loc,
+    dst: &Loc,
+) -> Result<f64> {
+    ensure!(src.column == 0 && dst.column == 0, "PSM needs row-aligned operands");
+    let g = dev.geometry().clone();
+    ensure!(
+        g.subarray_id(src) != g.subarray_id(dst),
+        "PSM is for inter-subarray moves (use FPM within one)"
+    );
+    let row = dev.read_row(src);
+    dev.write_row(dst, &row);
+    dev.counters.psm_rows += 1;
+    Ok(timing.rowclone_psm_ns(1, g.row_bytes))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dram::address::InterleaveScheme;
+    use crate::dram::geometry::{DramGeometry, SubarrayId};
+
+    fn dev() -> DramDevice {
+        DramDevice::new(InterleaveScheme::row_major(DramGeometry {
+            channels: 1,
+            ranks_per_channel: 1,
+            banks_per_rank: 2,
+            subarrays_per_bank: 2,
+            rows_per_subarray: 16,
+            row_bytes: 128,
+        }))
+    }
+
+    fn loc_of(d: &DramDevice, sid: u32, row: u32) -> Loc {
+        let addr = d.scheme.row_start_addr(SubarrayId(sid), row);
+        d.scheme.decode(addr)
+    }
+
+    #[test]
+    fn fpm_copies_contents() {
+        let mut d = dev();
+        let t = TimingParams::default();
+        let src = loc_of(&d, 0, 3);
+        let dst = loc_of(&d, 0, 7);
+        let data: Vec<u8> = (0..128).collect();
+        d.write_row(&src, &data);
+        let ns = fpm_copy(&mut d, &t, &src, &dst).unwrap();
+        assert_eq!(d.read_row(&dst), data);
+        assert_eq!(ns, t.t_aap);
+        assert_eq!(d.counters.aaps, 1);
+    }
+
+    #[test]
+    fn fpm_rejects_cross_subarray_and_misalignment() {
+        let mut d = dev();
+        let t = TimingParams::default();
+        let a = loc_of(&d, 0, 1);
+        let b = loc_of(&d, 1, 1);
+        assert!(fpm_copy(&mut d, &t, &a, &b).is_err());
+        let mid = Loc { column: 4, ..a };
+        assert!(fpm_copy(&mut d, &t, &mid, &a).is_err());
+    }
+
+    #[test]
+    fn fpm_copy_to_self_is_identity() {
+        let mut d = dev();
+        let t = TimingParams::default();
+        let a = loc_of(&d, 0, 1);
+        let data: Vec<u8> = (0..128).collect();
+        d.write_row(&a, &data);
+        let ns = fpm_copy(&mut d, &t, &a, &a).unwrap();
+        assert_eq!(d.read_row(&a), data);
+        assert_eq!(ns, t.t_aap);
+    }
+
+    #[test]
+    fn zero_row_clears() {
+        let mut d = dev();
+        let t = TimingParams::default();
+        let dst = loc_of(&d, 1, 2);
+        d.write_row(&dst, &vec![0xFF; 128]);
+        zero_row(&mut d, &t, &dst).unwrap();
+        assert_eq!(d.read_row(&dst), vec![0u8; 128]);
+    }
+
+    #[test]
+    fn psm_crosses_subarrays_and_costs_more() {
+        let mut d = dev();
+        let t = TimingParams::default();
+        let src = loc_of(&d, 0, 3);
+        let dst = loc_of(&d, 3, 9);
+        let data: Vec<u8> = (0..128).rev().collect();
+        d.write_row(&src, &data);
+        let psm_ns = psm_copy(&mut d, &t, &src, &dst).unwrap();
+        assert_eq!(d.read_row(&dst), data);
+        // at realistic row sizes (8 KiB) PSM costs well above one AAP;
+        // the 128 B test row is too small for that comparison, so
+        // check the model directly at the default row size
+        assert!(t.rowclone_psm_ns(1, 8192) > t.rowclone_fpm_ns(1));
+        assert!(psm_ns > 0.0);
+        assert_eq!(d.counters.psm_rows, 1);
+        // PSM within one subarray is rejected
+        let near = loc_of(&d, 0, 5);
+        assert!(psm_copy(&mut d, &t, &src, &near).is_err());
+    }
+}

@@ -1,0 +1,199 @@
+//! Report rendering: regenerates the paper's figures/tables as
+//! markdown tables, ASCII charts, and CSV files.
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::util::csvio::Csv;
+use crate::util::table::{fnum, Table};
+use crate::util::units::fmt_bytes;
+use crate::workloads::microbench::{AllocatorKind, Micro};
+use crate::workloads::sweep::SweepCell;
+
+/// Render the Figure 2 reproduction: PUMA speedup over malloc, one
+/// series per micro-benchmark, across allocation sizes.
+pub fn figure2(
+    series: &[(Micro, Vec<SweepCell>)],
+    out_dir: Option<&Path>,
+) -> Result<String> {
+    let sizes: Vec<u64> = series
+        .first()
+        .map(|(_, cells)| cells.iter().map(|c| c.result.size).collect())
+        .unwrap_or_default();
+    let mut table = Table::new(
+        std::iter::once("size".to_string())
+            .chain(series.iter().map(|(m, _)| format!("{}-speedup", m.name())))
+            .chain(series.iter().map(|(m, _)| format!("{}-pud%", m.name())))
+            .collect::<Vec<String>>(),
+    )
+    .left(0);
+    let mut csv = Csv::new(vec![
+        "size_bytes",
+        "micro",
+        "allocator",
+        "sim_ns",
+        "baseline_ns",
+        "speedup",
+        "pud_fraction",
+    ]);
+    for (i, &size) in sizes.iter().enumerate() {
+        let mut row = vec![fmt_bytes(size)];
+        for (_, cells) in series {
+            row.push(format!("{}x", fnum(cells[i].speedup())));
+        }
+        for (_, cells) in series {
+            row.push(format!("{:.0}%", cells[i].result.pud_fraction() * 100.0));
+        }
+        table.row(row);
+        for (m, cells) in series {
+            let c = &cells[i];
+            csv.row(vec![
+                size.to_string(),
+                m.name().to_string(),
+                c.result.allocator.to_string(),
+                format!("{:.1}", c.result.sim_ns),
+                format!("{:.1}", c.baseline_ns),
+                format!("{:.4}", c.speedup()),
+                format!("{:.4}", c.result.pud_fraction()),
+            ]);
+        }
+    }
+    let chart = crate::util::chart::line_chart(
+        &sizes.iter().map(|s| fmt_bytes(*s)).collect::<Vec<_>>(),
+        &series
+            .iter()
+            .map(|(m, cells)| {
+                (
+                    format!("{}-speedup", m.name()),
+                    cells.iter().map(|c| c.speedup()).collect(),
+                )
+            })
+            .collect::<Vec<_>>(),
+        12,
+    );
+    if let Some(dir) = out_dir {
+        csv.write(dir.join("figure2.csv"))?;
+    }
+    Ok(format!(
+        "## Figure 2 — PUMA speedup vs malloc (simulated time)\n\n{}\n{}",
+        table.render(),
+        chart
+    ))
+}
+
+/// Render the §1 motivation study: PUD-executable fraction per
+/// allocator per size.
+pub fn motivation(
+    rows: &[(AllocatorKind, u64, f64)],
+    out_dir: Option<&Path>,
+) -> Result<String> {
+    // collect the size axis
+    let mut sizes: Vec<u64> = rows.iter().map(|(_, s, _)| *s).collect();
+    sizes.sort_unstable();
+    sizes.dedup();
+    let mut kinds: Vec<AllocatorKind> = Vec::new();
+    for (k, _, _) in rows {
+        if !kinds.contains(k) {
+            kinds.push(*k);
+        }
+    }
+    let mut table = Table::new(
+        std::iter::once("allocator".to_string())
+            .chain(sizes.iter().map(|s| fmt_bytes(*s)))
+            .collect::<Vec<String>>(),
+    )
+    .left(0);
+    let mut csv = Csv::new(vec!["allocator", "size_bytes", "pud_fraction"]);
+    for k in &kinds {
+        let mut row = vec![k.name().to_string()];
+        for s in &sizes {
+            let frac = rows
+                .iter()
+                .find(|(rk, rs, _)| rk == k && rs == s)
+                .map(|(_, _, f)| *f)
+                .unwrap_or(0.0);
+            row.push(format!("{:.0}%", frac * 100.0));
+        }
+        table.row(row);
+    }
+    for (k, s, f) in rows {
+        csv.row(vec![
+            k.name().to_string(),
+            s.to_string(),
+            format!("{f:.4}"),
+        ]);
+    }
+    if let Some(dir) = out_dir {
+        csv.write(dir.join("motivation.csv"))?;
+    }
+    Ok(format!(
+        "## §1 motivation — PUD-executable operations per allocator\n\n{}",
+        table.render()
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::CoordStats;
+    use crate::workloads::microbench::MicrobenchResult;
+
+    fn cell(size: u64, sim: f64, base: f64, pud: u64, fb: u64) -> SweepCell {
+        SweepCell {
+            result: MicrobenchResult {
+                micro: Micro::Copy,
+                allocator: "puma",
+                size,
+                reps: 1,
+                coord: CoordStats {
+                    pud_rows: pud,
+                    fallback_rows: fb,
+                    ..Default::default()
+                },
+                alloc: Default::default(),
+                sim_ns: sim,
+            },
+            baseline_ns: base,
+        }
+    }
+
+    #[test]
+    fn figure2_renders_table_and_chart() {
+        let series = vec![(
+            Micro::Copy,
+            vec![cell(250, 100.0, 150.0, 0, 1), cell(8192, 50.0, 500.0, 1, 0)],
+        )];
+        let s = figure2(&series, None).unwrap();
+        assert!(s.contains("Figure 2"));
+        assert!(s.contains("copy-speedup"));
+        assert!(s.contains("1.50x"));
+        assert!(s.contains("10.0x"));
+        assert!(s.contains("legend"));
+    }
+
+    #[test]
+    fn motivation_renders_grid() {
+        let rows = vec![
+            (AllocatorKind::Malloc, 250u64, 0.0),
+            (AllocatorKind::Malloc, 8192, 0.0),
+            (AllocatorKind::HugePages, 250, 0.1),
+            (AllocatorKind::HugePages, 8192, 0.6),
+        ];
+        let s = motivation(&rows, None).unwrap();
+        assert!(s.contains("malloc"));
+        assert!(s.contains("hugepages"));
+        assert!(s.contains("60%"));
+    }
+
+    #[test]
+    fn writes_csvs() {
+        let dir = std::env::temp_dir().join("puma_report_test");
+        let series = vec![(Micro::Zero, vec![cell(250, 1.0, 2.0, 1, 0)])];
+        figure2(&series, Some(&dir)).unwrap();
+        motivation(&[(AllocatorKind::Malloc, 250, 0.0)], Some(&dir)).unwrap();
+        assert!(dir.join("figure2.csv").exists());
+        assert!(dir.join("motivation.csv").exists());
+        let _ = std::fs::remove_dir_all(dir);
+    }
+}

@@ -1,0 +1,312 @@
+//! XLA/PJRT CPU runtime: loads the AOT HLO artifacts and executes the
+//! CPU-fallback bulk operations.
+//!
+//! This is the only place the request path touches compiled L1/L2
+//! code; python is never invoked at runtime. HLO *text* is the
+//! interchange format (jax >= 0.5 protos are rejected by the image's
+//! xla_extension 0.5.1 — see DESIGN.md §7 and aot.py).
+//!
+//! Shape bucketing: every op is compiled at the row buckets lowered by
+//! aot.py ({1, 8, 64, 256} x 2048 i32 lanes). [`XlaRuntime::run_op`]
+//! greedily covers an arbitrary row count with the largest buckets, so
+//! dispatch count is O(log rows + rows/256).
+
+use anyhow::{anyhow, bail, Context, Result};
+use rustc_hash::FxHashMap;
+
+use super::manifest::{self, ManifestEntry};
+
+/// Bytes per DRAM row as seen by the kernels (2048 x i32).
+pub const ROW_BYTES: usize = 8192;
+pub const LANES: usize = 2048;
+
+/// One compiled executable plus its metadata.
+struct CachedExe {
+    exe: xla::PjRtLoadedExecutable,
+    rows: u32,
+    arity: usize,
+}
+
+/// The PJRT CPU runtime with a per-(op, bucket) executable cache.
+pub struct XlaRuntime {
+    _client: xla::PjRtClient,
+    /// op -> bucket row counts, descending.
+    buckets: FxHashMap<String, Vec<u32>>,
+    exes: FxHashMap<(String, u32), CachedExe>,
+    /// executions performed, per op (for reports).
+    pub dispatches: u64,
+}
+
+impl XlaRuntime {
+    /// Load every artifact in `dir` and compile it on the CPU client.
+    pub fn load(dir: impl AsRef<std::path::Path>) -> Result<Self> {
+        let entries = manifest::load(&dir)?;
+        let client = xla::PjRtClient::cpu().map_err(to_anyhow)?;
+        let mut rt = Self {
+            _client: client,
+            buckets: FxHashMap::default(),
+            exes: FxHashMap::default(),
+            dispatches: 0,
+        };
+        for e in &entries {
+            rt.compile_entry(e)
+                .with_context(|| format!("compiling artifact {}", e.name))?;
+        }
+        for b in rt.buckets.values_mut() {
+            b.sort_unstable_by(|a, b| b.cmp(a));
+        }
+        Ok(rt)
+    }
+
+    fn compile_entry(&mut self, e: &ManifestEntry) -> Result<()> {
+        if e.lanes as usize != LANES {
+            bail!("artifact {} has {} lanes, runtime expects {LANES}", e.name, e.lanes);
+        }
+        let proto = xla::HloModuleProto::from_text_file(
+            e.path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .map_err(to_anyhow)?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self._client.compile(&comp).map_err(to_anyhow)?;
+        self.buckets.entry(e.op.clone()).or_default().push(e.rows);
+        self.exes.insert(
+            (e.op.clone(), e.rows),
+            CachedExe {
+                exe,
+                rows: e.rows,
+                arity: e.arity,
+            },
+        );
+        Ok(())
+    }
+
+    /// Ops available in the cache.
+    pub fn ops(&self) -> Vec<String> {
+        let mut v: Vec<String> = self.buckets.keys().cloned().collect();
+        v.sort();
+        v
+    }
+
+    /// Greedy bucket cover for `rows`: largest bucket <= remaining,
+    /// or the smallest bucket for the tail.
+    pub fn plan_buckets(&self, op: &str, rows: u32) -> Result<Vec<u32>> {
+        let buckets = self
+            .buckets
+            .get(op)
+            .ok_or_else(|| anyhow!("no artifacts for op {op:?}"))?;
+        let smallest = *buckets.last().expect("nonempty");
+        let mut plan = Vec::new();
+        let mut left = rows;
+        while left > 0 {
+            let b = buckets.iter().copied().find(|&b| b <= left).unwrap_or(smallest);
+            plan.push(b);
+            left = left.saturating_sub(b);
+        }
+        Ok(plan)
+    }
+
+    /// Execute `op` over whole rows: `srcs` are `arity` byte slices of
+    /// `rows * ROW_BYTES` bytes; returns the destination bytes.
+    ///
+    /// The tail of a partial final row (if `byte_len < rows*ROW_BYTES`)
+    /// is the caller's concern: pass padded inputs and truncate the
+    /// output.
+    pub fn run_op(&mut self, op: &str, rows: u32, srcs: &[&[u8]]) -> Result<Vec<u8>> {
+        let total = rows as usize * ROW_BYTES;
+        for (i, s) in srcs.iter().enumerate() {
+            if s.len() != total {
+                bail!("src {i} has {} bytes, want {total}", s.len());
+            }
+        }
+        let plan = self.plan_buckets(op, rows)?;
+        // output accumulates as i32 (the artifact element type) so
+        // result literals can copy_raw_to straight into the tail —
+        // one copy instead of to_vec + extend (§Perf)
+        let mut out_i32: Vec<i32> = Vec::with_capacity(total / 4);
+        let mut row_off = 0usize;
+        for bucket in plan {
+            let chunk_bytes = bucket as usize * ROW_BYTES;
+            let start = row_off * ROW_BYTES;
+            // the greedy tail may overhang; clamp inputs by padding
+            let exe = self
+                .exes
+                .get(&(op.to_string(), bucket))
+                .ok_or_else(|| anyhow!("missing exe {op}@{bucket}"))?;
+            if exe.arity != srcs.len() {
+                bail!("op {op} arity {} but {} srcs given", exe.arity, srcs.len());
+            }
+            let mut lits = Vec::with_capacity(srcs.len());
+            for s in srcs {
+                let end = (start + chunk_bytes).min(s.len());
+                // exact-fit chunks (the common case) go straight from
+                // the caller's slice; only the greedy tail's overhang
+                // needs a padded copy (§Perf: saves one memcpy of up
+                // to 2 MiB per operand per dispatch)
+                let lit = if end - start == chunk_bytes {
+                    xla::Literal::create_from_shape_and_untyped_data(
+                        xla::ElementType::S32,
+                        &[exe.rows as usize, LANES],
+                        &s[start..end],
+                    )
+                } else {
+                    let mut bytes = s[start..end].to_vec();
+                    bytes.resize(chunk_bytes, 0); // pad overhang
+                    xla::Literal::create_from_shape_and_untyped_data(
+                        xla::ElementType::S32,
+                        &[exe.rows as usize, LANES],
+                        &bytes,
+                    )
+                };
+                lits.push(lit.map_err(to_anyhow)?);
+            }
+            let result = exe.exe.execute::<xla::Literal>(&lits).map_err(to_anyhow)?;
+            let lit = result[0][0].to_literal_sync().map_err(to_anyhow)?;
+            let tuple = lit.to_tuple1().map_err(to_anyhow)?;
+            let chunk_elems = chunk_bytes / 4;
+            let keep = chunk_bytes.min(total - out_i32.len() * 4) / 4;
+            let pos = out_i32.len();
+            if keep == chunk_elems {
+                // exact fit: copy the literal straight into the tail
+                out_i32.resize(pos + chunk_elems, 0);
+                tuple
+                    .copy_raw_to(&mut out_i32[pos..pos + chunk_elems])
+                    .map_err(to_anyhow)?;
+            } else {
+                // greedy-tail overhang: stage and truncate
+                let vals: Vec<i32> = tuple.to_vec().map_err(to_anyhow)?;
+                out_i32.extend_from_slice(&vals[..keep]);
+            }
+            self.dispatches += 1;
+            row_off += bucket as usize;
+        }
+        debug_assert_eq!(out_i32.len() * 4, total);
+        // reinterpret Vec<i32> as Vec<u8> without copying (alignment
+        // of u8 <= i32; length/capacity scale by 4)
+        let out = unsafe {
+            let mut v = std::mem::ManuallyDrop::new(out_i32);
+            Vec::from_raw_parts(v.as_mut_ptr() as *mut u8, v.len() * 4, v.capacity() * 4)
+        };
+        Ok(out)
+    }
+
+    /// Execute the fused bitmap-scan artifact: popcount(a & b) summed
+    /// over `rows` full rows (used by examples/database_scan).
+    pub fn bitmap_scan(&mut self, rows: u32, a: &[u8], b: &[u8]) -> Result<i64> {
+        let plan = self.plan_buckets("bitmapscan", rows)?;
+        let total = rows as usize * ROW_BYTES;
+        if a.len() != total || b.len() != total {
+            bail!("bitmap_scan operand size mismatch");
+        }
+        let mut sum = 0i64;
+        let mut row_off = 0usize;
+        for bucket in plan {
+            let chunk = bucket as usize * ROW_BYTES;
+            let start = row_off * ROW_BYTES;
+            let exe = self
+                .exes
+                .get(&("bitmapscan".to_string(), bucket))
+                .ok_or_else(|| anyhow!("missing bitmapscan@{bucket}"))?;
+            let mut lits = Vec::with_capacity(2);
+            for s in [a, b] {
+                let end = (start + chunk).min(s.len());
+                let mut bytes = s[start..end].to_vec();
+                bytes.resize(chunk, 0);
+                lits.push(
+                    xla::Literal::create_from_shape_and_untyped_data(
+                        xla::ElementType::S32,
+                        &[exe.rows as usize, LANES],
+                        &bytes,
+                    )
+                    .map_err(to_anyhow)?,
+                );
+            }
+            let result = exe.exe.execute::<xla::Literal>(&lits).map_err(to_anyhow)?;
+            let lit = result[0][0].to_literal_sync().map_err(to_anyhow)?;
+            let vals: Vec<i32> = lit.to_tuple1().map_err(to_anyhow)?.to_vec().map_err(to_anyhow)?;
+            sum += vals[0] as i64;
+            self.dispatches += 1;
+            row_off += bucket as usize;
+        }
+        Ok(sum)
+    }
+}
+
+fn to_anyhow(e: xla::Error) -> anyhow::Error {
+    anyhow!("xla: {e}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    fn artifacts_dir() -> Option<std::path::PathBuf> {
+        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        dir.join("manifest.tsv").exists().then_some(dir)
+    }
+
+    #[test]
+    fn bucket_planning_greedy() {
+        let Some(dir) = artifacts_dir() else { return };
+        let rt = XlaRuntime::load(dir).unwrap();
+        assert_eq!(rt.plan_buckets("and", 1).unwrap(), vec![1]);
+        assert_eq!(rt.plan_buckets("and", 8).unwrap(), vec![8]);
+        assert_eq!(rt.plan_buckets("and", 9).unwrap(), vec![8, 1]);
+        assert_eq!(
+            rt.plan_buckets("and", 300).unwrap(),
+            vec![256, 8, 8, 8, 8, 8, 1, 1, 1, 1]
+        );
+        assert!(rt.plan_buckets("nonesuch", 1).is_err());
+    }
+
+    #[test]
+    fn and_matches_scalar_reference() {
+        let Some(dir) = artifacts_dir() else { return };
+        let mut rt = XlaRuntime::load(dir).unwrap();
+        let mut rng = Pcg64::new(21);
+        let rows = 3u32;
+        let n = rows as usize * ROW_BYTES;
+        let mut a = vec![0u8; n];
+        let mut b = vec![0u8; n];
+        rng.fill_bytes(&mut a);
+        rng.fill_bytes(&mut b);
+        let got = rt.run_op("and", rows, &[&a, &b]).unwrap();
+        let want: Vec<u8> = a.iter().zip(&b).map(|(x, y)| x & y).collect();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn zero_and_copy_and_not() {
+        let Some(dir) = artifacts_dir() else { return };
+        let mut rt = XlaRuntime::load(dir).unwrap();
+        let mut rng = Pcg64::new(22);
+        let n = ROW_BYTES;
+        let mut a = vec![0u8; n];
+        rng.fill_bytes(&mut a);
+        assert_eq!(rt.run_op("zero", 1, &[]).unwrap(), vec![0u8; n]);
+        assert_eq!(rt.run_op("copy", 1, &[&a]).unwrap(), a);
+        let not: Vec<u8> = a.iter().map(|x| !x).collect();
+        assert_eq!(rt.run_op("not", 1, &[&a]).unwrap(), not);
+    }
+
+    #[test]
+    fn bitmap_scan_counts_bits() {
+        let Some(dir) = artifacts_dir() else { return };
+        let mut rt = XlaRuntime::load(dir).unwrap();
+        let n = 2 * ROW_BYTES;
+        let a = vec![0xFFu8; n];
+        let mut b = vec![0u8; n];
+        b[0] = 0b1011;
+        b[ROW_BYTES] = 0xFF;
+        let got = rt.bitmap_scan(2, &a, &b).unwrap();
+        assert_eq!(got, 3 + 8);
+    }
+
+    #[test]
+    fn run_op_validates_sizes() {
+        let Some(dir) = artifacts_dir() else { return };
+        let mut rt = XlaRuntime::load(dir).unwrap();
+        let a = vec![0u8; 100];
+        assert!(rt.run_op("and", 1, &[&a, &a]).is_err());
+    }
+}

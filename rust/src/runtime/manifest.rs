@@ -1,0 +1,110 @@
+//! Artifact manifest parsing.
+//!
+//! `python -m compile.aot` writes `artifacts/manifest.tsv` describing
+//! every lowered HLO module (name, op, rows bucket, lanes, arity,
+//! dtype, file). The manifest is the build-time contract between L2
+//! and this runtime: the executable cache loads exactly what it lists.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+/// One artifact entry.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ManifestEntry {
+    pub name: String,
+    pub op: String,
+    pub rows: u32,
+    pub lanes: u32,
+    pub arity: usize,
+    pub dtype: String,
+    pub path: PathBuf,
+}
+
+/// Parse `manifest.tsv` in `dir`; paths are resolved relative to it.
+pub fn load(dir: impl AsRef<Path>) -> Result<Vec<ManifestEntry>> {
+    let dir = dir.as_ref();
+    let path = dir.join("manifest.tsv");
+    let text = std::fs::read_to_string(&path)
+        .with_context(|| format!("reading {} (run `make artifacts`)", path.display()))?;
+    parse(&text, dir)
+}
+
+fn parse(text: &str, dir: &Path) -> Result<Vec<ManifestEntry>> {
+    let mut entries = Vec::new();
+    for (lineno, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let cols: Vec<&str> = line.split('\t').collect();
+        if cols.len() != 7 {
+            bail!(
+                "manifest line {} has {} columns, want 7: {line:?}",
+                lineno + 1,
+                cols.len()
+            );
+        }
+        entries.push(ManifestEntry {
+            name: cols[0].to_string(),
+            op: cols[1].to_string(),
+            rows: cols[2].parse().context("rows column")?,
+            lanes: cols[3].parse().context("lanes column")?,
+            arity: cols[4].parse().context("arity column")?,
+            dtype: cols[5].to_string(),
+            path: dir.join(cols[6]),
+        });
+    }
+    if entries.is_empty() {
+        bail!("manifest is empty");
+    }
+    Ok(entries)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+# name\top\trows\tlanes\tarity\tdtype\tfile
+and_r1\tand\t1\t2048\t2\ti32\tand_r1.hlo.txt
+zero_r64\tzero\t64\t2048\t0\ti32\tzero_r64.hlo.txt
+";
+
+    #[test]
+    fn parses_sample() {
+        let es = parse(SAMPLE, Path::new("/tmp/a")).unwrap();
+        assert_eq!(es.len(), 2);
+        assert_eq!(es[0].name, "and_r1");
+        assert_eq!(es[0].arity, 2);
+        assert_eq!(es[1].rows, 64);
+        assert_eq!(es[1].path, Path::new("/tmp/a/zero_r64.hlo.txt"));
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(parse("bad line\n", Path::new(".")).is_err());
+        assert!(parse("", Path::new(".")).is_err());
+        assert!(parse("# only comments\n", Path::new(".")).is_err());
+    }
+
+    #[test]
+    fn loads_real_artifacts_if_present() {
+        // integration smoke: if the build produced artifacts, the
+        // manifest must parse and include every PudOp kernel.
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !dir.join("manifest.tsv").exists() {
+            return; // artifacts not built in this environment
+        }
+        let es = load(&dir).unwrap();
+        for op in ["and", "or", "xor", "not", "copy", "zero"] {
+            assert!(
+                es.iter().any(|e| e.op == op),
+                "missing artifacts for op {op}"
+            );
+        }
+        for e in &es {
+            assert!(e.path.exists(), "missing file {}", e.path.display());
+        }
+    }
+}

@@ -1,0 +1,14 @@
+//! XLA/PJRT runtime for the CPU-fallback path.
+//!
+//! * [`manifest`] — build-time contract: parses `artifacts/manifest.tsv`.
+//! * [`client`] — [`client::XlaRuntime`]: PJRT CPU client, per-(op,
+//!   bucket) executable cache, greedy shape bucketing, byte-level I/O.
+//!
+//! The runtime is optional at the API level (simulation-only runs use
+//! the scalar fallback in [`crate::pud::exec`]); the end-to-end driver
+//! and the benchmarks load it so the full three-layer stack executes.
+
+pub mod client;
+pub mod manifest;
+
+pub use client::{XlaRuntime, LANES, ROW_BYTES};

@@ -1,0 +1,148 @@
+//! Wall-clock micro-benchmark harness (criterion is not in the offline
+//! vendor set — DESIGN.md §7).
+//!
+//! Used by every `[[bench]]` target (`harness = false`): warmup, fixed
+//! iteration count or time budget, and a [`Summary`] over per-iteration
+//! wall-clock samples. Output format is one line per benchmark plus an
+//! optional markdown table, so `cargo bench` logs read like criterion's.
+
+use std::time::{Duration, Instant};
+
+use super::stats::Summary;
+use super::units::fmt_ns;
+
+/// Harness configuration.
+#[derive(Debug, Clone)]
+pub struct BenchOpts {
+    pub warmup_iters: u32,
+    pub min_iters: u32,
+    /// Stop adding iterations once this much time has been spent
+    /// (after `min_iters` is satisfied).
+    pub max_time: Duration,
+}
+
+impl Default for BenchOpts {
+    fn default() -> Self {
+        Self {
+            warmup_iters: 3,
+            min_iters: 10,
+            max_time: Duration::from_secs(3),
+        }
+    }
+}
+
+impl BenchOpts {
+    /// Fast settings for quick smoke runs (`PUMA_BENCH_FAST=1`).
+    pub fn fast() -> Self {
+        Self {
+            warmup_iters: 1,
+            min_iters: 3,
+            max_time: Duration::from_millis(300),
+        }
+    }
+
+    /// Pick opts from the environment (used by all bench mains so CI
+    /// can run benches quickly).
+    pub fn from_env() -> Self {
+        if std::env::var("PUMA_BENCH_FAST").is_ok() {
+            Self::fast()
+        } else {
+            Self::default()
+        }
+    }
+}
+
+/// Result of one benchmark: wall-clock summary in nanoseconds.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub wall_ns: Summary,
+}
+
+impl BenchResult {
+    pub fn line(&self) -> String {
+        format!(
+            "{:<44} mean {:>12}  p50 {:>12}  p99 {:>12}  ({} iters)",
+            self.name,
+            fmt_ns(self.wall_ns.mean),
+            fmt_ns(self.wall_ns.p50),
+            fmt_ns(self.wall_ns.p99),
+            self.wall_ns.n
+        )
+    }
+}
+
+/// Run `f` under the harness and report per-iteration wall time.
+/// `f` receives the iteration index; use it to vary seeds if needed.
+pub fn bench(name: &str, opts: &BenchOpts, mut f: impl FnMut(u32)) -> BenchResult {
+    for i in 0..opts.warmup_iters {
+        f(i);
+    }
+    let mut samples = Vec::new();
+    let budget_start = Instant::now();
+    let mut i = 0;
+    loop {
+        let t0 = Instant::now();
+        f(i);
+        samples.push(t0.elapsed().as_nanos() as f64);
+        i += 1;
+        if i >= opts.min_iters && budget_start.elapsed() >= opts.max_time {
+            break;
+        }
+        // hard cap to keep pathological cases bounded
+        if i >= 100_000 {
+            break;
+        }
+    }
+    let res = BenchResult {
+        name: name.to_string(),
+        wall_ns: Summary::of(&samples),
+    };
+    println!("{}", res.line());
+    res
+}
+
+/// Black-box helper to prevent the optimizer from deleting work.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runs_min_iters() {
+        let opts = BenchOpts {
+            warmup_iters: 1,
+            min_iters: 5,
+            max_time: Duration::ZERO,
+        };
+        let mut count = 0;
+        let res = bench("t", &opts, |_| count += 1);
+        assert_eq!(res.wall_ns.n, 5);
+        assert_eq!(count, 6); // warmup + 5
+    }
+
+    #[test]
+    fn respects_time_budget() {
+        let opts = BenchOpts {
+            warmup_iters: 0,
+            min_iters: 1,
+            max_time: Duration::from_millis(30),
+        };
+        let res = bench("sleepy", &opts, |_| {
+            std::thread::sleep(Duration::from_millis(10))
+        });
+        // ~3-4 iterations fit the budget; certainly < 20
+        assert!(res.wall_ns.n >= 1 && res.wall_ns.n < 20);
+    }
+
+    #[test]
+    fn fast_opts_from_env() {
+        // from_env without the var set == default
+        let d = BenchOpts::from_env();
+        assert_eq!(d.min_iters, BenchOpts::default().min_iters);
+    }
+}

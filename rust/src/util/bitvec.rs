@@ -1,0 +1,199 @@
+//! Compact bit vector used by the frame allocator and workload bitmaps.
+
+/// Fixed-capacity bit vector over u64 words.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct BitVec {
+    words: Vec<u64>,
+    len: usize,
+}
+
+impl BitVec {
+    /// All-zeros bit vector of `len` bits.
+    pub fn zeros(len: usize) -> Self {
+        Self {
+            words: vec![0; len.div_ceil(64)],
+            len,
+        }
+    }
+
+    /// All-ones bit vector of `len` bits.
+    pub fn ones(len: usize) -> Self {
+        let mut v = Self {
+            words: vec![u64::MAX; len.div_ceil(64)],
+            len,
+        };
+        v.clear_tail();
+        v
+    }
+
+    fn clear_tail(&mut self) {
+        let tail = self.len % 64;
+        if tail != 0 {
+            if let Some(last) = self.words.last_mut() {
+                *last &= (1u64 << tail) - 1;
+            }
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize) -> bool {
+        assert!(i < self.len, "bit index {i} out of range {}", self.len);
+        (self.words[i / 64] >> (i % 64)) & 1 == 1
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, v: bool) {
+        assert!(i < self.len, "bit index {i} out of range {}", self.len);
+        let (w, b) = (i / 64, i % 64);
+        if v {
+            self.words[w] |= 1 << b;
+        } else {
+            self.words[w] &= !(1 << b);
+        }
+    }
+
+    /// Number of set bits.
+    pub fn count_ones(&self) -> usize {
+        self.words.iter().map(|w| w.count_ones() as usize).sum()
+    }
+
+    /// Index of the first zero bit, if any.
+    pub fn first_zero(&self) -> Option<usize> {
+        for (wi, &w) in self.words.iter().enumerate() {
+            if w != u64::MAX {
+                let b = (!w).trailing_zeros() as usize;
+                let i = wi * 64 + b;
+                if i < self.len {
+                    return Some(i);
+                }
+            }
+        }
+        None
+    }
+
+    /// Index of the first set bit at or after `from`, if any.
+    pub fn next_one(&self, from: usize) -> Option<usize> {
+        if from >= self.len {
+            return None;
+        }
+        let mut wi = from / 64;
+        let mut w = self.words[wi] & (u64::MAX << (from % 64));
+        loop {
+            if w != 0 {
+                let i = wi * 64 + w.trailing_zeros() as usize;
+                return (i < self.len).then_some(i);
+            }
+            wi += 1;
+            if wi >= self.words.len() {
+                return None;
+            }
+            w = self.words[wi];
+        }
+    }
+
+    /// In-place bitwise AND with another vector of the same length.
+    pub fn and_with(&mut self, other: &BitVec) {
+        assert_eq!(self.len, other.len);
+        for (a, b) in self.words.iter_mut().zip(&other.words) {
+            *a &= *b;
+        }
+    }
+
+    /// In-place bitwise OR with another vector of the same length.
+    pub fn or_with(&mut self, other: &BitVec) {
+        assert_eq!(self.len, other.len);
+        for (a, b) in self.words.iter_mut().zip(&other.words) {
+            *a |= *b;
+        }
+    }
+
+    /// Raw words (little-endian bit order), for bulk I/O into DRAM rows.
+    pub fn words(&self) -> &[u64] {
+        &self.words
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zeros_and_ones() {
+        let z = BitVec::zeros(130);
+        assert_eq!(z.count_ones(), 0);
+        assert_eq!(z.len(), 130);
+        let o = BitVec::ones(130);
+        assert_eq!(o.count_ones(), 130);
+        assert!(o.get(129));
+    }
+
+    #[test]
+    fn set_get_roundtrip() {
+        let mut v = BitVec::zeros(200);
+        for i in (0..200).step_by(7) {
+            v.set(i, true);
+        }
+        for i in 0..200 {
+            assert_eq!(v.get(i), i % 7 == 0, "bit {i}");
+        }
+        v.set(7, false);
+        assert!(!v.get(7));
+    }
+
+    #[test]
+    fn first_zero_scans_words() {
+        let mut v = BitVec::ones(100);
+        assert_eq!(v.first_zero(), None);
+        v.set(70, false);
+        assert_eq!(v.first_zero(), Some(70));
+        v.set(3, false);
+        assert_eq!(v.first_zero(), Some(3));
+    }
+
+    #[test]
+    fn next_one_across_word_boundary() {
+        let mut v = BitVec::zeros(150);
+        v.set(5, true);
+        v.set(130, true);
+        assert_eq!(v.next_one(0), Some(5));
+        assert_eq!(v.next_one(6), Some(130));
+        assert_eq!(v.next_one(131), None);
+        assert_eq!(v.next_one(149), None);
+    }
+
+    #[test]
+    fn tail_bits_do_not_leak() {
+        let v = BitVec::ones(65);
+        assert_eq!(v.count_ones(), 65);
+        assert_eq!(v.first_zero(), None);
+    }
+
+    #[test]
+    fn and_or_with() {
+        let mut a = BitVec::zeros(10);
+        let mut b = BitVec::zeros(10);
+        a.set(1, true);
+        a.set(2, true);
+        b.set(2, true);
+        b.set(3, true);
+        let mut and = a.clone();
+        and.and_with(&b);
+        assert!(!and.get(1) && and.get(2) && !and.get(3));
+        a.or_with(&b);
+        assert!(a.get(1) && a.get(2) && a.get(3));
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn oob_get_panics() {
+        BitVec::zeros(8).get(8);
+    }
+}

@@ -1,0 +1,138 @@
+//! ASCII charts for terminal-rendered figures.
+//!
+//! `report/` uses these to draw the paper's Figure 2 (speedup vs
+//! allocation size, one series per micro-benchmark) directly in the
+//! terminal, alongside the CSV the plots can be regenerated from.
+
+/// A horizontal bar chart: one labeled bar per entry, scaled to
+/// `width` characters at the maximum value.
+pub fn bar_chart(entries: &[(String, f64)], width: usize) -> String {
+    if entries.is_empty() {
+        return String::new();
+    }
+    let maxv = entries
+        .iter()
+        .map(|(_, v)| *v)
+        .fold(f64::NEG_INFINITY, f64::max)
+        .max(1e-12);
+    let label_w = entries.iter().map(|(l, _)| l.len()).max().unwrap_or(0);
+    let mut out = String::new();
+    for (label, v) in entries {
+        let n = ((v / maxv) * width as f64).round().max(0.0) as usize;
+        out.push_str(&format!(
+            "{label:<label_w$} | {}{} {v:.2}\n",
+            "#".repeat(n),
+            " ".repeat(width - n.min(width)),
+        ));
+    }
+    out
+}
+
+/// Multi-series line chart on a character grid. X positions are evenly
+/// spaced sample indices (the sweeps are log-spaced in size, so even
+/// spacing == log axis). Each series gets a distinct glyph.
+pub fn line_chart(
+    x_labels: &[String],
+    series: &[(String, Vec<f64>)],
+    height: usize,
+) -> String {
+    if series.is_empty() || series[0].1.is_empty() {
+        return String::new();
+    }
+    let glyphs = ['*', 'o', '+', 'x', '@', '%'];
+    let npts = series[0].1.len();
+    let maxv = series
+        .iter()
+        .flat_map(|(_, ys)| ys.iter().copied())
+        .fold(f64::NEG_INFINITY, f64::max)
+        .max(1e-12);
+    let col_w = 6usize;
+    let width = npts * col_w;
+    let mut grid = vec![vec![' '; width]; height];
+    for (si, (_, ys)) in series.iter().enumerate() {
+        let g = glyphs[si % glyphs.len()];
+        for (i, &y) in ys.iter().enumerate() {
+            let row = if maxv <= 0.0 {
+                height - 1
+            } else {
+                let frac = (y / maxv).clamp(0.0, 1.0);
+                height - 1 - ((frac * (height - 1) as f64).round() as usize)
+            };
+            let col = i * col_w + col_w / 2;
+            grid[row][col] = g;
+        }
+    }
+    let mut out = String::new();
+    for (ri, row) in grid.iter().enumerate() {
+        let yv = maxv * (height - 1 - ri) as f64 / (height - 1) as f64;
+        out.push_str(&format!("{yv:>8.1} |"));
+        out.extend(row.iter());
+        out.push('\n');
+    }
+    out.push_str(&format!("{:>8} +{}\n", "", "-".repeat(width)));
+    let mut xaxis = format!("{:>9}", "");
+    for l in x_labels.iter().take(npts) {
+        xaxis.push_str(&format!("{l:^col_w$}"));
+    }
+    out.push_str(&xaxis);
+    out.push('\n');
+    let legend: Vec<String> = series
+        .iter()
+        .enumerate()
+        .map(|(i, (name, _))| format!("{} {name}", glyphs[i % glyphs.len()]))
+        .collect();
+    out.push_str(&format!("{:>9}legend: {}\n", "", legend.join("   ")));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bar_chart_scales_to_max() {
+        let s = bar_chart(
+            &[("a".into(), 10.0), ("bb".into(), 5.0)],
+            20,
+        );
+        let lines: Vec<&str> = s.lines().collect();
+        assert_eq!(lines.len(), 2);
+        assert_eq!(lines[0].matches('#').count(), 20);
+        assert_eq!(lines[1].matches('#').count(), 10);
+        // labels padded to equal width
+        assert!(lines[0].starts_with("a  |") || lines[0].starts_with("a "));
+    }
+
+    #[test]
+    fn bar_chart_empty() {
+        assert_eq!(bar_chart(&[], 10), "");
+    }
+
+    #[test]
+    fn line_chart_plots_all_series() {
+        // series names avoid the glyph characters so counts are exact
+        let s = line_chart(
+            &["1".into(), "2".into(), "3".into()],
+            &[
+                ("rise".into(), vec![1.0, 2.0, 3.0]),
+                ("fall".into(), vec![3.0, 2.0, 1.0]),
+            ],
+            5,
+        );
+        // later series may overwrite colliding grid cells of earlier
+        // ones, so the first series shows >= 2 points (+1 legend glyph)
+        assert!(s.matches('*').count() >= 3);
+        assert_eq!(s.matches('o').count(), 4); // 3 points + legend glyph
+        assert!(s.contains("legend: * rise   o fall"));
+    }
+
+    #[test]
+    fn line_chart_handles_flat_zero() {
+        let s = line_chart(
+            &["a".into()],
+            &[("z".into(), vec![0.0])],
+            3,
+        );
+        assert!(s.contains('*'));
+    }
+}

@@ -1,0 +1,113 @@
+//! Minimal CSV writing (RFC-4180 quoting) for experiment outputs.
+//!
+//! Every bench target writes its raw series as CSV next to the
+//! rendered table so figures can be regenerated outside the terminal.
+
+use std::fs;
+use std::io::Write as _;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+/// In-memory CSV document.
+#[derive(Debug, Default, Clone)]
+pub struct Csv {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+fn quote(field: &str) -> String {
+    if field.contains(',') || field.contains('"') || field.contains('\n') {
+        format!("\"{}\"", field.replace('"', "\"\""))
+    } else {
+        field.to_string()
+    }
+}
+
+impl Csv {
+    pub fn new<S: Into<String>>(header: Vec<S>) -> Self {
+        Self {
+            header: header.into_iter().map(Into::into).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row<S: Into<String>>(&mut self, cells: Vec<S>) -> &mut Self {
+        let cells: Vec<String> = cells.into_iter().map(Into::into).collect();
+        assert_eq!(cells.len(), self.header.len(), "CSV row width mismatch");
+        self.rows.push(cells);
+        self
+    }
+
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        out.push_str(
+            &self
+                .header
+                .iter()
+                .map(|f| quote(f))
+                .collect::<Vec<_>>()
+                .join(","),
+        );
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(
+                &row.iter().map(|f| quote(f)).collect::<Vec<_>>().join(","),
+            );
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Write to `path`, creating parent directories.
+    pub fn write(&self, path: impl AsRef<Path>) -> Result<()> {
+        let path = path.as_ref();
+        if let Some(dir) = path.parent() {
+            fs::create_dir_all(dir)
+                .with_context(|| format!("mkdir -p {}", dir.display()))?;
+        }
+        let mut f = fs::File::create(path)
+            .with_context(|| format!("create {}", path.display()))?;
+        f.write_all(self.render().as_bytes())?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_plain() {
+        let mut c = Csv::new(vec!["a", "b"]);
+        c.row(vec!["1", "2"]);
+        assert_eq!(c.render(), "a,b\n1,2\n");
+    }
+
+    #[test]
+    fn quotes_specials() {
+        let mut c = Csv::new(vec!["x"]);
+        c.row(vec!["has,comma"]);
+        c.row(vec!["has\"quote"]);
+        let s = c.render();
+        assert!(s.contains("\"has,comma\""));
+        assert!(s.contains("\"has\"\"quote\""));
+    }
+
+    #[test]
+    #[should_panic(expected = "width mismatch")]
+    fn width_mismatch_panics() {
+        Csv::new(vec!["a", "b"]).row(vec!["1"]);
+    }
+
+    #[test]
+    fn writes_file() {
+        let dir = std::env::temp_dir().join("puma_csv_test");
+        let path = dir.join("out.csv");
+        let mut c = Csv::new(vec!["k"]);
+        c.row(vec!["v"]);
+        c.write(&path).unwrap();
+        assert_eq!(fs::read_to_string(&path).unwrap(), "k\nv\n");
+        let _ = fs::remove_dir_all(dir);
+    }
+}

@@ -1,0 +1,16 @@
+//! Support utilities.
+//!
+//! The offline vendor set ships only the `xla` crate's dependency
+//! closure, so the helpers a project would normally pull from
+//! crates.io (`rand`, `criterion`, `prettytable`, `csv`, …) are
+//! implemented here (see DESIGN.md §7).
+
+pub mod bench;
+pub mod bitvec;
+pub mod chart;
+pub mod csvio;
+pub mod logging;
+pub mod rng;
+pub mod stats;
+pub mod table;
+pub mod units;

@@ -1,0 +1,144 @@
+//! Summary statistics over f64 samples (mean/std/percentiles).
+
+/// Summary of a sample set. Percentiles use the nearest-rank method on
+/// the sorted samples.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub p50: f64,
+    pub p95: f64,
+    pub p99: f64,
+    pub max: f64,
+    pub sum: f64,
+}
+
+impl Summary {
+    pub fn of(samples: &[f64]) -> Summary {
+        assert!(!samples.is_empty(), "Summary::of on empty sample set");
+        let mut sorted: Vec<f64> = samples.to_vec();
+        sorted.sort_by(|a, b| a.partial_cmp(b).expect("NaN sample"));
+        let n = sorted.len();
+        let sum: f64 = sorted.iter().sum();
+        let mean = sum / n as f64;
+        let var = if n > 1 {
+            sorted.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>()
+                / (n - 1) as f64
+        } else {
+            0.0
+        };
+        let pct = |p: f64| -> f64 {
+            let rank = ((p / 100.0) * n as f64).ceil() as usize;
+            sorted[rank.clamp(1, n) - 1]
+        };
+        Summary {
+            n,
+            mean,
+            std: var.sqrt(),
+            min: sorted[0],
+            p50: pct(50.0),
+            p95: pct(95.0),
+            p99: pct(99.0),
+            max: sorted[n - 1],
+            sum,
+        }
+    }
+}
+
+/// Online counter for ratios (hits / total) with helpers used by the
+/// motivation study (fraction of PUD-executable operations).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct HitRate {
+    pub hits: u64,
+    pub total: u64,
+}
+
+impl HitRate {
+    pub fn record(&mut self, hit: bool) {
+        self.hits += hit as u64;
+        self.total += 1;
+    }
+
+    pub fn merge(&mut self, other: HitRate) {
+        self.hits += other.hits;
+        self.total += other.total;
+    }
+
+    pub fn ratio(&self) -> f64 {
+        if self.total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / self.total as f64
+        }
+    }
+
+    pub fn percent(&self) -> f64 {
+        self.ratio() * 100.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_single_sample() {
+        let s = Summary::of(&[3.0]);
+        assert_eq!(s.n, 1);
+        assert_eq!(s.mean, 3.0);
+        assert_eq!(s.std, 0.0);
+        assert_eq!(s.min, 3.0);
+        assert_eq!(s.p50, 3.0);
+        assert_eq!(s.max, 3.0);
+    }
+
+    #[test]
+    fn summary_known_values() {
+        let xs: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        let s = Summary::of(&xs);
+        assert_eq!(s.n, 100);
+        assert!((s.mean - 50.5).abs() < 1e-12);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 100.0);
+        assert_eq!(s.p50, 50.0);
+        assert_eq!(s.p95, 95.0);
+        assert_eq!(s.p99, 99.0);
+        // sample std of 1..=100 is ~29.0115
+        assert!((s.std - 29.011491975882016).abs() < 1e-9);
+    }
+
+    #[test]
+    fn summary_order_invariant() {
+        let a = Summary::of(&[5.0, 1.0, 3.0]);
+        let b = Summary::of(&[1.0, 3.0, 5.0]);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    #[should_panic(expected = "empty")]
+    fn summary_empty_panics() {
+        let _ = Summary::of(&[]);
+    }
+
+    #[test]
+    fn hitrate_basic() {
+        let mut h = HitRate::default();
+        assert_eq!(h.ratio(), 0.0);
+        h.record(true);
+        h.record(false);
+        h.record(true);
+        h.record(true);
+        assert_eq!(h.hits, 3);
+        assert_eq!(h.total, 4);
+        assert!((h.percent() - 75.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn hitrate_merge() {
+        let mut a = HitRate { hits: 1, total: 2 };
+        a.merge(HitRate { hits: 3, total: 4 });
+        assert_eq!(a, HitRate { hits: 4, total: 6 });
+    }
+}

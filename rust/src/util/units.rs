@@ -1,0 +1,137 @@
+//! Size parsing and formatting (bits and bytes).
+//!
+//! The paper sweeps allocation sizes "from 2000 bits to 6 Mb", i.e. it
+//! mixes bit- and byte-denominated sizes; the CLI and the sweep
+//! configs accept both (`2000b`, `2Kib`, `8KiB`, `2MB`, `1GiB`).
+
+use anyhow::{anyhow, bail, Result};
+
+/// Parse a size string into **bytes**.
+///
+/// Suffix grammar (case-sensitive on the final `b`/`B`):
+/// * `B`, `KB`/`KiB`, `MB`/`MiB`, `GB`/`GiB` — bytes (binary multiples;
+///   the paper's sizes are powers of two so KB == KiB here)
+/// * `b`, `Kb`/`Kib`, `Mb`/`Mib`, `Gb`/`Gib` — **bits**, rounded up to
+///   whole bytes
+/// * bare number — bytes
+pub fn parse_size(s: &str) -> Result<u64> {
+    let s = s.trim();
+    if s.is_empty() {
+        bail!("empty size string");
+    }
+    let split = s
+        .find(|c: char| !(c.is_ascii_digit() || c == '_'))
+        .unwrap_or(s.len());
+    let (num, suffix) = s.split_at(split);
+    let num: u64 = num
+        .replace('_', "")
+        .parse()
+        .map_err(|e| anyhow!("bad size number {s:?}: {e}"))?;
+    let (mult, bits) = match suffix.trim() {
+        "" | "B" => (1, false),
+        "b" | "bit" | "bits" => (1, true),
+        "KB" | "KiB" | "K" => (1 << 10, false),
+        "Kb" | "Kib" => (1 << 10, true),
+        "MB" | "MiB" | "M" => (1 << 20, false),
+        "Mb" | "Mib" => (1 << 20, true),
+        "GB" | "GiB" | "G" => (1 << 30, false),
+        "Gb" | "Gib" => (1 << 30, true),
+        other => bail!("unknown size suffix {other:?} in {s:?}"),
+    };
+    let raw = num
+        .checked_mul(mult)
+        .ok_or_else(|| anyhow!("size overflow: {s:?}"))?;
+    Ok(if bits { raw.div_ceil(8) } else { raw })
+}
+
+/// Format a byte count with a binary suffix (`12.5 KiB`).
+pub fn fmt_bytes(bytes: u64) -> String {
+    const UNITS: [&str; 5] = ["B", "KiB", "MiB", "GiB", "TiB"];
+    let mut v = bytes as f64;
+    let mut u = 0;
+    while v >= 1024.0 && u + 1 < UNITS.len() {
+        v /= 1024.0;
+        u += 1;
+    }
+    if u == 0 {
+        format!("{bytes} B")
+    } else if (v - v.round()).abs() < 1e-9 {
+        format!("{} {}", v.round() as u64, UNITS[u])
+    } else {
+        format!("{v:.1} {}", UNITS[u])
+    }
+}
+
+/// Format a nanosecond count human-readably (`1.25 ms`).
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.0} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} us", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_bytes() {
+        assert_eq!(parse_size("0").unwrap(), 0);
+        assert_eq!(parse_size("123").unwrap(), 123);
+        assert_eq!(parse_size("4KB").unwrap(), 4096);
+        assert_eq!(parse_size("4KiB").unwrap(), 4096);
+        assert_eq!(parse_size("2MB").unwrap(), 2 << 20);
+        assert_eq!(parse_size("1GiB").unwrap(), 1 << 30);
+        assert_eq!(parse_size("1_024").unwrap(), 1024);
+    }
+
+    #[test]
+    fn parses_bits_rounding_up() {
+        assert_eq!(parse_size("2000b").unwrap(), 250);
+        assert_eq!(parse_size("2001b").unwrap(), 251);
+        assert_eq!(parse_size("2Kib").unwrap(), 256);
+        // the paper's top size: 6 Mb = 6 * 2^20 bits = 786432 bytes
+        assert_eq!(parse_size("6Mb").unwrap(), 6 * (1 << 20) / 8);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(parse_size("").is_err());
+        assert!(parse_size("abc").is_err());
+        assert!(parse_size("12XB").is_err());
+        assert!(parse_size("999999999999GB").is_err());
+    }
+
+    #[test]
+    fn formats_bytes() {
+        assert_eq!(fmt_bytes(512), "512 B");
+        assert_eq!(fmt_bytes(4096), "4 KiB");
+        assert_eq!(fmt_bytes(786432), "768 KiB");
+        assert_eq!(fmt_bytes(3 << 20), "3 MiB");
+        assert_eq!(fmt_bytes(1536), "1.5 KiB");
+    }
+
+    #[test]
+    fn formats_ns() {
+        assert_eq!(fmt_ns(500.0), "500 ns");
+        assert_eq!(fmt_ns(1500.0), "1.50 us");
+        assert_eq!(fmt_ns(2.5e6), "2.50 ms");
+        assert_eq!(fmt_ns(3.2e9), "3.200 s");
+    }
+
+    #[test]
+    fn roundtrip_pow2() {
+        for shift in 0..30 {
+            let n = 1u64 << shift;
+            let s = fmt_bytes(n);
+            // formatted power-of-two sizes re-parse to the same value
+            let compact: String = s.split_whitespace().collect();
+            assert_eq!(parse_size(&compact).unwrap(), n, "{s}");
+        }
+    }
+}

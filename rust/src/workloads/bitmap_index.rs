@@ -1,0 +1,196 @@
+//! Bitmap-index query workload.
+//!
+//! The database scenario motivating Ambit-class PUD: a table keeps one
+//! bitmap per attribute value; a conjunctive query ANDs the relevant
+//! bitmaps and counts the survivors. With PUMA placement the ANDs run
+//! in-DRAM; with malloc placement every AND streams to the CPU.
+//!
+//! Used by examples/bitmap_index.rs and examples/database_scan.rs.
+
+use anyhow::Result;
+
+use crate::alloc::traits::Allocator;
+use crate::coordinator::system::System;
+use crate::os::process::Pid;
+use crate::pud::isa::{BulkRequest, PudOp};
+use crate::util::rng::Pcg64;
+
+/// A bitmap index over `rows` table rows with one bitmap per value.
+pub struct BitmapIndex {
+    pub pid: Pid,
+    /// (value label, VA of its bitmap)
+    pub bitmaps: Vec<(String, u64)>,
+    /// scratch destination bitmap for query evaluation
+    pub scratch: u64,
+    /// bitmap length in bytes
+    pub len: u64,
+    /// ground-truth bits for verification, one Vec<u8> per bitmap
+    truth: Vec<Vec<u8>>,
+}
+
+impl BitmapIndex {
+    /// Build an index: `values` bitmaps over `table_rows` rows, each
+    /// bit set with probability `density`. The first bitmap is
+    /// allocated with `alloc` and the rest are hint-aligned to it.
+    pub fn build(
+        sys: &mut System,
+        alloc: &mut dyn Allocator,
+        pid: Pid,
+        values: &[&str],
+        table_rows: u64,
+        density: f64,
+        seed: u64,
+    ) -> Result<BitmapIndex> {
+        let len = table_rows.div_ceil(8);
+        let mut rng = Pcg64::new(seed);
+        let mut bitmaps = Vec::with_capacity(values.len());
+        let mut truth = Vec::with_capacity(values.len());
+        let mut first = None;
+        for v in values {
+            let va = match first {
+                None => {
+                    let va = sys.alloc(alloc, pid, len)?;
+                    first = Some(va);
+                    va
+                }
+                Some(f) => sys.alloc_align(alloc, pid, len, f)?,
+            };
+            let mut bits = vec![0u8; len as usize];
+            for byte in bits.iter_mut() {
+                for bit in 0..8 {
+                    if rng.chance(density) {
+                        *byte |= 1 << bit;
+                    }
+                }
+            }
+            sys.write_virt(pid, va, &bits)?;
+            bitmaps.push((v.to_string(), va));
+            truth.push(bits);
+        }
+        let scratch = sys.alloc_align(alloc, pid, len, first.expect("values nonempty"))?;
+        Ok(BitmapIndex {
+            pid,
+            bitmaps,
+            scratch,
+            len,
+            truth,
+        })
+    }
+
+    /// Evaluate a conjunctive query over bitmap indices `terms`
+    /// (indices into `self.bitmaps`): AND them into the scratch
+    /// bitmap. Returns (simulated ns, matching row count).
+    pub fn query_and(
+        &self,
+        sys: &mut System,
+        terms: &[usize],
+    ) -> Result<(f64, u64)> {
+        anyhow::ensure!(terms.len() >= 2, "need at least two terms");
+        let mut ns = 0.0;
+        // scratch = t0 AND t1
+        ns += sys.submit(
+            self.pid,
+            &BulkRequest::new(
+                PudOp::And,
+                self.scratch,
+                vec![self.bitmaps[terms[0]].1, self.bitmaps[terms[1]].1],
+                self.len,
+            ),
+        )?;
+        // scratch &= tk
+        for &t in &terms[2..] {
+            ns += sys.submit(
+                self.pid,
+                &BulkRequest::new(
+                    PudOp::And,
+                    self.scratch,
+                    vec![self.scratch, self.bitmaps[t].1],
+                    self.len,
+                ),
+            )?;
+        }
+        let out = sys.read_virt(self.pid, self.scratch, self.len)?;
+        let count: u64 = out.iter().map(|b| b.count_ones() as u64).sum();
+        Ok((ns, count))
+    }
+
+    /// Ground-truth count for the same query (host-side reference).
+    pub fn expected_count(&self, terms: &[usize]) -> u64 {
+        let mut acc = self.truth[terms[0]].clone();
+        for &t in &terms[1..] {
+            for (a, b) in acc.iter_mut().zip(&self.truth[t]) {
+                *a &= *b;
+            }
+        }
+        acc.iter().map(|b| b.count_ones() as u64).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::alloc::puma::{FitPolicy, PumaAlloc};
+    use crate::coordinator::system::SystemConfig;
+    use crate::dram::address::InterleaveScheme;
+    use crate::dram::geometry::DramGeometry;
+
+    fn sys() -> System {
+        let scheme = InterleaveScheme::row_major(DramGeometry {
+            channels: 1,
+            ranks_per_channel: 1,
+            banks_per_rank: 4,
+            subarrays_per_bank: 8,
+            rows_per_subarray: 256,
+            row_bytes: 8192,
+        });
+        System::boot(SystemConfig {
+            scheme,
+            huge_pages: 16,
+            churn_rounds: 1_000,
+            seed: 6,
+            artifacts: None,
+            ..Default::default()
+        })
+        .unwrap()
+    }
+
+    #[test]
+    fn query_counts_match_ground_truth() {
+        let mut sys = sys();
+        let pid = sys.spawn();
+        let mut puma = PumaAlloc::new(8192, FitPolicy::WorstFit);
+        puma.pim_preallocate(&mut sys.os, 10).unwrap();
+        let idx = BitmapIndex::build(
+            &mut sys,
+            &mut puma,
+            pid,
+            &["red", "large", "recent"],
+            512 * 1024, // bits -> 64 KiB bitmaps
+            0.3,
+            99,
+        )
+        .unwrap();
+        let (ns, count) = idx.query_and(&mut sys, &[0, 1, 2]).unwrap();
+        assert!(ns > 0.0);
+        assert_eq!(count, idx.expected_count(&[0, 1, 2]));
+        // ~0.3^3 density
+        let frac = count as f64 / (512.0 * 1024.0);
+        assert!((frac - 0.027).abs() < 0.005, "density {frac}");
+        // PUMA placement => queries run in-DRAM
+        assert!(sys.coord.stats.pud_row_fraction() > 0.9);
+    }
+
+    #[test]
+    fn two_term_query_minimum() {
+        let mut sys = sys();
+        let pid = sys.spawn();
+        let mut puma = PumaAlloc::new(8192, FitPolicy::WorstFit);
+        puma.pim_preallocate(&mut sys.os, 6).unwrap();
+        let idx =
+            BitmapIndex::build(&mut sys, &mut puma, pid, &["a", "b"], 65536, 0.5, 1)
+                .unwrap();
+        assert!(idx.query_and(&mut sys, &[0]).is_err());
+        let (_, count) = idx.query_and(&mut sys, &[0, 1]).unwrap();
+        assert_eq!(count, idx.expected_count(&[0, 1]));
+    }
+}

@@ -1,0 +1,348 @@
+//! The paper's three micro-benchmarks over any allocator.
+//!
+//! * `*-zero` — initialize an array with zeros (RowClone zero-init).
+//! * `*-copy` — copy one array into another (RowClone copy).
+//! * `*-aand` — `C[i] = A[i] AND B[i]` (Ambit).
+//!
+//! Allocation protocol (paper §2): the first operand uses `pim_alloc`
+//! (plain `alloc` on baselines); subsequent operands use
+//! `pim_alloc_align` with the first operand as the hint (baselines
+//! ignore the hint). Simulated time charges both the allocation path
+//! and the operation stream.
+
+use anyhow::Result;
+
+use crate::alloc::hugealloc::HugeAlloc;
+use crate::alloc::mallocsim::MallocSim;
+use crate::alloc::memalign::MemalignSim;
+use crate::alloc::puma::{FitPolicy, PumaAlloc};
+use crate::alloc::traits::{AllocStats, Allocator};
+use crate::coordinator::system::System;
+use crate::coordinator::CoordStats;
+use crate::pud::isa::{BulkRequest, PudOp};
+use crate::util::rng::Pcg64;
+
+/// Which micro-benchmark.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Micro {
+    Zero,
+    Copy,
+    Aand,
+}
+
+impl Micro {
+    pub const ALL: [Micro; 3] = [Micro::Zero, Micro::Copy, Micro::Aand];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Micro::Zero => "zero",
+            Micro::Copy => "copy",
+            Micro::Aand => "aand",
+        }
+    }
+
+    /// Number of operand arrays (dst included).
+    pub fn operands(&self) -> usize {
+        match self {
+            Micro::Zero => 1,
+            Micro::Copy => 2,
+            Micro::Aand => 3,
+        }
+    }
+
+    fn op(&self) -> PudOp {
+        match self {
+            Micro::Zero => PudOp::Zero,
+            Micro::Copy => PudOp::Copy,
+            Micro::Aand => PudOp::And,
+        }
+    }
+}
+
+/// Allocator selection for sweeps.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AllocatorKind {
+    Malloc,
+    Memalign,
+    HugePages,
+    Puma(FitPolicy),
+}
+
+impl AllocatorKind {
+    pub const BASELINES: [AllocatorKind; 3] = [
+        AllocatorKind::Malloc,
+        AllocatorKind::Memalign,
+        AllocatorKind::HugePages,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            AllocatorKind::Malloc => "malloc",
+            AllocatorKind::Memalign => "posix_memalign",
+            AllocatorKind::HugePages => "hugepages",
+            AllocatorKind::Puma(FitPolicy::WorstFit) => "puma",
+            AllocatorKind::Puma(FitPolicy::BestFit) => "puma-bestfit",
+            AllocatorKind::Puma(FitPolicy::FirstFit) => "puma-firstfit",
+        }
+    }
+
+    /// Instantiate; PUMA pre-allocates `puma_pages` huge pages.
+    pub fn build(
+        &self,
+        sys: &mut System,
+        puma_pages: usize,
+    ) -> Result<Box<dyn Allocator>> {
+        let row = sys.os.scheme.geometry.row_bytes as u64;
+        Ok(match self {
+            AllocatorKind::Malloc => Box::new(MallocSim::new()),
+            AllocatorKind::Memalign => Box::new(MemalignSim::new(row)),
+            AllocatorKind::HugePages => Box::new(HugeAlloc::new(row)),
+            AllocatorKind::Puma(policy) => {
+                let mut p = PumaAlloc::new(row, *policy);
+                p.pim_preallocate(&mut sys.os, puma_pages)?;
+                Box::new(p)
+            }
+        })
+    }
+}
+
+/// Result of one micro-benchmark configuration.
+#[derive(Debug, Clone)]
+pub struct MicrobenchResult {
+    pub micro: Micro,
+    pub allocator: &'static str,
+    pub size: u64,
+    pub reps: u32,
+    pub coord: CoordStats,
+    pub alloc: AllocStats,
+    /// Total simulated ns: allocation + operations.
+    pub sim_ns: f64,
+}
+
+impl MicrobenchResult {
+    pub fn pud_fraction(&self) -> f64 {
+        self.coord.pud_row_fraction()
+    }
+}
+
+/// Run one micro-benchmark: allocate operands with `kind`, run `reps`
+/// bulk ops of `size` bytes, optionally verify the memory image.
+pub fn run(
+    sys: &mut System,
+    kind: AllocatorKind,
+    micro: Micro,
+    size: u64,
+    reps: u32,
+    puma_pages: usize,
+    verify: bool,
+    seed: u64,
+) -> Result<MicrobenchResult> {
+    let pid = sys.spawn();
+    let mut alloc = kind.build(sys, puma_pages)?;
+    // pim_preallocate is boot-time setup (the huge-page pool analogue
+    // on the baseline side is likewise reserved at boot and not
+    // charged); measure allocation costs from here on.
+    let alloc_base_ns = alloc.stats().alloc_ns;
+    let stats_before = sys.coord.stats.clone();
+
+    // --- allocation phase (hint-chained, as the paper's API intends)
+    let n_ops = micro.operands();
+    let mut vas = Vec::with_capacity(n_ops);
+    let first = sys.alloc(alloc.as_mut(), pid, size)?;
+    vas.push(first);
+    for _ in 1..n_ops {
+        vas.push(sys.alloc_align(alloc.as_mut(), pid, size, first)?);
+    }
+
+    // --- seed the sources with deterministic data
+    let mut rng = Pcg64::new(seed);
+    let mut expected: Option<Vec<u8>> = None;
+    match micro {
+        Micro::Zero => {
+            // destination starts dirty so zeroing is observable
+            let dirty = vec![0xEEu8; size as usize];
+            sys.write_virt(pid, vas[0], &dirty)?;
+            if verify {
+                expected = Some(vec![0u8; size as usize]);
+            }
+        }
+        Micro::Copy => {
+            let mut a = vec![0u8; size as usize];
+            rng.fill_bytes(&mut a);
+            sys.write_virt(pid, vas[0], &a)?;
+            if verify {
+                expected = Some(a);
+            }
+        }
+        Micro::Aand => {
+            let mut a = vec![0u8; size as usize];
+            let mut b = vec![0u8; size as usize];
+            rng.fill_bytes(&mut a);
+            rng.fill_bytes(&mut b);
+            sys.write_virt(pid, vas[0], &a)?;
+            sys.write_virt(pid, vas[1], &b)?;
+            if verify {
+                expected = Some(a.iter().zip(&b).map(|(x, y)| x & y).collect());
+            }
+        }
+    }
+
+    // --- operation phase
+    let (dst, srcs) = match micro {
+        Micro::Zero => (vas[0], vec![]),
+        Micro::Copy => (vas[1], vec![vas[0]]),
+        Micro::Aand => (vas[2], vec![vas[0], vas[1]]),
+    };
+    let req = BulkRequest::new(micro.op(), dst, srcs, size);
+    let mut op_ns = 0.0;
+    for _ in 0..reps {
+        op_ns += sys.submit(pid, &req)?;
+    }
+
+    if let Some(want) = expected {
+        let got = sys.read_virt(pid, dst, size)?;
+        anyhow::ensure!(
+            got == want,
+            "{}-{} functional mismatch (size {size})",
+            kind.name(),
+            micro.name()
+        );
+    }
+
+    let coord = diff(&sys.coord.stats.clone(), &stats_before);
+    let mut alloc_stats = alloc.stats();
+    alloc_stats.alloc_ns -= alloc_base_ns;
+    let sim_ns = alloc_stats.alloc_ns + op_ns;
+    Ok(MicrobenchResult {
+        micro,
+        allocator: kind.name(),
+        size,
+        reps,
+        coord,
+        alloc: alloc_stats,
+        sim_ns,
+    })
+}
+
+fn diff(after: &CoordStats, before: &CoordStats) -> CoordStats {
+    CoordStats {
+        ops: after.ops - before.ops,
+        ops_fully_pud: crate::util::stats::HitRate {
+            hits: after.ops_fully_pud.hits - before.ops_fully_pud.hits,
+            total: after.ops_fully_pud.total - before.ops_fully_pud.total,
+        },
+        pud_rows: after.pud_rows - before.pud_rows,
+        fallback_rows: after.fallback_rows - before.fallback_rows,
+        pud_bytes: after.pud_bytes - before.pud_bytes,
+        fallback_bytes: after.fallback_bytes - before.fallback_bytes,
+        pud_ns: after.pud_ns - before.pud_ns,
+        fallback_ns: after.fallback_ns - before.fallback_ns,
+        alloc_ns: after.alloc_ns - before.alloc_ns,
+        xla_dispatches: after.xla_dispatches - before.xla_dispatches,
+        xla_wall_ns: after.xla_wall_ns - before.xla_wall_ns,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::system::SystemConfig;
+    use crate::dram::address::InterleaveScheme;
+    use crate::dram::geometry::DramGeometry;
+
+    fn small_system() -> System {
+        let scheme = InterleaveScheme::row_major(DramGeometry {
+            channels: 1,
+            ranks_per_channel: 1,
+            banks_per_rank: 4,
+            subarrays_per_bank: 8,
+            rows_per_subarray: 256,
+            row_bytes: 8192,
+        }); // 64 MiB
+        System::boot(SystemConfig {
+            scheme,
+            huge_pages: 12,
+            churn_rounds: 3_000,
+            seed: 1,
+            artifacts: None,
+            ..Default::default()
+        })
+        .unwrap()
+    }
+
+    #[test]
+    fn puma_aand_nearly_all_pud_and_correct() {
+        let mut sys = small_system();
+        let r = run(
+            &mut sys,
+            AllocatorKind::Puma(FitPolicy::WorstFit),
+            Micro::Aand,
+            256 * 1024,
+            2,
+            8,
+            true,
+            42,
+        )
+        .unwrap();
+        assert!(r.pud_fraction() > 0.95, "got {}", r.pud_fraction());
+        assert!(r.sim_ns > 0.0);
+    }
+
+    #[test]
+    fn malloc_aand_zero_pud_but_correct() {
+        let mut sys = small_system();
+        let r = run(
+            &mut sys,
+            AllocatorKind::Malloc,
+            Micro::Aand,
+            256 * 1024,
+            1,
+            0,
+            true,
+            42,
+        )
+        .unwrap();
+        assert!(r.pud_fraction() < 0.05, "got {}", r.pud_fraction());
+    }
+
+    #[test]
+    fn all_micros_all_allocators_verify() {
+        for micro in Micro::ALL {
+            for kind in [
+                AllocatorKind::Malloc,
+                AllocatorKind::Memalign,
+                AllocatorKind::HugePages,
+                AllocatorKind::Puma(FitPolicy::WorstFit),
+            ] {
+                let mut sys = small_system();
+                let r = run(&mut sys, kind, micro, 64 * 1024, 1, 8, true, 7)
+                    .unwrap_or_else(|e| {
+                        panic!("{}-{} failed: {e}", kind.name(), micro.name())
+                    });
+                assert_eq!(r.coord.ops, 1);
+            }
+        }
+    }
+
+    #[test]
+    fn puma_beats_malloc_in_sim_time_at_large_sizes() {
+        let size = 1 << 20;
+        let mut s1 = small_system();
+        let puma = run(
+            &mut s1,
+            AllocatorKind::Puma(FitPolicy::WorstFit),
+            Micro::Copy,
+            size,
+            4,
+            10,
+            false,
+            3,
+        )
+        .unwrap();
+        let mut s2 = small_system();
+        let malloc = run(&mut s2, AllocatorKind::Malloc, Micro::Copy, size, 4, 0, false, 3)
+            .unwrap();
+        let speedup = malloc.sim_ns / puma.sim_ns;
+        assert!(speedup > 2.0, "expected speedup > 2, got {speedup:.2}");
+    }
+}

@@ -1,0 +1,18 @@
+//! Workload generators.
+//!
+//! * [`microbench`] — the paper's three micro-benchmarks (`*-zero`,
+//!   `*-copy`, `*-aand`) over any allocator.
+//! * [`sweep`] — allocation-size sweeps (Figure 2 / motivation study).
+//! * [`trace`] — record/replay allocation+op traces for multi-process
+//!   fragmentation stress.
+//! * [`bitmap_index`] — bitmap-index query workload (the database
+//!   scenario motivating Ambit-class PUD).
+//! * [`setops`] — set algebra over bit-vector sets (SISA-like).
+
+pub mod bitmap_index;
+pub mod microbench;
+pub mod setops;
+pub mod sweep;
+pub mod trace;
+
+pub use microbench::{AllocatorKind, Micro, MicrobenchResult};

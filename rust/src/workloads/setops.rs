@@ -1,0 +1,228 @@
+//! Set algebra over bit-vector sets (SISA-style graph/set workload).
+//!
+//! Sets over a bounded universe are dense bit vectors; union,
+//! intersection, difference, and symmetric difference map directly
+//! onto the PUD op set (OR / AND / AND+NOT / XOR). This is the second
+//! application workload (after bitmap_index) exercising the public
+//! API the way the paper's motivating use cases do.
+
+use anyhow::Result;
+
+use crate::alloc::traits::Allocator;
+use crate::coordinator::system::System;
+use crate::os::process::Pid;
+use crate::pud::isa::{BulkRequest, PudOp};
+
+/// A set universe of `universe_bits` elements backed by PUD-placed
+/// bit vectors.
+pub struct SetUniverse {
+    pub pid: Pid,
+    pub len: u64,
+    first_va: Option<u64>,
+}
+
+/// Handle to one set.
+#[derive(Debug, Clone, Copy)]
+pub struct SetHandle {
+    pub va: u64,
+}
+
+impl SetUniverse {
+    pub fn new(universe_bits: u64, pid: Pid) -> Self {
+        Self {
+            pid,
+            len: universe_bits.div_ceil(8),
+            first_va: None,
+        }
+    }
+
+    /// Allocate an empty set (hint-aligned to the first one).
+    pub fn alloc_set(
+        &mut self,
+        sys: &mut System,
+        alloc: &mut dyn Allocator,
+    ) -> Result<SetHandle> {
+        let va = match self.first_va {
+            None => {
+                let va = sys.alloc(alloc, self.pid, self.len)?;
+                self.first_va = Some(va);
+                va
+            }
+            Some(f) => sys.alloc_align(alloc, self.pid, self.len, f)?,
+        };
+        Ok(SetHandle { va })
+    }
+
+    /// Populate a set from element ids.
+    pub fn fill(
+        &self,
+        sys: &mut System,
+        set: SetHandle,
+        elements: &[u64],
+    ) -> Result<()> {
+        let mut bits = vec![0u8; self.len as usize];
+        for &e in elements {
+            anyhow::ensure!(e / 8 < self.len, "element {e} outside universe");
+            bits[(e / 8) as usize] |= 1 << (e % 8);
+        }
+        sys.write_virt(self.pid, set.va, &bits)
+    }
+
+    /// Read a set's members back.
+    pub fn members(&self, sys: &mut System, set: SetHandle) -> Result<Vec<u64>> {
+        let bits = sys.read_virt(self.pid, set.va, self.len)?;
+        let mut out = Vec::new();
+        for (byte_idx, byte) in bits.iter().enumerate() {
+            let mut b = *byte;
+            while b != 0 {
+                let bit = b.trailing_zeros() as u64;
+                out.push(byte_idx as u64 * 8 + bit);
+                b &= b - 1;
+            }
+        }
+        Ok(out)
+    }
+
+    /// dst = a INTERSECT b. Returns simulated ns.
+    pub fn intersect(
+        &self,
+        sys: &mut System,
+        dst: SetHandle,
+        a: SetHandle,
+        b: SetHandle,
+    ) -> Result<f64> {
+        sys.submit(
+            self.pid,
+            &BulkRequest::new(PudOp::And, dst.va, vec![a.va, b.va], self.len),
+        )
+    }
+
+    /// dst = a UNION b.
+    pub fn union(
+        &self,
+        sys: &mut System,
+        dst: SetHandle,
+        a: SetHandle,
+        b: SetHandle,
+    ) -> Result<f64> {
+        sys.submit(
+            self.pid,
+            &BulkRequest::new(PudOp::Or, dst.va, vec![a.va, b.va], self.len),
+        )
+    }
+
+    /// dst = a SYMMETRIC-DIFFERENCE b.
+    pub fn sym_diff(
+        &self,
+        sys: &mut System,
+        dst: SetHandle,
+        a: SetHandle,
+        b: SetHandle,
+    ) -> Result<f64> {
+        sys.submit(
+            self.pid,
+            &BulkRequest::new(PudOp::Xor, dst.va, vec![a.va, b.va], self.len),
+        )
+    }
+
+    /// dst = a DIFFERENCE b, composed as a AND (NOT b) with a scratch
+    /// set for the complement.
+    pub fn difference(
+        &self,
+        sys: &mut System,
+        dst: SetHandle,
+        a: SetHandle,
+        b: SetHandle,
+        scratch: SetHandle,
+    ) -> Result<f64> {
+        let mut ns = sys.submit(
+            self.pid,
+            &BulkRequest::new(PudOp::Not, scratch.va, vec![b.va], self.len),
+        )?;
+        ns += sys.submit(
+            self.pid,
+            &BulkRequest::new(PudOp::And, dst.va, vec![a.va, scratch.va], self.len),
+        )?;
+        Ok(ns)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::alloc::puma::{FitPolicy, PumaAlloc};
+    use crate::coordinator::system::SystemConfig;
+    use crate::dram::address::InterleaveScheme;
+    use crate::dram::geometry::DramGeometry;
+
+    fn sys() -> System {
+        let scheme = InterleaveScheme::row_major(DramGeometry {
+            channels: 1,
+            ranks_per_channel: 1,
+            banks_per_rank: 4,
+            subarrays_per_bank: 8,
+            rows_per_subarray: 256,
+            row_bytes: 8192,
+        });
+        System::boot(SystemConfig {
+            scheme,
+            huge_pages: 16,
+            churn_rounds: 500,
+            seed: 12,
+            artifacts: None,
+            ..Default::default()
+        })
+        .unwrap()
+    }
+
+    #[test]
+    fn set_algebra_matches_reference() {
+        let mut sys = sys();
+        let pid = sys.spawn();
+        let mut puma = PumaAlloc::new(8192, FitPolicy::WorstFit);
+        puma.pim_preallocate(&mut sys.os, 10).unwrap();
+        let mut uni = SetUniverse::new(128 * 1024, pid);
+        let a = uni.alloc_set(&mut sys, &mut puma).unwrap();
+        let b = uni.alloc_set(&mut sys, &mut puma).unwrap();
+        let dst = uni.alloc_set(&mut sys, &mut puma).unwrap();
+        let scratch = uni.alloc_set(&mut sys, &mut puma).unwrap();
+        let xs: Vec<u64> = (0..1000).map(|i| i * 7 % 100_000).collect();
+        let ys: Vec<u64> = (0..1000).map(|i| i * 13 % 100_000).collect();
+        uni.fill(&mut sys, a, &xs).unwrap();
+        uni.fill(&mut sys, b, &ys).unwrap();
+
+        use std::collections::BTreeSet;
+        let sa: BTreeSet<u64> = xs.iter().copied().collect();
+        let sb: BTreeSet<u64> = ys.iter().copied().collect();
+
+        uni.intersect(&mut sys, dst, a, b).unwrap();
+        let got: BTreeSet<u64> = uni.members(&mut sys, dst).unwrap().into_iter().collect();
+        assert_eq!(got, &sa & &sb);
+
+        uni.union(&mut sys, dst, a, b).unwrap();
+        let got: BTreeSet<u64> = uni.members(&mut sys, dst).unwrap().into_iter().collect();
+        assert_eq!(got, &sa | &sb);
+
+        uni.sym_diff(&mut sys, dst, a, b).unwrap();
+        let got: BTreeSet<u64> = uni.members(&mut sys, dst).unwrap().into_iter().collect();
+        assert_eq!(got, &sa ^ &sb);
+
+        uni.difference(&mut sys, dst, a, b, scratch).unwrap();
+        let got: BTreeSet<u64> = uni.members(&mut sys, dst).unwrap().into_iter().collect();
+        assert_eq!(got, &sa - &sb);
+
+        // all of it in-DRAM under PUMA placement
+        assert!(sys.coord.stats.pud_row_fraction() > 0.9);
+    }
+
+    #[test]
+    fn fill_rejects_out_of_universe() {
+        let mut sys = sys();
+        let pid = sys.spawn();
+        let mut puma = PumaAlloc::new(8192, FitPolicy::WorstFit);
+        puma.pim_preallocate(&mut sys.os, 4).unwrap();
+        let mut uni = SetUniverse::new(1024, pid);
+        let s = uni.alloc_set(&mut sys, &mut puma).unwrap();
+        assert!(uni.fill(&mut sys, s, &[5000]).is_err());
+    }
+}

@@ -1,0 +1,232 @@
+//! Allocation-size sweeps — the driver behind Figure 2 and the §1
+//! motivation study.
+//!
+//! The paper sweeps "from 2000 bits to 6 Mb". We interpret the range
+//! as bit-denominated (2000 b = 250 B up to 6 Mb = 768 KiB) and sweep
+//! log-spaced sizes across it (plus a few beyond, to show saturation).
+
+use anyhow::Result;
+
+use crate::coordinator::system::{System, SystemConfig};
+use crate::dram::address::InterleaveScheme;
+
+use super::microbench::{self, AllocatorKind, Micro, MicrobenchResult};
+
+/// The paper's sweep sizes in bytes (2000 bits ... 6 Mb, log-spaced).
+pub fn paper_sizes() -> Vec<u64> {
+    vec![
+        250,        // 2000 bits
+        1 << 10,    // 8 Kb
+        4 << 10,    // 32 Kb
+        16 << 10,   // 128 Kb
+        64 << 10,   // 512 Kb
+        192 << 10,  // 1.5 Mb
+        384 << 10,  // 3 Mb
+        768 << 10,  // 6 Mb
+    ]
+}
+
+/// One sweep cell result.
+#[derive(Debug, Clone)]
+pub struct SweepCell {
+    pub result: MicrobenchResult,
+    /// malloc-baseline simulated ns for the same (micro, size) cell.
+    pub baseline_ns: f64,
+}
+
+impl SweepCell {
+    /// Speedup over the malloc baseline (Figure 2's y-axis).
+    pub fn speedup(&self) -> f64 {
+        self.baseline_ns / self.result.sim_ns
+    }
+}
+
+/// Sweep configuration.
+pub struct SweepConfig {
+    pub scheme: InterleaveScheme,
+    pub sizes: Vec<u64>,
+    pub reps: u32,
+    pub huge_pages: usize,
+    pub puma_pages: usize,
+    pub churn_rounds: usize,
+    pub seed: u64,
+    /// Artifacts dir: Some => run fallback through XLA.
+    pub artifacts: Option<std::path::PathBuf>,
+}
+
+impl Default for SweepConfig {
+    fn default() -> Self {
+        Self {
+            scheme: InterleaveScheme::row_major(Default::default()),
+            sizes: paper_sizes(),
+            // arrays are allocated once and used across the workload,
+            // as in the paper's micro-benchmarks; 16 ops amortize the
+            // allocation path realistically
+            reps: 16,
+            huge_pages: 256,
+            puma_pages: 64,
+            churn_rounds: 20_000,
+            seed: 0xF16,
+            artifacts: None,
+        }
+    }
+}
+
+fn fresh_system(cfg: &SweepConfig) -> Result<System> {
+    System::boot(SystemConfig {
+        scheme: cfg.scheme.clone(),
+        huge_pages: cfg.huge_pages,
+        churn_rounds: cfg.churn_rounds,
+        seed: cfg.seed,
+        artifacts: cfg.artifacts.clone(),
+        ..Default::default()
+    })
+}
+
+/// Run `micro` for `kind` across the sweep's sizes, pairing each cell
+/// with the malloc baseline on an identical fresh machine.
+pub fn run_micro_sweep(
+    cfg: &SweepConfig,
+    kind: AllocatorKind,
+    micro: Micro,
+) -> Result<Vec<SweepCell>> {
+    let mut cells = Vec::with_capacity(cfg.sizes.len());
+    for &size in &cfg.sizes {
+        let result = {
+            let mut sys = fresh_system(cfg)?;
+            microbench::run(
+                &mut sys,
+                kind,
+                micro,
+                size,
+                cfg.reps,
+                cfg.puma_pages,
+                false,
+                cfg.seed ^ size,
+            )?
+        };
+        let baseline = {
+            let mut sys = fresh_system(cfg)?;
+            microbench::run(
+                &mut sys,
+                AllocatorKind::Malloc,
+                micro,
+                size,
+                cfg.reps,
+                0,
+                false,
+                cfg.seed ^ size,
+            )?
+        };
+        cells.push(SweepCell {
+            result,
+            baseline_ns: baseline.sim_ns,
+        });
+    }
+    Ok(cells)
+}
+
+/// Motivation study (E1): fraction of PUD-executable rows per
+/// allocator per size, for the `aand` micro-benchmark (the paper's
+/// operand-heaviest case).
+pub fn run_motivation(
+    cfg: &SweepConfig,
+    kinds: &[AllocatorKind],
+) -> Result<Vec<(AllocatorKind, u64, f64)>> {
+    let mut rows = Vec::new();
+    for &kind in kinds {
+        for &size in &cfg.sizes {
+            let mut sys = fresh_system(cfg)?;
+            let r = microbench::run(
+                &mut sys,
+                kind,
+                Micro::Aand,
+                size,
+                1,
+                cfg.puma_pages,
+                false,
+                cfg.seed ^ size,
+            )?;
+            rows.push((kind, size, r.pud_fraction()));
+        }
+    }
+    Ok(rows)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::alloc::puma::FitPolicy;
+    use crate::dram::geometry::DramGeometry;
+
+    fn small_cfg() -> SweepConfig {
+        SweepConfig {
+            scheme: InterleaveScheme::row_major(DramGeometry {
+                channels: 1,
+                ranks_per_channel: 1,
+                banks_per_rank: 4,
+                subarrays_per_bank: 8,
+                rows_per_subarray: 256,
+                row_bytes: 8192,
+            }),
+            sizes: vec![250, 16 << 10, 256 << 10],
+            reps: 1,
+            huge_pages: 12,
+            puma_pages: 8,
+            churn_rounds: 2_000,
+            seed: 5,
+            artifacts: None,
+        }
+    }
+
+    #[test]
+    fn paper_sizes_span_the_paper_range() {
+        let s = paper_sizes();
+        assert_eq!(*s.first().unwrap(), 250);
+        assert_eq!(*s.last().unwrap(), 768 << 10);
+        assert!(s.windows(2).all(|w| w[0] < w[1]));
+    }
+
+    #[test]
+    fn puma_speedup_grows_with_size() {
+        let cfg = small_cfg();
+        let cells =
+            run_micro_sweep(&cfg, AllocatorKind::Puma(FitPolicy::WorstFit), Micro::Copy)
+                .unwrap();
+        assert_eq!(cells.len(), 3);
+        let speedups: Vec<f64> = cells.iter().map(|c| c.speedup()).collect();
+        // largest size beats smallest (the paper's second observation)
+        assert!(
+            speedups[2] > speedups[0],
+            "speedups should grow: {speedups:?}"
+        );
+        // and PUMA wins at the top size
+        assert!(speedups[2] > 1.5, "speedups: {speedups:?}");
+    }
+
+    #[test]
+    fn motivation_orders_allocators() {
+        let cfg = small_cfg();
+        let rows = run_motivation(
+            &cfg,
+            &[
+                AllocatorKind::Malloc,
+                AllocatorKind::Puma(FitPolicy::WorstFit),
+            ],
+        )
+        .unwrap();
+        let malloc_max = rows
+            .iter()
+            .filter(|(k, _, _)| *k == AllocatorKind::Malloc)
+            .map(|(_, _, f)| *f)
+            .fold(0.0, f64::max);
+        let puma_min = rows
+            .iter()
+            .filter(|(k, _, _)| matches!(k, AllocatorKind::Puma(_)))
+            .filter(|(_, s, _)| *s >= 16 << 10)
+            .map(|(_, _, f)| *f)
+            .fold(1.0, f64::min);
+        assert!(malloc_max < 0.05, "malloc should be ~0%: {malloc_max}");
+        assert!(puma_min > 0.9, "puma should be ~100%: {puma_min}");
+    }
+}

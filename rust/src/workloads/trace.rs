@@ -1,0 +1,225 @@
+//! Allocation/operation trace record + replay.
+//!
+//! Traces stress the allocators the way long-running multi-tenant
+//! systems do: interleaved allocs, frees, and bulk ops from several
+//! processes, with the PUD pool filling and draining. Used by the
+//! fragmentation stress tests and the multi_tenant example.
+
+use anyhow::Result;
+
+use crate::alloc::traits::Allocator;
+use crate::coordinator::system::System;
+use crate::os::process::Pid;
+use crate::pud::isa::{BulkRequest, PudOp};
+use crate::util::rng::Pcg64;
+
+/// One trace event.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Event {
+    /// Allocate `len` bytes; slot is the handle index.
+    Alloc { slot: usize, len: u64 },
+    /// Allocate aligned to the allocation in `hint_slot`.
+    AllocAlign {
+        slot: usize,
+        len: u64,
+        hint_slot: usize,
+    },
+    /// Free the allocation in `slot`.
+    Free { slot: usize },
+    /// dst = op(srcs) over the listed slots.
+    Op {
+        op: PudOp,
+        dst_slot: usize,
+        src_slots: Vec<usize>,
+        len: u64,
+    },
+}
+
+/// A recorded trace.
+#[derive(Debug, Clone, Default)]
+pub struct Trace {
+    pub events: Vec<Event>,
+}
+
+impl Trace {
+    /// Generate a random-but-deterministic trace: `groups` operand
+    /// groups of `group_len` bytes each, with op/free churn.
+    pub fn generate(seed: u64, groups: usize, group_len: u64, ops_per_group: usize) -> Trace {
+        let mut rng = Pcg64::new(seed);
+        let mut events = Vec::new();
+        let mut slot = 0usize;
+        for _ in 0..groups {
+            let (a, b, c) = (slot, slot + 1, slot + 2);
+            slot += 3;
+            events.push(Event::Alloc { slot: a, len: group_len });
+            events.push(Event::AllocAlign {
+                slot: b,
+                len: group_len,
+                hint_slot: a,
+            });
+            events.push(Event::AllocAlign {
+                slot: c,
+                len: group_len,
+                hint_slot: a,
+            });
+            for _ in 0..ops_per_group {
+                let op = *rng.choose(&[PudOp::And, PudOp::Or, PudOp::Xor, PudOp::Copy]);
+                let (dst_slot, src_slots) = match op.arity() {
+                    1 => (c, vec![a]),
+                    _ => (c, vec![a, b]),
+                };
+                events.push(Event::Op {
+                    op,
+                    dst_slot,
+                    src_slots,
+                    len: group_len,
+                });
+            }
+            // churn: free ~1/3 of groups immediately
+            if rng.chance(0.33) {
+                events.push(Event::Free { slot: a });
+                events.push(Event::Free { slot: b });
+                events.push(Event::Free { slot: c });
+            }
+        }
+        Trace { events }
+    }
+
+    /// Replay against a system + allocator for one process. Returns
+    /// total simulated ns.
+    pub fn replay(
+        &self,
+        sys: &mut System,
+        alloc: &mut dyn Allocator,
+        pid: Pid,
+    ) -> Result<f64> {
+        let mut slots: Vec<Option<u64>> = Vec::new();
+        let mut total_ns = 0.0;
+        let slot_va = |slots: &Vec<Option<u64>>, idx: usize| -> Result<u64> {
+            slots
+                .get(idx)
+                .copied()
+                .flatten()
+                .ok_or_else(|| anyhow::anyhow!("slot {idx} not live"))
+        };
+        for ev in &self.events {
+            match ev {
+                Event::Alloc { slot, len } => {
+                    let va = sys.alloc(alloc, pid, *len)?;
+                    if slots.len() <= *slot {
+                        slots.resize(*slot + 1, None);
+                    }
+                    slots[*slot] = Some(va);
+                }
+                Event::AllocAlign {
+                    slot,
+                    len,
+                    hint_slot,
+                } => {
+                    let hint = slot_va(&slots, *hint_slot)?;
+                    let va = sys.alloc_align(alloc, pid, *len, hint)?;
+                    if slots.len() <= *slot {
+                        slots.resize(*slot + 1, None);
+                    }
+                    slots[*slot] = Some(va);
+                }
+                Event::Free { slot } => {
+                    let va = slot_va(&slots, *slot)?;
+                    sys.free(alloc, pid, va)?;
+                    slots[*slot] = None;
+                }
+                Event::Op {
+                    op,
+                    dst_slot,
+                    src_slots,
+                    len,
+                } => {
+                    let dst = slot_va(&slots, *dst_slot)?;
+                    let srcs: Result<Vec<u64>> = src_slots
+                        .iter()
+                        .map(|s| slot_va(&slots, *s))
+                        .collect();
+                    let req = BulkRequest::new(*op, dst, srcs?, *len);
+                    total_ns += sys.submit(pid, &req)?;
+                }
+            }
+        }
+        Ok(total_ns)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::alloc::puma::{FitPolicy, PumaAlloc};
+    use crate::coordinator::system::SystemConfig;
+    use crate::dram::address::InterleaveScheme;
+    use crate::dram::geometry::DramGeometry;
+    use crate::workloads::microbench::AllocatorKind;
+
+    fn sys() -> System {
+        let scheme = InterleaveScheme::row_major(DramGeometry {
+            channels: 1,
+            ranks_per_channel: 1,
+            banks_per_rank: 4,
+            subarrays_per_bank: 8,
+            rows_per_subarray: 256,
+            row_bytes: 8192,
+        });
+        System::boot(SystemConfig {
+            scheme,
+            huge_pages: 16,
+            churn_rounds: 1_000,
+            seed: 2,
+            artifacts: None,
+            ..Default::default()
+        })
+        .unwrap()
+    }
+
+    #[test]
+    fn generated_trace_is_deterministic() {
+        let a = Trace::generate(9, 4, 32 << 10, 2);
+        let b = Trace::generate(9, 4, 32 << 10, 2);
+        assert_eq!(a.events, b.events);
+        assert!(a.events.len() >= 4 * 5);
+    }
+
+    #[test]
+    fn replay_with_puma_keeps_high_pud_fraction() {
+        let mut sys = sys();
+        let pid = sys.spawn();
+        let mut puma = PumaAlloc::new(8192, FitPolicy::WorstFit);
+        puma.pim_preallocate(&mut sys.os, 10).unwrap();
+        let trace = Trace::generate(31, 6, 64 << 10, 3);
+        let ns = trace.replay(&mut sys, &mut puma, pid).unwrap();
+        assert!(ns > 0.0);
+        assert!(
+            sys.coord.stats.pud_row_fraction() > 0.8,
+            "PUD fraction under churn: {}",
+            sys.coord.stats.pud_row_fraction()
+        );
+    }
+
+    #[test]
+    fn replay_with_malloc_mostly_falls_back() {
+        let mut sys = sys();
+        let pid = sys.spawn();
+        let mut m = crate::alloc::mallocsim::MallocSim::new();
+        let trace = Trace::generate(31, 4, 64 << 10, 2);
+        trace.replay(&mut sys, &mut m, pid).unwrap();
+        assert!(sys.coord.stats.pud_row_fraction() < 0.05);
+        let _ = AllocatorKind::Malloc;
+    }
+
+    #[test]
+    fn replay_rejects_dangling_slots() {
+        let mut sys = sys();
+        let pid = sys.spawn();
+        let mut m = crate::alloc::mallocsim::MallocSim::new();
+        let trace = Trace {
+            events: vec![Event::Free { slot: 0 }],
+        };
+        assert!(trace.replay(&mut sys, &mut m, pid).is_err());
+    }
+}

@@ -1,0 +1,140 @@
+//! Integration: the four allocators against one shared machine —
+//! placement properties and PUD-eligibility end to end.
+
+use puma::alloc::hugealloc::HugeAlloc;
+use puma::alloc::mallocsim::MallocSim;
+use puma::alloc::memalign::MemalignSim;
+use puma::alloc::puma::{FitPolicy, PumaAlloc};
+use puma::alloc::traits::{Allocator, OsCtx};
+use puma::dram::address::InterleaveScheme;
+use puma::dram::geometry::DramGeometry;
+use puma::os::process::{Pid, Process};
+use puma::pud::legality::{check_rowwise, pud_fraction};
+
+fn boot() -> OsCtx {
+    OsCtx::boot(
+        InterleaveScheme::row_major(DramGeometry::default()),
+        128,
+        10_000,
+        0xA11C,
+    )
+    .unwrap()
+}
+
+fn eligibility(
+    ctx: &mut OsCtx,
+    alloc: &mut dyn Allocator,
+    use_hint: bool,
+    len: u64,
+) -> f64 {
+    let mut proc = Process::new(Pid(9));
+    let a = alloc.alloc(ctx, &mut proc, len).unwrap();
+    let (b, c) = if use_hint {
+        (
+            alloc.alloc_align(ctx, &mut proc, len, a).unwrap(),
+            alloc.alloc_align(ctx, &mut proc, len, a).unwrap(),
+        )
+    } else {
+        (
+            alloc.alloc(ctx, &mut proc, len).unwrap(),
+            alloc.alloc(ctx, &mut proc, len).unwrap(),
+        )
+    };
+    let ea = proc.phys_extents(a, len).unwrap();
+    let eb = proc.phys_extents(b, len).unwrap();
+    let ec = proc.phys_extents(c, len).unwrap();
+    let plan = check_rowwise(&ctx.scheme, &[&ec, &ea, &eb], len);
+    pud_fraction(&plan)
+}
+
+#[test]
+fn allocator_eligibility_ladder() {
+    // the paper's §1 comparison, end to end on one machine
+    let len = 256 << 10;
+    let mut ctx = boot();
+
+    let mut malloc = MallocSim::new();
+    let f_malloc = eligibility(&mut ctx, &mut malloc, false, len);
+    assert!(f_malloc < 0.02, "malloc {f_malloc}");
+
+    let mut memalign = MemalignSim::new(8192);
+    let f_memalign = eligibility(&mut ctx, &mut memalign, false, len);
+    assert!(f_memalign < 0.02, "posix_memalign {f_memalign}");
+
+    let mut puma = PumaAlloc::new(8192, FitPolicy::WorstFit);
+    puma.pim_preallocate(&mut ctx, 32).unwrap();
+    let f_puma = eligibility(&mut ctx, &mut puma, true, len);
+    assert!(f_puma > 0.98, "puma {f_puma}");
+}
+
+#[test]
+fn hugepages_partial_across_sizes() {
+    // hugepages: 0% at sub-row sizes, sometimes high at row-congruent
+    // large sizes — partial overall (the paper's "up to 60%")
+    let mut fractions = Vec::new();
+    for len in [250u64, 4 << 10, 64 << 10, 384 << 10, 768 << 10] {
+        let mut ctx = boot();
+        let mut huge = HugeAlloc::new(8192);
+        fractions.push(eligibility(&mut ctx, &mut huge, false, len));
+    }
+    assert!(fractions[0] < 0.05, "sub-row must fail: {fractions:?}");
+    let mean: f64 = fractions.iter().sum::<f64>() / fractions.len() as f64;
+    assert!(
+        mean > 0.05 && mean < 0.95,
+        "hugepages should be partial overall: {fractions:?}"
+    );
+}
+
+#[test]
+fn puma_pool_exhaustion_and_recovery() {
+    let mut ctx = boot();
+    let mut puma = PumaAlloc::new(8192, FitPolicy::WorstFit);
+    puma.pim_preallocate(&mut ctx, 2).unwrap();
+    let mut proc = Process::new(Pid(3));
+    let total = puma.free_regions() as u64 * 8192;
+    // exhaust the pool
+    let a = puma.alloc(&mut ctx, &mut proc, total).unwrap();
+    assert_eq!(puma.free_regions(), 0);
+    assert!(puma.alloc(&mut ctx, &mut proc, 8192).is_err());
+    // free -> full recovery, allocations succeed again
+    puma.free(&mut ctx, &mut proc, a).unwrap();
+    let b = puma.alloc(&mut ctx, &mut proc, 8192).unwrap();
+    assert!(puma.lookup(b).is_some());
+}
+
+#[test]
+fn allocators_share_one_machine_without_interference() {
+    // different allocators in different processes on the same OS ctx
+    let mut ctx = boot();
+    let mut p1 = Process::new(Pid(1));
+    let mut p2 = Process::new(Pid(2));
+    let mut malloc = MallocSim::new();
+    let mut puma = PumaAlloc::new(8192, FitPolicy::WorstFit);
+    puma.pim_preallocate(&mut ctx, 8).unwrap();
+    let m = malloc.alloc(&mut ctx, &mut p1, 64 << 10).unwrap();
+    let q = puma.alloc(&mut ctx, &mut p2, 64 << 10).unwrap();
+    // physical extents must be disjoint
+    let em = p1.phys_extents(m, 64 << 10).unwrap();
+    let eq = p2.phys_extents(q, 64 << 10).unwrap();
+    for a in &em {
+        for b in &eq {
+            let a_end = a.paddr + a.len;
+            let b_end = b.paddr + b.len;
+            assert!(a_end <= b.paddr || b_end <= a.paddr, "overlap!");
+        }
+    }
+}
+
+#[test]
+fn stats_track_hint_outcomes() {
+    let mut ctx = boot();
+    let mut puma = PumaAlloc::new(8192, FitPolicy::WorstFit);
+    puma.pim_preallocate(&mut ctx, 8).unwrap();
+    let mut proc = Process::new(Pid(5));
+    let a = puma.alloc(&mut ctx, &mut proc, 16 * 8192).unwrap();
+    puma.alloc_align(&mut ctx, &mut proc, 16 * 8192, a).unwrap();
+    let st = puma.stats();
+    assert_eq!(st.allocs, 2);
+    assert_eq!(st.hint_colocated, 16);
+    assert_eq!(st.hint_missed, 0);
+}

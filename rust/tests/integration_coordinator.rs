@@ -1,0 +1,131 @@
+//! Integration: coordinator dispatch over the assembled System —
+//! full allocator -> legality -> execute -> verify loops.
+
+use puma::alloc::mallocsim::MallocSim;
+use puma::alloc::puma::{FitPolicy, PumaAlloc};
+use puma::coordinator::system::{System, SystemConfig};
+use puma::pud::isa::{BulkRequest, PudOp};
+use puma::util::rng::Pcg64;
+
+fn boot() -> System {
+    System::boot(SystemConfig {
+        huge_pages: 64,
+        churn_rounds: 8_000,
+        seed: 0xC0,
+        artifacts: None,
+        ..Default::default()
+    })
+    .unwrap()
+}
+
+#[test]
+fn op_chain_through_coordinator() {
+    // d = (a AND b) XOR (NOT b): a chain of dependent bulk ops, all
+    // in-DRAM under PUMA placement, verified against the host oracle.
+    let mut sys = boot();
+    let pid = sys.spawn();
+    let row = sys.os.scheme.geometry.row_bytes as u64;
+    let len = 32 * row;
+    let mut puma = PumaAlloc::new(row, FitPolicy::WorstFit);
+    puma.pim_preallocate(&mut sys.os, 16).unwrap();
+    let a = sys.alloc(&mut puma, pid, len).unwrap();
+    let b = sys.alloc_align(&mut puma, pid, len, a).unwrap();
+    let t = sys.alloc_align(&mut puma, pid, len, a).unwrap();
+    let u = sys.alloc_align(&mut puma, pid, len, a).unwrap();
+    let d = sys.alloc_align(&mut puma, pid, len, a).unwrap();
+    let mut rng = Pcg64::new(0xAB);
+    let mut va = vec![0u8; len as usize];
+    let mut vb = vec![0u8; len as usize];
+    rng.fill_bytes(&mut va);
+    rng.fill_bytes(&mut vb);
+    sys.write_virt(pid, a, &va).unwrap();
+    sys.write_virt(pid, b, &vb).unwrap();
+
+    sys.submit(pid, &BulkRequest::new(PudOp::And, t, vec![a, b], len))
+        .unwrap();
+    sys.submit(pid, &BulkRequest::new(PudOp::Not, u, vec![b], len))
+        .unwrap();
+    sys.submit(pid, &BulkRequest::new(PudOp::Xor, d, vec![t, u], len))
+        .unwrap();
+
+    let want: Vec<u8> = va
+        .iter()
+        .zip(&vb)
+        .map(|(x, y)| (x & y) ^ !y)
+        .collect();
+    assert_eq!(sys.read_virt(pid, d, len).unwrap(), want);
+    assert!(sys.coord.stats.pud_row_fraction() > 0.99);
+    assert_eq!(sys.coord.stats.ops, 3);
+}
+
+#[test]
+fn mixed_allocators_mixed_paths_one_system() {
+    let mut sys = boot();
+    let pid = sys.spawn();
+    let row = sys.os.scheme.geometry.row_bytes as u64;
+    let len = 16 * row;
+    let mut puma = PumaAlloc::new(row, FitPolicy::WorstFit);
+    puma.pim_preallocate(&mut sys.os, 8).unwrap();
+    let mut malloc = MallocSim::new();
+
+    // PUMA-placed op
+    let a = sys.alloc(&mut puma, pid, len).unwrap();
+    let b = sys.alloc_align(&mut puma, pid, len, a).unwrap();
+    sys.write_virt(pid, a, &vec![0x55u8; len as usize]).unwrap();
+    sys.submit(pid, &BulkRequest::new(PudOp::Copy, b, vec![a], len))
+        .unwrap();
+    let pud_after_first = sys.coord.stats.pud_rows;
+    assert_eq!(pud_after_first, 16);
+
+    // malloc-placed op on the same system falls back
+    let c = sys.alloc(&mut malloc, pid, len).unwrap();
+    let d = sys.alloc(&mut malloc, pid, len).unwrap();
+    sys.write_virt(pid, c, &vec![0x77u8; len as usize]).unwrap();
+    sys.submit(pid, &BulkRequest::new(PudOp::Copy, d, vec![c], len))
+        .unwrap();
+    assert_eq!(sys.coord.stats.pud_rows, pud_after_first, "no new PUD rows");
+    assert!(sys.coord.stats.fallback_rows >= 16);
+    assert_eq!(
+        sys.read_virt(pid, d, len).unwrap(),
+        vec![0x77u8; len as usize]
+    );
+}
+
+#[test]
+fn stats_fully_pud_tracks_per_op() {
+    let mut sys = boot();
+    let pid = sys.spawn();
+    let row = sys.os.scheme.geometry.row_bytes as u64;
+    let mut puma = PumaAlloc::new(row, FitPolicy::WorstFit);
+    puma.pim_preallocate(&mut sys.os, 8).unwrap();
+    let mut malloc = MallocSim::new();
+    let a = sys.alloc(&mut puma, pid, row).unwrap();
+    let b = sys.alloc_align(&mut puma, pid, row, a).unwrap();
+    sys.submit(pid, &BulkRequest::new(PudOp::Copy, b, vec![a], row))
+        .unwrap();
+    let m1 = sys.alloc(&mut malloc, pid, row).unwrap();
+    let m2 = sys.alloc(&mut malloc, pid, row).unwrap();
+    sys.submit(pid, &BulkRequest::new(PudOp::Copy, m2, vec![m1], row))
+        .unwrap();
+    assert_eq!(sys.coord.stats.ops_fully_pud.hits, 1);
+    assert_eq!(sys.coord.stats.ops_fully_pud.total, 2);
+}
+
+#[test]
+fn partial_tail_sizes_handled() {
+    // operation length not a row multiple: the tail row is partial
+    let mut sys = boot();
+    let pid = sys.spawn();
+    let row = sys.os.scheme.geometry.row_bytes as u64;
+    let len = 3 * row + 1000;
+    let mut puma = PumaAlloc::new(row, FitPolicy::WorstFit);
+    puma.pim_preallocate(&mut sys.os, 8).unwrap();
+    let a = sys.alloc(&mut puma, pid, len).unwrap();
+    let b = sys.alloc_align(&mut puma, pid, len, a).unwrap();
+    let data: Vec<u8> = (0..len).map(|i| (i % 241) as u8).collect();
+    sys.write_virt(pid, a, &data).unwrap();
+    sys.submit(pid, &BulkRequest::new(PudOp::Copy, b, vec![a], len))
+        .unwrap();
+    assert_eq!(sys.read_virt(pid, b, len).unwrap(), data);
+    assert_eq!(sys.coord.stats.pud_rows, 4); // 3 full + 1 partial row
+}

@@ -1,0 +1,112 @@
+//! End-to-end integration: the complete stack — PUMA allocation, PUD
+//! execution, XLA fallback, reports — on small but real workloads.
+
+use puma::alloc::puma::FitPolicy;
+use puma::report;
+use puma::workloads::microbench::{AllocatorKind, Micro};
+use puma::workloads::sweep::{self, SweepConfig};
+
+fn fast_cfg(artifacts: bool) -> SweepConfig {
+    SweepConfig {
+        sizes: vec![250, 64 << 10, 384 << 10],
+        reps: 4,
+        huge_pages: 48,
+        puma_pages: 24,
+        churn_rounds: 4_000,
+        seed: 0xE2E,
+        artifacts: if artifacts {
+            let dir =
+                std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+            dir.join("manifest.tsv").exists().then_some(dir)
+        } else {
+            None
+        },
+        ..Default::default()
+    }
+}
+
+#[test]
+fn figure2_shape_holds_scalar() {
+    let cfg = fast_cfg(false);
+    let mut series = Vec::new();
+    for micro in Micro::ALL {
+        let cells = sweep::run_micro_sweep(
+            &cfg,
+            AllocatorKind::Puma(FitPolicy::WorstFit),
+            micro,
+        )
+        .unwrap();
+        // PUMA wins at the top size, and grows from the bottom
+        let first = cells.first().unwrap().speedup();
+        let last = cells.last().unwrap().speedup();
+        assert!(last > 1.0, "{}: {last:.2}", micro.name());
+        assert!(last > first, "{}: {first:.2} -> {last:.2}", micro.name());
+        series.push((micro, cells));
+    }
+    // the report renders without touching the fs
+    let text = report::figure2(&series, None).unwrap();
+    assert!(text.contains("zero-speedup"));
+}
+
+#[test]
+fn figure2_cell_through_xla_runtime() {
+    // one sweep cell with the real XLA fallback: the malloc baseline
+    // routes every row through the AOT artifacts
+    let cfg = fast_cfg(true);
+    if cfg.artifacts.is_none() {
+        return; // artifacts not built
+    }
+    let cells =
+        sweep::run_micro_sweep(&cfg, AllocatorKind::Puma(FitPolicy::WorstFit), Micro::Aand)
+            .unwrap();
+    assert!(cells.last().unwrap().speedup() > 1.0);
+}
+
+#[test]
+fn motivation_shape_holds() {
+    let cfg = fast_cfg(false);
+    let rows = sweep::run_motivation(
+        &cfg,
+        &[
+            AllocatorKind::Malloc,
+            AllocatorKind::Memalign,
+            AllocatorKind::Puma(FitPolicy::WorstFit),
+        ],
+    )
+    .unwrap();
+    for (k, s, f) in &rows {
+        match k {
+            AllocatorKind::Malloc | AllocatorKind::Memalign => {
+                assert!(*f < 0.02, "{} at {s}: {f}", k.name())
+            }
+            AllocatorKind::Puma(_) => assert!(*f > 0.95, "puma at {s}: {f}"),
+            _ => {}
+        }
+    }
+}
+
+#[test]
+fn shipped_config_files_load_and_match_the_builtin_machine() {
+    let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR"));
+    // the devicetree file describes the default scheme exactly
+    let text = std::fs::read_to_string(root.join("configs/dram-8gib.dts")).unwrap();
+    let scheme = puma::dram::devicetree::parse(&text).unwrap();
+    assert_eq!(
+        scheme,
+        puma::dram::address::InterleaveScheme::row_major(Default::default())
+    );
+    // the run configs parse and carry the paper's sweep
+    let cfg = puma::config::Config::load_file(
+        root.join("configs/default.conf").to_str().unwrap(),
+    )
+    .unwrap();
+    assert_eq!(cfg.huge_pages, 256);
+    assert_eq!(cfg.reps, 16);
+    assert_eq!(cfg.sizes.first(), Some(&250));
+    assert_eq!(cfg.sizes.last(), Some(&(6 * (1 << 20) / 8)));
+    let smoke = puma::config::Config::load_file(
+        root.join("configs/smoke.conf").to_str().unwrap(),
+    )
+    .unwrap();
+    assert_eq!(smoke.sizes.len(), 3);
+}

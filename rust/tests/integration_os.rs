@@ -1,0 +1,93 @@
+//! Integration: OS substrate — buddy + page tables + hugetlb pool
+//! working together at realistic scale.
+
+use puma::os::buddy::BuddyAllocator;
+use puma::os::hugepage::HugePagePool;
+use puma::os::page_table::{PageKind, PageTable};
+use puma::os::process::{Pid, Process};
+use puma::os::vma::VmaKind;
+use puma::os::{HUGE_PAGE_SIZE, PAGE_SIZE};
+use puma::util::rng::Pcg64;
+
+#[test]
+fn boot_8gib_machine_reserve_pool_and_churn() {
+    let mut buddy = BuddyAllocator::with_capacity_bytes(8 << 30).unwrap();
+    let pool = HugePagePool::reserve(&mut buddy, 256).unwrap();
+    assert_eq!(pool.available(), 256);
+    let mut rng = Pcg64::new(1);
+    buddy.churn(&mut rng, 20_000);
+    buddy.check_invariants().unwrap();
+    // the machine still has most of its memory
+    assert!(buddy.free_frames() > (6u64 << 30) / PAGE_SIZE);
+}
+
+#[test]
+fn process_with_mixed_page_sizes() {
+    let mut buddy = BuddyAllocator::with_capacity_bytes(64 << 20).unwrap();
+    let mut proc = Process::new(Pid(1));
+    // a base-page VMA
+    let va1 = proc.mmap(16 * PAGE_SIZE, PAGE_SIZE, VmaKind::Anon).unwrap();
+    proc.populate_base(va1, 16, || buddy.alloc(0)).unwrap();
+    // a huge-page VMA
+    let va2 = proc
+        .mmap(2 * HUGE_PAGE_SIZE, HUGE_PAGE_SIZE, VmaKind::Huge)
+        .unwrap();
+    for i in 0..2 {
+        let pfn = buddy.alloc(puma::os::HUGE_PAGE_ORDER).unwrap();
+        proc.map_huge(va2 + i * HUGE_PAGE_SIZE, pfn * PAGE_SIZE)
+            .unwrap();
+    }
+    // extents resolve across both mapping kinds
+    assert_eq!(
+        proc.phys_extents(va1, 16 * PAGE_SIZE)
+            .unwrap()
+            .iter()
+            .map(|e| e.len)
+            .sum::<u64>(),
+        16 * PAGE_SIZE
+    );
+    let he = proc.phys_extents(va2, 2 * HUGE_PAGE_SIZE).unwrap();
+    assert!(he.len() <= 2);
+    // unmap the base pages; frames return to the buddy
+    let before = buddy.free_frames();
+    for i in 0..16 {
+        let t = proc.page_table.unmap(va1 + i * PAGE_SIZE).unwrap();
+        buddy.free(t.paddr / PAGE_SIZE, 0);
+    }
+    assert_eq!(buddy.free_frames(), before + 16);
+    buddy.check_invariants().unwrap();
+}
+
+#[test]
+fn page_table_dense_random_mappings() {
+    let mut pt = PageTable::new();
+    let mut rng = Pcg64::new(3);
+    let mut mapped = std::collections::HashMap::new();
+    for _ in 0..2_000 {
+        let vpn = rng.below(1 << 22); // within Sv39, base pages
+        let va = vpn * PAGE_SIZE;
+        let pa = rng.below(1 << 20) * PAGE_SIZE;
+        if mapped.contains_key(&va) {
+            continue;
+        }
+        pt.map(va, pa, PageKind::Base).unwrap();
+        mapped.insert(va, pa);
+    }
+    for (va, pa) in &mapped {
+        let t = pt.translate(*va + 17).unwrap();
+        assert_eq!(t.paddr, *pa + 17);
+    }
+    assert_eq!(pt.mapped_base_pages as usize, mapped.len());
+}
+
+#[test]
+fn hugetlb_reservation_under_fragmentation_can_fail() {
+    // after enough churn-pinned fragmentation, reserving many huge
+    // pages becomes impossible — the reason Linux (and PUMA's
+    // pre-allocation) reserve at boot
+    let mut buddy = BuddyAllocator::with_capacity_bytes(16 << 20).unwrap();
+    let mut rng = Pcg64::new(4);
+    buddy.churn(&mut rng, 10_000);
+    let want = (buddy.nframes() / 512) as usize; // all-of-memory worth
+    assert!(HugePagePool::reserve(&mut buddy, want).is_err());
+}

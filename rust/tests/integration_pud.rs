@@ -1,0 +1,138 @@
+//! Integration: PUD substrate — functional equivalence of every op
+//! against the scalar oracle, over full-size rows and multi-row plans.
+
+use puma::dram::address::InterleaveScheme;
+use puma::dram::device::DramDevice;
+use puma::dram::geometry::{DramGeometry, SubarrayId};
+use puma::dram::timing::TimingParams;
+use puma::os::process::PhysExtent;
+use puma::pud::exec::PudEngine;
+use puma::pud::isa::PudOp;
+use puma::pud::legality::check_rowwise;
+use puma::util::rng::Pcg64;
+
+fn engine() -> PudEngine {
+    PudEngine::new(
+        DramDevice::new(InterleaveScheme::row_major(DramGeometry::default())),
+        TimingParams::default(),
+    )
+}
+
+fn rows_ext(e: &PudEngine, sid: u32, first: u32, n: u32) -> Vec<PhysExtent> {
+    let rb = e.device.geometry().row_bytes as u64;
+    (0..n)
+        .map(|i| PhysExtent {
+            paddr: e.device.scheme.row_start_addr(SubarrayId(sid), first + i),
+            len: rb,
+        })
+        .collect()
+}
+
+#[test]
+fn every_op_matches_oracle_over_8_rows() {
+    let rb = 8192usize;
+    let n = 8usize;
+    let mut rng = Pcg64::new(0x9D);
+    for op in PudOp::ALL {
+        let mut e = engine();
+        let dst = rows_ext(&e, 5, 0, n as u32);
+        let s1 = rows_ext(&e, 5, 100, n as u32);
+        let s2 = rows_ext(&e, 5, 200, n as u32);
+        let mut a = vec![0u8; rb * n];
+        let mut b = vec![0u8; rb * n];
+        rng.fill_bytes(&mut a);
+        rng.fill_bytes(&mut b);
+        for (i, ext) in s1.iter().enumerate() {
+            e.device.write(ext.paddr, &a[i * rb..(i + 1) * rb]);
+        }
+        for (i, ext) in s2.iter().enumerate() {
+            e.device.write(ext.paddr, &b[i * rb..(i + 1) * rb]);
+        }
+        let operands: Vec<&[PhysExtent]> = match op.arity() {
+            0 => vec![&dst],
+            1 => vec![&dst, &s1],
+            _ => vec![&dst, &s1, &s2],
+        };
+        let plan = check_rowwise(&e.device.scheme, &operands, (rb * n) as u64);
+        assert!(plan.iter().all(|p| p.is_pud()), "{op}: plan not all PUD");
+        let st = e.execute(op, &plan, true).unwrap();
+        assert_eq!(st.pud_rows, n as u64);
+        // oracle
+        let mut want = vec![0u8; rb * n];
+        let srcs: Vec<&[u8]> = match op.arity() {
+            0 => vec![],
+            1 => vec![&a],
+            _ => vec![&a, &b],
+        };
+        op.apply_bytes(&srcs, &mut want);
+        let mut got = vec![0u8; rb * n];
+        for (i, ext) in dst.iter().enumerate() {
+            e.device.read(ext.paddr, &mut got[i * rb..(i + 1) * rb]);
+        }
+        assert_eq!(got, want, "{op} mismatch");
+    }
+}
+
+#[test]
+fn command_counters_scale_with_rows() {
+    let mut e = engine();
+    let n = 16u32;
+    let dst = rows_ext(&e, 2, 0, n);
+    let s1 = rows_ext(&e, 2, 100, n);
+    let s2 = rows_ext(&e, 2, 200, n);
+    let plan = check_rowwise(
+        &e.device.scheme,
+        &[&dst, &s1, &s2],
+        n as u64 * 8192,
+    );
+    e.execute(PudOp::And, &plan, false).unwrap();
+    assert_eq!(e.device.counters.aaps, 4 * n as u64);
+    assert_eq!(e.device.counters.tras, n as u64);
+    let energy = puma::dram::energy::EnergyParams::default();
+    assert!(energy.total_nj(&e.device.counters) > 0.0);
+}
+
+#[test]
+fn mixed_subarray_plan_splits_correctly() {
+    let mut e = engine();
+    // dst rows alternate between two subarrays; src stays in one ->
+    // alternating PUD/fallback plan
+    let rb = e.device.geometry().row_bytes as u64;
+    let mut dst = Vec::new();
+    for i in 0..8u32 {
+        let sid = if i % 2 == 0 { 3 } else { 4 };
+        dst.push(PhysExtent {
+            paddr: e.device.scheme.row_start_addr(SubarrayId(sid), i),
+            len: rb,
+        });
+    }
+    let src = rows_ext(&e, 3, 100, 8);
+    let plan = check_rowwise(&e.device.scheme, &[&dst, &src], 8 * rb);
+    let pud = plan.iter().filter(|p| p.is_pud()).count();
+    assert_eq!(pud, 4, "half the rows co-locate");
+    let st = e.execute(PudOp::Copy, &plan, true).unwrap();
+    assert_eq!(st.pud_rows, 4);
+    assert_eq!(st.fallback_rows, 4);
+    // every row still gets the right data
+    let mut buf = vec![0u8; rb as usize];
+    for (i, d) in dst.iter().enumerate() {
+        let mut want = vec![0u8; rb as usize];
+        e.device.read(src[i].paddr, &mut want);
+        e.device.read(d.paddr, &mut buf);
+        assert_eq!(buf, want, "row {i}");
+    }
+}
+
+#[test]
+fn timing_hierarchy_holds_at_scale() {
+    let t = TimingParams::default();
+    let rows = 768; // 6 Mb of rows
+    let bytes = rows * 8192u64;
+    let zero = t.rowclone_zero_ns(rows);
+    let copy = t.rowclone_fpm_ns(rows);
+    let and = t.ambit_and_or_ns(rows);
+    let xor = t.ambit_xor_ns(rows);
+    let cpu = t.cpu_bulk_ns(2 * bytes, bytes);
+    assert!(zero <= copy && copy < and && and < xor);
+    assert!(xor < cpu, "even XOR (7 AAPs/row) beats the channel");
+}

@@ -1,0 +1,151 @@
+//! Property-based tests on allocator invariants (mini-proptest; see
+//! DESIGN.md §7).
+
+use puma::alloc::puma::{FitPolicy, PumaAlloc};
+use puma::alloc::traits::{Allocator, OsCtx};
+use puma::dram::address::InterleaveScheme;
+use puma::dram::geometry::DramGeometry;
+use puma::os::buddy::BuddyAllocator;
+use puma::os::process::{Pid, Process};
+use puma::proptest::{self, assert_prop};
+
+fn small_ctx(seed: u64) -> OsCtx {
+    OsCtx::boot(
+        InterleaveScheme::row_major(DramGeometry {
+            channels: 1,
+            ranks_per_channel: 1,
+            banks_per_rank: 4,
+            subarrays_per_bank: 8,
+            rows_per_subarray: 256,
+            row_bytes: 8192,
+        }),
+        16,
+        2_000,
+        seed,
+    )
+    .unwrap()
+}
+
+#[test]
+fn buddy_never_double_allocates() {
+    proptest::check_cases("buddy disjoint blocks", 24, |g| {
+        let mut buddy = BuddyAllocator::new(4096).unwrap();
+        let mut live: Vec<(u64, u8)> = Vec::new();
+        let mut frames = std::collections::HashSet::new();
+        for _ in 0..g.usize(1..80) {
+            if live.is_empty() || g.bool() {
+                let order = g.u64(0..5) as u8;
+                if let Ok(pfn) = buddy.alloc(order) {
+                    for f in pfn..pfn + (1 << order) {
+                        assert_prop!(frames.insert(f), "frame {f} double-allocated");
+                    }
+                    live.push((pfn, order));
+                }
+            } else {
+                let idx = g.usize(0..live.len());
+                let (pfn, order) = live.swap_remove(idx);
+                for f in pfn..pfn + (1 << order) {
+                    frames.remove(&f);
+                }
+                buddy.free(pfn, order);
+            }
+        }
+        buddy.check_invariants().unwrap();
+        // cleanup frees everything back
+        for (pfn, order) in live {
+            buddy.free(pfn, order);
+        }
+        assert_prop!(buddy.free_frames() == 4096);
+    });
+}
+
+#[test]
+fn puma_regions_unique_and_recycled() {
+    proptest::check_cases("puma region uniqueness", 12, |g| {
+        let seed = g.u64(0..1 << 32);
+        let mut ctx = small_ctx(seed);
+        let mut puma = PumaAlloc::new(8192, FitPolicy::WorstFit);
+        puma.pim_preallocate(&mut ctx, 6).unwrap();
+        let start_regions = puma.free_regions();
+        let mut proc = Process::new(Pid(1));
+        let mut live: Vec<u64> = Vec::new();
+        let mut held_regions = std::collections::HashSet::new();
+        for _ in 0..g.usize(1..30) {
+            if live.is_empty() || g.ratio(2, 3) {
+                let rows = g.u64(1..20);
+                let hint = if !live.is_empty() && g.bool() {
+                    Some(live[g.usize(0..live.len())])
+                } else {
+                    None
+                };
+                let res = match hint {
+                    Some(h) => puma.alloc_align(&mut ctx, &mut proc, rows * 8192, h),
+                    None => puma.alloc(&mut ctx, &mut proc, rows * 8192),
+                };
+                if let Ok(va) = res {
+                    // regions backing this allocation are not in use
+                    for r in &puma.lookup(va).unwrap().regions {
+                        assert_prop!(
+                            held_regions.insert(r.paddr),
+                            "region {:#x} double-handed", r.paddr
+                        );
+                    }
+                    live.push(va);
+                }
+            } else {
+                let idx = g.usize(0..live.len());
+                let va = live.swap_remove(idx);
+                for r in puma.lookup(va).unwrap().regions.clone() {
+                    held_regions.remove(&r.paddr);
+                }
+                puma.free(&mut ctx, &mut proc, va).unwrap();
+            }
+        }
+        for va in live {
+            puma.free(&mut ctx, &mut proc, va).unwrap();
+        }
+        assert_prop!(puma.free_regions() == start_regions, "regions leaked");
+    });
+}
+
+#[test]
+fn puma_allocations_always_row_aligned_regions() {
+    proptest::check_cases("puma row alignment", 12, |g| {
+        let mut ctx = small_ctx(g.u64(0..1 << 32));
+        let mut puma = PumaAlloc::new(8192, FitPolicy::WorstFit);
+        puma.pim_preallocate(&mut ctx, 4).unwrap();
+        let mut proc = Process::new(Pid(2));
+        let len = g.u64(1..400_000);
+        if let Ok(va) = puma.alloc(&mut ctx, &mut proc, len) {
+            let alloc = puma.lookup(va).unwrap();
+            for r in &alloc.regions {
+                assert_prop!(r.paddr % 8192 == 0, "region misaligned");
+                assert_prop!(ctx.scheme.subarray_id(r.paddr) == r.sid);
+            }
+            // virtual range is fully mapped
+            assert_prop!(proc
+                .phys_extents(va, alloc.regions.len() as u64 * 8192)
+                .is_ok());
+        }
+    });
+}
+
+#[test]
+fn hint_colocation_is_total_when_pool_is_fresh() {
+    proptest::check_cases("fresh-pool colocation", 10, |g| {
+        let mut ctx = small_ctx(g.u64(0..1 << 32));
+        let mut puma = PumaAlloc::new(8192, FitPolicy::WorstFit);
+        puma.pim_preallocate(&mut ctx, 8).unwrap();
+        let mut proc = Process::new(Pid(3));
+        let rows = g.u64(1..24);
+        let a = puma.alloc(&mut ctx, &mut proc, rows * 8192).unwrap();
+        let b = puma
+            .alloc_align(&mut ctx, &mut proc, rows * 8192, a)
+            .unwrap();
+        let ra = &puma.lookup(a).unwrap().regions;
+        let rb = &puma.lookup(b).unwrap().regions;
+        for (x, y) in ra.iter().zip(rb) {
+            assert_prop!(x.sid == y.sid, "row not co-located");
+        }
+    });
+}
