@@ -141,10 +141,10 @@ impl Allocator for HugeAlloc {
         self.stats.frees += 1;
         if live.owned_pages > 0 {
             for i in 0..live.owned_pages {
-                let t = proc.page_table.unmap(live.owned_va + i * HUGE_PAGE_SIZE)?;
+                let t = proc.unmap_page(live.owned_va + i * HUGE_PAGE_SIZE)?;
                 ctx.buddy.free(t.paddr / PAGE_SIZE, HUGE_PAGE_ORDER);
             }
-            proc.vmas.unmap(live.owned_va)?;
+            proc.unmap_vma(live.owned_va)?;
             self.stats.alloc_ns += ctx.timing.syscall_ns;
         }
         // arena chunks are recycled with the arena (glibc-like)

@@ -132,10 +132,10 @@ impl Allocator for MallocSim {
             }
             AllocKind::Large { start, pages } => {
                 for i in 0..pages {
-                    let t = proc.page_table.unmap(start + i * PAGE_SIZE)?;
+                    let t = proc.unmap_page(start + i * PAGE_SIZE)?;
                     ctx.buddy.free(t.paddr / PAGE_SIZE, 0);
                 }
-                proc.vmas.unmap(start)?;
+                proc.unmap_vma(start)?;
                 self.stats.alloc_ns += ctx.timing.syscall_ns;
             }
         }

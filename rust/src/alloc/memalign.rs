@@ -71,10 +71,10 @@ impl Allocator for MemalignSim {
         };
         self.stats.frees += 1;
         for i in 0..pages {
-            let t = proc.page_table.unmap(va + i * PAGE_SIZE)?;
+            let t = proc.unmap_page(va + i * PAGE_SIZE)?;
             ctx.buddy.free(t.paddr / PAGE_SIZE, 0);
         }
-        proc.vmas.unmap(va)?;
+        proc.unmap_vma(va)?;
         self.stats.alloc_ns += ctx.timing.syscall_ns;
         Ok(())
     }

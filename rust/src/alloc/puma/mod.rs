@@ -242,11 +242,11 @@ impl Allocator for PumaAlloc {
         for (i, r) in alloc.regions.iter().enumerate() {
             let base_va = va + i as u64 * self.row_bytes;
             for p in 0..pages_per_region {
-                proc.page_table.unmap(base_va + p * PAGE_SIZE)?;
+                proc.unmap_page(base_va + p * PAGE_SIZE)?;
             }
             self.free.insert(*r);
         }
-        proc.vmas.unmap(va)?;
+        proc.unmap_vma(va)?;
         self.stats.alloc_ns += ctx.timing.syscall_ns;
         Ok(())
     }

@@ -65,7 +65,7 @@ pub fn build_config(cli: &Cli) -> Result<Config> {
     let mut overrides = cli.flags.clone();
     overrides.remove("config");
     // command-specific flags are not config keys
-    for k in ["micro", "alloc", "size"] {
+    for k in ["micro", "alloc", "size", "batch"] {
         overrides.remove(k);
     }
     cfg.apply(&overrides)?;
@@ -130,7 +130,8 @@ pub fn run(args: &[String]) -> Result<i32> {
             let size = parse_size(
                 cli.flags.get("size").map(String::as_str).unwrap_or("64KiB"),
             )?;
-            cmd_micro(&cfg, micro, alloc, size)
+            let batched = cli.flags.get("batch").map(String::as_str) == Some("true");
+            cmd_micro(&cfg, micro, alloc, size, batched)
         }
         other => bail!("unknown command {other:?} (try `puma help`)"),
     }
@@ -145,6 +146,7 @@ commands:
   fig2         reproduce Figure 2 (zero/copy/aand x allocation sizes)
   motivation   reproduce the §1 allocator-eligibility study
   micro        one cell: --micro zero|copy|aand --alloc NAME --size SIZE
+               (--batch submits all reps as one pipeline batch)
   info         print machine description and artifact inventory
   help         this text
 
@@ -222,6 +224,7 @@ fn cmd_micro(
     micro: Micro,
     alloc: AllocatorKind,
     size: u64,
+    batched: bool,
 ) -> Result<i32> {
     let mut sys = System::boot(SystemConfig {
         scheme: cfg.scheme.clone(),
@@ -231,7 +234,12 @@ fn cmd_micro(
         artifacts: cfg.artifacts.clone(),
         ..Default::default()
     })?;
-    let r = microbench::run(
+    let runner = if batched {
+        microbench::run_batched
+    } else {
+        microbench::run
+    };
+    let r = runner(
         &mut sys,
         alloc,
         micro,
@@ -260,6 +268,22 @@ fn cmd_micro(
     println!("    pud         {}", fmt_ns(r.coord.pud_ns));
     println!("    fallback    {}", fmt_ns(r.coord.fallback_ns));
     println!("  xla           {} dispatches", r.coord.xla_dispatches);
+    if batched {
+        let p = &sys.coord.pipeline;
+        println!(
+            "  pipeline      {} wave(s), {:.2} ops/wave, cache {:.1}% hits, \
+             {} fallback dispatch unit(s)",
+            p.waves,
+            p.ops_per_wave(),
+            p.extent_cache.percent(),
+            p.fallback_dispatches
+        );
+        println!(
+            "  elapsed       {} bank-parallel (vs {} serial-equivalent)",
+            fmt_ns(p.elapsed_ns),
+            fmt_ns(r.coord.pud_ns + r.coord.fallback_ns)
+        );
+    }
     println!("  verify        OK (memory image matches oracle)");
     Ok(0)
 }
@@ -315,6 +339,15 @@ mod tests {
         .unwrap();
         let cfg = build_config(&cli).unwrap();
         assert_eq!(cfg.reps, 7);
+    }
+
+    #[test]
+    fn batch_flag_is_command_specific_not_config() {
+        let cli =
+            parse_args(&args(&["micro", "--batch", "--size", "1KiB"])).unwrap();
+        assert_eq!(cli.flags["batch"], "true");
+        // must not be rejected as an unknown config key
+        build_config(&cli).unwrap();
     }
 
     #[test]

@@ -1,12 +1,13 @@
-//! Fallback-row batching.
+//! Fallback-row batching (per-op runs).
 //!
 //! The legality plan marks individual rows as fallback; issuing one
 //! XLA dispatch per 8 KiB row would drown in dispatch overhead. The
 //! batcher groups *consecutive* fallback rows of one operation into
-//! runs, which the runtime then covers with its largest shape buckets.
-//! (Grouping only consecutive rows keeps gather/scatter on the DRAM
-//! side trivial: each run is one virtually-contiguous span per
-//! operand.)
+//! runs. (Grouping only consecutive rows keeps gather/scatter on the
+//! DRAM side trivial: each run is one virtually-contiguous span per
+//! operand.) Runs are the unit the scheduler then coalesces *across*
+//! operations into [`super::schedule::DispatchGroup`]s, which the
+//! runtime covers with its largest shape buckets.
 
 use crate::pud::legality::RowPlan;
 

@@ -1,25 +1,37 @@
 //! The coordinator: the dispatch layer between workloads and the two
-//! execution substrates.
+//! execution substrates, structured as an explicit three-stage
+//! plan/schedule/execute pipeline (DESIGN.md §§2-4).
 //!
-//! For every submitted bulk operation it (1) translates virtual
-//! operands to physical extents through the owning process's page
-//! table, (2) runs the PUD legality check, (3) executes the eligible
-//! rows in-DRAM via [`crate::pud::PudEngine`], and (4) routes the rest
-//! to the CPU fallback — the XLA/PJRT runtime when loaded, else the
-//! scalar reference. It owns all cross-cutting statistics.
+//! For every submitted batch it (1) **plans**: lowers each
+//! [`pud::isa::BulkRequest`](crate::pud::isa::BulkRequest) to an
+//! [`plan::OpPlan`] — virtual operands translated through a cached
+//! page-table walk plus the per-row PUD legality verdicts; (2)
+//! **schedules**: splits the batch into hazard waves, coalesces
+//! fallback rows *across* operations into shared dispatch groups, and
+//! prices PUD rows onto per-bank command timelines; (3) **executes**:
+//! PUD rows in-DRAM via [`crate::pud::PudEngine`], fallback rows on
+//! the CPU — the XLA/PJRT runtime when loaded, else the scalar
+//! reference. It owns all cross-cutting statistics.
 //!
-//! * [`dispatch`] — per-operation planning + execution.
-//! * [`batch`] — fallback-row batching into bucket-sized XLA calls.
+//! * [`plan`] — the `OpPlan` IR, planner, and extent-translation cache.
+//! * [`schedule`] — hazard waves, dispatch groups, bank-parallel timing.
+//! * [`execute`] — the executor and its reusable dispatch scratch.
+//! * [`dispatch`] — [`dispatch::Coordinator`]: `submit` / `submit_batch`.
+//! * [`batch`] — per-op grouping of fallback rows into runs.
 //! * [`stats`] — cumulative counters for reports.
 //! * [`system`] — [`system::System`]: the fully-assembled machine
-//!   (OS context + PUD engine + allocators + processes + runtime),
-//!   the top-level object examples and benches drive.
+//!   (OS context + PUD engine + allocators + processes + runtime +
+//!   request queues), the top-level object examples and benches drive.
 
 pub mod batch;
 pub mod dispatch;
+pub mod execute;
+pub mod plan;
+pub mod schedule;
 pub mod stats;
 pub mod system;
 
-pub use dispatch::{Coordinator, FallbackMode};
-pub use stats::CoordStats;
+pub use dispatch::{BatchReport, Coordinator, FallbackMode};
+pub use plan::OpPlan;
+pub use stats::{CoordStats, PipelineStats};
 pub use system::System;

@@ -1,0 +1,321 @@
+//! Planning layer: lowers [`BulkRequest`]s into the shared [`OpPlan`]
+//! IR the scheduler and executor consume.
+//!
+//! Planning is translate + legality only — nothing executes here. The
+//! expensive part, walking the page table to derive physical extents,
+//! is fronted by a per-process [`ExtentCache`] keyed on the process's
+//! translation epoch: any unmap bumps the epoch
+//! ([`Process::unmap_page`]) and implicitly invalidates every cached
+//! extent list for that process (DESIGN.md §5). Long-running workloads
+//! that re-submit over stable mappings — the common case under heavy
+//! traffic — skip the page-table walk entirely.
+
+use std::rc::Rc;
+
+use anyhow::{bail, Result};
+use rustc_hash::FxHashMap;
+
+use crate::dram::address::InterleaveScheme;
+use crate::os::process::{PhysExtent, Process};
+use crate::pud::isa::{BulkRequest, PudOp};
+use crate::pud::legality::{check_rowwise, RowPlan};
+use crate::util::stats::HitRate;
+
+/// The planned form of one bulk operation: per-row legality verdicts
+/// plus the physical footprint used for hazard detection.
+#[derive(Debug, Clone)]
+pub struct OpPlan {
+    pub op: PudOp,
+    /// Operation length in bytes (common to all operands).
+    pub len: u64,
+    /// Row-by-row execution plan from [`check_rowwise`].
+    pub rows: Vec<RowPlan>,
+    /// Physical `[start, end)` intervals covered by the destination.
+    pub dst_ranges: Vec<(u64, u64)>,
+    /// Physical intervals covered by all source operands.
+    pub src_ranges: Vec<(u64, u64)>,
+}
+
+fn ranges_overlap(a: &[(u64, u64)], b: &[(u64, u64)]) -> bool {
+    // Extent lists are short (merged during translation), so the
+    // quadratic scan beats building interval trees per op.
+    a.iter()
+        .any(|&(s1, e1)| b.iter().any(|&(s2, e2)| s1 < e2 && s2 < e1))
+}
+
+impl OpPlan {
+    pub fn pud_rows(&self) -> u64 {
+        self.rows.iter().filter(|r| r.is_pud()).count() as u64
+    }
+
+    pub fn fallback_rows(&self) -> u64 {
+        self.rows.len() as u64 - self.pud_rows()
+    }
+
+    /// Whether the destination physically overlaps this op's own
+    /// sources (memmove-style). Such ops keep their serial per-run
+    /// dispatch order instead of being coalesced.
+    pub fn self_aliased(&self) -> bool {
+        ranges_overlap(&self.dst_ranges, &self.src_ranges)
+    }
+
+    /// Data hazard between two planned ops: any write-write or
+    /// read-write overlap of their physical footprints. Hazardous ops
+    /// must execute in submission order (separate scheduler waves).
+    pub fn conflicts_with(&self, other: &OpPlan) -> bool {
+        ranges_overlap(&self.dst_ranges, &other.dst_ranges)
+            || ranges_overlap(&self.dst_ranges, &other.src_ranges)
+            || ranges_overlap(&self.src_ranges, &other.dst_ranges)
+    }
+}
+
+struct CacheEntry {
+    epoch: u64,
+    extents: Rc<Vec<PhysExtent>>,
+}
+
+/// Per-process extent-translation cache.
+///
+/// Keyed by `(pid, va, len)`; an entry is valid only while the owning
+/// process's `translation_epoch` matches the one it was filled under.
+/// The cache is flushed wholesale when it grows past `cap` — stale
+/// epochs dominate by then and the entries are cheap to rebuild.
+pub struct ExtentCache {
+    entries: FxHashMap<(u32, u64, u64), CacheEntry>,
+    /// Hit/miss counters (reported through the pipeline stats).
+    pub lookups: HitRate,
+    cap: usize,
+}
+
+impl Default for ExtentCache {
+    fn default() -> Self {
+        Self {
+            entries: FxHashMap::default(),
+            lookups: HitRate::default(),
+            cap: 8192,
+        }
+    }
+}
+
+impl ExtentCache {
+    /// Translate `va..va+len` of `proc`, serving from cache when the
+    /// process's translation epoch still matches.
+    pub fn get(
+        &mut self,
+        proc: &Process,
+        va: u64,
+        len: u64,
+    ) -> Result<Rc<Vec<PhysExtent>>> {
+        let key = (proc.pid.0, va, len);
+        if let Some(e) = self.entries.get(&key) {
+            if e.epoch == proc.translation_epoch {
+                self.lookups.record(true);
+                return Ok(Rc::clone(&e.extents));
+            }
+        }
+        self.lookups.record(false);
+        let extents = Rc::new(proc.phys_extents(va, len)?);
+        if self.entries.len() >= self.cap {
+            self.entries.clear();
+        }
+        self.entries.insert(
+            key,
+            CacheEntry {
+                epoch: proc.translation_epoch,
+                extents: Rc::clone(&extents),
+            },
+        );
+        Ok(extents)
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+}
+
+/// The planner: owns the translation cache and reusable operand
+/// scratch so the hot path allocates nothing on cache hits beyond the
+/// plan itself.
+#[derive(Default)]
+pub struct Planner {
+    pub cache: ExtentCache,
+    scratch: Vec<Rc<Vec<PhysExtent>>>,
+}
+
+impl Planner {
+    /// Lower one request into an [`OpPlan`].
+    pub fn plan(
+        &mut self,
+        scheme: &InterleaveScheme,
+        proc: &Process,
+        req: &BulkRequest,
+    ) -> Result<OpPlan> {
+        if req.len == 0 {
+            bail!("zero-length bulk op");
+        }
+        // `BulkRequest::new` asserts this, but the fields are public;
+        // catch hand-built requests at plan time (all-or-nothing)
+        // rather than mid-batch in the executor.
+        if req.srcs.len() != req.op.arity() {
+            bail!(
+                "arity mismatch for {}: {} srcs, want {}",
+                req.op,
+                req.srcs.len(),
+                req.op.arity()
+            );
+        }
+        self.scratch.clear();
+        let dst = self.cache.get(proc, req.dst, req.len)?;
+        self.scratch.push(dst);
+        for s in &req.srcs {
+            let e = self.cache.get(proc, *s, req.len)?;
+            self.scratch.push(e);
+        }
+        let operands: Vec<&[PhysExtent]> =
+            self.scratch.iter().map(|e| e.as_slice()).collect();
+        let rows = check_rowwise(scheme, &operands, req.len);
+        let dst_ranges = intervals(&self.scratch[0]);
+        let mut src_ranges = Vec::new();
+        for e in &self.scratch[1..] {
+            src_ranges.extend(intervals(e));
+        }
+        self.scratch.clear();
+        Ok(OpPlan {
+            op: req.op,
+            len: req.len,
+            rows,
+            dst_ranges,
+            src_ranges,
+        })
+    }
+}
+
+fn intervals(extents: &[PhysExtent]) -> Vec<(u64, u64)> {
+    extents
+        .iter()
+        .map(|e| (e.paddr, e.paddr + e.len))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dram::geometry::{DramGeometry, SubarrayId};
+    use crate::os::process::Pid;
+    use crate::os::vma::VmaKind;
+    use crate::os::PAGE_SIZE;
+
+    fn scheme() -> InterleaveScheme {
+        InterleaveScheme::row_major(DramGeometry {
+            channels: 1,
+            ranks_per_channel: 1,
+            banks_per_rank: 2,
+            subarrays_per_bank: 4,
+            rows_per_subarray: 64,
+            row_bytes: 8192,
+        })
+    }
+
+    /// Map `rows.len()` rows of subarray `sid` contiguously in VA.
+    fn map_rows(proc: &mut Process, s: &InterleaveScheme, sid: u32, rows: &[u32]) -> u64 {
+        let row_bytes = s.geometry.row_bytes as u64;
+        let pages = row_bytes / PAGE_SIZE;
+        let va = proc
+            .mmap(rows.len() as u64 * row_bytes, row_bytes, VmaKind::Pud)
+            .unwrap();
+        for (i, r) in rows.iter().enumerate() {
+            let pa = s.row_start_addr(SubarrayId(sid), *r);
+            for p in 0..pages {
+                proc.page_table
+                    .map(
+                        va + i as u64 * row_bytes + p * PAGE_SIZE,
+                        pa + p * PAGE_SIZE,
+                        crate::os::page_table::PageKind::Base,
+                    )
+                    .unwrap();
+            }
+        }
+        va
+    }
+
+    #[test]
+    fn cache_hits_on_stable_mappings() {
+        let s = scheme();
+        let mut proc = Process::new(Pid(1));
+        let row = s.geometry.row_bytes as u64;
+        let dst = map_rows(&mut proc, &s, 0, &[1]);
+        let src = map_rows(&mut proc, &s, 0, &[2]);
+        let mut planner = Planner::default();
+        let req = BulkRequest::new(PudOp::Copy, dst, vec![src], row);
+        let p1 = planner.plan(&s, &proc, &req).unwrap();
+        assert_eq!(planner.cache.lookups.hits, 0);
+        assert_eq!(planner.cache.lookups.total, 2);
+        let p2 = planner.plan(&s, &proc, &req).unwrap();
+        assert_eq!(planner.cache.lookups.hits, 2);
+        assert_eq!(p1.rows, p2.rows);
+        assert_eq!(p1.pud_rows(), 1);
+    }
+
+    #[test]
+    fn unmap_invalidates_cached_extents() {
+        let s = scheme();
+        let mut proc = Process::new(Pid(1));
+        let row = s.geometry.row_bytes as u64;
+        let dst = map_rows(&mut proc, &s, 1, &[1]);
+        let src = map_rows(&mut proc, &s, 1, &[2]);
+        let mut planner = Planner::default();
+        let req = BulkRequest::new(PudOp::Copy, dst, vec![src], row);
+        planner.plan(&s, &proc, &req).unwrap();
+        // tear the source down: the next plan must fail, not serve a
+        // stale translation
+        let pages = row / PAGE_SIZE;
+        for p in 0..pages {
+            proc.unmap_page(src + p * PAGE_SIZE).unwrap();
+        }
+        assert!(planner.plan(&s, &proc, &req).is_err());
+    }
+
+    #[test]
+    fn footprints_and_hazards() {
+        let s = scheme();
+        let mut proc = Process::new(Pid(1));
+        let row = s.geometry.row_bytes as u64;
+        let a = map_rows(&mut proc, &s, 2, &[1]);
+        let b = map_rows(&mut proc, &s, 2, &[2]);
+        let c = map_rows(&mut proc, &s, 2, &[3]);
+        let mut planner = Planner::default();
+        // op1: b = copy(a); op2: c = copy(b)  -> RAW hazard
+        let p1 = planner
+            .plan(&s, &proc, &BulkRequest::new(PudOp::Copy, b, vec![a], row))
+            .unwrap();
+        let p2 = planner
+            .plan(&s, &proc, &BulkRequest::new(PudOp::Copy, c, vec![b], row))
+            .unwrap();
+        assert!(p1.conflicts_with(&p2));
+        assert!(p2.conflicts_with(&p1));
+        assert!(!p1.self_aliased());
+        // op3: c = copy(a) is independent of op1
+        let p3 = planner
+            .plan(&s, &proc, &BulkRequest::new(PudOp::Copy, c, vec![a], row))
+            .unwrap();
+        assert!(!p1.conflicts_with(&p3));
+        // in-place op aliases itself
+        let p4 = planner
+            .plan(&s, &proc, &BulkRequest::new(PudOp::Copy, a, vec![a], row))
+            .unwrap();
+        assert!(p4.self_aliased());
+    }
+
+    #[test]
+    fn zero_length_rejected() {
+        let s = scheme();
+        let proc = Process::new(Pid(1));
+        let mut planner = Planner::default();
+        let req = BulkRequest::new(PudOp::Zero, 0x4000, vec![], 0);
+        assert!(planner.plan(&s, &proc, &req).is_err());
+    }
+}

@@ -1,0 +1,401 @@
+//! Scheduling layer: turns a batch of [`OpPlan`]s into an executable
+//! [`Schedule`].
+//!
+//! Two jobs happen here (DESIGN.md §4):
+//!
+//! 1. **Hazard-aware waves.** Ops are split, in submission order, into
+//!    waves of pairwise-independent operations (no physical overlap
+//!    between any op's destination and another's operands). Within a
+//!    wave execution order is immaterial, so fallback work can be
+//!    coalesced across ops and PUD rows can overlap across banks;
+//!    waves themselves serialize, which is exactly what preserves
+//!    serial semantics for dependent chains.
+//! 2. **Cross-op fallback coalescing.** The per-op [`fallback_runs`]
+//!    of every op in a wave are regrouped by op kind into
+//!    [`DispatchGroup`]s — one CPU/XLA dispatch each — instead of one
+//!    dispatch per run. Self-aliased ops (dst overlapping own srcs)
+//!    keep their serial per-run dispatch order.
+//!
+//! The scheduler also prices the batch: PUD rows land on per-bank
+//! command timelines (banks run concurrently — the bank-level
+//! parallelism MIMDRAM exploits), fallback rows on the serial CPU
+//! timeline. The resulting makespan is reported as the batch's
+//! *elapsed* simulated time alongside the serial-equivalent per-op
+//! sums, which stay byte-for-byte compatible with one-at-a-time
+//! submission.
+
+use rustc_hash::FxHashMap;
+
+use crate::dram::address::InterleaveScheme;
+use crate::dram::timing::TimingParams;
+use crate::pud::isa::PudOp;
+
+use super::batch::fallback_runs;
+use super::plan::OpPlan;
+
+/// A contiguous span of fallback rows of one op, as placed inside a
+/// dispatch group's packed operand buffers.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Segment {
+    /// Index of the op in the batch.
+    pub op_idx: usize,
+    /// First row index of the span within the op's plan.
+    pub first_row_idx: usize,
+    /// Rows in the span.
+    pub rows: usize,
+    /// Payload bytes of the span.
+    pub bytes: u64,
+}
+
+/// One fallback dispatch: segments (possibly from several ops of the
+/// same kind) packed back-to-back into a single kernel invocation.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct DispatchGroup {
+    pub op: PudOp,
+    pub segments: Vec<Segment>,
+    /// Total payload bytes across segments.
+    pub bytes: u64,
+}
+
+impl DispatchGroup {
+    pub fn rows(&self) -> usize {
+        self.segments.iter().map(|s| s.rows).sum()
+    }
+}
+
+/// A wave of pairwise-independent ops plus its coalesced fallback
+/// dispatches and simulated timing.
+#[derive(Debug, Clone)]
+pub struct Wave {
+    /// Batch indices of the ops in this wave (submission order).
+    pub op_indices: Vec<usize>,
+    /// Coalesced fallback dispatches for the wave.
+    pub groups: Vec<DispatchGroup>,
+    /// Bank-parallel makespan of the wave's PUD rows (incl. per-op
+    /// dispatch overheads).
+    pub pud_ns: f64,
+    /// Serial CPU time of the wave's fallback rows (incl. per-op
+    /// dispatch overheads).
+    pub fallback_ns: f64,
+}
+
+impl Wave {
+    pub fn elapsed_ns(&self) -> f64 {
+        self.pud_ns + self.fallback_ns
+    }
+}
+
+/// The full schedule for one batch.
+#[derive(Debug, Clone, Default)]
+pub struct Schedule {
+    pub waves: Vec<Wave>,
+}
+
+impl Schedule {
+    /// Simulated completion time of the batch: waves serialize, banks
+    /// within a wave run concurrently.
+    pub fn elapsed_ns(&self) -> f64 {
+        self.waves.iter().map(Wave::elapsed_ns).sum()
+    }
+
+    /// Total fallback dispatches the executor will issue.
+    pub fn dispatch_groups(&self) -> u64 {
+        self.waves.iter().map(|w| w.groups.len() as u64).sum()
+    }
+}
+
+/// Build the schedule for `plans` (in submission order).
+pub fn build(
+    scheme: &InterleaveScheme,
+    timing: &TimingParams,
+    plans: &[OpPlan],
+) -> Schedule {
+    let mut schedule = Schedule::default();
+    let mut wave_start = 0usize;
+    while wave_start < plans.len() {
+        let mut end = wave_start + 1;
+        while end < plans.len() {
+            let candidate = &plans[end];
+            if plans[wave_start..end]
+                .iter()
+                .any(|p| p.conflicts_with(candidate))
+            {
+                break;
+            }
+            end += 1;
+        }
+        schedule
+            .waves
+            .push(build_wave(scheme, timing, plans, wave_start..end));
+        wave_start = end;
+    }
+    schedule
+}
+
+fn build_wave(
+    scheme: &InterleaveScheme,
+    timing: &TimingParams,
+    plans: &[OpPlan],
+    range: std::ops::Range<usize>,
+) -> Wave {
+    let geometry = &scheme.geometry;
+    let mut groups: Vec<DispatchGroup> = Vec::new();
+    // op kind -> open coalescing group index
+    let mut open: FxHashMap<PudOp, usize> = FxHashMap::default();
+    let mut bank_busy: FxHashMap<u32, f64> = FxHashMap::default();
+    let mut pud_overhead = 0.0f64;
+    let mut fallback_ns = 0.0f64;
+
+    for op_idx in range.clone() {
+        let plan = &plans[op_idx];
+        // --- timing: PUD rows onto their banks, fallback rows onto
+        // the serial CPU timeline (mirrors PudEngine's per-op sums)
+        let row_cost = plan.op.pud_row_ns(timing);
+        let mut has_pud = false;
+        let mut has_fallback = false;
+        for row in &plan.rows {
+            if let Some(loc) = row.pud_dst() {
+                *bank_busy.entry(geometry.bank_id(loc)).or_insert(0.0) += row_cost;
+                has_pud = true;
+            } else {
+                let arity = row.fallback_arity().unwrap_or(0);
+                fallback_ns += timing.fallback_row_ns(row.bytes() as u64, arity);
+                has_fallback = true;
+            }
+        }
+        if has_pud {
+            pud_overhead += timing.pud_dispatch_overhead;
+        }
+        if has_fallback {
+            fallback_ns += timing.cpu_dispatch_overhead;
+        }
+
+        // --- fallback coalescing
+        let runs = fallback_runs(&plan.rows);
+        if runs.is_empty() {
+            continue;
+        }
+        if plan.self_aliased() {
+            // keep the serial per-run dispatch order for memmove-style
+            // ops: coalescing would reorder their gathers/scatters
+            for run in runs {
+                groups.push(DispatchGroup {
+                    op: plan.op,
+                    segments: vec![Segment {
+                        op_idx,
+                        first_row_idx: run.first_row_idx,
+                        rows: run.rows,
+                        bytes: run.bytes,
+                    }],
+                    bytes: run.bytes,
+                });
+            }
+            continue;
+        }
+        let gidx = *open.entry(plan.op).or_insert_with(|| {
+            groups.push(DispatchGroup {
+                op: plan.op,
+                segments: Vec::new(),
+                bytes: 0,
+            });
+            groups.len() - 1
+        });
+        for run in runs {
+            groups[gidx].segments.push(Segment {
+                op_idx,
+                first_row_idx: run.first_row_idx,
+                rows: run.rows,
+                bytes: run.bytes,
+            });
+            groups[gidx].bytes += run.bytes;
+        }
+    }
+
+    Wave {
+        op_indices: range.collect(),
+        groups,
+        pud_ns: timing.bank_parallel_ns(bank_busy.into_values()) + pud_overhead,
+        fallback_ns,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dram::geometry::Loc;
+    use crate::os::process::PhysExtent;
+    use crate::pud::legality::RowPlan;
+
+    fn scheme() -> InterleaveScheme {
+        InterleaveScheme::row_major(crate::dram::geometry::DramGeometry {
+            channels: 1,
+            ranks_per_channel: 1,
+            banks_per_rank: 4,
+            subarrays_per_bank: 2,
+            rows_per_subarray: 32,
+            row_bytes: 8192,
+        })
+    }
+
+    fn pud_row(bank: u32, bytes: u32) -> RowPlan {
+        let loc = Loc {
+            channel: 0,
+            rank: 0,
+            bank,
+            subarray: 0,
+            row: 1,
+            column: 0,
+        };
+        RowPlan::Pud {
+            sid: crate::dram::geometry::SubarrayId(bank * 2),
+            dst: loc,
+            srcs: vec![loc],
+            bytes,
+        }
+    }
+
+    fn fb_row(paddr: u64, bytes: u32) -> RowPlan {
+        RowPlan::Fallback {
+            dst: vec![PhysExtent {
+                paddr,
+                len: bytes as u64,
+            }],
+            srcs: vec![vec![PhysExtent {
+                paddr: paddr + (1 << 20),
+                len: bytes as u64,
+            }]],
+            bytes,
+        }
+    }
+
+    fn plan_of(op: PudOp, rows: Vec<RowPlan>, dst: (u64, u64), src: (u64, u64)) -> OpPlan {
+        let len = rows.iter().map(|r| r.bytes() as u64).sum();
+        OpPlan {
+            op,
+            len,
+            rows,
+            dst_ranges: vec![dst],
+            src_ranges: vec![src],
+        }
+    }
+
+    #[test]
+    fn independent_ops_share_a_wave_and_a_group() {
+        let s = scheme();
+        let t = TimingParams::default();
+        let p1 = plan_of(
+            PudOp::Copy,
+            vec![fb_row(0x1000, 8192)],
+            (0x1000, 0x3000),
+            (0x101000, 0x103000),
+        );
+        let p2 = plan_of(
+            PudOp::Copy,
+            vec![fb_row(0x200000, 8192)],
+            (0x200000, 0x202000),
+            (0x301000, 0x303000),
+        );
+        let sched = build(&s, &t, &[p1, p2]);
+        assert_eq!(sched.waves.len(), 1);
+        assert_eq!(sched.waves[0].groups.len(), 1, "same-kind runs coalesce");
+        assert_eq!(sched.waves[0].groups[0].rows(), 2);
+        assert_eq!(sched.dispatch_groups(), 1);
+    }
+
+    #[test]
+    fn dependent_ops_split_waves() {
+        let s = scheme();
+        let t = TimingParams::default();
+        // p2 reads what p1 writes
+        let p1 = plan_of(
+            PudOp::Copy,
+            vec![fb_row(0x1000, 8192)],
+            (0x1000, 0x3000),
+            (0x101000, 0x103000),
+        );
+        let p2 = plan_of(
+            PudOp::Copy,
+            vec![fb_row(0x400000, 8192)],
+            (0x400000, 0x402000),
+            (0x1000, 0x3000),
+        );
+        let sched = build(&s, &t, &[p1, p2]);
+        assert_eq!(sched.waves.len(), 2);
+        assert_eq!(sched.dispatch_groups(), 2);
+    }
+
+    #[test]
+    fn different_kinds_get_separate_groups() {
+        let s = scheme();
+        let t = TimingParams::default();
+        let p1 = plan_of(
+            PudOp::Copy,
+            vec![fb_row(0x1000, 8192)],
+            (0x1000, 0x3000),
+            (0x101000, 0x103000),
+        );
+        let p2 = plan_of(
+            PudOp::Xor,
+            vec![fb_row(0x200000, 8192)],
+            (0x200000, 0x202000),
+            (0x301000, 0x303000),
+        );
+        let sched = build(&s, &t, &[p1, p2]);
+        assert_eq!(sched.waves.len(), 1);
+        assert_eq!(sched.waves[0].groups.len(), 2);
+    }
+
+    #[test]
+    fn self_aliased_ops_are_not_coalesced() {
+        let s = scheme();
+        let t = TimingParams::default();
+        let aliased = plan_of(
+            PudOp::Copy,
+            vec![fb_row(0x1000, 8192), pud_row(0, 8192), fb_row(0x9000, 8192)],
+            (0x1000, 0x3000),
+            (0x2000, 0x4000), // overlaps dst
+        );
+        let other = plan_of(
+            PudOp::Copy,
+            vec![fb_row(0x800000, 8192)],
+            (0x800000, 0x802000),
+            (0x901000, 0x903000),
+        );
+        let sched = build(&s, &t, &[aliased, other]);
+        assert_eq!(sched.waves.len(), 1);
+        // aliased op: one group per run (2 runs); other op: its own
+        // group (opened separately since the aliased op never opens a
+        // shared one)
+        assert_eq!(sched.waves[0].groups.len(), 3);
+    }
+
+    #[test]
+    fn bank_parallel_rows_overlap_in_time() {
+        let s = scheme();
+        let t = TimingParams::default();
+        // 4 PUD copy rows on 4 distinct banks, one op
+        let rows: Vec<RowPlan> = (0..4).map(|b| pud_row(b, 8192)).collect();
+        let p = plan_of(PudOp::Copy, rows, (0x1000, 0x3000), (0x101000, 0x103000));
+        let serial_sum = 4.0 * t.rowclone_fpm_ns(1) + t.pud_dispatch_overhead;
+        let sched = build(&s, &t, &[p]);
+        let elapsed = sched.elapsed_ns();
+        assert!(
+            elapsed < serial_sum,
+            "banks should overlap: {elapsed} vs serial {serial_sum}"
+        );
+        assert!(
+            (elapsed - (t.rowclone_fpm_ns(1) + t.pud_dispatch_overhead)).abs() < 1e-9
+        );
+    }
+
+    #[test]
+    fn single_bank_elapsed_matches_serial_sum() {
+        let s = scheme();
+        let t = TimingParams::default();
+        let rows: Vec<RowPlan> = (0..3).map(|_| pud_row(1, 8192)).collect();
+        let p = plan_of(PudOp::And, rows, (0x1000, 0x3000), (0x101000, 0x103000));
+        let sched = build(&s, &t, &[p]);
+        let want = 3.0 * t.ambit_and_or_ns(1) + t.pud_dispatch_overhead;
+        assert!((sched.elapsed_ns() - want).abs() < 1e-9);
+    }
+}

@@ -1,4 +1,14 @@
 //! Cumulative coordinator statistics.
+//!
+//! [`CoordStats`] counts the *work* (rows, bytes, simulated time);
+//! those totals are invariant under batching: a batch of N ops and N
+//! serial submits produce identical values. The exceptions are the
+//! dispatch-shape counters `xla_dispatches`/`xla_wall_ns`, which count
+//! what the loaded XLA runtime actually executed and therefore drop
+//! when coalescing merges runs. [`PipelineStats`] counts the shape of
+//! the request path (waves, coalesced dispatch units, cache hits,
+//! batch makespans) in every mode and is where batching's gains are
+//! measured.
 
 use crate::pud::exec::ExecStats;
 use crate::util::stats::HitRate;
@@ -68,9 +78,57 @@ impl CoordStats {
     }
 }
 
+/// Per-stage statistics of the plan/schedule/execute pipeline.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct PipelineStats {
+    /// Batches submitted (a plain `submit` is a one-element batch).
+    pub batches: u64,
+    /// Hazard waves executed across all batches.
+    pub waves: u64,
+    /// Operations lowered to [`super::plan::OpPlan`]s.
+    pub planned_ops: u64,
+    /// Extent-translation cache hit rate (copied from the planner).
+    pub extent_cache: HitRate,
+    /// Fallback dispatch units issued: one per coalesced dispatch
+    /// group. Counted in Scalar mode too (where it measures what the
+    /// XLA runtime *would* be asked to do); with the runtime loaded it
+    /// equals the number of `run_op` calls.
+    pub fallback_dispatches: u64,
+    /// Fallback rows covered by those dispatches.
+    pub coalesced_fallback_rows: u64,
+    /// Simulated bank-parallel completion time summed over batches.
+    /// Always <= the serial-equivalent `CoordStats` time sums.
+    pub elapsed_ns: f64,
+    /// Host wall-clock spent in each stage (§Perf only).
+    pub plan_wall_ns: u64,
+    pub schedule_wall_ns: u64,
+    pub execute_wall_ns: u64,
+}
+
+impl PipelineStats {
+    /// Mean ops per wave — >1 means the scheduler is extracting
+    /// cross-op parallelism.
+    pub fn ops_per_wave(&self) -> f64 {
+        if self.waves == 0 {
+            0.0
+        } else {
+            self.planned_ops as f64 / self.waves as f64
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn pipeline_ops_per_wave() {
+        let mut p = PipelineStats::default();
+        assert_eq!(p.ops_per_wave(), 0.0);
+        p.planned_ops = 6;
+        p.waves = 2;
+        assert_eq!(p.ops_per_wave(), 3.0);
+    }
 
     #[test]
     fn fractions_and_totals() {

@@ -17,7 +17,7 @@ use crate::pud::exec::PudEngine;
 use crate::pud::isa::BulkRequest;
 use crate::runtime::XlaRuntime;
 
-use super::dispatch::{Coordinator, FallbackMode};
+use super::dispatch::{BatchReport, Coordinator, FallbackMode};
 
 /// System construction options.
 pub struct SystemConfig {
@@ -52,6 +52,8 @@ pub struct System {
     pub coord: Coordinator,
     processes: FxHashMap<Pid, Process>,
     next_pid: u32,
+    /// Per-process request queues drained by [`System::flush`].
+    queued: FxHashMap<Pid, Vec<BulkRequest>>,
 }
 
 impl System {
@@ -72,6 +74,7 @@ impl System {
             coord: Coordinator::new(engine, fallback),
             processes: FxHashMap::default(),
             next_pid: 1,
+            queued: FxHashMap::default(),
         })
     }
 
@@ -130,6 +133,54 @@ impl System {
     pub fn submit(&mut self, pid: Pid, req: &BulkRequest) -> Result<f64> {
         let proc = self.processes.get(&pid).expect("live pid");
         self.coord.submit(proc, req)
+    }
+
+    /// Submit a batch of bulk operations for `pid` through the
+    /// plan/schedule/execute pipeline. Results and stats totals are
+    /// identical to submitting the requests serially; control
+    /// overheads are amortized (see [`Coordinator::submit_batch`]).
+    pub fn submit_batch(
+        &mut self,
+        pid: Pid,
+        reqs: &[BulkRequest],
+    ) -> Result<BatchReport> {
+        let proc = self.processes.get(&pid).expect("live pid");
+        self.coord.submit_batch(proc, reqs)
+    }
+
+    /// Queue a request for `pid` without executing it. Queued requests
+    /// run as one batch at the next [`System::flush`].
+    pub fn enqueue(&mut self, pid: Pid, req: BulkRequest) {
+        self.queued.entry(pid).or_default().push(req);
+    }
+
+    /// Requests currently queued for `pid`.
+    pub fn queued_len(&self, pid: Pid) -> usize {
+        self.queued.get(&pid).map_or(0, Vec::len)
+    }
+
+    /// Drain `pid`'s queue through [`System::submit_batch`]. An empty
+    /// queue yields an empty report.
+    ///
+    /// Error handling: planning errors are all-or-nothing (nothing
+    /// has executed), so the batch is put back on the queue for
+    /// inspection or retry. If the failure happened during execution
+    /// a prefix of the batch has already run; the batch is then
+    /// dropped — requeueing would double-execute that prefix on
+    /// retry.
+    pub fn flush(&mut self, pid: Pid) -> Result<BatchReport> {
+        let reqs = self.queued.remove(&pid).unwrap_or_default();
+        let ops_before = self.coord.stats.ops;
+        let proc = self.processes.get(&pid).expect("live pid");
+        match self.coord.submit_batch(proc, &reqs) {
+            Ok(report) => Ok(report),
+            Err(e) => {
+                if self.coord.stats.ops == ops_before {
+                    self.queued.insert(pid, reqs);
+                }
+                Err(e)
+            }
+        }
     }
 
     /// Write bytes through a process's virtual mapping (test/workload
@@ -260,6 +311,37 @@ mod tests {
         assert_eq!(
             sys.read_virt(pid, c, len).unwrap(),
             vec![0xAFu8; len as usize]
+        );
+    }
+
+    #[test]
+    fn queue_flush_equals_direct_batch() {
+        let mut sys = small_system();
+        let pid = sys.spawn();
+        let row = sys.os.scheme.geometry.row_bytes as u64;
+        let mut m = MallocSim::new();
+        let len = 2 * row;
+        let a = sys.alloc(&mut m, pid, len).unwrap();
+        let b = sys.alloc(&mut m, pid, len).unwrap();
+        let c = sys.alloc(&mut m, pid, len).unwrap();
+        sys.write_virt(pid, a, &vec![0x33u8; len as usize]).unwrap();
+        sys.write_virt(pid, b, &vec![0x55u8; len as usize]).unwrap();
+        assert_eq!(sys.flush(pid).unwrap().per_op_ns.len(), 0, "empty queue");
+        sys.enqueue(pid, BulkRequest::new(PudOp::Or, c, vec![a, b], len));
+        sys.enqueue(pid, BulkRequest::new(PudOp::Not, b, vec![a], len));
+        assert_eq!(sys.queued_len(pid), 2);
+        assert_eq!(sys.coord.stats.ops, 0, "enqueue does not execute");
+        let report = sys.flush(pid).unwrap();
+        assert_eq!(sys.queued_len(pid), 0);
+        assert_eq!(report.per_op_ns.len(), 2);
+        assert_eq!(sys.coord.stats.ops, 2);
+        assert_eq!(
+            sys.read_virt(pid, c, len).unwrap(),
+            vec![0x33 | 0x55u8; len as usize]
+        );
+        assert_eq!(
+            sys.read_virt(pid, b, len).unwrap(),
+            vec![!0x33u8; len as usize]
         );
     }
 

@@ -107,6 +107,14 @@ impl DramGeometry {
         SubarrayId(id)
     }
 
+    /// Dense global bank id over every (channel, rank, bank) tuple —
+    /// the unit of command-timeline parallelism the batch scheduler
+    /// exploits (independent banks execute PUD sequences concurrently).
+    pub fn bank_id(&self, loc: &Loc) -> u32 {
+        (loc.channel * self.ranks_per_channel + loc.rank) * self.banks_per_rank
+            + loc.bank
+    }
+
     /// Dense global row index (subarray-major) for a location.
     pub fn global_row(&self, loc: &Loc) -> u64 {
         self.subarray_id(loc).0 as u64 * self.rows_per_subarray as u64

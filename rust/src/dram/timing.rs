@@ -132,6 +132,27 @@ impl TimingParams {
     pub fn migrate_ns(&self, rows: u64, row_bytes: u32) -> f64 {
         self.rowclone_psm_ns(rows, row_bytes)
     }
+
+    // --------------------------------------- bank-level parallelism
+
+    /// Makespan of a set of per-bank command timelines.
+    ///
+    /// PUD commands on different banks (and on independent subarrays
+    /// behind them) proceed concurrently — MIMDRAM/PiDRAM's source of
+    /// end-to-end throughput — so a batch of row operations scheduled
+    /// onto disjoint banks completes in the time of the *busiest*
+    /// bank, not the sum. The scheduler feeds the summed busy time of
+    /// each bank; an empty set completes instantly.
+    pub fn bank_parallel_ns<I: IntoIterator<Item = f64>>(&self, timelines: I) -> f64 {
+        timelines.into_iter().fold(0.0, f64::max)
+    }
+
+    /// One fallback row's DRAM+CPU streaming cost, excluding the
+    /// per-operation dispatch overhead (charged once per op). Must
+    /// match the per-row accounting in `PudEngine::execute`.
+    pub fn fallback_row_ns(&self, bytes: u64, arity: usize) -> f64 {
+        self.cpu_bulk_ns(bytes * arity as u64, bytes) - self.cpu_dispatch_overhead
+    }
 }
 
 #[cfg(test)]

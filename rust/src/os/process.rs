@@ -7,8 +7,8 @@
 
 use anyhow::{bail, Context, Result};
 
-use super::page_table::{PageKind, PageTable};
-use super::vma::{VmaKind, VmaManager};
+use super::page_table::{PageKind, PageTable, Translation};
+use super::vma::{Vma, VmaKind, VmaManager};
 use super::{HUGE_PAGE_SIZE, PAGE_SIZE};
 
 /// Process id.
@@ -23,6 +23,14 @@ pub struct Process {
     pub vmas: VmaManager,
     /// Minor page faults taken (first-touch frame assignment).
     pub minor_faults: u64,
+    /// Translation epoch: bumped whenever an existing translation is
+    /// torn down ([`Process::unmap_page`] / [`Process::unmap_vma`]).
+    /// The coordinator's extent-translation cache keys on this, so any
+    /// unmap implicitly invalidates every cached extent list for the
+    /// process (DESIGN.md §5). Mapping *new* pages never changes the
+    /// result of a previously successful translation and therefore
+    /// does not bump the epoch.
+    pub translation_epoch: u64,
 }
 
 /// A physically contiguous extent of a virtual range.
@@ -39,7 +47,25 @@ impl Process {
             page_table: PageTable::new(),
             vmas: VmaManager::new(),
             minor_faults: 0,
+            translation_epoch: 0,
         }
+    }
+
+    /// Tear down the translation containing `vaddr` and bump the
+    /// translation epoch. Allocators must use this (not the raw page
+    /// table) so cached extent translations are invalidated.
+    pub fn unmap_page(&mut self, vaddr: u64) -> Result<Translation> {
+        let t = self.page_table.unmap(vaddr)?;
+        self.translation_epoch += 1;
+        Ok(t)
+    }
+
+    /// Remove the VMA starting at `start` and bump the translation
+    /// epoch (the range is no longer a legal operand).
+    pub fn unmap_vma(&mut self, start: u64) -> Result<Vma> {
+        let vma = self.vmas.unmap(start)?;
+        self.translation_epoch += 1;
+        Ok(vma)
     }
 
     /// Reserve a virtual range of `len` bytes (rounded to pages) with
@@ -173,6 +199,20 @@ mod tests {
         let va = p.mmap(2 * PAGE_SIZE, PAGE_SIZE, VmaKind::Anon).unwrap();
         p.populate_base(va, 1, || Ok(3)).unwrap();
         assert!(p.phys_extents(va, 2 * PAGE_SIZE).is_err());
+    }
+
+    #[test]
+    fn unmap_wrappers_bump_translation_epoch() {
+        let mut p = Process::new(Pid(1));
+        let va = p.mmap(2 * PAGE_SIZE, PAGE_SIZE, VmaKind::Anon).unwrap();
+        p.populate_base(va, 2, || Ok(9)).unwrap();
+        assert_eq!(p.translation_epoch, 0);
+        p.unmap_page(va).unwrap();
+        assert_eq!(p.translation_epoch, 1);
+        p.unmap_page(va + PAGE_SIZE).unwrap();
+        p.unmap_vma(va).unwrap();
+        assert_eq!(p.translation_epoch, 3);
+        assert!(p.unmap_page(va).is_err());
     }
 
     #[test]

@@ -222,7 +222,7 @@ macro_rules! assert_prop {
         }
     };
 }
-pub use assert_prop;
+pub use crate::assert_prop;
 
 #[cfg(test)]
 mod tests {

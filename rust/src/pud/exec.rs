@@ -125,10 +125,8 @@ impl PudEngine {
                     for e in dst {
                         self.device.account_cpu_write(e.paddr, e.len);
                     }
-                    stats.fallback_ns += self
-                        .timing
-                        .cpu_bulk_ns(b * srcs.len() as u64, b)
-                        - self.timing.cpu_dispatch_overhead;
+                    stats.fallback_ns +=
+                        self.timing.fallback_row_ns(b, srcs.len());
                     stats.fallback_rows += 1;
                     stats.fallback_bytes += b;
                     if fallback_executed {
@@ -175,13 +173,27 @@ impl PudEngine {
         bytes: u64,
     ) -> Vec<u8> {
         let mut buf = vec![0u8; bytes as usize];
+        self.gather_into(extents, &mut buf);
+        buf
+    }
+
+    /// As [`PudEngine::gather`], but into a caller-owned buffer — the
+    /// batch executor reuses its scratch across dispatches instead of
+    /// allocating per run.
+    pub fn gather_into(
+        &mut self,
+        extents: &[crate::os::process::PhysExtent],
+        buf: &mut [u8],
+    ) {
         let mut off = 0usize;
         for e in extents {
             let n = (e.len as usize).min(buf.len() - off);
             self.device.read(e.paddr, &mut buf[off..off + n]);
             off += n;
+            if off == buf.len() {
+                break;
+            }
         }
-        buf
     }
 
     /// Write a contiguous buffer back to a scattered extent list.

@@ -44,6 +44,21 @@ impl PudOp {
         PudOp::Xor,
     ];
 
+    /// Analytic cost of one PUD-executed row of this op (matches the
+    /// command sequences charged by [`crate::pud::exec::PudEngine`]:
+    /// RowClone AAPs for `Zero`/`Copy`, Ambit sequences for the rest).
+    /// The scheduler uses this to lay rows onto per-bank timelines
+    /// without re-running the engine.
+    pub fn pud_row_ns(&self, t: &crate::dram::timing::TimingParams) -> f64 {
+        match self {
+            PudOp::Zero => t.rowclone_zero_ns(1),
+            PudOp::Copy => t.rowclone_fpm_ns(1),
+            PudOp::Not => t.ambit_not_ns(1),
+            PudOp::And | PudOp::Or => t.ambit_and_or_ns(1),
+            PudOp::Xor => t.ambit_xor_ns(1),
+        }
+    }
+
     /// Artifact base name of the matching L1 kernel.
     pub fn kernel_name(&self) -> &'static str {
         match self {

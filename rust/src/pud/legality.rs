@@ -50,6 +50,24 @@ impl RowPlan {
             RowPlan::Pud { bytes, .. } | RowPlan::Fallback { bytes, .. } => *bytes,
         }
     }
+
+    /// Destination location of a PUD row (`None` for fallback rows).
+    /// The batch scheduler uses this to place the row on its bank's
+    /// command timeline.
+    pub fn pud_dst(&self) -> Option<&Loc> {
+        match self {
+            RowPlan::Pud { dst, .. } => Some(dst),
+            RowPlan::Fallback { .. } => None,
+        }
+    }
+
+    /// Source-operand count of a fallback row (`None` for PUD rows).
+    pub fn fallback_arity(&self) -> Option<usize> {
+        match self {
+            RowPlan::Fallback { srcs, .. } => Some(srcs.len()),
+            RowPlan::Pud { .. } => None,
+        }
+    }
 }
 
 /// Iterator-style cursor over an extent list.
@@ -233,9 +251,6 @@ mod tests {
         // rows 0,1 vs rows 2,3 vs rows 4,5 of subarray 0 (row stride =
         // row_bytes * banks = 512 in this scheme)
         let stride = 512u64;
-        let dst = ext(0, 2 * 256);
-        let a = ext(2 * stride, 2 * 256);
-        let b = ext(4 * stride, 2 * 256);
         // NOTE: extents are contiguous in *physical address*, but rows
         // of one subarray are strided. A 512-byte contiguous extent at
         // 0 covers row 0 of subarray 0 AND row 0 of bank 1's subarray.

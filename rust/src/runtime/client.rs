@@ -16,6 +16,11 @@ use rustc_hash::FxHashMap;
 
 use super::manifest::{self, ManifestEntry};
 
+// Without the feature, `xla::` resolves to the inert stub; with it,
+// the real bindings must be supplied externally (DESIGN.md §7).
+#[cfg(not(feature = "xla-runtime"))]
+use super::pjrt_stub as xla;
+
 /// Bytes per DRAM row as seen by the kernels (2048 x i32).
 pub const ROW_BYTES: usize = 8192;
 pub const LANES: usize = 2048;

@@ -7,8 +7,13 @@
 //! The runtime is optional at the API level (simulation-only runs use
 //! the scalar fallback in [`crate::pud::exec`]); the end-to-end driver
 //! and the benchmarks load it so the full three-layer stack executes.
+//! Without the `xla-runtime` cargo feature the client compiles against
+//! [`pjrt_stub`], which fails cleanly at client construction — the
+//! offline vendor set has no PJRT bindings (DESIGN.md §7).
 
 pub mod client;
 pub mod manifest;
+#[cfg(not(feature = "xla-runtime"))]
+pub mod pjrt_stub;
 
 pub use client::{XlaRuntime, LANES, ROW_BYTES};

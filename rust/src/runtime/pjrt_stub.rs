@@ -1,0 +1,125 @@
+//! Inert stand-in for the `xla` (PJRT) bindings.
+//!
+//! The offline build environment does not ship the XLA/PJRT Rust
+//! bindings, so [`client`](super::client) compiles against this module
+//! unless the `xla-runtime` cargo feature is enabled (DESIGN.md §7).
+//! The stub mirrors exactly the API surface the client uses; creating
+//! the CPU client fails with a descriptive error, so every downstream
+//! path (e.g. `System::boot` with an artifacts dir) degrades into a
+//! clean error while simulation-only runs — which use the scalar
+//! fallback and never construct a client — are unaffected.
+#![allow(dead_code)]
+
+use std::fmt;
+
+/// Error type mirroring `xla::Error` (only `Display` is consumed).
+#[derive(Debug)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+fn unavailable<T>() -> Result<T, Error> {
+    Err(Error(
+        "XLA/PJRT bindings unavailable: built without the `xla-runtime` \
+         feature (see DESIGN.md §7)"
+            .to_string(),
+    ))
+}
+
+/// Element types the client requests.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ElementType {
+    S32,
+}
+
+/// Mirrors `xla::HloModuleProto`.
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<Self, Error> {
+        unavailable()
+    }
+}
+
+/// Mirrors `xla::XlaComputation`.
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> Self {
+        XlaComputation
+    }
+}
+
+/// Mirrors `xla::Literal`.
+pub struct Literal;
+
+impl Literal {
+    pub fn create_from_shape_and_untyped_data(
+        _ty: ElementType,
+        _dims: &[usize],
+        _data: &[u8],
+    ) -> Result<Self, Error> {
+        unavailable()
+    }
+
+    pub fn to_tuple1(&self) -> Result<Literal, Error> {
+        unavailable()
+    }
+
+    pub fn copy_raw_to<T>(&self, _dst: &mut [T]) -> Result<(), Error> {
+        unavailable()
+    }
+
+    pub fn to_vec<T>(&self) -> Result<Vec<T>, Error> {
+        unavailable()
+    }
+}
+
+/// Mirrors `xla::PjRtBuffer`.
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal, Error> {
+        unavailable()
+    }
+}
+
+/// Mirrors `xla::PjRtLoadedExecutable`.
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>, Error> {
+        unavailable()
+    }
+}
+
+/// Mirrors `xla::PjRtClient`. The CPU constructor is the single entry
+/// point, so failing here keeps every later stub method unreachable.
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<Self, Error> {
+        unavailable()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable, Error> {
+        unavailable()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn client_construction_reports_missing_feature() {
+        let err = PjRtClient::cpu().err().expect("stub must refuse");
+        assert!(err.to_string().contains("xla-runtime"));
+    }
+}

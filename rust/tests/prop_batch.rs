@@ -1,0 +1,257 @@
+//! Property: `submit_batch` over N mixed (PUD + fallback) requests is
+//! equivalent to N serial `submit` calls — byte-identical DRAM
+//! contents, identical per-op simulated times, identical `CoordStats`
+//! totals — including partial-tail rows, operand aliasing, and
+//! dependent chains. Also: the extent-translation cache must never
+//! serve a mapping that an allocator has torn down.
+
+use puma::alloc::mallocsim::MallocSim;
+use puma::alloc::puma::{FitPolicy, PumaAlloc};
+use puma::assert_prop;
+use puma::coordinator::system::{System, SystemConfig};
+use puma::dram::address::InterleaveScheme;
+use puma::dram::geometry::DramGeometry;
+use puma::os::process::Pid;
+use puma::proptest::{self, Gen};
+use puma::pud::isa::{BulkRequest, PudOp};
+
+fn boot() -> System {
+    let scheme = InterleaveScheme::row_major(DramGeometry {
+        channels: 1,
+        ranks_per_channel: 1,
+        banks_per_rank: 4,
+        subarrays_per_bank: 8,
+        rows_per_subarray: 256,
+        row_bytes: 8192,
+    }); // 64 MiB
+    System::boot(SystemConfig {
+        scheme,
+        huge_pages: 12,
+        churn_rounds: 800,
+        seed: 0xBA7C4,
+        artifacts: None,
+        ..Default::default()
+    })
+    .unwrap()
+}
+
+/// Pure description of one generated scenario, applied identically to
+/// two freshly booted systems.
+#[derive(Debug, Clone)]
+struct BufSpec {
+    rows: u64,
+    tail: u64,
+    on_pud: bool,
+    hinted: bool,
+}
+
+#[derive(Debug, Clone)]
+struct OpSpec {
+    op: PudOp,
+    dst: usize,
+    srcs: Vec<usize>,
+    len: u64,
+}
+
+fn gen_scenario(g: &mut Gen) -> (Vec<BufSpec>, Vec<OpSpec>) {
+    let nbufs = g.usize(2..6);
+    let bufs: Vec<BufSpec> = (0..nbufs)
+        .map(|_| BufSpec {
+            rows: g.u64(1..5),
+            tail: if g.bool() { g.u64(1..8192) } else { 0 },
+            on_pud: g.bool(),
+            hinted: g.bool(),
+        })
+        .collect();
+    let buf_len = |b: &BufSpec| b.rows * 8192 + b.tail;
+    let nops = g.usize(1..7);
+    let ops = (0..nops)
+        .map(|_| {
+            let op = *g.choose(&PudOp::ALL);
+            let dst = g.usize(0..nbufs);
+            let srcs: Vec<usize> =
+                (0..op.arity()).map(|_| g.usize(0..nbufs)).collect();
+            let max_len = srcs
+                .iter()
+                .chain(std::iter::once(&dst))
+                .map(|&i| buf_len(&bufs[i]))
+                .min()
+                .unwrap();
+            // sometimes the full common length (exercising partial
+            // tails from `tail`), sometimes an arbitrary prefix
+            let len = if g.bool() { max_len } else { g.u64(1..max_len + 1) };
+            OpSpec { op, dst, srcs, len }
+        })
+        .collect();
+    (bufs, ops)
+}
+
+/// Materialize the scenario on `sys`: allocate + seed buffers, build
+/// requests. Fully deterministic, so two identically booted systems
+/// end up with identical layouts and contents.
+fn materialize(
+    sys: &mut System,
+    bufs: &[BufSpec],
+    ops: &[OpSpec],
+) -> (Pid, Vec<(u64, u64)>, Vec<BulkRequest>) {
+    let pid = sys.spawn();
+    let row = sys.os.scheme.geometry.row_bytes as u64;
+    let mut puma = PumaAlloc::new(row, FitPolicy::WorstFit);
+    puma.pim_preallocate(&mut sys.os, 8).unwrap();
+    let mut malloc = MallocSim::new();
+    let mut vas: Vec<(u64, u64)> = Vec::with_capacity(bufs.len());
+    let mut first_pud: Option<u64> = None;
+    for (i, b) in bufs.iter().enumerate() {
+        let len = b.rows * row + b.tail;
+        let va = if b.on_pud {
+            let va = match first_pud {
+                Some(hint) if b.hinted => {
+                    sys.alloc_align(&mut puma, pid, len, hint).unwrap()
+                }
+                _ => sys.alloc(&mut puma, pid, len).unwrap(),
+            };
+            first_pud.get_or_insert(va);
+            va
+        } else {
+            sys.alloc(&mut malloc, pid, len).unwrap()
+        };
+        let data: Vec<u8> =
+            (0..len).map(|j| ((i as u64 * 131 + j) % 251) as u8).collect();
+        sys.write_virt(pid, va, &data).unwrap();
+        vas.push((va, len));
+    }
+    let reqs = ops
+        .iter()
+        .map(|o| {
+            BulkRequest::new(
+                o.op,
+                vas[o.dst].0,
+                o.srcs.iter().map(|&i| vas[i].0).collect(),
+                o.len,
+            )
+        })
+        .collect();
+    (pid, vas, reqs)
+}
+
+#[test]
+fn batch_equals_serial_property() {
+    proptest::check_cases("submit_batch == N x submit", 16, |g| {
+        let (bufs, ops) = gen_scenario(g);
+
+        let mut s1 = boot();
+        let (pid1, vas1, reqs1) = materialize(&mut s1, &bufs, &ops);
+        let mut serial_ns = Vec::with_capacity(reqs1.len());
+        for r in &reqs1 {
+            serial_ns.push(s1.submit(pid1, r).unwrap());
+        }
+
+        let mut s2 = boot();
+        let (pid2, vas2, reqs2) = materialize(&mut s2, &bufs, &ops);
+        assert_prop!(vas1 == vas2, "layouts diverged: {vas1:?} vs {vas2:?}");
+        let report = s2.submit_batch(pid2, &reqs2).unwrap();
+
+        // identical per-op simulated times
+        assert_prop!(
+            report.per_op_ns == serial_ns,
+            "per-op ns diverged: {:?} vs {serial_ns:?}",
+            report.per_op_ns
+        );
+        // identical stats totals
+        assert_prop!(
+            s1.coord.stats == s2.coord.stats,
+            "stats diverged:\n{:?}\nvs\n{:?}",
+            s1.coord.stats,
+            s2.coord.stats
+        );
+        // byte-identical memory images across every buffer
+        for (i, &(va, len)) in vas1.iter().enumerate() {
+            let m1 = s1.read_virt(pid1, va, len).unwrap();
+            let m2 = s2.read_virt(pid2, va, len).unwrap();
+            assert_prop!(m1 == m2, "buffer {i} image diverged");
+        }
+        // elapsed may only shrink relative to the serial sum
+        let total: f64 = serial_ns.iter().sum();
+        assert_prop!(
+            report.elapsed_ns <= total + 1e-6,
+            "elapsed {} > serial {total}",
+            report.elapsed_ns
+        );
+    });
+}
+
+#[test]
+fn batched_partial_tail_matches_serial() {
+    // deterministic regression for the partial-tail case: len is not
+    // a row multiple, so the final row of every operand is short
+    let mut s1 = boot();
+    let mut s2 = boot();
+    let row = s1.os.scheme.geometry.row_bytes as u64;
+    let len = 3 * row + 1000;
+    let setup = |sys: &mut System| {
+        let pid = sys.spawn();
+        let mut puma = PumaAlloc::new(row, FitPolicy::WorstFit);
+        puma.pim_preallocate(&mut sys.os, 6).unwrap();
+        let a = sys.alloc(&mut puma, pid, len).unwrap();
+        let b = sys.alloc_align(&mut puma, pid, len, a).unwrap();
+        let c = sys.alloc_align(&mut puma, pid, len, a).unwrap();
+        let data: Vec<u8> = (0..len).map(|i| (i % 241) as u8).collect();
+        sys.write_virt(pid, a, &data).unwrap();
+        sys.write_virt(pid, b, &data).unwrap();
+        (pid, a, b, c)
+    };
+    let (p1, a1, b1, c1) = setup(&mut s1);
+    let (p2, a2, b2, c2) = setup(&mut s2);
+    assert_eq!((a1, b1, c1), (a2, b2, c2));
+    let reqs = vec![
+        BulkRequest::new(PudOp::Xor, c1, vec![a1, b1], len),
+        BulkRequest::new(PudOp::Not, b1, vec![a1], len),
+    ];
+    for r in &reqs {
+        s1.submit(p1, r).unwrap();
+    }
+    s2.submit_batch(p2, &reqs).unwrap();
+    assert_eq!(s1.coord.stats, s2.coord.stats);
+    assert_eq!(
+        s1.read_virt(p1, c1, len).unwrap(),
+        s2.read_virt(p2, c2, len).unwrap()
+    );
+    assert_eq!(
+        s1.read_virt(p1, b1, len).unwrap(),
+        s2.read_virt(p2, b2, len).unwrap()
+    );
+    // xor of identical inputs is zero; not(a) flips the pattern
+    assert_eq!(s1.read_virt(p1, c1, len).unwrap(), vec![0u8; len as usize]);
+}
+
+#[test]
+fn extent_cache_never_serves_freed_mappings() {
+    let mut sys = boot();
+    let pid = sys.spawn();
+    let row = sys.os.scheme.geometry.row_bytes as u64;
+    let len = 2 * row;
+    let mut puma = PumaAlloc::new(row, FitPolicy::WorstFit);
+    puma.pim_preallocate(&mut sys.os, 6).unwrap();
+    let a = sys.alloc(&mut puma, pid, len).unwrap();
+    let b = sys.alloc_align(&mut puma, pid, len, a).unwrap();
+    sys.write_virt(pid, a, &vec![0x5Au8; len as usize]).unwrap();
+    let req = BulkRequest::new(PudOp::Copy, b, vec![a], len);
+    sys.submit(pid, &req).unwrap(); // warms the cache for a and b
+    sys.submit(pid, &req).unwrap(); // served from cache
+    assert!(sys.coord.pipeline.extent_cache.hits >= 2);
+    // tear down the source: a stale cache would happily keep copying
+    sys.free(&mut puma, pid, a).unwrap();
+    assert!(
+        sys.submit(pid, &req).is_err(),
+        "freed operand must fail, not be served from the extent cache"
+    );
+    // remap and resubmit: fresh translation, correct data
+    let a2 = sys.alloc(&mut puma, pid, len).unwrap();
+    sys.write_virt(pid, a2, &vec![0xC3u8; len as usize]).unwrap();
+    let req2 = BulkRequest::new(PudOp::Copy, b, vec![a2], len);
+    sys.submit(pid, &req2).unwrap();
+    assert_eq!(
+        sys.read_virt(pid, b, len).unwrap(),
+        vec![0xC3u8; len as usize]
+    );
+}
