@@ -1,80 +1,55 @@
 //! Multi-tenant stress: several processes allocate, compute, and free
-//! concurrently-interleaved PUD working sets while the machine ages.
+//! concurrently-interleaved PUD working sets while the machine ages —
+//! first with the paper's alloc-time-only lifecycle, then with the
+//! reclamation + RowClone-compaction lifecycle on top.
 //!
-//! Exercises the part of PUMA the micro-benchmarks do not: the region
-//! pool filling up, hint co-location degrading under pressure, and
-//! frees recycling regions across tenants. Reports per-tenant PUD
-//! fractions and pool occupancy over time.
+//! The heavy lifting lives in [`puma::workloads::churn`]; this example
+//! runs the comparison on the default machine and prints the curves
+//! (`puma churn` is the configurable CLI version).
 //!
 //! ```bash
 //! cargo run --release --example multi_tenant
 //! ```
 
-use puma::alloc::puma::{FitPolicy, PumaAlloc};
-use puma::alloc::traits::Allocator;
-use puma::coordinator::system::{System, SystemConfig};
-use puma::util::units::fmt_ns;
-use puma::workloads::trace::Trace;
+use puma::dram::address::InterleaveScheme;
+use puma::dram::geometry::DramGeometry;
+use puma::report;
+use puma::workloads::churn::{self, ChurnConfig};
 
-const TENANTS: usize = 4;
+fn scheme() -> InterleaveScheme {
+    // 64 MiB — small enough to churn hard in a second
+    InterleaveScheme::row_major(DramGeometry::small())
+}
 
 fn main() -> anyhow::Result<()> {
-    let mut sys = System::boot(SystemConfig {
-        huge_pages: 48,
-        churn_rounds: 30_000,
+    let tenants = 4;
+    let cfg = ChurnConfig {
+        tenants,
         ..Default::default()
-    })?;
-    let row = sys.os.scheme.geometry.row_bytes as u64;
-
-    // one shared kernel-side PUMA instance, as in the real design:
-    // the module is system-wide, allocations are per-process
-    let mut puma = PumaAlloc::new(row, FitPolicy::WorstFit);
-    puma.pim_preallocate(&mut sys.os, 32)?;
+    };
     println!(
-        "boot: {} regions in the PUD pool across {} subarrays",
-        puma.free_regions(),
-        sys.os.scheme.geometry.total_subarrays()
+        "churning {} tenants x {} epochs (pool {} huge pages)...",
+        cfg.tenants, cfg.epochs, cfg.puma_pages
     );
 
-    let mut total_ns = 0.0;
-    for tenant in 0..TENANTS {
-        let pid = sys.spawn();
-        // each tenant runs a different deterministic trace
-        let trace = Trace::generate(
-            0xBEEF + tenant as u64,
-            8,              // operand groups
-            (16 + 16 * tenant as u64) * row, // growing working sets
-            4,              // ops per group
-        );
-        let before_rows = sys.coord.stats.pud_rows + sys.coord.stats.fallback_rows;
-        let before_pud = sys.coord.stats.pud_rows;
-        let ns = trace.replay(&mut sys, &mut puma, pid)?;
-        total_ns += ns;
-        let rows = (sys.coord.stats.pud_rows + sys.coord.stats.fallback_rows)
-            - before_rows;
-        let pud = sys.coord.stats.pud_rows - before_pud;
-        println!(
-            "tenant {tenant}: {} ops rows, {:.0}% in-DRAM, {} free regions left, {}",
-            rows,
-            100.0 * pud as f64 / rows.max(1) as f64,
-            puma.free_regions(),
-            fmt_ns(ns)
-        );
-    }
+    let off = churn::run(scheme(), &cfg)?;
+    let on = churn::run(
+        scheme(),
+        &ChurnConfig {
+            compact: true,
+            ..cfg
+        },
+    )?;
 
-    let st = puma.stats();
-    println!(
-        "\nco-location: {} hint-aligned regions placed, {} missed to worst-fit",
-        st.hint_colocated, st.hint_missed
-    );
-    println!(
-        "fleet PUD fraction {:.0}%, total simulated {}",
-        sys.coord.stats.pud_row_fraction() * 100.0,
-        fmt_ns(total_ns)
+    println!("{}", report::churn(&off, Some(&on), None)?);
+
+    assert!(
+        on.steady_state_pud_fraction >= off.steady_state_pud_fraction,
+        "compaction must not lose in-DRAM coverage"
     );
     assert!(
-        sys.coord.stats.pud_row_fraction() > 0.7,
-        "PUMA should keep most rows in-DRAM even under multi-tenant churn"
+        on.pages_returned >= 1,
+        "compaction must return at least one huge page to the boot pool"
     );
     println!("multi_tenant OK");
     Ok(())

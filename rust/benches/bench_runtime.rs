@@ -29,18 +29,15 @@ use puma::pud::isa::{BulkRequest, PudOp};
 use puma::util::bench::{bench, black_box, BenchOpts};
 use puma::util::csvio::Csv;
 use puma::util::rng::Pcg64;
+use puma::workloads::churn::{self, ChurnConfig, ChurnResult};
+
+fn small_scheme() -> InterleaveScheme {
+    InterleaveScheme::row_major(DramGeometry::small()) // 64 MiB
+}
 
 fn boot() -> System {
-    let scheme = InterleaveScheme::row_major(DramGeometry {
-        channels: 1,
-        ranks_per_channel: 1,
-        banks_per_rank: 4,
-        subarrays_per_bank: 8,
-        rows_per_subarray: 256,
-        row_bytes: 8192,
-    }); // 64 MiB
     System::boot(SystemConfig {
-        scheme,
+        scheme: small_scheme(),
         huge_pages: 16,
         churn_rounds: 3_000,
         seed: 0xE6,
@@ -156,6 +153,29 @@ fn measure(serial: bool, groups: usize, opts: &BenchOpts) -> anyhow::Result<Path
     })
 }
 
+fn churn_json(r: &ChurnResult) -> String {
+    let curve = |f: &dyn Fn(&puma::workloads::churn::EpochSample) -> f64| {
+        r.samples
+            .iter()
+            .map(|s| format!("{:.4}", f(s)))
+            .collect::<Vec<_>>()
+            .join(", ")
+    };
+    format!(
+        "{{\"steady_pud_fraction\": {:.6}, \"pages_returned\": {}, \
+         \"regions_migrated\": {}, \"final_occupancy\": {:.6}, \
+         \"final_pool_available\": {}, \"pud_curve\": [{}], \
+         \"occupancy_curve\": [{}]}}",
+        r.steady_state_pud_fraction,
+        r.pages_returned,
+        r.alloc.regions_migrated,
+        r.final_occupancy,
+        r.final_pool_available,
+        curve(&|s| s.op_pud_fraction),
+        curve(&|s| s.pool_occupancy),
+    )
+}
+
 fn json_path(m: &PathMetrics, groups: usize) -> String {
     // "xla_dispatches" is the tracked metric: fallback dispatch units
     // (counted in every mode; == run_op calls once artifacts load).
@@ -206,18 +226,58 @@ fn main() -> anyhow::Result<()> {
         "coalescing must not increase dispatches"
     );
 
+    // ---- allocation lifecycle: churn, compaction off vs on ----------
+    println!("\n# churn — allocation lifecycle (compaction off vs on)");
+    let cc = ChurnConfig::default();
+    let churn_off = churn::run(small_scheme(), &cc)?;
+    let churn_on = churn::run(
+        small_scheme(),
+        &ChurnConfig {
+            compact: true,
+            ..cc
+        },
+    )?;
+    println!(
+        "off: steady pud_frac {:.3}, {} page(s) returned, final occ {:.2}",
+        churn_off.steady_state_pud_fraction,
+        churn_off.pages_returned,
+        churn_off.final_occupancy
+    );
+    println!(
+        "on : steady pud_frac {:.3}, {} page(s) returned, {} region(s) \
+         migrated, final occ {:.2}",
+        churn_on.steady_state_pud_fraction,
+        churn_on.pages_returned,
+        churn_on.alloc.regions_migrated,
+        churn_on.final_occupancy
+    );
+    assert!(
+        churn_on.steady_state_pud_fraction >= churn_off.steady_state_pud_fraction,
+        "compaction must not lose in-DRAM coverage"
+    );
+    assert!(
+        churn_on.pages_returned >= 1,
+        "compaction must return huge pages to the boot pool"
+    );
+
     let json = format!(
         "{{\n  \"bench\": \"bench_runtime\",\n  \"workload\": \
          {{\"groups\": {groups}, \"mix\": \"3:1 puma:malloc, \
          and|or|xor|copy, one partial tail\"}},\n  \"dispatch_metric\": \
          \"fallback dispatch units (== XLA run_op calls when artifacts \
          are loaded)\",\n  \"serial\": {},\n  \"batched\": {},\n  \
-         \"speedup_sim\": {:.3},\n  \"dispatch_reduction\": {:.3}\n}}\n",
+         \"speedup_sim\": {:.3},\n  \"dispatch_reduction\": {:.3},\n  \
+         \"churn\": {{\"epochs\": {}, \"off\": {}, \"on\": {}, \
+         \"steady_pud_gain\": {:.6}}}\n}}\n",
         json_path(&serial, groups),
         json_path(&batched, groups),
         serial.elapsed_sim_ns / batched.elapsed_sim_ns.max(1e-9),
         serial.fallback_dispatches as f64
             / (batched.fallback_dispatches.max(1)) as f64,
+        cc.epochs,
+        churn_json(&churn_off),
+        churn_json(&churn_on),
+        churn_on.steady_state_pud_fraction - churn_off.steady_state_pud_fraction,
     );
     std::fs::write("BENCH_runtime.json", &json)?;
     println!("\nwrote BENCH_runtime.json");

@@ -34,6 +34,8 @@ struct Live {
     /// Huge pages exclusively owned by this allocation (large path).
     owned_va: u64,
     owned_pages: u64,
+    /// Requested size (free-side byte accounting).
+    len: u64,
 }
 
 /// Huge-page arena allocator.
@@ -102,6 +104,7 @@ impl Allocator for HugeAlloc {
                 Live {
                     owned_va: va,
                     owned_pages: npages,
+                    len,
                 },
             );
             return Ok(va);
@@ -128,6 +131,7 @@ impl Allocator for HugeAlloc {
             Live {
                 owned_va: 0,
                 owned_pages: 0,
+                len,
             },
         );
         Ok(va)
@@ -139,15 +143,19 @@ impl Allocator for HugeAlloc {
             None => bail!("free of unknown pointer {va:#x}"),
         };
         self.stats.frees += 1;
+        self.stats.bytes_freed += live.len;
         if live.owned_pages > 0 {
             for i in 0..live.owned_pages {
                 let t = proc.unmap_page(live.owned_va + i * HUGE_PAGE_SIZE)?;
                 ctx.buddy.free(t.paddr / PAGE_SIZE, HUGE_PAGE_ORDER);
             }
             proc.unmap_vma(live.owned_va)?;
+            self.stats.pages_unmapped +=
+                live.owned_pages * (HUGE_PAGE_SIZE / PAGE_SIZE);
             self.stats.alloc_ns += ctx.timing.syscall_ns;
         }
-        // arena chunks are recycled with the arena (glibc-like)
+        // arena chunks are recycled with the arena (glibc-like): bytes
+        // count as freed, the arena's mapped pages stay resident
         Ok(())
     }
 
@@ -201,6 +209,9 @@ mod tests {
         assert!(proc.phys_extents(va, 5 * 1024 * 1024).is_ok());
         h.free(&mut ctx, &mut proc, va).unwrap();
         assert_eq!(ctx.buddy.free_frames(), before);
+        let s = h.stats();
+        assert_eq!(s.bytes_freed, 5 * 1024 * 1024);
+        assert_eq!(s.pages_unmapped, 3 * (HUGE_PAGE_SIZE / 4096));
     }
 
     #[test]

@@ -32,7 +32,7 @@ const ARENA_CHUNK: u64 = 1 << 20; // arena grows 1 MiB at a time
 #[derive(Debug, Clone, Copy)]
 enum AllocKind {
     Small { len: u64 },
-    Large { start: u64, pages: u64 },
+    Large { start: u64, pages: u64, len: u64 },
 }
 
 /// The malloc simulator (one instance per process under test).
@@ -92,7 +92,8 @@ impl Allocator for MallocSim {
                 self.stats.pages_mapped += 1;
                 self.stats.alloc_ns += ctx.timing.minor_fault_ns;
             }
-            self.live.insert(start, AllocKind::Large { start, pages });
+            self.live
+                .insert(start, AllocKind::Large { start, pages, len });
             start
         } else {
             // small path: arena bump with chunk header
@@ -126,16 +127,21 @@ impl Allocator for MallocSim {
         };
         self.stats.frees += 1;
         match kind {
-            AllocKind::Small { .. } => {
+            AllocKind::Small { len } => {
                 // glibc keeps small chunks in free lists; frames stay
-                // with the arena. Nothing to return to the OS.
+                // with the arena. Nothing unmaps, so `pages_unmapped`
+                // intentionally lags `pages_mapped` by the arena size —
+                // but the user-visible bytes are released either way.
+                self.stats.bytes_freed += len;
             }
-            AllocKind::Large { start, pages } => {
+            AllocKind::Large { start, pages, len } => {
                 for i in 0..pages {
                     let t = proc.unmap_page(start + i * PAGE_SIZE)?;
                     ctx.buddy.free(t.paddr / PAGE_SIZE, 0);
                 }
                 proc.unmap_vma(start)?;
+                self.stats.bytes_freed += len;
+                self.stats.pages_unmapped += pages;
                 self.stats.alloc_ns += ctx.timing.syscall_ns;
             }
         }
@@ -208,6 +214,23 @@ mod tests {
         m.free(&mut ctx, &mut proc, va).unwrap();
         assert_eq!(ctx.buddy.free_frames(), before);
         assert!(m.free(&mut ctx, &mut proc, va).is_err());
+        // free-side accounting mirrors the alloc side on the mmap path
+        let s = m.stats();
+        assert_eq!(s.bytes_freed, 256 * 1024);
+        assert_eq!(s.pages_unmapped, s.pages_mapped);
+    }
+
+    #[test]
+    fn small_free_releases_bytes_but_keeps_arena_pages() {
+        let mut ctx = ctx();
+        let mut proc = Process::new(Pid(1));
+        let mut m = MallocSim::new();
+        let va = m.alloc(&mut ctx, &mut proc, 500).unwrap();
+        m.free(&mut ctx, &mut proc, va).unwrap();
+        let s = m.stats();
+        assert_eq!(s.bytes_freed, 500);
+        assert_eq!(s.pages_unmapped, 0, "arena frames stay resident");
+        assert!(s.pages_mapped > 0);
     }
 
     #[test]

@@ -19,7 +19,7 @@ use super::traits::{AllocStats, Allocator, OsCtx};
 /// posix_memalign-style allocator with a fixed alignment.
 pub struct MemalignSim {
     pub alignment: u64,
-    live: FxHashMap<u64, u64>, // va -> pages
+    live: FxHashMap<u64, (u64, u64)>, // va -> (pages, requested len)
     stats: AllocStats,
 }
 
@@ -60,12 +60,12 @@ impl Allocator for MemalignSim {
             self.stats.pages_mapped += 1;
             self.stats.alloc_ns += ctx.timing.minor_fault_ns;
         }
-        self.live.insert(va, pages);
+        self.live.insert(va, (pages, len));
         Ok(va)
     }
 
     fn free(&mut self, ctx: &mut OsCtx, proc: &mut Process, va: u64) -> Result<()> {
-        let pages = match self.live.remove(&va) {
+        let (pages, len) = match self.live.remove(&va) {
             Some(p) => p,
             None => bail!("free of unknown pointer {va:#x}"),
         };
@@ -75,6 +75,8 @@ impl Allocator for MemalignSim {
             ctx.buddy.free(t.paddr / PAGE_SIZE, 0);
         }
         proc.unmap_vma(va)?;
+        self.stats.bytes_freed += len;
+        self.stats.pages_unmapped += pages;
         self.stats.alloc_ns += ctx.timing.syscall_ns;
         Ok(())
     }
@@ -123,6 +125,9 @@ mod tests {
         let va = m.alloc(&mut ctx, &mut proc, 10 * 4096).unwrap();
         m.free(&mut ctx, &mut proc, va).unwrap();
         assert_eq!(ctx.buddy.free_frames(), before);
+        let s = m.stats();
+        assert_eq!(s.bytes_freed, s.bytes_requested);
+        assert_eq!(s.pages_unmapped, s.pages_mapped);
     }
 
     #[test]

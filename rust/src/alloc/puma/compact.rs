@@ -1,0 +1,599 @@
+//! RowClone-driven compaction: the allocator using the PUD substrate
+//! it serves (DESIGN.md §8).
+//!
+//! Two kinds of migration, planned together and executed as one
+//! coordinator batch:
+//!
+//! * **Co-location repair** — an allocation placed by
+//!   `pim_alloc_align` under pool pressure may hold regions outside
+//!   its hint's subarrays (`hint_missed` in
+//!   [`AllocStats`](crate::alloc::traits::AllocStats)); every bulk op
+//!   over such a row pays the CPU-fallback price forever. When the
+//!   preferred subarray has free rows again, the row is migrated
+//!   there. The migration copy itself crosses subarrays, so it is
+//!   priced as a fallback row — paid once, against PUD pricing on
+//!   every subsequent op.
+//! * **Evacuation** — a huge page pinned by a few live rows cannot be
+//!   reclaimed. Those rows are migrated to free rows of the *same*
+//!   subarray on other pages (an intra-subarray RowClone FPM copy:
+//!   PUD-priced, and co-location preserving by construction), after
+//!   which [`PumaAlloc::reclaim`] returns the page to the boot pool.
+//!
+//! Every migration is executed as a `PudOp::Copy` through
+//! [`Coordinator::submit_batch`], so the batch scheduler coalesces the
+//! copies, prices them on the per-bank timelines, and the functional
+//! DRAM image moves with them. VAs are then re-pointed at the new
+//! regions through [`Process::unmap_page`] — which bumps the
+//! translation epoch, keeping the coordinator's extent cache honest
+//! (DESIGN.md §5).
+
+use anyhow::Result;
+use rustc_hash::FxHashSet;
+
+use crate::alloc::traits::OsCtx;
+use crate::coordinator::dispatch::Coordinator;
+use crate::dram::geometry::SubarrayId;
+use crate::os::page_table::PageKind;
+use crate::os::process::{Pid, Process};
+use crate::os::vma::VmaKind;
+use crate::os::PAGE_SIZE;
+use crate::pud::isa::{BulkRequest, PudOp};
+
+use super::region::Region;
+use super::PumaAlloc;
+
+/// Outcome of one [`PumaAlloc::compact`] pass.
+#[derive(Debug, Clone, Default)]
+pub struct CompactReport {
+    /// Regions migrated to restore hint co-location.
+    pub repairs: u64,
+    /// Regions migrated off nearly-empty pages.
+    pub evacuations: u64,
+    /// Huge pages returned to the boot pool by the trailing reclaim.
+    pub pages_reclaimed: usize,
+    /// Simulated ns of the migration copies (serial-equivalent).
+    pub copy_ns: f64,
+    /// Migration rows that executed in-DRAM (intra-subarray RowClone).
+    pub pud_copy_rows: u64,
+    /// Migration rows that crossed subarrays (CPU fallback copy).
+    pub fallback_copy_rows: u64,
+}
+
+impl CompactReport {
+    /// Total regions moved.
+    pub fn migrated(&self) -> u64 {
+        self.repairs + self.evacuations
+    }
+}
+
+/// One planned region move.
+struct Migration {
+    key: (Pid, u64),
+    idx: usize,
+    old: Region,
+    new: Region,
+    scratch_va: u64,
+    evacuation: bool,
+}
+
+/// A page qualifies for evacuation when at most `carved / EVAC_DIVISOR`
+/// of its rows are still live. Quarter-full is the knee: evacuating
+/// fuller pages moves more rows than it frees, and the migrated rows
+/// churn placement for little reclaim gain.
+const EVAC_DIVISOR: usize = 4;
+
+/// Map each migration's target region at a fresh scratch VA. On error,
+/// the partially-mapped migration is torn down here, so `prepared`
+/// tells the caller exactly how many *fully mapped* migrations need
+/// unwinding.
+fn map_scratch(
+    proc: &mut Process,
+    migs: &mut [Migration],
+    row: u64,
+    pages_per_region: u64,
+    prepared: &mut usize,
+) -> Result<()> {
+    for m in migs.iter_mut() {
+        let scratch = proc.mmap(row, row.max(PAGE_SIZE), VmaKind::Pud)?;
+        for p in 0..pages_per_region {
+            if let Err(e) = proc.page_table.map(
+                scratch + p * PAGE_SIZE,
+                m.new.paddr + p * PAGE_SIZE,
+                PageKind::Base,
+            ) {
+                for q in 0..p {
+                    let _ = proc.unmap_page(scratch + q * PAGE_SIZE);
+                }
+                let _ = proc.unmap_vma(scratch);
+                return Err(e);
+            }
+        }
+        m.scratch_va = scratch;
+        *prepared += 1;
+    }
+    Ok(())
+}
+
+impl PumaAlloc {
+    /// Take a free region from `sid` suitable as a migration target:
+    /// never from a `forbidden` page (evacuation sources, or pages
+    /// about to reclaim), and from an `avoid` page (fully-free pages
+    /// worth keeping clean) only when nothing else is available.
+    /// Unsuitable candidates are returned to the free store.
+    fn take_target(
+        &mut self,
+        sid: SubarrayId,
+        forbidden: &FxHashSet<u64>,
+        avoid: &FxHashSet<u64>,
+    ) -> Option<Region> {
+        let mut rejects: Vec<Region> = Vec::new();
+        let mut fallback: Option<Region> = None;
+        let mut found: Option<Region> = None;
+        while let Some(r) = self.free.take_from(sid) {
+            let base = r.page_base();
+            if forbidden.contains(&base) {
+                rejects.push(r);
+            } else if avoid.contains(&base) {
+                if fallback.is_none() {
+                    fallback = Some(r);
+                } else {
+                    rejects.push(r);
+                }
+            } else {
+                found = Some(r);
+                break;
+            }
+        }
+        if found.is_none() {
+            found = fallback.take();
+        }
+        if let Some(f) = fallback {
+            rejects.push(f);
+        }
+        for r in rejects {
+            self.free.insert(r);
+        }
+        if let Some(r) = &found {
+            self.note_taken(r);
+        }
+        found
+    }
+
+    /// Page bases currently holding no live rows (reclaim candidates —
+    /// migrations should not dirty them).
+    fn fully_free_pages(&self) -> FxHashSet<u64> {
+        self.pages
+            .iter()
+            .filter(|(_, m)| m.free == m.carved)
+            .map(|(base, _)| *base)
+            .collect()
+    }
+
+    /// One compaction pass over `proc`'s allocations: repair lost
+    /// co-location, evacuate nearly-empty pages, execute the
+    /// migrations as one batched RowClone copy submission, re-point
+    /// the VAs, and reclaim every page that reassembled.
+    ///
+    /// Memory contents are preserved byte-for-byte (the copies run
+    /// through the functional DRAM store), and the translation epoch
+    /// is bumped by the remap so cached extent translations die with
+    /// the old placement. Queued-but-unflushed requests of `proc`
+    /// should be flushed first (see
+    /// [`System::compact`](crate::coordinator::system::System::compact)).
+    ///
+    /// ```
+    /// use puma::alloc::puma::{FitPolicy, PumaAlloc};
+    /// use puma::alloc::traits::{Allocator, OsCtx};
+    /// use puma::coordinator::{Coordinator, FallbackMode};
+    /// use puma::dram::address::InterleaveScheme;
+    /// use puma::dram::device::DramDevice;
+    /// use puma::dram::geometry::DramGeometry;
+    /// use puma::dram::timing::TimingParams;
+    /// use puma::os::process::{Pid, Process};
+    /// use puma::pud::exec::PudEngine;
+    ///
+    /// let scheme = InterleaveScheme::row_major(DramGeometry {
+    ///     channels: 1, ranks_per_channel: 1, banks_per_rank: 4,
+    ///     subarrays_per_bank: 8, rows_per_subarray: 256, row_bytes: 8192,
+    /// });
+    /// let mut ctx = OsCtx::boot(scheme.clone(), 4, 0, 0).unwrap();
+    /// let mut coord = Coordinator::new(
+    ///     PudEngine::new(DramDevice::new(scheme), TimingParams::default()),
+    ///     FallbackMode::Scalar,
+    /// );
+    /// let mut proc = Process::new(Pid(1));
+    /// let mut puma = PumaAlloc::new(8192, FitPolicy::WorstFit);
+    /// puma.pim_preallocate(&mut ctx, 2).unwrap();
+    /// let _a = puma.alloc(&mut ctx, &mut proc, 4 * 8192).unwrap();
+    /// let report = puma.compact(&mut ctx, &mut proc, &mut coord).unwrap();
+    /// assert_eq!(report.migrated(), 0); // fresh placements need no repair
+    /// assert_eq!(report.pages_reclaimed, 1); // the untouched page goes back
+    /// ```
+    pub fn compact(
+        &mut self,
+        ctx: &mut OsCtx,
+        proc: &mut Process,
+        coord: &mut Coordinator,
+    ) -> Result<CompactReport> {
+        let pid = proc.pid;
+        let row = self.row_bytes;
+        let pages_per_region = row / PAGE_SIZE;
+        let mut report = CompactReport::default();
+        let mut migs: Vec<Migration> = Vec::new();
+        let mut planned: FxHashSet<(u64, usize)> = FxHashSet::default();
+
+        // Plan the evacuation set first, from the pre-pass usage
+        // snapshot (allocated ascending, fullest occupied page kept as
+        // the sink), so phase-A repair targets never land on a page
+        // phase B is about to empty.
+        let mut occupied: Vec<(usize, u64)> = self
+            .page_usage()
+            .iter()
+            .filter(|(_, carved, free)| free < carved)
+            .map(|(base, carved, free)| (carved - free, *base))
+            .collect();
+        occupied.sort_unstable();
+        let evac: FxHashSet<u64> = if occupied.len() >= 2 {
+            occupied[..occupied.len() - 1]
+                .iter()
+                .filter(|(allocated, base)| {
+                    allocated * EVAC_DIVISOR <= self.pages[base].carved
+                })
+                .map(|(_, base)| *base)
+                .collect()
+        } else {
+            FxHashSet::default()
+        };
+
+        // ---- phase A: co-location repair --------------------------------
+        let mut groups: Vec<(u64, u64)> = self
+            .align_groups
+            .iter()
+            .filter(|((p, _), _)| *p == pid)
+            .map(|((_, va), hint)| (*va, *hint))
+            .collect();
+        groups.sort_unstable();
+        let avoid = self.fully_free_pages();
+        let no_forbidden = FxHashSet::default();
+        for (va, hint) in groups {
+            let Some(hint_alloc) = self.allocations.get(&(pid, hint)) else {
+                continue;
+            };
+            let prefs: Vec<SubarrayId> =
+                hint_alloc.regions.iter().map(|r| r.sid).collect();
+            if prefs.is_empty() {
+                continue;
+            }
+            let Some(alloc) = self.allocations.get(&(pid, va)) else {
+                continue;
+            };
+            let regions = alloc.regions.clone();
+            for (idx, r) in regions.iter().enumerate() {
+                let want = prefs[idx % prefs.len()];
+                if r.sid == want {
+                    continue;
+                }
+                let Some(new) = self.take_target(want, &evac, &avoid) else {
+                    continue; // preferred subarray still full; retry later
+                };
+                planned.insert((va, idx));
+                migs.push(Migration {
+                    key: (pid, va),
+                    idx,
+                    old: *r,
+                    new,
+                    scratch_va: 0,
+                    evacuation: false,
+                });
+            }
+        }
+
+        // ---- phase B: evacuate nearly-empty pages -----------------------
+        if !evac.is_empty() {
+            let mut forbidden = self.fully_free_pages();
+            forbidden.extend(evac.iter().copied());
+            // live rows sitting on evacuating pages, in deterministic order
+            let mut victims: Vec<((Pid, u64), usize, Region)> = self
+                .allocations
+                .iter()
+                .filter(|((p, _), _)| *p == pid)
+                .flat_map(|(key, a)| {
+                    a.regions
+                        .iter()
+                        .enumerate()
+                        .filter(|(idx, r)| {
+                            evac.contains(&r.page_base())
+                                && !planned.contains(&(key.1, *idx))
+                        })
+                        .map(|(idx, r)| (*key, idx, *r))
+                        .collect::<Vec<_>>()
+                })
+                .collect();
+            victims.sort_unstable_by_key(|(key, idx, _)| (key.1, *idx));
+            for (key, idx, old) in victims {
+                let Some(new) = self.take_target(old.sid, &forbidden, &no_forbidden)
+                else {
+                    continue; // no same-subarray room off this page
+                };
+                planned.insert((key.1, idx));
+                migs.push(Migration {
+                    key,
+                    idx,
+                    old,
+                    new,
+                    scratch_va: 0,
+                    evacuation: true,
+                });
+            }
+        }
+
+        if migs.is_empty() {
+            report.pages_reclaimed = self.reclaim(ctx)?;
+            return Ok(report);
+        }
+
+        // ---- execute: scratch-map targets, one batched copy, re-point ---
+        let mut prepared = 0usize;
+        let prepare =
+            map_scratch(proc, &mut migs, row, pages_per_region, &mut prepared);
+        let batch = match prepare {
+            Ok(()) => {
+                let reqs: Vec<BulkRequest> = migs
+                    .iter()
+                    .map(|m| {
+                        BulkRequest::new(
+                            PudOp::Copy,
+                            m.scratch_va,
+                            vec![m.key.1 + m.idx as u64 * row],
+                            row,
+                        )
+                    })
+                    .collect();
+                let pud_before = coord.stats.pud_rows;
+                let fb_before = coord.stats.fallback_rows;
+                match coord.submit_batch(proc, &reqs) {
+                    Ok(b) => {
+                        report.pud_copy_rows = coord.stats.pud_rows - pud_before;
+                        report.fallback_copy_rows =
+                            coord.stats.fallback_rows - fb_before;
+                        Ok(b)
+                    }
+                    Err(e) => Err(e),
+                }
+            }
+            Err(e) => Err(e),
+        };
+        let batch = match batch {
+            Ok(b) => b,
+            Err(e) => {
+                // roll back: drop scratch mappings, return the unused
+                // target regions; live allocations are untouched
+                for (i, m) in migs.into_iter().enumerate() {
+                    if i < prepared {
+                        for p in 0..pages_per_region {
+                            let _ = proc.unmap_page(m.scratch_va + p * PAGE_SIZE);
+                        }
+                        let _ = proc.unmap_vma(m.scratch_va);
+                    }
+                    self.insert_free(m.new);
+                }
+                self.refresh_gauges();
+                return Err(e);
+            }
+        };
+
+        for m in &migs {
+            let base_va = m.key.1 + m.idx as u64 * row;
+            for p in 0..pages_per_region {
+                proc.unmap_page(base_va + p * PAGE_SIZE)?;
+                proc.page_table.map(
+                    base_va + p * PAGE_SIZE,
+                    m.new.paddr + p * PAGE_SIZE,
+                    PageKind::Base,
+                )?;
+            }
+            for p in 0..pages_per_region {
+                proc.unmap_page(m.scratch_va + p * PAGE_SIZE)?;
+            }
+            proc.unmap_vma(m.scratch_va)?;
+            self.allocations
+                .get_mut(&m.key)
+                .expect("allocation live while migrating")
+                .regions[m.idx] = m.new;
+            self.insert_free(m.old);
+            self.stats.regions_migrated += 1;
+            // re-point + scratch teardown are both PTE rewrites
+            self.stats.alloc_ns += ctx.timing.remap_region_ns * 2.0;
+            if m.evacuation {
+                report.evacuations += 1;
+            } else {
+                report.repairs += 1;
+            }
+        }
+        self.stats.compactions += 1;
+        report.copy_ns = batch.total_ns;
+        report.pages_reclaimed = self.reclaim(ctx)?;
+        self.refresh_gauges();
+        Ok(report)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::alloc::puma::FitPolicy;
+    use crate::alloc::traits::Allocator;
+    use crate::coordinator::dispatch::FallbackMode;
+    use crate::dram::address::InterleaveScheme;
+    use crate::dram::device::DramDevice;
+    use crate::dram::geometry::DramGeometry;
+    use crate::dram::timing::TimingParams;
+    use crate::pud::exec::PudEngine;
+
+    const ROW: u64 = 8192;
+
+    fn machine() -> (OsCtx, Coordinator) {
+        let scheme = InterleaveScheme::row_major(DramGeometry::small()); // 64 MiB
+        let ctx = OsCtx::boot(scheme.clone(), 8, 0, 0).unwrap();
+        let engine = PudEngine::new(DramDevice::new(scheme), TimingParams::default());
+        (ctx, Coordinator::new(engine, FallbackMode::Scalar))
+    }
+
+    /// Allocate single-row objects until the pool is empty; returns
+    /// their VAs.
+    fn drain_pool(
+        puma: &mut PumaAlloc,
+        ctx: &mut OsCtx,
+        proc: &mut Process,
+    ) -> Vec<u64> {
+        let mut vas = Vec::new();
+        while puma.free_regions() > 0 {
+            vas.push(puma.alloc(ctx, proc, ROW).unwrap());
+        }
+        vas
+    }
+
+    #[test]
+    fn repair_restores_colocation_and_contents() {
+        let (mut ctx, mut coord) = machine();
+        let mut proc = Process::new(Pid(1));
+        let mut puma = PumaAlloc::new(ROW, FitPolicy::WorstFit);
+        puma.pim_preallocate(&mut ctx, 2).unwrap();
+
+        let a = puma.alloc(&mut ctx, &mut proc, ROW).unwrap();
+        let want_sid = puma.lookup(Pid(1), a).unwrap().regions[0].sid;
+        let fillers = drain_pool(&mut puma, &mut ctx, &mut proc);
+
+        // leave exactly one free region, in the WRONG subarray
+        let wrong = fillers
+            .iter()
+            .find(|va| puma.lookup(Pid(1), **va).unwrap().regions[0].sid != want_sid)
+            .copied()
+            .unwrap();
+        puma.free(&mut ctx, &mut proc, wrong).unwrap();
+        let b = puma.alloc_align(&mut ctx, &mut proc, ROW, a).unwrap();
+        assert_eq!(puma.stats().hint_missed, 1);
+        let b_old = puma.lookup(Pid(1), b).unwrap().regions[0];
+        assert_ne!(b_old.sid, want_sid, "forced a scattered placement");
+
+        // give b's row recognizable contents
+        let pattern: Vec<u8> = (0..ROW).map(|i| (i % 241) as u8).collect();
+        coord.engine.device.write(b_old.paddr, &pattern);
+
+        // open a repair target in the preferred subarray
+        let target_filler = fillers
+            .iter()
+            .find(|va| {
+                **va != wrong
+                    && puma
+                        .lookup(Pid(1), **va)
+                        .map(|al| al.regions[0].sid == want_sid)
+                        .unwrap_or(false)
+            })
+            .copied()
+            .unwrap();
+        puma.free(&mut ctx, &mut proc, target_filler).unwrap();
+
+        let epoch_before = proc.translation_epoch;
+        let report = puma.compact(&mut ctx, &mut proc, &mut coord).unwrap();
+        assert_eq!(report.repairs, 1);
+        assert_eq!(report.evacuations, 0);
+        // cross-subarray migration copy is priced as fallback
+        assert_eq!(report.fallback_copy_rows, 1);
+        assert!(report.copy_ns > 0.0);
+        assert!(proc.translation_epoch > epoch_before, "cache invalidated");
+
+        let b_new = puma.lookup(Pid(1), b).unwrap().regions[0];
+        assert_eq!(b_new.sid, want_sid, "co-location repaired");
+        assert_ne!(b_new.paddr, b_old.paddr);
+        let mut got = vec![0u8; ROW as usize];
+        coord.engine.device.read(b_new.paddr, &mut got);
+        assert_eq!(got, pattern, "migration preserved contents");
+        // and the row is reachable through the (re-pointed) VA
+        let ext = proc.phys_extents(b, ROW).unwrap();
+        assert_eq!(ext[0].paddr, b_new.paddr);
+        assert_eq!(puma.stats().regions_migrated, 1);
+        assert_eq!(puma.stats().compactions, 1);
+        assert_eq!(
+            puma.carved_regions(),
+            puma.free_regions() + puma.live_regions(),
+            "accounting identity after compaction"
+        );
+    }
+
+    #[test]
+    fn evacuation_frees_a_page_for_reclaim() {
+        let (mut ctx, mut coord) = machine();
+        let mut proc = Process::new(Pid(1));
+        let mut puma = PumaAlloc::new(ROW, FitPolicy::WorstFit);
+        puma.pim_preallocate(&mut ctx, 2).unwrap();
+        let pool_before = ctx.pool.available();
+
+        let fillers = drain_pool(&mut puma, &mut ctx, &mut proc);
+        let usage = puma.page_usage();
+        assert_eq!(usage.len(), 2);
+        let (low_page, high_page) = (usage[0].0, usage[1].0);
+
+        // keep one straggler on the low page, two anchors on the high
+        // page; free everything else
+        let mut straggler = None;
+        let mut anchors = Vec::new();
+        for va in &fillers {
+            let base = puma.lookup(Pid(1), *va).unwrap().regions[0].page_base();
+            if base == low_page && straggler.is_none() {
+                straggler = Some(*va);
+            } else if base == high_page && anchors.len() < 2 {
+                anchors.push(*va);
+            }
+        }
+        let straggler = straggler.unwrap();
+        assert_eq!(anchors.len(), 2);
+        for va in fillers {
+            if va != straggler && !anchors.contains(&va) {
+                puma.free(&mut ctx, &mut proc, va).unwrap();
+            }
+        }
+
+        let s_old = puma.lookup(Pid(1), straggler).unwrap().regions[0];
+        let pattern: Vec<u8> = (0..ROW).map(|i| ((i * 7) % 239) as u8).collect();
+        coord.engine.device.write(s_old.paddr, &pattern);
+
+        let report = puma.compact(&mut ctx, &mut proc, &mut coord).unwrap();
+        assert_eq!(report.evacuations, 1, "straggler moved off the thin page");
+        assert_eq!(
+            report.pud_copy_rows, 1,
+            "same-subarray evacuation is a RowClone FPM copy"
+        );
+        assert_eq!(report.pages_reclaimed, 1, "emptied page went back");
+        assert_eq!(ctx.pool.available(), pool_before + 1);
+        assert_eq!(puma.preallocated(), 1);
+
+        let s_new = puma.lookup(Pid(1), straggler).unwrap().regions[0];
+        assert_eq!(s_new.sid, s_old.sid, "evacuation preserves the subarray");
+        assert_eq!(s_new.page_base(), high_page);
+        let mut got = vec![0u8; ROW as usize];
+        coord.engine.device.read(s_new.paddr, &mut got);
+        assert_eq!(got, pattern);
+        assert_eq!(
+            puma.carved_regions(),
+            puma.free_regions() + puma.live_regions()
+        );
+    }
+
+    #[test]
+    fn compact_with_nothing_to_do_just_reclaims() {
+        let (mut ctx, mut coord) = machine();
+        let mut proc = Process::new(Pid(1));
+        let mut puma = PumaAlloc::new(ROW, FitPolicy::WorstFit);
+        puma.pim_preallocate(&mut ctx, 2).unwrap();
+        let va = puma.alloc(&mut ctx, &mut proc, 4 * ROW).unwrap();
+        let report = puma.compact(&mut ctx, &mut proc, &mut coord).unwrap();
+        assert_eq!(report.migrated(), 0);
+        assert_eq!(report.pages_reclaimed, 1, "the untouched page reassembles");
+        assert!(puma.lookup(Pid(1), va).is_some());
+        // idempotent on a quiet pool
+        let again = puma.compact(&mut ctx, &mut proc, &mut coord).unwrap();
+        assert_eq!(again.migrated(), 0);
+        assert_eq!(again.pages_reclaimed, 0);
+    }
+}

@@ -1,4 +1,6 @@
-//! PUMA — the paper's allocator.
+//! PUMA — the paper's allocator, plus the allocation lifecycle the
+//! paper leaves to future work (reclamation + compaction, DESIGN.md
+//! §8).
 //!
 //! Three user-facing APIs (paper §2):
 //!
@@ -15,17 +17,32 @@
 //!   region, falling back to worst-fit only when that subarray is
 //!   full. Scattered regions are re-mmapped into contiguous VA.
 //!
+//! Lifecycle APIs added on top (this reproduction):
+//!
+//! * [`PumaAlloc::reclaim`] — the free-path coalescer's second half:
+//!   freed rows are tracked against the huge page they were carved
+//!   from, and pages whose rows have *all* been freed are reassembled
+//!   and returned to the boot pool.
+//! * [`PumaAlloc::compact`](crate::alloc::puma::compact) — RowClone-
+//!   driven migration that repairs lost subarray co-location and
+//!   evacuates nearly-empty pages so [`PumaAlloc::reclaim`] can return
+//!   them (see [`compact`]).
+//!
 //! Regions are row-granular (see [`region`]): allocations are rounded
 //! up to whole DRAM rows, which is what makes every PUMA operand
 //! row-aligned by construction.
 
+pub mod compact;
 pub mod ordered;
 pub mod region;
+
+pub use compact::CompactReport;
 
 use anyhow::{bail, Context, Result};
 use rustc_hash::FxHashMap;
 
-use crate::os::process::Process;
+use crate::os::hugepage::HugePage;
+use crate::os::process::{Pid, Process};
 use crate::os::vma::VmaKind;
 use crate::os::PAGE_SIZE;
 
@@ -33,12 +50,22 @@ use super::traits::{AllocStats, Allocator, OsCtx};
 use ordered::OrderedArray;
 use region::{split_huge_page, Region};
 
-/// Region placement policy (the paper uses worst-fit; the others are
-/// for the E3 ablation).
+/// Region placement policy. The paper uses worst-fit (take from the
+/// *fullest* subarray, maximizing the leftover room co-located
+/// operands will need); best-fit and first-fit exist for the E3
+/// ablation.
+///
+/// ```
+/// use puma::alloc::puma::FitPolicy;
+/// assert_ne!(FitPolicy::WorstFit, FitPolicy::BestFit);
+/// ```
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum FitPolicy {
+    /// Paper default: draw from the subarray with the most free regions.
     WorstFit,
+    /// Ablation: draw from the least-populated non-empty subarray.
     BestFit,
+    /// Ablation: draw from the lowest-numbered non-empty subarray.
     FirstFit,
 }
 
@@ -51,12 +78,35 @@ pub struct Allocation {
     pub regions: Vec<Region>,
 }
 
+/// Per-huge-page bookkeeping for the free-path coalescer.
+#[derive(Debug, Clone, Copy)]
+struct PageMeta {
+    page: HugePage,
+    /// Regions carved from this page at `pim_preallocate` time
+    /// (reserved Ambit rows are skipped, so this can be < rows/page).
+    carved: usize,
+    /// Carved regions currently sitting in the free store. When
+    /// `free == carved` the page is fully reassembled and
+    /// [`PumaAlloc::reclaim`] can hand it back to the boot pool.
+    free: usize,
+}
+
 /// The PUMA allocator state (kernel-module equivalent).
 pub struct PumaAlloc {
     free: OrderedArray,
     /// The allocation hashmap, "indexed by the allocation's virtual
-    /// address" (paper §2).
-    allocations: FxHashMap<u64, Allocation>,
+    /// address" (paper §2) — and by owning process, since distinct
+    /// address spaces reuse the same VA range.
+    allocations: FxHashMap<(Pid, u64), Allocation>,
+    /// Huge-page directory: page base -> carved/free region counts.
+    /// This is the coalescer: rows are fixed-size, so "merging
+    /// adjacent freed rows" means counting a page's rows back together
+    /// until the whole 2 MiB page has reassembled.
+    pages: FxHashMap<u64, PageMeta>,
+    /// `pim_alloc_align` lineage: (pid, aligned va) -> hint va. The
+    /// compactor uses this to know *what* an allocation was supposed
+    /// to co-locate with.
+    align_groups: FxHashMap<(Pid, u64), u64>,
     pub policy: FitPolicy,
     row_bytes: u64,
     preallocated_pages: usize,
@@ -70,6 +120,8 @@ impl PumaAlloc {
         Self {
             free: OrderedArray::new(),
             allocations: FxHashMap::default(),
+            pages: FxHashMap::default(),
+            align_groups: FxHashMap::default(),
             policy,
             row_bytes,
             preallocated_pages: 0,
@@ -86,12 +138,22 @@ impl PumaAlloc {
                 .pool
                 .alloc()
                 .with_context(|| format!("pim_preallocate page {i}/{n}"))?;
-            for r in split_huge_page(&ctx.scheme, &page) {
+            let regions = split_huge_page(&ctx.scheme, &page);
+            self.pages.insert(
+                page.phys_addr(),
+                PageMeta {
+                    page,
+                    carved: regions.len(),
+                    free: regions.len(),
+                },
+            );
+            for r in regions {
                 self.free.insert(r);
             }
             self.preallocated_pages += 1;
             self.stats.alloc_ns += ctx.timing.huge_fault_ns;
         }
+        self.refresh_gauges();
         Ok(())
     }
 
@@ -100,22 +162,143 @@ impl PumaAlloc {
         self.free.total_free()
     }
 
-    /// Look up a live allocation (used by the coordinator to reach
-    /// region metadata without a page-table walk).
-    pub fn lookup(&self, va: u64) -> Option<&Allocation> {
-        self.allocations.get(&va)
+    /// Huge pages currently held by the allocator (shrinks when
+    /// [`PumaAlloc::reclaim`] returns pages to the boot pool).
+    pub fn preallocated(&self) -> usize {
+        self.pages.len()
+    }
+
+    /// Total regions carved from the currently-held pages.
+    pub fn carved_regions(&self) -> usize {
+        self.pages.values().map(|m| m.carved).sum()
+    }
+
+    /// Regions backing live allocations (accounting identity:
+    /// `carved_regions == free_regions + live_regions` at all times).
+    pub fn live_regions(&self) -> usize {
+        self.allocations.values().map(|a| a.regions.len()).sum()
+    }
+
+    /// Look up a live allocation of process `pid` (used by tests and
+    /// the compactor to reach region metadata without a page-table
+    /// walk).
+    pub fn lookup(&self, pid: Pid, va: u64) -> Option<&Allocation> {
+        self.allocations.get(&(pid, va))
+    }
+
+    /// The hint `va` was aligned to, if it was placed via
+    /// `pim_alloc_align`.
+    pub fn hint_of(&self, pid: Pid, va: u64) -> Option<u64> {
+        self.align_groups.get(&(pid, va)).copied()
+    }
+
+    /// Per-page usage, sorted by page base: `(base, carved, free)`.
+    pub fn page_usage(&self) -> Vec<(u64, usize, usize)> {
+        let mut v: Vec<(u64, usize, usize)> = self
+            .pages
+            .iter()
+            .map(|(base, m)| (*base, m.carved, m.free))
+            .collect();
+        v.sort_unstable();
+        v
+    }
+
+    /// Allocated fraction of the carved pool (gauge; 0 with no pages).
+    pub fn occupancy(&self) -> f64 {
+        let carved = self.carved_regions();
+        if carved == 0 {
+            return 0.0;
+        }
+        (carved - self.free.total_free()) as f64 / carved as f64
+    }
+
+    /// Fraction of held pages that are partially free — holding freed
+    /// rows, yet pinned by still-live rows so they cannot be
+    /// reclaimed (gauge; 0 with no pages).
+    pub fn fragmentation(&self) -> f64 {
+        if self.pages.is_empty() {
+            return 0.0;
+        }
+        let partial = self
+            .pages
+            .values()
+            .filter(|m| m.free > 0 && m.free < m.carved)
+            .count();
+        partial as f64 / self.pages.len() as f64
+    }
+
+    /// The free-path coalescer's give-back step: return every fully
+    /// reassembled huge page (all carved rows back in the free store)
+    /// to the boot pool. Returns the number of pages released.
+    ///
+    /// This is an explicit call rather than an automatic side effect
+    /// of `free` so a workload can keep its pool warm across phases; a
+    /// kernel would drive it from a memory-pressure watermark.
+    pub fn reclaim(&mut self, ctx: &mut OsCtx) -> Result<usize> {
+        let mut full: Vec<u64> = self
+            .pages
+            .iter()
+            .filter(|(_, m)| m.carved > 0 && m.free == m.carved)
+            .map(|(base, _)| *base)
+            .collect();
+        full.sort_unstable();
+        for base in &full {
+            let meta = self.pages.remove(base).expect("page listed above");
+            for r in split_huge_page(&ctx.scheme, &meta.page) {
+                if !self.free.remove(&r) {
+                    bail!(
+                        "reclaim invariant broken: region {:#x} of page {:#x} \
+                         not in the free store",
+                        r.paddr,
+                        base
+                    );
+                }
+            }
+            ctx.pool.release(meta.page);
+            self.preallocated_pages -= 1;
+            self.stats.pages_reclaimed += 1;
+            self.stats.alloc_ns += ctx.timing.reclaim_page_ns;
+        }
+        self.refresh_gauges();
+        Ok(full.len())
     }
 
     fn regions_needed(&self, len: u64) -> usize {
         (len.div_ceil(self.row_bytes)) as usize
     }
 
+    /// Page-directory bookkeeping when a region leaves the free store.
+    fn note_taken(&mut self, r: &Region) {
+        if let Some(m) = self.pages.get_mut(&r.page_base()) {
+            debug_assert!(m.free > 0, "page free-count underflow");
+            m.free -= 1;
+        }
+    }
+
+    /// Return a region to the free store, keeping the page directory
+    /// in step (the coalescer's count-back-together step).
+    fn insert_free(&mut self, r: Region) {
+        if let Some(m) = self.pages.get_mut(&r.page_base()) {
+            debug_assert!(m.free < m.carved, "page free-count overflow");
+            m.free += 1;
+        }
+        self.free.insert(r);
+    }
+
+    fn refresh_gauges(&mut self) {
+        self.stats.pool_free_regions = self.free.total_free() as u64;
+        self.stats.pool_occupancy = self.occupancy();
+        self.stats.fragmentation = self.fragmentation();
+    }
+
     fn take_policy(&mut self) -> Option<Region> {
-        match self.policy {
+        let r = match self.policy {
             FitPolicy::WorstFit => self.free.take_worst_fit(),
             FitPolicy::BestFit => self.free.take_best_fit(),
             FitPolicy::FirstFit => self.free.take_first_fit(),
-        }
+        }?;
+        self.note_taken(&r);
+        Some(r)
     }
 
     /// Map `regions` into fresh contiguous VA in `proc` and record the
@@ -145,13 +328,14 @@ impl PumaAlloc {
             self.stats.pages_mapped += pages_per_region;
         }
         self.allocations.insert(
-            va,
+            (proc.pid, va),
             Allocation {
                 va,
                 len,
                 regions,
             },
         );
+        self.refresh_gauges();
         Ok(va)
     }
 }
@@ -197,7 +381,7 @@ impl Allocator for PumaAlloc {
             bail!("pim_alloc_align(0)");
         }
         // 1. hashmap lookup; a miss is an error (paper §2 step 1)
-        let hint_regions: Vec<Region> = match self.allocations.get(&hint) {
+        let hint_regions: Vec<Region> = match self.allocations.get(&(proc.pid, hint)) {
             Some(a) => a.regions.clone(),
             None => bail!("pim_alloc_align: hint {hint:#x} is not a PUMA allocation"),
         };
@@ -217,6 +401,7 @@ impl Allocator for PumaAlloc {
             let preferred = hint_regions.get(i % hint_regions.len().max(1));
             let r = match preferred.and_then(|p| self.free.take_from(p.sid)) {
                 Some(r) => {
+                    self.note_taken(&r);
                     self.stats.hint_colocated += 1;
                     r
                 }
@@ -229,25 +414,34 @@ impl Allocator for PumaAlloc {
             regions.push(r);
         }
         // 5. re-mmap into contiguous VA
-        self.map_regions(ctx, proc, regions, len)
+        let va = self.map_regions(ctx, proc, regions, len)?;
+        self.align_groups.insert((proc.pid, va), hint);
+        Ok(va)
     }
 
     fn free(&mut self, ctx: &mut OsCtx, proc: &mut Process, va: u64) -> Result<()> {
-        let alloc = match self.allocations.remove(&va) {
+        let alloc = match self.allocations.remove(&(proc.pid, va)) {
             Some(a) => a,
             None => bail!("pim_free of unknown pointer {va:#x}"),
         };
         self.stats.frees += 1;
+        self.stats.bytes_freed += alloc.len;
         let pages_per_region = self.row_bytes / PAGE_SIZE;
         for (i, r) in alloc.regions.iter().enumerate() {
             let base_va = va + i as u64 * self.row_bytes;
             for p in 0..pages_per_region {
                 proc.unmap_page(base_va + p * PAGE_SIZE)?;
             }
-            self.free.insert(*r);
+            self.stats.pages_unmapped += pages_per_region;
+            self.insert_free(*r);
         }
         proc.unmap_vma(va)?;
         self.stats.alloc_ns += ctx.timing.syscall_ns;
+        // drop co-location lineage involving this VA, in either role
+        let pid = proc.pid;
+        self.align_groups
+            .retain(|(p, aligned), hint| !(*p == pid && (*aligned == va || *hint == va)));
+        self.refresh_gauges();
         Ok(())
     }
 
@@ -283,6 +477,10 @@ mod tests {
         let p = puma(&mut ctx, 4);
         // 4 pages x 256 rows, minus reserved overlaps
         assert!(p.free_regions() > 900 && p.free_regions() <= 1024);
+        assert_eq!(p.preallocated(), 4);
+        assert_eq!(p.carved_regions(), p.free_regions());
+        assert_eq!(p.stats().pool_occupancy, 0.0);
+        assert_eq!(p.stats().fragmentation, 0.0);
     }
 
     #[test]
@@ -298,7 +496,7 @@ mod tests {
         let total: u64 = ext.iter().map(|e| e.len).sum();
         assert_eq!(total, 6 * row);
         // every region row-aligned physically
-        let alloc = p.lookup(va).unwrap();
+        let alloc = p.lookup(Pid(1), va).unwrap();
         assert_eq!(alloc.regions.len(), 6);
         for r in &alloc.regions {
             assert_eq!(r.paddr % row, 0);
@@ -318,7 +516,7 @@ mod tests {
         let row = ctx.scheme.geometry.row_bytes as u64;
         let max_before = p.free.occupancy()[0].1;
         let va = p.alloc(&mut ctx, &mut proc, 8 * row).unwrap();
-        let alloc = p.lookup(va).unwrap();
+        let alloc = p.lookup(Pid(1), va).unwrap();
         for r in &alloc.regions {
             // every drawn subarray still has plenty of room for the
             // aligned second/third operands
@@ -335,9 +533,9 @@ mod tests {
         let a = p.alloc(&mut ctx, &mut proc, 4 * row).unwrap();
         let b = p.alloc_align(&mut ctx, &mut proc, 4 * row, a).unwrap();
         let c = p.alloc_align(&mut ctx, &mut proc, 4 * row, a).unwrap();
-        let ra = p.lookup(a).unwrap().regions.clone();
-        let rb = p.lookup(b).unwrap().regions.clone();
-        let rc = p.lookup(c).unwrap().regions.clone();
+        let ra = p.lookup(Pid(1), a).unwrap().regions.clone();
+        let rb = p.lookup(Pid(1), b).unwrap().regions.clone();
+        let rc = p.lookup(Pid(1), c).unwrap().regions.clone();
         let colocated = ra
             .iter()
             .zip(&rb)
@@ -346,6 +544,8 @@ mod tests {
             .count();
         assert_eq!(colocated, 4, "all rows of A/B/C share subarrays");
         assert!(p.stats().hint_colocated >= 8);
+        assert_eq!(p.hint_of(Pid(1), b), Some(a));
+        assert_eq!(p.hint_of(Pid(1), a), None);
     }
 
     #[test]
@@ -378,9 +578,77 @@ mod tests {
         let before = p.free_regions();
         let va = p.alloc(&mut ctx, &mut proc, 10 * row).unwrap();
         assert_eq!(p.free_regions(), before - 10);
+        assert!(p.stats().pool_occupancy > 0.0);
         p.free(&mut ctx, &mut proc, va).unwrap();
         assert_eq!(p.free_regions(), before);
+        assert_eq!(p.stats().pool_occupancy, 0.0);
         assert!(p.free(&mut ctx, &mut proc, va).is_err());
+    }
+
+    #[test]
+    fn allocations_keyed_per_process() {
+        // two processes get identical VAs from their own address
+        // spaces; the shared kernel allocator must keep them apart
+        let mut ctx = ctx();
+        let mut p1 = Process::new(Pid(1));
+        let mut p2 = Process::new(Pid(2));
+        let mut p = puma(&mut ctx, 4);
+        let row = ctx.scheme.geometry.row_bytes as u64;
+        let va1 = p.alloc(&mut ctx, &mut p1, 2 * row).unwrap();
+        let va2 = p.alloc(&mut ctx, &mut p2, 2 * row).unwrap();
+        assert_eq!(va1, va2, "fresh address spaces hand out the same VA");
+        let r1 = p.lookup(Pid(1), va1).unwrap().regions.clone();
+        let r2 = p.lookup(Pid(2), va2).unwrap().regions.clone();
+        assert_ne!(r1[0].paddr, r2[0].paddr, "distinct physical backing");
+        p.free(&mut ctx, &mut p1, va1).unwrap();
+        assert!(p.lookup(Pid(1), va1).is_none());
+        assert!(p.lookup(Pid(2), va2).is_some(), "pid 2 untouched");
+        p.free(&mut ctx, &mut p2, va2).unwrap();
+    }
+
+    #[test]
+    fn reclaim_returns_fully_free_pages() {
+        let mut ctx = ctx();
+        let mut proc = Process::new(Pid(1));
+        let mut p = puma(&mut ctx, 3);
+        let pool_before = ctx.pool.available();
+        let row = ctx.scheme.geometry.row_bytes as u64;
+        // nothing allocated: every page is fully free -> all reclaimed
+        let va = p.alloc(&mut ctx, &mut proc, 4 * row).unwrap();
+        let reclaimed = p.reclaim(&mut ctx).unwrap();
+        assert_eq!(reclaimed, 2, "two untouched pages go back");
+        assert_eq!(ctx.pool.available(), pool_before + 2);
+        assert_eq!(p.preallocated(), 1);
+        // the pinned page stays usable
+        assert!(p.lookup(Pid(1), va).is_some());
+        assert_eq!(
+            p.carved_regions(),
+            p.free_regions() + p.live_regions(),
+            "accounting identity"
+        );
+        // free the allocation: now the last page reassembles too
+        p.free(&mut ctx, &mut proc, va).unwrap();
+        assert_eq!(p.reclaim(&mut ctx).unwrap(), 1);
+        assert_eq!(ctx.pool.available(), pool_before + 3);
+        assert_eq!(p.free_regions(), 0);
+        assert_eq!(p.stats().pages_reclaimed, 3);
+        // and the pool can be re-primed
+        p.pim_preallocate(&mut ctx, 2).unwrap();
+        assert!(p.alloc(&mut ctx, &mut proc, row).is_ok());
+    }
+
+    #[test]
+    fn partial_pages_are_not_reclaimed() {
+        let mut ctx = ctx();
+        let mut proc = Process::new(Pid(1));
+        let mut p = puma(&mut ctx, 1);
+        let row = ctx.scheme.geometry.row_bytes as u64;
+        let va = p.alloc(&mut ctx, &mut proc, row).unwrap();
+        assert_eq!(p.reclaim(&mut ctx).unwrap(), 0, "page pinned by one row");
+        assert!(p.stats().fragmentation > 0.0);
+        p.free(&mut ctx, &mut proc, va).unwrap();
+        assert_eq!(p.stats().fragmentation, 0.0);
+        assert_eq!(p.reclaim(&mut ctx).unwrap(), 1);
     }
 
     #[test]

@@ -74,6 +74,24 @@ impl OrderedArray {
         self.reindex(sid, old, old + 1);
     }
 
+    /// Remove a *specific* free region (matched by physical address),
+    /// returning whether it was present. Used by the huge-page
+    /// coalescer when it extracts every region of a fully-freed page
+    /// before handing the page back to the boot pool.
+    pub fn remove(&mut self, region: &Region) -> bool {
+        let Some(list) = self.per_sid.get_mut(&region.sid) else {
+            return false;
+        };
+        let old = list.len();
+        let Some(idx) = list.iter().position(|r| r.paddr == region.paddr) else {
+            return false;
+        };
+        list.swap_remove(idx);
+        self.total -= 1;
+        self.reindex(region.sid, old, old - 1);
+        true
+    }
+
     /// Take one region from subarray `sid`, if available.
     pub fn take_from(&mut self, sid: SubarrayId) -> Option<Region> {
         let list = self.per_sid.get_mut(&sid)?;
@@ -188,6 +206,23 @@ mod tests {
         assert!(oa.take_from(SubarrayId(5)).is_none());
         assert_eq!(oa.take_from(SubarrayId(4)).unwrap().sid, SubarrayId(4));
         assert!(oa.take_from(SubarrayId(4)).is_none());
+        assert_eq!(oa.total_free(), 0);
+    }
+
+    #[test]
+    fn remove_specific_region() {
+        let mut oa = OrderedArray::new();
+        oa.insert(region(2, 10));
+        oa.insert(region(2, 11));
+        oa.insert(region(5, 12));
+        assert!(oa.remove(&region(2, 10)));
+        assert!(!oa.remove(&region(2, 10)), "already gone");
+        assert!(!oa.remove(&region(7, 10)), "unknown sid");
+        assert_eq!(oa.total_free(), 2);
+        assert_eq!(oa.free_in(SubarrayId(2)), 1);
+        // index stays consistent: worst-fit still works afterwards
+        assert!(oa.remove(&region(5, 12)));
+        assert_eq!(oa.take_worst_fit().unwrap().sid, SubarrayId(2));
         assert_eq!(oa.total_free(), 0);
     }
 

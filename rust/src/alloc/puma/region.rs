@@ -22,6 +22,15 @@ pub struct Region {
     pub sid: SubarrayId,
 }
 
+impl Region {
+    /// Base physical address of the huge page this region was carved
+    /// from — the key of the allocator's page directory, which the
+    /// free-path coalescer uses to detect fully-reassembled pages.
+    pub fn page_base(&self) -> u64 {
+        crate::os::align_down(self.paddr, crate::os::HUGE_PAGE_SIZE)
+    }
+}
+
 /// Split a huge page into row-granular regions, skipping any that land
 /// on Ambit-reserved rows.
 pub fn split_huge_page(scheme: &InterleaveScheme, page: &HugePage) -> Vec<Region> {
@@ -71,6 +80,15 @@ mod tests {
         let mut addrs: Vec<u64> = regions.iter().map(|r| r.paddr).collect();
         addrs.dedup();
         assert_eq!(addrs.len(), regions.len());
+    }
+
+    #[test]
+    fn page_base_recovers_parent_page() {
+        let s = scheme();
+        let page = HugePage { pfn: 1024 }; // second 2 MiB page
+        for r in split_huge_page(&s, &page) {
+            assert_eq!(r.page_base(), page.phys_addr());
+        }
     }
 
     #[test]

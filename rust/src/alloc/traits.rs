@@ -24,6 +24,9 @@ pub struct OsTiming {
     /// PUMA: re-mmap of one region when stitching VA (PTE rewrite +
     /// TLB shootdown).
     pub remap_region_ns: f64,
+    /// PUMA: returning one fully-reassembled huge page to the boot
+    /// pool (region-store scrub + hugetlb bookkeeping).
+    pub reclaim_page_ns: f64,
 }
 
 impl Default for OsTiming {
@@ -34,24 +37,63 @@ impl Default for OsTiming {
             huge_fault_ns: 1_800.0,
             puma_region_ns: 350.0,
             remap_region_ns: 450.0,
+            reclaim_page_ns: 1_200.0,
         }
     }
 }
 
 /// Cumulative allocator-side statistics.
+///
+/// Counter fields accumulate over the allocator's lifetime; the
+/// `pool_*`/`fragmentation` fields are *gauges* PUMA refreshes after
+/// every mutating call (they stay 0 for the baseline allocators, which
+/// have no region pool). All four allocators keep the alloc-side and
+/// free-side counters symmetric: every mapped page is eventually
+/// counted in `pages_unmapped` when its allocation is released to the
+/// OS, and `bytes_freed` mirrors `bytes_requested` (arena-recycled
+/// chunks, which never go back to the OS, are counted on free too).
+///
+/// ```
+/// use puma::alloc::traits::AllocStats;
+/// let s = AllocStats { allocs: 3, frees: 3, ..Default::default() };
+/// assert_eq!(s.allocs - s.frees, 0);
+/// assert_eq!(s.pages_reclaimed, 0); // baselines never reclaim
+/// ```
 #[derive(Debug, Clone, Copy, Default, PartialEq)]
 pub struct AllocStats {
     pub allocs: u64,
     pub frees: u64,
     pub bytes_requested: u64,
+    /// Bytes handed back via `free` (counted per allocation, like
+    /// `bytes_requested`, regardless of whether the backing memory
+    /// returned to the OS or stayed in an arena).
+    pub bytes_freed: u64,
     /// Simulated ns spent in allocation paths.
     pub alloc_ns: f64,
     /// 4 KiB pages mapped (either directly or within huge pages).
     pub pages_mapped: u64,
+    /// 4 KiB pages whose translations were torn down on `free`.
+    pub pages_unmapped: u64,
     /// PUMA: regions placed via the co-location (hint) path.
     pub hint_colocated: u64,
     /// PUMA: regions that had to fall back to worst-fit despite a hint.
     pub hint_missed: u64,
+    /// PUMA: fully-reassembled huge pages returned to the boot pool.
+    pub pages_reclaimed: u64,
+    /// PUMA: regions moved by `compact()` (RowClone migration).
+    pub regions_migrated: u64,
+    /// PUMA: `compact()` passes executed.
+    pub compactions: u64,
+    /// Gauge — regions currently free in the PUD pool.
+    pub pool_free_regions: u64,
+    /// Gauge — allocated fraction of the carved PUD pool (0 when no
+    /// pages are preallocated).
+    pub pool_occupancy: f64,
+    /// Gauge — fraction of preallocated huge pages that are *partially*
+    /// free: they hold freed rows yet cannot be reclaimed because other
+    /// rows are still live. This is exactly the capacity `compact()`
+    /// exists to win back.
+    pub fragmentation: f64,
 }
 
 /// Shared machine state the allocators draw from.

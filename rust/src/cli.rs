@@ -65,7 +65,7 @@ pub fn build_config(cli: &Cli) -> Result<Config> {
     let mut overrides = cli.flags.clone();
     overrides.remove("config");
     // command-specific flags are not config keys
-    for k in ["micro", "alloc", "size", "batch"] {
+    for k in ["micro", "alloc", "size", "batch", "tenants", "epochs", "mode"] {
         overrides.remove(k);
     }
     cfg.apply(&overrides)?;
@@ -113,6 +113,29 @@ pub fn run(args: &[String]) -> Result<i32> {
             let cfg = build_config(&cli)?;
             cmd_motivation(&cfg)
         }
+        "churn" => {
+            let cfg = build_config(&cli)?;
+            let tenants: usize = cli
+                .flags
+                .get("tenants")
+                .map(String::as_str)
+                .unwrap_or("3")
+                .parse()
+                .context("tenants")?;
+            let epochs: usize = cli
+                .flags
+                .get("epochs")
+                .map(String::as_str)
+                .unwrap_or("10")
+                .parse()
+                .context("epochs")?;
+            let mode = cli
+                .flags
+                .get("mode")
+                .map(String::as_str)
+                .unwrap_or("both");
+            cmd_churn(&cfg, tenants, epochs, mode)
+        }
         "micro" => {
             let cfg = build_config(&cli)?;
             let micro = parse_micro(
@@ -147,6 +170,8 @@ commands:
   motivation   reproduce the §1 allocator-eligibility study
   micro        one cell: --micro zero|copy|aand --alloc NAME --size SIZE
                (--batch submits all reps as one pipeline batch)
+  churn        multi-tenant aging + reclamation/compaction lifecycle:
+               --tenants N --epochs N --mode off|on|both
   info         print machine description and artifact inventory
   help         this text
 
@@ -216,6 +241,37 @@ fn cmd_motivation(cfg: &Config) -> Result<i32> {
     let rows = sweep::run_motivation(&sweep_cfg, &kinds)?;
     println!("{}", report::motivation(&rows, Some(&cfg.out))?);
     println!("(raw series: {}/motivation.csv)", cfg.out.display());
+    Ok(0)
+}
+
+fn cmd_churn(cfg: &Config, tenants: usize, epochs: usize, mode: &str) -> Result<i32> {
+    let mk = |compact: bool| crate::workloads::churn::ChurnConfig {
+        tenants,
+        epochs,
+        compact,
+        huge_pages: cfg.huge_pages,
+        puma_pages: cfg.puma_pages.max(2),
+        churn_rounds: cfg.churn_rounds,
+        seed: cfg.seed,
+        ..Default::default()
+    };
+    let run = |compact: bool| -> Result<crate::workloads::churn::ChurnResult> {
+        crate::workloads::churn::run(cfg.scheme.clone(), &mk(compact))
+    };
+    let text = match mode {
+        "off" => report::churn_runs(&[("off", &run(false)?)], Some(&cfg.out))?,
+        "on" => report::churn_runs(&[("on", &run(true)?)], Some(&cfg.out))?,
+        "both" => {
+            eprintln!("running compaction-off ...");
+            let off = run(false)?;
+            eprintln!("running compaction-on ...");
+            let on = run(true)?;
+            report::churn(&off, Some(&on), Some(&cfg.out))?
+        }
+        other => bail!("unknown --mode {other:?} (off|on|both)"),
+    };
+    println!("{text}");
+    println!("(raw series: {}/churn.csv)", cfg.out.display());
     Ok(0)
 }
 
@@ -347,6 +403,17 @@ mod tests {
             parse_args(&args(&["micro", "--batch", "--size", "1KiB"])).unwrap();
         assert_eq!(cli.flags["batch"], "true");
         // must not be rejected as an unknown config key
+        build_config(&cli).unwrap();
+    }
+
+    #[test]
+    fn churn_flags_are_command_specific_not_config() {
+        let cli = parse_args(&args(&[
+            "churn", "--tenants", "2", "--epochs", "3", "--mode", "off",
+        ]))
+        .unwrap();
+        assert_eq!(cli.flags["mode"], "off");
+        // must not be rejected as unknown config keys
         build_config(&cli).unwrap();
     }
 

@@ -8,6 +8,7 @@
 use anyhow::Result;
 use rustc_hash::FxHashMap;
 
+use crate::alloc::puma::{CompactReport, PumaAlloc};
 use crate::alloc::traits::{Allocator, OsCtx};
 use crate::dram::address::InterleaveScheme;
 use crate::dram::device::DramDevice;
@@ -183,6 +184,21 @@ impl System {
         }
     }
 
+    /// Run one PUMA compaction pass for `pid`: flush its queued
+    /// requests (so nothing executes against stale placements), then
+    /// repair co-location and evacuate thin pages via batched RowClone
+    /// copies, and reclaim every huge page that reassembled (see
+    /// [`PumaAlloc::compact`] and DESIGN.md §8).
+    pub fn compact(
+        &mut self,
+        alloc: &mut PumaAlloc,
+        pid: Pid,
+    ) -> Result<CompactReport> {
+        self.flush(pid)?;
+        let proc = self.processes.get_mut(&pid).expect("live pid");
+        alloc.compact(&mut self.os, proc, &mut self.coord)
+    }
+
     /// Write bytes through a process's virtual mapping (test/workload
     /// seeding).
     pub fn write_virt(&mut self, pid: Pid, va: u64, data: &[u8]) -> Result<()> {
@@ -232,14 +248,9 @@ mod tests {
     use crate::pud::isa::PudOp;
 
     fn small_system() -> System {
-        let scheme = InterleaveScheme::row_major(crate::dram::geometry::DramGeometry {
-            channels: 1,
-            ranks_per_channel: 1,
-            banks_per_rank: 4,
-            subarrays_per_bank: 8,
-            rows_per_subarray: 256,
-            row_bytes: 8192,
-        }); // 64 MiB
+        let scheme = InterleaveScheme::row_major(
+            crate::dram::geometry::DramGeometry::small(), // 64 MiB
+        );
         System::boot(SystemConfig {
             scheme,
             huge_pages: 8,
@@ -343,6 +354,63 @@ mod tests {
             sys.read_virt(pid, b, len).unwrap(),
             vec![!0x33u8; len as usize]
         );
+    }
+
+    #[test]
+    fn compact_through_system_preserves_contents_and_restores_pud() {
+        let mut sys = small_system();
+        let pid = sys.spawn();
+        let row = sys.os.scheme.geometry.row_bytes as u64;
+        let mut puma = PumaAlloc::new(row, FitPolicy::WorstFit);
+        puma.pim_preallocate(&mut sys.os, 2).unwrap();
+        // exhaust the pool, then force a scattered aligned allocation
+        let a = sys.alloc(&mut puma, pid, row).unwrap();
+        let want = puma.lookup(pid, a).unwrap().regions[0].sid;
+        let mut fillers = Vec::new();
+        while puma.free_regions() > 0 {
+            fillers.push(sys.alloc(&mut puma, pid, row).unwrap());
+        }
+        let wrong = fillers
+            .iter()
+            .find(|va| puma.lookup(pid, **va).unwrap().regions[0].sid != want)
+            .copied()
+            .unwrap();
+        sys.free(&mut puma, pid, wrong).unwrap();
+        let b = sys.alloc_align(&mut puma, pid, row, a).unwrap();
+        assert_ne!(puma.lookup(pid, b).unwrap().regions[0].sid, want);
+        let data: Vec<u8> = (0..row).map(|i| (i % 199) as u8).collect();
+        sys.write_virt(pid, b, &data).unwrap();
+        // open a repair target in the preferred subarray, compact
+        let target = fillers
+            .iter()
+            .find(|va| {
+                **va != wrong
+                    && puma
+                        .lookup(pid, **va)
+                        .map(|al| al.regions[0].sid == want)
+                        .unwrap_or(false)
+            })
+            .copied()
+            .unwrap();
+        sys.free(&mut puma, pid, target).unwrap();
+        let rep = sys.compact(&mut puma, pid).unwrap();
+        assert_eq!(rep.repairs, 1);
+        assert_eq!(
+            sys.read_virt(pid, b, row).unwrap(),
+            data,
+            "contents survive migration, via the re-pointed VA"
+        );
+        // the repaired pair now runs fully in-DRAM
+        sys.write_virt(pid, a, &data).unwrap();
+        let fb_before = sys.coord.stats.fallback_rows;
+        let pud_before = sys.coord.stats.pud_rows;
+        sys.submit(pid, &BulkRequest::new(PudOp::And, b, vec![a, b], row))
+            .unwrap();
+        assert_eq!(
+            sys.coord.stats.fallback_rows, fb_before,
+            "repaired operands run in-DRAM"
+        );
+        assert!(sys.coord.stats.pud_rows > pud_before);
     }
 
     #[test]

@@ -58,6 +58,21 @@ pub struct Loc {
 }
 
 impl DramGeometry {
+    /// The 64 MiB machine used throughout tests, benches, and the
+    /// small examples: 1 channel × 1 rank × 4 banks × 8 subarrays ×
+    /// 256 rows × 8 KiB rows — big enough to exercise every placement
+    /// path, small enough to churn hard in milliseconds.
+    pub fn small() -> Self {
+        Self {
+            channels: 1,
+            ranks_per_channel: 1,
+            banks_per_rank: 4,
+            subarrays_per_bank: 8,
+            rows_per_subarray: 256,
+            row_bytes: 8192,
+        }
+    }
+
     /// Validate all fields are nonzero powers of two.
     pub fn validate(&self) -> Result<()> {
         for (name, v) in [
@@ -143,6 +158,14 @@ mod tests {
         assert_eq!(g.capacity_bytes(), 8 << 30);
         assert_eq!(g.total_subarrays(), 1024);
         assert_eq!(g.subarray_bytes(), 8 << 20);
+    }
+
+    #[test]
+    fn small_geometry_is_64mib() {
+        let g = DramGeometry::small();
+        g.validate().unwrap();
+        assert_eq!(g.capacity_bytes(), 64 << 20);
+        assert_eq!(g.total_subarrays(), 32);
     }
 
     #[test]

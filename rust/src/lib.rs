@@ -13,7 +13,9 @@
 //! * [`os`] — OS memory substrate: buddy frame allocator, Sv39-like
 //!   page tables, VMA manager, boot-time huge-page pool, processes.
 //! * [`alloc`] — the allocators under study: `malloc`/`posix_memalign`
-//!   simulations, huge-page-backed allocation, and **PUMA** itself.
+//!   simulations, huge-page-backed allocation, and **PUMA** itself —
+//!   including the allocation lifecycle (free-path coalescing,
+//!   huge-page reclamation, RowClone-driven compaction; DESIGN.md §8).
 //! * [`pud`] — the processing-using-DRAM substrate (Ambit + RowClone):
 //!   legality checks, functional execution, command timing.
 //! * [`coordinator`] — the plan/schedule/execute request pipeline:

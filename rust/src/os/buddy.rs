@@ -34,8 +34,8 @@ pub struct BuddyAllocator {
     /// Outstanding allocations, for double-free detection and
     /// invariant checks.
     outstanding: FxHashSet<(Pfn, u8)>,
-    /// Blocks pinned by [`churn`] to model long-lived allocations of
-    /// other processes (released by [`release_pinned`]).
+    /// Blocks pinned by [`BuddyAllocator::churn`] to model long-lived allocations of
+    /// other processes (released by [`BuddyAllocator::release_pinned`]).
     pinned: Vec<(Pfn, u8)>,
     pub allocated_frames: u64,
 }
@@ -125,7 +125,7 @@ impl BuddyAllocator {
         Ok(pfn)
     }
 
-    /// Free a block previously returned by [`alloc`] with this order.
+    /// Free a block previously returned by [`BuddyAllocator::alloc`] with this order.
     pub fn free(&mut self, pfn: Pfn, order: u8) {
         assert!(order <= MAX_ORDER);
         assert_eq!(pfn % (1 << order), 0, "pfn {pfn} misaligned for order {order}");
@@ -154,7 +154,7 @@ impl BuddyAllocator {
     /// roughly half of the touched blocks to model other processes'
     /// long-lived allocations (full release would simply coalesce
     /// everything back into ordered max-order blocks). Afterwards,
-    /// consecutive [`alloc`] calls return scattered frames — the
+    /// consecutive [`BuddyAllocator::alloc`] calls return scattered frames — the
     /// realistic starting condition for the malloc baseline.
     pub fn churn(&mut self, rng: &mut Pcg64, rounds: usize) {
         let mut held: Vec<(Pfn, u8)> = Vec::new();
@@ -179,12 +179,12 @@ impl BuddyAllocator {
         self.pinned.extend(held);
     }
 
-    /// Frames currently pinned by [`churn`].
+    /// Frames currently pinned by [`BuddyAllocator::churn`].
     pub fn pinned_frames(&self) -> u64 {
         self.pinned.iter().map(|&(_, o)| 1u64 << o).sum()
     }
 
-    /// Release every block pinned by [`churn`].
+    /// Release every block pinned by [`BuddyAllocator::churn`].
     pub fn release_pinned(&mut self) {
         for (pfn, order) in std::mem::take(&mut self.pinned) {
             self.free(pfn, order);

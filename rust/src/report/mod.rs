@@ -5,9 +5,11 @@ use std::path::Path;
 
 use anyhow::Result;
 
+use crate::alloc::traits::AllocStats;
 use crate::util::csvio::Csv;
 use crate::util::table::{fnum, Table};
-use crate::util::units::fmt_bytes;
+use crate::util::units::{fmt_bytes, fmt_ns};
+use crate::workloads::churn::ChurnResult;
 use crate::workloads::microbench::{AllocatorKind, Micro};
 use crate::workloads::sweep::SweepCell;
 
@@ -133,6 +135,167 @@ pub fn motivation(
     ))
 }
 
+/// Render the allocation-lifecycle counters of [`AllocStats`] — the
+/// free-path/reclaim/compaction accounting added in DESIGN.md §8 —
+/// for one or more allocators side by side.
+pub fn alloc_lifecycle(entries: &[(&str, AllocStats)]) -> String {
+    let mut table = Table::new(vec![
+        "allocator",
+        "allocs",
+        "frees",
+        "bytes-req",
+        "bytes-freed",
+        "pages-map",
+        "pages-unmap",
+        "reclaimed",
+        "migrated",
+        "occ%",
+        "frag%",
+    ])
+    .left(0);
+    for (name, s) in entries {
+        table.row(vec![
+            name.to_string(),
+            s.allocs.to_string(),
+            s.frees.to_string(),
+            fmt_bytes(s.bytes_requested),
+            fmt_bytes(s.bytes_freed),
+            s.pages_mapped.to_string(),
+            s.pages_unmapped.to_string(),
+            s.pages_reclaimed.to_string(),
+            s.regions_migrated.to_string(),
+            format!("{:.0}%", s.pool_occupancy * 100.0),
+            format!("{:.0}%", s.fragmentation * 100.0),
+        ]);
+    }
+    table.render()
+}
+
+/// Render the churn-workload comparison: per-epoch lifecycle curves
+/// for a compaction-off run and (optionally) a compaction-on run,
+/// plus the steady-state summary. Writes `churn.csv` when `out_dir`
+/// is given.
+pub fn churn(
+    off: &ChurnResult,
+    on: Option<&ChurnResult>,
+    out_dir: Option<&Path>,
+) -> Result<String> {
+    let runs: Vec<(&str, &ChurnResult)> = std::iter::once(("off", off))
+        .chain(on.map(|r| ("on", r)))
+        .collect();
+    churn_runs(&runs, out_dir)
+}
+
+/// As [`churn`], with caller-chosen labels (the CLI's single-mode
+/// rendering). The pairwise win/loss summary appears with exactly two
+/// runs.
+pub fn churn_runs(
+    runs: &[(&str, &ChurnResult)],
+    out_dir: Option<&Path>,
+) -> Result<String> {
+    let mut table = Table::new(vec![
+        "epoch",
+        "mode",
+        "live",
+        "op-pud%",
+        "peak-occ%",
+        "occ%",
+        "frag%",
+        "free",
+        "migrated",
+        "reclaimed",
+    ])
+    .left(1);
+    let mut csv = Csv::new(vec![
+        "mode",
+        "epoch",
+        "op_pud_fraction",
+        "peak_occupancy",
+        "pool_occupancy",
+        "fragmentation",
+        "free_regions",
+        "regions_migrated_total",
+        "pages_reclaimed_total",
+        "op_ns",
+        "compact_ns",
+    ]);
+    for (mode, r) in runs {
+        for s in &r.samples {
+            table.row(vec![
+                s.epoch.to_string(),
+                mode.to_string(),
+                s.live_groups.to_string(),
+                format!("{:.1}%", s.op_pud_fraction * 100.0),
+                format!("{:.0}%", s.peak_occupancy * 100.0),
+                format!("{:.0}%", s.pool_occupancy * 100.0),
+                format!("{:.0}%", s.fragmentation * 100.0),
+                s.free_regions.to_string(),
+                s.regions_migrated_total.to_string(),
+                s.pages_reclaimed_total.to_string(),
+            ]);
+            csv.row(vec![
+                mode.to_string(),
+                s.epoch.to_string(),
+                format!("{:.6}", s.op_pud_fraction),
+                format!("{:.6}", s.peak_occupancy),
+                format!("{:.6}", s.pool_occupancy),
+                format!("{:.6}", s.fragmentation),
+                s.free_regions.to_string(),
+                s.regions_migrated_total.to_string(),
+                s.pages_reclaimed_total.to_string(),
+                format!("{:.1}", s.op_ns),
+                format!("{:.1}", s.compact_ns),
+            ]);
+        }
+    }
+    if let Some(dir) = out_dir {
+        csv.write(dir.join("churn.csv"))?;
+    }
+    let mut summary = String::new();
+    for (mode, r) in runs {
+        summary.push_str(&format!(
+            "compaction {mode:>3}: steady-state PUD-row fraction {:.3}, \
+             {} page(s) returned to the boot pool, final occupancy {:.0}%, \
+             workload {}\n",
+            r.steady_state_pud_fraction,
+            r.pages_returned,
+            r.final_occupancy * 100.0,
+            fmt_ns(r.samples.iter().map(|s| s.op_ns).sum()),
+        ));
+    }
+    if let [(_, base), (_, cmp)] = runs {
+        summary.push_str(&format!(
+            "compaction wins {:+.1} PUD-row points at steady state and \
+             returns {} more page(s); migration cost {}\n",
+            (cmp.steady_state_pud_fraction - base.steady_state_pud_fraction)
+                * 100.0,
+            cmp.pages_returned as i64 - base.pages_returned as i64,
+            fmt_ns(cmp.samples.iter().map(|s| s.compact_ns).sum()),
+        ));
+    }
+    let lifecycle = alloc_lifecycle(
+        &runs
+            .iter()
+            .map(|(mode, r)| {
+                (
+                    if *mode == "on" {
+                        "puma (compact)"
+                    } else {
+                        "puma (no compact)"
+                    },
+                    r.alloc,
+                )
+            })
+            .collect::<Vec<_>>(),
+    );
+    Ok(format!(
+        "## Churn — allocation lifecycle under multi-tenant aging\n\n{}\n{}\n{}",
+        table.render(),
+        summary,
+        lifecycle
+    ))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -186,14 +349,71 @@ mod tests {
         assert!(s.contains("60%"));
     }
 
+    fn churn_result(pud: f64, pages: u64) -> ChurnResult {
+        ChurnResult {
+            samples: vec![crate::workloads::churn::EpochSample {
+                epoch: 0,
+                live_groups: 5,
+                op_pud_fraction: pud,
+                peak_occupancy: 0.95,
+                pool_occupancy: 0.5,
+                fragmentation: 0.25,
+                free_regions: 100,
+                regions_migrated_total: 3,
+                pages_reclaimed_total: pages,
+                op_ns: 1000.0,
+                compact_ns: 50.0,
+            }],
+            alloc: Default::default(),
+            coord: Default::default(),
+            steady_state_pud_fraction: pud,
+            pages_returned: pages,
+            final_occupancy: 0.1,
+            final_pool_available: 4,
+        }
+    }
+
+    #[test]
+    fn churn_report_renders_comparison() {
+        let off = churn_result(0.8, 0);
+        let on = churn_result(0.95, 2);
+        let s = churn(&off, Some(&on), None).unwrap();
+        assert!(s.contains("Churn"));
+        assert!(s.contains("80.0%"));
+        assert!(s.contains("95.0%"));
+        assert!(s.contains("compaction wins"));
+        assert!(s.contains("puma (compact)"));
+        // off-only rendering works too
+        let solo = churn(&off, None, None).unwrap();
+        assert!(!solo.contains("compaction wins"));
+    }
+
+    #[test]
+    fn lifecycle_table_lists_new_counters() {
+        let s = alloc_lifecycle(&[(
+            "malloc",
+            AllocStats {
+                allocs: 2,
+                pages_mapped: 7,
+                pages_unmapped: 7,
+                ..Default::default()
+            },
+        )]);
+        assert!(s.contains("pages-unmap"));
+        assert!(s.contains("malloc"));
+        assert!(s.contains("reclaimed"));
+    }
+
     #[test]
     fn writes_csvs() {
         let dir = std::env::temp_dir().join("puma_report_test");
         let series = vec![(Micro::Zero, vec![cell(250, 1.0, 2.0, 1, 0)])];
         figure2(&series, Some(&dir)).unwrap();
         motivation(&[(AllocatorKind::Malloc, 250, 0.0)], Some(&dir)).unwrap();
+        churn(&churn_result(0.5, 1), None, Some(&dir)).unwrap();
         assert!(dir.join("figure2.csv").exists());
         assert!(dir.join("motivation.csv").exists());
+        assert!(dir.join("churn.csv").exists());
         let _ = std::fs::remove_dir_all(dir);
     }
 }

@@ -1,0 +1,353 @@
+//! Multi-tenant aging/churn driver — the allocation-lifecycle
+//! workload (promoted from `examples/multi_tenant.rs`).
+//!
+//! Several tenants allocate operand triples through the shared PUMA
+//! instance, run bulk ops over every live triple, and free a fraction
+//! of the fleet each epoch. The fill phase deliberately drives the
+//! region pool to near-exhaustion, which is what makes
+//! `pim_alloc_align` miss its preferred subarrays — the co-location
+//! decay the paper's alloc-time-only design cannot undo. With
+//! `compact: true` the driver runs a [`PumaAlloc::compact`] pass per
+//! tenant per epoch (plus a final drain), so the decay is repaired and
+//! fully-freed huge pages flow back to the boot pool; with
+//! `compact: false` it only runs the bare [`PumaAlloc::reclaim`],
+//! which models the paper's baseline lifecycle.
+//!
+//! Per-epoch curves (PUD-row fraction of the *workload* ops, pool
+//! occupancy, fragmentation) are what `puma churn` prints and
+//! `bench_runtime` writes to `BENCH_runtime.json`.
+
+use anyhow::Result;
+
+use crate::alloc::puma::{FitPolicy, PumaAlloc};
+use crate::alloc::traits::{AllocStats, Allocator};
+use crate::coordinator::system::{System, SystemConfig};
+use crate::coordinator::CoordStats;
+use crate::dram::address::InterleaveScheme;
+use crate::dram::timing::TimingParams;
+use crate::os::process::Pid;
+use crate::pud::isa::{BulkRequest, PudOp};
+use crate::util::rng::Pcg64;
+
+/// Churn-driver knobs.
+#[derive(Debug, Clone)]
+pub struct ChurnConfig {
+    /// Concurrent tenant processes sharing the PUMA instance.
+    pub tenants: usize,
+    /// Alloc/op/free/compact rounds.
+    pub epochs: usize,
+    /// Upper bound on operand size, in DRAM rows (sizes vary per
+    /// group, `4..=2*rows_per_operand`, to stress placement).
+    pub rows_per_operand: u64,
+    /// Bulk ops per live triple per epoch.
+    pub ops_per_group: usize,
+    /// Fraction of live triples freed per epoch.
+    pub free_fraction: f64,
+    /// Run `compact()` per tenant per epoch (else bare `reclaim()`).
+    pub compact: bool,
+    /// Boot-time hugetlb pool size.
+    pub huge_pages: usize,
+    /// Pages `pim_preallocate` keeps moving into PUMA (the driver tops
+    /// the allocator back up to this as reclaim returns pages).
+    pub puma_pages: usize,
+    /// Buddy aging before the run.
+    pub churn_rounds: usize,
+    pub seed: u64,
+}
+
+impl Default for ChurnConfig {
+    fn default() -> Self {
+        Self {
+            tenants: 3,
+            epochs: 10,
+            rows_per_operand: 12,
+            ops_per_group: 2,
+            free_fraction: 0.45,
+            compact: false,
+            huge_pages: 8,
+            puma_pages: 4,
+            churn_rounds: 1_000,
+            seed: 0xC0FFEE,
+        }
+    }
+}
+
+/// One live operand triple.
+#[derive(Debug, Clone, Copy)]
+struct Group {
+    pid: Pid,
+    a: u64,
+    b: u64,
+    c: u64,
+    len: u64,
+}
+
+/// Per-epoch measurement point.
+#[derive(Debug, Clone)]
+pub struct EpochSample {
+    pub epoch: usize,
+    /// Live triples at sample time (after the epoch's frees).
+    pub live_groups: usize,
+    /// PUD-row fraction of this epoch's workload ops only (compaction
+    /// copies are excluded — they are reported as `compact_ns`).
+    pub op_pud_fraction: f64,
+    /// Allocated fraction of the carved pool right after the fill
+    /// phase (the pressure the epoch's late allocations saw).
+    pub peak_occupancy: f64,
+    /// Allocated fraction of the carved pool at epoch end (after the
+    /// frees and the lifecycle pass).
+    pub pool_occupancy: f64,
+    /// Fraction of held pages that are partially free (unreclaimable).
+    pub fragmentation: f64,
+    pub free_regions: usize,
+    /// Cumulative regions moved by compaction.
+    pub regions_migrated_total: u64,
+    /// Cumulative huge pages returned to the boot pool.
+    pub pages_reclaimed_total: u64,
+    /// Simulated ns of this epoch's workload ops.
+    pub op_ns: f64,
+    /// Simulated ns of this epoch's migration copies.
+    pub compact_ns: f64,
+}
+
+/// Result of one churn run.
+#[derive(Debug, Clone)]
+pub struct ChurnResult {
+    pub samples: Vec<EpochSample>,
+    pub alloc: AllocStats,
+    pub coord: CoordStats,
+    /// Mean workload-op PUD-row fraction over the last half of the
+    /// epochs — the paper-metric the compaction comparison is about.
+    pub steady_state_pud_fraction: f64,
+    /// Huge pages returned to the boot pool over the whole run
+    /// (including the final drain).
+    pub pages_returned: u64,
+    /// Pool occupancy after the final drain.
+    pub final_occupancy: f64,
+    /// Boot-pool pages available again after the final drain.
+    pub final_pool_available: usize,
+}
+
+/// Run the churn workload on a machine with the given interleaving.
+pub fn run(scheme: InterleaveScheme, cfg: &ChurnConfig) -> Result<ChurnResult> {
+    let mut sys = System::boot(SystemConfig {
+        scheme,
+        timing: TimingParams::default(),
+        huge_pages: cfg.huge_pages,
+        churn_rounds: cfg.churn_rounds,
+        seed: cfg.seed,
+        artifacts: None,
+    })?;
+    let row = sys.os.scheme.geometry.row_bytes as u64;
+    let mut puma = PumaAlloc::new(row, FitPolicy::WorstFit);
+    puma.pim_preallocate(&mut sys.os, cfg.puma_pages)?;
+    let pids: Vec<Pid> = (0..cfg.tenants).map(|_| sys.spawn()).collect();
+    let mut rng = Pcg64::new(cfg.seed ^ 0x5EED_CAFE);
+    let ops = [PudOp::And, PudOp::Or, PudOp::Xor];
+
+    let mut live: Vec<Group> = Vec::new();
+    let mut samples = Vec::with_capacity(cfg.epochs);
+    let mut tenant_rr = 0usize;
+
+    for epoch in 0..cfg.epochs {
+        // 0. top the allocator back up with pages reclaim gave back
+        while puma.preallocated() < cfg.puma_pages && sys.os.pool.available() > 0 {
+            puma.pim_preallocate(&mut sys.os, 1)?;
+        }
+
+        // 1. fill to near-exhaustion: randomly-sized triples until not
+        //    even the smallest triple fits — the final groups allocate
+        //    under real subarray pressure, where hint misses happen
+        while puma.free_regions() >= 3 * 4 {
+            let max_rows =
+                (2 * cfg.rows_per_operand).min(puma.free_regions() as u64 / 3);
+            if max_rows < 4 {
+                break;
+            }
+            let rows = rng.range(4, max_rows);
+            let len = rows * row;
+            let pid = pids[tenant_rr % pids.len()];
+            tenant_rr += 1;
+            let Ok(a) = sys.alloc(&mut puma, pid, len) else { break };
+            let Ok(b) = sys.alloc_align(&mut puma, pid, len, a) else {
+                sys.free(&mut puma, pid, a)?;
+                break;
+            };
+            let Ok(c) = sys.alloc_align(&mut puma, pid, len, a) else {
+                sys.free(&mut puma, pid, b)?;
+                sys.free(&mut puma, pid, a)?;
+                break;
+            };
+            let mut buf = vec![0u8; len as usize];
+            rng.fill_bytes(&mut buf);
+            sys.write_virt(pid, a, &buf)?;
+            rng.fill_bytes(&mut buf);
+            sys.write_virt(pid, b, &buf)?;
+            live.push(Group { pid, a, b, c, len });
+        }
+        let peak_occupancy = puma.occupancy();
+
+        // 2. workload ops over every live triple, batched per tenant
+        let pud_before = sys.coord.stats.pud_rows;
+        let fb_before = sys.coord.stats.fallback_rows;
+        let mut op_ns = 0.0;
+        for pid in &pids {
+            for g in live.iter().filter(|g| g.pid == *pid) {
+                for k in 0..cfg.ops_per_group {
+                    let op = ops[(epoch + k) % ops.len()];
+                    sys.enqueue(*pid, BulkRequest::new(op, g.c, vec![g.a, g.b], g.len));
+                }
+            }
+            op_ns += sys.flush(*pid)?.total_ns;
+        }
+        let dp = sys.coord.stats.pud_rows - pud_before;
+        let df = sys.coord.stats.fallback_rows - fb_before;
+        let op_pud_fraction = dp as f64 / (dp + df).max(1) as f64;
+
+        // 3. free a fraction of the fleet, uniformly at random
+        let nfree = (live.len() as f64 * cfg.free_fraction) as usize;
+        for _ in 0..nfree {
+            let idx = rng.below(live.len().max(1) as u64) as usize;
+            let g = live.swap_remove(idx);
+            sys.free(&mut puma, g.pid, g.c)?;
+            sys.free(&mut puma, g.pid, g.b)?;
+            sys.free(&mut puma, g.pid, g.a)?;
+        }
+
+        // 4. lifecycle pass
+        let mut compact_ns = 0.0;
+        if cfg.compact {
+            for pid in &pids {
+                compact_ns += sys.compact(&mut puma, *pid)?.copy_ns;
+            }
+        } else {
+            puma.reclaim(&mut sys.os)?;
+        }
+
+        samples.push(EpochSample {
+            epoch,
+            live_groups: live.len(),
+            op_pud_fraction,
+            peak_occupancy,
+            pool_occupancy: puma.occupancy(),
+            fragmentation: puma.fragmentation(),
+            free_regions: puma.free_regions(),
+            regions_migrated_total: puma.stats().regions_migrated,
+            pages_reclaimed_total: puma.stats().pages_reclaimed,
+            op_ns,
+            compact_ns,
+        });
+    }
+
+    // 5. final drain: the fleet shrinks to a few stragglers; without
+    //    evacuation the pool stays pinned, with it the pages flow back
+    let keep = (live.len() / 8).max(2).min(live.len());
+    while live.len() > keep {
+        let idx = rng.below(live.len() as u64) as usize;
+        let g = live.swap_remove(idx);
+        sys.free(&mut puma, g.pid, g.c)?;
+        sys.free(&mut puma, g.pid, g.b)?;
+        sys.free(&mut puma, g.pid, g.a)?;
+    }
+    if cfg.compact {
+        for pid in &pids {
+            sys.compact(&mut puma, *pid)?;
+        }
+    } else {
+        puma.reclaim(&mut sys.os)?;
+    }
+
+    let half = samples.len().div_ceil(2);
+    let steady: f64 = samples[samples.len() - half..]
+        .iter()
+        .map(|s| s.op_pud_fraction)
+        .sum::<f64>()
+        / half.max(1) as f64;
+    Ok(ChurnResult {
+        steady_state_pud_fraction: steady,
+        alloc: puma.stats(),
+        coord: sys.coord.stats.clone(),
+        pages_returned: puma.stats().pages_reclaimed,
+        final_occupancy: puma.occupancy(),
+        final_pool_available: sys.os.pool.available(),
+        samples,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dram::geometry::DramGeometry;
+
+    fn small_scheme() -> InterleaveScheme {
+        InterleaveScheme::row_major(DramGeometry::small()) // 64 MiB
+    }
+
+    #[test]
+    fn churn_is_deterministic() {
+        let cfg = ChurnConfig {
+            epochs: 3,
+            ..Default::default()
+        };
+        let x = run(small_scheme(), &cfg).unwrap();
+        let y = run(small_scheme(), &cfg).unwrap();
+        assert_eq!(x.samples.len(), 3);
+        assert_eq!(
+            x.steady_state_pud_fraction,
+            y.steady_state_pud_fraction
+        );
+        assert_eq!(x.alloc, y.alloc);
+    }
+
+    #[test]
+    fn churn_exercises_the_pool_lifecycle() {
+        let result = run(small_scheme(), &ChurnConfig::default()).unwrap();
+        assert_eq!(result.samples.len(), 10);
+        let st = &result.alloc;
+        assert!(st.allocs > st.frees, "stragglers stay live");
+        assert!(
+            st.hint_missed > 0,
+            "near-exhaustion fills must produce scattered placements \
+             (misses={}, colocated={})",
+            st.hint_missed,
+            st.hint_colocated
+        );
+        // the fill phase drives the pool to near-exhaustion
+        assert!(result.samples.iter().any(|s| s.peak_occupancy > 0.9));
+    }
+
+    #[test]
+    fn compaction_strictly_improves_steady_state_and_reclaims() {
+        let off = run(small_scheme(), &ChurnConfig::default()).unwrap();
+        let on = run(
+            small_scheme(),
+            &ChurnConfig {
+                compact: true,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        assert!(
+            off.steady_state_pud_fraction < 1.0,
+            "without compaction, co-location decay must be visible \
+             (steady={})",
+            off.steady_state_pud_fraction
+        );
+        assert!(
+            on.steady_state_pud_fraction > off.steady_state_pud_fraction,
+            "compaction must strictly improve the steady-state PUD-row \
+             fraction: on={} off={}",
+            on.steady_state_pud_fraction,
+            off.steady_state_pud_fraction
+        );
+        assert!(on.alloc.regions_migrated > 0, "repairs actually ran");
+        assert!(
+            on.pages_returned >= 1,
+            "evacuation must hand at least one reassembled huge page back"
+        );
+        assert!(
+            on.final_pool_available > off.final_pool_available,
+            "the reclaimed pool is visible to the rest of the system"
+        );
+    }
+}

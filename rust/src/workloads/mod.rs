@@ -5,14 +5,19 @@
 //! * [`sweep`] — allocation-size sweeps (Figure 2 / motivation study).
 //! * [`trace`] — record/replay allocation+op traces for multi-process
 //!   fragmentation stress.
+//! * [`churn`] — the multi-tenant aging driver: pool pressure,
+//!   co-location decay, and the reclamation/compaction lifecycle
+//!   (DESIGN.md §8).
 //! * [`bitmap_index`] — bitmap-index query workload (the database
 //!   scenario motivating Ambit-class PUD).
 //! * [`setops`] — set algebra over bit-vector sets (SISA-like).
 
 pub mod bitmap_index;
+pub mod churn;
 pub mod microbench;
 pub mod setops;
 pub mod sweep;
 pub mod trace;
 
+pub use churn::{ChurnConfig, ChurnResult, EpochSample};
 pub use microbench::{AllocatorKind, Micro, MicrobenchResult};

@@ -161,14 +161,7 @@ mod tests {
 
     fn small_cfg() -> SweepConfig {
         SweepConfig {
-            scheme: InterleaveScheme::row_major(DramGeometry {
-                channels: 1,
-                ranks_per_channel: 1,
-                banks_per_rank: 4,
-                subarrays_per_bank: 8,
-                rows_per_subarray: 256,
-                row_bytes: 8192,
-            }),
+            scheme: InterleaveScheme::row_major(DramGeometry::small()),
             sizes: vec![250, 16 << 10, 256 << 10],
             reps: 1,
             huge_pages: 12,

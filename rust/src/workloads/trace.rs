@@ -228,14 +228,7 @@ mod tests {
     use crate::workloads::microbench::AllocatorKind;
 
     fn sys() -> System {
-        let scheme = InterleaveScheme::row_major(DramGeometry {
-            channels: 1,
-            ranks_per_channel: 1,
-            banks_per_rank: 4,
-            subarrays_per_bank: 8,
-            rows_per_subarray: 256,
-            row_bytes: 8192,
-        });
+        let scheme = InterleaveScheme::row_major(DramGeometry::small());
         System::boot(SystemConfig {
             scheme,
             huge_pages: 16,

@@ -99,7 +99,7 @@ fn puma_pool_exhaustion_and_recovery() {
     // free -> full recovery, allocations succeed again
     puma.free(&mut ctx, &mut proc, a).unwrap();
     let b = puma.alloc(&mut ctx, &mut proc, 8192).unwrap();
-    assert!(puma.lookup(b).is_some());
+    assert!(puma.lookup(Pid(3), b).is_some());
 }
 
 #[test]

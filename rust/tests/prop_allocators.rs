@@ -11,14 +11,7 @@ use puma::proptest::{self, assert_prop};
 
 fn small_ctx(seed: u64) -> OsCtx {
     OsCtx::boot(
-        InterleaveScheme::row_major(DramGeometry {
-            channels: 1,
-            ranks_per_channel: 1,
-            banks_per_rank: 4,
-            subarrays_per_bank: 8,
-            rows_per_subarray: 256,
-            row_bytes: 8192,
-        }),
+        InterleaveScheme::row_major(DramGeometry::small()),
         16,
         2_000,
         seed,
@@ -84,7 +77,7 @@ fn puma_regions_unique_and_recycled() {
                 };
                 if let Ok(va) = res {
                     // regions backing this allocation are not in use
-                    for r in &puma.lookup(va).unwrap().regions {
+                    for r in &puma.lookup(Pid(1), va).unwrap().regions {
                         assert_prop!(
                             held_regions.insert(r.paddr),
                             "region {:#x} double-handed", r.paddr
@@ -95,7 +88,7 @@ fn puma_regions_unique_and_recycled() {
             } else {
                 let idx = g.usize(0..live.len());
                 let va = live.swap_remove(idx);
-                for r in puma.lookup(va).unwrap().regions.clone() {
+                for r in puma.lookup(Pid(1), va).unwrap().regions.clone() {
                     held_regions.remove(&r.paddr);
                 }
                 puma.free(&mut ctx, &mut proc, va).unwrap();
@@ -117,7 +110,7 @@ fn puma_allocations_always_row_aligned_regions() {
         let mut proc = Process::new(Pid(2));
         let len = g.u64(1..400_000);
         if let Ok(va) = puma.alloc(&mut ctx, &mut proc, len) {
-            let alloc = puma.lookup(va).unwrap();
+            let alloc = puma.lookup(Pid(2), va).unwrap();
             for r in &alloc.regions {
                 assert_prop!(r.paddr % 8192 == 0, "region misaligned");
                 assert_prop!(ctx.scheme.subarray_id(r.paddr) == r.sid);
@@ -142,8 +135,8 @@ fn hint_colocation_is_total_when_pool_is_fresh() {
         let b = puma
             .alloc_align(&mut ctx, &mut proc, rows * 8192, a)
             .unwrap();
-        let ra = &puma.lookup(a).unwrap().regions;
-        let rb = &puma.lookup(b).unwrap().regions;
+        let ra = &puma.lookup(Pid(3), a).unwrap().regions;
+        let rb = &puma.lookup(Pid(3), b).unwrap().regions;
         for (x, y) in ra.iter().zip(rb) {
             assert_prop!(x.sid == y.sid, "row not co-located");
         }

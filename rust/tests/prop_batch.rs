@@ -16,14 +16,7 @@ use puma::proptest::{self, Gen};
 use puma::pud::isa::{BulkRequest, PudOp};
 
 fn boot() -> System {
-    let scheme = InterleaveScheme::row_major(DramGeometry {
-        channels: 1,
-        ranks_per_channel: 1,
-        banks_per_rank: 4,
-        subarrays_per_bank: 8,
-        rows_per_subarray: 256,
-        row_bytes: 8192,
-    }); // 64 MiB
+    let scheme = InterleaveScheme::row_major(DramGeometry::small()); // 64 MiB
     System::boot(SystemConfig {
         scheme,
         huge_pages: 12,

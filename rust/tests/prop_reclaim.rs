@@ -1,0 +1,222 @@
+//! Property tests for the allocation lifecycle (DESIGN.md §8):
+//! region accounting under arbitrary alloc/free interleavings,
+//! huge-page reassembly restoring the boot pool, and content-
+//! preserving, leak-free compaction.
+
+use puma::alloc::puma::{FitPolicy, PumaAlloc};
+use puma::alloc::traits::{Allocator, OsCtx};
+use puma::coordinator::system::{System, SystemConfig};
+use puma::dram::address::InterleaveScheme;
+use puma::dram::geometry::DramGeometry;
+use puma::dram::timing::TimingParams;
+use puma::os::process::{Pid, Process};
+use puma::proptest::{self, assert_prop};
+
+const ROW: u64 = 8192;
+
+fn small_scheme() -> InterleaveScheme {
+    InterleaveScheme::row_major(DramGeometry::small()) // 64 MiB
+}
+
+fn small_ctx(seed: u64) -> OsCtx {
+    OsCtx::boot(small_scheme(), 16, 1_500, seed).unwrap()
+}
+
+/// carved == free + live must hold after every mutation — no region is
+/// ever lost or double-tracked, across allocs, frees, reclaims, and
+/// re-preallocation.
+#[test]
+fn interleavings_leak_no_rows() {
+    proptest::check_cases("lifecycle region conservation", 10, |g| {
+        let mut ctx = small_ctx(g.u64(0..1 << 32));
+        let boot_pool = ctx.pool.available();
+        let mut puma = PumaAlloc::new(ROW, FitPolicy::WorstFit);
+        puma.pim_preallocate(&mut ctx, 3).unwrap();
+        let mut proc = Process::new(Pid(1));
+        let mut live: Vec<u64> = Vec::new();
+        let check = |puma: &PumaAlloc| {
+            assert_prop!(
+                puma.carved_regions()
+                    == puma.free_regions() + puma.live_regions(),
+                "carved {} != free {} + live {}",
+                puma.carved_regions(),
+                puma.free_regions(),
+                puma.live_regions()
+            );
+        };
+        for _ in 0..g.usize(5..60) {
+            match g.usize(0..10) {
+                0..=4 => {
+                    let rows = g.u64(1..12);
+                    let hint = (!live.is_empty() && g.bool())
+                        .then(|| live[g.usize(0..live.len())]);
+                    let res = match hint {
+                        Some(h) => {
+                            puma.alloc_align(&mut ctx, &mut proc, rows * ROW, h)
+                        }
+                        None => puma.alloc(&mut ctx, &mut proc, rows * ROW),
+                    };
+                    if let Ok(va) = res {
+                        live.push(va);
+                    }
+                }
+                5..=7 => {
+                    if !live.is_empty() {
+                        let va = live.swap_remove(g.usize(0..live.len()));
+                        puma.free(&mut ctx, &mut proc, va).unwrap();
+                    }
+                }
+                8 => {
+                    puma.reclaim(&mut ctx).unwrap();
+                }
+                _ => {
+                    if ctx.pool.available() > 0 && puma.preallocated() < 4 {
+                        puma.pim_preallocate(&mut ctx, 1).unwrap();
+                    }
+                }
+            }
+            check(&puma);
+            // every boot-pool page is either with the pool or with PUMA
+            assert_prop!(
+                ctx.pool.available() + puma.preallocated() == boot_pool,
+                "huge page leaked: pool {} + puma {} != {}",
+                ctx.pool.available(),
+                puma.preallocated(),
+                boot_pool
+            );
+        }
+        // drain: everything freed -> every page reassembles -> the
+        // boot pool is restored to its baseline
+        for va in live {
+            puma.free(&mut ctx, &mut proc, va).unwrap();
+        }
+        puma.reclaim(&mut ctx).unwrap();
+        check(&puma);
+        assert_prop!(puma.carved_regions() == 0, "pages left behind");
+        assert_prop!(
+            ctx.pool.available() == boot_pool,
+            "pool not restored: {} != {}",
+            ctx.pool.available(),
+            boot_pool
+        );
+    });
+}
+
+/// Full free + reclaim returns exactly the preallocated pages, no
+/// matter how the pool was carved up in between.
+#[test]
+fn reassembly_restores_pool_to_baseline() {
+    proptest::check_cases("huge-page reassembly", 10, |g| {
+        let mut ctx = small_ctx(g.u64(0..1 << 32));
+        let boot_pool = ctx.pool.available();
+        let pages = g.usize(1..5);
+        let mut puma = PumaAlloc::new(ROW, FitPolicy::WorstFit);
+        puma.pim_preallocate(&mut ctx, pages).unwrap();
+        let mut proc = Process::new(Pid(7));
+        let mut live = Vec::new();
+        for _ in 0..g.usize(1..25) {
+            let rows = g.u64(1..10);
+            if let Ok(va) = puma.alloc(&mut ctx, &mut proc, rows * ROW) {
+                live.push(va);
+            }
+        }
+        for va in live {
+            puma.free(&mut ctx, &mut proc, va).unwrap();
+        }
+        let reclaimed = puma.reclaim(&mut ctx).unwrap();
+        assert_prop!(reclaimed == pages, "reclaimed {reclaimed} of {pages}");
+        assert_prop!(puma.stats().pages_reclaimed == pages as u64);
+        assert_prop!(ctx.pool.available() == boot_pool);
+        assert_prop!(puma.free_regions() == 0 && puma.carved_regions() == 0);
+    });
+}
+
+/// `compact()` must preserve the bytes of every live allocation —
+/// reachable through the (possibly re-pointed) virtual addresses — and
+/// keep the region/page accounting exact.
+#[test]
+fn compaction_preserves_contents_and_accounting() {
+    proptest::check_cases("compaction content preservation", 6, |g| {
+        let mut sys = System::boot(SystemConfig {
+            scheme: small_scheme(),
+            timing: TimingParams::default(),
+            huge_pages: 8,
+            churn_rounds: 500,
+            seed: g.u64(0..1 << 32),
+            artifacts: None,
+        })
+        .unwrap();
+        let boot_pool = sys.os.pool.available();
+        let pid = sys.spawn();
+        let mut puma = PumaAlloc::new(ROW, FitPolicy::WorstFit);
+        puma.pim_preallocate(&mut sys.os, 2).unwrap();
+
+        // build aligned groups under pressure until the pool runs dry
+        let mut contents: Vec<(u64, Vec<u8>)> = Vec::new();
+        let mut groups: Vec<(u64, u64)> = Vec::new();
+        loop {
+            let rows = g.u64(1..8);
+            if puma.free_regions() < 2 * rows as usize {
+                break;
+            }
+            let len = rows * ROW;
+            let Ok(a) = sys.alloc(&mut puma, pid, len) else { break };
+            let Ok(b) = sys.alloc_align(&mut puma, pid, len, a) else {
+                sys.free(&mut puma, pid, a).unwrap();
+                break;
+            };
+            for va in [a, b] {
+                // one random tag per operand (not per byte) keeps the
+                // shrink log small while the contents stay distinctive
+                let tag = g.u64(0..256) as u8;
+                let data: Vec<u8> = (0..len)
+                    .map(|i| tag ^ (i % 251) as u8)
+                    .collect();
+                sys.write_virt(pid, va, &data).unwrap();
+                contents.push((va, data));
+            }
+            groups.push((a, b));
+        }
+        assert_prop!(!groups.is_empty(), "pool too small for the workload");
+
+        // free a random subset of whole groups
+        let mut i = 0;
+        while i < groups.len() {
+            if g.ratio(1, 2) {
+                let (a, b) = groups.swap_remove(i);
+                sys.free(&mut puma, pid, b).unwrap();
+                sys.free(&mut puma, pid, a).unwrap();
+                contents.retain(|(va, _)| *va != a && *va != b);
+            } else {
+                i += 1;
+            }
+        }
+
+        let live_before = puma.live_regions();
+        sys.compact(&mut puma, pid).unwrap();
+
+        assert_prop!(
+            puma.live_regions() == live_before,
+            "compaction changed the live-region count"
+        );
+        assert_prop!(
+            puma.carved_regions()
+                == puma.free_regions() + puma.live_regions(),
+            "carved {} != free {} + live {}",
+            puma.carved_regions(),
+            puma.free_regions(),
+            puma.live_regions()
+        );
+        assert_prop!(
+            sys.os.pool.available() + puma.preallocated() == boot_pool,
+            "huge page lost across compaction"
+        );
+        for (va, want) in &contents {
+            let got = sys.read_virt(pid, *va, want.len() as u64).unwrap();
+            assert_prop!(
+                got == *want,
+                "contents of {va:#x} changed across compaction"
+            );
+        }
+    });
+}
