@@ -30,6 +30,8 @@ use puma::util::bench::{bench, black_box, BenchOpts};
 use puma::util::csvio::Csv;
 use puma::util::rng::Pcg64;
 use puma::workloads::churn::{self, ChurnConfig, ChurnResult};
+use puma::workloads::filter::{self, FilterConfig, FilterResult};
+use puma::workloads::microbench::AllocatorKind;
 
 fn small_scheme() -> InterleaveScheme {
     InterleaveScheme::row_major(DramGeometry::small()) // 64 MiB
@@ -176,6 +178,25 @@ fn churn_json(r: &ChurnResult) -> String {
     )
 }
 
+fn filter_json(r: &FilterResult) -> String {
+    format!(
+        "{{\"pud_row_fraction\": {:.6}, \"hand_pud_row_fraction\": {:.6}, \
+         \"ops\": {}, \"scratch_slots\": {}, \"cse_hits\": {}, \"waves\": {}, \
+         \"elapsed_sim_ns\": {:.1}, \"hand_sim_ns\": {:.1}, \
+         \"speedup_vs_hand\": {:.3}, \"matches\": {}}}",
+        r.compiled_pud_fraction,
+        r.hand_pud_fraction,
+        r.compile.ops,
+        r.compile.scratch_slots,
+        r.compile.cse_hits,
+        r.waves,
+        r.elapsed_ns,
+        r.hand_ns,
+        r.speedup(),
+        r.matches
+    )
+}
+
 fn json_path(m: &PathMetrics, groups: usize) -> String {
     // "xla_dispatches" is the tracked metric: fallback dispatch units
     // (counted in every mode; == run_op calls once artifacts load).
@@ -260,6 +281,37 @@ fn main() -> anyhow::Result<()> {
         "compaction must return huge pages to the boot pool"
     );
 
+    // ---- filter: compiled expression batches vs hand-issued ops -----
+    println!("\n# filter — compiled predicate batches vs hand-issued ops");
+    let fc = FilterConfig::default();
+    let filter_puma = filter::run(
+        small_scheme(),
+        &fc,
+        AllocatorKind::Puma(FitPolicy::WorstFit),
+    )?;
+    let filter_malloc = filter::run(small_scheme(), &fc, AllocatorKind::Malloc)?;
+    println!(
+        "puma  : compiled pud_frac {:.3} vs hand {:.3}, {} op(s) in {} wave(s), \
+         {:.1}x vs hand",
+        filter_puma.compiled_pud_fraction,
+        filter_puma.hand_pud_fraction,
+        filter_puma.compile.ops,
+        filter_puma.waves,
+        filter_puma.speedup()
+    );
+    println!(
+        "malloc: compiled pud_frac {:.3} vs hand {:.3} (fallback both ways)",
+        filter_malloc.compiled_pud_fraction, filter_malloc.hand_pud_fraction
+    );
+    assert!(
+        filter_puma.compiled_pud_fraction > filter_puma.hand_pud_fraction,
+        "the compiler's co-located scratch must beat ad-hoc temp placement"
+    );
+    assert!(
+        filter_puma.compile.cse_hits >= 1,
+        "the canonical predicate contains a shared NOT for CSE"
+    );
+
     let json = format!(
         "{{\n  \"bench\": \"bench_runtime\",\n  \"workload\": \
          {{\"groups\": {groups}, \"mix\": \"3:1 puma:malloc, \
@@ -268,7 +320,9 @@ fn main() -> anyhow::Result<()> {
          are loaded)\",\n  \"serial\": {},\n  \"batched\": {},\n  \
          \"speedup_sim\": {:.3},\n  \"dispatch_reduction\": {:.3},\n  \
          \"churn\": {{\"epochs\": {}, \"off\": {}, \"on\": {}, \
-         \"steady_pud_gain\": {:.6}}}\n}}\n",
+         \"steady_pud_gain\": {:.6}}},\n  \
+         \"filter\": {{\"clauses\": {}, \"columns\": {}, \"rows\": {}, \
+         \"puma\": {}, \"malloc\": {}, \"pud_gain_vs_hand\": {:.6}}}\n}}\n",
         json_path(&serial, groups),
         json_path(&batched, groups),
         serial.elapsed_sim_ns / batched.elapsed_sim_ns.max(1e-9),
@@ -278,6 +332,12 @@ fn main() -> anyhow::Result<()> {
         churn_json(&churn_off),
         churn_json(&churn_on),
         churn_on.steady_state_pud_fraction - churn_off.steady_state_pud_fraction,
+        filter_puma.clauses,
+        filter_puma.columns,
+        filter_puma.rows,
+        filter_json(&filter_puma),
+        filter_json(&filter_malloc),
+        filter_puma.compiled_pud_fraction - filter_puma.hand_pud_fraction,
     );
     std::fs::write("BENCH_runtime.json", &json)?;
     println!("\nwrote BENCH_runtime.json");

@@ -14,11 +14,15 @@
 //!
 //! All allocators implement [`Allocator`] against the shared
 //! [`OsCtx`], so the benchmarks sweep them interchangeably.
+//! [`scratch`] adds the allocator-agnostic scratch-region lease pool
+//! the expression compiler draws its temporaries from.
 
 pub mod hugealloc;
 pub mod mallocsim;
 pub mod memalign;
 pub mod puma;
+pub mod scratch;
 pub mod traits;
 
+pub use scratch::ScratchPool;
 pub use traits::{AllocStats, Allocator, OsCtx, OsTiming};

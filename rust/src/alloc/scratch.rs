@@ -1,0 +1,206 @@
+//! Scratch-region leases: the reusable temp-buffer pool behind the
+//! expression compiler (and any other subsystem that needs transient
+//! PUD-placed buffers).
+//!
+//! The historical pattern — allocate a fresh temp per operation and
+//! hope someone frees it — both leaks under repeated use and scatters
+//! temporaries across subarrays (a fresh worst-fit draw rarely lands
+//! next to the operands, so every op touching the temp falls back to
+//! the CPU). A [`ScratchPool`] fixes both: buffers are leased once,
+//! co-located with a hint VA via the allocator's `alloc_align` path,
+//! and reused across calls; `release_all` hands everything back when
+//! the owner retires.
+//!
+//! The pool is allocator-agnostic (baselines simply ignore the hint —
+//! exactly their deficiency) and sized on demand: the compiler's
+//! register allocator asks for its `slots_needed`, which exceeds the
+//! preferred bound only when an expression spills.
+
+use anyhow::Result;
+
+use crate::os::process::Process;
+
+use super::traits::{Allocator, OsCtx};
+
+/// A pool of same-length scratch buffers leased from an [`Allocator`].
+#[derive(Debug, Default)]
+pub struct ScratchPool {
+    /// Bytes per leased buffer (0 until the first lease).
+    slot_len: u64,
+    /// VAs of the leased buffers, in slot order.
+    slots: Vec<u64>,
+    /// Buffers leased from the allocator over the pool's lifetime.
+    pub leases: u64,
+    /// Buffers returned via [`ScratchPool::release_all`].
+    pub releases: u64,
+    /// `ensure` calls fully served by already-leased buffers.
+    pub reuses: u64,
+    /// Peak resident buffer count.
+    pub high_water: usize,
+}
+
+impl ScratchPool {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Leased buffer VAs, in slot order.
+    pub fn slots(&self) -> &[u64] {
+        &self.slots
+    }
+
+    pub fn len(&self) -> usize {
+        self.slots.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.slots.is_empty()
+    }
+
+    /// Bytes per buffer.
+    pub fn slot_len(&self) -> u64 {
+        self.slot_len
+    }
+
+    /// Make at least `n` buffers of at least `len` bytes resident,
+    /// leasing from `alloc` as needed. New leases are placed with
+    /// `alloc_align(hint)` when a hint is given (falling back to a
+    /// plain allocation if the hint is not one of `alloc`'s live
+    /// allocations), so compiler temporaries co-locate with the
+    /// expression's operands. Growing `len` releases the old,
+    /// too-short buffers first; shrinking reuses the larger ones.
+    pub fn ensure(
+        &mut self,
+        ctx: &mut OsCtx,
+        proc: &mut Process,
+        alloc: &mut dyn Allocator,
+        n: usize,
+        len: u64,
+        hint: Option<u64>,
+    ) -> Result<()> {
+        if len > self.slot_len {
+            self.release_all(ctx, proc, alloc)?;
+            self.slot_len = len;
+        }
+        if self.slots.len() >= n {
+            self.reuses += 1;
+            return Ok(());
+        }
+        while self.slots.len() < n {
+            let va = match hint {
+                Some(h) => match alloc.alloc_align(ctx, proc, self.slot_len, h) {
+                    Ok(va) => va,
+                    Err(_) => alloc.alloc(ctx, proc, self.slot_len)?,
+                },
+                None => alloc.alloc(ctx, proc, self.slot_len)?,
+            };
+            self.slots.push(va);
+            self.leases += 1;
+        }
+        self.high_water = self.high_water.max(self.slots.len());
+        Ok(())
+    }
+
+    /// Return every leased buffer to `alloc`. The pool stays usable —
+    /// the next `ensure` simply leases afresh. If a `free` fails (e.g.
+    /// the caller passed a different allocator than the one that
+    /// leased), the failing and untraversed buffers stay tracked in
+    /// the pool so nothing leaks from the allocator's accounting.
+    pub fn release_all(
+        &mut self,
+        ctx: &mut OsCtx,
+        proc: &mut Process,
+        alloc: &mut dyn Allocator,
+    ) -> Result<()> {
+        while let Some(va) = self.slots.pop() {
+            if let Err(e) = alloc.free(ctx, proc, va) {
+                self.slots.push(va);
+                return Err(e);
+            }
+            self.releases += 1;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::alloc::mallocsim::MallocSim;
+    use crate::alloc::puma::{FitPolicy, PumaAlloc};
+    use crate::dram::address::InterleaveScheme;
+    use crate::dram::geometry::DramGeometry;
+    use crate::os::process::Pid;
+
+    fn ctx() -> OsCtx {
+        let scheme = InterleaveScheme::row_major(DramGeometry::default());
+        OsCtx::boot(scheme, 16, 500, 5).unwrap()
+    }
+
+    #[test]
+    fn leases_are_reused_not_reallocated() {
+        let mut ctx = ctx();
+        let mut proc = Process::new(Pid(1));
+        let row = ctx.scheme.geometry.row_bytes as u64;
+        let mut puma = PumaAlloc::new(row, FitPolicy::WorstFit);
+        puma.pim_preallocate(&mut ctx, 4).unwrap();
+        let mut pool = ScratchPool::new();
+        pool.ensure(&mut ctx, &mut proc, &mut puma, 2, row, None).unwrap();
+        assert_eq!(pool.len(), 2);
+        assert_eq!(pool.leases, 2);
+        let allocs_after_first = puma.stats().allocs;
+        for _ in 0..100 {
+            pool.ensure(&mut ctx, &mut proc, &mut puma, 2, row, None).unwrap();
+        }
+        assert_eq!(pool.leases, 2, "no re-leasing on stable demand");
+        assert_eq!(pool.reuses, 100);
+        assert_eq!(
+            puma.stats().allocs,
+            allocs_after_first,
+            "no net allocation growth across repeated ensure calls"
+        );
+    }
+
+    #[test]
+    fn hinted_leases_colocate_with_the_hint() {
+        let mut ctx = ctx();
+        let mut proc = Process::new(Pid(1));
+        let row = ctx.scheme.geometry.row_bytes as u64;
+        let mut puma = PumaAlloc::new(row, FitPolicy::WorstFit);
+        puma.pim_preallocate(&mut ctx, 8).unwrap();
+        let a = puma.alloc(&mut ctx, &mut proc, row).unwrap();
+        let hint_sid = puma.lookup(Pid(1), a).unwrap().regions[0].sid;
+        let mut pool = ScratchPool::new();
+        pool.ensure(&mut ctx, &mut proc, &mut puma, 1, row, Some(a)).unwrap();
+        let sid = puma.lookup(Pid(1), pool.slots()[0]).unwrap().regions[0].sid;
+        assert_eq!(sid, hint_sid, "scratch co-locates with the hint");
+        // a bogus hint degrades to a plain allocation, not an error
+        let mut pool2 = ScratchPool::new();
+        pool2
+            .ensure(&mut ctx, &mut proc, &mut puma, 1, row, Some(0xDEAD000))
+            .unwrap();
+        assert_eq!(pool2.len(), 1);
+    }
+
+    #[test]
+    fn growth_releases_short_buffers_and_release_all_balances() {
+        let mut ctx = ctx();
+        let mut proc = Process::new(Pid(2));
+        let mut m = MallocSim::new();
+        let mut pool = ScratchPool::new();
+        pool.ensure(&mut ctx, &mut proc, &mut m, 2, 4096, None).unwrap();
+        assert_eq!(pool.slot_len(), 4096);
+        // longer demand: old buffers go back, new ones come out
+        pool.ensure(&mut ctx, &mut proc, &mut m, 2, 16384, None).unwrap();
+        assert_eq!(pool.slot_len(), 16384);
+        assert_eq!(pool.leases, 4);
+        assert_eq!(pool.releases, 2);
+        // shorter demand reuses the bigger buffers
+        pool.ensure(&mut ctx, &mut proc, &mut m, 2, 1024, None).unwrap();
+        assert_eq!(pool.leases, 4);
+        pool.release_all(&mut ctx, &mut proc, &mut m).unwrap();
+        assert!(pool.is_empty());
+        assert_eq!(pool.releases, 4);
+        assert_eq!(m.stats().allocs, m.stats().frees);
+    }
+}

@@ -65,7 +65,9 @@ pub fn build_config(cli: &Cli) -> Result<Config> {
     let mut overrides = cli.flags.clone();
     overrides.remove("config");
     // command-specific flags are not config keys
-    for k in ["micro", "alloc", "size", "batch", "tenants", "epochs", "mode"] {
+    for k in [
+        "micro", "alloc", "size", "batch", "tenants", "epochs", "mode", "clauses",
+    ] {
         overrides.remove(k);
     }
     cfg.apply(&overrides)?;
@@ -136,6 +138,22 @@ pub fn run(args: &[String]) -> Result<i32> {
                 .unwrap_or("both");
             cmd_churn(&cfg, tenants, epochs, mode)
         }
+        "filter" => {
+            let cfg = build_config(&cli)?;
+            let clauses: usize = cli
+                .flags
+                .get("clauses")
+                .map(String::as_str)
+                .unwrap_or("3")
+                .parse()
+                .context("clauses")?;
+            let alloc = cli
+                .flags
+                .get("alloc")
+                .map(|a| parse_alloc(a))
+                .transpose()?;
+            cmd_filter(&cfg, clauses, alloc)
+        }
         "micro" => {
             let cfg = build_config(&cli)?;
             let micro = parse_micro(
@@ -172,6 +190,8 @@ commands:
                (--batch submits all reps as one pipeline batch)
   churn        multi-tenant aging + reclamation/compaction lifecycle:
                --tenants N --epochs N --mode off|on|both
+  filter       compiled predicate-filter workload, swept over clause
+               counts and allocators: --clauses N [--alloc NAME]
   info         print machine description and artifact inventory
   help         this text
 
@@ -210,6 +230,50 @@ fn cmd_info(cfg: &Config) -> Result<i32> {
         }
         None => println!("artifacts: none (scalar fallback)"),
     }
+    println!(
+        "\nPUD op costs (per row):\n{}",
+        report::op_costs(
+            &crate::dram::timing::TimingParams::default(),
+            &crate::dram::energy::EnergyParams::default(),
+        )
+    );
+    Ok(0)
+}
+
+fn cmd_filter(
+    cfg: &Config,
+    clauses: usize,
+    alloc: Option<AllocatorKind>,
+) -> Result<i32> {
+    let clauses = clauses.max(1);
+    let fcfg = crate::workloads::filter::FilterConfig {
+        clauses,
+        huge_pages: cfg.huge_pages,
+        puma_pages: cfg.puma_pages.max(2),
+        churn_rounds: cfg.churn_rounds,
+        seed: cfg.seed,
+        ..Default::default()
+    };
+    let kinds: Vec<AllocatorKind> = match alloc {
+        Some(k) => vec![k],
+        None => vec![
+            AllocatorKind::Malloc,
+            AllocatorKind::HugePages,
+            AllocatorKind::Puma(FitPolicy::WorstFit),
+        ],
+    };
+    let clause_counts: Vec<usize> = (1..=clauses).collect();
+    eprintln!(
+        "running filter sweep: {} clause count(s) x {} allocator(s) ...",
+        clause_counts.len(),
+        kinds.len()
+    );
+    let results =
+        crate::workloads::filter::sweep(&cfg.scheme, &fcfg, &clause_counts, &kinds)?;
+    println!("{}", report::filter(&results, Some(&cfg.out))?);
+    let (expr, columns) = crate::workloads::filter::predicate(clauses);
+    println!("predicate ({columns} columns): {expr}");
+    println!("(raw series: {}/filter.csv)", cfg.out.display());
     Ok(0)
 }
 
@@ -415,6 +479,18 @@ mod tests {
         assert_eq!(cli.flags["mode"], "off");
         // must not be rejected as unknown config keys
         build_config(&cli).unwrap();
+    }
+
+    #[test]
+    fn filter_flags_are_command_specific_not_config() {
+        let cli = parse_args(&args(&[
+            "filter", "--clauses", "2", "--alloc", "puma", "--puma_pages", "4",
+        ]))
+        .unwrap();
+        assert_eq!(cli.flags["clauses"], "2");
+        // clauses/alloc must not be rejected as unknown config keys
+        let cfg = build_config(&cli).unwrap();
+        assert_eq!(cfg.puma_pages, 4);
     }
 
     #[test]

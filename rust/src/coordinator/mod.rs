@@ -34,4 +34,4 @@ pub mod system;
 pub use dispatch::{BatchReport, Coordinator, FallbackMode};
 pub use plan::OpPlan;
 pub use stats::{CoordStats, PipelineStats};
-pub use system::System;
+pub use system::{ExprReport, System};

@@ -9,11 +9,13 @@ use anyhow::Result;
 use rustc_hash::FxHashMap;
 
 use crate::alloc::puma::{CompactReport, PumaAlloc};
+use crate::alloc::scratch::ScratchPool;
 use crate::alloc::traits::{Allocator, OsCtx};
 use crate::dram::address::InterleaveScheme;
 use crate::dram::device::DramDevice;
 use crate::dram::timing::TimingParams;
 use crate::os::process::{Pid, Process};
+use crate::pud::compiler::{self, Compiled, CompileStats, Expr};
 use crate::pud::exec::PudEngine;
 use crate::pud::isa::BulkRequest;
 use crate::runtime::XlaRuntime;
@@ -43,6 +45,31 @@ impl Default for SystemConfig {
             churn_rounds: 20_000,
             seed: 0xDEC0DE,
             artifacts: None,
+        }
+    }
+}
+
+/// Outcome of one compiled-expression run ([`System::run_expr`]):
+/// the batch report plus the compiler's own statistics and the
+/// execution-side PUD/fallback row split for exactly this expression.
+#[derive(Debug, Clone)]
+pub struct ExprReport {
+    pub batch: BatchReport,
+    pub stats: CompileStats,
+    /// Rows of this expression's batch executed in-DRAM.
+    pub pud_rows: u64,
+    /// Rows that fell back to the CPU path.
+    pub fallback_rows: u64,
+}
+
+impl ExprReport {
+    /// In-DRAM fraction of this expression's rows.
+    pub fn pud_row_fraction(&self) -> f64 {
+        let total = self.pud_rows + self.fallback_rows;
+        if total == 0 {
+            0.0
+        } else {
+            self.pud_rows as f64 / total as f64
         }
     }
 }
@@ -182,6 +209,80 @@ impl System {
                 Err(e)
             }
         }
+    }
+
+    /// Make at least `n` scratch buffers of `len` bytes resident in
+    /// `pool`, leased from `alloc` for `pid` and co-located with
+    /// `hint` when given (see [`ScratchPool::ensure`]).
+    pub fn lease_scratch(
+        &mut self,
+        alloc: &mut dyn Allocator,
+        pid: Pid,
+        pool: &mut ScratchPool,
+        n: usize,
+        len: u64,
+        hint: Option<u64>,
+    ) -> Result<()> {
+        let proc = self.processes.get_mut(&pid).expect("live pid");
+        pool.ensure(&mut self.os, proc, alloc, n, len, hint)
+    }
+
+    /// Return every buffer of `pool` to `alloc` (see
+    /// [`ScratchPool::release_all`]).
+    pub fn release_scratch(
+        &mut self,
+        alloc: &mut dyn Allocator,
+        pid: Pid,
+        pool: &mut ScratchPool,
+    ) -> Result<()> {
+        let proc = self.processes.get_mut(&pid).expect("live pid");
+        pool.release_all(&mut self.os, proc, alloc)
+    }
+
+    /// Compile and execute a Boolean expression over `pid`'s operand
+    /// buffers: `operands[i]` backs `Leaf(i)`, the result lands in
+    /// `dst`, all buffers are `len` bytes. Scratch rows for the
+    /// intermediates are leased from `alloc` into `pool` (co-located
+    /// with the first operand) and reused across calls. The whole
+    /// program runs as ONE [`System::submit_batch`], so independent
+    /// subtrees overlap across banks in the hazard-wave scheduler.
+    pub fn run_expr(
+        &mut self,
+        alloc: &mut dyn Allocator,
+        pid: Pid,
+        expr: &Expr,
+        operands: &[u64],
+        dst: u64,
+        len: u64,
+        pool: &mut ScratchPool,
+    ) -> Result<ExprReport> {
+        let compiled = compiler::compile(expr);
+        self.run_compiled(alloc, pid, &compiled, operands, dst, len, pool)
+    }
+
+    /// As [`System::run_expr`] for an already-compiled program
+    /// (compile once, bind and execute many times).
+    pub fn run_compiled(
+        &mut self,
+        alloc: &mut dyn Allocator,
+        pid: Pid,
+        compiled: &Compiled,
+        operands: &[u64],
+        dst: u64,
+        len: u64,
+        pool: &mut ScratchPool,
+    ) -> Result<ExprReport> {
+        let hint = operands.first().copied();
+        self.lease_scratch(alloc, pid, pool, compiled.scratch_needed(), len, hint)?;
+        let reqs = compiled.emit(operands, dst, len, pool.slots())?;
+        let (pud0, fb0) = (self.coord.stats.pud_rows, self.coord.stats.fallback_rows);
+        let batch = self.submit_batch(pid, &reqs)?;
+        Ok(ExprReport {
+            batch,
+            stats: compiled.stats.clone(),
+            pud_rows: self.coord.stats.pud_rows - pud0,
+            fallback_rows: self.coord.stats.fallback_rows - fb0,
+        })
     }
 
     /// Run one PUMA compaction pass for `pid`: flush its queued
@@ -411,6 +512,101 @@ mod tests {
             "repaired operands run in-DRAM"
         );
         assert!(sys.coord.stats.pud_rows > pud_before);
+    }
+
+    #[test]
+    fn run_expr_matches_reference_and_runs_in_dram() {
+        use crate::alloc::scratch::ScratchPool;
+        use crate::pud::compiler::ExprBuilder;
+        use crate::util::rng::Pcg64;
+
+        let mut sys = small_system();
+        let pid = sys.spawn();
+        let row = sys.os.scheme.geometry.row_bytes as u64;
+        let mut puma = PumaAlloc::new(row, FitPolicy::WorstFit);
+        puma.pim_preallocate(&mut sys.os, 6).unwrap();
+        let len = 2 * row;
+        let first = sys.alloc(&mut puma, pid, len).unwrap();
+        let mut cols = vec![first];
+        for _ in 1..5 {
+            cols.push(sys.alloc_align(&mut puma, pid, len, first).unwrap());
+        }
+        let dst = sys.alloc_align(&mut puma, pid, len, first).unwrap();
+        let mut rng = Pcg64::new(21);
+        let mut data: Vec<Vec<u8>> = Vec::new();
+        for &va in &cols {
+            let mut v = vec![0u8; len as usize];
+            rng.fill_bytes(&mut v);
+            sys.write_virt(pid, va, &v).unwrap();
+            data.push(v);
+        }
+        // (c0 & c1 & !c2) | (c3 ^ c4)
+        let mut b = ExprBuilder::new();
+        let l: Vec<_> = (0..5).map(|i| b.leaf(i)).collect();
+        let n2 = b.not(l[2]);
+        let conj = b.and(l[0], l[1]);
+        let left = b.and(conj, n2);
+        let x = b.xor(l[3], l[4]);
+        let r = b.or(left, x);
+        let expr = b.build(r);
+        let mut pool = ScratchPool::new();
+        let rep = sys
+            .run_expr(&mut puma, pid, &expr, &cols, dst, len, &mut pool)
+            .unwrap();
+        assert_eq!(rep.stats.leaves, 5);
+        assert!(rep.batch.waves >= 1);
+        assert!(
+            rep.pud_row_fraction() > 0.95,
+            "PUMA-placed expression should run in-DRAM, got {}",
+            rep.pud_row_fraction()
+        );
+        let refs: Vec<&[u8]> = data.iter().map(|v| v.as_slice()).collect();
+        let want = expr.eval_bytes(&refs, len as usize).unwrap();
+        assert_eq!(sys.read_virt(pid, dst, len).unwrap(), want);
+        // a second run reuses the leased scratch — no new allocations
+        let leases = pool.leases;
+        let allocs = puma.stats().allocs;
+        sys.run_expr(&mut puma, pid, &expr, &cols, dst, len, &mut pool)
+            .unwrap();
+        assert_eq!(pool.leases, leases);
+        assert_eq!(puma.stats().allocs, allocs);
+        assert_eq!(sys.read_virt(pid, dst, len).unwrap(), want);
+    }
+
+    #[test]
+    fn run_expr_on_malloc_falls_back_but_matches() {
+        use crate::alloc::scratch::ScratchPool;
+        use crate::pud::compiler::ExprBuilder;
+
+        let mut sys = small_system();
+        let pid = sys.spawn();
+        let row = sys.os.scheme.geometry.row_bytes as u64;
+        let mut m = MallocSim::new();
+        // full rows: demand-paged 4 KiB frames never assemble into
+        // row-aligned contiguous 8 KiB chunks, so every row falls back
+        let len = 2 * row;
+        let a = sys.alloc(&mut m, pid, len).unwrap();
+        let b_va = sys.alloc(&mut m, pid, len).unwrap();
+        let dst = sys.alloc(&mut m, pid, len).unwrap();
+        sys.write_virt(pid, a, &vec![0xA5u8; len as usize]).unwrap();
+        sys.write_virt(pid, b_va, &vec![0x0Fu8; len as usize]).unwrap();
+        let mut bld = ExprBuilder::new();
+        let l0 = bld.leaf(0);
+        let l1 = bld.leaf(1);
+        let d = bld.and_not(l0, l1);
+        let expr = bld.build(d);
+        let mut pool = ScratchPool::new();
+        let rep = sys
+            .run_expr(&mut m, pid, &expr, &[a, b_va], dst, len, &mut pool)
+            .unwrap();
+        assert!(
+            rep.pud_row_fraction() < 0.01,
+            "malloc placement stays on the fallback path"
+        );
+        assert_eq!(
+            sys.read_virt(pid, dst, len).unwrap(),
+            vec![0xA5u8 & !0x0F; len as usize]
+        );
     }
 
     #[test]

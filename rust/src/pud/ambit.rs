@@ -65,9 +65,10 @@ pub fn tra_and_or(
     let mut out = vec![0u8; ra.len()];
     maj3_bytes(&ra, &rb, &control, &mut out);
     dev.write_row(dst, &out);
-    // sequence: AAP(a->T0), AAP(b->T1), AAP(ctl->T2), TRA+copy-out
-    dev.counters.aaps += 4;
-    dev.counters.tras += 1;
+    // sequence: AAP(a->T0), AAP(b->T1), AAP(ctl->T2), TRA+copy-out —
+    // counts come from the shared PudOp cost table
+    dev.counters.aaps += op.aaps_per_row();
+    dev.counters.tras += op.tras_per_row();
     Ok(timing.ambit_and_or_ns(1))
 }
 
@@ -82,7 +83,7 @@ pub fn dcc_not(
     let row = dev.read_row(src);
     let inv: Vec<u8> = row.iter().map(|b| !b).collect();
     dev.write_row(dst, &inv);
-    dev.counters.aaps += 2;
+    dev.counters.aaps += PudOp::Not.aaps_per_row();
     Ok(timing.ambit_not_ns(1))
 }
 
@@ -100,9 +101,10 @@ pub fn tra_xor(
     let out: Vec<u8> = ra.iter().zip(&rb).map(|(x, y)| x ^ y).collect();
     dev.write_row(dst, &out);
     // (a AND !b) OR (!a AND b): 2 NOTs + 2 ANDs + 1 OR worth of AAPs,
-    // folded into the 7-AAP sequence the timing model charges.
-    dev.counters.aaps += 7;
-    dev.counters.tras += 3;
+    // folded into the 7-AAP/3-TRA sequence the shared cost table (and
+    // therefore the timing and energy models) charges.
+    dev.counters.aaps += PudOp::Xor.aaps_per_row();
+    dev.counters.tras += PudOp::Xor.tras_per_row();
     Ok(timing.ambit_xor_ns(1))
 }
 

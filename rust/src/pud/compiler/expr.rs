@@ -1,0 +1,401 @@
+//! The Boolean-expression IR: a DAG of bitwise operators over named
+//! N-row operand leaves.
+//!
+//! Expressions are built with [`ExprBuilder`] (an arena: children are
+//! always created before their parents, so node ids double as a
+//! topological order) and frozen into an [`Expr`]. The IR carries a
+//! scalar reference evaluator ([`Expr::eval_bytes`]) — the oracle the
+//! property tests and the workloads verify compiled PUD execution
+//! against, byte for byte.
+//!
+//! Leaves are *indices* into a caller-supplied operand list, not
+//! addresses: the same expression compiles against any operand
+//! placement (PUMA-co-located or scattered), which is what lets the
+//! workloads sweep allocator choices with one program.
+
+use std::fmt;
+
+use anyhow::{ensure, Result};
+
+/// Index of a node in its expression's arena.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct ExprId(pub u32);
+
+impl ExprId {
+    pub fn idx(&self) -> usize {
+        self.0 as usize
+    }
+}
+
+/// One DAG node. Binary operators reference earlier nodes only
+/// (enforced by the builder), so a plain ascending walk of the arena
+/// is a valid evaluation order.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Node {
+    /// The `i`-th caller-supplied operand buffer.
+    Leaf(usize),
+    /// All-zeros (`false`) / all-ones (`true`) — materialized from the
+    /// reserved Zero control row (plus a NOT for all-ones), though the
+    /// optimizer folds almost every constant away before lowering.
+    Const(bool),
+    Not(ExprId),
+    And(ExprId, ExprId),
+    Or(ExprId, ExprId),
+    Xor(ExprId, ExprId),
+    /// `a & !b` — set difference. Canonicalized to `And(a, Not(b))` by
+    /// the optimizer so the inner NOT participates in CSE.
+    AndNot(ExprId, ExprId),
+}
+
+impl Node {
+    /// Child ids, in operand order.
+    pub fn children(&self) -> Vec<ExprId> {
+        match self {
+            Node::Leaf(_) | Node::Const(_) => Vec::new(),
+            Node::Not(a) => vec![*a],
+            Node::And(a, b)
+            | Node::Or(a, b)
+            | Node::Xor(a, b)
+            | Node::AndNot(a, b) => vec![*a, *b],
+        }
+    }
+}
+
+/// A frozen expression DAG with a designated root.
+#[derive(Debug, Clone)]
+pub struct Expr {
+    nodes: Vec<Node>,
+    root: ExprId,
+}
+
+/// Arena builder. Every factory method returns the id of a node whose
+/// children already exist, so ids are a topological order by
+/// construction.
+#[derive(Default)]
+pub struct ExprBuilder {
+    nodes: Vec<Node>,
+}
+
+impl ExprBuilder {
+    pub fn new() -> Self {
+        Self { nodes: Vec::new() }
+    }
+
+    fn push(&mut self, n: Node) -> ExprId {
+        for c in n.children() {
+            assert!(
+                c.idx() < self.nodes.len(),
+                "child {c:?} does not exist in this builder"
+            );
+        }
+        self.nodes.push(n);
+        ExprId(self.nodes.len() as u32 - 1)
+    }
+
+    /// The `i`-th operand buffer.
+    pub fn leaf(&mut self, i: usize) -> ExprId {
+        self.push(Node::Leaf(i))
+    }
+
+    /// All-zeros (`false`) or all-ones (`true`).
+    pub fn constant(&mut self, v: bool) -> ExprId {
+        self.push(Node::Const(v))
+    }
+
+    pub fn not(&mut self, a: ExprId) -> ExprId {
+        self.push(Node::Not(a))
+    }
+
+    pub fn and(&mut self, a: ExprId, b: ExprId) -> ExprId {
+        self.push(Node::And(a, b))
+    }
+
+    pub fn or(&mut self, a: ExprId, b: ExprId) -> ExprId {
+        self.push(Node::Or(a, b))
+    }
+
+    pub fn xor(&mut self, a: ExprId, b: ExprId) -> ExprId {
+        self.push(Node::Xor(a, b))
+    }
+
+    /// `a & !b`.
+    pub fn and_not(&mut self, a: ExprId, b: ExprId) -> ExprId {
+        self.push(Node::AndNot(a, b))
+    }
+
+    /// Left fold of `xs` under AND (`xs` must be non-empty).
+    pub fn all_and(&mut self, xs: &[ExprId]) -> ExprId {
+        assert!(!xs.is_empty(), "all_and of nothing");
+        xs[1..].iter().fold(xs[0], |acc, &x| self.and(acc, x))
+    }
+
+    /// Left fold of `xs` under OR (`xs` must be non-empty).
+    pub fn all_or(&mut self, xs: &[ExprId]) -> ExprId {
+        assert!(!xs.is_empty(), "all_or of nothing");
+        xs[1..].iter().fold(xs[0], |acc, &x| self.or(acc, x))
+    }
+
+    /// Freeze the arena with `root` as the expression's output.
+    pub fn build(self, root: ExprId) -> Expr {
+        assert!(root.idx() < self.nodes.len(), "root {root:?} out of range");
+        Expr {
+            nodes: self.nodes,
+            root,
+        }
+    }
+}
+
+impl Expr {
+    /// Rebuild an expression from raw parts (used by the optimizer).
+    pub(crate) fn from_parts(nodes: Vec<Node>, root: ExprId) -> Self {
+        debug_assert!(root.idx() < nodes.len());
+        Self { nodes, root }
+    }
+
+    pub fn nodes(&self) -> &[Node] {
+        &self.nodes
+    }
+
+    pub fn node(&self, id: ExprId) -> Node {
+        self.nodes[id.idx()]
+    }
+
+    pub fn root(&self) -> ExprId {
+        self.root
+    }
+
+    /// Reachability mask from the root (dead arena nodes are skipped
+    /// by every consumer).
+    pub fn reachable(&self) -> Vec<bool> {
+        let mut mark = vec![false; self.nodes.len()];
+        let mut stack = vec![self.root];
+        while let Some(id) = stack.pop() {
+            if std::mem::replace(&mut mark[id.idx()], true) {
+                continue;
+            }
+            stack.extend(self.nodes[id.idx()].children());
+        }
+        mark
+    }
+
+    /// Number of distinct operand buffers the expression needs: one
+    /// past the highest reachable leaf index (0 for constant-only
+    /// expressions).
+    pub fn n_leaves(&self) -> usize {
+        let mark = self.reachable();
+        self.nodes
+            .iter()
+            .zip(&mark)
+            .filter_map(|(n, m)| match (n, m) {
+                (Node::Leaf(i), true) => Some(i + 1),
+                _ => None,
+            })
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Reachable node count (the DAG's size; dead arena entries are
+    /// not counted).
+    pub fn live_nodes(&self) -> usize {
+        self.reachable().iter().filter(|m| **m).count()
+    }
+
+    /// Reachable NOT count — the metric the De Morgan rewrites shrink,
+    /// since every NOT burns a dual-contact-row sequence.
+    pub fn live_nots(&self) -> usize {
+        let mark = self.reachable();
+        self.nodes
+            .iter()
+            .zip(&mark)
+            .filter(|(n, m)| **m && matches!(n, Node::Not(_)))
+            .count()
+    }
+
+    /// Scalar reference evaluation over byte buffers: the oracle for
+    /// compiled PUD execution. `leaves[i]` backs `Leaf(i)`; all
+    /// buffers (and the result) are `len` bytes.
+    pub fn eval_bytes(&self, leaves: &[&[u8]], len: usize) -> Result<Vec<u8>> {
+        ensure!(
+            self.n_leaves() <= leaves.len(),
+            "expression reads {} operand(s), {} supplied",
+            self.n_leaves(),
+            leaves.len()
+        );
+        for (i, l) in leaves.iter().enumerate() {
+            ensure!(l.len() == len, "operand {i} is {} bytes, want {len}", l.len());
+        }
+        let mark = self.reachable();
+        let mut vals: Vec<Option<Vec<u8>>> = vec![None; self.nodes.len()];
+        for (idx, node) in self.nodes.iter().enumerate() {
+            if !mark[idx] {
+                continue;
+            }
+            let get = |id: &ExprId, vals: &[Option<Vec<u8>>]| -> Vec<u8> {
+                vals[id.idx()].clone().expect("children precede parents")
+            };
+            let v = match node {
+                Node::Leaf(i) => leaves[*i].to_vec(),
+                Node::Const(false) => vec![0u8; len],
+                Node::Const(true) => vec![0xFFu8; len],
+                Node::Not(a) => get(a, &vals).iter().map(|x| !x).collect(),
+                Node::And(a, b) => zip_bytes(&get(a, &vals), &get(b, &vals), |x, y| x & y),
+                Node::Or(a, b) => zip_bytes(&get(a, &vals), &get(b, &vals), |x, y| x | y),
+                Node::Xor(a, b) => zip_bytes(&get(a, &vals), &get(b, &vals), |x, y| x ^ y),
+                Node::AndNot(a, b) => {
+                    zip_bytes(&get(a, &vals), &get(b, &vals), |x, y| x & !y)
+                }
+            };
+            vals[idx] = Some(v);
+        }
+        Ok(vals[self.root.idx()].take().expect("root is reachable"))
+    }
+
+    fn render(&self, id: ExprId, out: &mut String) {
+        match self.node(id) {
+            Node::Leaf(i) => out.push_str(&format!("c{i}")),
+            Node::Const(v) => out.push_str(if v { "1" } else { "0" }),
+            Node::Not(a) => {
+                out.push('!');
+                self.render_atom(a, out);
+            }
+            Node::And(a, b) => self.render_bin(a, " & ", b, out),
+            Node::Or(a, b) => self.render_bin(a, " | ", b, out),
+            Node::Xor(a, b) => self.render_bin(a, " ^ ", b, out),
+            Node::AndNot(a, b) => {
+                self.render_atom(a, out);
+                out.push_str(" & !");
+                self.render_atom(b, out);
+            }
+        }
+    }
+
+    fn render_bin(&self, a: ExprId, op: &str, b: ExprId, out: &mut String) {
+        self.render_atom(a, out);
+        out.push_str(op);
+        self.render_atom(b, out);
+    }
+
+    fn render_atom(&self, id: ExprId, out: &mut String) {
+        let atomic = matches!(
+            self.node(id),
+            Node::Leaf(_) | Node::Const(_) | Node::Not(_)
+        );
+        if atomic {
+            self.render(id, out);
+        } else {
+            out.push('(');
+            self.render(id, out);
+            out.push(')');
+        }
+    }
+}
+
+impl fmt::Display for Expr {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let mut s = String::new();
+        self.render(self.root, &mut s);
+        f.write_str(&s)
+    }
+}
+
+fn zip_bytes(a: &[u8], b: &[u8], f: impl Fn(u8, u8) -> u8) -> Vec<u8> {
+    a.iter().zip(b).map(|(x, y)| f(*x, *y)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builder_ids_are_topological() {
+        let mut b = ExprBuilder::new();
+        let a = b.leaf(0);
+        let c = b.leaf(1);
+        let n = b.not(c);
+        let r = b.and(a, n);
+        assert!(a < n && n < r);
+        let e = b.build(r);
+        assert_eq!(e.n_leaves(), 2);
+        assert_eq!(e.live_nodes(), 4);
+        assert_eq!(e.live_nots(), 1);
+    }
+
+    #[test]
+    fn eval_matches_hand_computation() {
+        let mut b = ExprBuilder::new();
+        let l0 = b.leaf(0);
+        let l1 = b.leaf(1);
+        let l2 = b.leaf(2);
+        let n2 = b.not(l2);
+        let conj = b.and(l0, l1);
+        let left = b.and(conj, n2);
+        let x = b.xor(l0, l2);
+        let r = b.or(left, x);
+        let e = b.build(r);
+        let va = [0b1100u8, 0xFF];
+        let vb = [0b1010u8, 0x0F];
+        let vc = [0b0110u8, 0x33];
+        let got = e.eval_bytes(&[&va, &vb, &vc], 2).unwrap();
+        let want: Vec<u8> = (0..2)
+            .map(|i| (va[i] & vb[i] & !vc[i]) | (va[i] ^ vc[i]))
+            .collect();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn and_not_and_consts_evaluate() {
+        let mut b = ExprBuilder::new();
+        let l0 = b.leaf(0);
+        let l1 = b.leaf(1);
+        let d = b.and_not(l0, l1);
+        let one = b.constant(true);
+        let r = b.xor(d, one);
+        let e = b.build(r);
+        let got = e.eval_bytes(&[&[0xF0u8], &[0x30u8]], 1).unwrap();
+        assert_eq!(got, vec![!(0xF0u8 & !0x30u8)]);
+    }
+
+    #[test]
+    fn dead_nodes_are_ignored() {
+        let mut b = ExprBuilder::new();
+        let l0 = b.leaf(0);
+        let _dead = b.leaf(7); // unreachable: must not inflate n_leaves
+        let r = b.not(l0);
+        let e = b.build(r);
+        assert_eq!(e.n_leaves(), 1);
+        assert_eq!(e.live_nodes(), 2);
+        assert!(e.eval_bytes(&[&[0x0Fu8]], 1).unwrap() == vec![0xF0]);
+    }
+
+    #[test]
+    fn eval_rejects_bad_operands() {
+        let mut b = ExprBuilder::new();
+        let l0 = b.leaf(0);
+        let l1 = b.leaf(1);
+        let r = b.and(l0, l1);
+        let e = b.build(r);
+        assert!(e.eval_bytes(&[&[0u8]], 1).is_err(), "missing operand");
+        assert!(
+            e.eval_bytes(&[&[0u8], &[0u8, 0u8]], 1).is_err(),
+            "length mismatch"
+        );
+    }
+
+    #[test]
+    fn display_renders_infix() {
+        let mut b = ExprBuilder::new();
+        let l0 = b.leaf(0);
+        let l1 = b.leaf(1);
+        let l2 = b.leaf(2);
+        let n = b.not(l2);
+        let conj = b.and(l0, l1);
+        let left = b.and(conj, n);
+        let x = b.xor(l0, l1);
+        let r = b.or(left, x);
+        let e = b.build(r);
+        let s = e.to_string();
+        assert!(s.contains("c0"), "{s}");
+        assert!(s.contains("!c2"), "{s}");
+        assert!(s.contains('^'), "{s}");
+    }
+}

@@ -1,0 +1,401 @@
+//! Lowering: turn an optimized expression into the topologically
+//! ordered [`BulkRequest`] batch the coordinator executes as ONE
+//! `submit_batch`.
+//!
+//! [`compile`] runs the whole pipeline — optimize → emission order →
+//! scratch register allocation — and freezes the result as a
+//! [`Compiled`] program plus its [`CompileStats`]. [`Compiled::emit`]
+//! then binds the program to concrete addresses: operand VAs for the
+//! leaves, the destination VA for the root, and leased scratch VAs for
+//! the intermediates. Because requests are emitted in topological
+//! order, the PR-1 hazard-wave scheduler recovers exactly the DAG's
+//! dependence structure: independent subtrees land in one wave and
+//! overlap across banks, dependent chains serialize.
+
+use anyhow::{ensure, Result};
+
+use crate::pud::isa::{BulkRequest, PudOp};
+
+use super::expr::{Expr, ExprId, Node};
+use super::opt::optimize;
+use super::regalloc::{allocate, emission_order, Assignment};
+
+/// Preferred resident size of the compiler's scratch pool; expressions
+/// needing more lease extra rows (counted as spills).
+pub const DEFAULT_SCRATCH_POOL: usize = 4;
+
+/// Per-expression compilation report (the execution-side PUD/fallback
+/// row split is reported by
+/// [`ExprReport`](crate::coordinator::system::ExprReport), which
+/// carries these stats alongside it).
+#[derive(Debug, Clone, Default)]
+pub struct CompileStats {
+    /// Distinct operand buffers the expression reads.
+    pub leaves: usize,
+    /// Reachable DAG nodes before / after optimization.
+    pub nodes_in: usize,
+    pub nodes_opt: usize,
+    /// Bulk requests the program emits.
+    pub ops: usize,
+    /// NOT requests among them (each burns a dual-contact-row pass).
+    pub not_ops: usize,
+    /// Scratch slots the program needs simultaneously.
+    pub scratch_slots: usize,
+    /// Slots past the preferred pool bound.
+    pub spills: usize,
+    /// Optimizer counters.
+    pub cse_hits: usize,
+    pub folds: usize,
+    pub demorgans: usize,
+}
+
+/// A compiled expression: optimized DAG + emission order + slot
+/// assignment, ready to bind to addresses any number of times.
+pub struct Compiled {
+    expr: Expr,
+    order: Vec<ExprId>,
+    assignment: Assignment,
+    pub stats: CompileStats,
+}
+
+/// Compile with the default scratch-pool bound.
+pub fn compile(expr: &Expr) -> Compiled {
+    compile_with_pool(expr, DEFAULT_SCRATCH_POOL)
+}
+
+/// Compile with an explicit preferred scratch-pool bound.
+pub fn compile_with_pool(expr: &Expr, pool_limit: usize) -> Compiled {
+    let (opt, rep) = optimize(expr);
+    let order = emission_order(&opt);
+    let assignment = allocate(&opt, &order, pool_limit.max(1));
+    let (mut ops, mut not_ops) = (0usize, 0usize);
+    for &id in &order {
+        match opt.node(id) {
+            Node::Leaf(_) => unreachable!("leaves are not emitted"),
+            Node::Const(true) => {
+                ops += 2; // Zero + in-place NOT
+                not_ops += 1;
+            }
+            Node::Const(false) => ops += 1,
+            Node::Not(_) => {
+                ops += 1;
+                not_ops += 1;
+            }
+            Node::AndNot(..) => {
+                ops += 2;
+                not_ops += 1;
+            }
+            Node::And(..) | Node::Or(..) | Node::Xor(..) => ops += 1,
+        }
+    }
+    if order.is_empty() {
+        ops = 1; // leaf root: one RowClone copy
+    }
+    let stats = CompileStats {
+        leaves: opt.n_leaves(),
+        nodes_in: rep.nodes_before,
+        nodes_opt: rep.nodes_after,
+        ops,
+        not_ops,
+        scratch_slots: assignment.slots_needed,
+        spills: assignment.spills,
+        cse_hits: rep.cse_hits,
+        folds: rep.folds,
+        demorgans: rep.demorgans,
+    };
+    Compiled {
+        expr: opt,
+        order,
+        assignment,
+        stats,
+    }
+}
+
+impl Compiled {
+    /// The optimized expression this program computes.
+    pub fn expr(&self) -> &Expr {
+        &self.expr
+    }
+
+    /// Scratch buffers `emit` needs (lease this many before binding).
+    pub fn scratch_needed(&self) -> usize {
+        self.assignment.slots_needed
+    }
+
+    /// Operand buffers the program reads.
+    pub fn n_leaves(&self) -> usize {
+        self.stats.leaves
+    }
+
+    /// Bind the program to addresses: `operands[i]` backs `Leaf(i)`,
+    /// the root writes `dst`, intermediates use `scratch` slots. All
+    /// buffers are `len` bytes. The returned batch is in topological
+    /// order and is meant to be submitted as one
+    /// `Coordinator::submit_batch`.
+    pub fn emit(
+        &self,
+        operands: &[u64],
+        dst: u64,
+        len: u64,
+        scratch: &[u64],
+    ) -> Result<Vec<BulkRequest>> {
+        ensure!(len > 0, "zero-length expression operands");
+        ensure!(
+            self.n_leaves() <= operands.len(),
+            "expression reads {} operand(s), {} supplied",
+            self.n_leaves(),
+            operands.len()
+        );
+        ensure!(
+            scratch.len() >= self.assignment.slots_needed,
+            "need {} scratch buffer(s), {} leased",
+            self.assignment.slots_needed,
+            scratch.len()
+        );
+        let root = self.expr.root();
+        let place = |id: ExprId| -> u64 {
+            if id == root {
+                dst
+            } else {
+                match self.expr.node(id) {
+                    Node::Leaf(i) => operands[i],
+                    _ => scratch[self.assignment.slot[&id]],
+                }
+            }
+        };
+        let mut reqs = Vec::with_capacity(self.stats.ops);
+        if self.order.is_empty() {
+            // root is a leaf: dst = copy(operand)
+            let Node::Leaf(i) = self.expr.node(root) else {
+                unreachable!("empty order implies a leaf root");
+            };
+            reqs.push(BulkRequest::new(PudOp::Copy, dst, vec![operands[i]], len));
+            return Ok(reqs);
+        }
+        for &id in &self.order {
+            let p = place(id);
+            match self.expr.node(id) {
+                Node::Leaf(_) => unreachable!("leaves are not emitted"),
+                Node::Const(v) => {
+                    reqs.push(BulkRequest::new(PudOp::Zero, p, vec![], len));
+                    if v {
+                        reqs.push(BulkRequest::new(PudOp::Not, p, vec![p], len));
+                    }
+                }
+                Node::Not(a) => {
+                    reqs.push(BulkRequest::new(PudOp::Not, p, vec![place(a)], len));
+                }
+                Node::And(a, b) => {
+                    reqs.push(BulkRequest::new(
+                        PudOp::And,
+                        p,
+                        vec![place(a), place(b)],
+                        len,
+                    ));
+                }
+                Node::Or(a, b) => {
+                    reqs.push(BulkRequest::new(
+                        PudOp::Or,
+                        p,
+                        vec![place(a), place(b)],
+                        len,
+                    ));
+                }
+                Node::Xor(a, b) => {
+                    reqs.push(BulkRequest::new(
+                        PudOp::Xor,
+                        p,
+                        vec![place(a), place(b)],
+                        len,
+                    ));
+                }
+                Node::AndNot(a, b) => {
+                    // p = !b; p = a & p. Defensive: `compile()` always
+                    // optimizes, and the optimizer canonicalizes
+                    // AndNot to And(a, Not(b)), so this arm only runs
+                    // if compilation ever grows a no-opt path. The
+                    // register allocator's matching carve-out
+                    // guarantees p aliases neither live operand.
+                    reqs.push(BulkRequest::new(PudOp::Not, p, vec![place(b)], len));
+                    reqs.push(BulkRequest::new(
+                        PudOp::And,
+                        p,
+                        vec![place(a), p],
+                        len,
+                    ));
+                }
+            }
+        }
+        debug_assert_eq!(reqs.len(), self.stats.ops);
+        Ok(reqs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pud::compiler::expr::ExprBuilder;
+    use rustc_hash::FxHashMap;
+
+    /// Interpret an emitted batch over plain byte buffers — a
+    /// System-free check that lowering matches the IR's reference
+    /// evaluator.
+    fn interpret(
+        reqs: &[BulkRequest],
+        bufs: &mut FxHashMap<u64, Vec<u8>>,
+        len: usize,
+    ) {
+        for r in reqs {
+            let srcs: Vec<Vec<u8>> = r
+                .srcs
+                .iter()
+                .map(|va| bufs.get(va).cloned().unwrap_or_else(|| vec![0u8; len]))
+                .collect();
+            let refs: Vec<&[u8]> = srcs.iter().map(|v| v.as_slice()).collect();
+            let mut out = vec![0u8; len];
+            r.op.apply_bytes(&refs, &mut out);
+            bufs.insert(r.dst, out);
+        }
+    }
+
+    fn check_against_reference(e: &crate::pud::compiler::Expr, seed: u64) {
+        let len = 8usize;
+        let n = e.n_leaves();
+        let mut rng = crate::util::rng::Pcg64::new(seed);
+        let mut bufs: FxHashMap<u64, Vec<u8>> = FxHashMap::default();
+        let mut operands = Vec::new();
+        for i in 0..n {
+            let mut v = vec![0u8; len];
+            rng.fill_bytes(&mut v);
+            let va = 0x1000 + i as u64 * 0x100;
+            bufs.insert(va, v);
+            operands.push(va);
+        }
+        let c = compile(e);
+        let scratch: Vec<u64> =
+            (0..c.scratch_needed()).map(|i| 0x9000 + i as u64 * 0x100).collect();
+        let dst = 0x8000u64;
+        let reqs = c.emit(&operands, dst, len as u64, &scratch).unwrap();
+        assert_eq!(reqs.len(), c.stats.ops);
+        let leaves: Vec<Vec<u8>> =
+            operands.iter().map(|va| bufs[va].clone()).collect();
+        interpret(&reqs, &mut bufs, len);
+        let refs: Vec<&[u8]> = leaves.iter().map(|v| v.as_slice()).collect();
+        let want = e.eval_bytes(&refs, len).unwrap();
+        assert_eq!(bufs[&dst], want, "lowering diverged for {e}");
+        // sources must survive (the substrate stages operands)
+        for (va, orig) in operands.iter().zip(&leaves) {
+            assert_eq!(&bufs[va], orig, "operand clobbered");
+        }
+    }
+
+    #[test]
+    fn three_clause_predicate_lowers_and_matches() {
+        let mut b = ExprBuilder::new();
+        let c: Vec<_> = (0..5).map(|i| b.leaf(i)).collect();
+        let n2 = b.not(c[2]);
+        let conj = b.and(c[0], c[1]);
+        let left = b.and(conj, n2);
+        let x = b.xor(c[3], c[4]);
+        let r = b.or(left, x);
+        let e = b.build(r);
+        check_against_reference(&e, 11);
+        let comp = compile(&e);
+        assert_eq!(comp.n_leaves(), 5);
+        assert!(comp.scratch_needed() >= 1);
+        assert!(comp.stats.not_ops >= 1);
+    }
+
+    #[test]
+    fn leaf_root_lowers_to_copy() {
+        let mut b = ExprBuilder::new();
+        let l = b.leaf(0);
+        let e = b.build(l);
+        let c = compile(&e);
+        assert_eq!(c.scratch_needed(), 0);
+        let reqs = c.emit(&[0x4000], 0x5000, 64, &[]).unwrap();
+        assert_eq!(reqs.len(), 1);
+        assert_eq!(reqs[0].op, PudOp::Copy);
+        assert_eq!(reqs[0].dst, 0x5000);
+        assert_eq!(reqs[0].srcs, vec![0x4000]);
+        check_against_reference(&e, 12);
+    }
+
+    #[test]
+    fn const_roots_lower_via_control_rows() {
+        for v in [false, true] {
+            let mut b = ExprBuilder::new();
+            let k = b.constant(v);
+            let e = b.build(k);
+            let c = compile(&e);
+            let reqs = c.emit(&[], 0x5000, 64, &[]).unwrap();
+            assert_eq!(reqs[0].op, PudOp::Zero);
+            assert_eq!(reqs.len(), if v { 2 } else { 1 });
+            check_against_reference(&e, 13);
+        }
+    }
+
+    #[test]
+    fn andnot_and_dedup_lower_correctly() {
+        let mut b = ExprBuilder::new();
+        let l0 = b.leaf(0);
+        let l1 = b.leaf(1);
+        let d = b.and_not(l0, l1);
+        let n1 = b.not(l1); // shared with the canonicalized AndNot
+        let r = b.xor(d, n1);
+        let e = b.build(r);
+        check_against_reference(&e, 14);
+        let c = compile(&e);
+        assert!(c.stats.cse_hits >= 1);
+    }
+
+    #[test]
+    fn emit_validates_bindings() {
+        let mut b = ExprBuilder::new();
+        let l0 = b.leaf(0);
+        let l1 = b.leaf(1);
+        let a = b.and(l0, l1);
+        let r = b.not(a);
+        let e = b.build(r);
+        let c = compile(&e);
+        assert!(c.emit(&[0x1000], 0x5000, 64, &[0x9000]).is_err(), "missing operand");
+        assert!(
+            c.emit(&[0x1000, 0x2000], 0x5000, 64, &[]).is_err(),
+            "missing scratch"
+        );
+        assert!(
+            c.emit(&[0x1000, 0x2000], 0x5000, 0, &[0x9000]).is_err(),
+            "zero length"
+        );
+        assert!(c.emit(&[0x1000, 0x2000], 0x5000, 64, &[0x9000]).is_ok());
+    }
+
+    #[test]
+    fn requests_are_topologically_ordered() {
+        // every request's scratch sources were written earlier
+        let mut b = ExprBuilder::new();
+        let c: Vec<_> = (0..4).map(|i| b.leaf(i)).collect();
+        let a1 = b.and(c[0], c[1]);
+        let a2 = b.or(c[2], c[3]);
+        let m = b.xor(a1, a2);
+        let n = b.not(m);
+        let e = b.build(n);
+        let comp = compile(&e);
+        let scratch: Vec<u64> =
+            (0..comp.scratch_needed()).map(|i| 0x9000 + i as u64).collect();
+        let reqs = comp
+            .emit(&[0x1, 0x2, 0x3, 0x4], 0x8000, 64, &scratch)
+            .unwrap();
+        let mut written: Vec<u64> = vec![0x1, 0x2, 0x3, 0x4];
+        for r in &reqs {
+            for s in &r.srcs {
+                assert!(
+                    written.contains(s) || *s == r.dst,
+                    "source {s:#x} read before any write"
+                );
+            }
+            written.push(r.dst);
+        }
+        assert_eq!(reqs.last().unwrap().dst, 0x8000, "root writes dst last");
+    }
+}

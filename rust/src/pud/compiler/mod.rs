@@ -1,0 +1,39 @@
+//! `pud::compiler` — a Boolean-expression compiler for the Ambit
+//! substrate.
+//!
+//! The substrate executes one bulk op at a time (RowClone copy/zero,
+//! Ambit AND/OR/NOT and composite XOR), but real PUD workloads —
+//! predicate filters, bitmap joins, set algebra — are multi-operand
+//! Boolean *expressions*. This subsystem is the layer between the
+//! allocator and those applications (the role MIMDRAM's and Proteus's
+//! compiler support plays):
+//!
+//! * [`expr`] — the expression IR: a DAG of `And/Or/Not/Xor/AndNot`
+//!   over indexed operand leaves, with a builder API and the scalar
+//!   reference evaluator every test verifies against.
+//! * [`opt`] — CSE via hash-consing, constant folding onto the
+//!   reserved Zero/One control rows, double-negation elimination, and
+//!   NOT-reducing De Morgan rewrites (NOT burns a dual-contact row).
+//! * [`regalloc`] — linear-scan mapping of intermediates onto a
+//!   bounded pool of scratch rows leased from the allocator
+//!   ([`crate::alloc::scratch::ScratchPool`]), spilling to extra rows
+//!   under pressure.
+//! * [`lower`] — emission of the topologically ordered
+//!   [`crate::pud::isa::BulkRequest`] batch, submitted as ONE
+//!   `Coordinator::submit_batch` so the hazard-wave scheduler overlaps
+//!   independent subtrees across banks.
+//!
+//! The user-facing entry point is
+//! [`System::run_expr`](crate::coordinator::system::System::run_expr);
+//! `workloads::{setops, filter}` sit on top of it.
+
+pub mod expr;
+pub mod lower;
+pub mod opt;
+pub mod regalloc;
+
+pub use expr::{Expr, ExprBuilder, ExprId, Node};
+pub use lower::{
+    compile, compile_with_pool, Compiled, CompileStats, DEFAULT_SCRATCH_POOL,
+};
+pub use opt::{optimize, OptReport};

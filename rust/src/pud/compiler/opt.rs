@@ -1,0 +1,445 @@
+//! Expression optimizer: CSE, constant folding, double-negation
+//! elimination, and De Morgan rewrites.
+//!
+//! Every pass rebuilds the reachable DAG bottom-up through a
+//! hash-consing arena (structural sharing *is* common-subexpression
+//! elimination) while smart constructors apply local rewrites:
+//!
+//! * constants fold through every operator (`x & 0 → 0`, `x | 1 → 1`,
+//!   `x ^ 1 → !x`, …) — the residue lowers onto the reserved Zero/One
+//!   control rows, but almost nothing survives to that point;
+//! * `!!x → x`, `x & x → x`, `x ^ x → 0`, `x & !x → 0`, `x | !x → 1`;
+//! * De Morgan in the NOT-reducing direction only: `!a & !b → !(a|b)`
+//!   and `!a | !b → !(a&b)` turn two dual-contact-row sequences into
+//!   one (NOT is the op the substrate pays a DCC row for). The rewrite
+//!   fires only when neither NOT has another use — a shared NOT stays
+//!   live through its other parent, and rewriting would *add* nodes.
+//!   Use counts are exact only on a deduplicated DAG, so the first
+//!   pass runs CSE/folding alone and De Morgan joins from the second
+//!   pass on;
+//! * `AndNot(a, b)` canonicalizes to `And(a, Not(b))` so the inner
+//!   NOT participates in CSE with any other use of `!b`.
+//!
+//! Passes repeat until a fixpoint (bounded); rewrites only ever
+//! *shrink* the op count or leave it unchanged, and the property tests
+//! assert optimized and unoptimized expressions evaluate identically.
+
+use rustc_hash::FxHashMap;
+
+use super::expr::{Expr, ExprId, Node};
+
+/// What the optimizer did (absorbed into
+/// [`CompileStats`](super::lower::CompileStats)).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct OptReport {
+    pub nodes_before: usize,
+    pub nodes_after: usize,
+    pub nots_before: usize,
+    pub nots_after: usize,
+    /// Structurally duplicate nodes merged by hash-consing.
+    pub cse_hits: usize,
+    /// Constant folds + identity/annihilator/double-negation rewrites.
+    pub folds: usize,
+    /// NOT-reducing De Morgan rewrites applied.
+    pub demorgans: usize,
+}
+
+const MAX_PASSES: usize = 8;
+
+/// Optimize `expr`. The result evaluates identically on every input.
+pub fn optimize(expr: &Expr) -> (Expr, OptReport) {
+    let mut report = OptReport {
+        nodes_before: expr.live_nodes(),
+        nots_before: expr.live_nots(),
+        ..Default::default()
+    };
+    let mut cur = expr.clone();
+    for i in 0..MAX_PASSES {
+        // pass 0: CSE + folds only (duplicates not yet merged would
+        // make NOT use counts lie); De Morgan needs one clean pass
+        let (next, changed) = pass(&cur, &mut report, i > 0);
+        cur = next;
+        if !changed && i > 0 {
+            break;
+        }
+    }
+    report.nodes_after = cur.live_nodes();
+    report.nots_after = cur.live_nots();
+    (cur, report)
+}
+
+/// One bottom-up rebuild of the reachable DAG. `demorgan` enables the
+/// NOT-reducing De Morgan rewrites (legal to decide here: use counts
+/// over `expr` are exact once the DAG has been through one CSE pass).
+fn pass(expr: &Expr, rep: &mut OptReport, demorgan: bool) -> (Expr, bool) {
+    let mark = expr.reachable();
+    // reachable-parent count per node, for the De Morgan sharing gate
+    let mut uses = vec![0usize; expr.nodes().len()];
+    for (idx, node) in expr.nodes().iter().enumerate() {
+        if mark[idx] {
+            for c in node.children() {
+                uses[c.idx()] += 1;
+            }
+        }
+    }
+    let unshared_not = |id: ExprId| {
+        matches!(expr.node(id), Node::Not(_)) && uses[id.idx()] == 1
+    };
+    let mut rb = Rebuild::default();
+    let mut memo: Vec<Option<ExprId>> = vec![None; expr.nodes().len()];
+    for (idx, node) in expr.nodes().iter().enumerate() {
+        if !mark[idx] {
+            continue;
+        }
+        let remap = |id: ExprId| memo[id.idx()].expect("children precede parents");
+        // this node may De Morgan only if both its NOT operands die
+        // with it (for AndNot, the synthesized !b is single-use by
+        // construction, so only the first operand gates)
+        let dm_ok = demorgan
+            && match *node {
+                Node::And(a, b) | Node::Or(a, b) => {
+                    unshared_not(a) && unshared_not(b)
+                }
+                Node::AndNot(a, _) => unshared_not(a),
+                _ => false,
+            };
+        let n = match *node {
+            Node::Leaf(i) => Node::Leaf(i),
+            Node::Const(v) => Node::Const(v),
+            Node::Not(a) => Node::Not(remap(a)),
+            Node::And(a, b) => Node::And(remap(a), remap(b)),
+            Node::Or(a, b) => Node::Or(remap(a), remap(b)),
+            Node::Xor(a, b) => Node::Xor(remap(a), remap(b)),
+            Node::AndNot(a, b) => Node::AndNot(remap(a), remap(b)),
+        };
+        memo[idx] = Some(rb.mk(n, dm_ok, rep));
+    }
+    let root = memo[expr.root().idx()].expect("root is reachable");
+    let changed = rb.nodes.as_slice() != expr.nodes() || root != expr.root();
+    (Expr::from_parts(rb.nodes, root), changed)
+}
+
+/// Hash-consing arena with rewriting smart constructors.
+#[derive(Default)]
+struct Rebuild {
+    nodes: Vec<Node>,
+    cons: FxHashMap<Node, ExprId>,
+}
+
+impl Rebuild {
+    fn node(&self, id: ExprId) -> Node {
+        self.nodes[id.idx()]
+    }
+
+    /// Insert after canonicalizing commutative operand order; a hit is
+    /// a CSE merge.
+    fn intern(&mut self, n: Node, rep: &mut OptReport) -> ExprId {
+        let n = match n {
+            Node::And(a, b) if b < a => Node::And(b, a),
+            Node::Or(a, b) if b < a => Node::Or(b, a),
+            Node::Xor(a, b) if b < a => Node::Xor(b, a),
+            other => other,
+        };
+        if let Some(&id) = self.cons.get(&n) {
+            rep.cse_hits += 1;
+            return id;
+        }
+        self.nodes.push(n);
+        let id = ExprId(self.nodes.len() as u32 - 1);
+        self.cons.insert(n, id);
+        id
+    }
+
+    /// `x` and `!y` with either orientation: is one the complement of
+    /// the other?
+    fn complementary(&self, a: ExprId, b: ExprId) -> bool {
+        matches!(self.node(a), Node::Not(x) if x == b)
+            || matches!(self.node(b), Node::Not(y) if y == a)
+    }
+
+    /// Smart constructor: children of `n` are already in this arena.
+    /// `dm_ok` allows the De Morgan rewrite for THIS node (the caller
+    /// proved its NOT operands have no other uses); recursively
+    /// synthesized nodes stay conservative.
+    fn mk(&mut self, n: Node, dm_ok: bool, rep: &mut OptReport) -> ExprId {
+        match n {
+            Node::Leaf(_) | Node::Const(_) => self.intern(n, rep),
+            Node::AndNot(a, b) => {
+                // canonicalize so !b is CSE-visible
+                let nb = self.mk(Node::Not(b), false, rep);
+                self.mk(Node::And(a, nb), dm_ok, rep)
+            }
+            Node::Not(a) => match self.node(a) {
+                Node::Not(x) => {
+                    rep.folds += 1;
+                    x
+                }
+                Node::Const(v) => {
+                    rep.folds += 1;
+                    self.intern(Node::Const(!v), rep)
+                }
+                _ => self.intern(Node::Not(a), rep),
+            },
+            Node::And(a, b) => {
+                if a == b {
+                    rep.folds += 1;
+                    return a;
+                }
+                if self.complementary(a, b) {
+                    rep.folds += 1;
+                    return self.intern(Node::Const(false), rep);
+                }
+                match (self.node(a), self.node(b)) {
+                    (Node::Const(false), _) | (_, Node::Const(false)) => {
+                        rep.folds += 1;
+                        self.intern(Node::Const(false), rep)
+                    }
+                    (Node::Const(true), _) => {
+                        rep.folds += 1;
+                        b
+                    }
+                    (_, Node::Const(true)) => {
+                        rep.folds += 1;
+                        a
+                    }
+                    (Node::Not(x), Node::Not(y)) if dm_ok => {
+                        rep.demorgans += 1;
+                        let or = self.mk(Node::Or(x, y), false, rep);
+                        self.mk(Node::Not(or), false, rep)
+                    }
+                    _ => self.intern(Node::And(a, b), rep),
+                }
+            }
+            Node::Or(a, b) => {
+                if a == b {
+                    rep.folds += 1;
+                    return a;
+                }
+                if self.complementary(a, b) {
+                    rep.folds += 1;
+                    return self.intern(Node::Const(true), rep);
+                }
+                match (self.node(a), self.node(b)) {
+                    (Node::Const(true), _) | (_, Node::Const(true)) => {
+                        rep.folds += 1;
+                        self.intern(Node::Const(true), rep)
+                    }
+                    (Node::Const(false), _) => {
+                        rep.folds += 1;
+                        b
+                    }
+                    (_, Node::Const(false)) => {
+                        rep.folds += 1;
+                        a
+                    }
+                    (Node::Not(x), Node::Not(y)) if dm_ok => {
+                        rep.demorgans += 1;
+                        let and = self.mk(Node::And(x, y), false, rep);
+                        self.mk(Node::Not(and), false, rep)
+                    }
+                    _ => self.intern(Node::Or(a, b), rep),
+                }
+            }
+            Node::Xor(a, b) => {
+                if a == b {
+                    rep.folds += 1;
+                    return self.intern(Node::Const(false), rep);
+                }
+                match (self.node(a), self.node(b)) {
+                    (Node::Const(false), _) => {
+                        rep.folds += 1;
+                        b
+                    }
+                    (_, Node::Const(false)) => {
+                        rep.folds += 1;
+                        a
+                    }
+                    (Node::Const(true), _) => {
+                        rep.folds += 1;
+                        self.mk(Node::Not(b), false, rep)
+                    }
+                    (_, Node::Const(true)) => {
+                        rep.folds += 1;
+                        self.mk(Node::Not(a), false, rep)
+                    }
+                    _ => self.intern(Node::Xor(a, b), rep),
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pud::compiler::expr::ExprBuilder;
+    use crate::util::rng::Pcg64;
+
+    fn eval_pair(e1: &Expr, e2: &Expr, seed: u64) {
+        let n = e1.n_leaves().max(e2.n_leaves()).max(1);
+        let mut rng = Pcg64::new(seed);
+        let leaves: Vec<Vec<u8>> = (0..n)
+            .map(|_| {
+                let mut v = vec![0u8; 16];
+                rng.fill_bytes(&mut v);
+                v
+            })
+            .collect();
+        let refs: Vec<&[u8]> = leaves.iter().map(|v| v.as_slice()).collect();
+        assert_eq!(
+            e1.eval_bytes(&refs, 16).unwrap(),
+            e2.eval_bytes(&refs, 16).unwrap(),
+            "optimizer changed semantics of {e1}"
+        );
+    }
+
+    #[test]
+    fn cse_merges_duplicate_subtrees() {
+        let mut b = ExprBuilder::new();
+        let l0 = b.leaf(0);
+        let l1 = b.leaf(1);
+        let x1 = b.and(l0, l1);
+        let x2 = b.and(l0, l1); // structural duplicate
+        let r = b.xor(x1, x2); // == Const(false), via CSE then x^x
+        let e = b.build(r);
+        let (opt, rep) = optimize(&e);
+        assert!(rep.cse_hits >= 1);
+        assert_eq!(opt.node(opt.root()), Node::Const(false));
+        eval_pair(&e, &opt, 1);
+    }
+
+    #[test]
+    fn commutative_duplicates_merge_too() {
+        let mut b = ExprBuilder::new();
+        let l0 = b.leaf(0);
+        let l1 = b.leaf(1);
+        let x1 = b.and(l0, l1);
+        let x2 = b.and(l1, l0); // same op, swapped operands
+        let r = b.or(x1, x2);
+        let e = b.build(r);
+        let (opt, rep) = optimize(&e);
+        assert!(rep.cse_hits >= 1);
+        // or(x, x) then folds to the single AND
+        assert_eq!(opt.live_nodes(), 3);
+        eval_pair(&e, &opt, 2);
+    }
+
+    #[test]
+    fn double_negation_and_constants_fold() {
+        let mut b = ExprBuilder::new();
+        let l0 = b.leaf(0);
+        let n1 = b.not(l0);
+        let n2 = b.not(n1); // !!a == a
+        let zero = b.constant(false);
+        let r1 = b.or(n2, zero); // a | 0 == a
+        let one = b.constant(true);
+        let r = b.and(r1, one); // a & 1 == a
+        let e = b.build(r);
+        let (opt, rep) = optimize(&e);
+        assert!(rep.folds >= 3);
+        assert_eq!(opt.live_nodes(), 1, "whole thing folds to the leaf");
+        assert_eq!(opt.node(opt.root()), Node::Leaf(0));
+        eval_pair(&e, &opt, 3);
+    }
+
+    #[test]
+    fn xor_with_one_becomes_not() {
+        let mut b = ExprBuilder::new();
+        let l0 = b.leaf(0);
+        let one = b.constant(true);
+        let r = b.xor(l0, one);
+        let e = b.build(r);
+        let (opt, _) = optimize(&e);
+        assert_eq!(opt.node(opt.root()), Node::Not(ExprId(0)));
+        eval_pair(&e, &opt, 4);
+    }
+
+    #[test]
+    fn demorgan_reduces_not_count() {
+        let mut b = ExprBuilder::new();
+        let l0 = b.leaf(0);
+        let l1 = b.leaf(1);
+        let n0 = b.not(l0);
+        let n1 = b.not(l1);
+        let r = b.and(n0, n1); // !a & !b -> !(a | b)
+        let e = b.build(r);
+        assert_eq!(e.live_nots(), 2);
+        let (opt, rep) = optimize(&e);
+        assert_eq!(rep.demorgans, 1);
+        assert_eq!(opt.live_nots(), 1);
+        eval_pair(&e, &opt, 5);
+    }
+
+    #[test]
+    fn demorgan_skipped_when_nots_are_shared() {
+        // (!a & !b) ^ !a — rewriting the AND would leave !a alive
+        // through the XOR and *grow* the program
+        let mut b = ExprBuilder::new();
+        let l0 = b.leaf(0);
+        let l1 = b.leaf(1);
+        let n0 = b.not(l0);
+        let n1 = b.not(l1);
+        let conj = b.and(n0, n1);
+        let r = b.xor(conj, n0);
+        let e = b.build(r);
+        let (opt, rep) = optimize(&e);
+        assert_eq!(rep.demorgans, 0, "shared NOT must block De Morgan");
+        assert_eq!(opt.live_nots(), 2);
+        assert!(opt.live_nodes() <= e.live_nodes(), "optimizer may not grow");
+        eval_pair(&e, &opt, 9);
+    }
+
+    #[test]
+    fn andnot_canonicalizes_and_shares_the_not() {
+        let mut b = ExprBuilder::new();
+        let l0 = b.leaf(0);
+        let l1 = b.leaf(1);
+        let d = b.and_not(l0, l1); // a & !b
+        let n1 = b.not(l1); // !b again, elsewhere
+        let r = b.xor(d, n1);
+        let e = b.build(r);
+        let (opt, rep) = optimize(&e);
+        assert!(rep.cse_hits >= 1, "!b must be shared after canonicalization");
+        assert!(!opt
+            .nodes()
+            .iter()
+            .any(|n| matches!(n, Node::AndNot(..))));
+        eval_pair(&e, &opt, 6);
+    }
+
+    #[test]
+    fn complements_annihilate() {
+        let mut b = ExprBuilder::new();
+        let l0 = b.leaf(0);
+        let n0 = b.not(l0);
+        let r1 = b.and(l0, n0); // == 0
+        let l1 = b.leaf(1);
+        let n1 = b.not(l1);
+        let r2 = b.or(l1, n1); // == 1
+        let r = b.and(r1, r2); // 0 & 1 == 0
+        let e = b.build(r);
+        let (opt, _) = optimize(&e);
+        assert_eq!(opt.node(opt.root()), Node::Const(false));
+        eval_pair(&e, &opt, 7);
+    }
+
+    #[test]
+    fn optimize_is_idempotent() {
+        let mut b = ExprBuilder::new();
+        let l0 = b.leaf(0);
+        let l1 = b.leaf(1);
+        let l2 = b.leaf(2);
+        let n2 = b.not(l2);
+        let conj = b.and(l0, l1);
+        let left = b.and(conj, n2);
+        let x = b.xor(l0, l1);
+        let r = b.or(left, x);
+        let e = b.build(r);
+        let (o1, _) = optimize(&e);
+        let (o2, rep2) = optimize(&o1);
+        assert_eq!(o1.nodes(), o2.nodes());
+        assert_eq!(o1.root(), o2.root());
+        assert_eq!(rep2.folds + rep2.demorgans, 0, "fixpoint reached");
+        eval_pair(&e, &o1, 8);
+    }
+}

@@ -1,0 +1,194 @@
+//! Temp-row register allocation: map expression intermediates onto a
+//! bounded pool of scratch regions.
+//!
+//! Emission order is the arena order of the reachable non-leaf nodes
+//! (a topological order by construction), so live ranges are plain
+//! `[def, last_use]` index intervals and a linear scan suffices. Slots
+//! are recycled through a FIFO free list — the *least recently freed*
+//! slot is reused first, which maximizes the distance between a WAR
+//! hazard's read and write and so keeps independent subtrees in
+//! distinct slots (= distinct rows = schedulable in one hazard wave)
+//! whenever the pool allows.
+//!
+//! When pressure exceeds the pool bound the allocator keeps going —
+//! slots past the bound are *spills*, extra scratch rows the caller
+//! leases on demand (`Assignment::spills` counts them; the scratch
+//! pool they come from is the same [`crate::alloc::scratch::ScratchPool`],
+//! just beyond its preferred resident size).
+
+use std::collections::VecDeque;
+
+use rustc_hash::FxHashMap;
+
+use super::expr::{Expr, ExprId, Node};
+
+/// Slot assignment for every emitted non-root interior node.
+#[derive(Debug, Clone, Default)]
+pub struct Assignment {
+    /// Scratch slot index per node (the root writes `dst` instead and
+    /// has no entry; leaves read operand buffers directly).
+    pub slot: FxHashMap<ExprId, usize>,
+    /// Distinct slots the emission needs simultaneously.
+    pub slots_needed: usize,
+    /// Slots allocated beyond the preferred pool bound.
+    pub spills: usize,
+}
+
+/// The emission order: reachable non-leaf nodes in arena (topological)
+/// order. Empty exactly when the root is a leaf.
+pub fn emission_order(expr: &Expr) -> Vec<ExprId> {
+    let mark = expr.reachable();
+    (0..expr.nodes().len())
+        .filter(|&i| mark[i] && !matches!(expr.nodes()[i], Node::Leaf(_)))
+        .map(|i| ExprId(i as u32))
+        .collect()
+}
+
+/// Linear-scan allocation over `order` with a preferred pool of
+/// `pool_limit` slots.
+pub fn allocate(expr: &Expr, order: &[ExprId], pool_limit: usize) -> Assignment {
+    // last emission position reading each interior node's value
+    let mut last_use: FxHashMap<ExprId, usize> = FxHashMap::default();
+    for (pos, &id) in order.iter().enumerate() {
+        for c in expr.node(id).children() {
+            if !matches!(expr.node(c), Node::Leaf(_)) {
+                last_use.insert(c, pos);
+            }
+        }
+    }
+    let root = expr.root();
+    let mut asg = Assignment::default();
+    let mut free: VecDeque<usize> = VecDeque::new();
+    for (pos, &id) in order.iter().enumerate() {
+        let mut freed: Vec<usize> = expr
+            .node(id)
+            .children()
+            .iter()
+            .filter(|c| last_use.get(c) == Some(&pos))
+            .filter_map(|c| asg.slot.get(c).copied())
+            .collect();
+        freed.sort_unstable();
+        freed.dedup();
+        // In-place destination reuse (dst slot == a dying operand's
+        // slot) is legal for single-request lowerings: the engine
+        // reads every source before writing. `AndNot` lowers to TWO
+        // requests (NOT then AND) whose first write must not clobber
+        // the still-needed first operand, so it allocates its slot
+        // *before* the operands' slots recycle. (Defensive, like the
+        // AndNot arm in `Compiled::emit`: `compile()`'s optimizer
+        // canonicalizes AndNot away, but `allocate` accepts raw
+        // expressions too.)
+        let inplace_ok = !matches!(expr.node(id), Node::AndNot(..));
+        if inplace_ok {
+            free.extend(freed.iter().copied());
+        }
+        if id != root {
+            let s = match free.pop_front() {
+                Some(s) => s,
+                None => {
+                    let s = asg.slots_needed;
+                    asg.slots_needed += 1;
+                    if asg.slots_needed > pool_limit {
+                        asg.spills += 1;
+                    }
+                    s
+                }
+            };
+            asg.slot.insert(id, s);
+        }
+        if !inplace_ok {
+            free.extend(freed);
+        }
+    }
+    asg
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pud::compiler::expr::ExprBuilder;
+
+    #[test]
+    fn chain_reuses_one_slot() {
+        // !!!!a — each NOT's operand dies at its single use
+        let mut b = ExprBuilder::new();
+        let mut x = b.leaf(0);
+        for _ in 0..4 {
+            x = b.not(x);
+        }
+        let e = b.build(x);
+        let order = emission_order(&e);
+        assert_eq!(order.len(), 4);
+        let asg = allocate(&e, &order, 4);
+        assert_eq!(asg.slots_needed, 1, "a linear chain needs one slot");
+        assert_eq!(asg.spills, 0);
+        assert!(!asg.slot.contains_key(&e.root()), "root writes dst");
+    }
+
+    #[test]
+    fn balanced_tree_needs_logarithmic_slots() {
+        // ((a&b) | (c&d)) ^ ((e&f) | (g&h))
+        let mut b = ExprBuilder::new();
+        let leaves: Vec<_> = (0..8).map(|i| b.leaf(i)).collect();
+        let ands: Vec<_> = leaves
+            .chunks(2)
+            .map(|p| b.and(p[0], p[1]))
+            .collect();
+        let o1 = b.or(ands[0], ands[1]);
+        let o2 = b.or(ands[2], ands[3]);
+        let r = b.xor(o1, o2);
+        let e = b.build(r);
+        let order = emission_order(&e);
+        let asg = allocate(&e, &order, 8);
+        assert!(asg.slots_needed <= 4, "got {}", asg.slots_needed);
+        assert_eq!(asg.spills, 0);
+        // every non-root interior node has a slot within bounds
+        for &s in asg.slot.values() {
+            assert!(s < asg.slots_needed);
+        }
+    }
+
+    #[test]
+    fn pressure_beyond_pool_counts_spills() {
+        // 6 independent ANDs all live until the final fold
+        let mut b = ExprBuilder::new();
+        let ands: Vec<_> = (0..6)
+            .map(|i| {
+                let x = b.leaf(2 * i);
+                let y = b.leaf(2 * i + 1);
+                b.and(x, y)
+            })
+            .collect();
+        // fold pairwise at the end so all 6 stay live
+        let p1 = b.or(ands[0], ands[1]);
+        let p2 = b.or(ands[2], ands[3]);
+        let p3 = b.or(ands[4], ands[5]);
+        let q = b.or(p1, p2);
+        let r = b.or(q, p3);
+        let e = b.build(r);
+        let order = emission_order(&e);
+        let tight = allocate(&e, &order, 2);
+        let roomy = allocate(&e, &order, 16);
+        assert_eq!(tight.slots_needed, roomy.slots_needed);
+        assert!(tight.spills > 0, "pool of 2 must spill");
+        assert_eq!(roomy.spills, 0);
+    }
+
+    #[test]
+    fn no_live_operand_shares_its_consumer_dst_slot_for_andnot() {
+        let mut b = ExprBuilder::new();
+        let l0 = b.leaf(0);
+        let l1 = b.leaf(1);
+        let inner = b.and(l0, l1); // dies at the AndNot
+        let l2 = b.leaf(2);
+        let d = b.and_not(inner, l2);
+        let r = b.not(d);
+        let e = b.build(r);
+        let order = emission_order(&e);
+        let asg = allocate(&e, &order, 4);
+        // the AndNot's slot must differ from its dying operand's slot
+        let inner_id = order[0];
+        let andnot_id = order[1];
+        assert_ne!(asg.slot[&inner_id], asg.slot[&andnot_id]);
+    }
+}

@@ -44,11 +44,39 @@ impl PudOp {
         PudOp::Xor,
     ];
 
+    /// AAPs one PUD-executed row of this op issues — THE cost table.
+    /// Everything that prices an op (the timing sequences, the
+    /// device counters bumped by `pud::{rowclone, ambit}`, the energy
+    /// model, the `report::op_costs` table) derives from this and
+    /// [`PudOp::tras_per_row`], so composite XOR is consistently a
+    /// 7-AAP/3-TRA sequence everywhere — never a single TRA.
+    pub fn aaps_per_row(&self) -> u64 {
+        match self {
+            PudOp::Zero | PudOp::Copy => 1,
+            PudOp::Not => 2,
+            PudOp::And | PudOp::Or => 4,
+            PudOp::Xor => 7,
+        }
+    }
+
+    /// Triple-row activations one PUD-executed row of this op issues.
+    /// XOR is composed of two ANDs and one OR worth of majority
+    /// operations, so it counts 3 — pricing it as one TRA would make
+    /// the energy/report tables disagree with what the engine executes.
+    pub fn tras_per_row(&self) -> u64 {
+        match self {
+            PudOp::Zero | PudOp::Copy | PudOp::Not => 0,
+            PudOp::And | PudOp::Or => 1,
+            PudOp::Xor => 3,
+        }
+    }
+
     /// Analytic cost of one PUD-executed row of this op (matches the
     /// command sequences charged by [`crate::pud::exec::PudEngine`]:
     /// RowClone AAPs for `Zero`/`Copy`, Ambit sequences for the rest).
     /// The scheduler uses this to lay rows onto per-bank timelines
-    /// without re-running the engine.
+    /// without re-running the engine. Always equals
+    /// `aaps_per_row() * t_aap` (asserted by `costs_agree_with_timing`).
     pub fn pud_row_ns(&self, t: &crate::dram::timing::TimingParams) -> f64 {
         match self {
             PudOp::Zero => t.rowclone_zero_ns(1),
@@ -57,6 +85,12 @@ impl PudOp {
             PudOp::And | PudOp::Or => t.ambit_and_or_ns(1),
             PudOp::Xor => t.ambit_xor_ns(1),
         }
+    }
+
+    /// Energy of one PUD-executed row: the same AAP/TRA counts the
+    /// engine's counters record, priced with `e`'s constants.
+    pub fn pud_row_nj(&self, e: &crate::dram::energy::EnergyParams) -> f64 {
+        self.aaps_per_row() as f64 * e.aap_nj + self.tras_per_row() as f64 * e.tra_nj
     }
 
     /// Artifact base name of the matching L1 kernel.
@@ -165,6 +199,45 @@ mod tests {
     #[should_panic(expected = "arity mismatch")]
     fn request_arity_checked() {
         BulkRequest::new(PudOp::And, 0, vec![0], 64);
+    }
+
+    #[test]
+    fn costs_agree_with_timing() {
+        // one cost table: the analytic per-row ns of every op is its
+        // AAP count times the AAP latency — XOR included (7 AAPs, not
+        // a single TRA's worth)
+        let t = crate::dram::timing::TimingParams::default();
+        for op in PudOp::ALL {
+            assert!(
+                (op.pud_row_ns(&t) - op.aaps_per_row() as f64 * t.t_aap).abs()
+                    < 1e-9,
+                "{op}: timing and AAP table disagree"
+            );
+        }
+        assert_eq!(PudOp::Xor.aaps_per_row(), 7);
+        assert_eq!(PudOp::Xor.tras_per_row(), 3);
+        assert!(PudOp::Xor.pud_row_ns(&t) > PudOp::And.pud_row_ns(&t));
+    }
+
+    #[test]
+    fn costs_agree_with_energy() {
+        let e = crate::dram::energy::EnergyParams::default();
+        // XOR must be priced as the composite sequence
+        assert!(
+            PudOp::Xor.pud_row_nj(&e)
+                > 2.0 * PudOp::And.pud_row_nj(&e) - e.aap_nj,
+            "composite XOR cannot be cheaper than its constituent ops"
+        );
+        assert_eq!(
+            PudOp::And.pud_row_nj(&e),
+            4.0 * e.aap_nj + e.tra_nj,
+            "AND: 4 AAPs + 1 TRA"
+        );
+        assert_eq!(
+            PudOp::Xor.pud_row_nj(&e),
+            7.0 * e.aap_nj + 3.0 * e.tra_nj,
+            "XOR: 7 AAPs + 3 TRAs, never a single TRA"
+        );
     }
 
     #[test]

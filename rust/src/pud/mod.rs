@@ -15,14 +15,19 @@
 //! * [`ambit`] — functional + counted Ambit Boolean execution.
 //! * [`exec`] — [`exec::PudEngine`]: the device-level executor that
 //!   the coordinator drives; returns analytic latencies.
+//! * [`compiler`] — the Boolean-expression compiler that lowers
+//!   multi-operand expression DAGs onto this substrate (IR, optimizer,
+//!   scratch-row register allocator, batched lowering).
 
 pub mod ambit;
+pub mod compiler;
 pub mod exec;
 pub mod isa;
 pub mod legality;
 pub mod reserved;
 pub mod rowclone;
 
+pub use compiler::{Expr, ExprBuilder};
 pub use exec::PudEngine;
 pub use isa::PudOp;
 pub use legality::{check_rowwise, RowPlan};

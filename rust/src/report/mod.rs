@@ -6,10 +6,14 @@ use std::path::Path;
 use anyhow::Result;
 
 use crate::alloc::traits::AllocStats;
+use crate::dram::energy::EnergyParams;
+use crate::dram::timing::TimingParams;
+use crate::pud::isa::PudOp;
 use crate::util::csvio::Csv;
 use crate::util::table::{fnum, Table};
 use crate::util::units::{fmt_bytes, fmt_ns};
 use crate::workloads::churn::ChurnResult;
+use crate::workloads::filter::FilterResult;
 use crate::workloads::microbench::{AllocatorKind, Micro};
 use crate::workloads::sweep::SweepCell;
 
@@ -296,6 +300,114 @@ pub fn churn_runs(
     ))
 }
 
+/// Render the per-op cost table: one row per [`PudOp::ALL`] entry,
+/// with arity and the AAP/TRA/ns/nJ per-row charges all derived from
+/// the single cost table on [`PudOp`] — the place to see that
+/// composite XOR is priced as its 7-AAP/3-TRA sequence (never a
+/// single TRA) consistently across timing, energy, and the scheduler.
+pub fn op_costs(t: &TimingParams, e: &EnergyParams) -> String {
+    let mut table = Table::new(vec![
+        "op",
+        "arity",
+        "aaps/row",
+        "tras/row",
+        "ns/row",
+        "nJ/row",
+    ])
+    .left(0);
+    for op in PudOp::ALL {
+        table.row(vec![
+            op.to_string(),
+            op.arity().to_string(),
+            op.aaps_per_row().to_string(),
+            op.tras_per_row().to_string(),
+            format!("{:.0}", op.pud_row_ns(t)),
+            format!("{:.1}", op.pud_row_nj(e)),
+        ]);
+    }
+    table.render()
+}
+
+/// Render the predicate-filter comparison: compiled single-batch
+/// execution vs hand-issued sequential lowering, per allocator per
+/// clause count. Writes `filter.csv` when `out_dir` is given.
+pub fn filter(results: &[FilterResult], out_dir: Option<&Path>) -> Result<String> {
+    let mut table = Table::new(vec![
+        "allocator",
+        "clauses",
+        "cols",
+        "ops",
+        "nots",
+        "scratch",
+        "cse",
+        "waves",
+        "pud%",
+        "hand-pud%",
+        "speedup",
+    ])
+    .left(0);
+    let mut csv = Csv::new(vec![
+        "allocator",
+        "clauses",
+        "columns",
+        "rows",
+        "ops",
+        "not_ops",
+        "scratch_slots",
+        "spills",
+        "cse_hits",
+        "waves",
+        "compiled_pud_fraction",
+        "hand_pud_fraction",
+        "compiled_sim_ns",
+        "compiled_elapsed_ns",
+        "hand_ns",
+        "speedup",
+        "matches",
+    ]);
+    for r in results {
+        table.row(vec![
+            r.allocator.to_string(),
+            r.clauses.to_string(),
+            r.columns.to_string(),
+            r.compile.ops.to_string(),
+            r.compile.not_ops.to_string(),
+            r.compile.scratch_slots.to_string(),
+            r.compile.cse_hits.to_string(),
+            r.waves.to_string(),
+            format!("{:.0}%", r.compiled_pud_fraction * 100.0),
+            format!("{:.0}%", r.hand_pud_fraction * 100.0),
+            format!("{}x", fnum(r.speedup())),
+        ]);
+        csv.row(vec![
+            r.allocator.to_string(),
+            r.clauses.to_string(),
+            r.columns.to_string(),
+            r.rows.to_string(),
+            r.compile.ops.to_string(),
+            r.compile.not_ops.to_string(),
+            r.compile.scratch_slots.to_string(),
+            r.compile.spills.to_string(),
+            r.compile.cse_hits.to_string(),
+            r.waves.to_string(),
+            format!("{:.6}", r.compiled_pud_fraction),
+            format!("{:.6}", r.hand_pud_fraction),
+            format!("{:.1}", r.compiled_ns),
+            format!("{:.1}", r.elapsed_ns),
+            format!("{:.1}", r.hand_ns),
+            format!("{:.4}", r.speedup()),
+            r.matches.to_string(),
+        ]);
+    }
+    if let Some(dir) = out_dir {
+        csv.write(dir.join("filter.csv"))?;
+    }
+    Ok(format!(
+        "## Filter — compiled expression batches vs hand-issued ops\n\n{}",
+        table.render()
+    ))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -405,15 +517,67 @@ mod tests {
     }
 
     #[test]
+    fn op_cost_table_prices_xor_as_composite() {
+        let s = op_costs(&TimingParams::default(), &EnergyParams::default());
+        assert!(s.contains("xor"));
+        // the xor row carries the 7-AAP / 3-TRA composite charges
+        let xor_line = s.lines().find(|l| l.contains("xor")).unwrap();
+        assert!(xor_line.contains('7'), "{xor_line}");
+        assert!(xor_line.contains('3'), "{xor_line}");
+        let and_line = s.lines().find(|l| l.contains("and")).unwrap();
+        assert!(and_line.contains('4'), "{and_line}");
+    }
+
+    fn filter_result(alloc: &'static str, pud: f64, hand: f64) -> FilterResult {
+        FilterResult {
+            allocator: alloc,
+            clauses: 3,
+            columns: 8,
+            rows: 1024,
+            compile: crate::pud::compiler::CompileStats {
+                leaves: 8,
+                ops: 9,
+                not_ops: 1,
+                scratch_slots: 3,
+                cse_hits: 1,
+                ..Default::default()
+            },
+            waves: 4,
+            compiled_ns: 900.0,
+            elapsed_ns: 500.0,
+            compiled_pud_fraction: pud,
+            hand_ns: 5000.0,
+            hand_pud_fraction: hand,
+            matches: 42,
+        }
+    }
+
+    #[test]
+    fn filter_report_renders_comparison() {
+        let rs = vec![
+            filter_result("puma", 1.0, 0.2),
+            filter_result("malloc", 0.0, 0.0),
+        ];
+        let s = filter(&rs, None).unwrap();
+        assert!(s.contains("Filter"));
+        assert!(s.contains("puma"));
+        assert!(s.contains("100%"));
+        assert!(s.contains("hand-pud%"));
+        assert!(s.contains("10.0x"), "{s}");
+    }
+
+    #[test]
     fn writes_csvs() {
         let dir = std::env::temp_dir().join("puma_report_test");
         let series = vec![(Micro::Zero, vec![cell(250, 1.0, 2.0, 1, 0)])];
         figure2(&series, Some(&dir)).unwrap();
         motivation(&[(AllocatorKind::Malloc, 250, 0.0)], Some(&dir)).unwrap();
         churn(&churn_result(0.5, 1), None, Some(&dir)).unwrap();
+        filter(&[filter_result("puma", 1.0, 0.5)], Some(&dir)).unwrap();
         assert!(dir.join("figure2.csv").exists());
         assert!(dir.join("motivation.csv").exists());
         assert!(dir.join("churn.csv").exists());
+        assert!(dir.join("filter.csv").exists());
         let _ = std::fs::remove_dir_all(dir);
     }
 }

@@ -1,0 +1,448 @@
+//! Multi-clause predicate filter over bitmap columns — the compiler's
+//! flagship workload.
+//!
+//! A table keeps one bitmap per predicate column; a filter like
+//! `(c0 & c1 & !c2) | ((c3 ^ c4) & c5) | ...` selects the surviving
+//! rows. Hand-lowering that onto the substrate is exactly what callers
+//! had to do before `pud::compiler`: one temp buffer per intermediate,
+//! allocated ad hoc (so placed wherever worst-fit lands, i.e. *not*
+//! with the operands), one `submit` per op. The compiled path builds
+//! the same predicate as one [`Expr`], lowers it through CSE + the
+//! scratch register allocator, and executes it as ONE batch with
+//! hint-co-located temporaries.
+//!
+//! [`run`] executes both paths on the same system and placements and
+//! verifies each against the IR's scalar reference evaluator, so the
+//! comparison isolates what the compiler buys: the PUD-row fraction
+//! of the compiled path is strictly higher under PUMA, and the batch
+//! overlaps independent clauses across banks.
+
+use anyhow::{ensure, Result};
+use rustc_hash::FxHashMap;
+
+use crate::alloc::scratch::ScratchPool;
+use crate::alloc::traits::Allocator;
+use crate::coordinator::system::{System, SystemConfig};
+use crate::dram::address::InterleaveScheme;
+use crate::os::process::Pid;
+use crate::pud::compiler::{CompileStats, Expr, ExprBuilder, ExprId, Node};
+use crate::pud::isa::{BulkRequest, PudOp};
+use crate::util::rng::Pcg64;
+use crate::workloads::microbench::AllocatorKind;
+
+/// Filter workload parameters.
+#[derive(Debug, Clone)]
+pub struct FilterConfig {
+    /// Table rows (bits per bitmap column).
+    pub rows: u64,
+    /// Predicate clauses (each uses 2-3 bitmap columns).
+    pub clauses: usize,
+    /// Bit density of each column.
+    pub density: f64,
+    pub huge_pages: usize,
+    pub puma_pages: usize,
+    pub churn_rounds: usize,
+    pub seed: u64,
+}
+
+impl Default for FilterConfig {
+    fn default() -> Self {
+        Self {
+            rows: 256 * 1024, // 32 KiB per column
+            clauses: 3,
+            density: 0.3,
+            huge_pages: 16,
+            puma_pages: 8,
+            churn_rounds: 2_000,
+            seed: 0xF117E,
+        }
+    }
+}
+
+/// One filter cell: compiled vs hand-issued, same system, same
+/// placements, both verified against the scalar reference.
+#[derive(Debug, Clone)]
+pub struct FilterResult {
+    pub allocator: &'static str,
+    pub clauses: usize,
+    /// Distinct bitmap columns the predicate reads.
+    pub columns: usize,
+    pub rows: u64,
+    /// Compiler-side stats (ops, scratch, CSE, NOT count, ...).
+    pub compile: CompileStats,
+    /// Hazard waves of the single compiled batch.
+    pub waves: usize,
+    /// Simulated ns, serial-equivalent, of the compiled batch.
+    pub compiled_ns: f64,
+    /// Bank-parallel completion time of the compiled batch.
+    pub elapsed_ns: f64,
+    pub compiled_pud_fraction: f64,
+    /// Simulated ns of the hand-issued sequential lowering.
+    pub hand_ns: f64,
+    pub hand_pud_fraction: f64,
+    /// Rows surviving the filter (equal on both paths, checked).
+    pub matches: u64,
+}
+
+impl FilterResult {
+    /// Simulated speedup of the compiled batch (bank-parallel) over
+    /// the hand-issued serial lowering.
+    pub fn speedup(&self) -> f64 {
+        if self.elapsed_ns <= 0.0 {
+            return 0.0;
+        }
+        self.hand_ns / self.elapsed_ns
+    }
+}
+
+/// Build the standard `clauses`-clause predicate. Clause patterns
+/// rotate (x, y, z fresh columns per clause):
+///
+/// * `x & y & !z`
+/// * `(x ^ y) & z`
+/// * `(x | y) & !z0` — reuses clause 0's negated column, so CSE has a
+///   real duplicate to merge (2 fresh columns only)
+///
+/// Clauses are OR-ed together. Returns the expression and the number
+/// of distinct columns it reads (8 for the canonical 3-clause form).
+pub fn predicate(clauses: usize) -> (Expr, usize) {
+    assert!(clauses >= 1, "need at least one clause");
+    let mut b = ExprBuilder::new();
+    let mut col = 0usize;
+    let mut clause_ids: Vec<ExprId> = Vec::new();
+    for i in 0..clauses {
+        let id = match i % 3 {
+            0 => {
+                let x = b.leaf(col);
+                let y = b.leaf(col + 1);
+                let z = b.leaf(col + 2);
+                col += 3;
+                let nz = b.not(z);
+                let xy = b.and(x, y);
+                b.and(xy, nz)
+            }
+            1 => {
+                let x = b.leaf(col);
+                let y = b.leaf(col + 1);
+                let z = b.leaf(col + 2);
+                col += 3;
+                let xy = b.xor(x, y);
+                b.and(xy, z)
+            }
+            _ => {
+                let x = b.leaf(col);
+                let y = b.leaf(col + 1);
+                col += 2;
+                // column 2 is clause 0's negated column: a structural
+                // duplicate of that NOT, merged by CSE
+                let z = b.leaf(2);
+                let nz = b.not(z);
+                let xy = b.or(x, y);
+                b.and(xy, nz)
+            }
+        };
+        clause_ids.push(id);
+    }
+    let root = b.all_or(&clause_ids);
+    (b.build(root), col)
+}
+
+/// The pre-compiler lowering: walk the DAG in topological order,
+/// allocate a fresh, un-hinted temp buffer per intermediate, and
+/// `submit` every op on its own. This is what every caller had to
+/// hand-write — and what the compiler replaces. Temps are freed at
+/// the end (the historical code usually didn't even do that; see
+/// `workloads::setops`).
+fn hand_lower(
+    sys: &mut System,
+    alloc: &mut dyn Allocator,
+    pid: Pid,
+    expr: &Expr,
+    operands: &[u64],
+    dst: u64,
+    len: u64,
+) -> Result<f64> {
+    let mark = expr.reachable();
+    let root = expr.root();
+    let mut place: FxHashMap<ExprId, u64> = FxHashMap::default();
+    let mut temps: Vec<u64> = Vec::new();
+    let mut ns = 0.0;
+    for (idx, node) in expr.nodes().iter().enumerate() {
+        if !mark[idx] {
+            continue;
+        }
+        let id = ExprId(idx as u32);
+        if let Node::Leaf(i) = node {
+            place.insert(id, operands[*i]);
+            continue;
+        }
+        let p = if id == root {
+            dst
+        } else {
+            let t = sys.alloc(alloc, pid, len)?;
+            temps.push(t);
+            t
+        };
+        match *node {
+            Node::Leaf(_) => unreachable!("handled above"),
+            Node::Const(v) => {
+                ns += sys.submit(pid, &BulkRequest::new(PudOp::Zero, p, vec![], len))?;
+                if v {
+                    ns += sys
+                        .submit(pid, &BulkRequest::new(PudOp::Not, p, vec![p], len))?;
+                }
+            }
+            Node::Not(a) => {
+                ns += sys.submit(
+                    pid,
+                    &BulkRequest::new(PudOp::Not, p, vec![place[&a]], len),
+                )?;
+            }
+            Node::And(a, b) => {
+                ns += sys.submit(
+                    pid,
+                    &BulkRequest::new(PudOp::And, p, vec![place[&a], place[&b]], len),
+                )?;
+            }
+            Node::Or(a, b) => {
+                ns += sys.submit(
+                    pid,
+                    &BulkRequest::new(PudOp::Or, p, vec![place[&a], place[&b]], len),
+                )?;
+            }
+            Node::Xor(a, b) => {
+                ns += sys.submit(
+                    pid,
+                    &BulkRequest::new(PudOp::Xor, p, vec![place[&a], place[&b]], len),
+                )?;
+            }
+            Node::AndNot(a, b) => {
+                ns += sys.submit(
+                    pid,
+                    &BulkRequest::new(PudOp::Not, p, vec![place[&b]], len),
+                )?;
+                ns += sys.submit(
+                    pid,
+                    &BulkRequest::new(PudOp::And, p, vec![place[&a], p], len),
+                )?;
+            }
+        }
+        place.insert(id, p);
+    }
+    if let Node::Leaf(i) = expr.node(root) {
+        ns += sys.submit(
+            pid,
+            &BulkRequest::new(PudOp::Copy, dst, vec![operands[i]], len),
+        )?;
+    }
+    for t in temps {
+        sys.free(alloc, pid, t)?;
+    }
+    Ok(ns)
+}
+
+/// Run one filter cell: allocate + fill the columns with `kind`, run
+/// the compiled batch and the hand-issued lowering on the same
+/// placements, verify both against the scalar reference.
+pub fn run(
+    scheme: InterleaveScheme,
+    cfg: &FilterConfig,
+    kind: AllocatorKind,
+) -> Result<FilterResult> {
+    let mut sys = System::boot(SystemConfig {
+        scheme,
+        huge_pages: cfg.huge_pages,
+        churn_rounds: cfg.churn_rounds,
+        seed: cfg.seed,
+        artifacts: None,
+        ..Default::default()
+    })?;
+    let pid = sys.spawn();
+    let mut alloc = kind.build(&mut sys, cfg.puma_pages)?;
+    let (expr, columns) = predicate(cfg.clauses);
+    let len = cfg.rows.div_ceil(8);
+
+    // columns: first via alloc, the rest hint-aligned (paper protocol)
+    let first = sys.alloc(alloc.as_mut(), pid, len)?;
+    let mut cols = vec![first];
+    for _ in 1..columns {
+        cols.push(sys.alloc_align(alloc.as_mut(), pid, len, first)?);
+    }
+    let dst = sys.alloc_align(alloc.as_mut(), pid, len, first)?;
+    let mut rng = Pcg64::new(cfg.seed);
+    let mut truth: Vec<Vec<u8>> = Vec::with_capacity(columns);
+    for &va in &cols {
+        let mut bits = vec![0u8; len as usize];
+        for byte in bits.iter_mut() {
+            for bit in 0..8 {
+                if rng.chance(cfg.density) {
+                    *byte |= 1 << bit;
+                }
+            }
+        }
+        sys.write_virt(pid, va, &bits)?;
+        truth.push(bits);
+    }
+    let refs: Vec<&[u8]> = truth.iter().map(|v| v.as_slice()).collect();
+    let want = expr.eval_bytes(&refs, len as usize)?;
+
+    // --- compiled path: ONE submitted batch
+    let mut pool = ScratchPool::new();
+    let rep = sys.run_expr(alloc.as_mut(), pid, &expr, &cols, dst, len, &mut pool)?;
+    let got = sys.read_virt(pid, dst, len)?;
+    ensure!(
+        got == want,
+        "{}: compiled filter diverged from the scalar reference",
+        kind.name()
+    );
+
+    // --- hand-issued path: same placements, ad-hoc temps, serial ops.
+    // Scramble dst first: it currently holds the compiled result, and
+    // the hand path must be verified on its own output.
+    sys.write_virt(pid, dst, &vec![0xEEu8; len as usize])?;
+    let (pud0, fb0) = (sys.coord.stats.pud_rows, sys.coord.stats.fallback_rows);
+    let hand_ns = hand_lower(&mut sys, alloc.as_mut(), pid, &expr, &cols, dst, len)?;
+    let hand_pud = sys.coord.stats.pud_rows - pud0;
+    let hand_fb = sys.coord.stats.fallback_rows - fb0;
+    let got = sys.read_virt(pid, dst, len)?;
+    ensure!(
+        got == want,
+        "{}: hand-lowered filter diverged from the scalar reference",
+        kind.name()
+    );
+
+    let hand_total = hand_pud + hand_fb;
+    let matches = live_bit_count(&want, cfg.rows);
+    Ok(FilterResult {
+        allocator: kind.name(),
+        clauses: cfg.clauses,
+        columns,
+        rows: cfg.rows,
+        compile: rep.stats.clone(),
+        waves: rep.batch.waves,
+        compiled_ns: rep.batch.total_ns,
+        elapsed_ns: rep.batch.elapsed_ns,
+        compiled_pud_fraction: rep.pud_row_fraction(),
+        hand_ns,
+        hand_pud_fraction: if hand_total == 0 {
+            0.0
+        } else {
+            hand_pud as f64 / hand_total as f64
+        },
+        matches,
+    })
+}
+
+/// Set bits among the first `rows` bit positions of `bits` (LSB-first
+/// within each byte, as `fill` writes them). The final byte's padding
+/// bits — which the random column fill and NOT results can set — are
+/// excluded, so the count never reports rows that do not exist.
+fn live_bit_count(bits: &[u8], rows: u64) -> u64 {
+    let mut total: u64 = bits.iter().map(|b| b.count_ones() as u64).sum();
+    let pad = bits.len() as u64 * 8 - rows;
+    if pad > 0 {
+        let last = *bits.last().expect("pad > 0 implies a final byte");
+        let pad_mask = 0xFFu8 << (8 - pad as u32);
+        total -= (last & pad_mask).count_ones() as u64;
+    }
+    total
+}
+
+/// Sweep clause counts x allocators, one fresh system per cell.
+pub fn sweep(
+    scheme: &InterleaveScheme,
+    cfg: &FilterConfig,
+    clause_counts: &[usize],
+    kinds: &[AllocatorKind],
+) -> Result<Vec<FilterResult>> {
+    let mut out = Vec::with_capacity(clause_counts.len() * kinds.len());
+    for &clauses in clause_counts {
+        for kind in kinds {
+            let cell_cfg = FilterConfig {
+                clauses,
+                ..cfg.clone()
+            };
+            out.push(run(scheme.clone(), &cell_cfg, *kind)?);
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::alloc::puma::FitPolicy;
+    use crate::dram::geometry::DramGeometry;
+
+    fn scheme() -> InterleaveScheme {
+        InterleaveScheme::row_major(DramGeometry::small()) // 64 MiB
+    }
+
+    fn cfg() -> FilterConfig {
+        FilterConfig {
+            rows: 128 * 1024, // 16 KiB columns
+            churn_rounds: 500,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn live_bit_count_excludes_padding() {
+        assert_eq!(live_bit_count(&[0xFF, 0xFF], 16), 16);
+        // 13 rows: the top 3 bits of the last byte are padding
+        assert_eq!(live_bit_count(&[0xFF, 0xFF], 13), 13);
+        assert_eq!(live_bit_count(&[0x00, 0xE0], 13), 0);
+        assert_eq!(live_bit_count(&[0x00, 0x1F], 13), 5);
+        assert_eq!(live_bit_count(&[], 0), 0);
+    }
+
+    #[test]
+    fn canonical_predicate_reads_eight_columns() {
+        let (e, columns) = predicate(3);
+        assert_eq!(columns, 8);
+        assert_eq!(e.n_leaves(), 8);
+        let (_, c1) = predicate(1);
+        assert_eq!(c1, 3);
+    }
+
+    #[test]
+    fn puma_compiles_to_one_batch_and_beats_hand_lowering() {
+        let r = run(scheme(), &cfg(), AllocatorKind::Puma(FitPolicy::WorstFit))
+            .unwrap();
+        assert_eq!(r.columns, 8);
+        assert!(r.waves >= 1);
+        assert!(
+            r.compiled_pud_fraction > r.hand_pud_fraction,
+            "compiled {} must beat hand-issued {}",
+            r.compiled_pud_fraction,
+            r.hand_pud_fraction
+        );
+        assert!(r.compiled_pud_fraction > 0.95, "got {}", r.compiled_pud_fraction);
+        assert!(r.speedup() > 1.0, "speedup {}", r.speedup());
+        assert!(r.compile.cse_hits >= 1, "shared !c2 must CSE");
+        assert!(r.matches > 0);
+    }
+
+    #[test]
+    fn malloc_filter_is_correct_but_all_fallback() {
+        let r = run(scheme(), &cfg(), AllocatorKind::Malloc).unwrap();
+        assert!(r.compiled_pud_fraction < 0.05);
+        assert!(r.matches > 0);
+    }
+
+    #[test]
+    fn sweep_covers_the_grid() {
+        let rs = sweep(
+            &scheme(),
+            &cfg(),
+            &[1, 2],
+            &[
+                AllocatorKind::Malloc,
+                AllocatorKind::Puma(FitPolicy::WorstFit),
+            ],
+        )
+        .unwrap();
+        assert_eq!(rs.len(), 4);
+        assert!(rs.iter().any(|r| r.allocator == "puma" && r.clauses == 2));
+    }
+}

@@ -10,10 +10,14 @@
 //!   (DESIGN.md §8).
 //! * [`bitmap_index`] — bitmap-index query workload (the database
 //!   scenario motivating Ambit-class PUD).
-//! * [`setops`] — set algebra over bit-vector sets (SISA-like).
+//! * [`setops`] — set algebra over bit-vector sets (SISA-like), now
+//!   compiled through `pud::compiler`.
+//! * [`filter`] — multi-clause predicate filter over bitmap columns:
+//!   compiled single-batch execution vs hand-issued sequential ops.
 
 pub mod bitmap_index;
 pub mod churn;
+pub mod filter;
 pub mod microbench;
 pub mod setops;
 pub mod sweep;

@@ -2,16 +2,40 @@
 //!
 //! Sets over a bounded universe are dense bit vectors; union,
 //! intersection, difference, and symmetric difference map directly
-//! onto the PUD op set (OR / AND / AND+NOT / XOR). This is the second
-//! application workload (after bitmap_index) exercising the public
-//! API the way the paper's motivating use cases do.
+//! onto Boolean expressions over the PUD op set. Since PR 3 the
+//! operations are *compiled*: each one builds a
+//! [`crate::pud::compiler::Expr`], and [`System::run_expr`] lowers it
+//! into a single coordinator batch with temporaries drawn from the
+//! universe's reusable [`ScratchPool`]. That fixes the historical
+//! temp-buffer pattern (a fresh allocation per `difference` call that
+//! was never returned): across any number of calls the pool holds a
+//! bounded set of leased rows, co-located with the sets themselves —
+//! see `repeated_set_ops_do_not_grow_allocations` below.
 
 use anyhow::Result;
 
+use crate::alloc::scratch::ScratchPool;
 use crate::alloc::traits::Allocator;
 use crate::coordinator::system::System;
 use crate::os::process::Pid;
-use crate::pud::isa::{BulkRequest, PudOp};
+use crate::pud::compiler::{self, Compiled, Expr, ExprBuilder, ExprId};
+
+/// Indices into [`SetUniverse`]'s precompiled binary programs.
+const OP_AND: usize = 0;
+const OP_OR: usize = 1;
+const OP_XOR: usize = 2;
+const OP_ANDNOT: usize = 3;
+
+/// Compile a 2-leaf program once (bound to fresh addresses per call).
+fn compile_binary(
+    build: impl FnOnce(&mut ExprBuilder, ExprId, ExprId) -> ExprId,
+) -> Compiled {
+    let mut b = ExprBuilder::new();
+    let l0 = b.leaf(0);
+    let l1 = b.leaf(1);
+    let root = build(&mut b, l0, l1);
+    compiler::compile(&b.build(root))
+}
 
 /// A set universe of `universe_bits` elements backed by PUD-placed
 /// bit vectors.
@@ -19,6 +43,11 @@ pub struct SetUniverse {
     pub pid: Pid,
     pub len: u64,
     first_va: Option<u64>,
+    /// Reusable compiler scratch, leased on first use and kept across
+    /// operations.
+    scratch: ScratchPool,
+    /// The four binary programs (AND/OR/XOR/ANDNOT), compiled once.
+    programs: [Compiled; 4],
 }
 
 /// Handle to one set.
@@ -33,6 +62,13 @@ impl SetUniverse {
             pid,
             len: universe_bits.div_ceil(8),
             first_va: None,
+            scratch: ScratchPool::new(),
+            programs: [
+                compile_binary(|b, x, y| b.and(x, y)),
+                compile_binary(|b, x, y| b.or(x, y)),
+                compile_binary(|b, x, y| b.xor(x, y)),
+                compile_binary(|b, x, y| b.and_not(x, y)),
+            ],
         }
     }
 
@@ -83,67 +119,117 @@ impl SetUniverse {
         Ok(out)
     }
 
+    /// Compile and run an arbitrary set expression: `Leaf(i)` in
+    /// `expr` reads `operands[i]`, the result lands in `dst`. Scratch
+    /// rows come from the universe's reusable pool. Returns simulated
+    /// ns.
+    pub fn apply(
+        &mut self,
+        sys: &mut System,
+        alloc: &mut dyn Allocator,
+        dst: SetHandle,
+        expr: &Expr,
+        operands: &[SetHandle],
+    ) -> Result<f64> {
+        let vas: Vec<u64> = operands.iter().map(|h| h.va).collect();
+        let rep = sys.run_expr(
+            alloc,
+            self.pid,
+            expr,
+            &vas,
+            dst.va,
+            self.len,
+            &mut self.scratch,
+        )?;
+        Ok(rep.batch.total_ns)
+    }
+
+    /// Run one precompiled binary program (compile-once/bind-many —
+    /// only address binding and execution happen per call).
+    fn binary(
+        &mut self,
+        sys: &mut System,
+        alloc: &mut dyn Allocator,
+        dst: SetHandle,
+        a: SetHandle,
+        b: SetHandle,
+        op: usize,
+    ) -> Result<f64> {
+        let rep = sys.run_compiled(
+            alloc,
+            self.pid,
+            &self.programs[op],
+            &[a.va, b.va],
+            dst.va,
+            self.len,
+            &mut self.scratch,
+        )?;
+        Ok(rep.batch.total_ns)
+    }
+
     /// dst = a INTERSECT b. Returns simulated ns.
     pub fn intersect(
-        &self,
+        &mut self,
         sys: &mut System,
+        alloc: &mut dyn Allocator,
         dst: SetHandle,
         a: SetHandle,
         b: SetHandle,
     ) -> Result<f64> {
-        sys.submit(
-            self.pid,
-            &BulkRequest::new(PudOp::And, dst.va, vec![a.va, b.va], self.len),
-        )
+        self.binary(sys, alloc, dst, a, b, OP_AND)
     }
 
     /// dst = a UNION b.
     pub fn union(
-        &self,
+        &mut self,
         sys: &mut System,
+        alloc: &mut dyn Allocator,
         dst: SetHandle,
         a: SetHandle,
         b: SetHandle,
     ) -> Result<f64> {
-        sys.submit(
-            self.pid,
-            &BulkRequest::new(PudOp::Or, dst.va, vec![a.va, b.va], self.len),
-        )
+        self.binary(sys, alloc, dst, a, b, OP_OR)
     }
 
     /// dst = a SYMMETRIC-DIFFERENCE b.
     pub fn sym_diff(
-        &self,
+        &mut self,
         sys: &mut System,
+        alloc: &mut dyn Allocator,
         dst: SetHandle,
         a: SetHandle,
         b: SetHandle,
     ) -> Result<f64> {
-        sys.submit(
-            self.pid,
-            &BulkRequest::new(PudOp::Xor, dst.va, vec![a.va, b.va], self.len),
-        )
+        self.binary(sys, alloc, dst, a, b, OP_XOR)
     }
 
-    /// dst = a DIFFERENCE b, composed as a AND (NOT b) with a scratch
-    /// set for the complement.
+    /// dst = a DIFFERENCE b (`a & !b`). The complement's temp row
+    /// comes from the reusable scratch pool — callers no longer pass
+    /// (or leak) a scratch set.
     pub fn difference(
-        &self,
+        &mut self,
         sys: &mut System,
+        alloc: &mut dyn Allocator,
         dst: SetHandle,
         a: SetHandle,
         b: SetHandle,
-        scratch: SetHandle,
     ) -> Result<f64> {
-        let mut ns = sys.submit(
-            self.pid,
-            &BulkRequest::new(PudOp::Not, scratch.va, vec![b.va], self.len),
-        )?;
-        ns += sys.submit(
-            self.pid,
-            &BulkRequest::new(PudOp::And, dst.va, vec![a.va, scratch.va], self.len),
-        )?;
-        Ok(ns)
+        self.binary(sys, alloc, dst, a, b, OP_ANDNOT)
+    }
+
+    /// Scratch rows leased from the allocator over this universe's
+    /// lifetime (stays flat under repeated operations).
+    pub fn scratch_leases(&self) -> u64 {
+        self.scratch.leases
+    }
+
+    /// Return the universe's scratch rows to `alloc`.
+    pub fn release_scratch(
+        &mut self,
+        sys: &mut System,
+        alloc: &mut dyn Allocator,
+    ) -> Result<()> {
+        sys.release_scratch(alloc, self.pid, &mut self.scratch)
     }
 }
 
@@ -178,7 +264,6 @@ mod tests {
         let a = uni.alloc_set(&mut sys, &mut puma).unwrap();
         let b = uni.alloc_set(&mut sys, &mut puma).unwrap();
         let dst = uni.alloc_set(&mut sys, &mut puma).unwrap();
-        let scratch = uni.alloc_set(&mut sys, &mut puma).unwrap();
         let xs: Vec<u64> = (0..1000).map(|i| i * 7 % 100_000).collect();
         let ys: Vec<u64> = (0..1000).map(|i| i * 13 % 100_000).collect();
         uni.fill(&mut sys, a, &xs).unwrap();
@@ -188,24 +273,93 @@ mod tests {
         let sa: BTreeSet<u64> = xs.iter().copied().collect();
         let sb: BTreeSet<u64> = ys.iter().copied().collect();
 
-        uni.intersect(&mut sys, dst, a, b).unwrap();
+        uni.intersect(&mut sys, &mut puma, dst, a, b).unwrap();
         let got: BTreeSet<u64> = uni.members(&mut sys, dst).unwrap().into_iter().collect();
         assert_eq!(got, &sa & &sb);
 
-        uni.union(&mut sys, dst, a, b).unwrap();
+        uni.union(&mut sys, &mut puma, dst, a, b).unwrap();
         let got: BTreeSet<u64> = uni.members(&mut sys, dst).unwrap().into_iter().collect();
         assert_eq!(got, &sa | &sb);
 
-        uni.sym_diff(&mut sys, dst, a, b).unwrap();
+        uni.sym_diff(&mut sys, &mut puma, dst, a, b).unwrap();
         let got: BTreeSet<u64> = uni.members(&mut sys, dst).unwrap().into_iter().collect();
         assert_eq!(got, &sa ^ &sb);
 
-        uni.difference(&mut sys, dst, a, b, scratch).unwrap();
+        uni.difference(&mut sys, &mut puma, dst, a, b).unwrap();
         let got: BTreeSet<u64> = uni.members(&mut sys, dst).unwrap().into_iter().collect();
         assert_eq!(got, &sa - &sb);
 
-        // all of it in-DRAM under PUMA placement
+        // all of it in-DRAM under PUMA placement (incl. the compiled
+        // difference's scratch row, leased with a co-location hint)
         assert!(sys.coord.stats.pud_row_fraction() > 0.9);
+    }
+
+    #[test]
+    fn compiled_multi_operand_expression() {
+        // (a | b) & !c in ONE batch through SetUniverse::apply
+        let mut sys = sys();
+        let pid = sys.spawn();
+        let mut puma = PumaAlloc::new(8192, FitPolicy::WorstFit);
+        puma.pim_preallocate(&mut sys.os, 10).unwrap();
+        let mut uni = SetUniverse::new(64 * 1024, pid);
+        let a = uni.alloc_set(&mut sys, &mut puma).unwrap();
+        let b = uni.alloc_set(&mut sys, &mut puma).unwrap();
+        let c = uni.alloc_set(&mut sys, &mut puma).unwrap();
+        let dst = uni.alloc_set(&mut sys, &mut puma).unwrap();
+        uni.fill(&mut sys, a, &[1, 5, 9]).unwrap();
+        uni.fill(&mut sys, b, &[5, 7]).unwrap();
+        uni.fill(&mut sys, c, &[9, 7, 100]).unwrap();
+        let mut bld = ExprBuilder::new();
+        let l0 = bld.leaf(0);
+        let l1 = bld.leaf(1);
+        let l2 = bld.leaf(2);
+        let u = bld.or(l0, l1);
+        let r = bld.and_not(u, l2);
+        let expr = bld.build(r);
+        let ops_before = sys.coord.stats.ops;
+        uni.apply(&mut sys, &mut puma, dst, &expr, &[a, b, c]).unwrap();
+        assert!(sys.coord.stats.ops > ops_before);
+        assert_eq!(
+            sys.coord.pipeline.batches, 1,
+            "the whole expression is one submitted batch"
+        );
+        assert_eq!(uni.members(&mut sys, dst).unwrap(), vec![1, 5]);
+    }
+
+    #[test]
+    fn repeated_set_ops_do_not_grow_allocations() {
+        // the satellite fix: 100 differences / sym_diffs reuse one
+        // leased scratch row instead of allocating per call
+        let mut sys = sys();
+        let pid = sys.spawn();
+        let mut puma = PumaAlloc::new(8192, FitPolicy::WorstFit);
+        puma.pim_preallocate(&mut sys.os, 10).unwrap();
+        let mut uni = SetUniverse::new(64 * 1024, pid);
+        let a = uni.alloc_set(&mut sys, &mut puma).unwrap();
+        let b = uni.alloc_set(&mut sys, &mut puma).unwrap();
+        let dst = uni.alloc_set(&mut sys, &mut puma).unwrap();
+        uni.fill(&mut sys, a, &[2, 4, 6, 8]).unwrap();
+        uni.fill(&mut sys, b, &[4, 8, 16]).unwrap();
+        uni.difference(&mut sys, &mut puma, dst, a, b).unwrap();
+        let allocs_after_first = puma.stats().allocs;
+        let live_after_first = puma.live_regions();
+        for _ in 0..99 {
+            uni.difference(&mut sys, &mut puma, dst, a, b).unwrap();
+            uni.sym_diff(&mut sys, &mut puma, dst, a, b).unwrap();
+        }
+        assert_eq!(
+            puma.stats().allocs,
+            allocs_after_first,
+            "no net allocation growth across 100 iterations"
+        );
+        assert_eq!(puma.live_regions(), live_after_first);
+        assert_eq!(uni.scratch_leases(), 1, "one reusable scratch row");
+        uni.difference(&mut sys, &mut puma, dst, a, b).unwrap();
+        assert_eq!(uni.members(&mut sys, dst).unwrap(), vec![2, 6]);
+        // and the pool hands its rows back on release
+        let frees_before = puma.stats().frees;
+        uni.release_scratch(&mut sys, &mut puma).unwrap();
+        assert_eq!(puma.stats().frees, frees_before + 1);
     }
 
     #[test]
