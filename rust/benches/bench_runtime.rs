@@ -29,6 +29,7 @@ use puma::pud::isa::{BulkRequest, PudOp};
 use puma::util::bench::{bench, black_box, BenchOpts};
 use puma::util::csvio::Csv;
 use puma::util::rng::Pcg64;
+use puma::workloads::analytics::{self, AnalyticsConfig, AnalyticsResult};
 use puma::workloads::churn::{self, ChurnConfig, ChurnResult};
 use puma::workloads::filter::{self, FilterConfig, FilterResult};
 use puma::workloads::microbench::AllocatorKind;
@@ -197,6 +198,22 @@ fn filter_json(r: &FilterResult) -> String {
     )
 }
 
+fn analytics_json(r: &AnalyticsResult) -> String {
+    format!(
+        "{{\"allocator\": \"{}\", \"width\": {}, \"pud_row_fraction\": {:.6}, \
+         \"elapsed_sim_ns\": {:.1}, \"ops\": {}, \"aaps_per_elem\": {:.4}, \
+         \"matches\": {}, \"sum\": {}}}",
+        r.allocator,
+        r.width,
+        r.pud_row_fraction(),
+        r.elapsed_ns,
+        r.compile.ops,
+        r.aaps_per_elem,
+        r.matches,
+        r.sum
+    )
+}
+
 fn json_path(m: &PathMetrics, groups: usize) -> String {
     // "xla_dispatches" is the tracked metric: fallback dispatch units
     // (counted in every mode; == run_op calls once artifacts load).
@@ -312,6 +329,41 @@ fn main() -> anyhow::Result<()> {
         "the canonical predicate contains a shared NOT for CSE"
     );
 
+    // ---- analytics: vertical arithmetic, PUMA vs every baseline ----
+    println!("\n# analytics — filter-then-sum over vertical columns");
+    let acfg = AnalyticsConfig::default();
+    let kinds = [
+        AllocatorKind::Malloc,
+        AllocatorKind::Memalign,
+        AllocatorKind::HugePages,
+        AllocatorKind::Puma(FitPolicy::WorstFit),
+    ];
+    let cells = analytics::sweep(&small_scheme(), &acfg, &kinds)?;
+    let mut min_margin = f64::INFINITY;
+    for &w in &acfg.widths {
+        let puma_cell = cells
+            .iter()
+            .find(|r| r.allocator == "puma" && r.width == w)
+            .expect("puma cell");
+        println!(
+            "width {w:>2}: puma pud_frac {:.3}, {} op(s), {:.1} aaps/elem",
+            puma_cell.pud_row_fraction(),
+            puma_cell.compile.ops,
+            puma_cell.aaps_per_elem
+        );
+        for r in cells.iter().filter(|r| r.width == w && r.allocator != "puma") {
+            assert!(
+                puma_cell.pud_row_fraction() > r.pud_row_fraction(),
+                "width {w}: puma ({}) must beat {} ({})",
+                puma_cell.pud_row_fraction(),
+                r.allocator,
+                r.pud_row_fraction()
+            );
+            min_margin = min_margin
+                .min(puma_cell.pud_row_fraction() - r.pud_row_fraction());
+        }
+    }
+
     let json = format!(
         "{{\n  \"bench\": \"bench_runtime\",\n  \"workload\": \
          {{\"groups\": {groups}, \"mix\": \"3:1 puma:malloc, \
@@ -322,7 +374,10 @@ fn main() -> anyhow::Result<()> {
          \"churn\": {{\"epochs\": {}, \"off\": {}, \"on\": {}, \
          \"steady_pud_gain\": {:.6}}},\n  \
          \"filter\": {{\"clauses\": {}, \"columns\": {}, \"rows\": {}, \
-         \"puma\": {}, \"malloc\": {}, \"pud_gain_vs_hand\": {:.6}}}\n}}\n",
+         \"puma\": {}, \"malloc\": {}, \"pud_gain_vs_hand\": {:.6}}},\n  \
+         \"analytics\": {{\"elems\": {}, \"widths\": [{}], \
+         \"threshold_frac\": {:.2}, \"min_puma_margin\": {:.6}, \
+         \"cells\": [\n    {}\n  ]}}\n}}\n",
         json_path(&serial, groups),
         json_path(&batched, groups),
         serial.elapsed_sim_ns / batched.elapsed_sim_ns.max(1e-9),
@@ -338,6 +393,19 @@ fn main() -> anyhow::Result<()> {
         filter_json(&filter_puma),
         filter_json(&filter_malloc),
         filter_puma.compiled_pud_fraction - filter_puma.hand_pud_fraction,
+        acfg.elems,
+        acfg.widths
+            .iter()
+            .map(|w| w.to_string())
+            .collect::<Vec<_>>()
+            .join(", "),
+        acfg.threshold_frac,
+        min_margin,
+        cells
+            .iter()
+            .map(analytics_json)
+            .collect::<Vec<_>>()
+            .join(",\n    "),
     );
     std::fs::write("BENCH_runtime.json", &json)?;
     println!("\nwrote BENCH_runtime.json");

@@ -112,7 +112,27 @@ impl ScratchPool {
         proc: &mut Process,
         alloc: &mut dyn Allocator,
     ) -> Result<()> {
-        while let Some(va) = self.slots.pop() {
+        self.trim(ctx, proc, alloc, 0)
+    }
+
+    /// Release leased buffers down to at most `keep` residents (newest
+    /// first), returning the surplus to `alloc`. This is the pool-
+    /// sizing valve for W-row intermediates: a 16-bit arithmetic
+    /// kernel legitimately leases W+ scratch rows for one batch, but
+    /// holding them between kernels pins subarray rows the allocator
+    /// could serve to others — trim back to the preferred resident
+    /// size (`DEFAULT_SCRATCH_POOL`) once the wide kernel retires.
+    /// Error handling matches [`ScratchPool::release_all`]: on a
+    /// failed `free` the buffer stays tracked and the error returns.
+    pub fn trim(
+        &mut self,
+        ctx: &mut OsCtx,
+        proc: &mut Process,
+        alloc: &mut dyn Allocator,
+        keep: usize,
+    ) -> Result<()> {
+        while self.slots.len() > keep {
+            let va = self.slots.pop().expect("len > keep >= 0");
             if let Err(e) = alloc.free(ctx, proc, va) {
                 self.slots.push(va);
                 return Err(e);
@@ -180,6 +200,30 @@ mod tests {
             .ensure(&mut ctx, &mut proc, &mut puma, 1, row, Some(0xDEAD000))
             .unwrap();
         assert_eq!(pool2.len(), 1);
+    }
+
+    #[test]
+    fn trim_releases_surplus_and_keeps_residents() {
+        let mut ctx = ctx();
+        let mut proc = Process::new(Pid(3));
+        let mut m = MallocSim::new();
+        let mut pool = ScratchPool::new();
+        // a wide kernel leases 16 rows; trim back to the preferred 4
+        pool.ensure(&mut ctx, &mut proc, &mut m, 16, 4096, None).unwrap();
+        assert_eq!(pool.len(), 16);
+        pool.trim(&mut ctx, &mut proc, &mut m, 4).unwrap();
+        assert_eq!(pool.len(), 4);
+        assert_eq!(pool.releases, 12);
+        assert_eq!(pool.high_water, 16);
+        // trimming below is a no-op when already within bounds
+        pool.trim(&mut ctx, &mut proc, &mut m, 8).unwrap();
+        assert_eq!(pool.len(), 4);
+        // the residents stay usable without re-leasing
+        let leases = pool.leases;
+        pool.ensure(&mut ctx, &mut proc, &mut m, 4, 4096, None).unwrap();
+        assert_eq!(pool.leases, leases);
+        pool.release_all(&mut ctx, &mut proc, &mut m).unwrap();
+        assert_eq!(m.stats().allocs, m.stats().frees);
     }
 
     #[test]

@@ -66,7 +66,8 @@ pub fn build_config(cli: &Cli) -> Result<Config> {
     overrides.remove("config");
     // command-specific flags are not config keys
     for k in [
-        "micro", "alloc", "size", "batch", "tenants", "epochs", "mode", "clauses",
+        "micro", "alloc", "size", "batch", "tenants", "epochs", "mode",
+        "clauses", "widths", "elems", "threshold",
     ] {
         overrides.remove(k);
     }
@@ -154,6 +155,37 @@ pub fn run(args: &[String]) -> Result<i32> {
                 .transpose()?;
             cmd_filter(&cfg, clauses, alloc)
         }
+        "analytics" => {
+            let cfg = build_config(&cli)?;
+            let widths: Vec<u32> = cli
+                .flags
+                .get("widths")
+                .map(String::as_str)
+                .unwrap_or("4,8,16")
+                .split(',')
+                .map(|s| s.trim().parse::<u32>().context("widths"))
+                .collect::<Result<_>>()?;
+            let elems: usize = cli
+                .flags
+                .get("elems")
+                .map(String::as_str)
+                .unwrap_or("65536")
+                .parse()
+                .context("elems")?;
+            let threshold: f64 = cli
+                .flags
+                .get("threshold")
+                .map(String::as_str)
+                .unwrap_or("0.5")
+                .parse()
+                .context("threshold")?;
+            let alloc = cli
+                .flags
+                .get("alloc")
+                .map(|a| parse_alloc(a))
+                .transpose()?;
+            cmd_analytics(&cfg, widths, elems, threshold, alloc)
+        }
         "micro" => {
             let cfg = build_config(&cli)?;
             let micro = parse_micro(
@@ -192,6 +224,9 @@ commands:
                --tenants N --epochs N --mode off|on|both
   filter       compiled predicate-filter workload, swept over clause
                counts and allocators: --clauses N [--alloc NAME]
+  analytics    filter-then-sum over a vertical (bit-transposed) column
+               table, swept over bit-widths and allocators:
+               --widths 4,8,16 --elems N --threshold FRAC [--alloc NAME]
   info         print machine description and artifact inventory
   help         this text
 
@@ -274,6 +309,44 @@ fn cmd_filter(
     let (expr, columns) = crate::workloads::filter::predicate(clauses);
     println!("predicate ({columns} columns): {expr}");
     println!("(raw series: {}/filter.csv)", cfg.out.display());
+    Ok(0)
+}
+
+fn cmd_analytics(
+    cfg: &Config,
+    widths: Vec<u32>,
+    elems: usize,
+    threshold: f64,
+    alloc: Option<AllocatorKind>,
+) -> Result<i32> {
+    let acfg = crate::workloads::analytics::AnalyticsConfig {
+        elems,
+        widths,
+        threshold_frac: threshold,
+        huge_pages: cfg.huge_pages,
+        puma_pages: cfg.puma_pages.max(2),
+        churn_rounds: cfg.churn_rounds,
+        seed: cfg.seed,
+    };
+    let kinds: Vec<AllocatorKind> = match alloc {
+        Some(k) => vec![k],
+        None => vec![
+            AllocatorKind::Malloc,
+            AllocatorKind::Memalign,
+            AllocatorKind::HugePages,
+            AllocatorKind::Puma(FitPolicy::WorstFit),
+        ],
+    };
+    eprintln!(
+        "running analytics sweep: {} width(s) x {} allocator(s), {} elems ...",
+        acfg.widths.len(),
+        kinds.len(),
+        acfg.elems
+    );
+    let results =
+        crate::workloads::analytics::sweep(&cfg.scheme, &acfg, &kinds)?;
+    println!("{}", report::analytics(&results, Some(&cfg.out))?);
+    println!("(raw series: {}/analytics.csv)", cfg.out.display());
     Ok(0)
 }
 
@@ -479,6 +552,19 @@ mod tests {
         assert_eq!(cli.flags["mode"], "off");
         // must not be rejected as unknown config keys
         build_config(&cli).unwrap();
+    }
+
+    #[test]
+    fn analytics_flags_are_command_specific_not_config() {
+        let cli = parse_args(&args(&[
+            "analytics", "--widths", "4,8", "--elems", "4096", "--threshold",
+            "0.25", "--alloc", "puma", "--puma_pages", "4",
+        ]))
+        .unwrap();
+        assert_eq!(cli.flags["widths"], "4,8");
+        // widths/elems/threshold/alloc must not be rejected as config keys
+        let cfg = build_config(&cli).unwrap();
+        assert_eq!(cfg.puma_pages, 4);
     }
 
     #[test]

@@ -5,7 +5,7 @@
 //! a workload needs. It is the single entry point the CLI, examples,
 //! and benchmarks construct; allocators plug in per workload run.
 
-use anyhow::Result;
+use anyhow::{ensure, Result};
 use rustc_hash::FxHashMap;
 
 use crate::alloc::puma::{CompactReport, PumaAlloc};
@@ -15,7 +15,8 @@ use crate::dram::address::InterleaveScheme;
 use crate::dram::device::DramDevice;
 use crate::dram::timing::TimingParams;
 use crate::os::process::{Pid, Process};
-use crate::pud::compiler::{self, Compiled, CompileStats, Expr};
+use crate::pud::arith::{self, ArithOp, VerticalLayout};
+use crate::pud::compiler::{self, Compiled, CompiledMulti, CompileStats, Expr};
 use crate::pud::exec::PudEngine;
 use crate::pud::isa::BulkRequest;
 use crate::runtime::XlaRuntime;
@@ -283,6 +284,168 @@ impl System {
             pud_rows: self.coord.stats.pud_rows - pud0,
             fallback_rows: self.coord.stats.fallback_rows - fb0,
         })
+    }
+
+    /// As [`System::run_compiled`] for a multi-output program: output
+    /// `k` lands in `dsts[k]`. The whole program — shared
+    /// intermediates, every output plane, duplicate-output copies —
+    /// runs as ONE [`System::submit_batch`].
+    pub fn run_multi(
+        &mut self,
+        alloc: &mut dyn Allocator,
+        pid: Pid,
+        compiled: &CompiledMulti,
+        operands: &[u64],
+        dsts: &[u64],
+        len: u64,
+        pool: &mut ScratchPool,
+    ) -> Result<ExprReport> {
+        let hint = operands.first().copied().or_else(|| dsts.first().copied());
+        self.lease_scratch(alloc, pid, pool, compiled.scratch_needed(), len, hint)?;
+        let reqs = compiled.emit(operands, dsts, len, pool.slots())?;
+        let (pud0, fb0) = (self.coord.stats.pud_rows, self.coord.stats.fallback_rows);
+        let batch = self.submit_batch(pid, &reqs)?;
+        Ok(ExprReport {
+            batch,
+            stats: compiled.stats.clone(),
+            pud_rows: self.coord.stats.pud_rows - pud0,
+            fallback_rows: self.coord.stats.fallback_rows - fb0,
+        })
+    }
+
+    /// Compile and run a bit-serial vertical-arithmetic kernel over
+    /// transposed columns (`pud::arith`, DESIGN.md §10): `dst`'s
+    /// planes receive `op(a, b)` element-wise. Unary kernels
+    /// (popcount) take `b = None`; `dst` must have exactly
+    /// `op.out_width(a.width())` planes. One `submit_batch` executes
+    /// the whole W-bit kernel.
+    pub fn run_arith(
+        &mut self,
+        alloc: &mut dyn Allocator,
+        pid: Pid,
+        op: ArithOp,
+        a: &VerticalLayout,
+        b: Option<&VerticalLayout>,
+        dst: &VerticalLayout,
+        pool: &mut ScratchPool,
+    ) -> Result<ExprReport> {
+        ensure!(
+            op.is_binary() == b.is_some(),
+            "{} is {}",
+            op.name(),
+            if op.is_binary() { "binary" } else { "unary" }
+        );
+        // VerticalLayout allows up to 64-bit columns (pure transpose
+        // storage), but the kernels' reference arithmetic caps at
+        // MAX_WIDTH — return Err, don't let kernel() assert
+        ensure!(
+            a.width() <= arith::MAX_WIDTH,
+            "{}-bit operands exceed the {}-bit kernel limit",
+            a.width(),
+            arith::MAX_WIDTH
+        );
+        let mut operands: Vec<u64> = a.planes().to_vec();
+        if let Some(b) = b {
+            ensure!(
+                b.width() == a.width() && b.elems() == a.elems(),
+                "operand shapes differ: {}x{} vs {}x{}",
+                a.elems(),
+                a.width(),
+                b.elems(),
+                b.width()
+            );
+            operands.extend_from_slice(b.planes());
+        }
+        ensure!(
+            dst.elems() == a.elems(),
+            "dst holds {} element(s), operands {}",
+            dst.elems(),
+            a.elems()
+        );
+        ensure!(
+            dst.width() == op.out_width(a.width()),
+            "{} over {}-bit operands writes {} plane(s), dst has {}",
+            op.name(),
+            a.width(),
+            op.out_width(a.width()),
+            dst.width()
+        );
+        let compiled = arith::compile_kernel(op, a.width());
+        self.run_multi(
+            alloc,
+            pid,
+            &compiled,
+            &operands,
+            dst.planes(),
+            a.plane_len(),
+            pool,
+        )
+    }
+
+    /// Filter-then-sum reduction over a vertical column: with a
+    /// predicate `mask` row, every value plane is AND-masked in-DRAM
+    /// (one multi-output batch into pool-leased planes), then the
+    /// masked planes are read back and tree-reduced on the host as
+    /// `Σ_w 2^w · popcount(plane_w)` — the MIMDRAM-style hybrid
+    /// reduction where the data-parallel masking stays in memory and
+    /// only W row reads cross to the CPU. Without a mask the planes
+    /// are read directly (no PUD work, `report` is `None`).
+    pub fn arith_sum(
+        &mut self,
+        alloc: &mut dyn Allocator,
+        pid: Pid,
+        values: &VerticalLayout,
+        mask: Option<u64>,
+        pool: &mut ScratchPool,
+    ) -> Result<(u128, Option<ExprReport>)> {
+        let w = values.width() as usize;
+        let len = values.plane_len();
+        let Some(mask_va) = mask else {
+            let mut sum: u128 = 0;
+            for (i, &va) in values.planes().iter().enumerate() {
+                let bits = self.read_virt(pid, va, len)?;
+                sum += (arith::popcount_live(&bits, values.elems()) as u128) << i;
+            }
+            return Ok((sum, None));
+        };
+        let compiled = compiler::compile_multi(&arith::mask_planes(values.width()));
+        // lease the masked output planes and the program's scratch
+        // from the same pool: slots [0, w) are dsts, the rest scratch
+        let need = w + compiled.scratch_needed();
+        self.lease_scratch(alloc, pid, pool, need, len, Some(values.hint()))?;
+        let mut operands: Vec<u64> = values.planes().to_vec();
+        operands.push(mask_va);
+        let dsts: Vec<u64> = pool.slots()[..w].to_vec();
+        let scratch: Vec<u64> = pool.slots()[w..need].to_vec();
+        let reqs = compiled.emit(&operands, &dsts, len, &scratch)?;
+        let (pud0, fb0) = (self.coord.stats.pud_rows, self.coord.stats.fallback_rows);
+        let batch = self.submit_batch(pid, &reqs)?;
+        let report = ExprReport {
+            batch,
+            stats: compiled.stats.clone(),
+            pud_rows: self.coord.stats.pud_rows - pud0,
+            fallback_rows: self.coord.stats.fallback_rows - fb0,
+        };
+        let mut sum: u128 = 0;
+        for (i, &va) in dsts.iter().enumerate() {
+            let bits = self.read_virt(pid, va, len)?;
+            sum += (arith::popcount_live(&bits, values.elems()) as u128) << i;
+        }
+        Ok((sum, Some(report)))
+    }
+
+    /// Trim `pool` to at most `keep` resident buffers (see
+    /// [`ScratchPool::trim`]) — the release valve after a wide
+    /// arithmetic kernel leased W-row intermediates.
+    pub fn trim_scratch(
+        &mut self,
+        alloc: &mut dyn Allocator,
+        pid: Pid,
+        pool: &mut ScratchPool,
+        keep: usize,
+    ) -> Result<()> {
+        let proc = self.processes.get_mut(&pid).expect("live pid");
+        pool.trim(&mut self.os, proc, alloc, keep)
     }
 
     /// Run one PUMA compaction pass for `pid`: flush its queued
@@ -607,6 +770,119 @@ mod tests {
             sys.read_virt(pid, dst, len).unwrap(),
             vec![0xA5u8 & !0x0F; len as usize]
         );
+    }
+
+    #[test]
+    fn run_arith_add_matches_reference_in_dram() {
+        use crate::alloc::scratch::ScratchPool;
+        use crate::pud::arith::{self, ArithOp, VerticalLayout};
+        use crate::util::rng::Pcg64;
+
+        let mut sys = small_system();
+        let pid = sys.spawn();
+        let row = sys.os.scheme.geometry.row_bytes as u64;
+        let mut puma = PumaAlloc::new(row, FitPolicy::WorstFit);
+        puma.pim_preallocate(&mut sys.os, 4).unwrap();
+        let width = 8u32;
+        let elems = (row * 8) as usize; // one full row per plane
+        let a = VerticalLayout::alloc(&mut sys, &mut puma, pid, width, elems)
+            .unwrap();
+        let b = VerticalLayout::alloc_with_hint(
+            &mut sys, &mut puma, pid, width, elems, a.hint(),
+        )
+        .unwrap();
+        let dst = VerticalLayout::alloc_with_hint(
+            &mut sys, &mut puma, pid, width, elems, a.hint(),
+        )
+        .unwrap();
+        let mut rng = Pcg64::new(0xADD);
+        let m = arith::width_mask(width);
+        let va: Vec<u64> = (0..elems).map(|_| rng.next_u64() & m).collect();
+        let vb: Vec<u64> = (0..elems).map(|_| rng.next_u64() & m).collect();
+        a.store(&mut sys, pid, &va).unwrap();
+        b.store(&mut sys, pid, &vb).unwrap();
+        let mut pool = ScratchPool::new();
+        let rep = sys
+            .run_arith(&mut puma, pid, ArithOp::Add, &a, Some(&b), &dst, &mut pool)
+            .unwrap();
+        assert!(
+            rep.pud_row_fraction() > 0.99,
+            "co-located planes must run in-DRAM, got {}",
+            rep.pud_row_fraction()
+        );
+        assert!(rep.batch.waves >= 1);
+        let got = dst.load(&mut sys, pid).unwrap();
+        for i in 0..elems {
+            assert_eq!(
+                got[i],
+                arith::reference(ArithOp::Add, width, va[i], vb[i]),
+                "element {i}"
+            );
+        }
+        // masked sum: mask = (a < b), sum of a where a < b
+        let mask = VerticalLayout::alloc_with_hint(
+            &mut sys, &mut puma, pid, 1, elems, a.hint(),
+        )
+        .unwrap();
+        sys.run_arith(&mut puma, pid, ArithOp::CmpLt, &a, Some(&b), &mask, &mut pool)
+            .unwrap();
+        let (sum, rep2) = sys
+            .arith_sum(&mut puma, pid, &a, Some(mask.planes()[0]), &mut pool)
+            .unwrap();
+        let want: u128 = va
+            .iter()
+            .zip(&vb)
+            .filter(|(x, y)| x < y)
+            .map(|(x, _)| *x as u128)
+            .sum();
+        assert_eq!(sum, want);
+        let rep2 = rep2.expect("masked sum runs a batch");
+        assert!(rep2.pud_row_fraction() > 0.99);
+        // unmasked sum reads the planes directly
+        let (total, none_rep) =
+            sys.arith_sum(&mut puma, pid, &a, None, &mut pool).unwrap();
+        assert_eq!(total, va.iter().map(|x| *x as u128).sum::<u128>());
+        assert!(none_rep.is_none());
+        // the wide lease trims back down
+        assert!(pool.len() >= width as usize);
+        sys.trim_scratch(&mut puma, pid, &mut pool, 4).unwrap();
+        assert_eq!(pool.len(), 4);
+    }
+
+    #[test]
+    fn run_arith_validates_shapes() {
+        use crate::alloc::scratch::ScratchPool;
+        use crate::pud::arith::{ArithOp, VerticalLayout};
+
+        let mut sys = small_system();
+        let pid = sys.spawn();
+        let mut m = MallocSim::new();
+        let a = VerticalLayout::alloc(&mut sys, &mut m, pid, 4, 64).unwrap();
+        let b = VerticalLayout::alloc(&mut sys, &mut m, pid, 4, 64).unwrap();
+        let narrow = VerticalLayout::alloc(&mut sys, &mut m, pid, 2, 64).unwrap();
+        let mut pool = ScratchPool::new();
+        assert!(
+            sys.run_arith(&mut m, pid, ArithOp::Add, &a, None, &b, &mut pool)
+                .is_err(),
+            "binary op without b"
+        );
+        assert!(
+            sys.run_arith(
+                &mut m, pid, ArithOp::Popcount, &a, Some(&b), &narrow, &mut pool
+            )
+            .is_err(),
+            "unary op with b"
+        );
+        assert!(
+            sys.run_arith(&mut m, pid, ArithOp::Add, &a, Some(&b), &narrow, &mut pool)
+                .is_err(),
+            "dst width mismatch"
+        );
+        // popcount(4) needs 3 planes
+        let pc = VerticalLayout::alloc(&mut sys, &mut m, pid, 3, 64).unwrap();
+        assert!(sys
+            .run_arith(&mut m, pid, ArithOp::Popcount, &a, None, &pc, &mut pool)
+            .is_ok());
     }
 
     #[test]

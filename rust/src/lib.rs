@@ -32,14 +32,8 @@
 //! * [`util`], [`proptest`] — support code that is ordinarily a crates
 //!   dependency (offline build; see DESIGN.md §7).
 
-// Style lints with codebase-wide false positives; correctness lints
-// stay enabled (CI runs clippy with -D warnings).
-#![allow(
-    clippy::too_many_arguments,
-    clippy::new_without_default,
-    clippy::needless_range_loop,
-    clippy::type_complexity
-)]
+// Lint policy lives in Cargo.toml's [lints] table so tests, benches,
+// and examples share it; CI enforces `clippy --all-targets -D warnings`.
 
 pub mod alloc;
 pub mod cli;

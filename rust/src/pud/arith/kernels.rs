@@ -1,0 +1,522 @@
+//! Bit-serial arithmetic kernels as multi-output expression programs.
+//!
+//! Every kernel expands into the PR-3 compiler's
+//! [`Node`](crate::pud::compiler::Node) DAG over per-bit leaves — a
+//! W-bit ripple-carry add is W chained full adders of XOR/AND/OR
+//! gates — and freezes as a [`MultiExpr`] whose roots
+//! are the result bit-planes. Compilation then gives CSE (one shared
+//! carry/borrow chain feeds every output), scratch register
+//! allocation, and single-`submit_batch` emission for free.
+//!
+//! Leaf layout: leaves `0..W` are operand `a`'s bit-planes (LSB
+//! first); binary kernels put operand `b` at leaves `W..2W`.
+//! [`kernel_const`] replaces `b` with constant bits so comparisons
+//! against a literal threshold fold through the optimizer before a
+//! single request is emitted.
+
+use super::super::compiler::{ExprBuilder, ExprId, MultiExpr};
+
+/// Which arithmetic kernel.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ArithOp {
+    /// Wrapping W-bit add.
+    Add,
+    /// Wrapping W-bit subtract.
+    Sub,
+    /// Unsigned `a < b` (one predicate bit-plane, usable as a filter
+    /// mask).
+    CmpLt,
+    /// `a == b` (one predicate bit-plane).
+    CmpEq,
+    /// Element-wise unsigned minimum (select via the `a < b` borrow).
+    Min,
+    /// Element-wise unsigned maximum.
+    Max,
+    /// Per-element popcount of `a`'s W bits via a widening adder tree.
+    Popcount,
+}
+
+impl ArithOp {
+    pub const ALL: [ArithOp; 7] = [
+        ArithOp::Add,
+        ArithOp::Sub,
+        ArithOp::CmpLt,
+        ArithOp::CmpEq,
+        ArithOp::Min,
+        ArithOp::Max,
+        ArithOp::Popcount,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ArithOp::Add => "add",
+            ArithOp::Sub => "sub",
+            ArithOp::CmpLt => "cmp_lt",
+            ArithOp::CmpEq => "cmp_eq",
+            ArithOp::Min => "min",
+            ArithOp::Max => "max",
+            ArithOp::Popcount => "popcount",
+        }
+    }
+
+    /// Does the kernel read a second operand?
+    pub fn is_binary(&self) -> bool {
+        !matches!(self, ArithOp::Popcount)
+    }
+
+    /// Result bit-planes for a `width`-bit input.
+    pub fn out_width(&self, width: u32) -> u32 {
+        match self {
+            ArithOp::Add | ArithOp::Sub | ArithOp::Min | ArithOp::Max => width,
+            ArithOp::CmpLt | ArithOp::CmpEq => 1,
+            ArithOp::Popcount => popcount_width(width),
+        }
+    }
+}
+
+/// Maximum kernel operand width (u64-backed reference arithmetic).
+pub const MAX_WIDTH: u32 = 32;
+
+/// Bit-planes the popcount adder tree emits for a `width`-bit input.
+/// Mirrors the pairing in [`popcount_tree`]; for power-of-two widths
+/// this is exactly `log2(width) + 1`, for ragged widths the leftover
+/// operand carried across levels can add a provably-zero top bit.
+pub fn popcount_width(width: u32) -> u32 {
+    assert!(width >= 1);
+    let mut widths: Vec<u32> = vec![1; width as usize];
+    while widths.len() > 1 {
+        let mut next = Vec::with_capacity(widths.len().div_ceil(2));
+        for pair in widths.chunks(2) {
+            if let [x, y] = pair {
+                next.push(x.max(y) + 1);
+            } else {
+                next.push(pair[0]);
+            }
+        }
+        widths = next;
+    }
+    widths[0]
+}
+
+/// The all-ones mask of a `width`-bit lane.
+pub fn width_mask(width: u32) -> u64 {
+    assert!(width >= 1 && width <= 64);
+    if width == 64 {
+        u64::MAX
+    } else {
+        (1u64 << width) - 1
+    }
+}
+
+/// Scalar reference semantics of one element — the numeric oracle the
+/// property tests and workloads check compiled execution against.
+pub fn reference(op: ArithOp, width: u32, a: u64, b: u64) -> u64 {
+    let m = width_mask(width);
+    let (a, b) = (a & m, b & m);
+    match op {
+        ArithOp::Add => a.wrapping_add(b) & m,
+        ArithOp::Sub => a.wrapping_sub(b) & m,
+        ArithOp::CmpLt => (a < b) as u64,
+        ArithOp::CmpEq => (a == b) as u64,
+        ArithOp::Min => a.min(b),
+        ArithOp::Max => a.max(b),
+        ArithOp::Popcount => a.count_ones() as u64,
+    }
+}
+
+/// Build the `op` kernel over `width`-bit operands: leaves `0..width`
+/// are `a`, leaves `width..2*width` are `b` (binary kernels only).
+pub fn kernel(op: ArithOp, width: u32) -> MultiExpr {
+    assert!(width >= 1 && width <= MAX_WIDTH, "width {width} out of range");
+    let mut b = ExprBuilder::new();
+    let a_bits: Vec<ExprId> = (0..width).map(|i| b.leaf(i as usize)).collect();
+    if !op.is_binary() {
+        let outs = popcount_tree(&mut b, &a_bits);
+        return b.build_multi(outs);
+    }
+    let b_bits: Vec<ExprId> =
+        (0..width).map(|i| b.leaf((width + i) as usize)).collect();
+    let outs = binary_outputs(&mut b, op, &a_bits, &b_bits);
+    b.build_multi(outs)
+}
+
+/// Build the `op` kernel with operand `b` fixed to the constant `rhs`:
+/// its bits become `Const` nodes and the optimizer folds the chain
+/// down before lowering (a threshold compare against `2^(W-1)` is a
+/// handful of ops, not a full borrow chain).
+pub fn kernel_const(op: ArithOp, width: u32, rhs: u64) -> MultiExpr {
+    assert!(width >= 1 && width <= MAX_WIDTH, "width {width} out of range");
+    assert!(op.is_binary(), "{} takes no second operand", op.name());
+    let mut b = ExprBuilder::new();
+    let a_bits: Vec<ExprId> = (0..width).map(|i| b.leaf(i as usize)).collect();
+    let b_bits: Vec<ExprId> = (0..width)
+        .map(|i| b.constant((rhs >> i) & 1 == 1))
+        .collect();
+    let outs = binary_outputs(&mut b, op, &a_bits, &b_bits);
+    b.build_multi(outs)
+}
+
+/// The masking program behind the filter-then-sum reduction: leaves
+/// `0..width` are value bit-planes, leaf `width` is the predicate
+/// mask; output `w` is `plane_w & mask`. One batch masks the whole
+/// column.
+pub fn mask_planes(width: u32) -> MultiExpr {
+    assert!(width >= 1 && width <= MAX_WIDTH, "width {width} out of range");
+    let mut b = ExprBuilder::new();
+    let planes: Vec<ExprId> = (0..width).map(|i| b.leaf(i as usize)).collect();
+    let m = b.leaf(width as usize);
+    let outs: Vec<ExprId> = planes.iter().map(|&p| b.and(p, m)).collect();
+    b.build_multi(outs)
+}
+
+fn binary_outputs(
+    b: &mut ExprBuilder,
+    op: ArithOp,
+    a: &[ExprId],
+    c: &[ExprId],
+) -> Vec<ExprId> {
+    match op {
+        ArithOp::Add => ripple_add(b, a, c).0,
+        ArithOp::Sub => ripple_sub(b, a, c).0,
+        ArithOp::CmpLt => vec![ripple_sub(b, a, c).1],
+        ArithOp::CmpEq => vec![equal(b, a, c)],
+        ArithOp::Min => {
+            let lt = ripple_sub(b, a, c).1; // a < c
+            select(b, lt, a, c)
+        }
+        ArithOp::Max => {
+            let lt = ripple_sub(b, a, c).1;
+            select(b, lt, c, a)
+        }
+        ArithOp::Popcount => unreachable!("popcount is unary"),
+    }
+}
+
+/// One full adder: `x + y + carry` → (sum, carry-out). The first
+/// stage (no carry-in) is a half adder.
+fn full_add(
+    b: &mut ExprBuilder,
+    x: ExprId,
+    y: ExprId,
+    carry: Option<ExprId>,
+) -> (ExprId, ExprId) {
+    let t = b.xor(x, y);
+    match carry {
+        None => (t, b.and(x, y)),
+        Some(cin) => {
+            let s = b.xor(t, cin);
+            let g = b.and(x, y);
+            let p = b.and(t, cin);
+            (s, b.or(g, p))
+        }
+    }
+}
+
+/// W-bit ripple-carry addition, LSB first: (sum bits, carry-out).
+pub fn ripple_add(
+    b: &mut ExprBuilder,
+    a: &[ExprId],
+    c: &[ExprId],
+) -> (Vec<ExprId>, ExprId) {
+    assert!(!a.is_empty() && a.len() == c.len(), "operand width mismatch");
+    let mut carry: Option<ExprId> = None;
+    let mut sum = Vec::with_capacity(a.len());
+    for (&x, &y) in a.iter().zip(c) {
+        let (s, co) = full_add(b, x, y, carry);
+        sum.push(s);
+        carry = Some(co);
+    }
+    (sum, carry.expect("non-empty operands"))
+}
+
+/// One full subtractor: `x - y - borrow` → (diff, borrow-out).
+/// Borrow-out is `(!x & y) | (!(x^y) & borrow)`, built with `AndNot`
+/// so the optimizer's canonicalization keeps the NOT count minimal.
+fn full_sub(
+    b: &mut ExprBuilder,
+    x: ExprId,
+    y: ExprId,
+    borrow: Option<ExprId>,
+) -> (ExprId, ExprId) {
+    let t = b.xor(x, y);
+    match borrow {
+        None => (t, b.and_not(y, x)),
+        Some(br) => {
+            let d = b.xor(t, br);
+            let g = b.and_not(y, x); // y & !x
+            let p = b.and_not(br, t); // br & !(x^y)
+            (d, b.or(g, p))
+        }
+    }
+}
+
+/// W-bit borrow-chain subtraction, LSB first: (difference bits,
+/// borrow-out). The borrow-out IS the unsigned `a < c` predicate.
+pub fn ripple_sub(
+    b: &mut ExprBuilder,
+    a: &[ExprId],
+    c: &[ExprId],
+) -> (Vec<ExprId>, ExprId) {
+    assert!(!a.is_empty() && a.len() == c.len(), "operand width mismatch");
+    let mut borrow: Option<ExprId> = None;
+    let mut diff = Vec::with_capacity(a.len());
+    for (&x, &y) in a.iter().zip(c) {
+        let (d, bo) = full_sub(b, x, y, borrow);
+        diff.push(d);
+        borrow = Some(bo);
+    }
+    (diff, borrow.expect("non-empty operands"))
+}
+
+/// `a == c`: AND over per-bit XNORs.
+pub fn equal(b: &mut ExprBuilder, a: &[ExprId], c: &[ExprId]) -> ExprId {
+    assert!(!a.is_empty() && a.len() == c.len(), "operand width mismatch");
+    let xn: Vec<ExprId> = a
+        .iter()
+        .zip(c)
+        .map(|(&x, &y)| {
+            let t = b.xor(x, y);
+            b.not(t)
+        })
+        .collect();
+    b.all_and(&xn)
+}
+
+/// Bit-wise select: `m ? t : f` per lane — `(t & m) | (f & !m)`. The
+/// `!m` is shared across every output bit by CSE.
+pub fn select(
+    b: &mut ExprBuilder,
+    m: ExprId,
+    t: &[ExprId],
+    f: &[ExprId],
+) -> Vec<ExprId> {
+    assert_eq!(t.len(), f.len(), "select arm width mismatch");
+    t.iter()
+        .zip(f)
+        .map(|(&x, &y)| {
+            let p = b.and(x, m);
+            let q = b.and_not(y, m);
+            b.or(p, q)
+        })
+        .collect()
+}
+
+/// Widening addition of two little-endian bit numbers of possibly
+/// different widths; the result carries one extra bit.
+pub fn add_widen(b: &mut ExprBuilder, x: &[ExprId], y: &[ExprId]) -> Vec<ExprId> {
+    let n = x.len().max(y.len());
+    assert!(n >= 1, "empty addends");
+    let mut out = Vec::with_capacity(n + 1);
+    let mut carry: Option<ExprId> = None;
+    for i in 0..n {
+        let (s, co) = match (x.get(i).copied(), y.get(i).copied(), carry) {
+            (Some(p), Some(q), c) => {
+                let (s, co) = full_add(b, p, q, c);
+                (s, Some(co))
+            }
+            (Some(p), None, Some(c)) | (None, Some(p), Some(c)) => {
+                let s = b.xor(p, c);
+                (s, Some(b.and(p, c)))
+            }
+            (Some(p), None, None) | (None, Some(p), None) => (p, None),
+            (None, None, _) => unreachable!("i < max(len) has a bit"),
+        };
+        out.push(s);
+        carry = co;
+    }
+    if let Some(c) = carry {
+        out.push(c);
+    }
+    out
+}
+
+/// Per-element popcount: a balanced tree of widening adds over the W
+/// input bits — the "tree reduction" lowered entirely onto the
+/// substrate. Output width is [`popcount_width`].
+pub fn popcount_tree(b: &mut ExprBuilder, bits: &[ExprId]) -> Vec<ExprId> {
+    assert!(!bits.is_empty(), "popcount of nothing");
+    let mut nums: Vec<Vec<ExprId>> = bits.iter().map(|&x| vec![x]).collect();
+    while nums.len() > 1 {
+        let mut next = Vec::with_capacity(nums.len().div_ceil(2));
+        for pair in nums.chunks(2) {
+            if let [x, y] = pair {
+                next.push(add_widen(b, x, y));
+            } else {
+                next.push(pair[0].clone());
+            }
+        }
+        nums = next;
+    }
+    nums.pop().expect("one number remains")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Evaluate `m` on one element packed into single-byte planes:
+    /// plane `w`'s byte is 0xFF when bit `w` of the operand is set.
+    /// Returns the outputs re-packed into a u64.
+    fn eval_elem(m: &MultiExpr, inputs: &[u64], width: u32) -> u64 {
+        let mut leaves: Vec<Vec<u8>> = Vec::new();
+        for &v in inputs {
+            for w in 0..width {
+                leaves.push(vec![if (v >> w) & 1 == 1 { 0xFF } else { 0x00 }]);
+            }
+        }
+        // pad to the leaf count the program expects (mask programs
+        // append the predicate plane)
+        while leaves.len() < m.n_leaves() {
+            leaves.push(vec![0xFF]);
+        }
+        let refs: Vec<&[u8]> = leaves.iter().map(|v| v.as_slice()).collect();
+        let outs = m.eval_bytes(&refs, 1).unwrap();
+        let mut packed = 0u64;
+        for (w, o) in outs.iter().enumerate() {
+            assert!(o[0] == 0x00 || o[0] == 0xFF, "plane {w} not saturated");
+            if o[0] == 0xFF {
+                packed |= 1 << w;
+            }
+        }
+        packed
+    }
+
+    #[test]
+    fn popcount_width_matches_tree_shape() {
+        assert_eq!(popcount_width(1), 1);
+        assert_eq!(popcount_width(2), 2);
+        assert_eq!(popcount_width(4), 3);
+        assert_eq!(popcount_width(8), 4);
+        assert_eq!(popcount_width(16), 5);
+        // ragged widths may carry a provably-zero top bit
+        assert!(popcount_width(3) >= 2);
+        assert!(popcount_width(5) >= 3);
+    }
+
+    #[test]
+    fn out_widths_are_consistent() {
+        for op in ArithOp::ALL {
+            for w in [1u32, 4, 8, 16] {
+                let m = kernel(op, w);
+                assert_eq!(
+                    m.n_outputs() as u32,
+                    op.out_width(w),
+                    "{} width {w}",
+                    op.name()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn kernels_match_numeric_reference_exhaustively_at_width_4() {
+        for op in ArithOp::ALL {
+            let m = kernel(op, 4);
+            for a in 0u64..16 {
+                if !op.is_binary() {
+                    let got = eval_elem(&m, &[a], 4);
+                    assert_eq!(
+                        got,
+                        reference(op, 4, a, 0),
+                        "{}({a})",
+                        op.name()
+                    );
+                    continue;
+                }
+                for c in 0u64..16 {
+                    let got = eval_elem(&m, &[a, c], 4);
+                    assert_eq!(
+                        got,
+                        reference(op, 4, a, c),
+                        "{}({a}, {c})",
+                        op.name()
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn const_kernels_match_and_fold() {
+        use crate::pud::compiler::compile_multi;
+        for op in [ArithOp::CmpLt, ArithOp::CmpEq, ArithOp::Add] {
+            for rhs in [0u64, 1, 7, 8, 15] {
+                let m = kernel_const(op, 4, rhs);
+                for a in 0u64..16 {
+                    assert_eq!(
+                        eval_elem(&m, &[a], 4),
+                        reference(op, 4, a, rhs),
+                        "{}({a}, const {rhs})",
+                        op.name()
+                    );
+                }
+            }
+        }
+        // constant folding must shrink the program vs the leaf kernel
+        let free = compile_multi(&kernel(ArithOp::CmpLt, 8));
+        let fixed = compile_multi(&kernel_const(ArithOp::CmpLt, 8, 128));
+        assert!(
+            fixed.stats.ops < free.stats.ops,
+            "const threshold must fold ({} vs {})",
+            fixed.stats.ops,
+            free.stats.ops
+        );
+    }
+
+    #[test]
+    fn wider_kernels_match_on_random_operands() {
+        use crate::util::rng::Pcg64;
+        let mut rng = Pcg64::new(0xA217);
+        for w in [8u32, 16] {
+            for op in ArithOp::ALL {
+                let m = kernel(op, w);
+                for _ in 0..16 {
+                    let a = rng.next_u64() & width_mask(w);
+                    let c = rng.next_u64() & width_mask(w);
+                    let got = if op.is_binary() {
+                        eval_elem(&m, &[a, c], w)
+                    } else {
+                        eval_elem(&m, &[a], w)
+                    };
+                    assert_eq!(
+                        got,
+                        reference(op, w, a, c),
+                        "{}({a}, {c}) at width {w}",
+                        op.name()
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn mask_planes_ands_every_plane() {
+        let m = mask_planes(4);
+        assert_eq!(m.n_outputs(), 4);
+        assert_eq!(m.n_leaves(), 5);
+        let planes: Vec<Vec<u8>> =
+            vec![vec![0b1010], vec![0b1100], vec![0b1111], vec![0b0001]];
+        let mask = vec![0b0110u8];
+        let mut refs: Vec<&[u8]> = planes.iter().map(|v| v.as_slice()).collect();
+        refs.push(&mask);
+        let outs = m.eval_bytes(&refs, 1).unwrap();
+        for (w, o) in outs.iter().enumerate() {
+            assert_eq!(o[0], planes[w][0] & mask[0], "plane {w}");
+        }
+    }
+
+    #[test]
+    fn add_kernel_shares_one_carry_chain() {
+        use crate::pud::compiler::compile_multi;
+        let c = compile_multi(&kernel(ArithOp::Add, 8));
+        // a naive per-output lowering would recompute the carry chain
+        // per bit (O(W^2) gates); the shared DAG stays linear in W:
+        // 5 gates per full adder, 2 for the half adder
+        assert!(
+            c.stats.ops <= 8 * 6,
+            "add(8) must reuse the carry chain, got {} ops",
+            c.stats.ops
+        );
+        assert_eq!(c.n_outputs(), 8);
+    }
+}

@@ -1,0 +1,243 @@
+//! Vertical (bit-transposed) data layout: W-bit integers stored as W
+//! bit-plane rows.
+//!
+//! Bit-serial PUD arithmetic operates on *bit-planes*: plane `w` holds
+//! bit `w` of every element, so one bulk AND over two planes processes
+//! the whole column's bit `w` in a single command sequence. A
+//! [`VerticalLayout`] owns the W plane buffers of one column,
+//! allocated through the normal allocator interface with
+//! `pim_alloc_align` hints so all planes of all operands co-locate in
+//! one subarray — exactly the placement the PUMA allocator exists to
+//! produce and the baselines cannot.
+//!
+//! The bit convention matches `workloads::filter`'s bitmaps: element
+//! `i` lives at byte `i / 8`, bit `i % 8` (LSB first) of each plane.
+//! [`transpose`] / [`untranspose`] are pure functions so property
+//! tests can round-trip them without booting a system.
+
+use anyhow::{ensure, Result};
+
+use crate::alloc::traits::Allocator;
+use crate::coordinator::system::System;
+use crate::os::process::Pid;
+
+use super::kernels::width_mask;
+
+/// Transpose `values` (each at most `width` bits) into `width`
+/// bit-plane byte buffers, LSB plane first.
+pub fn transpose(values: &[u64], width: u32) -> Vec<Vec<u8>> {
+    let len = values.len().div_ceil(8);
+    let mut planes = vec![vec![0u8; len]; width as usize];
+    for (i, &v) in values.iter().enumerate() {
+        for (w, plane) in planes.iter_mut().enumerate() {
+            if (v >> w) & 1 == 1 {
+                plane[i / 8] |= 1 << (i % 8);
+            }
+        }
+    }
+    planes
+}
+
+/// Inverse of [`transpose`]: rebuild `elems` values from bit-planes
+/// (`planes[w]` is bit `w`). Plane bytes past `elems` bits are
+/// ignored.
+pub fn untranspose(planes: &[Vec<u8>], elems: usize) -> Vec<u64> {
+    let mut values = vec![0u64; elems];
+    for (w, plane) in planes.iter().enumerate() {
+        for (i, v) in values.iter_mut().enumerate() {
+            if (plane[i / 8] >> (i % 8)) & 1 == 1 {
+                *v |= 1 << w;
+            }
+        }
+    }
+    values
+}
+
+/// Set bits among the first `elems` bit positions of `bits` — a
+/// padding-safe popcount (the final byte's spare bits can be set by
+/// kernels whose padding-lane inputs are all-zero, e.g. `0 < T`).
+pub fn popcount_live(bits: &[u8], elems: usize) -> u64 {
+    let mut total: u64 = bits.iter().map(|b| b.count_ones() as u64).sum();
+    let pad = bits.len() as u64 * 8 - elems as u64;
+    if pad > 0 {
+        let last = *bits.last().expect("pad > 0 implies a final byte");
+        let pad_mask = 0xFFu8 << (8 - pad as u32);
+        total -= (last & pad_mask).count_ones() as u64;
+    }
+    total
+}
+
+/// A column of `elems` `width`-bit integers stored as `width` bit-plane
+/// buffers of `plane_len` bytes each.
+#[derive(Debug)]
+pub struct VerticalLayout {
+    width: u32,
+    elems: usize,
+    plane_len: u64,
+    planes: Vec<u64>,
+}
+
+impl VerticalLayout {
+    /// Allocate the planes with `alloc`: the first through the plain
+    /// path, the rest hint-aligned to it (the paper's `pim_alloc` /
+    /// `pim_alloc_align` protocol; baselines ignore the hint).
+    pub fn alloc(
+        sys: &mut System,
+        alloc: &mut dyn Allocator,
+        pid: Pid,
+        width: u32,
+        elems: usize,
+    ) -> Result<Self> {
+        ensure!((1..=64).contains(&width), "width {width} out of range");
+        ensure!(elems > 0, "empty column");
+        let plane_len = elems.div_ceil(8) as u64;
+        let first = sys.alloc(alloc, pid, plane_len)?;
+        let mut planes = vec![first];
+        for _ in 1..width {
+            planes.push(sys.alloc_align(alloc, pid, plane_len, first)?);
+        }
+        Ok(Self {
+            width,
+            elems,
+            plane_len,
+            planes,
+        })
+    }
+
+    /// Allocate with every plane hint-aligned to `hint` — used for the
+    /// second operand and the destination so the whole kernel lands in
+    /// the first operand's subarray.
+    pub fn alloc_with_hint(
+        sys: &mut System,
+        alloc: &mut dyn Allocator,
+        pid: Pid,
+        width: u32,
+        elems: usize,
+        hint: u64,
+    ) -> Result<Self> {
+        ensure!((1..=64).contains(&width), "width {width} out of range");
+        ensure!(elems > 0, "empty column");
+        let plane_len = elems.div_ceil(8) as u64;
+        let mut planes = Vec::with_capacity(width as usize);
+        for _ in 0..width {
+            planes.push(sys.alloc_align(alloc, pid, plane_len, hint)?);
+        }
+        Ok(Self {
+            width,
+            elems,
+            plane_len,
+            planes,
+        })
+    }
+
+    pub fn width(&self) -> u32 {
+        self.width
+    }
+
+    pub fn elems(&self) -> usize {
+        self.elems
+    }
+
+    /// Bytes per plane buffer.
+    pub fn plane_len(&self) -> u64 {
+        self.plane_len
+    }
+
+    /// Plane VAs, LSB plane first.
+    pub fn planes(&self) -> &[u64] {
+        &self.planes
+    }
+
+    /// The co-location hint for further allocations (the first plane).
+    pub fn hint(&self) -> u64 {
+        self.planes[0]
+    }
+
+    /// Transpose `values` into the planes through the process's
+    /// virtual mappings. Every value must fit in `width` bits.
+    pub fn store(&self, sys: &mut System, pid: Pid, values: &[u64]) -> Result<()> {
+        ensure!(
+            values.len() == self.elems,
+            "store of {} value(s) into a {}-element column",
+            values.len(),
+            self.elems
+        );
+        let mask = width_mask(self.width);
+        for (i, v) in values.iter().enumerate() {
+            ensure!(
+                (v & !mask) == 0,
+                "value {v:#x} at index {i} exceeds {} bits",
+                self.width
+            );
+        }
+        for (plane, bytes) in
+            self.planes.iter().zip(transpose(values, self.width))
+        {
+            sys.write_virt(pid, *plane, &bytes)?;
+        }
+        Ok(())
+    }
+
+    /// Read the planes back and untranspose into values.
+    pub fn load(&self, sys: &mut System, pid: Pid) -> Result<Vec<u64>> {
+        let mut planes = Vec::with_capacity(self.planes.len());
+        for &va in &self.planes {
+            planes.push(sys.read_virt(pid, va, self.plane_len)?);
+        }
+        Ok(untranspose(&planes, self.elems))
+    }
+
+    /// Return every plane to `alloc`.
+    pub fn free(
+        &self,
+        sys: &mut System,
+        alloc: &mut dyn Allocator,
+        pid: Pid,
+    ) -> Result<()> {
+        for &va in &self.planes {
+            sys.free(alloc, pid, va)?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn transpose_roundtrips() {
+        let values: Vec<u64> = (0..100).map(|i| (i * 37) % 256).collect();
+        let planes = transpose(&values, 8);
+        assert_eq!(planes.len(), 8);
+        assert_eq!(planes[0].len(), 13); // ceil(100 / 8)
+        assert_eq!(untranspose(&planes, 100), values);
+    }
+
+    #[test]
+    fn transpose_bit_convention_is_lsb_first() {
+        // element 0 → byte 0 bit 0; element 9 → byte 1 bit 1
+        let mut values = vec![0u64; 10];
+        values[0] = 0b01; // bit 0 set
+        values[9] = 0b10; // bit 1 set
+        let planes = transpose(&values, 2);
+        assert_eq!(planes[0][0], 0b0000_0001);
+        assert_eq!(planes[0][1], 0);
+        assert_eq!(planes[1][1], 0b0000_0010);
+    }
+
+    #[test]
+    fn popcount_live_excludes_padding() {
+        assert_eq!(popcount_live(&[0xFF, 0xFF], 16), 16);
+        assert_eq!(popcount_live(&[0xFF, 0xFF], 13), 13);
+        assert_eq!(popcount_live(&[0x00, 0xE0], 13), 0);
+        assert_eq!(popcount_live(&[0x00, 0x1F], 13), 5);
+    }
+
+    #[test]
+    fn untranspose_ignores_padding_bits() {
+        let mut planes = transpose(&[1u64, 1, 1], 1);
+        planes[0][0] |= 0xF8; // junk in the padding lanes
+        assert_eq!(untranspose(&planes, 3), vec![1, 1, 1]);
+    }
+}

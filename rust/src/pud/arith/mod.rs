@@ -1,0 +1,105 @@
+//! `pud::arith` — bit-serial vertical arithmetic on the Ambit
+//! substrate (DESIGN.md §10).
+//!
+//! The Boolean compiler (PR 3) lifted the substrate from single bulk
+//! ops to whole predicate expressions; this layer lifts it from
+//! single-bit predicates to multi-bit integers, the composition
+//! MIMDRAM and Proteus build their analytics kernels on:
+//!
+//! * [`layout`] — [`VerticalLayout`]: W-bit integers transposed into W
+//!   bit-plane rows, allocated through `pim_alloc_align` hints so all
+//!   operand planes co-locate in one subarray.
+//! * [`kernels`] — ripple-carry [`ArithOp::Add`]/[`ArithOp::Sub`],
+//!   predicate [`ArithOp::CmpLt`]/[`ArithOp::CmpEq`] (mask outputs
+//!   usable by `workloads::filter`), select-based
+//!   [`ArithOp::Min`]/[`ArithOp::Max`], and the widening adder-tree
+//!   [`ArithOp::Popcount`] — each expanded into the compiler's `Expr`
+//!   DAG (a full adder is XOR/AND/OR over per-bit leaves) and frozen
+//!   as a multi-output [`MultiExpr`](crate::pud::compiler::MultiExpr),
+//!   so CSE (one shared carry chain), scratch register allocation, and
+//!   single-`submit_batch` emission come for free.
+//!
+//! Execution goes through
+//! [`System::run_arith`](crate::coordinator::system::System::run_arith)
+//! (and `run_multi`/`arith_sum`); `workloads::analytics` runs the
+//! filter-then-sum aggregate on top and `puma analytics` reports it.
+
+pub mod kernels;
+pub mod layout;
+
+pub use kernels::{
+    kernel, kernel_const, mask_planes, popcount_width, reference, width_mask,
+    ArithOp, MAX_WIDTH,
+};
+pub use layout::{popcount_live, transpose, untranspose, VerticalLayout};
+
+use crate::dram::energy::EnergyParams;
+use crate::dram::timing::TimingParams;
+use crate::pud::compiler::{compile_multi, CompiledMulti};
+use crate::pud::isa::{batch_cost, BatchCost};
+
+/// Compile the `op` kernel for `width`-bit operands (compile once,
+/// bind and execute per column).
+pub fn compile_kernel(op: ArithOp, width: u32) -> CompiledMulti {
+    compile_multi(&kernel(op, width))
+}
+
+/// Analytic in-DRAM cost of one fully-PUD execution of the `op`
+/// kernel over planes of `plane_len` bytes — the W-bit op-cost
+/// accounting (`pud::isa::batch_cost`) the reports print next to
+/// throughput. Binds the compiled program to synthetic addresses;
+/// costs depend only on ops and lengths, not placement.
+pub fn kernel_cost(
+    op: ArithOp,
+    width: u32,
+    plane_len: u64,
+    row_bytes: u64,
+    t: &TimingParams,
+    e: &EnergyParams,
+) -> BatchCost {
+    let c = compile_kernel(op, width);
+    let step = plane_len.max(1);
+    let base = 0x1000_0000u64;
+    let operands: Vec<u64> =
+        (0..c.n_leaves() as u64).map(|i| base + i * step).collect();
+    let dsts: Vec<u64> = (0..c.n_outputs() as u64)
+        .map(|i| base + (0x1000 + i) * step)
+        .collect();
+    let scratch: Vec<u64> = (0..c.scratch_needed() as u64)
+        .map(|i| base + (0x2000 + i) * step)
+        .collect();
+    let reqs = c
+        .emit(&operands, &dsts, plane_len, &scratch)
+        .expect("synthetic binding is well-formed");
+    batch_cost(&reqs, row_bytes, t, e)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kernel_cost_scales_with_width() {
+        let t = TimingParams::default();
+        let e = EnergyParams::default();
+        let row = 8192u64;
+        let c8 = kernel_cost(ArithOp::Add, 8, row, row, &t, &e);
+        let c16 = kernel_cost(ArithOp::Add, 16, row, row, &t, &e);
+        assert!(c8.aaps > 0 && c8.tras > 0);
+        // ripple-carry adds are linear in W: twice the width costs
+        // roughly (not exactly: one half adder amortizes) twice the AAPs
+        assert!(c16.aaps > c8.aaps && c16.aaps < 3 * c8.aaps);
+        assert!(c16.pud_ns > c8.pud_ns);
+        // partial-row planes still price the full row
+        let tail = kernel_cost(ArithOp::Add, 8, row + 1, row, &t, &e);
+        assert_eq!(tail.rows, 2 * c8.rows);
+    }
+
+    #[test]
+    fn compile_kernel_matches_kernel_shape() {
+        for op in ArithOp::ALL {
+            let c = compile_kernel(op, 8);
+            assert_eq!(c.n_outputs() as u32, op.out_width(8), "{}", op.name());
+        }
+    }
+}

@@ -3,8 +3,10 @@
 //!
 //! Expressions are built with [`ExprBuilder`] (an arena: children are
 //! always created before their parents, so node ids double as a
-//! topological order) and frozen into an [`Expr`]. The IR carries a
-//! scalar reference evaluator ([`Expr::eval_bytes`]) — the oracle the
+//! topological order) and frozen into an [`Expr`] — or, for programs
+//! with several outputs (the bit-planes of a vertical-arithmetic
+//! kernel), a [`MultiExpr`]. Both carry a scalar reference evaluator
+//! ([`Expr::eval_bytes`] / [`MultiExpr::eval_bytes`]) — the oracle the
 //! property tests and the workloads verify compiled PUD execution
 //! against, byte for byte.
 //!
@@ -143,6 +145,159 @@ impl ExprBuilder {
             root,
         }
     }
+
+    /// Freeze the arena as a multi-output program: `roots[k]` is the
+    /// `k`-th output (e.g. the `k`-th result bit-plane of an arithmetic
+    /// kernel). Roots may repeat and may be leaves; `roots` must be
+    /// non-empty.
+    pub fn build_multi(self, roots: Vec<ExprId>) -> MultiExpr {
+        assert!(!roots.is_empty(), "a program needs at least one output");
+        for r in &roots {
+            assert!(r.idx() < self.nodes.len(), "root {r:?} out of range");
+        }
+        MultiExpr {
+            nodes: self.nodes,
+            roots,
+        }
+    }
+}
+
+/// Reachability mask over an arena from a set of roots (shared by
+/// [`Expr`], [`MultiExpr`], the optimizer, and the register allocator).
+pub(crate) fn reachable_from(nodes: &[Node], roots: &[ExprId]) -> Vec<bool> {
+    let mut mark = vec![false; nodes.len()];
+    let mut stack: Vec<ExprId> = roots.to_vec();
+    while let Some(id) = stack.pop() {
+        if std::mem::replace(&mut mark[id.idx()], true) {
+            continue;
+        }
+        stack.extend(nodes[id.idx()].children());
+    }
+    mark
+}
+
+/// One past the highest reachable leaf index (0 if no leaves).
+fn n_leaves_from(nodes: &[Node], mark: &[bool]) -> usize {
+    nodes
+        .iter()
+        .zip(mark)
+        .filter_map(|(n, m)| match (n, m) {
+            (Node::Leaf(i), true) => Some(i + 1),
+            _ => None,
+        })
+        .max()
+        .unwrap_or(0)
+}
+
+fn check_operands(n_leaves: usize, leaves: &[&[u8]], len: usize) -> Result<()> {
+    ensure!(
+        n_leaves <= leaves.len(),
+        "expression reads {} operand(s), {} supplied",
+        n_leaves,
+        leaves.len()
+    );
+    for (i, l) in leaves.iter().enumerate() {
+        ensure!(l.len() == len, "operand {i} is {} bytes, want {len}", l.len());
+    }
+    Ok(())
+}
+
+/// Scalar evaluation of every reachable node over byte buffers; the
+/// value table is indexed by arena id (unreachable entries stay
+/// `None`).
+fn eval_nodes(
+    nodes: &[Node],
+    mark: &[bool],
+    leaves: &[&[u8]],
+    len: usize,
+) -> Vec<Option<Vec<u8>>> {
+    let mut vals: Vec<Option<Vec<u8>>> = vec![None; nodes.len()];
+    for (idx, node) in nodes.iter().enumerate() {
+        if !mark[idx] {
+            continue;
+        }
+        let get = |id: &ExprId, vals: &[Option<Vec<u8>>]| -> Vec<u8> {
+            vals[id.idx()].clone().expect("children precede parents")
+        };
+        let v = match node {
+            Node::Leaf(i) => leaves[*i].to_vec(),
+            Node::Const(false) => vec![0u8; len],
+            Node::Const(true) => vec![0xFFu8; len],
+            Node::Not(a) => get(a, &vals).iter().map(|x| !x).collect(),
+            Node::And(a, b) => zip_bytes(&get(a, &vals), &get(b, &vals), |x, y| x & y),
+            Node::Or(a, b) => zip_bytes(&get(a, &vals), &get(b, &vals), |x, y| x | y),
+            Node::Xor(a, b) => zip_bytes(&get(a, &vals), &get(b, &vals), |x, y| x ^ y),
+            Node::AndNot(a, b) => {
+                zip_bytes(&get(a, &vals), &get(b, &vals), |x, y| x & !y)
+            }
+        };
+        vals[idx] = Some(v);
+    }
+    vals
+}
+
+/// A frozen DAG with several designated outputs. This is the program
+/// form the vertical-arithmetic layer compiles: one shared carry/borrow
+/// chain, W output bit-planes, all emitted as one batch. Shares the
+/// arena, [`Node`] type, and builder with [`Expr`].
+#[derive(Debug, Clone)]
+pub struct MultiExpr {
+    nodes: Vec<Node>,
+    roots: Vec<ExprId>,
+}
+
+impl MultiExpr {
+    /// Rebuild from raw parts (used by the optimizer).
+    pub(crate) fn from_parts(nodes: Vec<Node>, roots: Vec<ExprId>) -> Self {
+        debug_assert!(roots.iter().all(|r| r.idx() < nodes.len()));
+        debug_assert!(!roots.is_empty());
+        Self { nodes, roots }
+    }
+
+    pub fn nodes(&self) -> &[Node] {
+        &self.nodes
+    }
+
+    pub fn node(&self, id: ExprId) -> Node {
+        self.nodes[id.idx()]
+    }
+
+    /// The outputs, in program order.
+    pub fn roots(&self) -> &[ExprId] {
+        &self.roots
+    }
+
+    pub fn n_outputs(&self) -> usize {
+        self.roots.len()
+    }
+
+    /// Reachability mask from all roots.
+    pub fn reachable(&self) -> Vec<bool> {
+        reachable_from(&self.nodes, &self.roots)
+    }
+
+    /// Number of distinct operand buffers the program reads.
+    pub fn n_leaves(&self) -> usize {
+        n_leaves_from(&self.nodes, &self.reachable())
+    }
+
+    /// Reachable node count.
+    pub fn live_nodes(&self) -> usize {
+        self.reachable().iter().filter(|m| **m).count()
+    }
+
+    /// Scalar reference evaluation: one byte buffer per output, in
+    /// root order — the oracle for compiled multi-output execution.
+    pub fn eval_bytes(&self, leaves: &[&[u8]], len: usize) -> Result<Vec<Vec<u8>>> {
+        check_operands(self.n_leaves(), leaves, len)?;
+        let mark = self.reachable();
+        let vals = eval_nodes(&self.nodes, &mark, leaves, len);
+        Ok(self
+            .roots
+            .iter()
+            .map(|r| vals[r.idx()].clone().expect("roots are reachable"))
+            .collect())
+    }
 }
 
 impl Expr {
@@ -167,31 +322,14 @@ impl Expr {
     /// Reachability mask from the root (dead arena nodes are skipped
     /// by every consumer).
     pub fn reachable(&self) -> Vec<bool> {
-        let mut mark = vec![false; self.nodes.len()];
-        let mut stack = vec![self.root];
-        while let Some(id) = stack.pop() {
-            if std::mem::replace(&mut mark[id.idx()], true) {
-                continue;
-            }
-            stack.extend(self.nodes[id.idx()].children());
-        }
-        mark
+        reachable_from(&self.nodes, &[self.root])
     }
 
     /// Number of distinct operand buffers the expression needs: one
     /// past the highest reachable leaf index (0 for constant-only
     /// expressions).
     pub fn n_leaves(&self) -> usize {
-        let mark = self.reachable();
-        self.nodes
-            .iter()
-            .zip(&mark)
-            .filter_map(|(n, m)| match (n, m) {
-                (Node::Leaf(i), true) => Some(i + 1),
-                _ => None,
-            })
-            .max()
-            .unwrap_or(0)
+        n_leaves_from(&self.nodes, &self.reachable())
     }
 
     /// Reachable node count (the DAG's size; dead arena entries are
@@ -215,38 +353,9 @@ impl Expr {
     /// compiled PUD execution. `leaves[i]` backs `Leaf(i)`; all
     /// buffers (and the result) are `len` bytes.
     pub fn eval_bytes(&self, leaves: &[&[u8]], len: usize) -> Result<Vec<u8>> {
-        ensure!(
-            self.n_leaves() <= leaves.len(),
-            "expression reads {} operand(s), {} supplied",
-            self.n_leaves(),
-            leaves.len()
-        );
-        for (i, l) in leaves.iter().enumerate() {
-            ensure!(l.len() == len, "operand {i} is {} bytes, want {len}", l.len());
-        }
+        check_operands(self.n_leaves(), leaves, len)?;
         let mark = self.reachable();
-        let mut vals: Vec<Option<Vec<u8>>> = vec![None; self.nodes.len()];
-        for (idx, node) in self.nodes.iter().enumerate() {
-            if !mark[idx] {
-                continue;
-            }
-            let get = |id: &ExprId, vals: &[Option<Vec<u8>>]| -> Vec<u8> {
-                vals[id.idx()].clone().expect("children precede parents")
-            };
-            let v = match node {
-                Node::Leaf(i) => leaves[*i].to_vec(),
-                Node::Const(false) => vec![0u8; len],
-                Node::Const(true) => vec![0xFFu8; len],
-                Node::Not(a) => get(a, &vals).iter().map(|x| !x).collect(),
-                Node::And(a, b) => zip_bytes(&get(a, &vals), &get(b, &vals), |x, y| x & y),
-                Node::Or(a, b) => zip_bytes(&get(a, &vals), &get(b, &vals), |x, y| x | y),
-                Node::Xor(a, b) => zip_bytes(&get(a, &vals), &get(b, &vals), |x, y| x ^ y),
-                Node::AndNot(a, b) => {
-                    zip_bytes(&get(a, &vals), &get(b, &vals), |x, y| x & !y)
-                }
-            };
-            vals[idx] = Some(v);
-        }
+        let mut vals = eval_nodes(&self.nodes, &mark, leaves, len);
         Ok(vals[self.root.idx()].take().expect("root is reachable"))
     }
 
@@ -379,6 +488,48 @@ mod tests {
             e.eval_bytes(&[&[0u8], &[0u8, 0u8]], 1).is_err(),
             "length mismatch"
         );
+    }
+
+    #[test]
+    fn multi_expr_evaluates_every_root() {
+        // full adder over three 1-bit planes: sum + carry, one arena
+        let mut b = ExprBuilder::new();
+        let x = b.leaf(0);
+        let y = b.leaf(1);
+        let c = b.leaf(2);
+        let t = b.xor(x, y);
+        let s = b.xor(t, c);
+        let g = b.and(x, y);
+        let p = b.and(t, c);
+        let co = b.or(g, p);
+        let m = b.build_multi(vec![s, co]);
+        assert_eq!(m.n_outputs(), 2);
+        assert_eq!(m.n_leaves(), 3);
+        let vx = [0b1100u8];
+        let vy = [0b1010u8];
+        let vc = [0b1000u8];
+        let outs = m.eval_bytes(&[&vx, &vy, &vc], 1).unwrap();
+        assert_eq!(outs[0], vec![vx[0] ^ vy[0] ^ vc[0]]);
+        assert_eq!(
+            outs[1],
+            vec![(vx[0] & vy[0]) | ((vx[0] ^ vy[0]) & vc[0])]
+        );
+    }
+
+    #[test]
+    fn multi_expr_allows_leaf_and_repeated_roots() {
+        let mut b = ExprBuilder::new();
+        let l0 = b.leaf(0);
+        let l1 = b.leaf(1);
+        let a = b.and(l0, l1);
+        let m = b.build_multi(vec![a, l0, a]);
+        let v0 = [0xF0u8];
+        let v1 = [0x3Cu8];
+        let outs = m.eval_bytes(&[&v0, &v1], 1).unwrap();
+        assert_eq!(outs[0], vec![0xF0 & 0x3C]);
+        assert_eq!(outs[1], v0.to_vec());
+        assert_eq!(outs[2], outs[0]);
+        assert_eq!(m.live_nodes(), 3);
     }
 
     #[test]

@@ -13,12 +13,15 @@
 //! overlap across banks, dependent chains serialize.
 
 use anyhow::{ensure, Result};
+use rustc_hash::FxHashMap;
 
 use crate::pud::isa::{BulkRequest, PudOp};
 
-use super::expr::{Expr, ExprId, Node};
-use super::opt::optimize;
-use super::regalloc::{allocate, emission_order, Assignment};
+use super::expr::{Expr, ExprId, MultiExpr, Node};
+use super::opt::{optimize, optimize_multi};
+use super::regalloc::{
+    allocate, allocate_multi, emission_order, emission_order_multi, Assignment,
+};
 
 /// Preferred resident size of the compiler's scratch pool; expressions
 /// needing more lease extra rows (counted as spills).
@@ -63,6 +66,76 @@ pub fn compile(expr: &Expr) -> Compiled {
     compile_with_pool(expr, DEFAULT_SCRATCH_POOL)
 }
 
+/// Requests (total, NOTs) one emitted non-leaf node expands to.
+fn node_ops(n: Node) -> (usize, usize) {
+    match n {
+        Node::Leaf(_) => unreachable!("leaves are not emitted"),
+        Node::Const(true) => (2, 1), // Zero + in-place NOT
+        Node::Const(false) => (1, 0),
+        Node::Not(_) => (1, 1),
+        Node::AndNot(..) => (2, 1),
+        Node::And(..) | Node::Or(..) | Node::Xor(..) => (1, 0),
+    }
+}
+
+/// Append the request(s) computing `node` into `p`, with operand
+/// placement `place`. Shared by the single- and multi-output emitters
+/// so the two lowerings cannot drift apart.
+fn push_node_reqs<F: Fn(ExprId) -> u64>(
+    reqs: &mut Vec<BulkRequest>,
+    node: Node,
+    p: u64,
+    place: &F,
+    len: u64,
+) {
+    match node {
+        Node::Leaf(_) => unreachable!("leaves are not emitted"),
+        Node::Const(v) => {
+            reqs.push(BulkRequest::new(PudOp::Zero, p, vec![], len));
+            if v {
+                reqs.push(BulkRequest::new(PudOp::Not, p, vec![p], len));
+            }
+        }
+        Node::Not(a) => {
+            reqs.push(BulkRequest::new(PudOp::Not, p, vec![place(a)], len));
+        }
+        Node::And(a, b) => {
+            reqs.push(BulkRequest::new(
+                PudOp::And,
+                p,
+                vec![place(a), place(b)],
+                len,
+            ));
+        }
+        Node::Or(a, b) => {
+            reqs.push(BulkRequest::new(
+                PudOp::Or,
+                p,
+                vec![place(a), place(b)],
+                len,
+            ));
+        }
+        Node::Xor(a, b) => {
+            reqs.push(BulkRequest::new(
+                PudOp::Xor,
+                p,
+                vec![place(a), place(b)],
+                len,
+            ));
+        }
+        Node::AndNot(a, b) => {
+            // p = !b; p = a & p. Defensive: `compile()` always
+            // optimizes, and the optimizer canonicalizes AndNot to
+            // And(a, Not(b)), so this arm only runs if compilation
+            // ever grows a no-opt path. The register allocator's
+            // matching carve-out guarantees p aliases neither live
+            // operand.
+            reqs.push(BulkRequest::new(PudOp::Not, p, vec![place(b)], len));
+            reqs.push(BulkRequest::new(PudOp::And, p, vec![place(a), p], len));
+        }
+    }
+}
+
 /// Compile with an explicit preferred scratch-pool bound.
 pub fn compile_with_pool(expr: &Expr, pool_limit: usize) -> Compiled {
     let (opt, rep) = optimize(expr);
@@ -70,23 +143,9 @@ pub fn compile_with_pool(expr: &Expr, pool_limit: usize) -> Compiled {
     let assignment = allocate(&opt, &order, pool_limit.max(1));
     let (mut ops, mut not_ops) = (0usize, 0usize);
     for &id in &order {
-        match opt.node(id) {
-            Node::Leaf(_) => unreachable!("leaves are not emitted"),
-            Node::Const(true) => {
-                ops += 2; // Zero + in-place NOT
-                not_ops += 1;
-            }
-            Node::Const(false) => ops += 1,
-            Node::Not(_) => {
-                ops += 1;
-                not_ops += 1;
-            }
-            Node::AndNot(..) => {
-                ops += 2;
-                not_ops += 1;
-            }
-            Node::And(..) | Node::Or(..) | Node::Xor(..) => ops += 1,
-        }
+        let (o, n) = node_ops(opt.node(id));
+        ops += o;
+        not_ops += n;
     }
     if order.is_empty() {
         ops = 1; // leaf root: one RowClone copy
@@ -173,56 +232,190 @@ impl Compiled {
             return Ok(reqs);
         }
         for &id in &self.order {
-            let p = place(id);
+            push_node_reqs(&mut reqs, self.expr.node(id), place(id), &place, len);
+        }
+        debug_assert_eq!(reqs.len(), self.stats.ops);
+        Ok(reqs)
+    }
+}
+
+/// A compiled multi-output program: optimized DAG + emission order +
+/// slot assignment + output ownership, ready to bind any number of
+/// times. This is the program form behind `pud::arith` — a W-bit
+/// kernel's sum/carry chain is one arena, its W result bit-planes are
+/// the roots, and the whole thing is emitted as ONE
+/// `Coordinator::submit_batch`.
+pub struct CompiledMulti {
+    expr: MultiExpr,
+    order: Vec<ExprId>,
+    assignment: Assignment,
+    /// First root index owning each non-leaf root node: that root's
+    /// dst receives the compute; later duplicate roots copy from it.
+    owner: FxHashMap<ExprId, usize>,
+    pub stats: CompileStats,
+}
+
+/// Compile a multi-output program with the default scratch-pool bound.
+pub fn compile_multi(m: &MultiExpr) -> CompiledMulti {
+    compile_multi_with_pool(m, DEFAULT_SCRATCH_POOL)
+}
+
+/// Compile a multi-output program with an explicit preferred
+/// scratch-pool bound.
+pub fn compile_multi_with_pool(m: &MultiExpr, pool_limit: usize) -> CompiledMulti {
+    let (opt, rep) = optimize_multi(m);
+    let order = emission_order_multi(&opt);
+    let assignment = allocate_multi(&opt, &order, pool_limit.max(1));
+    let (mut ops, mut not_ops) = (0usize, 0usize);
+    for &id in &order {
+        let (o, n) = node_ops(opt.node(id));
+        ops += o;
+        not_ops += n;
+    }
+    // outputs that are leaves, or that CSE'd onto an earlier output's
+    // node, cost one RowClone copy each
+    let mut owner: FxHashMap<ExprId, usize> = FxHashMap::default();
+    for (ri, &r) in opt.roots().iter().enumerate() {
+        if matches!(opt.node(r), Node::Leaf(_)) {
+            ops += 1;
+        } else if owner.contains_key(&r) {
+            ops += 1;
+        } else {
+            owner.insert(r, ri);
+        }
+    }
+    let stats = CompileStats {
+        leaves: opt.n_leaves(),
+        nodes_in: rep.nodes_before,
+        nodes_opt: rep.nodes_after,
+        ops,
+        not_ops,
+        scratch_slots: assignment.slots_needed,
+        spills: assignment.spills,
+        cse_hits: rep.cse_hits,
+        folds: rep.folds,
+        demorgans: rep.demorgans,
+    };
+    CompiledMulti {
+        expr: opt,
+        order,
+        assignment,
+        owner,
+        stats,
+    }
+}
+
+impl CompiledMulti {
+    /// The optimized program.
+    pub fn expr(&self) -> &MultiExpr {
+        &self.expr
+    }
+
+    /// Scratch buffers `emit` needs (lease this many before binding).
+    pub fn scratch_needed(&self) -> usize {
+        self.assignment.slots_needed
+    }
+
+    /// Operand buffers the program reads.
+    pub fn n_leaves(&self) -> usize {
+        self.stats.leaves
+    }
+
+    /// Output buffers the program writes.
+    pub fn n_outputs(&self) -> usize {
+        self.expr.n_outputs()
+    }
+
+    /// Bind the program to addresses: `operands[i]` backs `Leaf(i)`,
+    /// output `k` writes `dsts[k]`, intermediates use `scratch` slots.
+    /// All buffers are `len` bytes. The returned batch is in
+    /// topological order and is meant to run as one
+    /// `Coordinator::submit_batch`.
+    ///
+    /// `dsts` must be pairwise distinct and disjoint from both
+    /// `scratch` and `operands`: a root's dst is written at its
+    /// topological position, mid-batch, so a dst aliasing an operand
+    /// would clobber it for every later request that still reads it
+    /// (unlike the single-output `Compiled::emit`, where the root
+    /// write is always the final request).
+    pub fn emit(
+        &self,
+        operands: &[u64],
+        dsts: &[u64],
+        len: u64,
+        scratch: &[u64],
+    ) -> Result<Vec<BulkRequest>> {
+        ensure!(len > 0, "zero-length program operands");
+        ensure!(
+            self.n_leaves() <= operands.len(),
+            "program reads {} operand(s), {} supplied",
+            self.n_leaves(),
+            operands.len()
+        );
+        ensure!(
+            dsts.len() == self.expr.n_outputs(),
+            "program writes {} output(s), {} dst buffer(s) supplied",
+            self.expr.n_outputs(),
+            dsts.len()
+        );
+        ensure!(
+            scratch.len() >= self.assignment.slots_needed,
+            "need {} scratch buffer(s), {} leased",
+            self.assignment.slots_needed,
+            scratch.len()
+        );
+        for (i, d) in dsts.iter().enumerate() {
+            for d2 in &dsts[i + 1..] {
+                ensure!(d != d2, "dst buffer {d:#x} is bound to two outputs");
+            }
+        }
+        for s in &scratch[..self.assignment.slots_needed] {
+            ensure!(
+                !dsts.contains(s),
+                "scratch buffer {s:#x} aliases a dst buffer"
+            );
+        }
+        for d in dsts {
+            ensure!(
+                !operands.contains(d),
+                "dst buffer {d:#x} aliases an operand buffer (dsts are \
+                 written mid-batch)"
+            );
+        }
+        let place = |id: ExprId| -> u64 {
+            if let Some(&ri) = self.owner.get(&id) {
+                return dsts[ri];
+            }
             match self.expr.node(id) {
-                Node::Leaf(_) => unreachable!("leaves are not emitted"),
-                Node::Const(v) => {
-                    reqs.push(BulkRequest::new(PudOp::Zero, p, vec![], len));
-                    if v {
-                        reqs.push(BulkRequest::new(PudOp::Not, p, vec![p], len));
+                Node::Leaf(i) => operands[i],
+                _ => scratch[self.assignment.slot[&id]],
+            }
+        };
+        let mut reqs = Vec::with_capacity(self.stats.ops);
+        for &id in &self.order {
+            push_node_reqs(&mut reqs, self.expr.node(id), place(id), &place, len);
+        }
+        // output copies: leaf outputs read their operand, duplicate
+        // outputs read the owning dst — both stay valid to the end of
+        // the batch (operands are never written, dsts never recycled)
+        for (ri, &r) in self.expr.roots().iter().enumerate() {
+            match self.expr.node(r) {
+                Node::Leaf(i) => reqs.push(BulkRequest::new(
+                    PudOp::Copy,
+                    dsts[ri],
+                    vec![operands[i]],
+                    len,
+                )),
+                _ => {
+                    let own = self.owner[&r];
+                    if own != ri {
+                        reqs.push(BulkRequest::new(
+                            PudOp::Copy,
+                            dsts[ri],
+                            vec![dsts[own]],
+                            len,
+                        ));
                     }
-                }
-                Node::Not(a) => {
-                    reqs.push(BulkRequest::new(PudOp::Not, p, vec![place(a)], len));
-                }
-                Node::And(a, b) => {
-                    reqs.push(BulkRequest::new(
-                        PudOp::And,
-                        p,
-                        vec![place(a), place(b)],
-                        len,
-                    ));
-                }
-                Node::Or(a, b) => {
-                    reqs.push(BulkRequest::new(
-                        PudOp::Or,
-                        p,
-                        vec![place(a), place(b)],
-                        len,
-                    ));
-                }
-                Node::Xor(a, b) => {
-                    reqs.push(BulkRequest::new(
-                        PudOp::Xor,
-                        p,
-                        vec![place(a), place(b)],
-                        len,
-                    ));
-                }
-                Node::AndNot(a, b) => {
-                    // p = !b; p = a & p. Defensive: `compile()` always
-                    // optimizes, and the optimizer canonicalizes
-                    // AndNot to And(a, Not(b)), so this arm only runs
-                    // if compilation ever grows a no-opt path. The
-                    // register allocator's matching carve-out
-                    // guarantees p aliases neither live operand.
-                    reqs.push(BulkRequest::new(PudOp::Not, p, vec![place(b)], len));
-                    reqs.push(BulkRequest::new(
-                        PudOp::And,
-                        p,
-                        vec![place(a), p],
-                        len,
-                    ));
                 }
             }
         }
@@ -368,6 +561,125 @@ mod tests {
             "zero length"
         );
         assert!(c.emit(&[0x1000, 0x2000], 0x5000, 64, &[0x9000]).is_ok());
+    }
+
+    fn check_multi_against_reference(
+        m: &crate::pud::compiler::MultiExpr,
+        seed: u64,
+    ) {
+        let len = 8usize;
+        let n = m.n_leaves();
+        let mut rng = crate::util::rng::Pcg64::new(seed);
+        let mut bufs: FxHashMap<u64, Vec<u8>> = FxHashMap::default();
+        let mut operands = Vec::new();
+        for i in 0..n {
+            let mut v = vec![0u8; len];
+            rng.fill_bytes(&mut v);
+            let va = 0x1000 + i as u64 * 0x100;
+            bufs.insert(va, v);
+            operands.push(va);
+        }
+        let c = compile_multi(m);
+        let scratch: Vec<u64> = (0..c.scratch_needed())
+            .map(|i| 0x9000 + i as u64 * 0x100)
+            .collect();
+        let dsts: Vec<u64> = (0..c.n_outputs())
+            .map(|i| 0x8000_0000 + i as u64 * 0x100)
+            .collect();
+        let reqs = c.emit(&operands, &dsts, len as u64, &scratch).unwrap();
+        assert_eq!(reqs.len(), c.stats.ops);
+        let leaves: Vec<Vec<u8>> =
+            operands.iter().map(|va| bufs[va].clone()).collect();
+        interpret(&reqs, &mut bufs, len);
+        let refs: Vec<&[u8]> = leaves.iter().map(|v| v.as_slice()).collect();
+        let want = m.eval_bytes(&refs, len).unwrap();
+        for (k, d) in dsts.iter().enumerate() {
+            assert_eq!(bufs[d], want[k], "output {k} diverged");
+        }
+        for (va, orig) in operands.iter().zip(&leaves) {
+            assert_eq!(&bufs[va], orig, "operand clobbered");
+        }
+    }
+
+    #[test]
+    fn multi_full_adder_lowers_and_matches() {
+        // one shared carry chain, two outputs (sum, carry)
+        let mut b = ExprBuilder::new();
+        let x = b.leaf(0);
+        let y = b.leaf(1);
+        let cin = b.leaf(2);
+        let t = b.xor(x, y);
+        let s = b.xor(t, cin);
+        let g = b.and(x, y);
+        let p = b.and(t, cin);
+        let co = b.or(g, p);
+        let m = b.build_multi(vec![s, co]);
+        check_multi_against_reference(&m, 21);
+        let c = compile_multi(&m);
+        assert_eq!(c.n_outputs(), 2);
+        assert_eq!(c.n_leaves(), 3);
+        // the shared t = x^y needs scratch; the outputs write dsts
+        assert!(c.scratch_needed() >= 1);
+    }
+
+    #[test]
+    fn multi_leaf_and_duplicate_outputs_lower_to_copies() {
+        let mut b = ExprBuilder::new();
+        let l0 = b.leaf(0);
+        let l1 = b.leaf(1);
+        let a = b.and(l0, l1);
+        let m = b.build_multi(vec![a, l0, a]);
+        check_multi_against_reference(&m, 22);
+        let c = compile_multi(&m);
+        // one AND + two copies (leaf output, duplicate output)
+        assert_eq!(c.stats.ops, 3);
+        let reqs = c
+            .emit(&[0x1000, 0x1100], &[0x8000, 0x8100, 0x8200], 64, &[])
+            .unwrap();
+        assert_eq!(reqs[0].op, PudOp::And);
+        assert_eq!(reqs[0].dst, 0x8000);
+        assert_eq!(reqs[1].op, PudOp::Copy);
+        assert_eq!(reqs[1].srcs, vec![0x1000]);
+        assert_eq!(reqs[2].op, PudOp::Copy);
+        assert_eq!(reqs[2].srcs, vec![0x8000]);
+    }
+
+    #[test]
+    fn multi_consumed_output_stays_readable() {
+        // c1 = x & y is an output AND feeds s1 = z ^ c1
+        let mut b = ExprBuilder::new();
+        let x = b.leaf(0);
+        let y = b.leaf(1);
+        let z = b.leaf(2);
+        let c1 = b.and(x, y);
+        let s1 = b.xor(z, c1);
+        let m = b.build_multi(vec![c1, s1]);
+        check_multi_against_reference(&m, 23);
+        let c = compile_multi(&m);
+        assert_eq!(c.scratch_needed(), 0, "both values live in dsts");
+    }
+
+    #[test]
+    fn multi_emit_validates_bindings() {
+        let mut b = ExprBuilder::new();
+        let l0 = b.leaf(0);
+        let l1 = b.leaf(1);
+        let a = b.and(l0, l1);
+        let o = b.or(l0, a);
+        let m = b.build_multi(vec![a, o]);
+        let c = compile_multi(&m);
+        let ops = [0x1000u64, 0x1100];
+        assert!(c.emit(&ops, &[0x8000], 64, &[]).is_err(), "dst count");
+        assert!(
+            c.emit(&ops, &[0x8000, 0x8000], 64, &[]).is_err(),
+            "duplicate dst"
+        );
+        assert!(
+            c.emit(&ops, &[0x1000, 0x8100], 64, &[]).is_err(),
+            "dst aliasing an operand (written mid-batch)"
+        );
+        assert!(c.emit(&ops, &[0x8000, 0x8100], 64, &[]).is_ok());
+        check_multi_against_reference(&m, 24);
     }
 
     #[test]

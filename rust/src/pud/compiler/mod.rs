@@ -23,17 +23,26 @@
 //!   `Coordinator::submit_batch` so the hazard-wave scheduler overlaps
 //!   independent subtrees across banks.
 //!
-//! The user-facing entry point is
-//! [`System::run_expr`](crate::coordinator::system::System::run_expr);
-//! `workloads::{setops, filter}` sit on top of it.
+//! Programs come in two shapes: a single-output [`Expr`] (predicates,
+//! set algebra) and a multi-output [`MultiExpr`] (the W result
+//! bit-planes of a `pud::arith` vertical-arithmetic kernel, sharing
+//! one carry chain through CSE). Both run through the same optimizer,
+//! register allocator, and single-batch emission.
+//!
+//! The user-facing entry points are
+//! [`System::run_expr`](crate::coordinator::system::System::run_expr)
+//! and [`System::run_multi`](crate::coordinator::system::System::run_multi);
+//! `workloads::{setops, filter, analytics}` and `pud::arith` sit on
+//! top of them.
 
 pub mod expr;
 pub mod lower;
 pub mod opt;
 pub mod regalloc;
 
-pub use expr::{Expr, ExprBuilder, ExprId, Node};
+pub use expr::{Expr, ExprBuilder, ExprId, MultiExpr, Node};
 pub use lower::{
-    compile, compile_with_pool, Compiled, CompileStats, DEFAULT_SCRATCH_POOL,
+    compile, compile_multi, compile_multi_with_pool, compile_with_pool,
+    Compiled, CompiledMulti, CompileStats, DEFAULT_SCRATCH_POOL,
 };
-pub use opt::{optimize, OptReport};
+pub use opt::{optimize, optimize_multi, OptReport};

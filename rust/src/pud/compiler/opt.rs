@@ -26,7 +26,7 @@
 
 use rustc_hash::FxHashMap;
 
-use super::expr::{Expr, ExprId, Node};
+use super::expr::{reachable_from, Expr, ExprId, MultiExpr, Node};
 
 /// What the optimizer did (absorbed into
 /// [`CompileStats`](super::lower::CompileStats)).
@@ -48,34 +48,78 @@ const MAX_PASSES: usize = 8;
 
 /// Optimize `expr`. The result evaluates identically on every input.
 pub fn optimize(expr: &Expr) -> (Expr, OptReport) {
+    let (nodes, roots, report) =
+        optimize_nodes(expr.nodes(), &[expr.root()]);
+    (Expr::from_parts(nodes, roots[0]), report)
+}
+
+/// Optimize a multi-output program. Every rewrite the single-root
+/// optimizer applies is live-range-safe here too: reachability, CSE,
+/// and the De Morgan use counts are all computed over the union of the
+/// roots, so an output shared between two result bit-planes (a CSE'd
+/// sum bit, a folded constant) collapses to one node and the lowering
+/// emits one compute plus copies.
+pub fn optimize_multi(m: &MultiExpr) -> (MultiExpr, OptReport) {
+    let (nodes, roots, report) = optimize_nodes(m.nodes(), m.roots());
+    (MultiExpr::from_parts(nodes, roots), report)
+}
+
+/// The shared fixpoint driver over raw arena parts.
+fn optimize_nodes(
+    nodes: &[Node],
+    roots: &[ExprId],
+) -> (Vec<Node>, Vec<ExprId>, OptReport) {
+    let (n0, nn0) = live_counts(nodes, roots);
     let mut report = OptReport {
-        nodes_before: expr.live_nodes(),
-        nots_before: expr.live_nots(),
+        nodes_before: n0,
+        nots_before: nn0,
         ..Default::default()
     };
-    let mut cur = expr.clone();
+    let mut cur_nodes = nodes.to_vec();
+    let mut cur_roots = roots.to_vec();
     for i in 0..MAX_PASSES {
         // pass 0: CSE + folds only (duplicates not yet merged would
         // make NOT use counts lie); De Morgan needs one clean pass
-        let (next, changed) = pass(&cur, &mut report, i > 0);
-        cur = next;
+        let (next_nodes, next_roots, changed) =
+            pass(&cur_nodes, &cur_roots, &mut report, i > 0);
+        cur_nodes = next_nodes;
+        cur_roots = next_roots;
         if !changed && i > 0 {
             break;
         }
     }
-    report.nodes_after = cur.live_nodes();
-    report.nots_after = cur.live_nots();
-    (cur, report)
+    let (n1, nn1) = live_counts(&cur_nodes, &cur_roots);
+    report.nodes_after = n1;
+    report.nots_after = nn1;
+    (cur_nodes, cur_roots, report)
+}
+
+/// (reachable nodes, reachable NOTs) from `roots`.
+fn live_counts(nodes: &[Node], roots: &[ExprId]) -> (usize, usize) {
+    let mark = reachable_from(nodes, roots);
+    let live = mark.iter().filter(|m| **m).count();
+    let nots = nodes
+        .iter()
+        .zip(&mark)
+        .filter(|(n, m)| **m && matches!(n, Node::Not(_)))
+        .count();
+    (live, nots)
 }
 
 /// One bottom-up rebuild of the reachable DAG. `demorgan` enables the
 /// NOT-reducing De Morgan rewrites (legal to decide here: use counts
-/// over `expr` are exact once the DAG has been through one CSE pass).
-fn pass(expr: &Expr, rep: &mut OptReport, demorgan: bool) -> (Expr, bool) {
-    let mark = expr.reachable();
+/// over the arena are exact once the DAG has been through one CSE
+/// pass).
+fn pass(
+    nodes: &[Node],
+    roots: &[ExprId],
+    rep: &mut OptReport,
+    demorgan: bool,
+) -> (Vec<Node>, Vec<ExprId>, bool) {
+    let mark = reachable_from(nodes, roots);
     // reachable-parent count per node, for the De Morgan sharing gate
-    let mut uses = vec![0usize; expr.nodes().len()];
-    for (idx, node) in expr.nodes().iter().enumerate() {
+    let mut uses = vec![0usize; nodes.len()];
+    for (idx, node) in nodes.iter().enumerate() {
         if mark[idx] {
             for c in node.children() {
                 uses[c.idx()] += 1;
@@ -83,11 +127,11 @@ fn pass(expr: &Expr, rep: &mut OptReport, demorgan: bool) -> (Expr, bool) {
         }
     }
     let unshared_not = |id: ExprId| {
-        matches!(expr.node(id), Node::Not(_)) && uses[id.idx()] == 1
+        matches!(nodes[id.idx()], Node::Not(_)) && uses[id.idx()] == 1
     };
     let mut rb = Rebuild::default();
-    let mut memo: Vec<Option<ExprId>> = vec![None; expr.nodes().len()];
-    for (idx, node) in expr.nodes().iter().enumerate() {
+    let mut memo: Vec<Option<ExprId>> = vec![None; nodes.len()];
+    for (idx, node) in nodes.iter().enumerate() {
         if !mark[idx] {
             continue;
         }
@@ -114,9 +158,12 @@ fn pass(expr: &Expr, rep: &mut OptReport, demorgan: bool) -> (Expr, bool) {
         };
         memo[idx] = Some(rb.mk(n, dm_ok, rep));
     }
-    let root = memo[expr.root().idx()].expect("root is reachable");
-    let changed = rb.nodes.as_slice() != expr.nodes() || root != expr.root();
-    (Expr::from_parts(rb.nodes, root), changed)
+    let new_roots: Vec<ExprId> = roots
+        .iter()
+        .map(|r| memo[r.idx()].expect("roots are reachable"))
+        .collect();
+    let changed = rb.nodes.as_slice() != nodes || new_roots != roots;
+    (rb.nodes, new_roots, changed)
 }
 
 /// Hash-consing arena with rewriting smart constructors.
@@ -421,6 +468,33 @@ mod tests {
         let (opt, _) = optimize(&e);
         assert_eq!(opt.node(opt.root()), Node::Const(false));
         eval_pair(&e, &opt, 7);
+    }
+
+    #[test]
+    fn multi_root_optimize_preserves_every_output() {
+        // two outputs sharing a subterm; one output folds to a leaf
+        let mut b = ExprBuilder::new();
+        let l0 = b.leaf(0);
+        let l1 = b.leaf(1);
+        let t = b.xor(l0, l1);
+        let one = b.constant(true);
+        let s = b.and(t, one); // folds to t
+        let n = b.not(t);
+        let nn = b.not(n); // folds to t as well
+        let g = b.and(l0, l1);
+        let m = b.build_multi(vec![s, nn, g]);
+        let (opt, rep) = optimize_multi(&m);
+        assert_eq!(opt.n_outputs(), 3);
+        assert!(rep.folds >= 2);
+        // both folded outputs collapse onto the same node
+        assert_eq!(opt.roots()[0], opt.roots()[1]);
+        let v0 = [0xC3u8, 0x55];
+        let v1 = [0x0Fu8, 0xF0];
+        let outs = opt.eval_bytes(&[&v0, &v1], 2).unwrap();
+        let want = m.eval_bytes(&[&v0, &v1], 2).unwrap();
+        assert_eq!(outs, want, "multi-root optimizer changed semantics");
+        assert_eq!(outs[0], vec![0xC3 ^ 0x0F, 0x55 ^ 0xF0]);
+        assert_eq!(outs[2], vec![0xC3 & 0x0F, 0x55 & 0xF0]);
     }
 
     #[test]

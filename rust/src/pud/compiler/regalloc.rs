@@ -20,7 +20,7 @@ use std::collections::VecDeque;
 
 use rustc_hash::FxHashMap;
 
-use super::expr::{Expr, ExprId, Node};
+use super::expr::{Expr, ExprId, MultiExpr, Node};
 
 /// Slot assignment for every emitted non-root interior node.
 #[derive(Debug, Clone, Default)]
@@ -37,9 +37,18 @@ pub struct Assignment {
 /// The emission order: reachable non-leaf nodes in arena (topological)
 /// order. Empty exactly when the root is a leaf.
 pub fn emission_order(expr: &Expr) -> Vec<ExprId> {
-    let mark = expr.reachable();
-    (0..expr.nodes().len())
-        .filter(|&i| mark[i] && !matches!(expr.nodes()[i], Node::Leaf(_)))
+    order_impl(expr.nodes(), &expr.reachable())
+}
+
+/// Multi-output emission order: reachable (from any root) non-leaf
+/// nodes in arena order. Empty exactly when every output is a leaf.
+pub fn emission_order_multi(m: &MultiExpr) -> Vec<ExprId> {
+    order_impl(m.nodes(), &m.reachable())
+}
+
+fn order_impl(nodes: &[Node], mark: &[bool]) -> Vec<ExprId> {
+    (0..nodes.len())
+        .filter(|&i| mark[i] && !matches!(nodes[i], Node::Leaf(_)))
         .map(|i| ExprId(i as u32))
         .collect()
 }
@@ -47,21 +56,40 @@ pub fn emission_order(expr: &Expr) -> Vec<ExprId> {
 /// Linear-scan allocation over `order` with a preferred pool of
 /// `pool_limit` slots.
 pub fn allocate(expr: &Expr, order: &[ExprId], pool_limit: usize) -> Assignment {
+    allocate_impl(expr.nodes(), &[expr.root()], order, pool_limit)
+}
+
+/// Multi-output linear scan: every root writes a caller-provided dst
+/// buffer instead of a scratch slot (dst VAs are never recycled, so a
+/// root consumed by a later node stays readable for the whole batch).
+pub fn allocate_multi(
+    m: &MultiExpr,
+    order: &[ExprId],
+    pool_limit: usize,
+) -> Assignment {
+    allocate_impl(m.nodes(), m.roots(), order, pool_limit)
+}
+
+fn allocate_impl(
+    nodes: &[Node],
+    roots: &[ExprId],
+    order: &[ExprId],
+    pool_limit: usize,
+) -> Assignment {
+    let node = |id: ExprId| nodes[id.idx()];
     // last emission position reading each interior node's value
     let mut last_use: FxHashMap<ExprId, usize> = FxHashMap::default();
     for (pos, &id) in order.iter().enumerate() {
-        for c in expr.node(id).children() {
-            if !matches!(expr.node(c), Node::Leaf(_)) {
+        for c in node(id).children() {
+            if !matches!(node(c), Node::Leaf(_)) {
                 last_use.insert(c, pos);
             }
         }
     }
-    let root = expr.root();
     let mut asg = Assignment::default();
     let mut free: VecDeque<usize> = VecDeque::new();
     for (pos, &id) in order.iter().enumerate() {
-        let mut freed: Vec<usize> = expr
-            .node(id)
+        let mut freed: Vec<usize> = node(id)
             .children()
             .iter()
             .filter(|c| last_use.get(c) == Some(&pos))
@@ -78,11 +106,11 @@ pub fn allocate(expr: &Expr, order: &[ExprId], pool_limit: usize) -> Assignment 
         // AndNot arm in `Compiled::emit`: `compile()`'s optimizer
         // canonicalizes AndNot away, but `allocate` accepts raw
         // expressions too.)
-        let inplace_ok = !matches!(expr.node(id), Node::AndNot(..));
+        let inplace_ok = !matches!(node(id), Node::AndNot(..));
         if inplace_ok {
             free.extend(freed.iter().copied());
         }
-        if id != root {
+        if !roots.contains(&id) {
             let s = match free.pop_front() {
                 Some(s) => s,
                 None => {
@@ -172,6 +200,42 @@ mod tests {
         assert_eq!(tight.slots_needed, roomy.slots_needed);
         assert!(tight.spills > 0, "pool of 2 must spill");
         assert_eq!(roomy.spills, 0);
+    }
+
+    #[test]
+    fn multi_root_allocation_gives_roots_no_slot() {
+        // carry chain: c1 = a&b is BOTH an output and an input of s1
+        let mut b = ExprBuilder::new();
+        let x = b.leaf(0);
+        let y = b.leaf(1);
+        let z = b.leaf(2);
+        let s0 = b.xor(x, y);
+        let c1 = b.and(x, y);
+        let s1 = b.xor(z, c1);
+        let e = b.build_multi(vec![s0, s1, c1]);
+        let order = emission_order_multi(&e);
+        assert_eq!(order.len(), 3);
+        let asg = allocate_multi(&e, &order, 4);
+        // every root writes its own dst: no scratch slots at all here
+        assert_eq!(asg.slots_needed, 0);
+        assert!(asg.slot.is_empty());
+    }
+
+    #[test]
+    fn multi_root_interior_nodes_still_get_slots() {
+        let mut b = ExprBuilder::new();
+        let x = b.leaf(0);
+        let y = b.leaf(1);
+        let t = b.xor(x, y); // interior only
+        let r0 = b.not(t);
+        let r1 = b.and(t, x);
+        let e = b.build_multi(vec![r0, r1]);
+        let order = emission_order_multi(&e);
+        let asg = allocate_multi(&e, &order, 4);
+        assert_eq!(asg.slots_needed, 1, "only the shared xor needs scratch");
+        assert!(asg.slot.contains_key(&t));
+        assert!(!asg.slot.contains_key(&r0));
+        assert!(!asg.slot.contains_key(&r1));
     }
 
     #[test]

@@ -160,6 +160,56 @@ impl BulkRequest {
         assert_eq!(srcs.len(), op.arity(), "arity mismatch for {op}");
         Self { op, dst, srcs, len }
     }
+
+    /// DRAM rows this request covers (the final partial row counts).
+    pub fn rows(&self, row_bytes: u64) -> u64 {
+        self.len.div_ceil(row_bytes)
+    }
+}
+
+/// Aggregate analytic cost of a request batch, all derived from the
+/// single per-op cost table ([`PudOp::aaps_per_row`] /
+/// [`PudOp::tras_per_row`]). This is the op-cost accounting for the
+/// compiled W-bit `pud::arith` kernels: a 16-bit ripple-carry add is
+/// ~80 bulk requests, and this rolls their AAP/TRA/ns/nJ charges into
+/// one number the reports can put next to per-element throughput —
+/// assuming full PUD execution (the fallback path prices itself).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct BatchCost {
+    /// Requests in the batch.
+    pub reqs: usize,
+    /// DRAM rows covered across all requests.
+    pub rows: u64,
+    /// Activate-Activate-Precharge sequences issued.
+    pub aaps: u64,
+    /// Triple-row activations among them.
+    pub tras: u64,
+    /// Analytic in-DRAM time, serial-equivalent.
+    pub pud_ns: f64,
+    /// Analytic in-DRAM energy.
+    pub pud_nj: f64,
+}
+
+/// Roll up the per-row cost table over `reqs` (see [`BatchCost`]).
+pub fn batch_cost(
+    reqs: &[BulkRequest],
+    row_bytes: u64,
+    t: &crate::dram::timing::TimingParams,
+    e: &crate::dram::energy::EnergyParams,
+) -> BatchCost {
+    let mut c = BatchCost {
+        reqs: reqs.len(),
+        ..Default::default()
+    };
+    for r in reqs {
+        let rows = r.rows(row_bytes);
+        c.rows += rows;
+        c.aaps += rows * r.op.aaps_per_row();
+        c.tras += rows * r.op.tras_per_row();
+        c.pud_ns += rows as f64 * r.op.pud_row_ns(t);
+        c.pud_nj += rows as f64 * r.op.pud_row_nj(e);
+    }
+    c
 }
 
 #[cfg(test)]
@@ -238,6 +288,29 @@ mod tests {
             7.0 * e.aap_nj + 3.0 * e.tra_nj,
             "XOR: 7 AAPs + 3 TRAs, never a single TRA"
         );
+    }
+
+    #[test]
+    fn batch_cost_rolls_up_the_op_table() {
+        let t = crate::dram::timing::TimingParams::default();
+        let e = crate::dram::energy::EnergyParams::default();
+        let row = 8192u64;
+        let reqs = vec![
+            BulkRequest::new(PudOp::And, 0x0, vec![0x1, 0x2], 2 * row),
+            BulkRequest::new(PudOp::Xor, 0x3, vec![0x4, 0x5], row + 1), // 2 rows
+            BulkRequest::new(PudOp::Zero, 0x6, vec![], row),
+        ];
+        let c = batch_cost(&reqs, row, &t, &e);
+        assert_eq!(c.reqs, 3);
+        assert_eq!(c.rows, 5);
+        assert_eq!(c.aaps, 2 * 4 + 2 * 7 + 1);
+        assert_eq!(c.tras, 2 + 2 * 3);
+        let want_ns = 2.0 * PudOp::And.pud_row_ns(&t)
+            + 2.0 * PudOp::Xor.pud_row_ns(&t)
+            + PudOp::Zero.pud_row_ns(&t);
+        assert!((c.pud_ns - want_ns).abs() < 1e-9);
+        assert!(c.pud_nj > 0.0);
+        assert_eq!(reqs[1].rows(row), 2);
     }
 
     #[test]

@@ -17,9 +17,14 @@
 //!   the coordinator drives; returns analytic latencies.
 //! * [`compiler`] — the Boolean-expression compiler that lowers
 //!   multi-operand expression DAGs onto this substrate (IR, optimizer,
-//!   scratch-row register allocator, batched lowering).
+//!   scratch-row register allocator, batched lowering — single- and
+//!   multi-output programs).
+//! * [`arith`] — bit-serial vertical arithmetic over the compiler:
+//!   transposed bit-plane layouts and ripple-carry/compare/select/
+//!   popcount kernels expanded into expression DAGs.
 
 pub mod ambit;
+pub mod arith;
 pub mod compiler;
 pub mod exec;
 pub mod isa;

@@ -12,6 +12,7 @@ use crate::pud::isa::PudOp;
 use crate::util::csvio::Csv;
 use crate::util::table::{fnum, Table};
 use crate::util::units::{fmt_bytes, fmt_ns};
+use crate::workloads::analytics::AnalyticsResult;
 use crate::workloads::churn::ChurnResult;
 use crate::workloads::filter::FilterResult;
 use crate::workloads::microbench::{AllocatorKind, Micro};
@@ -404,6 +405,88 @@ pub fn filter(results: &[FilterResult], out_dir: Option<&Path>) -> Result<String
     }
     Ok(format!(
         "## Filter — compiled expression batches vs hand-issued ops\n\n{}",
+        table.render()
+    ))
+}
+
+/// Render the analytics (filter-then-sum) sweep: one row per
+/// allocator x bit-width cell, compiled vertical-arithmetic execution
+/// with its W-bit op-cost accounting. Writes `analytics.csv` when
+/// `out_dir` is given.
+pub fn analytics(
+    results: &[AnalyticsResult],
+    out_dir: Option<&Path>,
+) -> Result<String> {
+    let mut table = Table::new(vec![
+        "allocator",
+        "width",
+        "ops",
+        "scratch",
+        "folds",
+        "waves",
+        "aaps/elem",
+        "pud%",
+        "matches",
+        "sum",
+    ])
+    .left(0);
+    let mut csv = Csv::new(vec![
+        "allocator",
+        "width",
+        "elems",
+        "threshold",
+        "ops",
+        "scratch_slots",
+        "spills",
+        "folds",
+        "cse_hits",
+        "waves",
+        "aaps_per_elem",
+        "pud_row_fraction",
+        "sim_ns",
+        "elapsed_sim_ns",
+        "matches",
+        "sum",
+        "pool_high_water",
+    ]);
+    for r in results {
+        table.row(vec![
+            r.allocator.to_string(),
+            r.width.to_string(),
+            r.compile.ops.to_string(),
+            r.compile.scratch_slots.to_string(),
+            r.compile.folds.to_string(),
+            r.waves.to_string(),
+            format!("{:.4}", r.aaps_per_elem),
+            format!("{:.0}%", r.pud_row_fraction() * 100.0),
+            r.matches.to_string(),
+            r.sum.to_string(),
+        ]);
+        csv.row(vec![
+            r.allocator.to_string(),
+            r.width.to_string(),
+            r.elems.to_string(),
+            r.threshold.to_string(),
+            r.compile.ops.to_string(),
+            r.compile.scratch_slots.to_string(),
+            r.compile.spills.to_string(),
+            r.compile.folds.to_string(),
+            r.compile.cse_hits.to_string(),
+            r.waves.to_string(),
+            format!("{:.6}", r.aaps_per_elem),
+            format!("{:.6}", r.pud_row_fraction()),
+            format!("{:.1}", r.sim_ns),
+            format!("{:.1}", r.elapsed_ns),
+            r.matches.to_string(),
+            r.sum.to_string(),
+            r.pool_high_water.to_string(),
+        ]);
+    }
+    if let Some(dir) = out_dir {
+        csv.write(dir.join("analytics.csv"))?;
+    }
+    Ok(format!(
+        "## Analytics — filter-then-sum over a vertical column table\n\n{}",
         table.render()
     ))
 }

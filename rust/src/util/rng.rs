@@ -121,12 +121,16 @@ impl Pcg64 {
 }
 
 /// Entropy-seeded generator for non-reproducible contexts (CLI default
-/// seeds); experiments always pass explicit seeds.
+/// seeds); experiments always pass explicit seeds. Std-only (the
+/// offline build has no `getrandom` crate): read `/dev/urandom`, fall
+/// back to the clock where that fails (non-Linux dev hosts).
 pub fn from_entropy() -> Pcg64 {
+    use std::io::Read;
     let mut seed = [0u8; 8];
-    // getrandom failure is unrecoverable and effectively impossible on
-    // Linux; fall back to the clock rather than panicking.
-    if getrandom::fill(&mut seed).is_err() {
+    let filled = std::fs::File::open("/dev/urandom")
+        .and_then(|mut f| f.read_exact(&mut seed))
+        .is_ok();
+    if !filled {
         let t = std::time::SystemTime::now()
             .duration_since(std::time::UNIX_EPOCH)
             .unwrap_or_default();

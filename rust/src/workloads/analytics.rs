@@ -1,0 +1,341 @@
+//! Filter-then-sum analytics over a vertical column table — the
+//! vertical-arithmetic flagship workload (`SELECT SUM(v) WHERE v < T`
+//! over a W-bit column).
+//!
+//! The column transposes into W bit-plane rows ([`VerticalLayout`]),
+//! the predicate compiles as a constant-threshold compare
+//! (`arith::kernel_const`, whose borrow chain mostly folds), and the
+//! masked sum runs the plane-AND batch in-DRAM before the host
+//! tree-reduces W popcounts. Under PUMA every plane co-locates via
+//! `pim_alloc_align` hints and the whole pipeline stays in-DRAM; under
+//! the baseline allocators the same compiled batches fall back row by
+//! row to the CPU path — that is the compiled-vs-CPU-fallback
+//! comparison the sweep quantifies, across bit-widths and all four
+//! allocators.
+//!
+//! Every cell is verified twice: the predicate mask bit-for-bit and
+//! the masked sum value against host-side scalar arithmetic.
+
+use anyhow::{ensure, Result};
+
+use crate::alloc::scratch::ScratchPool;
+use crate::alloc::traits::Allocator;
+use crate::coordinator::system::{System, SystemConfig};
+use crate::dram::address::InterleaveScheme;
+use crate::dram::energy::EnergyParams;
+use crate::dram::timing::TimingParams;
+use crate::os::process::Pid;
+use crate::pud::arith::{self, ArithOp, VerticalLayout};
+use crate::pud::compiler::{compile_multi, CompileStats};
+use crate::util::rng::Pcg64;
+use crate::workloads::microbench::AllocatorKind;
+
+/// Analytics workload parameters.
+#[derive(Debug, Clone)]
+pub struct AnalyticsConfig {
+    /// Column elements. The default gives one full DRAM row per
+    /// bit-plane (8 KiB rows → 64 Ki elements).
+    pub elems: usize,
+    /// Bit-widths to sweep.
+    pub widths: Vec<u32>,
+    /// Threshold as a fraction of the value range: `T = frac · 2^W`.
+    pub threshold_frac: f64,
+    pub huge_pages: usize,
+    pub puma_pages: usize,
+    pub churn_rounds: usize,
+    pub seed: u64,
+}
+
+impl Default for AnalyticsConfig {
+    fn default() -> Self {
+        Self {
+            elems: 64 * 1024,
+            widths: vec![4, 8, 16],
+            threshold_frac: 0.5,
+            huge_pages: 16,
+            puma_pages: 8,
+            churn_rounds: 2_000,
+            seed: 0xA11A,
+        }
+    }
+}
+
+/// One analytics cell: a W-bit column on one allocator, compiled
+/// predicate + masked sum, verified against host scalar arithmetic.
+#[derive(Debug, Clone)]
+pub struct AnalyticsResult {
+    pub allocator: &'static str,
+    pub width: u32,
+    pub elems: usize,
+    pub threshold: u64,
+    /// Rows passing the predicate.
+    pub matches: u64,
+    /// The verified aggregate.
+    pub sum: u128,
+    /// Compile stats of the threshold-compare kernel (constant bits
+    /// folded).
+    pub compile: CompileStats,
+    /// Hazard waves of the compare batch.
+    pub waves: usize,
+    /// Serial-equivalent simulated ns (compare + mask batches).
+    pub sim_ns: f64,
+    /// Bank-parallel completion ns (compare + mask batches).
+    pub elapsed_ns: f64,
+    pub pud_rows: u64,
+    pub fallback_rows: u64,
+    /// Analytic in-DRAM AAPs per element of the compare kernel — the
+    /// W-bit op-cost accounting (`pud::isa::batch_cost`).
+    pub aaps_per_elem: f64,
+    /// Scratch-pool residents after the cell (trimmed between cells).
+    pub pool_high_water: usize,
+}
+
+impl AnalyticsResult {
+    /// In-DRAM fraction of the cell's batched rows.
+    pub fn pud_row_fraction(&self) -> f64 {
+        let total = self.pud_rows + self.fallback_rows;
+        if total == 0 {
+            0.0
+        } else {
+            self.pud_rows as f64 / total as f64
+        }
+    }
+}
+
+/// The swept threshold for a width: `frac · 2^W`, clamped into
+/// `[1, 2^W - 1]` so the predicate never degenerates.
+pub fn threshold(width: u32, frac: f64) -> u64 {
+    let span = (1u64 << width.min(63)) as f64;
+    ((span * frac) as u64).clamp(1, arith::width_mask(width))
+}
+
+/// Run one cell on an already-booted system. The caller owns system,
+/// allocator, and pool so a sweep can reuse them across widths (and
+/// exercise the pool's trim path between cells).
+pub fn run_cell(
+    sys: &mut System,
+    alloc: &mut dyn Allocator,
+    pid: Pid,
+    name: &'static str,
+    cfg: &AnalyticsConfig,
+    width: u32,
+) -> Result<AnalyticsResult> {
+    ensure!(
+        (1..=arith::MAX_WIDTH).contains(&width),
+        "width {width} out of kernel range"
+    );
+    let thr = threshold(width, cfg.threshold_frac);
+    let mask_bits = arith::width_mask(width);
+    let mut rng = Pcg64::new(cfg.seed ^ (width as u64) << 8);
+    let values: Vec<u64> =
+        (0..cfg.elems).map(|_| rng.next_u64() & mask_bits).collect();
+
+    let col = VerticalLayout::alloc(sys, alloc, pid, width, cfg.elems)?;
+    col.store(sys, pid, &values)?;
+    let mask = VerticalLayout::alloc_with_hint(
+        sys, alloc, pid, 1, cfg.elems, col.hint(),
+    )?;
+
+    // compiled predicate: v < T with T's bits folded at compile time
+    let compiled = compile_multi(&arith::kernel_const(ArithOp::CmpLt, width, thr));
+    let mut pool = ScratchPool::new();
+    let rep = sys.run_multi(
+        alloc,
+        pid,
+        &compiled,
+        col.planes(),
+        mask.planes(),
+        col.plane_len(),
+        &mut pool,
+    )?;
+
+    // verify the mask bit-for-bit against scalar compares
+    let mask_row = sys.read_virt(pid, mask.planes()[0], mask.plane_len())?;
+    for (i, &v) in values.iter().enumerate() {
+        let got = (mask_row[i / 8] >> (i % 8)) & 1 == 1;
+        ensure!(
+            got == (v < thr),
+            "{name}: mask bit {i} diverged ({v} vs threshold {thr})"
+        );
+    }
+    let matches = arith::popcount_live(&mask_row, cfg.elems);
+
+    // filter-then-sum: in-DRAM masking, host tree reduction
+    let (sum, sum_rep) =
+        sys.arith_sum(alloc, pid, &col, Some(mask.planes()[0]), &mut pool)?;
+    let want: u128 = values
+        .iter()
+        .filter(|v| **v < thr)
+        .map(|v| *v as u128)
+        .sum();
+    ensure!(
+        sum == want,
+        "{name}: masked sum diverged ({sum} vs {want})"
+    );
+    let sum_rep = sum_rep.expect("masked sum submits a batch");
+
+    let cost = arith::kernel_cost(
+        ArithOp::CmpLt,
+        width,
+        col.plane_len(),
+        sys.os.scheme.geometry.row_bytes as u64,
+        &TimingParams::default(),
+        &EnergyParams::default(),
+    );
+    let high_water = pool.high_water;
+    // release the cell's transient rows: W-row masked planes + scratch
+    // go back first (trim), then the column itself
+    sys.trim_scratch(alloc, pid, &mut pool, 0)?;
+    mask.free(sys, alloc, pid)?;
+    col.free(sys, alloc, pid)?;
+
+    Ok(AnalyticsResult {
+        allocator: name,
+        width,
+        elems: cfg.elems,
+        threshold: thr,
+        matches,
+        sum,
+        compile: rep.stats.clone(),
+        waves: rep.batch.waves,
+        sim_ns: rep.batch.total_ns + sum_rep.batch.total_ns,
+        elapsed_ns: rep.batch.elapsed_ns + sum_rep.batch.elapsed_ns,
+        pud_rows: rep.pud_rows + sum_rep.pud_rows,
+        fallback_rows: rep.fallback_rows + sum_rep.fallback_rows,
+        aaps_per_elem: cost.aaps as f64 / cfg.elems as f64,
+        pool_high_water: high_water,
+    })
+}
+
+/// Run the width sweep on one allocator: one system and process reused
+/// across widths; each cell leases, trims, and frees its own rows, so
+/// steady-state allocator occupancy stays flat across the sweep.
+pub fn run(
+    scheme: InterleaveScheme,
+    cfg: &AnalyticsConfig,
+    kind: AllocatorKind,
+) -> Result<Vec<AnalyticsResult>> {
+    let mut sys = System::boot(SystemConfig {
+        scheme,
+        huge_pages: cfg.huge_pages,
+        churn_rounds: cfg.churn_rounds,
+        seed: cfg.seed,
+        artifacts: None,
+        ..Default::default()
+    })?;
+    let pid = sys.spawn();
+    let mut alloc = kind.build(&mut sys, cfg.puma_pages)?;
+    let mut out = Vec::with_capacity(cfg.widths.len());
+    for &w in &cfg.widths {
+        out.push(run_cell(
+            &mut sys,
+            alloc.as_mut(),
+            pid,
+            kind.name(),
+            cfg,
+            w,
+        )?);
+    }
+    Ok(out)
+}
+
+/// Sweep allocators x widths, one fresh system per allocator.
+pub fn sweep(
+    scheme: &InterleaveScheme,
+    cfg: &AnalyticsConfig,
+    kinds: &[AllocatorKind],
+) -> Result<Vec<AnalyticsResult>> {
+    let mut out = Vec::with_capacity(kinds.len() * cfg.widths.len());
+    for kind in kinds {
+        out.extend(run(scheme.clone(), cfg, *kind)?);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::alloc::puma::FitPolicy;
+    use crate::dram::geometry::DramGeometry;
+
+    fn scheme() -> InterleaveScheme {
+        InterleaveScheme::row_major(DramGeometry::small()) // 64 MiB
+    }
+
+    fn cfg() -> AnalyticsConfig {
+        AnalyticsConfig {
+            elems: 64 * 1024,
+            widths: vec![4, 8],
+            churn_rounds: 500,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn threshold_stays_in_range() {
+        assert_eq!(threshold(4, 0.5), 8);
+        assert_eq!(threshold(8, 0.5), 128);
+        assert_eq!(threshold(4, 0.0), 1);
+        assert_eq!(threshold(4, 10.0), 15);
+    }
+
+    #[test]
+    fn puma_cells_run_in_dram_and_verify() {
+        let rs = run(scheme(), &cfg(), AllocatorKind::Puma(FitPolicy::WorstFit))
+            .unwrap();
+        assert_eq!(rs.len(), 2);
+        for r in &rs {
+            assert!(
+                r.pud_row_fraction() > 0.95,
+                "width {}: got {}",
+                r.width,
+                r.pud_row_fraction()
+            );
+            assert!(r.matches > 0 && r.sum > 0);
+            assert!(r.aaps_per_elem > 0.0);
+            // the wide cell leases at least W planes for masking
+            assert!(r.pool_high_water >= r.width as usize);
+        }
+        // the compare kernel folds the constant threshold
+        assert!(rs[0].compile.folds > 0);
+    }
+
+    #[test]
+    fn malloc_cells_fall_back_but_stay_correct() {
+        let rs = run(scheme(), &cfg(), AllocatorKind::Malloc).unwrap();
+        for r in &rs {
+            // the batches are small (a handful of rows), so one
+            // accidentally row-aligned frame pair moves the ratio a
+            // lot; "mostly fallback" is the property, not exactly 0
+            assert!(
+                r.pud_row_fraction() < 0.2,
+                "width {}: got {}",
+                r.width,
+                r.pud_row_fraction()
+            );
+            assert!(r.matches > 0);
+        }
+    }
+
+    #[test]
+    fn sweep_covers_allocators_by_width() {
+        let rs = sweep(
+            &scheme(),
+            &AnalyticsConfig {
+                widths: vec![4],
+                churn_rounds: 300,
+                ..cfg()
+            },
+            &[
+                AllocatorKind::Malloc,
+                AllocatorKind::Puma(FitPolicy::WorstFit),
+            ],
+        )
+        .unwrap();
+        assert_eq!(rs.len(), 2);
+        let puma = rs.iter().find(|r| r.allocator == "puma").unwrap();
+        let malloc = rs.iter().find(|r| r.allocator == "malloc").unwrap();
+        assert!(puma.pud_row_fraction() > malloc.pud_row_fraction());
+        assert_eq!(puma.sum, malloc.sum, "results are placement-independent");
+    }
+}

@@ -14,7 +14,11 @@
 //!   compiled through `pud::compiler`.
 //! * [`filter`] — multi-clause predicate filter over bitmap columns:
 //!   compiled single-batch execution vs hand-issued sequential ops.
+//! * [`analytics`] — filter-then-sum aggregate over a vertical
+//!   (bit-transposed) column table: compiled `pud::arith` kernels vs
+//!   the CPU-fallback path, swept over bit-widths and allocators.
 
+pub mod analytics;
 pub mod bitmap_index;
 pub mod churn;
 pub mod filter;

@@ -1,0 +1,172 @@
+//! Properties of the vertical-arithmetic layer: the transpose path
+//! round-trips, and compiled bit-serial kernels are value-identical to
+//! scalar reference arithmetic — under co-located (PUMA) placement
+//! that runs in-DRAM and under deliberately misaligned (malloc)
+//! placement that exercises the CPU fallback.
+
+use puma::alloc::mallocsim::MallocSim;
+use puma::alloc::puma::{FitPolicy, PumaAlloc};
+use puma::alloc::scratch::ScratchPool;
+use puma::alloc::traits::Allocator;
+use puma::assert_prop;
+use puma::coordinator::system::{System, SystemConfig};
+use puma::dram::address::InterleaveScheme;
+use puma::dram::geometry::DramGeometry;
+use puma::proptest;
+use puma::pud::arith::{self, ArithOp, VerticalLayout};
+use puma::util::rng::Pcg64;
+
+fn boot() -> System {
+    let scheme = InterleaveScheme::row_major(DramGeometry::small()); // 64 MiB
+    System::boot(SystemConfig {
+        scheme,
+        huge_pages: 12,
+        churn_rounds: 800,
+        seed: 0xA217,
+        artifacts: None,
+        ..Default::default()
+    })
+    .unwrap()
+}
+
+#[test]
+fn transpose_roundtrip_property() {
+    proptest::check_cases("vertical transpose roundtrips", 64, |g| {
+        let elems = g.usize(1..2000);
+        let width = g.usize(1..17) as u32;
+        let seed = g.u64(1..u64::MAX);
+        let mut rng = Pcg64::new(seed);
+        let mask = arith::width_mask(width);
+        let values: Vec<u64> =
+            (0..elems).map(|_| rng.next_u64() & mask).collect();
+        let planes = arith::transpose(&values, width);
+        assert_prop!(planes.len() == width as usize, "one plane per bit");
+        for p in &planes {
+            assert_prop!(
+                p.len() == elems.div_ceil(8),
+                "plane length is ceil(elems/8)"
+            );
+        }
+        let back = arith::untranspose(&planes, elems);
+        assert_prop!(back == values, "transpose/untranspose must round-trip");
+    });
+}
+
+/// Run every kernel over one operand pair with `alloc`, verifying the
+/// loaded results element-by-element against `arith::reference`.
+/// Returns the worst (lowest) PUD-row fraction seen across kernels.
+fn run_kernels(
+    sys: &mut System,
+    alloc: &mut dyn Allocator,
+    hinted: bool,
+    width: u32,
+    elems: usize,
+    seed: u64,
+) -> f64 {
+    let pid = sys.spawn();
+    let mask = arith::width_mask(width);
+    let mut rng = Pcg64::new(seed);
+    let va: Vec<u64> = (0..elems).map(|_| rng.next_u64() & mask).collect();
+    let vb: Vec<u64> = (0..elems).map(|_| rng.next_u64() & mask).collect();
+    let a = VerticalLayout::alloc(sys, alloc, pid, width, elems).unwrap();
+    let b = if hinted {
+        VerticalLayout::alloc_with_hint(sys, alloc, pid, width, elems, a.hint())
+            .unwrap()
+    } else {
+        VerticalLayout::alloc(sys, alloc, pid, width, elems).unwrap()
+    };
+    a.store(sys, pid, &va).unwrap();
+    b.store(sys, pid, &vb).unwrap();
+    let mut pool = ScratchPool::new();
+    let mut worst = 1.0f64;
+    for op in ArithOp::ALL {
+        let out_w = op.out_width(width);
+        let dst = if hinted {
+            VerticalLayout::alloc_with_hint(sys, alloc, pid, out_w, elems, a.hint())
+                .unwrap()
+        } else {
+            VerticalLayout::alloc(sys, alloc, pid, out_w, elems).unwrap()
+        };
+        let rhs = if op.is_binary() { Some(&b) } else { None };
+        let rep = sys.run_arith(alloc, pid, op, &a, rhs, &dst, &mut pool).unwrap();
+        worst = worst.min(rep.pud_row_fraction());
+        let got = dst.load(sys, pid).unwrap();
+        for i in 0..elems {
+            let want = arith::reference(op, width, va[i], vb[i]);
+            assert_prop!(
+                got[i] == want,
+                "{}({:#x}, {:#x}) = {:#x}, want {:#x} (width {width}, \
+                 hinted {hinted})",
+                op.name(),
+                va[i],
+                vb[i],
+                got[i],
+                want
+            );
+        }
+        dst.free(sys, alloc, pid).unwrap();
+    }
+    // filter-then-sum: mask = (a < b), sum of a under the mask
+    let mask_l = if hinted {
+        VerticalLayout::alloc_with_hint(sys, alloc, pid, 1, elems, a.hint())
+            .unwrap()
+    } else {
+        VerticalLayout::alloc(sys, alloc, pid, 1, elems).unwrap()
+    };
+    sys.run_arith(alloc, pid, ArithOp::CmpLt, &a, Some(&b), &mask_l, &mut pool)
+        .unwrap();
+    let (sum, rep) = sys
+        .arith_sum(alloc, pid, &a, Some(mask_l.planes()[0]), &mut pool)
+        .unwrap();
+    let want: u128 = va
+        .iter()
+        .zip(&vb)
+        .filter(|(x, y)| x < y)
+        .map(|(x, _)| *x as u128)
+        .sum();
+    assert_prop!(
+        sum == want,
+        "masked sum {sum} != reference {want} (width {width}, hinted {hinted})"
+    );
+    worst = worst.min(rep.expect("masked sum batches").pud_row_fraction());
+    worst
+}
+
+#[test]
+fn compiled_kernels_match_reference_property() {
+    proptest::check_cases("arith kernels == scalar reference", 3, |g| {
+        let width = *g.choose(&[4u32, 8, 16]);
+        let seed = g.u64(1..u64::MAX);
+        // one full DRAM row per plane keeps the co-located run measurable
+        let elems = 64 * 1024;
+
+        let mut sys = boot();
+        let row = sys.os.scheme.geometry.row_bytes as u64;
+        let mut puma = PumaAlloc::new(row, FitPolicy::WorstFit);
+        puma.pim_preallocate(&mut sys.os, 8).unwrap();
+        let pud = run_kernels(&mut sys, &mut puma, true, width, elems, seed);
+        assert_prop!(
+            pud > 0.9,
+            "hint-aligned planes must run in-DRAM (worst {pud}, width {width})"
+        );
+
+        let mut sys2 = boot();
+        let mut malloc = MallocSim::new();
+        let pud2 = run_kernels(&mut sys2, &mut malloc, false, width, elems, seed);
+        assert_prop!(
+            pud2 < 0.5 && pud2 < pud,
+            "malloc planes should mostly fall back (worst {pud2})"
+        );
+    });
+}
+
+#[test]
+fn ragged_columns_stay_correct() {
+    // elems not a multiple of 8 -> padded final byte; not a multiple of
+    // a row -> partial-row requests. Correctness must survive both.
+    let mut sys = boot();
+    let row = sys.os.scheme.geometry.row_bytes as u64;
+    let mut puma = PumaAlloc::new(row, FitPolicy::WorstFit);
+    puma.pim_preallocate(&mut sys.os, 8).unwrap();
+    run_kernels(&mut sys, &mut puma, true, 5, 1003, 0x7A66);
+}

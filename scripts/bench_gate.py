@@ -1,0 +1,135 @@
+#!/usr/bin/env python3
+"""Bench-regression gate: compare BENCH_runtime.json against the
+committed BENCH_baseline.json and fail CI when the perf trajectory
+regresses.
+
+Gated metrics (all simulated-time, deterministic across runs):
+
+* PUD-row fractions (batched mix, churn-with-compaction steady state,
+  filter/puma compiled, analytics/puma worst cell): a relative drop of
+  more than --pud-tolerance (default 2%) fails.
+* Batched throughput (ops_per_s, simulated): a relative drop of more
+  than --ops-tolerance (default 10%) fails.
+
+A baseline value of null means "not yet seeded": the metric passes
+with a warning and the refreshed baseline (--write-refreshed) fills
+in the measured value, ready to be committed. Seeded entries keep
+their committed (deliberately conservative) values in the refreshed
+file — refresh fills gaps, it does not ratchet floors up.
+
+Usage:
+  python3 scripts/bench_gate.py \
+      --current BENCH_runtime.json --baseline BENCH_baseline.json \
+      [--write-refreshed BENCH_baseline_refreshed.json] \
+      [--summary "$GITHUB_STEP_SUMMARY"]
+"""
+
+import argparse
+import json
+import sys
+
+
+def extract(bench):
+    """Pull the gated metrics out of BENCH_runtime.json."""
+    analytics_puma = [
+        c["pud_row_fraction"]
+        for c in bench.get("analytics", {}).get("cells", [])
+        if c.get("allocator") == "puma"
+    ]
+    return {
+        "batched_pud_row_fraction": bench["batched"]["pud_row_fraction"],
+        "batched_ops_per_s": bench["batched"]["ops_per_s"],
+        "churn_on_steady_pud_fraction": bench["churn"]["on"][
+            "steady_pud_fraction"
+        ],
+        "filter_puma_pud_row_fraction": bench["filter"]["puma"][
+            "pud_row_fraction"
+        ],
+        "analytics_puma_min_pud_row_fraction": (
+            min(analytics_puma) if analytics_puma else None
+        ),
+    }
+
+
+def tolerance_for(metric, args):
+    return args.ops_tolerance if metric == "batched_ops_per_s" else args.pud_tolerance
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--current", required=True)
+    ap.add_argument("--baseline", required=True)
+    ap.add_argument("--write-refreshed")
+    ap.add_argument("--summary")
+    ap.add_argument("--pud-tolerance", type=float, default=0.02)
+    ap.add_argument("--ops-tolerance", type=float, default=0.10)
+    args = ap.parse_args()
+
+    with open(args.current) as f:
+        current = extract(json.load(f))
+    with open(args.baseline) as f:
+        baseline_file = json.load(f)
+
+    rows = []
+    failures = []
+    refreshed = {
+        "_comment": baseline_file.get("_comment", ""),
+    }
+    for metric, cur in current.items():
+        base = baseline_file.get(metric)
+        # fill unseeded entries with the measured value; keep committed
+        # (conservative) floors as they are
+        refreshed[metric] = cur if base is None else base
+        if cur is None:
+            rows.append((metric, base, cur, "-", "MISSING"))
+            failures.append(f"{metric}: missing from the current bench run")
+            continue
+        if base is None:
+            rows.append((metric, "(unseeded)", f"{cur:.6g}", "-", "SEEDED"))
+            continue
+        tol = tolerance_for(metric, args)
+        floor = base * (1.0 - tol)
+        delta = (cur - base) / base if base else 0.0
+        status = "OK" if cur >= floor else "FAIL"
+        if status == "FAIL":
+            failures.append(
+                f"{metric}: {cur:.6g} dropped more than {tol:.0%} below "
+                f"baseline {base:.6g}"
+            )
+        rows.append(
+            (metric, f"{base:.6g}", f"{cur:.6g}", f"{delta:+.2%}", status)
+        )
+
+    lines = [
+        "### Bench gate — perf trajectory vs committed baseline",
+        "",
+        "| metric | baseline | current | delta | status |",
+        "|---|---|---|---|---|",
+    ]
+    for metric, base, cur, delta, status in rows:
+        lines.append(f"| `{metric}` | {base} | {cur} | {delta} | {status} |")
+    if failures:
+        lines.append("")
+        lines.append("**Regressions:**")
+        lines.extend(f"- {f}" for f in failures)
+    report = "\n".join(lines) + "\n"
+    print(report)
+    if args.summary:
+        with open(args.summary, "a") as f:
+            f.write(report)
+
+    if args.write_refreshed:
+        with open(args.write_refreshed, "w") as f:
+            json.dump(refreshed, f, indent=2)
+            f.write("\n")
+        print(f"refreshed baseline written to {args.write_refreshed}")
+
+    if failures:
+        print("bench gate FAILED", file=sys.stderr)
+        return 1
+    print("bench gate passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
