@@ -29,7 +29,9 @@ use puma::pud::isa::{BulkRequest, PudOp};
 use puma::util::bench::{bench, black_box, BenchOpts};
 use puma::util::csvio::Csv;
 use puma::util::rng::Pcg64;
-use puma::workloads::analytics::{self, AnalyticsConfig, AnalyticsResult};
+use puma::workloads::analytics::{
+    self, AnalyticsConfig, AnalyticsResult, ShardedConfig, ShardedResult,
+};
 use puma::workloads::churn::{self, ChurnConfig, ChurnResult};
 use puma::workloads::filter::{self, FilterConfig, FilterResult};
 use puma::workloads::microbench::AllocatorKind;
@@ -214,6 +216,22 @@ fn analytics_json(r: &AnalyticsResult) -> String {
     )
 }
 
+fn sharded_json(r: &ShardedResult) -> String {
+    format!(
+        "{{\"allocator\": \"{}\", \"width\": {}, \"shards\": {}, \
+         \"pud_row_fraction\": {:.6}, \"elapsed_sim_ns\": {:.1}, \
+         \"waves\": {}, \"matches\": {}, \"sum\": {}}}",
+        r.allocator,
+        r.width,
+        r.shard_count,
+        r.pud_row_fraction(),
+        r.elapsed_ns,
+        r.waves,
+        r.matches,
+        r.sum
+    )
+}
+
 fn json_path(m: &PathMetrics, groups: usize) -> String {
     // "xla_dispatches" is the tracked metric: fallback dispatch units
     // (counted in every mode; == run_op calls once artifacts load).
@@ -364,6 +382,56 @@ fn main() -> anyhow::Result<()> {
         }
     }
 
+    // ---- analytics_sharded: MIMDRAM-style bank-parallel SIMD -------
+    println!("\n# analytics_sharded — bank-sharded vertical arithmetic");
+    let scfg = ShardedConfig {
+        widths: vec![8],
+        shards: vec![1, 8],
+        ..Default::default()
+    };
+    // the default 16-bank geometry: S = 8 shards land on 8 disjoint
+    // banks, S = 1 is the fully co-located single-subarray layout
+    let sharded_scheme = InterleaveScheme::row_major(DramGeometry::default());
+    let scells = analytics::sweep_sharded(
+        &sharded_scheme,
+        &scfg,
+        &[
+            AllocatorKind::Puma(FitPolicy::WorstFit),
+            AllocatorKind::Malloc,
+        ],
+    )?;
+    let s1 = scells
+        .iter()
+        .find(|r| r.allocator == "puma" && r.shards == 1)
+        .expect("puma S=1 cell");
+    let s8 = scells
+        .iter()
+        .find(|r| r.allocator == "puma" && r.shards == 8)
+        .expect("puma S=8 cell");
+    let sharded_speedup = s1.elapsed_ns / s8.elapsed_ns.max(1e-9);
+    println!(
+        "puma  : S=1 elapsed {:.0} ns -> S=8 elapsed {:.0} ns ({:.2}x), \
+         pud_frac {:.3}",
+        s1.elapsed_ns,
+        s8.elapsed_ns,
+        sharded_speedup,
+        s8.pud_row_fraction()
+    );
+    assert!(
+        s8.elapsed_ns < s1.elapsed_ns,
+        "bank sharding must strictly shrink the batch makespan under PUMA \
+         (S=8 {} vs S=1 {})",
+        s8.elapsed_ns,
+        s1.elapsed_ns
+    );
+    assert_eq!(s8.sum, s1.sum, "sharded results must be bit-identical");
+    assert_eq!(s8.matches, s1.matches);
+    let sharded_min_pud = scells
+        .iter()
+        .filter(|r| r.allocator == "puma")
+        .map(|r| r.pud_row_fraction())
+        .fold(f64::INFINITY, f64::min);
+
     let json = format!(
         "{{\n  \"bench\": \"bench_runtime\",\n  \"workload\": \
          {{\"groups\": {groups}, \"mix\": \"3:1 puma:malloc, \
@@ -377,6 +445,9 @@ fn main() -> anyhow::Result<()> {
          \"puma\": {}, \"malloc\": {}, \"pud_gain_vs_hand\": {:.6}}},\n  \
          \"analytics\": {{\"elems\": {}, \"widths\": [{}], \
          \"threshold_frac\": {:.2}, \"min_puma_margin\": {:.6}, \
+         \"cells\": [\n    {}\n  ]}},\n  \
+         \"analytics_sharded\": {{\"elems\": {}, \"width\": {}, \
+         \"speedup_s8\": {:.4}, \"puma_pud_row_fraction\": {:.6}, \
          \"cells\": [\n    {}\n  ]}}\n}}\n",
         json_path(&serial, groups),
         json_path(&batched, groups),
@@ -404,6 +475,15 @@ fn main() -> anyhow::Result<()> {
         cells
             .iter()
             .map(analytics_json)
+            .collect::<Vec<_>>()
+            .join(",\n    "),
+        scfg.elems,
+        scfg.widths[0],
+        sharded_speedup,
+        sharded_min_pud,
+        scells
+            .iter()
+            .map(sharded_json)
             .collect::<Vec<_>>()
             .join(",\n    "),
     );

@@ -369,6 +369,64 @@ impl Allocator for PumaAlloc {
         self.map_regions(ctx, proc, regions, len)
     }
 
+    /// Placement-spread allocation (the sharded-layout anchor path):
+    /// draw from bank `spread % total_banks`, preferring the richest
+    /// subarray of that bank and *sticking* to the first subarray
+    /// chosen so the allocation — and everything later hinted to it —
+    /// stays single-subarray. Falls back to the plain fit policy only
+    /// when the target bank has no free regions left. Cycling `spread`
+    /// across shards therefore lands sibling shards on disjoint banks
+    /// even though each shard is individually fully co-located.
+    fn alloc_spread(
+        &mut self,
+        ctx: &mut OsCtx,
+        proc: &mut Process,
+        len: u64,
+        spread: u32,
+    ) -> Result<u64> {
+        if len == 0 {
+            bail!("pim_alloc_spread(0)");
+        }
+        self.stats.allocs += 1;
+        self.stats.bytes_requested += len;
+        let need = self.regions_needed(len);
+        if need > self.free.total_free() {
+            bail!(
+                "PUD region pool exhausted: need {need}, have {} \
+                 (pim_preallocate more huge pages)",
+                self.free.total_free()
+            );
+        }
+        let spb = ctx.scheme.geometry.subarrays_per_bank;
+        let banks = ctx.scheme.geometry.total_banks().max(1);
+        let bank = spread % banks;
+        let lo = crate::dram::geometry::SubarrayId(bank * spb);
+        let hi = crate::dram::geometry::SubarrayId((bank + 1) * spb);
+        let mut sticky: Option<crate::dram::geometry::SubarrayId> = None;
+        let mut regions = Vec::with_capacity(need);
+        for _ in 0..need {
+            let mut r = match sticky {
+                Some(sid) => self.free.take_from(sid),
+                None => None,
+            };
+            if r.is_none() {
+                r = self.free.take_worst_fit_in(lo, hi);
+            }
+            let r = match r {
+                Some(r) => {
+                    self.note_taken(&r);
+                    sticky = Some(r.sid);
+                    r
+                }
+                // target bank exhausted: cross-bank policy fallback
+                None => self.take_policy().expect("checked total above"),
+            };
+            self.stats.alloc_ns += ctx.timing.puma_region_ns;
+            regions.push(r);
+        }
+        self.map_regions(ctx, proc, regions, len)
+    }
+
     /// `pim_alloc_align`: co-locate with the hint allocation.
     fn alloc_align(
         &mut self,
@@ -546,6 +604,68 @@ mod tests {
         assert!(p.stats().hint_colocated >= 8);
         assert_eq!(p.hint_of(Pid(1), b), Some(a));
         assert_eq!(p.hint_of(Pid(1), a), None);
+    }
+
+    #[test]
+    fn alloc_spread_cycles_banks_and_stays_single_subarray() {
+        let mut ctx = ctx();
+        let mut proc = Process::new(Pid(1));
+        let mut p = puma(&mut ctx, 8);
+        let row = ctx.scheme.geometry.row_bytes as u64;
+        let spb = ctx.scheme.geometry.subarrays_per_bank;
+        let banks = ctx.scheme.geometry.total_banks();
+        let mut seen = Vec::new();
+        for k in 0..banks.min(4) {
+            let va = p.alloc_spread(&mut ctx, &mut proc, 4 * row, k).unwrap();
+            let regions = &p.lookup(Pid(1), va).unwrap().regions;
+            assert_eq!(regions.len(), 4);
+            let sid0 = regions[0].sid;
+            assert!(
+                regions.iter().all(|r| r.sid == sid0),
+                "spread allocation sticks to one subarray"
+            );
+            assert_eq!(sid0.0 / spb, k, "shard {k} lands on bank {k}");
+            seen.push(sid0.0 / spb);
+            // hint-chained follow-ups co-locate with the anchor
+            let b = p.alloc_align(&mut ctx, &mut proc, 4 * row, va).unwrap();
+            let rb = &p.lookup(Pid(1), b).unwrap().regions;
+            assert!(rb.iter().all(|r| r.sid == sid0));
+        }
+        seen.sort_unstable();
+        seen.dedup();
+        assert_eq!(seen.len(), banks.min(4) as usize, "banks are disjoint");
+        // spread indices past the bank count wrap deterministically
+        let va = p
+            .alloc_spread(&mut ctx, &mut proc, row, banks + 1)
+            .unwrap();
+        let sid = p.lookup(Pid(1), va).unwrap().regions[0].sid;
+        assert_eq!(sid.0 / spb, 1);
+    }
+
+    #[test]
+    fn alloc_spread_falls_back_when_the_bank_is_exhausted() {
+        let mut ctx = ctx();
+        let mut proc = Process::new(Pid(1));
+        let mut p = puma(&mut ctx, 2);
+        let row = ctx.scheme.geometry.row_bytes as u64;
+        let spb = ctx.scheme.geometry.subarrays_per_bank;
+        // drain bank 0 completely
+        let mut drained = 0usize;
+        loop {
+            let free_in_bank: usize = (0..spb)
+                .map(|s| p.free.free_in(crate::dram::geometry::SubarrayId(s)))
+                .sum();
+            if free_in_bank == 0 {
+                break;
+            }
+            p.alloc_spread(&mut ctx, &mut proc, row, 0).unwrap();
+            drained += 1;
+        }
+        assert!(drained > 0);
+        // the next spread-0 allocation still succeeds, elsewhere
+        let va = p.alloc_spread(&mut ctx, &mut proc, row, 0).unwrap();
+        let sid = p.lookup(Pid(1), va).unwrap().regions[0].sid;
+        assert_ne!(sid.0 / spb, 0, "fallback leaves the exhausted bank");
     }
 
     #[test]

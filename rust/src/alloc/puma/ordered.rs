@@ -111,6 +111,28 @@ impl OrderedArray {
         self.take_from(sid)
     }
 
+    /// Worst-fit restricted to the sid range `[lo, hi)` — the dense
+    /// sid span of one bank (sids are bank-major, so bank `b` owns
+    /// `[b * subarrays_per_bank, (b + 1) * subarrays_per_bank)`).
+    /// Backs PUMA's placement-spread path: take from the richest
+    /// subarray *of a specific bank*, ties toward the lowest sid.
+    pub fn take_worst_fit_in(
+        &mut self,
+        lo: SubarrayId,
+        hi: SubarrayId,
+    ) -> Option<Region> {
+        let mut best: Option<SubarrayId> = None;
+        for set in self.by_count.values().rev() {
+            if let Some(sid) =
+                set.iter().copied().filter(|s| *s >= lo && *s < hi).min()
+            {
+                best = Some(sid);
+                break;
+            }
+        }
+        self.take_from(best?)
+    }
+
     /// Best-fit (ablation E3): take from the *least*-populated
     /// non-empty subarray (ties toward the lowest sid).
     pub fn take_best_fit(&mut self) -> Option<Region> {
@@ -197,6 +219,32 @@ mod tests {
         oa.insert(region(9, 201));
         // first-fit = lowest sid with space = 7
         assert_eq!(oa.take_first_fit().unwrap().sid, SubarrayId(7));
+    }
+
+    #[test]
+    fn take_worst_fit_in_respects_the_range() {
+        let mut oa = OrderedArray::new();
+        for i in 0..5 {
+            oa.insert(region(7, i)); // outside [0, 4)
+        }
+        oa.insert(region(1, 100));
+        oa.insert(region(3, 101));
+        oa.insert(region(3, 102));
+        // richest sid inside [0, 4) is 3 (count 2)
+        let r = oa.take_worst_fit_in(SubarrayId(0), SubarrayId(4)).unwrap();
+        assert_eq!(r.sid, SubarrayId(3));
+        // tie at count 1 inside the range resolves to the lowest sid
+        let r = oa.take_worst_fit_in(SubarrayId(0), SubarrayId(4)).unwrap();
+        assert_eq!(r.sid, SubarrayId(1));
+        assert_eq!(
+            oa.take_worst_fit_in(SubarrayId(0), SubarrayId(4))
+                .unwrap()
+                .sid,
+            SubarrayId(3)
+        );
+        // range exhausted -> None; sid 7's regions are untouched
+        assert!(oa.take_worst_fit_in(SubarrayId(0), SubarrayId(4)).is_none());
+        assert_eq!(oa.free_in(SubarrayId(7)), 5);
     }
 
     #[test]

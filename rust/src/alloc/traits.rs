@@ -156,6 +156,24 @@ pub trait Allocator {
         self.alloc(ctx, proc, len)
     }
 
+    /// Allocate `len` bytes placed for *bank-level spreading*: the
+    /// anchor of shard `spread` of a sharded layout. PUMA targets the
+    /// richest subarray of bank `spread % total_banks` (and sticks to
+    /// one subarray across the allocation's regions), so sibling
+    /// shards land on disjoint bank command timelines and the batch
+    /// scheduler can overlap them — MIMDRAM-style SIMD. Baseline
+    /// allocators ignore the spread exactly as they ignore hints.
+    fn alloc_spread(
+        &mut self,
+        ctx: &mut OsCtx,
+        proc: &mut Process,
+        len: u64,
+        spread: u32,
+    ) -> Result<u64> {
+        let _ = spread;
+        self.alloc(ctx, proc, len)
+    }
+
     /// Release the allocation at `va`.
     fn free(&mut self, ctx: &mut OsCtx, proc: &mut Process, va: u64) -> Result<()>;
 

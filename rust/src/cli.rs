@@ -67,7 +67,7 @@ pub fn build_config(cli: &Cli) -> Result<Config> {
     // command-specific flags are not config keys
     for k in [
         "micro", "alloc", "size", "batch", "tenants", "epochs", "mode",
-        "clauses", "widths", "elems", "threshold",
+        "clauses", "widths", "elems", "threshold", "shards",
     ] {
         overrides.remove(k);
     }
@@ -184,7 +184,16 @@ pub fn run(args: &[String]) -> Result<i32> {
                 .get("alloc")
                 .map(|a| parse_alloc(a))
                 .transpose()?;
-            cmd_analytics(&cfg, widths, elems, threshold, alloc)
+            let shards: Option<Vec<usize>> = cli
+                .flags
+                .get("shards")
+                .map(|s| {
+                    s.split(',')
+                        .map(|x| x.trim().parse::<usize>().context("shards"))
+                        .collect::<Result<_>>()
+                })
+                .transpose()?;
+            cmd_analytics(&cfg, widths, elems, threshold, alloc, shards)
         }
         "micro" => {
             let cfg = build_config(&cli)?;
@@ -227,6 +236,8 @@ commands:
   analytics    filter-then-sum over a vertical (bit-transposed) column
                table, swept over bit-widths and allocators:
                --widths 4,8,16 --elems N --threshold FRAC [--alloc NAME]
+               [--shards 1,2,4,8: MIMDRAM-style bank-sharded SIMD scale
+               sweep, each cell verified against the unsharded path]
   info         print machine description and artifact inventory
   help         this text
 
@@ -318,16 +329,8 @@ fn cmd_analytics(
     elems: usize,
     threshold: f64,
     alloc: Option<AllocatorKind>,
+    shards: Option<Vec<usize>>,
 ) -> Result<i32> {
-    let acfg = crate::workloads::analytics::AnalyticsConfig {
-        elems,
-        widths,
-        threshold_frac: threshold,
-        huge_pages: cfg.huge_pages,
-        puma_pages: cfg.puma_pages.max(2),
-        churn_rounds: cfg.churn_rounds,
-        seed: cfg.seed,
-    };
     let kinds: Vec<AllocatorKind> = match alloc {
         Some(k) => vec![k],
         None => vec![
@@ -336,6 +339,45 @@ fn cmd_analytics(
             AllocatorKind::HugePages,
             AllocatorKind::Puma(FitPolicy::WorstFit),
         ],
+    };
+    if let Some(shards) = shards {
+        // sharded scale sweep: every sharded cell is verified against
+        // the unsharded path inside the workload
+        let scfg = crate::workloads::analytics::ShardedConfig {
+            elems,
+            widths,
+            shards,
+            threshold_frac: threshold,
+            huge_pages: cfg.huge_pages,
+            puma_pages: cfg.puma_pages.max(2),
+            churn_rounds: cfg.churn_rounds,
+            seed: cfg.seed,
+        };
+        eprintln!(
+            "running sharded analytics sweep: {} width(s) x {} shard count(s) \
+             x {} allocator(s), {} elems ...",
+            scfg.widths.len(),
+            scfg.shards.len(),
+            kinds.len(),
+            scfg.elems
+        );
+        let results =
+            crate::workloads::analytics::sweep_sharded(&cfg.scheme, &scfg, &kinds)?;
+        println!("{}", report::analytics_sharded(&results, Some(&cfg.out))?);
+        println!(
+            "(raw series: {}/analytics_sharded.csv)",
+            cfg.out.display()
+        );
+        return Ok(0);
+    }
+    let acfg = crate::workloads::analytics::AnalyticsConfig {
+        elems,
+        widths,
+        threshold_frac: threshold,
+        huge_pages: cfg.huge_pages,
+        puma_pages: cfg.puma_pages.max(2),
+        churn_rounds: cfg.churn_rounds,
+        seed: cfg.seed,
     };
     eprintln!(
         "running analytics sweep: {} width(s) x {} allocator(s), {} elems ...",
@@ -558,11 +600,13 @@ mod tests {
     fn analytics_flags_are_command_specific_not_config() {
         let cli = parse_args(&args(&[
             "analytics", "--widths", "4,8", "--elems", "4096", "--threshold",
-            "0.25", "--alloc", "puma", "--puma_pages", "4",
+            "0.25", "--alloc", "puma", "--puma_pages", "4", "--shards", "1,4",
         ]))
         .unwrap();
         assert_eq!(cli.flags["widths"], "4,8");
-        // widths/elems/threshold/alloc must not be rejected as config keys
+        assert_eq!(cli.flags["shards"], "1,4");
+        // widths/elems/threshold/alloc/shards must not be rejected as
+        // config keys
         let cfg = build_config(&cli).unwrap();
         assert_eq!(cfg.puma_pages, 4);
     }

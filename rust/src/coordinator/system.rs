@@ -15,7 +15,10 @@ use crate::dram::address::InterleaveScheme;
 use crate::dram::device::DramDevice;
 use crate::dram::timing::TimingParams;
 use crate::os::process::{Pid, Process};
-use crate::pud::arith::{self, ArithOp, VerticalLayout};
+use crate::pud::arith::{
+    self, ArithOp, ProgramCache, ProgramCacheStats, ProgramKey, ShardedLayout,
+    ShardedScratch, VerticalLayout,
+};
 use crate::pud::compiler::{self, Compiled, CompiledMulti, CompileStats, Expr};
 use crate::pud::exec::PudEngine;
 use crate::pud::isa::BulkRequest;
@@ -83,6 +86,10 @@ pub struct System {
     next_pid: u32,
     /// Per-process request queues drained by [`System::flush`].
     queued: FxHashMap<Pid, Vec<BulkRequest>>,
+    /// The `(ArithOp, width)` compiled-program cache: every arithmetic
+    /// entry point compiles each kernel exactly once per key and binds
+    /// it per column (and per shard) thereafter.
+    programs: ProgramCache,
 }
 
 impl System {
@@ -104,7 +111,20 @@ impl System {
             processes: FxHashMap::default(),
             next_pid: 1,
             queued: FxHashMap::default(),
+            programs: ProgramCache::new(),
         })
+    }
+
+    /// Hit/miss counters of the compiled-program cache.
+    pub fn program_cache_stats(&self) -> ProgramCacheStats {
+        self.programs.stats
+    }
+
+    /// Drop every cached compiled program (see `ProgramCache::clear`)
+    /// — the release valve after sweeping many distinct constant
+    /// thresholds.
+    pub fn clear_program_cache(&mut self) {
+        self.programs.clear();
     }
 
     /// Spawn a fresh process address space.
@@ -145,6 +165,20 @@ impl System {
     ) -> Result<u64> {
         let proc = self.processes.get_mut(&pid).expect("live pid");
         alloc.alloc_align(&mut self.os, proc, len, hint)
+    }
+
+    /// Allocate placed for bank-level spreading (shard `spread` of a
+    /// sharded layout; see `Allocator::alloc_spread` — the baselines
+    /// ignore the spread as they ignore hints).
+    pub fn alloc_spread(
+        &mut self,
+        alloc: &mut dyn Allocator,
+        pid: Pid,
+        len: u64,
+        spread: u32,
+    ) -> Result<u64> {
+        let proc = self.processes.get_mut(&pid).expect("live pid");
+        alloc.alloc_spread(&mut self.os, proc, len, spread)
     }
 
     /// Free an allocation.
@@ -370,8 +404,10 @@ impl System {
             op.out_width(a.width()),
             dst.width()
         );
-        let compiled = arith::compile_kernel(op, a.width());
-        self.run_multi(
+        let (compiled, hit) = self
+            .programs
+            .get_or_compile(ProgramKey::Kernel(op, a.width()));
+        let mut rep = self.run_multi(
             alloc,
             pid,
             &compiled,
@@ -379,7 +415,66 @@ impl System {
             dst.planes(),
             a.plane_len(),
             pool,
-        )
+        )?;
+        if hit {
+            rep.stats.compiles = 0;
+        }
+        Ok(rep)
+    }
+
+    /// As [`System::run_arith`] with operand `b` folded to the
+    /// constant `rhs` at compile time (`arith::kernel_const`): the
+    /// optimizer collapses the chain against the literal bits before a
+    /// single request is emitted, and the compiled program is cached
+    /// per `(op, width, rhs)`.
+    pub fn run_arith_const(
+        &mut self,
+        alloc: &mut dyn Allocator,
+        pid: Pid,
+        op: ArithOp,
+        rhs: u64,
+        a: &VerticalLayout,
+        dst: &VerticalLayout,
+        pool: &mut ScratchPool,
+    ) -> Result<ExprReport> {
+        ensure!(op.is_binary(), "{} takes no second operand", op.name());
+        ensure!(
+            a.width() <= arith::MAX_WIDTH,
+            "{}-bit operands exceed the {}-bit kernel limit",
+            a.width(),
+            arith::MAX_WIDTH
+        );
+        ensure!(
+            dst.elems() == a.elems(),
+            "dst holds {} element(s), operand {}",
+            dst.elems(),
+            a.elems()
+        );
+        ensure!(
+            dst.width() == op.out_width(a.width()),
+            "{} over {}-bit operands writes {} plane(s), dst has {}",
+            op.name(),
+            a.width(),
+            op.out_width(a.width()),
+            dst.width()
+        );
+        let rhs = rhs & arith::width_mask(a.width());
+        let (compiled, hit) = self
+            .programs
+            .get_or_compile(ProgramKey::KernelConst(op, a.width(), rhs));
+        let mut rep = self.run_multi(
+            alloc,
+            pid,
+            &compiled,
+            a.planes(),
+            dst.planes(),
+            a.plane_len(),
+            pool,
+        )?;
+        if hit {
+            rep.stats.compiles = 0;
+        }
+        Ok(rep)
     }
 
     /// Filter-then-sum reduction over a vertical column: with a
@@ -403,12 +498,16 @@ impl System {
         let Some(mask_va) = mask else {
             let mut sum: u128 = 0;
             for (i, &va) in values.planes().iter().enumerate() {
+                // len == ceil(elems / 8) by construction, so padding is
+                // < 8 bits here — popcount_live tolerates more anyway
                 let bits = self.read_virt(pid, va, len)?;
                 sum += (arith::popcount_live(&bits, values.elems()) as u128) << i;
             }
             return Ok((sum, None));
         };
-        let compiled = compiler::compile_multi(&arith::mask_planes(values.width()));
+        let (compiled, hit) = self
+            .programs
+            .get_or_compile(ProgramKey::MaskPlanes(values.width()));
         // lease the masked output planes and the program's scratch
         // from the same pool: slots [0, w) are dsts, the rest scratch
         let need = w + compiled.scratch_needed();
@@ -420,18 +519,325 @@ impl System {
         let reqs = compiled.emit(&operands, &dsts, len, &scratch)?;
         let (pud0, fb0) = (self.coord.stats.pud_rows, self.coord.stats.fallback_rows);
         let batch = self.submit_batch(pid, &reqs)?;
+        let mut stats = compiled.stats.clone();
+        if hit {
+            stats.compiles = 0;
+        }
         let report = ExprReport {
             batch,
-            stats: compiled.stats.clone(),
+            stats,
             pud_rows: self.coord.stats.pud_rows - pud0,
             fallback_rows: self.coord.stats.fallback_rows - fb0,
         };
         let mut sum: u128 = 0;
         for (i, &va) in dsts.iter().enumerate() {
+            // len == ceil(elems / 8): the leased slot may be longer,
+            // but only the live prefix is read back and counted
             let bits = self.read_virt(pid, va, len)?;
             sum += (arith::popcount_live(&bits, values.elems()) as u128) << i;
         }
         Ok((sum, Some(report)))
+    }
+
+    /// Run a compiled multi-output program once per shard as ONE
+    /// batch: shard `k` leases its scratch from `pools.pool(k)`
+    /// (hinted to its own anchor), the per-shard request streams are
+    /// interleaved round-robin so wave `w` carries every shard's
+    /// `w`-th request, and the hazard-wave scheduler overlaps the
+    /// shards across their disjoint banks while each shard's own
+    /// dependency chain still serializes — the MIMDRAM SIMD execution
+    /// model (DESIGN.md §11).
+    fn submit_multi_sharded(
+        &mut self,
+        alloc: &mut dyn Allocator,
+        pid: Pid,
+        compiled: &CompiledMulti,
+        bindings: &[ShardBinding],
+        pools: &mut ShardedScratch,
+    ) -> Result<ExprReport> {
+        ensure!(!bindings.is_empty(), "sharded run over zero shards");
+        let need = compiled.scratch_needed();
+        let mut per_shard: Vec<Vec<BulkRequest>> =
+            Vec::with_capacity(bindings.len());
+        for (k, b) in bindings.iter().enumerate() {
+            self.lease_scratch(alloc, pid, pools.pool(k), need, b.len, Some(b.hint))?;
+            per_shard.push(compiled.emit(
+                &b.operands,
+                &b.dsts,
+                b.len,
+                pools.pool(k).slots(),
+            )?);
+        }
+        let reqs = interleave_rounds(per_shard);
+        let (pud0, fb0) =
+            (self.coord.stats.pud_rows, self.coord.stats.fallback_rows);
+        let batch = self.submit_batch(pid, &reqs)?;
+        Ok(ExprReport {
+            batch,
+            stats: compiled.stats.clone(),
+            pud_rows: self.coord.stats.pud_rows - pud0,
+            fallback_rows: self.coord.stats.fallback_rows - fb0,
+        })
+    }
+
+    /// As [`System::run_arith`] over bank-sharded columns: the
+    /// `(op, width)` kernel is compiled ONCE (program cache), emitted
+    /// once per shard, and submitted as ONE batch whose waves overlap
+    /// the shards across banks — the batch makespan drops toward
+    /// `1/min(S, banks)` of the single-subarray layout's.
+    pub fn run_arith_sharded(
+        &mut self,
+        alloc: &mut dyn Allocator,
+        pid: Pid,
+        op: ArithOp,
+        a: &ShardedLayout,
+        b: Option<&ShardedLayout>,
+        dst: &ShardedLayout,
+        pools: &mut ShardedScratch,
+    ) -> Result<ExprReport> {
+        ensure!(
+            op.is_binary() == b.is_some(),
+            "{} is {}",
+            op.name(),
+            if op.is_binary() { "binary" } else { "unary" }
+        );
+        ensure!(
+            a.width() <= arith::MAX_WIDTH,
+            "{}-bit operands exceed the {}-bit kernel limit",
+            a.width(),
+            arith::MAX_WIDTH
+        );
+        if let Some(b) = b {
+            ensure!(
+                b.width() == a.width()
+                    && b.elems() == a.elems()
+                    && b.n_shards() == a.n_shards(),
+                "operand shapes differ: {}x{}x{} vs {}x{}x{} shard(s)",
+                a.elems(),
+                a.width(),
+                a.n_shards(),
+                b.elems(),
+                b.width(),
+                b.n_shards()
+            );
+        }
+        ensure!(
+            dst.elems() == a.elems() && dst.n_shards() == a.n_shards(),
+            "dst holds {}x{} shard(s), operands {}x{}",
+            dst.elems(),
+            dst.n_shards(),
+            a.elems(),
+            a.n_shards()
+        );
+        ensure!(
+            dst.width() == op.out_width(a.width()),
+            "{} over {}-bit operands writes {} plane(s), dst has {}",
+            op.name(),
+            a.width(),
+            op.out_width(a.width()),
+            dst.width()
+        );
+        let (compiled, hit) = self
+            .programs
+            .get_or_compile(ProgramKey::Kernel(op, a.width()));
+        let mut bindings = Vec::with_capacity(a.n_shards());
+        for k in 0..a.n_shards() {
+            let pa = a.shard(k);
+            ensure!(
+                dst.shard(k).elems() == pa.elems(),
+                "shard {k}: dst holds {} element(s), operand {}",
+                dst.shard(k).elems(),
+                pa.elems()
+            );
+            let mut operands: Vec<u64> = pa.planes().to_vec();
+            if let Some(b) = b {
+                ensure!(
+                    b.shard(k).elems() == pa.elems(),
+                    "shard {k}: operand shard sizes differ"
+                );
+                operands.extend_from_slice(b.shard(k).planes());
+            }
+            bindings.push(ShardBinding {
+                operands,
+                dsts: dst.shard(k).planes().to_vec(),
+                len: pa.plane_len(),
+                hint: pa.hint(),
+            });
+        }
+        let mut rep =
+            self.submit_multi_sharded(alloc, pid, &compiled, &bindings, pools)?;
+        if hit {
+            rep.stats.compiles = 0;
+        }
+        Ok(rep)
+    }
+
+    /// As [`System::run_arith_const`] over bank-sharded columns: one
+    /// cached constant-folded program, one batch, waves overlapped
+    /// across the shards' banks.
+    pub fn run_arith_const_sharded(
+        &mut self,
+        alloc: &mut dyn Allocator,
+        pid: Pid,
+        op: ArithOp,
+        rhs: u64,
+        a: &ShardedLayout,
+        dst: &ShardedLayout,
+        pools: &mut ShardedScratch,
+    ) -> Result<ExprReport> {
+        ensure!(op.is_binary(), "{} takes no second operand", op.name());
+        ensure!(
+            a.width() <= arith::MAX_WIDTH,
+            "{}-bit operands exceed the {}-bit kernel limit",
+            a.width(),
+            arith::MAX_WIDTH
+        );
+        ensure!(
+            dst.elems() == a.elems() && dst.n_shards() == a.n_shards(),
+            "dst holds {}x{} shard(s), operand {}x{}",
+            dst.elems(),
+            dst.n_shards(),
+            a.elems(),
+            a.n_shards()
+        );
+        ensure!(
+            dst.width() == op.out_width(a.width()),
+            "{} over {}-bit operands writes {} plane(s), dst has {}",
+            op.name(),
+            a.width(),
+            op.out_width(a.width()),
+            dst.width()
+        );
+        let rhs = rhs & arith::width_mask(a.width());
+        let (compiled, hit) = self
+            .programs
+            .get_or_compile(ProgramKey::KernelConst(op, a.width(), rhs));
+        let mut bindings = Vec::with_capacity(a.n_shards());
+        for k in 0..a.n_shards() {
+            let pa = a.shard(k);
+            ensure!(
+                dst.shard(k).elems() == pa.elems(),
+                "shard {k}: dst holds {} element(s), operand {}",
+                dst.shard(k).elems(),
+                pa.elems()
+            );
+            bindings.push(ShardBinding {
+                operands: pa.planes().to_vec(),
+                dsts: dst.shard(k).planes().to_vec(),
+                len: pa.plane_len(),
+                hint: pa.hint(),
+            });
+        }
+        let mut rep =
+            self.submit_multi_sharded(alloc, pid, &compiled, &bindings, pools)?;
+        if hit {
+            rep.stats.compiles = 0;
+        }
+        Ok(rep)
+    }
+
+    /// As [`System::arith_sum`] over a bank-sharded column: every
+    /// shard's plane-AND masking lands in the same single batch (waves
+    /// overlapped across banks), then the host reads each shard's W
+    /// masked planes and tree-reduces — `popcount_live` is applied
+    /// per shard with that shard's element count, so the ragged last
+    /// shard's padding never miscounts.
+    pub fn arith_sum_sharded(
+        &mut self,
+        alloc: &mut dyn Allocator,
+        pid: Pid,
+        values: &ShardedLayout,
+        mask: Option<&ShardedLayout>,
+        pools: &mut ShardedScratch,
+    ) -> Result<(u128, Option<ExprReport>)> {
+        let w = values.width() as usize;
+        let Some(mask) = mask else {
+            let mut sum: u128 = 0;
+            for part in values.shards() {
+                for (i, &va) in part.planes().iter().enumerate() {
+                    let bits = self.read_virt(pid, va, part.plane_len())?;
+                    sum +=
+                        (arith::popcount_live(&bits, part.elems()) as u128) << i;
+                }
+            }
+            return Ok((sum, None));
+        };
+        ensure!(mask.width() == 1, "predicate mask must be a 1-bit column");
+        ensure!(
+            mask.elems() == values.elems() && mask.n_shards() == values.n_shards(),
+            "mask holds {}x{} shard(s), values {}x{}",
+            mask.elems(),
+            mask.n_shards(),
+            values.elems(),
+            values.n_shards()
+        );
+        let (compiled, hit) = self
+            .programs
+            .get_or_compile(ProgramKey::MaskPlanes(values.width()));
+        let need = w + compiled.scratch_needed();
+        let mut per_shard: Vec<Vec<BulkRequest>> =
+            Vec::with_capacity(values.n_shards());
+        let mut dsts_per_shard: Vec<Vec<u64>> =
+            Vec::with_capacity(values.n_shards());
+        for (k, part) in values.shards().iter().enumerate() {
+            ensure!(
+                mask.shard(k).elems() == part.elems(),
+                "shard {k}: mask shard sizes differ"
+            );
+            let len = part.plane_len();
+            self.lease_scratch(
+                alloc,
+                pid,
+                pools.pool(k),
+                need,
+                len,
+                Some(part.hint()),
+            )?;
+            let pool = pools.pool(k);
+            let dsts: Vec<u64> = pool.slots()[..w].to_vec();
+            let scratch: Vec<u64> = pool.slots()[w..need].to_vec();
+            let mut operands: Vec<u64> = part.planes().to_vec();
+            operands.push(mask.shard(k).planes()[0]);
+            per_shard.push(compiled.emit(&operands, &dsts, len, &scratch)?);
+            dsts_per_shard.push(dsts);
+        }
+        let reqs = interleave_rounds(per_shard);
+        let (pud0, fb0) =
+            (self.coord.stats.pud_rows, self.coord.stats.fallback_rows);
+        let batch = self.submit_batch(pid, &reqs)?;
+        let mut stats = compiled.stats.clone();
+        if hit {
+            stats.compiles = 0;
+        }
+        let report = ExprReport {
+            batch,
+            stats,
+            pud_rows: self.coord.stats.pud_rows - pud0,
+            fallback_rows: self.coord.stats.fallback_rows - fb0,
+        };
+        let mut sum: u128 = 0;
+        for (k, part) in values.shards().iter().enumerate() {
+            for (i, &va) in dsts_per_shard[k].iter().enumerate() {
+                let bits = self.read_virt(pid, va, part.plane_len())?;
+                sum += (arith::popcount_live(&bits, part.elems()) as u128) << i;
+            }
+        }
+        Ok((sum, Some(report)))
+    }
+
+    /// Trim every per-shard pool of `pools` to at most `keep` resident
+    /// buffers — [`System::trim_scratch`], shard-wise.
+    pub fn trim_scratch_sharded(
+        &mut self,
+        alloc: &mut dyn Allocator,
+        pid: Pid,
+        pools: &mut ShardedScratch,
+        keep: usize,
+    ) -> Result<()> {
+        for k in 0..pools.n_pools() {
+            self.trim_scratch(alloc, pid, pools.pool(k), keep)?;
+        }
+        Ok(())
     }
 
     /// Trim `pool` to at most `keep` resident buffers (see
@@ -487,6 +893,40 @@ impl System {
         }
         Ok(out)
     }
+}
+
+/// One shard's address binding of a compiled multi-output program.
+struct ShardBinding {
+    operands: Vec<u64>,
+    dsts: Vec<u64>,
+    len: u64,
+    /// Scratch co-location hint (the shard's anchor plane).
+    hint: u64,
+}
+
+/// Round-robin merge of per-shard request streams: position `i` of
+/// every shard lands adjacent in the batch, so the wave builder (which
+/// scans in submission order) groups the shards' independent step-`i`
+/// requests into one wave and overlaps them across banks, while each
+/// shard's own step `i+1` — which depends on its step `i` — starts the
+/// next wave.
+fn interleave_rounds(per_shard: Vec<Vec<BulkRequest>>) -> Vec<BulkRequest> {
+    let total = per_shard.iter().map(Vec::len).sum();
+    let mut streams: Vec<std::vec::IntoIter<BulkRequest>> =
+        per_shard.into_iter().map(Vec::into_iter).collect();
+    let mut out = Vec::with_capacity(total);
+    loop {
+        let before = out.len();
+        for stream in &mut streams {
+            if let Some(r) = stream.next() {
+                out.push(r);
+            }
+        }
+        if out.len() == before {
+            break;
+        }
+    }
+    out
 }
 
 fn extents_with_offsets(
@@ -883,6 +1323,189 @@ mod tests {
         assert!(sys
             .run_arith(&mut m, pid, ArithOp::Popcount, &a, None, &pc, &mut pool)
             .is_ok());
+    }
+
+    #[test]
+    fn program_cache_makes_repeat_kernels_compile_free() {
+        use crate::alloc::scratch::ScratchPool;
+        use crate::pud::arith::{ArithOp, VerticalLayout};
+
+        let mut sys = small_system();
+        let pid = sys.spawn();
+        let mut m = MallocSim::new();
+        let a = VerticalLayout::alloc(&mut sys, &mut m, pid, 4, 64).unwrap();
+        let b = VerticalLayout::alloc(&mut sys, &mut m, pid, 4, 64).unwrap();
+        let dst = VerticalLayout::alloc(&mut sys, &mut m, pid, 4, 64).unwrap();
+        let vals: Vec<u64> = (0..64).map(|i| (i as u64) % 16).collect();
+        a.store(&mut sys, pid, &vals).unwrap();
+        b.store(&mut sys, pid, &vals).unwrap();
+        let mut pool = ScratchPool::new();
+        let rep1 = sys
+            .run_arith(&mut m, pid, ArithOp::Add, &a, Some(&b), &dst, &mut pool)
+            .unwrap();
+        assert_eq!(rep1.stats.compiles, 1, "first call compiles");
+        let s1 = sys.program_cache_stats();
+        assert_eq!((s1.misses, s1.hits), (1, 0));
+        let rep2 = sys
+            .run_arith(&mut m, pid, ArithOp::Add, &a, Some(&b), &dst, &mut pool)
+            .unwrap();
+        assert_eq!(rep2.stats.compiles, 0, "second call does zero compile work");
+        let s2 = sys.program_cache_stats();
+        assert_eq!((s2.misses, s2.hits), (1, 1));
+        assert_eq!(dst.load(&mut sys, pid).unwrap()[3], (3 + 3) % 16);
+        // the masked-sum plane program is cached too
+        let mask = VerticalLayout::alloc(&mut sys, &mut m, pid, 1, 64).unwrap();
+        sys.run_arith(&mut m, pid, ArithOp::CmpLt, &a, Some(&b), &mask, &mut pool)
+            .unwrap();
+        let (sum1, _) = sys
+            .arith_sum(&mut m, pid, &a, Some(mask.planes()[0]), &mut pool)
+            .unwrap();
+        let misses = sys.program_cache_stats().misses; // Add, CmpLt, MaskPlanes
+        assert_eq!(misses, 3);
+        let (sum2, rep) = sys
+            .arith_sum(&mut m, pid, &a, Some(mask.planes()[0]), &mut pool)
+            .unwrap();
+        assert_eq!(sum1, sum2);
+        assert_eq!(rep.unwrap().stats.compiles, 0);
+        assert_eq!(sys.program_cache_stats().misses, misses);
+    }
+
+    #[test]
+    fn sharded_arith_matches_unsharded_and_overlaps_banks() {
+        use crate::alloc::scratch::ScratchPool;
+        use crate::pud::arith::{
+            self, ArithOp, ShardedLayout, ShardedScratch, VerticalLayout,
+        };
+        use crate::util::rng::Pcg64;
+
+        let mut sys = small_system();
+        let pid = sys.spawn();
+        let row = sys.os.scheme.geometry.row_bytes as u64;
+        let spb = sys.os.scheme.geometry.subarrays_per_bank;
+        let mut puma = PumaAlloc::new(row, FitPolicy::WorstFit);
+        puma.pim_preallocate(&mut sys.os, 6).unwrap();
+        let width = 4u32;
+        let elems = (row * 8 * 4) as usize; // 4 rows per unsharded plane
+        let wmask = arith::width_mask(width);
+        let mut rng = Pcg64::new(0x5AAD);
+        let values: Vec<u64> = (0..elems).map(|_| rng.next_u64() & wmask).collect();
+        let thr = 8u64;
+
+        // unsharded reference result
+        let col =
+            VerticalLayout::alloc(&mut sys, &mut puma, pid, width, elems).unwrap();
+        col.store(&mut sys, pid, &values).unwrap();
+        let mask = VerticalLayout::alloc_with_hint(
+            &mut sys, &mut puma, pid, 1, elems, col.hint(),
+        )
+        .unwrap();
+        let mut pool = ScratchPool::new();
+        sys.run_arith_const(&mut puma, pid, ArithOp::CmpLt, thr, &col, &mask, &mut pool)
+            .unwrap();
+        let (want_sum, _) = sys
+            .arith_sum(&mut puma, pid, &col, Some(mask.planes()[0]), &mut pool)
+            .unwrap();
+        sys.trim_scratch(&mut puma, pid, &mut pool, 0).unwrap();
+        mask.free(&mut sys, &mut puma, pid).unwrap();
+        col.free(&mut sys, &mut puma, pid).unwrap();
+
+        let mut elapsed = Vec::new();
+        for shards in [1usize, 2] {
+            let col = ShardedLayout::alloc(
+                &mut sys, &mut puma, pid, width, elems, shards,
+            )
+            .unwrap();
+            col.store(&mut sys, pid, &values).unwrap();
+            // shard anchors land on disjoint banks
+            let mut banks: Vec<u32> = col
+                .shards()
+                .iter()
+                .map(|p| {
+                    puma.lookup(pid, p.hint()).unwrap().regions[0].sid.0 / spb
+                })
+                .collect();
+            banks.sort_unstable();
+            banks.dedup();
+            assert_eq!(banks.len(), shards, "S={shards}: banks disjoint");
+            let mask =
+                ShardedLayout::alloc_like(&mut sys, &mut puma, pid, 1, &col)
+                    .unwrap();
+            let mut pools = ShardedScratch::new();
+            let rep = sys
+                .run_arith_const_sharded(
+                    &mut puma, pid, ArithOp::CmpLt, thr, &col, &mask, &mut pools,
+                )
+                .unwrap();
+            assert!(
+                rep.pud_row_fraction() > 0.99,
+                "S={shards}: spread shards stay in-DRAM, got {}",
+                rep.pud_row_fraction()
+            );
+            // the sharded mask is bit-identical to the scalar predicate
+            let got = mask.load(&mut sys, pid).unwrap();
+            for (i, (&g, &v)) in got.iter().zip(&values).enumerate() {
+                assert_eq!(g == 1, v < thr, "mask bit {i} (S={shards})");
+            }
+            let (sum, srep) = sys
+                .arith_sum_sharded(&mut puma, pid, &col, Some(&mask), &mut pools)
+                .unwrap();
+            assert_eq!(sum, want_sum, "S={shards}: sum identical to unsharded");
+            let srep = srep.expect("masked sum batches");
+            assert!(srep.pud_row_fraction() > 0.99);
+            elapsed.push(rep.batch.elapsed_ns + srep.batch.elapsed_ns);
+            sys.trim_scratch_sharded(&mut puma, pid, &mut pools, 0).unwrap();
+            mask.free(&mut sys, &mut puma, pid).unwrap();
+            col.free(&mut sys, &mut puma, pid).unwrap();
+        }
+        assert!(
+            elapsed[1] < elapsed[0],
+            "bank-sharded batch must finish sooner: S=2 {} vs S=1 {}",
+            elapsed[1],
+            elapsed[0]
+        );
+    }
+
+    #[test]
+    fn sharded_arith_validates_shapes() {
+        use crate::pud::arith::{ArithOp, ShardedLayout, ShardedScratch};
+
+        let mut sys = small_system();
+        let pid = sys.spawn();
+        let mut m = MallocSim::new();
+        let a = ShardedLayout::alloc(&mut sys, &mut m, pid, 4, 100, 3).unwrap();
+        assert_eq!(a.n_shards(), 3);
+        let b = ShardedLayout::alloc_like(&mut sys, &mut m, pid, 4, &a).unwrap();
+        let other = ShardedLayout::alloc(&mut sys, &mut m, pid, 4, 100, 2).unwrap();
+        let narrow = ShardedLayout::alloc_like(&mut sys, &mut m, pid, 2, &a).unwrap();
+        let mut pools = ShardedScratch::new();
+        assert!(
+            sys.run_arith_sharded(&mut m, pid, ArithOp::Add, &a, None, &b, &mut pools)
+                .is_err(),
+            "binary op without b"
+        );
+        assert!(
+            sys.run_arith_sharded(
+                &mut m, pid, ArithOp::Add, &a, Some(&other), &b, &mut pools
+            )
+            .is_err(),
+            "shard-count mismatch"
+        );
+        assert!(
+            sys.run_arith_sharded(
+                &mut m, pid, ArithOp::Add, &a, Some(&b), &narrow, &mut pools
+            )
+            .is_err(),
+            "dst width mismatch"
+        );
+        assert!(
+            sys.arith_sum_sharded(&mut m, pid, &a, Some(&narrow), &mut pools)
+                .is_err(),
+            "mask must be 1-bit"
+        );
+        assert!(sys
+            .run_arith_sharded(&mut m, pid, ArithOp::Add, &a, Some(&b), &b, &mut pools)
+            .is_err(),
+            "dst aliasing an operand is rejected by emit");
     }
 
     #[test]

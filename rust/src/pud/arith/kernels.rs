@@ -16,8 +16,9 @@
 
 use super::super::compiler::{ExprBuilder, ExprId, MultiExpr};
 
-/// Which arithmetic kernel.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+/// Which arithmetic kernel. `Hash`/`Eq` so `(ArithOp, width)` can key
+/// the system's compiled-program cache.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum ArithOp {
     /// Wrapping W-bit add.
     Add,

@@ -54,15 +54,24 @@ pub fn untranspose(planes: &[Vec<u8>], elems: usize) -> Vec<u64> {
 }
 
 /// Set bits among the first `elems` bit positions of `bits` — a
-/// padding-safe popcount (the final byte's spare bits can be set by
-/// kernels whose padding-lane inputs are all-zero, e.g. `0 < T`).
+/// padding-safe popcount (padding-lane bits can be set by kernels
+/// whose padding-lane inputs are all-zero, e.g. `0 < T`).
+///
+/// The buffer may be arbitrarily longer than `ceil(elems / 8)`: a
+/// plane read back at full row length (or a ragged shard bound to a
+/// uniform-length scratch slot) carries whole trailing pad *bytes* on
+/// top of the final byte's pad bits, and every one of them is ignored.
+/// (A previous version only masked the final byte and underflowed the
+/// shift for `pad >= 8`, miscounting — or debug-panicking on — any
+/// row-padded buffer.)
 pub fn popcount_live(bits: &[u8], elems: usize) -> u64 {
-    let mut total: u64 = bits.iter().map(|b| b.count_ones() as u64).sum();
-    let pad = bits.len() as u64 * 8 - elems as u64;
-    if pad > 0 {
-        let last = *bits.last().expect("pad > 0 implies a final byte");
-        let pad_mask = 0xFFu8 << (8 - pad as u32);
-        total -= (last & pad_mask).count_ones() as u64;
+    // whole live bytes, clamped to the buffer
+    let full = (elems / 8).min(bits.len());
+    let mut total: u64 = bits[..full].iter().map(|b| b.count_ones() as u64).sum();
+    // partial live byte: keep only the low `elems % 8` bits
+    if elems % 8 != 0 && full < bits.len() {
+        let keep = (1u8 << (elems % 8)) - 1;
+        total += (bits[full] & keep).count_ones() as u64;
     }
     total
 }
@@ -78,20 +87,27 @@ pub struct VerticalLayout {
 }
 
 impl VerticalLayout {
-    /// Allocate the planes with `alloc`: the first through the plain
-    /// path, the rest hint-aligned to it (the paper's `pim_alloc` /
-    /// `pim_alloc_align` protocol; baselines ignore the hint).
-    pub fn alloc(
+    /// Bytes per plane of an `elems`-element column, after validating
+    /// the shape — the shared prologue of the constructors.
+    fn checked_plane_len(width: u32, elems: usize) -> Result<u64> {
+        ensure!((1..=64).contains(&width), "width {width} out of range");
+        ensure!(elems > 0, "empty column");
+        Ok(elems.div_ceil(8) as u64)
+    }
+
+    /// Chain `width - 1` further planes hint-aligned to the
+    /// already-placed anchor plane `first` and assemble the layout —
+    /// the shared body of [`VerticalLayout::alloc`] and
+    /// [`VerticalLayout::alloc_spread`].
+    fn chain_to_anchor(
         sys: &mut System,
         alloc: &mut dyn Allocator,
         pid: Pid,
         width: u32,
         elems: usize,
+        plane_len: u64,
+        first: u64,
     ) -> Result<Self> {
-        ensure!((1..=64).contains(&width), "width {width} out of range");
-        ensure!(elems > 0, "empty column");
-        let plane_len = elems.div_ceil(8) as u64;
-        let first = sys.alloc(alloc, pid, plane_len)?;
         let mut planes = vec![first];
         for _ in 1..width {
             planes.push(sys.alloc_align(alloc, pid, plane_len, first)?);
@@ -102,6 +118,41 @@ impl VerticalLayout {
             plane_len,
             planes,
         })
+    }
+
+    /// Allocate the planes with `alloc`: the first through the plain
+    /// path, the rest hint-aligned to it (the paper's `pim_alloc` /
+    /// `pim_alloc_align` protocol; baselines ignore the hint).
+    pub fn alloc(
+        sys: &mut System,
+        alloc: &mut dyn Allocator,
+        pid: Pid,
+        width: u32,
+        elems: usize,
+    ) -> Result<Self> {
+        let plane_len = Self::checked_plane_len(width, elems)?;
+        let first = sys.alloc(alloc, pid, plane_len)?;
+        Self::chain_to_anchor(sys, alloc, pid, width, elems, plane_len, first)
+    }
+
+    /// Allocate with the first plane placed through the allocator's
+    /// placement-spread path (`Allocator::alloc_spread`, PUMA's
+    /// bank-targeted draw) and the rest hint-aligned to it: shard
+    /// `spread` of a sharded column lands on bank `spread % banks`
+    /// under PUMA, so sibling shards execute on disjoint bank command
+    /// timelines (baselines ignore the spread exactly as they ignore
+    /// hints).
+    pub fn alloc_spread(
+        sys: &mut System,
+        alloc: &mut dyn Allocator,
+        pid: Pid,
+        width: u32,
+        elems: usize,
+        spread: u32,
+    ) -> Result<Self> {
+        let plane_len = Self::checked_plane_len(width, elems)?;
+        let first = sys.alloc_spread(alloc, pid, plane_len, spread)?;
+        Self::chain_to_anchor(sys, alloc, pid, width, elems, plane_len, first)
     }
 
     /// Allocate with every plane hint-aligned to `hint` — used for the
@@ -115,9 +166,7 @@ impl VerticalLayout {
         elems: usize,
         hint: u64,
     ) -> Result<Self> {
-        ensure!((1..=64).contains(&width), "width {width} out of range");
-        ensure!(elems > 0, "empty column");
-        let plane_len = elems.div_ceil(8) as u64;
+        let plane_len = Self::checked_plane_len(width, elems)?;
         let mut planes = Vec::with_capacity(width as usize);
         for _ in 0..width {
             planes.push(sys.alloc_align(alloc, pid, plane_len, hint)?);
@@ -232,6 +281,24 @@ mod tests {
         assert_eq!(popcount_live(&[0xFF, 0xFF], 13), 13);
         assert_eq!(popcount_live(&[0x00, 0xE0], 13), 0);
         assert_eq!(popcount_live(&[0x00, 0x1F], 13), 5);
+    }
+
+    #[test]
+    fn popcount_live_excludes_row_padding_bytes() {
+        // Regression: a plane buffer longer than ceil(elems / 8) — a
+        // full-row read-back, or a ragged shard in a uniform-length
+        // slot — carries >= 8 bits of padding. The pre-fix mask
+        // `0xFF << (8 - pad)` underflowed for pad >= 8 and only ever
+        // touched the final byte, so this case panicked (debug) or
+        // miscounted (release).
+        assert_eq!(popcount_live(&[0xFF; 4], 5), 5); // pad = 27 bits
+        assert_eq!(popcount_live(&[0xFF, 0xFF, 0xFF], 8), 8); // pad = 16
+        assert_eq!(popcount_live(&[0b0000_0101, 0xFF], 3), 1); // pad = 13
+        // whole-byte padding with a byte-aligned live region
+        assert_eq!(popcount_live(&[0xF0, 0x0F, 0xFF, 0xFF], 16), 8);
+        // degenerate buffers stay well-defined
+        assert_eq!(popcount_live(&[], 0), 0);
+        assert_eq!(popcount_live(&[0xFF], 8), 8);
     }
 
     #[test]

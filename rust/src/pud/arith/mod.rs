@@ -26,12 +26,18 @@
 
 pub mod kernels;
 pub mod layout;
+pub mod shard;
 
 pub use kernels::{
     kernel, kernel_const, mask_planes, popcount_width, reference, width_mask,
     ArithOp, MAX_WIDTH,
 };
 pub use layout::{popcount_live, transpose, untranspose, VerticalLayout};
+pub use shard::{shard_sizes, ShardedLayout, ShardedScratch};
+
+use std::sync::Arc;
+
+use rustc_hash::FxHashMap;
 
 use crate::dram::energy::EnergyParams;
 use crate::dram::timing::TimingParams;
@@ -42,6 +48,81 @@ use crate::pud::isa::{batch_cost, BatchCost};
 /// bind and execute per column).
 pub fn compile_kernel(op: ArithOp, width: u32) -> CompiledMulti {
     compile_multi(&kernel(op, width))
+}
+
+/// Key of one cached compiled program (see [`ProgramCache`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ProgramKey {
+    /// The two-operand/unary `(op, width)` kernel.
+    Kernel(ArithOp, u32),
+    /// `(op, width)` with operand `b` folded to a constant (the rhs is
+    /// stored pre-masked to `width` bits so equivalent thresholds share
+    /// one entry).
+    KernelConst(ArithOp, u32, u64),
+    /// The filter-then-sum plane-masking program for `width` planes.
+    MaskPlanes(u32),
+}
+
+/// Cumulative [`ProgramCache`] counters.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ProgramCacheStats {
+    /// Lookups served from the cache (zero compile work).
+    pub hits: u64,
+    /// Lookups that compiled and inserted a fresh program.
+    pub misses: u64,
+}
+
+/// The `(ArithOp, width)` compiled-program cache. `System` owns one so
+/// every arithmetic entry point — sharded or not — compiles each
+/// kernel exactly once and binds it per column/shard thereafter
+/// (`run_arith`/`arith_sum` used to rebuild and re-optimize the full
+/// adder DAG on every invocation).
+#[derive(Default)]
+pub struct ProgramCache {
+    programs: FxHashMap<ProgramKey, Arc<CompiledMulti>>,
+    pub stats: ProgramCacheStats,
+}
+
+impl ProgramCache {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Fetch `key`'s program, compiling on first use. The second
+    /// element is `true` when the program came from the cache —
+    /// callers zero `CompileStats::compiles` in their reports with it.
+    pub fn get_or_compile(&mut self, key: ProgramKey) -> (Arc<CompiledMulti>, bool) {
+        if let Some(p) = self.programs.get(&key) {
+            self.stats.hits += 1;
+            return (p.clone(), true);
+        }
+        self.stats.misses += 1;
+        let program = match key {
+            ProgramKey::Kernel(op, w) => kernel(op, w),
+            ProgramKey::KernelConst(op, w, rhs) => kernel_const(op, w, rhs),
+            ProgramKey::MaskPlanes(w) => mask_planes(w),
+        };
+        let compiled = Arc::new(compile_multi(&program));
+        self.programs.insert(key, compiled.clone());
+        (compiled, false)
+    }
+
+    /// Distinct programs cached.
+    pub fn len(&self) -> usize {
+        self.programs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.programs.is_empty()
+    }
+
+    /// Drop every cached program (counters are kept). The release
+    /// valve for long-lived systems sweeping many *distinct*
+    /// `KernelConst` thresholds — each distinct `(op, width, rhs)`
+    /// retains a compiled DAG until cleared.
+    pub fn clear(&mut self) {
+        self.programs.clear();
+    }
 }
 
 /// Analytic in-DRAM cost of one fully-PUD execution of the `op`
@@ -101,5 +182,25 @@ mod tests {
             let c = compile_kernel(op, 8);
             assert_eq!(c.n_outputs() as u32, op.out_width(8), "{}", op.name());
         }
+    }
+
+    #[test]
+    fn program_cache_compiles_once_per_key() {
+        let mut cache = ProgramCache::new();
+        let (a, hit) = cache.get_or_compile(ProgramKey::Kernel(ArithOp::Add, 8));
+        assert!(!hit);
+        assert_eq!(a.stats.compiles, 1, "fresh compile reports work");
+        let (b, hit) = cache.get_or_compile(ProgramKey::Kernel(ArithOp::Add, 8));
+        assert!(hit, "second lookup is a hit");
+        assert!(Arc::ptr_eq(&a, &b), "the very same program is served");
+        assert_eq!(cache.stats.hits, 1);
+        assert_eq!(cache.stats.misses, 1);
+        // distinct widths, ops, and const folds are distinct programs
+        cache.get_or_compile(ProgramKey::Kernel(ArithOp::Add, 16));
+        cache.get_or_compile(ProgramKey::Kernel(ArithOp::Sub, 8));
+        cache.get_or_compile(ProgramKey::KernelConst(ArithOp::CmpLt, 8, 128));
+        cache.get_or_compile(ProgramKey::MaskPlanes(8));
+        assert_eq!(cache.len(), 5);
+        assert_eq!(cache.stats.misses, 5);
     }
 }

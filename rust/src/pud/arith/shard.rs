@@ -1,0 +1,265 @@
+//! Bank-sharded vertical layouts: MIMDRAM-style SIMD over the PUMA
+//! substrate (DESIGN.md §11).
+//!
+//! A [`super::VerticalLayout`] hint-co-locates all W bit-planes of a
+//! column into one subarray — the placement PUD legality wants, but
+//! also the placement that serializes every kernel on a single bank's
+//! command timeline. MIMDRAM's answer is to spread the *data* instead
+//! of the kernel: partition the column into S shards, give each shard
+//! its own fully co-located plane set on a *distinct bank*, and let
+//! the hazard-wave scheduler run the S copies of each kernel step in
+//! lockstep across banks. A [`ShardedLayout`] is that partition:
+//!
+//! * shard `k`'s first plane is placed through the allocator's
+//!   placement-spread path (`Allocator::alloc_spread`, PUMA cycles
+//!   `k` across bank ids and sticks to one subarray within the bank);
+//! * every other plane of shard `k` — and its scratch, via
+//!   [`ShardedScratch`]'s per-shard pools — is `pim_alloc_align`-hinted
+//!   to that anchor, so each shard is individually single-subarray;
+//! * only the *last* shard is ragged (`ceil` partition), and
+//!   [`super::popcount_live`] tolerates its padding.
+//!
+//! Execution goes through `System::{run_arith_sharded,
+//! run_arith_const_sharded, arith_sum_sharded}`: one compiled program
+//! per `(ArithOp, width)` (served from the system's program cache),
+//! emitted once per shard, submitted as ONE batch with the per-shard
+//! streams interleaved round-robin so wave `w` carries every shard's
+//! `w`-th request.
+
+use anyhow::{ensure, Result};
+
+use crate::alloc::scratch::ScratchPool;
+use crate::alloc::traits::Allocator;
+use crate::coordinator::system::System;
+use crate::os::process::Pid;
+
+use super::layout::VerticalLayout;
+
+/// Ceil-partition `elems` into at most `shards` non-empty chunk sizes
+/// (only the last chunk is ragged; `shards > elems` degrades to one
+/// element per shard).
+pub fn shard_sizes(elems: usize, shards: usize) -> Vec<usize> {
+    let s = shards.max(1).min(elems.max(1));
+    let chunk = elems.div_ceil(s).max(1);
+    let mut out = Vec::with_capacity(s);
+    let mut rem = elems;
+    while rem > 0 {
+        let take = chunk.min(rem);
+        out.push(take);
+        rem -= take;
+    }
+    out
+}
+
+/// A column of `elems` `width`-bit integers partitioned into
+/// bank-disjoint [`VerticalLayout`] shards.
+#[derive(Debug)]
+pub struct ShardedLayout {
+    width: u32,
+    elems: usize,
+    shards: Vec<VerticalLayout>,
+}
+
+impl ShardedLayout {
+    /// Allocate `shards` shards, anchor plane of shard `k` through the
+    /// allocator's placement-spread path (`spread = k`), remaining
+    /// planes hinted to the anchor. The actual shard count can be
+    /// lower than requested for tiny columns (see [`shard_sizes`]).
+    pub fn alloc(
+        sys: &mut System,
+        alloc: &mut dyn Allocator,
+        pid: Pid,
+        width: u32,
+        elems: usize,
+        shards: usize,
+    ) -> Result<Self> {
+        ensure!((1..=64).contains(&width), "width {width} out of range");
+        ensure!(elems > 0, "empty column");
+        let sizes = shard_sizes(elems, shards);
+        let mut parts = Vec::with_capacity(sizes.len());
+        for (k, &n) in sizes.iter().enumerate() {
+            parts.push(VerticalLayout::alloc_spread(
+                sys, alloc, pid, width, n, k as u32,
+            )?);
+        }
+        Ok(Self {
+            width,
+            elems,
+            shards: parts,
+        })
+    }
+
+    /// Allocate shard-for-shard co-located with `like`: shard `k`'s
+    /// planes are hinted to `like`'s shard `k` anchor. Used for the
+    /// second operand, the destination, and the predicate mask of a
+    /// sharded kernel, so every shard's whole working set shares one
+    /// subarray.
+    pub fn alloc_like(
+        sys: &mut System,
+        alloc: &mut dyn Allocator,
+        pid: Pid,
+        width: u32,
+        like: &ShardedLayout,
+    ) -> Result<Self> {
+        ensure!((1..=64).contains(&width), "width {width} out of range");
+        let mut parts = Vec::with_capacity(like.shards.len());
+        for part in &like.shards {
+            parts.push(VerticalLayout::alloc_with_hint(
+                sys,
+                alloc,
+                pid,
+                width,
+                part.elems(),
+                part.hint(),
+            )?);
+        }
+        Ok(Self {
+            width,
+            elems: like.elems,
+            shards: parts,
+        })
+    }
+
+    pub fn width(&self) -> u32 {
+        self.width
+    }
+
+    /// Total elements across shards.
+    pub fn elems(&self) -> usize {
+        self.elems
+    }
+
+    /// Actual shard count (can be lower than requested).
+    pub fn n_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// The per-shard layouts, in element order.
+    pub fn shards(&self) -> &[VerticalLayout] {
+        &self.shards
+    }
+
+    /// Shard `k`'s layout.
+    pub fn shard(&self, k: usize) -> &VerticalLayout {
+        &self.shards[k]
+    }
+
+    /// Transpose `values` into the shards (element order is preserved:
+    /// shard 0 holds the first chunk, the last shard the ragged tail).
+    pub fn store(&self, sys: &mut System, pid: Pid, values: &[u64]) -> Result<()> {
+        ensure!(
+            values.len() == self.elems,
+            "store of {} value(s) into a {}-element sharded column",
+            values.len(),
+            self.elems
+        );
+        let mut off = 0usize;
+        for part in &self.shards {
+            part.store(sys, pid, &values[off..off + part.elems()])?;
+            off += part.elems();
+        }
+        Ok(())
+    }
+
+    /// Read every shard back and reassemble the column in element
+    /// order.
+    pub fn load(&self, sys: &mut System, pid: Pid) -> Result<Vec<u64>> {
+        let mut out = Vec::with_capacity(self.elems);
+        for part in &self.shards {
+            out.extend(part.load(sys, pid)?);
+        }
+        Ok(out)
+    }
+
+    /// Return every shard's planes to `alloc`.
+    pub fn free(
+        &self,
+        sys: &mut System,
+        alloc: &mut dyn Allocator,
+        pid: Pid,
+    ) -> Result<()> {
+        for part in &self.shards {
+            part.free(sys, alloc, pid)?;
+        }
+        Ok(())
+    }
+}
+
+/// Per-shard scratch pools: shard `k`'s kernel intermediates lease
+/// from pool `k`, hinted to shard `k`'s anchor, so scratch co-locates
+/// with its shard instead of dragging every shard's temporaries into
+/// one subarray. `trim` between kernels works exactly as for a single
+/// [`ScratchPool`], per pool.
+#[derive(Debug, Default)]
+pub struct ShardedScratch {
+    pools: Vec<ScratchPool>,
+}
+
+impl ShardedScratch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Pool backing shard `k` (created on first use).
+    pub fn pool(&mut self, k: usize) -> &mut ScratchPool {
+        while self.pools.len() <= k {
+            self.pools.push(ScratchPool::new());
+        }
+        &mut self.pools[k]
+    }
+
+    /// Pools currently materialized.
+    pub fn n_pools(&self) -> usize {
+        self.pools.len()
+    }
+
+    /// Total buffers leased across pools over the lifetime.
+    pub fn leases(&self) -> u64 {
+        self.pools.iter().map(|p| p.leases).sum()
+    }
+
+    /// Sum of the per-pool peak resident counts.
+    pub fn high_water(&self) -> usize {
+        self.pools.iter().map(|p| p.high_water).sum()
+    }
+
+    /// Total buffers currently resident across pools.
+    pub fn resident(&self) -> usize {
+        self.pools.iter().map(ScratchPool::len).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shard_sizes_partition_exactly() {
+        assert_eq!(shard_sizes(10, 4), vec![3, 3, 3, 1]);
+        assert_eq!(shard_sizes(8, 3), vec![3, 3, 2]);
+        assert_eq!(shard_sizes(8, 1), vec![8]);
+        assert_eq!(shard_sizes(8, 8), vec![1; 8]);
+        // S > elems degrades to one element per shard
+        assert_eq!(shard_sizes(3, 9), vec![1, 1, 1]);
+        // ceil partition may need fewer shards than requested
+        assert_eq!(shard_sizes(9, 4), vec![3, 3, 3]);
+        assert_eq!(shard_sizes(1, 1), vec![1]);
+        for (elems, shards) in [(1usize, 1usize), (100, 7), (64, 16), (5, 8)] {
+            let sizes = shard_sizes(elems, shards);
+            assert_eq!(sizes.iter().sum::<usize>(), elems);
+            assert!(sizes.len() <= shards.max(1));
+            assert!(sizes.iter().all(|&n| n > 0));
+        }
+    }
+
+    #[test]
+    fn sharded_scratch_pools_materialize_on_demand() {
+        let mut s = ShardedScratch::new();
+        assert_eq!(s.n_pools(), 0);
+        assert_eq!(s.resident(), 0);
+        s.pool(2);
+        assert_eq!(s.n_pools(), 3);
+        assert_eq!(s.leases(), 0);
+        assert_eq!(s.high_water(), 0);
+    }
+}

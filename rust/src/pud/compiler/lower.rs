@@ -50,6 +50,11 @@ pub struct CompileStats {
     pub cse_hits: usize,
     pub folds: usize,
     pub demorgans: usize,
+    /// Fresh compilation passes behind this report: 1 when the program
+    /// was compiled for this call, 0 when it was served from the
+    /// system's `(ArithOp, width)` program cache — the counter tests
+    /// assert to prove a repeat invocation does zero compile work.
+    pub compiles: usize,
 }
 
 /// A compiled expression: optimized DAG + emission order + slot
@@ -161,6 +166,7 @@ pub fn compile_with_pool(expr: &Expr, pool_limit: usize) -> Compiled {
         cse_hits: rep.cse_hits,
         folds: rep.folds,
         demorgans: rep.demorgans,
+        compiles: 1,
     };
     Compiled {
         expr: opt,
@@ -295,6 +301,7 @@ pub fn compile_multi_with_pool(m: &MultiExpr, pool_limit: usize) -> CompiledMult
         cse_hits: rep.cse_hits,
         folds: rep.folds,
         demorgans: rep.demorgans,
+        compiles: 1,
     };
     CompiledMulti {
         expr: opt,

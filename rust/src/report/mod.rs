@@ -12,7 +12,7 @@ use crate::pud::isa::PudOp;
 use crate::util::csvio::Csv;
 use crate::util::table::{fnum, Table};
 use crate::util::units::{fmt_bytes, fmt_ns};
-use crate::workloads::analytics::AnalyticsResult;
+use crate::workloads::analytics::{AnalyticsResult, ShardedResult};
 use crate::workloads::churn::ChurnResult;
 use crate::workloads::filter::FilterResult;
 use crate::workloads::microbench::{AllocatorKind, Micro};
@@ -491,6 +491,96 @@ pub fn analytics(
     ))
 }
 
+/// Render the sharded-analytics scale sweep: one row per
+/// allocator x width x shard-count cell; `speedup` is the cell's
+/// bank-parallel makespan win over the same allocator+width's S = 1
+/// cell. Writes `analytics_sharded.csv` when `out_dir` is given.
+pub fn analytics_sharded(
+    results: &[ShardedResult],
+    out_dir: Option<&Path>,
+) -> Result<String> {
+    let mut table = Table::new(vec![
+        "allocator",
+        "width",
+        "shards",
+        "waves",
+        "pud%",
+        "elapsed",
+        "speedup",
+        "matches",
+        "sum",
+    ])
+    .left(0);
+    let mut csv = Csv::new(vec![
+        "allocator",
+        "width",
+        "shards",
+        "shard_count",
+        "elems",
+        "threshold",
+        "ops",
+        "compiles",
+        "waves",
+        "pud_row_fraction",
+        "sim_ns",
+        "elapsed_sim_ns",
+        "speedup_vs_s1",
+        "matches",
+        "sum",
+        "pool_high_water",
+    ]);
+    let base_of = |r: &ShardedResult| -> Option<f64> {
+        results
+            .iter()
+            .find(|b| {
+                b.allocator == r.allocator && b.width == r.width && b.shards == 1
+            })
+            .map(|b| b.elapsed_ns)
+    };
+    for r in results {
+        let speedup = base_of(r).map(|b| b / r.elapsed_ns.max(1e-9));
+        let speedup_txt = speedup
+            .map(|s| format!("{s:.2}x"))
+            .unwrap_or_else(|| "-".to_string());
+        table.row(vec![
+            r.allocator.to_string(),
+            r.width.to_string(),
+            r.shard_count.to_string(),
+            r.waves.to_string(),
+            format!("{:.0}%", r.pud_row_fraction() * 100.0),
+            fmt_ns(r.elapsed_ns),
+            speedup_txt,
+            r.matches.to_string(),
+            r.sum.to_string(),
+        ]);
+        csv.row(vec![
+            r.allocator.to_string(),
+            r.width.to_string(),
+            r.shards.to_string(),
+            r.shard_count.to_string(),
+            r.elems.to_string(),
+            r.threshold.to_string(),
+            r.compile.ops.to_string(),
+            r.compile.compiles.to_string(),
+            r.waves.to_string(),
+            format!("{:.6}", r.pud_row_fraction()),
+            format!("{:.1}", r.sim_ns),
+            format!("{:.1}", r.elapsed_ns),
+            speedup.map(|s| format!("{s:.4}")).unwrap_or_default(),
+            r.matches.to_string(),
+            r.sum.to_string(),
+            r.pool_high_water.to_string(),
+        ]);
+    }
+    if let Some(dir) = out_dir {
+        csv.write(dir.join("analytics_sharded.csv"))?;
+    }
+    Ok(format!(
+        "## Analytics (sharded) — MIMDRAM-style bank-parallel SIMD\n\n{}",
+        table.render()
+    ))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -647,6 +737,39 @@ mod tests {
         assert!(s.contains("100%"));
         assert!(s.contains("hand-pud%"));
         assert!(s.contains("10.0x"), "{s}");
+    }
+
+    fn sharded_result(shards: usize, elapsed_ns: f64) -> ShardedResult {
+        ShardedResult {
+            allocator: "puma",
+            width: 8,
+            shards,
+            shard_count: shards,
+            elems: 1 << 20,
+            threshold: 128,
+            matches: 1000,
+            sum: 60_000,
+            compile: Default::default(),
+            waves: 9,
+            sim_ns: 2.0 * elapsed_ns,
+            elapsed_ns,
+            pud_rows: 100,
+            fallback_rows: 0,
+            pool_high_water: 8,
+        }
+    }
+
+    #[test]
+    fn sharded_report_computes_speedup_vs_s1() {
+        let rs = vec![sharded_result(1, 40_000.0), sharded_result(8, 10_000.0)];
+        let s = analytics_sharded(&rs, None).unwrap();
+        assert!(s.contains("sharded"));
+        assert!(s.contains("4.00x"), "{s}");
+        assert!(s.contains("1.00x"), "{s}");
+        let dir = std::env::temp_dir().join("puma_report_sharded_test");
+        analytics_sharded(&rs, Some(&dir)).unwrap();
+        assert!(dir.join("analytics_sharded.csv").exists());
+        let _ = std::fs::remove_dir_all(dir);
     }
 
     #[test]

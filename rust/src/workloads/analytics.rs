@@ -25,8 +25,10 @@ use crate::dram::address::InterleaveScheme;
 use crate::dram::energy::EnergyParams;
 use crate::dram::timing::TimingParams;
 use crate::os::process::Pid;
-use crate::pud::arith::{self, ArithOp, VerticalLayout};
-use crate::pud::compiler::{compile_multi, CompileStats};
+use crate::pud::arith::{
+    self, ArithOp, ShardedLayout, ShardedScratch, VerticalLayout,
+};
+use crate::pud::compiler::CompileStats;
 use crate::util::rng::Pcg64;
 use crate::workloads::microbench::AllocatorKind;
 
@@ -136,18 +138,11 @@ pub fn run_cell(
         sys, alloc, pid, 1, cfg.elems, col.hint(),
     )?;
 
-    // compiled predicate: v < T with T's bits folded at compile time
-    let compiled = compile_multi(&arith::kernel_const(ArithOp::CmpLt, width, thr));
+    // compiled predicate: v < T with T's bits folded at compile time,
+    // served from the system's (op, width, T) program cache
     let mut pool = ScratchPool::new();
-    let rep = sys.run_multi(
-        alloc,
-        pid,
-        &compiled,
-        col.planes(),
-        mask.planes(),
-        col.plane_len(),
-        &mut pool,
-    )?;
+    let rep =
+        sys.run_arith_const(alloc, pid, ArithOp::CmpLt, thr, &col, &mask, &mut pool)?;
 
     // verify the mask bit-for-bit against scalar compares
     let mask_row = sys.read_virt(pid, mask.planes()[0], mask.plane_len())?;
@@ -252,6 +247,254 @@ pub fn sweep(
     Ok(out)
 }
 
+/// Sharded-analytics scale sweep parameters (DESIGN.md §11): the same
+/// filter-then-sum aggregate, with the column partitioned into S
+/// bank-disjoint shards executed MIMDRAM-style in one batch.
+#[derive(Debug, Clone)]
+pub struct ShardedConfig {
+    /// Column elements; the default (1 Mi) gives 16 DRAM rows per
+    /// unsharded bit-plane, so sharding has rows to split.
+    pub elems: usize,
+    /// Bit-widths to sweep.
+    pub widths: Vec<u32>,
+    /// Shard counts to sweep (S = 1 is the fully co-located
+    /// single-subarray layout the unsharded paper placement produces).
+    pub shards: Vec<usize>,
+    /// Threshold as a fraction of the value range.
+    pub threshold_frac: f64,
+    pub huge_pages: usize,
+    pub puma_pages: usize,
+    pub churn_rounds: usize,
+    pub seed: u64,
+}
+
+impl Default for ShardedConfig {
+    fn default() -> Self {
+        Self {
+            elems: 1 << 20,
+            widths: vec![8, 16],
+            shards: vec![1, 2, 4, 8, 16],
+            threshold_frac: 0.5,
+            huge_pages: 64,
+            puma_pages: 48,
+            churn_rounds: 2_000,
+            seed: 0xA11A,
+        }
+    }
+}
+
+impl ShardedConfig {
+    /// The unsharded-cell view of this configuration (the reference
+    /// every sharded cell is verified bit-identical against).
+    fn as_analytics(&self) -> AnalyticsConfig {
+        AnalyticsConfig {
+            elems: self.elems,
+            widths: self.widths.clone(),
+            threshold_frac: self.threshold_frac,
+            huge_pages: self.huge_pages,
+            puma_pages: self.puma_pages,
+            churn_rounds: self.churn_rounds,
+            seed: self.seed,
+        }
+    }
+}
+
+/// One sharded-analytics cell: a W-bit column split into S shards on
+/// one allocator, verified bit-identical against the unsharded path
+/// and host scalar arithmetic.
+#[derive(Debug, Clone)]
+pub struct ShardedResult {
+    pub allocator: &'static str,
+    pub width: u32,
+    /// Shard count requested by the sweep.
+    pub shards: usize,
+    /// Shards actually materialized (lower for tiny columns).
+    pub shard_count: usize,
+    pub elems: usize,
+    pub threshold: u64,
+    pub matches: u64,
+    pub sum: u128,
+    /// Compare-kernel compile stats; `compiles == 0` once the program
+    /// cache is warm.
+    pub compile: CompileStats,
+    /// Hazard waves across the compare + mask batches.
+    pub waves: usize,
+    /// Serial-equivalent simulated ns (compare + mask batches).
+    pub sim_ns: f64,
+    /// Bank-parallel completion ns (compare + mask batches) — THE
+    /// sharding metric: near-linear drop in min(S, banks).
+    pub elapsed_ns: f64,
+    pub pud_rows: u64,
+    pub fallback_rows: u64,
+    /// Total resident high water across the per-shard scratch pools.
+    pub pool_high_water: usize,
+}
+
+impl ShardedResult {
+    /// In-DRAM fraction of the cell's batched rows.
+    pub fn pud_row_fraction(&self) -> f64 {
+        let total = self.pud_rows + self.fallback_rows;
+        if total == 0 {
+            0.0
+        } else {
+            self.pud_rows as f64 / total as f64
+        }
+    }
+}
+
+/// Run one sharded cell on an already-booted system: allocate the
+/// column as S bank-spread shards, run the cached constant-threshold
+/// compare and the masked sum as one batch each, and verify the mask
+/// bit-for-bit plus the sum against host scalar arithmetic (the caller
+/// additionally checks the sum against the unsharded path).
+pub fn run_cell_sharded(
+    sys: &mut System,
+    alloc: &mut dyn Allocator,
+    pid: Pid,
+    name: &'static str,
+    cfg: &ShardedConfig,
+    width: u32,
+    shards: usize,
+) -> Result<ShardedResult> {
+    ensure!(
+        (1..=arith::MAX_WIDTH).contains(&width),
+        "width {width} out of kernel range"
+    );
+    let thr = threshold(width, cfg.threshold_frac);
+    let mask_bits = arith::width_mask(width);
+    // same generator as the unsharded cell, so results are comparable
+    let mut rng = Pcg64::new(cfg.seed ^ (width as u64) << 8);
+    let values: Vec<u64> =
+        (0..cfg.elems).map(|_| rng.next_u64() & mask_bits).collect();
+
+    let col =
+        ShardedLayout::alloc(sys, alloc, pid, width, cfg.elems, shards)?;
+    col.store(sys, pid, &values)?;
+    let mask = ShardedLayout::alloc_like(sys, alloc, pid, 1, &col)?;
+
+    let mut pools = ShardedScratch::new();
+    let rep = sys.run_arith_const_sharded(
+        alloc,
+        pid,
+        ArithOp::CmpLt,
+        thr,
+        &col,
+        &mask,
+        &mut pools,
+    )?;
+
+    // verify the sharded mask bit-for-bit against scalar compares
+    // (arith_sum_sharded below re-reads the shards through the
+    // padding-safe popcount path; no need to duplicate that here)
+    let got = mask.load(sys, pid)?;
+    let matches = got.iter().filter(|&&g| g == 1).count() as u64;
+    for (i, (&g, &v)) in got.iter().zip(&values).enumerate() {
+        ensure!(
+            (g == 1) == (v < thr),
+            "{name}: S={shards} mask bit {i} diverged ({v} vs threshold {thr})"
+        );
+    }
+
+    // filter-then-sum: every shard's in-DRAM masking in one batch
+    let (sum, sum_rep) =
+        sys.arith_sum_sharded(alloc, pid, &col, Some(&mask), &mut pools)?;
+    let want: u128 = values
+        .iter()
+        .filter(|v| **v < thr)
+        .map(|v| *v as u128)
+        .sum();
+    ensure!(
+        sum == want,
+        "{name}: S={shards} masked sum diverged ({sum} vs {want})"
+    );
+    let sum_rep = sum_rep.expect("masked sum submits a batch");
+
+    let shard_count = col.n_shards();
+    let high_water = pools.high_water();
+    sys.trim_scratch_sharded(alloc, pid, &mut pools, 0)?;
+    mask.free(sys, alloc, pid)?;
+    col.free(sys, alloc, pid)?;
+
+    Ok(ShardedResult {
+        allocator: name,
+        width,
+        shards,
+        shard_count,
+        elems: cfg.elems,
+        threshold: thr,
+        matches,
+        sum,
+        compile: rep.stats.clone(),
+        waves: rep.batch.waves + sum_rep.batch.waves,
+        sim_ns: rep.batch.total_ns + sum_rep.batch.total_ns,
+        elapsed_ns: rep.batch.elapsed_ns + sum_rep.batch.elapsed_ns,
+        pud_rows: rep.pud_rows + sum_rep.pud_rows,
+        fallback_rows: rep.fallback_rows + sum_rep.fallback_rows,
+        pool_high_water: high_water,
+    })
+}
+
+/// Run the shard sweep on one allocator: one system reused across
+/// widths and shard counts. Per width, the *unsharded* cell runs
+/// first and every sharded cell's aggregate is checked identical to
+/// it (bit-identity of the mask and the scalar-reference sum are
+/// checked inside the cells).
+pub fn run_sharded(
+    scheme: InterleaveScheme,
+    cfg: &ShardedConfig,
+    kind: AllocatorKind,
+) -> Result<Vec<ShardedResult>> {
+    let mut sys = System::boot(SystemConfig {
+        scheme,
+        huge_pages: cfg.huge_pages,
+        churn_rounds: cfg.churn_rounds,
+        seed: cfg.seed,
+        artifacts: None,
+        ..Default::default()
+    })?;
+    let pid = sys.spawn();
+    let mut alloc = kind.build(&mut sys, cfg.puma_pages)?;
+    let acfg = cfg.as_analytics();
+    let mut out = Vec::with_capacity(cfg.widths.len() * cfg.shards.len());
+    for &w in &cfg.widths {
+        let unsharded =
+            run_cell(&mut sys, alloc.as_mut(), pid, kind.name(), &acfg, w)?;
+        for &s in &cfg.shards {
+            let cell = run_cell_sharded(
+                &mut sys,
+                alloc.as_mut(),
+                pid,
+                kind.name(),
+                cfg,
+                w,
+                s,
+            )?;
+            ensure!(
+                cell.sum == unsharded.sum && cell.matches == unsharded.matches,
+                "{}: width {w} S={s} diverged from the unsharded path",
+                kind.name()
+            );
+            out.push(cell);
+        }
+    }
+    Ok(out)
+}
+
+/// Sweep allocators x widths x shard counts, one fresh system per
+/// allocator.
+pub fn sweep_sharded(
+    scheme: &InterleaveScheme,
+    cfg: &ShardedConfig,
+    kinds: &[AllocatorKind],
+) -> Result<Vec<ShardedResult>> {
+    let mut out =
+        Vec::with_capacity(kinds.len() * cfg.widths.len() * cfg.shards.len());
+    for kind in kinds {
+        out.extend(run_sharded(scheme.clone(), cfg, *kind)?);
+    }
+    Ok(out)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -315,6 +558,92 @@ mod tests {
             );
             assert!(r.matches > 0);
         }
+    }
+
+    fn sharded_cfg() -> ShardedConfig {
+        ShardedConfig {
+            elems: 256 * 1024, // 4 rows per unsharded plane
+            widths: vec![8],
+            shards: vec![1, 4],
+            huge_pages: 16,
+            puma_pages: 8,
+            churn_rounds: 500,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn sharded_puma_cells_verify_and_speed_up() {
+        let rs = run_sharded(
+            scheme(),
+            &sharded_cfg(),
+            AllocatorKind::Puma(FitPolicy::WorstFit),
+        )
+        .unwrap();
+        assert_eq!(rs.len(), 2);
+        for r in &rs {
+            assert!(
+                r.pud_row_fraction() > 0.95,
+                "S={}: got {}",
+                r.shards,
+                r.pud_row_fraction()
+            );
+            assert!(r.matches > 0 && r.sum > 0);
+            assert_eq!(r.shard_count, r.shards);
+        }
+        let s1 = rs.iter().find(|r| r.shards == 1).unwrap();
+        let s4 = rs.iter().find(|r| r.shards == 4).unwrap();
+        assert_eq!(s1.sum, s4.sum, "sharding is value-transparent");
+        assert_eq!(s1.matches, s4.matches);
+        assert!(
+            s4.elapsed_ns < s1.elapsed_ns,
+            "bank sharding must shrink the batch makespan: S=4 {} vs S=1 {}",
+            s4.elapsed_ns,
+            s1.elapsed_ns
+        );
+        // the warm program cache served the second shard count
+        assert_eq!(s4.compile.compiles, 0, "repeat (op,width) compiles nothing");
+    }
+
+    #[test]
+    fn sharded_malloc_cells_fall_back_but_stay_correct() {
+        let cfg = ShardedConfig {
+            shards: vec![4],
+            ..sharded_cfg()
+        };
+        let rs = run_sharded(scheme(), &cfg, AllocatorKind::Malloc).unwrap();
+        assert_eq!(rs.len(), 1);
+        assert!(
+            rs[0].pud_row_fraction() < 0.2,
+            "got {}",
+            rs[0].pud_row_fraction()
+        );
+        assert!(rs[0].matches > 0);
+    }
+
+    #[test]
+    fn sharded_handles_ragged_and_degenerate_shards() {
+        // elems not divisible by S (ragged tail shard) and S > elems
+        // (degenerate one-element shards)
+        let cfg = ShardedConfig {
+            elems: 61,
+            widths: vec![4],
+            shards: vec![7, 100],
+            huge_pages: 16,
+            puma_pages: 8,
+            churn_rounds: 300,
+            ..Default::default()
+        };
+        let rs = run_sharded(
+            scheme(),
+            &cfg,
+            AllocatorKind::Puma(FitPolicy::WorstFit),
+        )
+        .unwrap();
+        assert_eq!(rs.len(), 2);
+        assert_eq!(rs[0].shard_count, 7);
+        assert_eq!(rs[1].shard_count, 61, "S > elems caps at one per elem");
+        assert_eq!(rs[0].sum, rs[1].sum);
     }
 
     #[test]

@@ -13,7 +13,9 @@ use puma::coordinator::system::{System, SystemConfig};
 use puma::dram::address::InterleaveScheme;
 use puma::dram::geometry::DramGeometry;
 use puma::proptest;
-use puma::pud::arith::{self, ArithOp, VerticalLayout};
+use puma::pud::arith::{
+    self, ArithOp, ShardedLayout, ShardedScratch, VerticalLayout,
+};
 use puma::util::rng::Pcg64;
 
 fn boot() -> System {
@@ -156,6 +158,144 @@ fn compiled_kernels_match_reference_property() {
         assert_prop!(
             pud2 < 0.5 && pud2 < pud,
             "malloc planes should mostly fall back (worst {pud2})"
+        );
+    });
+}
+
+/// Run `op` over `(va, vb)` both unsharded and sharded with `alloc`,
+/// asserting the sharded result is byte-identical to the unsharded
+/// one and to the scalar reference, and that the sharded masked sum
+/// matches the unsharded masked sum. Returns the sharded kernel's
+/// PUD-row fraction.
+#[allow(clippy::too_many_arguments)]
+fn check_sharded_matches_unsharded(
+    sys: &mut System,
+    alloc: &mut dyn Allocator,
+    hinted: bool,
+    op: ArithOp,
+    width: u32,
+    shards: usize,
+    va: &[u64],
+    vb: &[u64],
+) -> f64 {
+    let pid = sys.spawn();
+    let elems = va.len();
+    let out_w = op.out_width(width);
+
+    // unsharded reference execution
+    let a = VerticalLayout::alloc(sys, alloc, pid, width, elems).unwrap();
+    let b = if hinted {
+        VerticalLayout::alloc_with_hint(sys, alloc, pid, width, elems, a.hint())
+            .unwrap()
+    } else {
+        VerticalLayout::alloc(sys, alloc, pid, width, elems).unwrap()
+    };
+    let dst = VerticalLayout::alloc(sys, alloc, pid, out_w, elems).unwrap();
+    a.store(sys, pid, va).unwrap();
+    b.store(sys, pid, vb).unwrap();
+    let mut pool = ScratchPool::new();
+    sys.run_arith(alloc, pid, op, &a, Some(&b), &dst, &mut pool).unwrap();
+    let want = dst.load(sys, pid).unwrap();
+    let mask_u =
+        VerticalLayout::alloc(sys, alloc, pid, 1, elems).unwrap();
+    sys.run_arith(alloc, pid, ArithOp::CmpLt, &a, Some(&b), &mask_u, &mut pool)
+        .unwrap();
+    let (sum_u, _) = sys
+        .arith_sum(alloc, pid, &a, Some(mask_u.planes()[0]), &mut pool)
+        .unwrap();
+
+    // sharded execution of the same kernels over the same data
+    let sa = ShardedLayout::alloc(sys, alloc, pid, width, elems, shards).unwrap();
+    let sb = ShardedLayout::alloc_like(sys, alloc, pid, width, &sa).unwrap();
+    let sdst = ShardedLayout::alloc_like(sys, alloc, pid, out_w, &sa).unwrap();
+    sa.store(sys, pid, va).unwrap();
+    sb.store(sys, pid, vb).unwrap();
+    let mut pools = ShardedScratch::new();
+    let rep = sys
+        .run_arith_sharded(alloc, pid, op, &sa, Some(&sb), &sdst, &mut pools)
+        .unwrap();
+    let got = sdst.load(sys, pid).unwrap();
+    assert_prop!(
+        got == want,
+        "{}: sharded (S={shards}, {} actual) diverged from unsharded \
+         (width {width}, elems {elems}, hinted {hinted})",
+        op.name(),
+        sa.n_shards()
+    );
+    for (i, &g) in got.iter().enumerate() {
+        let r = arith::reference(op, width, va[i], vb[i]);
+        assert_prop!(
+            g == r,
+            "{}({:#x}, {:#x}) = {g:#x}, reference {r:#x}",
+            op.name(),
+            va[i],
+            vb[i]
+        );
+    }
+    let mask_s = ShardedLayout::alloc_like(sys, alloc, pid, 1, &sa).unwrap();
+    sys.run_arith_sharded(
+        alloc,
+        pid,
+        ArithOp::CmpLt,
+        &sa,
+        Some(&sb),
+        &mask_s,
+        &mut pools,
+    )
+    .unwrap();
+    let (sum_s, _) = sys
+        .arith_sum_sharded(alloc, pid, &sa, Some(&mask_s), &mut pools)
+        .unwrap();
+    assert_prop!(
+        sum_s == sum_u,
+        "masked sum diverged: sharded {sum_s} vs unsharded {sum_u} \
+         (S={shards}, width {width}, elems {elems}, hinted {hinted})"
+    );
+    rep.pud_row_fraction()
+}
+
+#[test]
+fn sharded_execution_matches_unsharded_property() {
+    proptest::check_cases("sharded == unsharded (byte-identical)", 4, |g| {
+        let width = *g.choose(&[4u32, 8, 16]);
+        // occasionally degenerate columns so S > elems is exercised;
+        // non-multiple sizes give a ragged last shard
+        let elems = if g.ratio(1, 4) {
+            g.usize(1..8)
+        } else {
+            g.usize(50..5000)
+        };
+        let shards = g.usize(1..10);
+        let op = *g.choose(&[
+            ArithOp::Add,
+            ArithOp::Sub,
+            ArithOp::Min,
+            ArithOp::CmpEq,
+        ]);
+        let seed = g.u64(1..u64::MAX);
+        let mask = arith::width_mask(width);
+        let mut rng = Pcg64::new(seed);
+        let va: Vec<u64> = (0..elems).map(|_| rng.next_u64() & mask).collect();
+        let vb: Vec<u64> = (0..elems).map(|_| rng.next_u64() & mask).collect();
+
+        // co-located (PUMA placement-spread) shards run in-DRAM
+        let mut sys = boot();
+        let row = sys.os.scheme.geometry.row_bytes as u64;
+        let mut puma = PumaAlloc::new(row, FitPolicy::WorstFit);
+        puma.pim_preallocate(&mut sys.os, 8).unwrap();
+        let pud = check_sharded_matches_unsharded(
+            &mut sys, &mut puma, true, op, width, shards, &va, &vb,
+        );
+        assert_prop!(
+            pud > 0.9,
+            "spread shards must stay in-DRAM (got {pud}, S={shards})"
+        );
+
+        // deliberately misaligned placement stays value-identical
+        let mut sys2 = boot();
+        let mut malloc = MallocSim::new();
+        check_sharded_matches_unsharded(
+            &mut sys2, &mut malloc, false, op, width, shards, &va, &vb,
         );
     });
 }

@@ -36,6 +36,7 @@ def extract(bench):
         for c in bench.get("analytics", {}).get("cells", [])
         if c.get("allocator") == "puma"
     ]
+    sharded = bench.get("analytics_sharded", {})
     return {
         "batched_pud_row_fraction": bench["batched"]["pud_row_fraction"],
         "batched_ops_per_s": bench["batched"]["ops_per_s"],
@@ -47,6 +48,12 @@ def extract(bench):
         ],
         "analytics_puma_min_pud_row_fraction": (
             min(analytics_puma) if analytics_puma else None
+        ),
+        # bank-sharded SIMD: the S=8 vs S=1 makespan win and the PUD-row
+        # floor of the spread placement (null-seeded until committed)
+        "analytics_sharded_speedup_s8": sharded.get("speedup_s8"),
+        "analytics_sharded_puma_pud_row_fraction": sharded.get(
+            "puma_pud_row_fraction"
         ),
     }
 
