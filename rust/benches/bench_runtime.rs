@@ -22,9 +22,11 @@
 
 use puma::alloc::mallocsim::MallocSim;
 use puma::alloc::puma::{FitPolicy, PumaAlloc};
+use puma::alloc::scratch::ScratchPool;
 use puma::coordinator::system::{System, SystemConfig};
 use puma::dram::address::InterleaveScheme;
 use puma::dram::geometry::DramGeometry;
+use puma::pud::arith;
 use puma::pud::isa::{BulkRequest, PudOp};
 use puma::util::bench::{bench, black_box, BenchOpts};
 use puma::util::csvio::Csv;
@@ -204,13 +206,18 @@ fn analytics_json(r: &AnalyticsResult) -> String {
     format!(
         "{{\"allocator\": \"{}\", \"width\": {}, \"pud_row_fraction\": {:.6}, \
          \"elapsed_sim_ns\": {:.1}, \"ops\": {}, \"aaps_per_elem\": {:.4}, \
-         \"matches\": {}, \"sum\": {}}}",
+         \"host_ns_per_elem\": {:.4}, \"col_hits\": {}, \"col_misses\": {}, \
+         \"pool_leases\": {}, \"matches\": {}, \"sum\": {}}}",
         r.allocator,
         r.width,
         r.pud_row_fraction(),
         r.elapsed_ns,
         r.compile.ops,
         r.aaps_per_elem,
+        r.host_ns_per_elem,
+        r.col_hits,
+        r.col_misses,
+        r.pool_leases,
         r.matches,
         r.sum
     )
@@ -220,16 +227,66 @@ fn sharded_json(r: &ShardedResult) -> String {
     format!(
         "{{\"allocator\": \"{}\", \"width\": {}, \"shards\": {}, \
          \"pud_row_fraction\": {:.6}, \"elapsed_sim_ns\": {:.1}, \
-         \"waves\": {}, \"matches\": {}, \"sum\": {}}}",
+         \"waves\": {}, \"host_ns_per_elem\": {:.4}, \"col_hits\": {}, \
+         \"col_misses\": {}, \"matches\": {}, \"sum\": {}}}",
         r.allocator,
         r.width,
         r.shard_count,
         r.pud_row_fraction(),
         r.elapsed_ns,
         r.waves,
+        r.host_ns_per_elem,
+        r.col_hits,
+        r.col_misses,
         r.matches,
         r.sum
     )
+}
+
+/// Mean host-boundary ns/elem across the PUMA cells — the gated
+/// host-time metric (lower is better).
+fn mean_host_ns<'a, I: Iterator<Item = &'a f64>>(vals: I) -> f64 {
+    let v: Vec<f64> = vals.copied().collect();
+    if v.is_empty() {
+        0.0
+    } else {
+        v.iter().sum::<f64>() / v.len() as f64
+    }
+}
+
+/// Measure the blocked bit-matrix transpose against the bit-at-a-time
+/// oracle on a 1 Mi x 16-bit column (both directions), asserting the
+/// word-level kernel actually pays for itself. Returns
+/// `(naive_ns, blocked_ns, speedup)` per full transpose+untranspose.
+fn measure_transpose(opts: &BenchOpts) -> (f64, f64, f64) {
+    const ELEMS: usize = 1 << 20;
+    const WIDTH: u32 = 16;
+    let mut rng = Pcg64::new(0x7125);
+    let values: Vec<u64> = (0..ELEMS)
+        .map(|_| rng.next_u64() & arith::width_mask(WIDTH))
+        .collect();
+
+    let naive = bench("transpose-naive (1Mi x 16b)", opts, |_| {
+        let planes = arith::transpose_naive(black_box(&values), WIDTH);
+        let back = arith::untranspose_naive(black_box(&planes), ELEMS);
+        black_box(back);
+    });
+    let blocked = bench("transpose-blocked (1Mi x 16b)", opts, |_| {
+        let planes = arith::transpose(black_box(&values), WIDTH);
+        let back =
+            arith::untranspose(black_box(&planes), ELEMS).expect("full planes");
+        black_box(back);
+    });
+
+    // sanity besides speed: identical output on the measured input
+    assert_eq!(
+        arith::transpose(&values, WIDTH),
+        arith::transpose_naive(&values, WIDTH),
+        "blocked transpose must be byte-identical to the oracle"
+    );
+
+    let speedup = naive.wall_ns.mean / blocked.wall_ns.mean.max(1e-9);
+    (naive.wall_ns.mean, blocked.wall_ns.mean, speedup)
 }
 
 fn json_path(m: &PathMetrics, groups: usize) -> String {
@@ -347,6 +404,58 @@ fn main() -> anyhow::Result<()> {
         "the canonical predicate contains a shared NOT for CSE"
     );
 
+    // ---- transpose: blocked bit-matrix kernel vs bit-at-a-time -----
+    println!("\n# transpose — blocked 64x64 word kernel vs naive oracle");
+    let (naive_ns, blocked_ns, transpose_speedup) = measure_transpose(&opts);
+    println!(
+        "1Mi x 16b round-trip: naive {:.2} ms -> blocked {:.2} ms ({:.1}x)",
+        naive_ns / 1e6,
+        blocked_ns / 1e6,
+        transpose_speedup
+    );
+    assert!(
+        transpose_speedup >= 20.0,
+        "the blocked transpose must beat the bit-at-a-time oracle by >= 20x \
+         at 1Mi x 16b (got {transpose_speedup:.1}x)"
+    );
+
+    // ---- host boundary: warm cells must be allocator-quiet ---------
+    // one system, one pool, same width twice: the second cell must hit
+    // the resident column both times and lease nothing from the pool
+    println!("\n# host boundary — resident columns + size-classed scratch");
+    let warm_cfg = AnalyticsConfig::default();
+    let mut wsys = boot();
+    let wpid = wsys.spawn();
+    let wrow = wsys.os.scheme.geometry.row_bytes as u64;
+    let mut walloc = PumaAlloc::new(wrow, FitPolicy::WorstFit);
+    walloc.pim_preallocate(&mut wsys.os, warm_cfg.puma_pages)?;
+    let mut wpool = ScratchPool::new();
+    let cold = analytics::run_cell(
+        &mut wsys, &mut walloc, wpid, "puma", &warm_cfg, 16, &mut wpool,
+    )?;
+    let warm = analytics::run_cell(
+        &mut wsys, &mut walloc, wpid, "puma", &warm_cfg, 16, &mut wpool,
+    )?;
+    println!(
+        "cold: {} col miss(es), {} pool lease(s); warm: {} miss(es), \
+         {} lease(s), {} col hit(s)",
+        cold.col_misses, cold.pool_leases, warm.col_misses, warm.pool_leases,
+        warm.col_hits
+    );
+    assert!(cold.pool_leases > 0, "the cold cell must lease scratch");
+    assert_eq!(
+        warm.pool_leases, 0,
+        "a warm same-width repeat must do zero allocator round-trips"
+    );
+    assert_eq!(warm.col_misses, 0, "a warm repeat must not rebuild the column");
+    assert!(
+        warm.col_hits >= 2,
+        "both kernels of a warm cell must hit the resident column"
+    );
+    assert_eq!(warm.sum, cold.sum, "warm repeats stay value-identical");
+    wsys.release_scratch(&mut walloc, wpid, &mut wpool)?;
+    wsys.flush_columns(&mut walloc, wpid)?;
+
     // ---- analytics: vertical arithmetic, PUMA vs every baseline ----
     println!("\n# analytics — filter-then-sum over vertical columns");
     let acfg = AnalyticsConfig::default();
@@ -381,6 +490,16 @@ fn main() -> anyhow::Result<()> {
                 .min(puma_cell.pud_row_fraction() - r.pud_row_fraction());
         }
     }
+    assert!(
+        cells.iter().all(|r| r.col_hits >= 1),
+        "every cell's sum kernel must hit the resident column cache"
+    );
+    let analytics_host_ns = mean_host_ns(
+        cells
+            .iter()
+            .filter(|r| r.allocator == "puma")
+            .map(|r| &r.host_ns_per_elem),
+    );
 
     // ---- analytics_sharded: MIMDRAM-style bank-parallel SIMD -------
     println!("\n# analytics_sharded — bank-sharded vertical arithmetic");
@@ -431,6 +550,17 @@ fn main() -> anyhow::Result<()> {
         .filter(|r| r.allocator == "puma")
         .map(|r| r.pud_row_fraction())
         .fold(f64::INFINITY, f64::min);
+    assert!(
+        scells.iter().all(|r| r.col_hits >= 1),
+        "sharded cells must reuse the flat cell's host image and the \
+         resident shards"
+    );
+    let sharded_host_ns = mean_host_ns(
+        scells
+            .iter()
+            .filter(|r| r.allocator == "puma")
+            .map(|r| &r.host_ns_per_elem),
+    );
 
     let json = format!(
         "{{\n  \"bench\": \"bench_runtime\",\n  \"workload\": \
@@ -443,11 +573,16 @@ fn main() -> anyhow::Result<()> {
          \"steady_pud_gain\": {:.6}}},\n  \
          \"filter\": {{\"clauses\": {}, \"columns\": {}, \"rows\": {}, \
          \"puma\": {}, \"malloc\": {}, \"pud_gain_vs_hand\": {:.6}}},\n  \
+         \"transpose\": {{\"elems\": 1048576, \"width\": 16, \
+         \"naive_wall_ns\": {:.0}, \"blocked_wall_ns\": {:.0}, \
+         \"speedup\": {:.2}}},\n  \
          \"analytics\": {{\"elems\": {}, \"widths\": [{}], \
          \"threshold_frac\": {:.2}, \"min_puma_margin\": {:.6}, \
+         \"host_ns_per_elem\": {:.4}, \
          \"cells\": [\n    {}\n  ]}},\n  \
          \"analytics_sharded\": {{\"elems\": {}, \"width\": {}, \
          \"speedup_s8\": {:.4}, \"puma_pud_row_fraction\": {:.6}, \
+         \"host_ns_per_elem\": {:.4}, \
          \"cells\": [\n    {}\n  ]}}\n}}\n",
         json_path(&serial, groups),
         json_path(&batched, groups),
@@ -464,6 +599,9 @@ fn main() -> anyhow::Result<()> {
         filter_json(&filter_puma),
         filter_json(&filter_malloc),
         filter_puma.compiled_pud_fraction - filter_puma.hand_pud_fraction,
+        naive_ns,
+        blocked_ns,
+        transpose_speedup,
         acfg.elems,
         acfg.widths
             .iter()
@@ -472,6 +610,7 @@ fn main() -> anyhow::Result<()> {
             .join(", "),
         acfg.threshold_frac,
         min_margin,
+        analytics_host_ns,
         cells
             .iter()
             .map(analytics_json)
@@ -481,6 +620,7 @@ fn main() -> anyhow::Result<()> {
         scfg.widths[0],
         sharded_speedup,
         sharded_min_pud,
+        sharded_host_ns,
         scells
             .iter()
             .map(sharded_json)

@@ -503,6 +503,15 @@ impl Allocator for PumaAlloc {
         Ok(())
     }
 
+    /// Co-location key: the subarray of the allocation's first region
+    /// (hint-aligned and sticky-spread allocations are single-subarray,
+    /// so the first region identifies the whole placement).
+    fn locus(&self, pid: Pid, va: u64) -> Option<u64> {
+        self.lookup(pid, va)
+            .and_then(|a| a.regions.first())
+            .map(|r| r.sid.0 as u64)
+    }
+
     fn stats(&self) -> AllocStats {
         self.stats
     }

@@ -5,7 +5,7 @@ use anyhow::Result;
 use crate::dram::address::InterleaveScheme;
 use crate::os::buddy::BuddyAllocator;
 use crate::os::hugepage::HugePagePool;
-use crate::os::process::Process;
+use crate::os::process::{Pid, Process};
 
 /// OS-side cost model for allocation paths (simulated ns). These make
 /// the small-allocation end of Figure 2 honest: fixed costs dominate
@@ -176,6 +176,18 @@ pub trait Allocator {
 
     /// Release the allocation at `va`.
     fn free(&mut self, ctx: &mut OsCtx, proc: &mut Process, va: u64) -> Result<()>;
+
+    /// Placement locus of the live allocation at `va` — an opaque
+    /// co-location key (PUMA reports the subarray id of the
+    /// allocation's first region). Two allocations sharing a `Some`
+    /// locus are PUD-co-located; `None` means the allocator doesn't
+    /// track placement (every baseline). The size-classed scratch
+    /// pool uses this to reuse a parked buffer only where reuse
+    /// preserves co-location with the requested hint.
+    fn locus(&self, pid: Pid, va: u64) -> Option<u64> {
+        let _ = (pid, va);
+        None
+    }
 
     fn stats(&self) -> AllocStats;
 }

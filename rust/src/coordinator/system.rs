@@ -5,6 +5,8 @@
 //! a workload needs. It is the single entry point the CLI, examples,
 //! and benchmarks construct; allocators plug in per workload run.
 
+use std::sync::Arc;
+
 use anyhow::{ensure, Result};
 use rustc_hash::FxHashMap;
 
@@ -16,8 +18,9 @@ use crate::dram::device::DramDevice;
 use crate::dram::timing::TimingParams;
 use crate::os::process::{Pid, Process};
 use crate::pud::arith::{
-    self, ArithOp, ProgramCache, ProgramCacheStats, ProgramKey, ShardedLayout,
-    ShardedScratch, VerticalLayout,
+    self, colcache::Lookup, ArithOp, ColumnCache, ColumnCacheStats, ColumnKey,
+    ProgramCache, ProgramCacheStats, ProgramKey, ResidentColumn,
+    ShardedLayout, ShardedScratch, VerticalLayout,
 };
 use crate::pud::compiler::{self, Compiled, CompiledMulti, CompileStats, Expr};
 use crate::pud::exec::PudEngine;
@@ -90,6 +93,10 @@ pub struct System {
     /// entry point compiles each kernel exactly once per key and binds
     /// it per column (and per shard) thereafter.
     programs: ProgramCache,
+    /// The resident-column cache: vertical columns persist in
+    /// transposed form across kernels and sweep cells (transpose once,
+    /// query many; see `pud::arith::colcache`).
+    columns: ColumnCache,
 }
 
 impl System {
@@ -112,6 +119,7 @@ impl System {
             next_pid: 1,
             queued: FxHashMap::default(),
             programs: ProgramCache::new(),
+            columns: ColumnCache::new(),
         })
     }
 
@@ -272,6 +280,192 @@ impl System {
     ) -> Result<()> {
         let proc = self.processes.get_mut(&pid).expect("live pid");
         pool.release_all(&mut self.os, proc, alloc)
+    }
+
+    /// Hit/miss counters of the resident-column cache.
+    pub fn column_cache_stats(&self) -> ColumnCacheStats {
+        self.columns.stats
+    }
+
+    /// Cap the resident-column cache at `columns` layouts (see
+    /// `pud::arith::colcache::DEFAULT_COLUMN_BUDGET`).
+    pub fn set_column_budget(&mut self, columns: usize) {
+        self.columns.set_budget(columns);
+    }
+
+    /// Mark column `id` dirty after an in-place store to its planes:
+    /// the next `cached_column`/`cached_column_sharded` for `id`
+    /// rebuilds instead of serving the stale image.
+    pub fn invalidate_column(&mut self, id: u64) {
+        self.columns.invalidate(id);
+    }
+
+    /// Free every resident column leased through `alloc` for `pid` —
+    /// the teardown path before the allocator retires (cached planes
+    /// belong to the allocator that placed them).
+    pub fn flush_columns(
+        &mut self,
+        alloc: &mut dyn Allocator,
+        pid: Pid,
+    ) -> Result<()> {
+        for col in self.columns.drain_owned(alloc.name(), pid) {
+            self.free_resident(alloc, pid, col)?;
+        }
+        Ok(())
+    }
+
+    /// Return a cache-dropped layout's planes to its allocator.
+    fn free_resident(
+        &mut self,
+        alloc: &mut dyn Allocator,
+        pid: Pid,
+        col: ResidentColumn,
+    ) -> Result<()> {
+        match col {
+            ResidentColumn::Flat(l) => l.free(self, alloc, pid),
+            ResidentColumn::Sharded(s) => s.free(self, alloc, pid),
+        }
+    }
+
+    /// The cached host image of `(id, version)`, transposing `values`
+    /// only on a miss.
+    fn host_image(
+        &mut self,
+        id: u64,
+        version: u64,
+        width: u32,
+        values: &[u64],
+    ) -> Arc<Vec<Vec<u8>>> {
+        if let Some(p) = self.columns.image(id, version, width, values.len()) {
+            return p;
+        }
+        let p = Arc::new(arith::transpose(values, width));
+        self.columns
+            .insert_image(id, version, width, values.len(), p.clone());
+        p
+    }
+
+    /// The resident [`VerticalLayout`] of column `id` for `alloc`/`pid`
+    /// — allocated, transposed, and stored on first use; served
+    /// straight from the cache thereafter (transpose once, query
+    /// many). The caller contract is that `(id, version)` identifies
+    /// the content: pass a bumped `version` when `values` change (or
+    /// call [`System::invalidate_column`] after an in-place store) and
+    /// the stale layout is freed and rebuilt. A hit ignores `values`
+    /// entirely — zero transpose, zero allocator traffic, zero store.
+    pub fn cached_column(
+        &mut self,
+        alloc: &mut dyn Allocator,
+        pid: Pid,
+        id: u64,
+        version: u64,
+        width: u32,
+        values: &[u64],
+    ) -> Result<VerticalLayout> {
+        let epoch = self.process(pid).translation_epoch;
+        let key = ColumnKey {
+            id,
+            owner: alloc.name(),
+            pid,
+            shards: 0,
+        };
+        match self.columns.lookup(key, version, epoch, width, values.len()) {
+            Lookup::Hit(ResidentColumn::Flat(l)) => return Ok(l),
+            Lookup::Hit(ResidentColumn::Sharded(_)) => {
+                unreachable!("a shards=0 key only ever holds a flat layout")
+            }
+            Lookup::Stale(col) => self.free_resident(alloc, pid, col)?,
+            Lookup::Miss => {}
+        }
+        let planes = self.host_image(id, version, width, values);
+        let layout =
+            VerticalLayout::alloc(self, alloc, pid, width, values.len())?;
+        layout.store_planes(self, pid, &planes)?;
+        for victim in self.columns.evict_for_insert(alloc.name(), pid) {
+            self.free_resident(alloc, pid, victim)?;
+        }
+        self.columns.insert(
+            key,
+            version,
+            epoch,
+            width,
+            values.len(),
+            ResidentColumn::Flat(layout.clone()),
+        );
+        Ok(layout)
+    }
+
+    /// The resident [`ShardedLayout`] of column `id` at `shards`
+    /// shards — the sharded twin of [`System::cached_column`], sharing
+    /// its host image: sweeping S=1..16 over one column transposes it
+    /// exactly once, and each shard count's layout slices the image
+    /// (byte-aligned shard boundaries) or re-transposes only its own
+    /// ragged slice.
+    pub fn cached_column_sharded(
+        &mut self,
+        alloc: &mut dyn Allocator,
+        pid: Pid,
+        id: u64,
+        version: u64,
+        width: u32,
+        values: &[u64],
+        shards: usize,
+    ) -> Result<ShardedLayout> {
+        let epoch = self.process(pid).translation_epoch;
+        let key = ColumnKey {
+            id,
+            owner: alloc.name(),
+            pid,
+            shards: shards.max(1) as u32,
+        };
+        match self.columns.lookup(key, version, epoch, width, values.len()) {
+            Lookup::Hit(ResidentColumn::Sharded(l)) => return Ok(l),
+            Lookup::Hit(ResidentColumn::Flat(_)) => {
+                unreachable!("a shards>0 key only ever holds a sharded layout")
+            }
+            Lookup::Stale(col) => self.free_resident(alloc, pid, col)?,
+            Lookup::Miss => {}
+        }
+        let planes = self.host_image(id, version, width, values);
+        let layout = ShardedLayout::alloc(
+            self,
+            alloc,
+            pid,
+            width,
+            values.len(),
+            shards,
+        )?;
+        let mut off = 0usize;
+        for part in layout.shards() {
+            let n = part.elems();
+            if off % 8 == 0 {
+                // byte-aligned shard: slice the shared host image
+                let b0 = off / 8;
+                let blen = n.div_ceil(8);
+                let slice: Vec<Vec<u8>> = planes
+                    .iter()
+                    .map(|p| p[b0..b0 + blen].to_vec())
+                    .collect();
+                part.store_planes(self, pid, &slice)?;
+            } else {
+                // unaligned boundary (chunk % 8 != 0): transpose just
+                // this shard's slice
+                part.store(self, pid, &values[off..off + n])?;
+            }
+            off += n;
+        }
+        for victim in self.columns.evict_for_insert(alloc.name(), pid) {
+            self.free_resident(alloc, pid, victim)?;
+        }
+        self.columns.insert(
+            key,
+            version,
+            epoch,
+            width,
+            values.len(),
+            ResidentColumn::Sharded(layout.clone()),
+        );
+        Ok(layout)
     }
 
     /// Compile and execute a Boolean expression over `pid`'s operand

@@ -1,0 +1,436 @@
+//! Resident-column cache: transpose once, query many (DESIGN.md §12).
+//!
+//! The host/PIM boundary of every vertical workload is the same three
+//! steps — transpose the column into bit-planes, allocate W plane
+//! rows, store them — and before this cache every kernel invocation
+//! and every sweep cell paid all three from scratch. A [`ColumnCache`]
+//! makes columns *resident* at two levels:
+//!
+//! * **Host images**: the transposed byte planes of a column id,
+//!   shared across layouts. The sharded sweep's S=1..16 cells all
+//!   slice one image (shard boundaries are byte-aligned whenever the
+//!   chunk size is a multiple of 8) instead of re-transposing the
+//!   million-element column per shard count.
+//! * **Resident layouts**: the allocated-and-stored
+//!   [`VerticalLayout`]/[`ShardedLayout`] itself, keyed by
+//!   `(id, allocator, pid, shard count)`. A repeat query against the
+//!   same column — the second kernel of a filter-then-sum cell, a
+//!   warm sweep pass — reuses the planes already sitting in DRAM:
+//!   zero transpose, zero allocation, zero store traffic.
+//!
+//! Invalidation rules: an entry is served only while its caller-
+//! declared content `version` and its process's `translation_epoch`
+//! both still match (a bumped version means new data; a bumped epoch
+//! means mappings changed under the layout). [`ColumnCache::invalidate`]
+//! force-dirties an id after an in-place store. Residency is bounded
+//! by a column budget; insertion evicts least-recently-used entries
+//! of the same allocator/process (only their owner can free their
+//! planes).
+//!
+//! The cache itself is pure bookkeeping — `System::cached_column` /
+//! `cached_column_sharded` orchestrate allocation, stores, and the
+//! freeing of stale or evicted layouts.
+
+use std::sync::Arc;
+
+use rustc_hash::FxHashMap;
+
+use crate::os::process::Pid;
+
+use super::layout::VerticalLayout;
+use super::shard::ShardedLayout;
+
+/// Default [`ColumnCache`] residency budget (columns, flat or
+/// sharded). Sized for a sweep's per-width working set (one flat
+/// column plus a handful of shard variants) with headroom.
+pub const DEFAULT_COLUMN_BUDGET: usize = 8;
+
+/// Key of one resident column layout.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct ColumnKey {
+    /// Caller-chosen stable column id.
+    pub id: u64,
+    /// Owning allocator ([`crate::alloc::traits::Allocator::name`]):
+    /// placement belongs to the allocator that produced it, and only
+    /// that allocator can free the planes.
+    pub owner: &'static str,
+    /// Owning process.
+    pub pid: Pid,
+    /// Shard count of the layout (0 = unsharded flat layout).
+    pub shards: u32,
+}
+
+/// A resident layout handle (clones are cheap: plane VAs only).
+#[derive(Debug, Clone)]
+pub enum ResidentColumn {
+    Flat(VerticalLayout),
+    Sharded(ShardedLayout),
+}
+
+#[derive(Debug)]
+struct Resident {
+    version: u64,
+    epoch: u64,
+    width: u32,
+    elems: usize,
+    dirty: bool,
+    lru: u64,
+    layout: ResidentColumn,
+}
+
+/// One cached host image: the transposed planes of a column id.
+#[derive(Debug)]
+struct HostImage {
+    version: u64,
+    width: u32,
+    elems: usize,
+    planes: Arc<Vec<Vec<u8>>>,
+}
+
+/// Cumulative [`ColumnCache`] counters.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ColumnCacheStats {
+    /// Host images served from the cache (transposes avoided).
+    pub host_hits: u64,
+    /// Host images built fresh (a transpose ran).
+    pub host_misses: u64,
+    /// Resident layouts served from the cache (alloc + store avoided).
+    pub resident_hits: u64,
+    /// Lookups that had to build a layout.
+    pub resident_misses: u64,
+    /// Entries dropped for a version/epoch/shape change or an explicit
+    /// [`ColumnCache::invalidate`].
+    pub invalidations: u64,
+    /// Entries dropped to stay within the residency budget.
+    pub evictions: u64,
+}
+
+/// Outcome of a resident-layout lookup.
+pub enum Lookup {
+    /// Valid entry — use the handle as-is.
+    Hit(ResidentColumn),
+    /// The entry existed but its version/epoch/shape no longer match;
+    /// it has been removed and the caller must free its planes.
+    Stale(ResidentColumn),
+    Miss,
+}
+
+/// The two-level column cache. Owned by
+/// [`System`](crate::coordinator::system::System); see the module docs.
+#[derive(Default)]
+pub struct ColumnCache {
+    images: FxHashMap<u64, HostImage>,
+    resident: FxHashMap<ColumnKey, Resident>,
+    tick: u64,
+    budget: Option<usize>,
+    pub stats: ColumnCacheStats,
+}
+
+impl ColumnCache {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Resident-column budget (defaults to [`DEFAULT_COLUMN_BUDGET`]).
+    pub fn budget(&self) -> usize {
+        self.budget.unwrap_or(DEFAULT_COLUMN_BUDGET)
+    }
+
+    pub fn set_budget(&mut self, columns: usize) {
+        self.budget = Some(columns.max(1));
+    }
+
+    /// Resident layouts currently cached.
+    pub fn len(&self) -> usize {
+        self.resident.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.resident.is_empty()
+    }
+
+    /// Host images currently cached.
+    pub fn n_images(&self) -> usize {
+        self.images.len()
+    }
+
+    /// The host image for `(id, version)` with the given shape, if
+    /// cached. A hit avoids a full column transpose.
+    pub fn image(
+        &mut self,
+        id: u64,
+        version: u64,
+        width: u32,
+        elems: usize,
+    ) -> Option<Arc<Vec<Vec<u8>>>> {
+        match self.images.get(&id) {
+            Some(img)
+                if img.version == version
+                    && img.width == width
+                    && img.elems == elems =>
+            {
+                self.stats.host_hits += 1;
+                Some(img.planes.clone())
+            }
+            _ => None,
+        }
+    }
+
+    /// Insert (or replace) the host image of `id`.
+    pub fn insert_image(
+        &mut self,
+        id: u64,
+        version: u64,
+        width: u32,
+        elems: usize,
+        planes: Arc<Vec<Vec<u8>>>,
+    ) {
+        self.stats.host_misses += 1;
+        self.images.insert(
+            id,
+            HostImage {
+                version,
+                width,
+                elems,
+                planes,
+            },
+        );
+    }
+
+    /// Look up the resident layout for `key`, validating against the
+    /// caller's current content version, translation epoch, and shape.
+    /// A stale entry is removed and handed back so the caller can free
+    /// its planes.
+    pub fn lookup(
+        &mut self,
+        key: ColumnKey,
+        version: u64,
+        epoch: u64,
+        width: u32,
+        elems: usize,
+    ) -> Lookup {
+        let valid = match self.resident.get(&key) {
+            None => {
+                self.stats.resident_misses += 1;
+                return Lookup::Miss;
+            }
+            Some(r) => {
+                !r.dirty
+                    && r.version == version
+                    && r.epoch == epoch
+                    && r.width == width
+                    && r.elems == elems
+            }
+        };
+        if valid {
+            self.stats.resident_hits += 1;
+            self.tick += 1;
+            let r = self.resident.get_mut(&key).expect("checked above");
+            r.lru = self.tick;
+            Lookup::Hit(r.layout.clone())
+        } else {
+            self.stats.resident_misses += 1;
+            self.stats.invalidations += 1;
+            let r = self.resident.remove(&key).expect("checked above");
+            Lookup::Stale(r.layout)
+        }
+    }
+
+    /// Insert a freshly built layout for `key`.
+    pub fn insert(
+        &mut self,
+        key: ColumnKey,
+        version: u64,
+        epoch: u64,
+        width: u32,
+        elems: usize,
+        layout: ResidentColumn,
+    ) {
+        self.tick += 1;
+        self.resident.insert(
+            key,
+            Resident {
+                version,
+                epoch,
+                width,
+                elems,
+                dirty: false,
+                lru: self.tick,
+                layout,
+            },
+        );
+    }
+
+    /// Pop least-recently-used entries owned by `(owner, pid)` until
+    /// the resident count has room for one more insertion within the
+    /// budget. Returned layouts must be freed by the caller (through
+    /// `owner`'s allocator). Entries of other owners are never touched
+    /// — only their allocator can free them — so the cache can
+    /// transiently exceed its budget in multi-allocator use.
+    pub fn evict_for_insert(
+        &mut self,
+        owner: &'static str,
+        pid: Pid,
+    ) -> Vec<ResidentColumn> {
+        let mut out = Vec::new();
+        while self.resident.len() >= self.budget() {
+            let victim = self
+                .resident
+                .iter()
+                .filter(|(k, _)| k.owner == owner && k.pid == pid)
+                .min_by_key(|(_, r)| r.lru)
+                .map(|(k, _)| *k);
+            match victim {
+                Some(k) => {
+                    let r = self.resident.remove(&k).expect("chosen above");
+                    self.stats.evictions += 1;
+                    out.push(r.layout);
+                }
+                None => break,
+            }
+        }
+        out
+    }
+
+    /// Remove every resident layout owned by `(owner, pid)` — the
+    /// teardown path before an allocator retires. The caller frees
+    /// the returned layouts.
+    pub fn drain_owned(
+        &mut self,
+        owner: &'static str,
+        pid: Pid,
+    ) -> Vec<ResidentColumn> {
+        let keys: Vec<ColumnKey> = self
+            .resident
+            .keys()
+            .filter(|k| k.owner == owner && k.pid == pid)
+            .copied()
+            .collect();
+        keys.iter()
+            .map(|k| self.resident.remove(k).expect("listed above").layout)
+            .collect()
+    }
+
+    /// Force-dirty every entry of `id` and drop its host image: the
+    /// hook for an in-place store to a cached column. The next lookup
+    /// reports the entries stale (never serving the old planes) and
+    /// rebuilds.
+    pub fn invalidate(&mut self, id: u64) {
+        self.images.remove(&id);
+        for (k, r) in self.resident.iter_mut() {
+            if k.id == id {
+                r.dirty = true;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn key(id: u64, shards: u32) -> ColumnKey {
+        ColumnKey {
+            id,
+            owner: "puma",
+            pid: Pid(1),
+            shards,
+        }
+    }
+
+    fn layout() -> ResidentColumn {
+        // a synthetic handle is enough for bookkeeping tests
+        ResidentColumn::Flat(VerticalLayout::synthetic(4, 16, &[1, 2, 3, 4]))
+    }
+
+    #[test]
+    fn lookup_validates_version_epoch_and_shape() {
+        let mut c = ColumnCache::new();
+        assert!(matches!(c.lookup(key(1, 0), 0, 0, 4, 16), Lookup::Miss));
+        c.insert(key(1, 0), 0, 0, 4, 16, layout());
+        assert!(matches!(c.lookup(key(1, 0), 0, 0, 4, 16), Lookup::Hit(_)));
+        assert_eq!(c.stats.resident_hits, 1);
+        // a bumped version must not serve the stale entry
+        assert!(matches!(c.lookup(key(1, 0), 1, 0, 4, 16), Lookup::Stale(_)));
+        assert_eq!(c.stats.invalidations, 1);
+        assert!(c.is_empty(), "the stale entry is gone");
+        // epoch and shape changes likewise
+        c.insert(key(1, 0), 1, 0, 4, 16, layout());
+        assert!(matches!(c.lookup(key(1, 0), 1, 7, 4, 16), Lookup::Stale(_)));
+        c.insert(key(1, 0), 1, 0, 4, 16, layout());
+        assert!(matches!(c.lookup(key(1, 0), 1, 0, 8, 16), Lookup::Stale(_)));
+    }
+
+    #[test]
+    fn invalidate_dirties_entries_and_drops_the_image() {
+        let mut c = ColumnCache::new();
+        c.insert_image(7, 0, 4, 16, Arc::new(vec![vec![0u8; 2]; 4]));
+        assert!(c.image(7, 0, 4, 16).is_some());
+        assert_eq!(c.stats.host_hits, 1);
+        c.insert(key(7, 0), 0, 0, 4, 16, layout());
+        c.invalidate(7);
+        assert!(c.image(7, 0, 4, 16).is_none(), "image dropped");
+        assert!(
+            matches!(c.lookup(key(7, 0), 0, 0, 4, 16), Lookup::Stale(_)),
+            "a dirtied entry must never serve"
+        );
+    }
+
+    #[test]
+    fn eviction_is_lru_and_owner_scoped() {
+        let mut c = ColumnCache::new();
+        c.set_budget(2);
+        c.insert(key(1, 0), 0, 0, 4, 16, layout());
+        c.insert(key(2, 0), 0, 0, 4, 16, layout());
+        // touch 1 so 2 is the LRU
+        assert!(matches!(c.lookup(key(1, 0), 0, 0, 4, 16), Lookup::Hit(_)));
+        let evicted = c.evict_for_insert("puma", Pid(1));
+        assert_eq!(evicted.len(), 1);
+        assert_eq!(c.stats.evictions, 1);
+        assert!(matches!(c.lookup(key(1, 0), 0, 0, 4, 16), Lookup::Hit(_)));
+        assert!(
+            matches!(c.lookup(key(2, 0), 0, 0, 4, 16), Lookup::Miss),
+            "the LRU entry was the one evicted"
+        );
+        // another owner's entries are not evictable from this path
+        let mut c = ColumnCache::new();
+        c.set_budget(1);
+        c.insert(
+            ColumnKey {
+                id: 1,
+                owner: "malloc",
+                pid: Pid(1),
+                shards: 0,
+            },
+            0,
+            0,
+            4,
+            16,
+            layout(),
+        );
+        assert!(c.evict_for_insert("puma", Pid(1)).is_empty());
+        assert_eq!(c.len(), 1, "over budget rather than cross-owner free");
+    }
+
+    #[test]
+    fn drain_owned_scopes_to_owner_and_pid() {
+        let mut c = ColumnCache::new();
+        c.insert(key(1, 0), 0, 0, 4, 16, layout());
+        c.insert(key(1, 4), 0, 0, 4, 16, layout());
+        c.insert(
+            ColumnKey {
+                id: 1,
+                owner: "malloc",
+                pid: Pid(1),
+                shards: 0,
+            },
+            0,
+            0,
+            4,
+            16,
+            layout(),
+        );
+        assert_eq!(c.drain_owned("puma", Pid(1)).len(), 2);
+        assert_eq!(c.len(), 1);
+    }
+}

@@ -14,6 +14,16 @@
 //! `i` lives at byte `i / 8`, bit `i % 8` (LSB first) of each plane.
 //! [`transpose`] / [`untranspose`] are pure functions so property
 //! tests can round-trip them without booting a system.
+//!
+//! Both directions run a *blocked* bit-matrix transpose: eight
+//! consecutive elements × eight consecutive bit positions form an
+//! 8×8 bit tile packed into one `u64` (byte `j` = element `j` of the
+//! octet), flipped branch-free by [`transpose8x8`] — the classic
+//! three-stage masked-swap network (Hacker's Delight §7-3) — and
+//! scattered to one byte per destination plane. The bit-at-a-time
+//! originals survive as [`transpose_naive`] / [`untranspose_naive`],
+//! the oracles the property tests and the host-boundary bench compare
+//! against.
 
 use anyhow::{ensure, Result};
 
@@ -23,9 +33,105 @@ use crate::os::process::Pid;
 
 use super::kernels::width_mask;
 
+/// Transpose the 8×8 bit matrix packed in `x` (row `r` = byte `r`
+/// LSB-first, column `c` = bit `c` of that byte): output bit
+/// `8r + c` = input bit `8c + r`. Three masked swap stages exchange
+/// 1×1 sub-blocks within 2×2, 2×2 within 4×4, then 4×4 within 8×8 —
+/// an involution, so the same kernel serves both directions.
+#[inline]
+fn transpose8x8(mut x: u64) -> u64 {
+    let mut t = (x ^ (x >> 7)) & 0x00AA_00AA_00AA_00AA;
+    x ^= t ^ (t << 7);
+    t = (x ^ (x >> 14)) & 0x0000_CCCC_0000_CCCC;
+    x ^= t ^ (t << 14);
+    t = (x ^ (x >> 28)) & 0x0000_0000_F0F0_F0F0;
+    x ^= t ^ (t << 28);
+    x
+}
+
 /// Transpose `values` (each at most `width` bits) into `width`
 /// bit-plane byte buffers, LSB plane first.
+///
+/// Blocked fast path: per octet of elements and per group of eight
+/// planes, pack byte `j` = bits `[w0, w0+8)` of element `j`, flip the
+/// tile with [`transpose8x8`], and byte `r` of the result is plane
+/// `w0 + r`'s byte for this octet. Tail octets are zero-padded and
+/// plane groups past `width` are dropped, so the output is
+/// byte-identical to [`transpose_naive`].
 pub fn transpose(values: &[u64], width: u32) -> Vec<Vec<u8>> {
+    let width = width as usize;
+    let plane_len = values.len().div_ceil(8);
+    let mut planes = vec![vec![0u8; plane_len]; width];
+    for o in 0..plane_len {
+        let base = o * 8;
+        let n = (values.len() - base).min(8);
+        let octet = &values[base..base + n];
+        let mut w0 = 0;
+        while w0 < width {
+            let mut x = 0u64;
+            for (j, &v) in octet.iter().enumerate() {
+                x |= ((v >> w0) & 0xFF) << (8 * j);
+            }
+            let x = transpose8x8(x);
+            let take = (width - w0).min(8);
+            for (r, plane) in planes[w0..w0 + take].iter_mut().enumerate() {
+                plane[o] = (x >> (8 * r)) as u8;
+            }
+            w0 += 8;
+        }
+    }
+    planes
+}
+
+/// Inverse of [`transpose`]: rebuild `elems` values from bit-planes
+/// (`planes[w]` is bit `w`). Plane bytes — and final-byte bits — past
+/// `elems` are ignored.
+///
+/// Errors (instead of indexing out of bounds, as the bit-at-a-time
+/// version did) when any plane is shorter than the `ceil(elems / 8)`
+/// bytes the element count requires, or when more than 64 planes are
+/// given (bit positions past 63 don't fit a `u64`).
+pub fn untranspose(planes: &[Vec<u8>], elems: usize) -> Result<Vec<u64>> {
+    ensure!(
+        planes.len() <= 64,
+        "{} bit-planes exceed a u64's 64 bit positions",
+        planes.len()
+    );
+    let need = elems.div_ceil(8);
+    for (w, plane) in planes.iter().enumerate() {
+        ensure!(
+            plane.len() >= need,
+            "plane {w} holds {} byte(s) but {elems} element(s) need {need}",
+            plane.len()
+        );
+    }
+    let mut values = vec![0u64; elems];
+    let mut w0 = 0;
+    while w0 < planes.len() {
+        let group = &planes[w0..(w0 + 8).min(planes.len())];
+        for o in 0..need {
+            let mut x = 0u64;
+            for (r, plane) in group.iter().enumerate() {
+                x |= (plane[o] as u64) << (8 * r);
+            }
+            let x = transpose8x8(x);
+            let base = o * 8;
+            for (j, v) in values[base..elems.min(base + 8)]
+                .iter_mut()
+                .enumerate()
+            {
+                *v |= ((x >> (8 * j)) & 0xFF) << w0;
+            }
+        }
+        w0 += 8;
+    }
+    Ok(values)
+}
+
+/// Bit-at-a-time reference transpose — the pre-blocking
+/// implementation, kept as the oracle the property tests and the
+/// host-boundary bench measure [`transpose`] against.
+pub fn transpose_naive(values: &[u64], width: u32) -> Vec<Vec<u8>> {
     let len = values.len().div_ceil(8);
     let mut planes = vec![vec![0u8; len]; width as usize];
     for (i, &v) in values.iter().enumerate() {
@@ -38,10 +144,10 @@ pub fn transpose(values: &[u64], width: u32) -> Vec<Vec<u8>> {
     planes
 }
 
-/// Inverse of [`transpose`]: rebuild `elems` values from bit-planes
-/// (`planes[w]` is bit `w`). Plane bytes past `elems` bits are
-/// ignored.
-pub fn untranspose(planes: &[Vec<u8>], elems: usize) -> Vec<u64> {
+/// Bit-at-a-time reference untranspose, the oracle for
+/// [`untranspose`]. Assumes in-bounds planes (the blocked path is the
+/// one that validates).
+pub fn untranspose_naive(planes: &[Vec<u8>], elems: usize) -> Vec<u64> {
     let mut values = vec![0u64; elems];
     for (w, plane) in planes.iter().enumerate() {
         for (i, v) in values.iter_mut().enumerate() {
@@ -78,7 +184,11 @@ pub fn popcount_live(bits: &[u8], elems: usize) -> u64 {
 
 /// A column of `elems` `width`-bit integers stored as `width` bit-plane
 /// buffers of `plane_len` bytes each.
-#[derive(Debug)]
+///
+/// `Clone` is cheap (plane VAs only, no data) so the `ColumnCache`
+/// can hand out handles to resident columns without borrowing the
+/// [`System`] that owns the cache.
+#[derive(Debug, Clone)]
 pub struct VerticalLayout {
     width: u32,
     elems: usize,
@@ -179,6 +289,18 @@ impl VerticalLayout {
         })
     }
 
+    /// Test-only handle with caller-chosen plane VAs (no allocation) —
+    /// for exercising cache bookkeeping without booting a system.
+    #[cfg(test)]
+    pub(crate) fn synthetic(width: u32, elems: usize, planes: &[u64]) -> Self {
+        Self {
+            width,
+            elems,
+            plane_len: elems.div_ceil(8) as u64,
+            planes: planes.to_vec(),
+        }
+    }
+
     pub fn width(&self) -> u32 {
         self.width
     }
@@ -227,13 +349,43 @@ impl VerticalLayout {
         Ok(())
     }
 
+    /// Write already-transposed plane bytes directly (the column
+    /// cache's fast path: transpose once on the host, store the same
+    /// image into any number of resident layouts without re-running
+    /// the transpose). `bytes[w]` must be exactly `plane_len` bytes.
+    pub fn store_planes(
+        &self,
+        sys: &mut System,
+        pid: Pid,
+        bytes: &[Vec<u8>],
+    ) -> Result<()> {
+        ensure!(
+            bytes.len() == self.width as usize,
+            "{} plane buffer(s) for a {}-bit column",
+            bytes.len(),
+            self.width
+        );
+        for (w, b) in bytes.iter().enumerate() {
+            ensure!(
+                b.len() as u64 == self.plane_len,
+                "plane {w} is {} byte(s), layout wants {}",
+                b.len(),
+                self.plane_len
+            );
+        }
+        for (plane, b) in self.planes.iter().zip(bytes) {
+            sys.write_virt(pid, *plane, b)?;
+        }
+        Ok(())
+    }
+
     /// Read the planes back and untranspose into values.
     pub fn load(&self, sys: &mut System, pid: Pid) -> Result<Vec<u64>> {
         let mut planes = Vec::with_capacity(self.planes.len());
         for &va in &self.planes {
             planes.push(sys.read_virt(pid, va, self.plane_len)?);
         }
-        Ok(untranspose(&planes, self.elems))
+        untranspose(&planes, self.elems)
     }
 
     /// Return every plane to `alloc`.
@@ -260,7 +412,41 @@ mod tests {
         let planes = transpose(&values, 8);
         assert_eq!(planes.len(), 8);
         assert_eq!(planes[0].len(), 13); // ceil(100 / 8)
-        assert_eq!(untranspose(&planes, 100), values);
+        assert_eq!(untranspose(&planes, 100).unwrap(), values);
+    }
+
+    #[test]
+    fn blocked_matches_naive_oracles() {
+        // ragged length (101 % 64 != 0, tail octet of 5), width that
+        // splits a plane group (19 = 8 + 8 + 3)
+        let values: Vec<u64> =
+            (0..101u64).map(|i| i.wrapping_mul(0x9E37_79B9) & 0x7FFFF).collect();
+        let planes = transpose(&values, 19);
+        assert_eq!(planes, transpose_naive(&values, 19));
+        assert_eq!(
+            untranspose(&planes, 101).unwrap(),
+            untranspose_naive(&planes, 101)
+        );
+        // shorter than one octet
+        let tiny = [0b101u64, 0b011, 0b110];
+        assert_eq!(transpose(&tiny, 3), transpose_naive(&tiny, 3));
+    }
+
+    #[test]
+    fn untranspose_rejects_short_planes() {
+        // Regression: a plane shorter than ceil(elems / 8) used to
+        // index out of bounds (`plane[i / 8]`); it must be a clean
+        // error now.
+        let planes = vec![vec![0xFFu8; 2]]; // 16 bits of storage
+        assert!(untranspose(&planes, 17).is_err());
+        assert!(untranspose(&planes, 16).is_ok());
+        // the error names the offending plane, not a panic site
+        let ragged = vec![vec![0u8; 3], vec![0u8; 1]];
+        let err = untranspose(&ragged, 20).unwrap_err().to_string();
+        assert!(err.contains("plane 1"), "unexpected error: {err}");
+        // > 64 planes cannot map onto u64 bit positions
+        let wide = vec![vec![0u8; 1]; 65];
+        assert!(untranspose(&wide, 4).is_err());
     }
 
     #[test]
@@ -305,6 +491,13 @@ mod tests {
     fn untranspose_ignores_padding_bits() {
         let mut planes = transpose(&[1u64, 1, 1], 1);
         planes[0][0] |= 0xF8; // junk in the padding lanes
-        assert_eq!(untranspose(&planes, 3), vec![1, 1, 1]);
+        assert_eq!(untranspose(&planes, 3).unwrap(), vec![1, 1, 1]);
+        // whole trailing pad bytes (e.g. a full-row read-back) are
+        // ignored too, junk and all
+        let mut padded = transpose(&[7u64, 7], 3);
+        for p in &mut padded {
+            p.extend_from_slice(&[0xFF; 4]);
+        }
+        assert_eq!(untranspose(&padded, 2).unwrap(), vec![7, 7]);
     }
 }

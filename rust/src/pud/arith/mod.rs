@@ -18,21 +18,32 @@
 //!   as a multi-output [`MultiExpr`](crate::pud::compiler::MultiExpr),
 //!   so CSE (one shared carry chain), scratch register allocation, and
 //!   single-`submit_batch` emission come for free.
+//! * [`colcache`] — [`ColumnCache`]: columns stay resident in
+//!   transposed form across kernels and sweep cells (transpose once,
+//!   query many), with version/epoch invalidation and an LRU budget.
 //!
 //! Execution goes through
 //! [`System::run_arith`](crate::coordinator::system::System::run_arith)
 //! (and `run_multi`/`arith_sum`); `workloads::analytics` runs the
 //! filter-then-sum aggregate on top and `puma analytics` reports it.
 
+pub mod colcache;
 pub mod kernels;
 pub mod layout;
 pub mod shard;
 
+pub use colcache::{
+    ColumnCache, ColumnCacheStats, ColumnKey, ResidentColumn,
+    DEFAULT_COLUMN_BUDGET,
+};
 pub use kernels::{
     kernel, kernel_const, mask_planes, popcount_width, reference, width_mask,
     ArithOp, MAX_WIDTH,
 };
-pub use layout::{popcount_live, transpose, untranspose, VerticalLayout};
+pub use layout::{
+    popcount_live, transpose, transpose_naive, untranspose, untranspose_naive,
+    VerticalLayout,
+};
 pub use shard::{shard_sizes, ShardedLayout, ShardedScratch};
 
 use std::sync::Arc;

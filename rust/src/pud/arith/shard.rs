@@ -53,7 +53,11 @@ pub fn shard_sizes(elems: usize, shards: usize) -> Vec<usize> {
 
 /// A column of `elems` `width`-bit integers partitioned into
 /// bank-disjoint [`VerticalLayout`] shards.
-#[derive(Debug)]
+///
+/// `Clone` is cheap (plane VAs only) — the `ColumnCache` hands out
+/// handles to resident sharded columns the same way it does for
+/// unsharded ones.
+#[derive(Debug, Clone)]
 pub struct ShardedLayout {
     width: u32,
     elems: usize,

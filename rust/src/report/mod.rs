@@ -426,6 +426,8 @@ pub fn analytics(
         "waves",
         "aaps/elem",
         "pud%",
+        "host ns/elem",
+        "col h/m",
         "matches",
         "sum",
     ])
@@ -445,6 +447,10 @@ pub fn analytics(
         "pud_row_fraction",
         "sim_ns",
         "elapsed_sim_ns",
+        "host_ns_per_elem",
+        "col_hits",
+        "col_misses",
+        "pool_leases",
         "matches",
         "sum",
         "pool_high_water",
@@ -459,6 +465,8 @@ pub fn analytics(
             r.waves.to_string(),
             format!("{:.4}", r.aaps_per_elem),
             format!("{:.0}%", r.pud_row_fraction() * 100.0),
+            format!("{:.2}", r.host_ns_per_elem),
+            format!("{}/{}", r.col_hits, r.col_misses),
             r.matches.to_string(),
             r.sum.to_string(),
         ]);
@@ -477,6 +485,10 @@ pub fn analytics(
             format!("{:.6}", r.pud_row_fraction()),
             format!("{:.1}", r.sim_ns),
             format!("{:.1}", r.elapsed_ns),
+            format!("{:.4}", r.host_ns_per_elem),
+            r.col_hits.to_string(),
+            r.col_misses.to_string(),
+            r.pool_leases.to_string(),
             r.matches.to_string(),
             r.sum.to_string(),
             r.pool_high_water.to_string(),
@@ -507,6 +519,8 @@ pub fn analytics_sharded(
         "pud%",
         "elapsed",
         "speedup",
+        "host ns/elem",
+        "col h/m",
         "matches",
         "sum",
     ])
@@ -525,6 +539,10 @@ pub fn analytics_sharded(
         "sim_ns",
         "elapsed_sim_ns",
         "speedup_vs_s1",
+        "host_ns_per_elem",
+        "col_hits",
+        "col_misses",
+        "pool_leases",
         "matches",
         "sum",
         "pool_high_water",
@@ -550,6 +568,8 @@ pub fn analytics_sharded(
             format!("{:.0}%", r.pud_row_fraction() * 100.0),
             fmt_ns(r.elapsed_ns),
             speedup_txt,
+            format!("{:.2}", r.host_ns_per_elem),
+            format!("{}/{}", r.col_hits, r.col_misses),
             r.matches.to_string(),
             r.sum.to_string(),
         ]);
@@ -567,6 +587,10 @@ pub fn analytics_sharded(
             format!("{:.1}", r.sim_ns),
             format!("{:.1}", r.elapsed_ns),
             speedup.map(|s| format!("{s:.4}")).unwrap_or_default(),
+            format!("{:.4}", r.host_ns_per_elem),
+            r.col_hits.to_string(),
+            r.col_misses.to_string(),
+            r.pool_leases.to_string(),
             r.matches.to_string(),
             r.sum.to_string(),
             r.pool_high_water.to_string(),
@@ -756,6 +780,10 @@ mod tests {
             pud_rows: 100,
             fallback_rows: 0,
             pool_high_water: 8,
+            pool_leases: 0,
+            col_hits: 2,
+            col_misses: 1,
+            host_ns_per_elem: 1.25,
         }
     }
 

@@ -15,6 +15,17 @@
 //!
 //! Every cell is verified twice: the predicate mask bit-for-bit and
 //! the masked sum value against host-side scalar arithmetic.
+//!
+//! Host-boundary accounting (DESIGN.md §12): columns are fetched
+//! through the system's resident-column cache (`System::cached_column`
+//! — transpose once, query many; each kernel of a cell re-fetches by
+//! id, so the second kernel and every warm repeat is a cache hit), the
+//! scratch pool persists across cells (its size-classed free lists
+//! absorb width changes with zero net allocator traffic), and every
+//! cell reports `host_ns_per_elem` — the measured wall-clock cost of
+//! column fetch plus mask readback, per element.
+
+use std::time::Instant;
 
 use anyhow::{ensure, Result};
 
@@ -88,8 +99,21 @@ pub struct AnalyticsResult {
     /// Analytic in-DRAM AAPs per element of the compare kernel — the
     /// W-bit op-cost accounting (`pud::isa::batch_cost`).
     pub aaps_per_elem: f64,
-    /// Scratch-pool residents after the cell (trimmed between cells).
+    /// Scratch-pool resident high water (the pool persists across
+    /// cells; its size classes absorb width changes).
     pub pool_high_water: usize,
+    /// Fresh allocator leases the scratch pool took during this cell —
+    /// zero once the pool is warm for the cell's size classes.
+    pub pool_leases: u64,
+    /// Column-cache hits (resident + host image) accrued by this cell;
+    /// the sum kernel's re-fetch makes every cell score at least one.
+    pub col_hits: u64,
+    /// Column-cache misses accrued by this cell — the first touch of a
+    /// width transposes and stores, warm repeats score zero.
+    pub col_misses: u64,
+    /// Measured wall-clock host-boundary cost per element: column
+    /// fetch (blocked transpose + store on a miss) plus mask readback.
+    pub host_ns_per_elem: f64,
 }
 
 impl AnalyticsResult {
@@ -112,8 +136,11 @@ pub fn threshold(width: u32, frac: f64) -> u64 {
 }
 
 /// Run one cell on an already-booted system. The caller owns system,
-/// allocator, and pool so a sweep can reuse them across widths (and
-/// exercise the pool's trim path between cells).
+/// allocator, and scratch pool so a sweep reuses them across widths:
+/// the column comes from the resident-column cache (transpose once,
+/// query many — both kernels fetch it by id, so the sum fetch and
+/// every warm repeat is a hit) and scratch stays parked in the pool's
+/// size classes between cells instead of round-tripping the allocator.
 pub fn run_cell(
     sys: &mut System,
     alloc: &mut dyn Allocator,
@@ -121,6 +148,7 @@ pub fn run_cell(
     name: &'static str,
     cfg: &AnalyticsConfig,
     width: u32,
+    pool: &mut ScratchPool,
 ) -> Result<AnalyticsResult> {
     ensure!(
         (1..=arith::MAX_WIDTH).contains(&width),
@@ -132,20 +160,29 @@ pub fn run_cell(
     let values: Vec<u64> =
         (0..cfg.elems).map(|_| rng.next_u64() & mask_bits).collect();
 
-    let col = VerticalLayout::alloc(sys, alloc, pid, width, cfg.elems)?;
-    col.store(sys, pid, &values)?;
+    let stats0 = sys.column_cache_stats();
+    let leases0 = pool.leases;
+
+    // the column is keyed by width and versioned by the seed that
+    // generated it; a miss transposes (blocked) and stores, a hit
+    // returns the resident planes untouched
+    let t = Instant::now();
+    let col =
+        sys.cached_column(alloc, pid, width as u64, cfg.seed, width, &values)?;
+    let mut host_ns = t.elapsed().as_nanos() as f64;
     let mask = VerticalLayout::alloc_with_hint(
         sys, alloc, pid, 1, cfg.elems, col.hint(),
     )?;
 
     // compiled predicate: v < T with T's bits folded at compile time,
     // served from the system's (op, width, T) program cache
-    let mut pool = ScratchPool::new();
     let rep =
-        sys.run_arith_const(alloc, pid, ArithOp::CmpLt, thr, &col, &mask, &mut pool)?;
+        sys.run_arith_const(alloc, pid, ArithOp::CmpLt, thr, &col, &mask, pool)?;
 
     // verify the mask bit-for-bit against scalar compares
+    let t = Instant::now();
     let mask_row = sys.read_virt(pid, mask.planes()[0], mask.plane_len())?;
+    host_ns += t.elapsed().as_nanos() as f64;
     for (i, &v) in values.iter().enumerate() {
         let got = (mask_row[i / 8] >> (i % 8)) & 1 == 1;
         ensure!(
@@ -155,9 +192,14 @@ pub fn run_cell(
     }
     let matches = arith::popcount_live(&mask_row, cfg.elems);
 
-    // filter-then-sum: in-DRAM masking, host tree reduction
+    // filter-then-sum: in-DRAM masking, host tree reduction; the
+    // column re-fetch is a resident-cache hit (no transpose, no store)
+    let t = Instant::now();
+    let col =
+        sys.cached_column(alloc, pid, width as u64, cfg.seed, width, &values)?;
+    host_ns += t.elapsed().as_nanos() as f64;
     let (sum, sum_rep) =
-        sys.arith_sum(alloc, pid, &col, Some(mask.planes()[0]), &mut pool)?;
+        sys.arith_sum(alloc, pid, &col, Some(mask.planes()[0]), pool)?;
     let want: u128 = values
         .iter()
         .filter(|v| **v < thr)
@@ -177,12 +219,10 @@ pub fn run_cell(
         &TimingParams::default(),
         &EnergyParams::default(),
     );
-    let high_water = pool.high_water;
-    // release the cell's transient rows: W-row masked planes + scratch
-    // go back first (trim), then the column itself
-    sys.trim_scratch(alloc, pid, &mut pool, 0)?;
+    // only the mask is per-cell transient; the column stays resident
+    // in the cache and the scratch stays parked in the pool
     mask.free(sys, alloc, pid)?;
-    col.free(sys, alloc, pid)?;
+    let stats1 = sys.column_cache_stats();
 
     Ok(AnalyticsResult {
         allocator: name,
@@ -198,13 +238,20 @@ pub fn run_cell(
         pud_rows: rep.pud_rows + sum_rep.pud_rows,
         fallback_rows: rep.fallback_rows + sum_rep.fallback_rows,
         aaps_per_elem: cost.aaps as f64 / cfg.elems as f64,
-        pool_high_water: high_water,
+        pool_high_water: pool.high_water,
+        pool_leases: pool.leases - leases0,
+        col_hits: (stats1.resident_hits + stats1.host_hits)
+            - (stats0.resident_hits + stats0.host_hits),
+        col_misses: (stats1.resident_misses + stats1.host_misses)
+            - (stats0.resident_misses + stats0.host_misses),
+        host_ns_per_elem: host_ns / cfg.elems.max(1) as f64,
     })
 }
 
-/// Run the width sweep on one allocator: one system and process reused
-/// across widths; each cell leases, trims, and frees its own rows, so
-/// steady-state allocator occupancy stays flat across the sweep.
+/// Run the width sweep on one allocator: one system, process, and
+/// scratch pool reused across widths. Columns stay resident in the
+/// cache and scratch parked in the pool's size classes for the whole
+/// sweep; both retire in one shot at the end.
 pub fn run(
     scheme: InterleaveScheme,
     cfg: &AnalyticsConfig,
@@ -220,6 +267,7 @@ pub fn run(
     })?;
     let pid = sys.spawn();
     let mut alloc = kind.build(&mut sys, cfg.puma_pages)?;
+    let mut pool = ScratchPool::new();
     let mut out = Vec::with_capacity(cfg.widths.len());
     for &w in &cfg.widths {
         out.push(run_cell(
@@ -229,8 +277,11 @@ pub fn run(
             kind.name(),
             cfg,
             w,
+            &mut pool,
         )?);
     }
+    sys.release_scratch(alloc.as_mut(), pid, &mut pool)?;
+    sys.flush_columns(alloc.as_mut(), pid)?;
     Ok(out)
 }
 
@@ -328,6 +379,18 @@ pub struct ShardedResult {
     pub fallback_rows: u64,
     /// Total resident high water across the per-shard scratch pools.
     pub pool_high_water: usize,
+    /// Fresh allocator leases the per-shard pools took during this
+    /// cell — zero once the pools are warm for the shard's classes.
+    pub pool_leases: u64,
+    /// Column-cache hits (resident + host image) accrued by this cell;
+    /// sharded builds slice the flat cell's host image, so even the
+    /// first S of a width scores host-image hits.
+    pub col_hits: u64,
+    /// Column-cache misses accrued by this cell.
+    pub col_misses: u64,
+    /// Measured wall-clock host-boundary cost per element: sharded
+    /// column fetch plus the per-shard mask readback.
+    pub host_ns_per_elem: f64,
 }
 
 impl ShardedResult {
@@ -355,6 +418,7 @@ pub fn run_cell_sharded(
     cfg: &ShardedConfig,
     width: u32,
     shards: usize,
+    pools: &mut ShardedScratch,
 ) -> Result<ShardedResult> {
     ensure!(
         (1..=arith::MAX_WIDTH).contains(&width),
@@ -367,12 +431,25 @@ pub fn run_cell_sharded(
     let values: Vec<u64> =
         (0..cfg.elems).map(|_| rng.next_u64() & mask_bits).collect();
 
-    let col =
-        ShardedLayout::alloc(sys, alloc, pid, width, cfg.elems, shards)?;
-    col.store(sys, pid, &values)?;
+    let stats0 = sys.column_cache_stats();
+    let leases0 = pools.leases();
+
+    // keyed like the flat cell (same id and version, shard-distinct
+    // key): a miss slices the flat cell's once-transposed host image
+    // into the shards instead of re-transposing the values
+    let t = Instant::now();
+    let col = sys.cached_column_sharded(
+        alloc,
+        pid,
+        width as u64,
+        cfg.seed,
+        width,
+        &values,
+        shards,
+    )?;
+    let mut host_ns = t.elapsed().as_nanos() as f64;
     let mask = ShardedLayout::alloc_like(sys, alloc, pid, 1, &col)?;
 
-    let mut pools = ShardedScratch::new();
     let rep = sys.run_arith_const_sharded(
         alloc,
         pid,
@@ -380,13 +457,15 @@ pub fn run_cell_sharded(
         thr,
         &col,
         &mask,
-        &mut pools,
+        pools,
     )?;
 
     // verify the sharded mask bit-for-bit against scalar compares
     // (arith_sum_sharded below re-reads the shards through the
     // padding-safe popcount path; no need to duplicate that here)
+    let t = Instant::now();
     let got = mask.load(sys, pid)?;
+    host_ns += t.elapsed().as_nanos() as f64;
     let matches = got.iter().filter(|&&g| g == 1).count() as u64;
     for (i, (&g, &v)) in got.iter().zip(&values).enumerate() {
         ensure!(
@@ -395,9 +474,21 @@ pub fn run_cell_sharded(
         );
     }
 
-    // filter-then-sum: every shard's in-DRAM masking in one batch
+    // filter-then-sum: every shard's in-DRAM masking in one batch; the
+    // column re-fetch is a resident-cache hit
+    let t = Instant::now();
+    let col = sys.cached_column_sharded(
+        alloc,
+        pid,
+        width as u64,
+        cfg.seed,
+        width,
+        &values,
+        shards,
+    )?;
+    host_ns += t.elapsed().as_nanos() as f64;
     let (sum, sum_rep) =
-        sys.arith_sum_sharded(alloc, pid, &col, Some(&mask), &mut pools)?;
+        sys.arith_sum_sharded(alloc, pid, &col, Some(&mask), pools)?;
     let want: u128 = values
         .iter()
         .filter(|v| **v < thr)
@@ -410,10 +501,10 @@ pub fn run_cell_sharded(
     let sum_rep = sum_rep.expect("masked sum submits a batch");
 
     let shard_count = col.n_shards();
-    let high_water = pools.high_water();
-    sys.trim_scratch_sharded(alloc, pid, &mut pools, 0)?;
+    // only the mask is per-cell transient; the sharded column stays
+    // resident and scratch stays parked in the per-shard pools
     mask.free(sys, alloc, pid)?;
-    col.free(sys, alloc, pid)?;
+    let stats1 = sys.column_cache_stats();
 
     Ok(ShardedResult {
         allocator: name,
@@ -430,15 +521,22 @@ pub fn run_cell_sharded(
         elapsed_ns: rep.batch.elapsed_ns + sum_rep.batch.elapsed_ns,
         pud_rows: rep.pud_rows + sum_rep.pud_rows,
         fallback_rows: rep.fallback_rows + sum_rep.fallback_rows,
-        pool_high_water: high_water,
+        pool_high_water: pools.high_water(),
+        pool_leases: pools.leases() - leases0,
+        col_hits: (stats1.resident_hits + stats1.host_hits)
+            - (stats0.resident_hits + stats0.host_hits),
+        col_misses: (stats1.resident_misses + stats1.host_misses)
+            - (stats0.resident_misses + stats0.host_misses),
+        host_ns_per_elem: host_ns / cfg.elems.max(1) as f64,
     })
 }
 
-/// Run the shard sweep on one allocator: one system reused across
-/// widths and shard counts. Per width, the *unsharded* cell runs
-/// first and every sharded cell's aggregate is checked identical to
-/// it (bit-identity of the mask and the scalar-reference sum are
-/// checked inside the cells).
+/// Run the shard sweep on one allocator: one system, scratch pools,
+/// and column cache reused across widths and shard counts. Per width,
+/// the *unsharded* cell runs first — its fetch also populates the host
+/// image every sharded cell of the width slices — and every sharded
+/// cell's aggregate is checked identical to it (bit-identity of the
+/// mask and the scalar-reference sum are checked inside the cells).
 pub fn run_sharded(
     scheme: InterleaveScheme,
     cfg: &ShardedConfig,
@@ -455,10 +553,19 @@ pub fn run_sharded(
     let pid = sys.spawn();
     let mut alloc = kind.build(&mut sys, cfg.puma_pages)?;
     let acfg = cfg.as_analytics();
+    let mut pool = ScratchPool::new();
+    let mut pools = ShardedScratch::new();
     let mut out = Vec::with_capacity(cfg.widths.len() * cfg.shards.len());
     for &w in &cfg.widths {
-        let unsharded =
-            run_cell(&mut sys, alloc.as_mut(), pid, kind.name(), &acfg, w)?;
+        let unsharded = run_cell(
+            &mut sys,
+            alloc.as_mut(),
+            pid,
+            kind.name(),
+            &acfg,
+            w,
+            &mut pool,
+        )?;
         for &s in &cfg.shards {
             let cell = run_cell_sharded(
                 &mut sys,
@@ -468,6 +575,7 @@ pub fn run_sharded(
                 cfg,
                 w,
                 s,
+                &mut pools,
             )?;
             ensure!(
                 cell.sum == unsharded.sum && cell.matches == unsharded.matches,
@@ -477,6 +585,9 @@ pub fn run_sharded(
             out.push(cell);
         }
     }
+    sys.release_scratch(alloc.as_mut(), pid, &mut pool)?;
+    sys.trim_scratch_sharded(alloc.as_mut(), pid, &mut pools, 0)?;
+    sys.flush_columns(alloc.as_mut(), pid)?;
     Ok(out)
 }
 
@@ -538,9 +649,96 @@ mod tests {
             assert!(r.aaps_per_elem > 0.0);
             // the wide cell leases at least W planes for masking
             assert!(r.pool_high_water >= r.width as usize);
+            // the sum kernel re-fetches the resident column
+            assert!(r.col_hits >= 1, "width {}: no column hit", r.width);
+            assert!(r.host_ns_per_elem > 0.0);
         }
+        // the first touch of each width transposes and stores
+        assert!(rs.iter().all(|r| r.col_misses >= 1));
         // the compare kernel folds the constant threshold
         assert!(rs[0].compile.folds > 0);
+    }
+
+    #[test]
+    fn warm_cells_hit_the_column_cache_and_lease_nothing() {
+        let cfg = AnalyticsConfig {
+            widths: vec![8],
+            churn_rounds: 300,
+            ..cfg()
+        };
+        let mut sys = System::boot(SystemConfig {
+            scheme: scheme(),
+            huge_pages: cfg.huge_pages,
+            churn_rounds: cfg.churn_rounds,
+            seed: cfg.seed,
+            artifacts: None,
+            ..Default::default()
+        })
+        .unwrap();
+        let pid = sys.spawn();
+        let kind = AllocatorKind::Puma(FitPolicy::WorstFit);
+        let mut alloc = kind.build(&mut sys, cfg.puma_pages).unwrap();
+        let mut pool = ScratchPool::new();
+        let cold = run_cell(
+            &mut sys, alloc.as_mut(), pid, "puma", &cfg, 8, &mut pool,
+        )
+        .unwrap();
+        assert!(cold.col_misses >= 1, "cold cell builds the column");
+        assert!(cold.pool_leases > 0, "cold cell leases scratch");
+        let warm = run_cell(
+            &mut sys, alloc.as_mut(), pid, "puma", &cfg, 8, &mut pool,
+        )
+        .unwrap();
+        assert_eq!(warm.col_misses, 0, "warm repeat rebuilds nothing");
+        assert!(warm.col_hits >= 2, "both kernels hit the resident column");
+        assert_eq!(
+            warm.pool_leases, 0,
+            "warm same-width repeat does zero allocator round-trips"
+        );
+        assert_eq!(warm.sum, cold.sum);
+        assert_eq!(warm.matches, cold.matches);
+        sys.release_scratch(alloc.as_mut(), pid, &mut pool).unwrap();
+        sys.flush_columns(alloc.as_mut(), pid).unwrap();
+    }
+
+    #[test]
+    fn invalidated_columns_rebuild_instead_of_serving_stale_planes() {
+        let mut sys = System::boot(SystemConfig {
+            scheme: scheme(),
+            huge_pages: 8,
+            churn_rounds: 100,
+            seed: 7,
+            artifacts: None,
+            ..Default::default()
+        })
+        .unwrap();
+        let pid = sys.spawn();
+        let kind = AllocatorKind::Puma(FitPolicy::WorstFit);
+        let mut alloc = kind.build(&mut sys, 4).unwrap();
+        let a: Vec<u64> = (0..1000).map(|i| i % 13).collect();
+        let col = sys
+            .cached_column(alloc.as_mut(), pid, 1, 0, 4, &a)
+            .unwrap();
+        assert_eq!(col.load(&mut sys, pid).unwrap(), a);
+        // an in-place store mutates the planes behind the cache's
+        // back; the invalidation hook forces the next fetch to rebuild
+        let b: Vec<u64> = (0..1000).map(|i| (i + 5) % 13).collect();
+        col.store(&mut sys, pid, &b).unwrap();
+        sys.invalidate_column(1);
+        let col2 = sys
+            .cached_column(alloc.as_mut(), pid, 1, 0, 4, &b)
+            .unwrap();
+        assert_eq!(col2.load(&mut sys, pid).unwrap(), b, "stale plane served");
+        // a version bump rebuilds too, without an explicit invalidate
+        let c: Vec<u64> = (0..1000).map(|i| (i + 9) % 13).collect();
+        let col3 = sys
+            .cached_column(alloc.as_mut(), pid, 1, 1, 4, &c)
+            .unwrap();
+        assert_eq!(col3.load(&mut sys, pid).unwrap(), c);
+        let stats = sys.column_cache_stats();
+        assert!(stats.invalidations >= 1);
+        sys.flush_columns(alloc.as_mut(), pid).unwrap();
+        assert_eq!(sys.column_cache_stats().evictions, stats.evictions);
     }
 
     #[test]
@@ -590,6 +788,9 @@ mod tests {
             );
             assert!(r.matches > 0 && r.sum > 0);
             assert_eq!(r.shard_count, r.shards);
+            // every sharded build slices the flat cell's host image,
+            // and the sum kernel re-fetches the resident shards
+            assert!(r.col_hits >= 1, "S={}: no column hit", r.shards);
         }
         let s1 = rs.iter().find(|r| r.shards == 1).unwrap();
         let s4 = rs.iter().find(|r| r.shards == 4).unwrap();

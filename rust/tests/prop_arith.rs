@@ -49,8 +49,67 @@ fn transpose_roundtrip_property() {
                 "plane length is ceil(elems/8)"
             );
         }
-        let back = arith::untranspose(&planes, elems);
+        let back = arith::untranspose(&planes, elems).unwrap();
         assert_prop!(back == values, "transpose/untranspose must round-trip");
+    });
+}
+
+#[test]
+fn blocked_transpose_matches_naive_oracle_property() {
+    // the word-level blocked transpose must be byte-identical to the
+    // bit-at-a-time oracle across every width the layout layer admits
+    // (1..=64, past the kernel cap) and ragged lengths: elems % 64 != 0
+    // exercises partial octets, elems < 8 a single padded byte
+    proptest::check_cases("blocked transpose == naive oracle", 128, |g| {
+        let elems = if g.ratio(1, 4) {
+            g.usize(1..8)
+        } else {
+            g.usize(1..3000)
+        };
+        let width = g.usize(1..65) as u32;
+        let seed = g.u64(1..u64::MAX);
+        let mut rng = Pcg64::new(seed);
+        let mask = arith::width_mask(width);
+        let values: Vec<u64> =
+            (0..elems).map(|_| rng.next_u64() & mask).collect();
+
+        let blocked = arith::transpose(&values, width);
+        let naive = arith::transpose_naive(&values, width);
+        assert_prop!(
+            blocked == naive,
+            "blocked transpose diverged (width {width}, elems {elems})"
+        );
+
+        let back = arith::untranspose(&blocked, elems).unwrap();
+        let back_naive = arith::untranspose_naive(&blocked, elems);
+        assert_prop!(
+            back == back_naive,
+            "blocked untranspose diverged (width {width}, elems {elems})"
+        );
+        assert_prop!(back == values, "blocked round-trip must be lossless");
+    });
+}
+
+#[test]
+fn untranspose_rejects_short_planes_property() {
+    // satellite regression: a plane shorter than ceil(elems/8) used to
+    // panic out-of-bounds; it must be a clean error at any position
+    proptest::check_cases("short planes are a clean error", 64, |g| {
+        let elems = g.usize(9..2000);
+        let width = g.usize(1..33) as u32;
+        let seed = g.u64(1..u64::MAX);
+        let mut rng = Pcg64::new(seed);
+        let mask = arith::width_mask(width);
+        let values: Vec<u64> =
+            (0..elems).map(|_| rng.next_u64() & mask).collect();
+        let mut planes = arith::transpose(&values, width);
+        let victim = g.usize(0..planes.len());
+        let cut = g.usize(0..planes[victim].len());
+        planes[victim].truncate(cut);
+        assert_prop!(
+            arith::untranspose(&planes, elems).is_err(),
+            "a truncated plane (plane {victim} cut to {cut}) must error"
+        );
     });
 }
 

@@ -10,6 +10,9 @@ Gated metrics (all simulated-time, deterministic across runs):
   more than --pud-tolerance (default 2%) fails.
 * Batched throughput (ops_per_s, simulated): a relative drop of more
   than --ops-tolerance (default 10%) fails.
+* Host-boundary wall time (analytics host_ns_per_elem, flat and
+  sharded — lower is better): a relative *rise* of more than
+  --ops-tolerance (default 10%) fails.
 
 A baseline value of null means "not yet seeded": the metric passes
 with a warning and the refreshed baseline (--write-refreshed) fills
@@ -55,11 +58,28 @@ def extract(bench):
         "analytics_sharded_puma_pud_row_fraction": sharded.get(
             "puma_pud_row_fraction"
         ),
+        # host-boundary wall time per element (mean over PUMA cells):
+        # blocked transpose + resident-column fetch + mask readback.
+        # Lower is better; null-seeded until committed.
+        "analytics_host_ns_per_elem": bench.get("analytics", {}).get(
+            "host_ns_per_elem"
+        ),
+        "analytics_sharded_host_ns_per_elem": sharded.get("host_ns_per_elem"),
     }
 
 
+# Metrics where a *rise* is the regression (wall-clock costs); everything
+# else is higher-is-better.
+LOWER_IS_BETTER = {
+    "analytics_host_ns_per_elem",
+    "analytics_sharded_host_ns_per_elem",
+}
+
+
 def tolerance_for(metric, args):
-    return args.ops_tolerance if metric == "batched_ops_per_s" else args.pud_tolerance
+    if metric in LOWER_IS_BETTER or metric == "batched_ops_per_s":
+        return args.ops_tolerance
+    return args.pud_tolerance
 
 
 def main():
@@ -95,14 +115,23 @@ def main():
             rows.append((metric, "(unseeded)", f"{cur:.6g}", "-", "SEEDED"))
             continue
         tol = tolerance_for(metric, args)
-        floor = base * (1.0 - tol)
         delta = (cur - base) / base if base else 0.0
-        status = "OK" if cur >= floor else "FAIL"
-        if status == "FAIL":
-            failures.append(
-                f"{metric}: {cur:.6g} dropped more than {tol:.0%} below "
-                f"baseline {base:.6g}"
-            )
+        if metric in LOWER_IS_BETTER:
+            ceiling = base * (1.0 + tol)
+            status = "OK" if cur <= ceiling else "FAIL"
+            if status == "FAIL":
+                failures.append(
+                    f"{metric}: {cur:.6g} rose more than {tol:.0%} above "
+                    f"baseline {base:.6g}"
+                )
+        else:
+            floor = base * (1.0 - tol)
+            status = "OK" if cur >= floor else "FAIL"
+            if status == "FAIL":
+                failures.append(
+                    f"{metric}: {cur:.6g} dropped more than {tol:.0%} below "
+                    f"baseline {base:.6g}"
+                )
         rows.append(
             (metric, f"{base:.6g}", f"{cur:.6g}", f"{delta:+.2%}", status)
         )
