@@ -37,6 +37,7 @@ use puma::workloads::analytics::{
 use puma::workloads::churn::{self, ChurnConfig, ChurnResult};
 use puma::workloads::filter::{self, FilterConfig, FilterResult};
 use puma::workloads::microbench::AllocatorKind;
+use puma::workloads::queries::{self, QueriesConfig, QueryResult};
 
 fn small_scheme() -> InterleaveScheme {
     InterleaveScheme::row_major(DramGeometry::small()) // 64 MiB
@@ -240,6 +241,50 @@ fn sharded_json(r: &ShardedResult) -> String {
         r.col_misses,
         r.matches,
         r.sum
+    )
+}
+
+fn query_json(r: &QueryResult) -> String {
+    format!(
+        "{{\"allocator\": \"{}\", \"shape\": \"{}\", \"shards\": {}, \
+         \"param\": {}, \"batches\": {}, \"waves\": {}, \"rounds\": {}, \
+         \"compiles\": {}, \"pud_row_fraction\": {:.6}, \
+         \"elapsed_sim_ns\": {:.1}, \"ns_per_elem\": {:.4}, \
+         \"host_ns_per_elem\": {:.4}, \"col_hits\": {}, \"col_misses\": {}, \
+         \"matches\": {}, \"agg\": {}}}",
+        r.allocator,
+        r.shape,
+        r.shards,
+        r.param,
+        r.batches,
+        r.waves,
+        r.rounds,
+        r.compiles,
+        r.pud_row_fraction(),
+        r.elapsed_ns,
+        r.elapsed_ns / r.rows.max(1) as f64,
+        r.host_ns_per_elem,
+        r.col_hits,
+        r.col_misses,
+        r.matches,
+        r.agg
+    )
+}
+
+/// Per-shape summary over the flat PUMA cell — the fields the CI
+/// bench job asserts on (`pud_row_fraction` + `ns_per_elem`).
+fn query_shape_json(cells: &[QueryResult], shape: &str) -> String {
+    let p = cells
+        .iter()
+        .find(|r| r.allocator == "puma" && r.shape == shape && r.shards == 0)
+        .expect("puma flat query cell");
+    format!(
+        "{{\"pud_row_fraction\": {:.6}, \"ns_per_elem\": {:.4}, \
+         \"host_ns_per_elem\": {:.4}, \"matches\": {}}}",
+        p.pud_row_fraction(),
+        p.elapsed_ns / p.rows.max(1) as f64,
+        p.host_ns_per_elem,
+        p.matches
     )
 }
 
@@ -562,6 +607,67 @@ fn main() -> anyhow::Result<()> {
             .map(|r| &r.host_ns_per_elem),
     );
 
+    // ---- queries: semi-join / group-by / top-k over the engine ----
+    println!("\n# queries — semi-join / group-by / top-k (PUD engine)");
+    let qcfg = QueriesConfig {
+        rows: 8 * 1024,
+        k: 512,
+        churn_rounds: 500,
+        ..Default::default()
+    };
+    let qcells = queries::sweep(&small_scheme(), &qcfg, &kinds)?;
+    let shapes = ["semi_join", "group_by", "top_k"];
+    for shape in shapes {
+        // every placement variant the sweep produced for this shape:
+        // flat (shards == 0) and bank-sharded (shards == qcfg.shards)
+        for shards in [0usize, qcfg.shards] {
+            let puma_cell = qcells
+                .iter()
+                .find(|r| {
+                    r.allocator == "puma" && r.shape == shape && r.shards == shards
+                })
+                .expect("puma query cell");
+            if shards == 0 {
+                println!(
+                    "{shape:>9}: puma pud_frac {:.3}, {} batch(es), \
+                     {} wave(s), {} matching row(s)",
+                    puma_cell.pud_row_fraction(),
+                    puma_cell.batches,
+                    puma_cell.waves,
+                    puma_cell.matches
+                );
+            }
+            for r in qcells.iter().filter(|r| {
+                r.shape == shape && r.shards == shards && r.allocator != "puma"
+            }) {
+                assert!(
+                    puma_cell.pud_row_fraction() > r.pud_row_fraction(),
+                    "{shape} (S={shards}): puma ({}) must beat {} ({})",
+                    puma_cell.pud_row_fraction(),
+                    r.allocator,
+                    r.pud_row_fraction()
+                );
+                assert_eq!(
+                    (r.matches, r.agg),
+                    (puma_cell.matches, puma_cell.agg),
+                    "{shape} (S={shards}): {} result diverged from puma",
+                    r.allocator
+                );
+            }
+        }
+    }
+    let queries_min_pud = qcells
+        .iter()
+        .filter(|r| r.allocator == "puma")
+        .map(|r| r.pud_row_fraction())
+        .fold(f64::INFINITY, f64::min);
+    let queries_host_ns = mean_host_ns(
+        qcells
+            .iter()
+            .filter(|r| r.allocator == "puma")
+            .map(|r| &r.host_ns_per_elem),
+    );
+
     let json = format!(
         "{{\n  \"bench\": \"bench_runtime\",\n  \"workload\": \
          {{\"groups\": {groups}, \"mix\": \"3:1 puma:malloc, \
@@ -582,6 +688,11 @@ fn main() -> anyhow::Result<()> {
          \"cells\": [\n    {}\n  ]}},\n  \
          \"analytics_sharded\": {{\"elems\": {}, \"width\": {}, \
          \"speedup_s8\": {:.4}, \"puma_pud_row_fraction\": {:.6}, \
+         \"host_ns_per_elem\": {:.4}, \
+         \"cells\": [\n    {}\n  ]}},\n  \
+         \"queries\": {{\"rows\": {}, \"width\": {}, \"shards\": {}, \
+         \"semi_join\": {}, \"group_by\": {}, \"top_k\": {}, \
+         \"min_puma_pud_row_fraction\": {:.6}, \
          \"host_ns_per_elem\": {:.4}, \
          \"cells\": [\n    {}\n  ]}}\n}}\n",
         json_path(&serial, groups),
@@ -624,6 +735,19 @@ fn main() -> anyhow::Result<()> {
         scells
             .iter()
             .map(sharded_json)
+            .collect::<Vec<_>>()
+            .join(",\n    "),
+        qcfg.rows,
+        qcfg.width,
+        qcfg.shards,
+        query_shape_json(&qcells, "semi_join"),
+        query_shape_json(&qcells, "group_by"),
+        query_shape_json(&qcells, "top_k"),
+        queries_min_pud,
+        queries_host_ns,
+        qcells
+            .iter()
+            .map(query_json)
             .collect::<Vec<_>>()
             .join(",\n    "),
     );

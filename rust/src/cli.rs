@@ -67,7 +67,8 @@ pub fn build_config(cli: &Cli) -> Result<Config> {
     // command-specific flags are not config keys
     for k in [
         "micro", "alloc", "size", "batch", "tenants", "epochs", "mode",
-        "clauses", "widths", "elems", "threshold", "shards",
+        "clauses", "widths", "elems", "threshold", "shards", "rows", "width",
+        "groups", "build_keys", "k",
     ] {
         overrides.remove(k);
     }
@@ -195,6 +196,33 @@ pub fn run(args: &[String]) -> Result<i32> {
                 .transpose()?;
             cmd_analytics(&cfg, widths, elems, threshold, alloc, shards)
         }
+        "query" => {
+            let cfg = build_config(&cli)?;
+            let get = |key: &str, dflt: &str| -> String {
+                cli.flags
+                    .get(key)
+                    .cloned()
+                    .unwrap_or_else(|| dflt.to_string())
+            };
+            let rows: usize = get("rows", "65536").parse().context("rows")?;
+            let width: u32 = get("width", "8").parse().context("width")?;
+            let groups: u64 = get("groups", "8").parse().context("groups")?;
+            let build_keys: usize =
+                get("build_keys", "16").parse().context("build_keys")?;
+            let k: u64 = get("k", "4096").parse().context("k")?;
+            let threshold: f64 =
+                get("threshold", "0.5").parse().context("threshold")?;
+            let shards: usize = get("shards", "4").parse().context("shards")?;
+            let alloc = cli
+                .flags
+                .get("alloc")
+                .map(|a| parse_alloc(a))
+                .transpose()?;
+            cmd_query(
+                &cfg, rows, width, groups, build_keys, k, threshold, shards,
+                alloc,
+            )
+        }
         "micro" => {
             let cfg = build_config(&cli)?;
             let micro = parse_micro(
@@ -238,6 +266,11 @@ commands:
                --widths 4,8,16 --elems N --threshold FRAC [--alloc NAME]
                [--shards 1,2,4,8: MIMDRAM-style bank-sharded SIMD scale
                sweep, each cell verified against the unsharded path]
+  query        analytics query engine (bitmap semi-join, single-batch
+               group-by, top-k threshold bisection) over a TPC-H-flavored
+               micro-table, every cell verified against a scalar oracle:
+               --rows N --width W --groups N --build_keys N --k N
+               --threshold FRAC --shards N [--alloc NAME]
   info         print machine description and artifact inventory
   help         this text
 
@@ -389,6 +422,53 @@ fn cmd_analytics(
         crate::workloads::analytics::sweep(&cfg.scheme, &acfg, &kinds)?;
     println!("{}", report::analytics(&results, Some(&cfg.out))?);
     println!("(raw series: {}/analytics.csv)", cfg.out.display());
+    Ok(0)
+}
+
+#[allow(clippy::too_many_arguments)]
+fn cmd_query(
+    cfg: &Config,
+    rows: usize,
+    width: u32,
+    groups: u64,
+    build_keys: usize,
+    k: u64,
+    threshold: f64,
+    shards: usize,
+    alloc: Option<AllocatorKind>,
+) -> Result<i32> {
+    let kinds: Vec<AllocatorKind> = match alloc {
+        Some(kind) => vec![kind],
+        None => vec![
+            AllocatorKind::Malloc,
+            AllocatorKind::Memalign,
+            AllocatorKind::HugePages,
+            AllocatorKind::Puma(FitPolicy::WorstFit),
+        ],
+    };
+    let qcfg = crate::workloads::queries::QueriesConfig {
+        rows,
+        width,
+        groups,
+        build_keys,
+        k,
+        threshold_frac: threshold,
+        shards,
+        huge_pages: cfg.huge_pages,
+        puma_pages: cfg.puma_pages.max(2),
+        churn_rounds: cfg.churn_rounds,
+        seed: cfg.seed,
+    };
+    eprintln!(
+        "running query sweep: 3 shape(s){} x {} allocator(s), {} rows ...",
+        if shards > 1 { " x flat+sharded" } else { "" },
+        kinds.len(),
+        qcfg.rows
+    );
+    let results =
+        crate::workloads::queries::sweep(&cfg.scheme, &qcfg, &kinds)?;
+    println!("{}", report::queries(&results, Some(&cfg.out))?);
+    println!("(raw series: {}/queries.csv)", cfg.out.display());
     Ok(0)
 }
 
@@ -606,6 +686,22 @@ mod tests {
         assert_eq!(cli.flags["widths"], "4,8");
         assert_eq!(cli.flags["shards"], "1,4");
         // widths/elems/threshold/alloc/shards must not be rejected as
+        // config keys
+        let cfg = build_config(&cli).unwrap();
+        assert_eq!(cfg.puma_pages, 4);
+    }
+
+    #[test]
+    fn query_flags_are_command_specific_not_config() {
+        let cli = parse_args(&args(&[
+            "query", "--rows", "4096", "--width", "4", "--groups", "4",
+            "--build_keys", "8", "--k", "64", "--shards", "2", "--alloc",
+            "puma", "--puma_pages", "4",
+        ]))
+        .unwrap();
+        assert_eq!(cli.flags["rows"], "4096");
+        assert_eq!(cli.flags["k"], "64");
+        // rows/width/groups/build_keys/k must not be rejected as
         // config keys
         let cfg = build_config(&cli).unwrap();
         assert_eq!(cfg.puma_pages, 4);

@@ -128,6 +128,17 @@ impl System {
         self.programs.stats
     }
 
+    /// Fetch (or compile and cache) the program for `key`. Returns the
+    /// compiled program and whether it was a cache hit — callers that
+    /// report `CompileStats` should zero `compiles` on a hit, exactly
+    /// as the `run_arith*` entry points do. This is the hook the
+    /// `pud::query` engine uses to batch many per-constant programs
+    /// into one submission without going through `run_arith_const`
+    /// once per mask.
+    pub fn program(&mut self, key: ProgramKey) -> (Arc<CompiledMulti>, bool) {
+        self.programs.get_or_compile(key)
+    }
+
     /// Drop every cached compiled program (see `ProgramCache::clear`)
     /// — the release valve after sweeping many distinct constant
     /// thresholds.
@@ -441,7 +452,7 @@ impl System {
             if off % 8 == 0 {
                 // byte-aligned shard: slice the shared host image
                 let b0 = off / 8;
-                let blen = n.div_ceil(8);
+                let blen = arith::plane_bytes(n) as usize;
                 let slice: Vec<Vec<u8>> = planes
                     .iter()
                     .map(|p| p[b0..b0 + blen].to_vec())
@@ -1104,7 +1115,9 @@ struct ShardBinding {
 /// requests into one wave and overlaps them across banks, while each
 /// shard's own step `i+1` — which depends on its step `i` — starts the
 /// next wave.
-fn interleave_rounds(per_shard: Vec<Vec<BulkRequest>>) -> Vec<BulkRequest> {
+pub(crate) fn interleave_rounds(
+    per_shard: Vec<Vec<BulkRequest>>,
+) -> Vec<BulkRequest> {
     let total = per_shard.iter().map(Vec::len).sum();
     let mut streams: Vec<std::vec::IntoIter<BulkRequest>> =
         per_shard.into_iter().map(Vec::into_iter).collect();

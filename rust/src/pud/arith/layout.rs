@@ -60,7 +60,7 @@ fn transpose8x8(mut x: u64) -> u64 {
 /// byte-identical to [`transpose_naive`].
 pub fn transpose(values: &[u64], width: u32) -> Vec<Vec<u8>> {
     let width = width as usize;
-    let plane_len = values.len().div_ceil(8);
+    let plane_len = plane_bytes(values.len()) as usize;
     let mut planes = vec![vec![0u8; plane_len]; width];
     for o in 0..plane_len {
         let base = o * 8;
@@ -97,7 +97,7 @@ pub fn untranspose(planes: &[Vec<u8>], elems: usize) -> Result<Vec<u64>> {
         "{} bit-planes exceed a u64's 64 bit positions",
         planes.len()
     );
-    let need = elems.div_ceil(8);
+    let need = plane_bytes(elems) as usize;
     for (w, plane) in planes.iter().enumerate() {
         ensure!(
             plane.len() >= need,
@@ -132,7 +132,7 @@ pub fn untranspose(planes: &[Vec<u8>], elems: usize) -> Result<Vec<u64>> {
 /// implementation, kept as the oracle the property tests and the
 /// host-boundary bench measure [`transpose`] against.
 pub fn transpose_naive(values: &[u64], width: u32) -> Vec<Vec<u8>> {
-    let len = values.len().div_ceil(8);
+    let len = plane_bytes(values.len()) as usize;
     let mut planes = vec![vec![0u8; len]; width as usize];
     for (i, &v) in values.iter().enumerate() {
         for (w, plane) in planes.iter_mut().enumerate() {
@@ -157,6 +157,15 @@ pub fn untranspose_naive(planes: &[Vec<u8>], elems: usize) -> Vec<u64> {
         }
     }
     values
+}
+
+/// Bytes one bit-plane of an `elems`-element column occupies:
+/// `ceil(elems / 8)`. Every plane readback, bitmap allocation, and
+/// mask-row length in the tree must use this helper instead of
+/// re-deriving the expression inline — the PR-5 popcount bug came from
+/// one call site rounding differently from the rest.
+pub fn plane_bytes(elems: usize) -> u64 {
+    elems.div_ceil(8) as u64
 }
 
 /// Set bits among the first `elems` bit positions of `bits` — a
@@ -202,7 +211,7 @@ impl VerticalLayout {
     fn checked_plane_len(width: u32, elems: usize) -> Result<u64> {
         ensure!((1..=64).contains(&width), "width {width} out of range");
         ensure!(elems > 0, "empty column");
-        Ok(elems.div_ceil(8) as u64)
+        Ok(plane_bytes(elems))
     }
 
     /// Chain `width - 1` further planes hint-aligned to the
@@ -296,7 +305,7 @@ impl VerticalLayout {
         Self {
             width,
             elems,
-            plane_len: elems.div_ceil(8) as u64,
+            plane_len: plane_bytes(elems),
             planes: planes.to_vec(),
         }
     }

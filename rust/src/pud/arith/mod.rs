@@ -41,8 +41,8 @@ pub use kernels::{
     ArithOp, MAX_WIDTH,
 };
 pub use layout::{
-    popcount_live, transpose, transpose_naive, untranspose, untranspose_naive,
-    VerticalLayout,
+    plane_bytes, popcount_live, transpose, transpose_naive, untranspose,
+    untranspose_naive, VerticalLayout,
 };
 pub use shard::{shard_sizes, ShardedLayout, ShardedScratch};
 

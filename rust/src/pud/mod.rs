@@ -22,6 +22,10 @@
 //! * [`arith`] — bit-serial vertical arithmetic over the compiler:
 //!   transposed bit-plane layouts and ripple-carry/compare/select/
 //!   popcount kernels expanded into expression DAGs.
+//! * [`query`] — analytics query shapes (bitmap semi-join, batched
+//!   group-by, top-k threshold bisection) composed from the arith
+//!   kernels as mask-plane algebra, with scalar host oracles for
+//!   differential testing.
 
 pub mod ambit;
 pub mod arith;
@@ -29,6 +33,7 @@ pub mod compiler;
 pub mod exec;
 pub mod isa;
 pub mod legality;
+pub mod query;
 pub mod reserved;
 pub mod rowclone;
 

@@ -1,0 +1,982 @@
+//! In-DRAM analytics query shapes composed from the vertical-arithmetic
+//! primitives: bitmap **semi-join**, batched **group-by** aggregation,
+//! and **top-k** by threshold bisection (DESIGN.md §13).
+//!
+//! All three shapes reduce to *mask-plane algebra*: every intermediate
+//! is a 1-bit-per-element mask row, combined with bulk AND/OR/NOT —
+//! exactly the operations the Ambit substrate executes in-DRAM when
+//! PUMA placement makes the operands row-aligned and co-located.
+//!
+//! - **Semi-join** `probe ⋉ build`: the build side's keys become a
+//!   key-presence bitmap over the key *domain* ([`present_keys`]); each
+//!   present key `k` compiles to a cached `CmpEq`-const kernel whose
+//!   output mask is OR-folded into the join mask, optionally ANDed with
+//!   a residual predicate mask — all submitted as ONE batch.
+//! - **Group-by** ([`group_masks`] / [`group_by_sum`]): one
+//!   `CmpEq`-const program per group key, every emission concatenated
+//!   into ONE `submit_batch` (a single host→memory boundary crossing),
+//!   then a masked [`System::arith_sum`] per group.
+//! - **Top-k** ([`top_k`]): no sort. Bisect the value domain on the
+//!   popcount of cached `CmpLt`-const masks — at most `W = log2(domain)`
+//!   kernel rounds — to find the largest threshold `T` with
+//!   `count(v ≥ T) ≥ k`, then materialize the selection mask `v ≥ T`
+//!   as `NOT (v < T)`.
+//!
+//! Every shape has a `_sharded` twin that emits the same request
+//! stream once per bank-disjoint shard and round-robin-interleaves the
+//! streams into one batch so the hazard-wave scheduler overlaps shards
+//! across banks (DESIGN.md §11).
+//!
+//! Padding caveat: comparison masks can set bits in padding lanes
+//! (e.g. `0 < T` holds in all-zero lanes) and `NOT` flips them either
+//! way. Counts here go through [`popcount_live`] and masked sums only
+//! read value planes (whose padding is zero), so padded lanes never
+//! leak into results.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{ensure, Result};
+
+use crate::alloc::scratch::ScratchPool;
+use crate::alloc::traits::Allocator;
+use crate::coordinator::dispatch::BatchReport;
+use crate::coordinator::system::{interleave_rounds, ExprReport, System};
+use crate::os::process::Pid;
+use crate::pud::compiler::CompiledMulti;
+use crate::pud::isa::{BulkRequest, PudOp};
+
+use super::arith::{
+    plane_bytes, popcount_live, ArithOp, ProgramKey, ShardedLayout,
+    ShardedScratch, VerticalLayout, MAX_WIDTH,
+};
+
+/// Aggregate execution report of one query shape: batch/wave counts,
+/// simulated PUD time, the in-DRAM vs fallback row split, compiler
+/// work, bisection rounds, and the wall-clock host-boundary cost of
+/// the mask readbacks the shape performs.
+#[derive(Debug, Clone, Default)]
+pub struct QueryReport {
+    /// `submit_batch` round trips the shape issued.
+    pub batches: usize,
+    /// Hazard waves across those batches.
+    pub waves: usize,
+    /// Serial-equivalent simulated ns (sum of per-op costs).
+    pub total_ns: f64,
+    /// Bank-parallel simulated completion ns.
+    pub elapsed_ns: f64,
+    /// Rows executed in-DRAM.
+    pub pud_rows: u64,
+    /// Rows that fell back to the CPU path.
+    pub fallback_rows: u64,
+    /// Fresh kernel compiles (0 once the program cache is warm).
+    pub compiles: usize,
+    /// Bisection rounds (top-k only; 0 for the other shapes).
+    pub rounds: usize,
+    /// Wall-clock ns spent reading mask planes back and popcounting.
+    pub host_ns: u64,
+}
+
+impl QueryReport {
+    /// In-DRAM fraction of the shape's rows (0 when nothing ran).
+    pub fn pud_row_fraction(&self) -> f64 {
+        let total = self.pud_rows + self.fallback_rows;
+        if total == 0 {
+            0.0
+        } else {
+            self.pud_rows as f64 / total as f64
+        }
+    }
+
+    /// Fold one expression run (e.g. a masked sum) into this report.
+    pub fn absorb(&mut self, rep: &ExprReport) {
+        self.absorb_batch(&rep.batch);
+        self.pud_rows += rep.pud_rows;
+        self.fallback_rows += rep.fallback_rows;
+        self.compiles += rep.stats.compiles;
+    }
+
+    /// Fold another query report into this one (sum semantics).
+    pub fn merge(&mut self, other: &QueryReport) {
+        self.batches += other.batches;
+        self.waves += other.waves;
+        self.total_ns += other.total_ns;
+        self.elapsed_ns += other.elapsed_ns;
+        self.pud_rows += other.pud_rows;
+        self.fallback_rows += other.fallback_rows;
+        self.compiles += other.compiles;
+        self.rounds += other.rounds;
+        self.host_ns += other.host_ns;
+    }
+
+    fn absorb_batch(&mut self, b: &BatchReport) {
+        self.batches += 1;
+        self.waves += b.waves;
+        self.total_ns += b.total_ns;
+        self.elapsed_ns += b.elapsed_ns;
+    }
+}
+
+/// One group's aggregates from [`group_by_sum`].
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct GroupAggregate {
+    pub group: u64,
+    pub count: u64,
+    pub sum: u128,
+}
+
+/// Outcome of a [`top_k`] query: the selection threshold (the k-th
+/// largest value; `2^width` when `k == 0` so nothing satisfies
+/// `v ≥ T`), how many elements the final `v ≥ T` mask selects (`≥ k`
+/// when ties straddle the threshold), and the bisection rounds taken.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TopK {
+    pub threshold: u64,
+    pub selected: u64,
+    pub rounds: usize,
+}
+
+/// The build side's key-presence bitmap, materialized back to the key
+/// list the mask compiler needs: deduplicated, sorted, and restricted
+/// to the `width`-bit key domain (out-of-domain build keys can never
+/// equal a `width`-bit probe value, so they are dropped, NOT masked —
+/// masking would alias them onto unrelated keys).
+///
+/// For domains up to 2^16 the bitmap is literal — one bit per domain
+/// value, sized with [`plane_bytes`] like every other bitmap in the
+/// tree; wider domains fall back to sort+dedup rather than allocate
+/// gigabit bitmaps for a handful of keys.
+pub fn present_keys(build_keys: &[u64], width: u32) -> Vec<u64> {
+    debug_assert!(width <= MAX_WIDTH);
+    let domain = 1u64 << width;
+    if width <= 16 {
+        let mut bitmap = vec![0u8; plane_bytes(domain as usize) as usize];
+        for &k in build_keys {
+            if k < domain {
+                bitmap[(k / 8) as usize] |= 1 << (k % 8);
+            }
+        }
+        let mut keys = Vec::new();
+        for (byte, &b) in bitmap.iter().enumerate() {
+            if b == 0 {
+                continue;
+            }
+            for bit in 0..8 {
+                if (b >> bit) & 1 == 1 {
+                    keys.push((byte * 8 + bit) as u64);
+                }
+            }
+        }
+        keys
+    } else {
+        let mut keys: Vec<u64> =
+            build_keys.iter().copied().filter(|&k| k < domain).collect();
+        keys.sort_unstable();
+        keys.dedup();
+        keys
+    }
+}
+
+/// Submit one request batch, folding the batch report and the PUD vs
+/// fallback row delta into `rep`.
+fn submit(
+    sys: &mut System,
+    pid: Pid,
+    reqs: &[BulkRequest],
+    rep: &mut QueryReport,
+) -> Result<()> {
+    let (p0, f0) = (sys.coord.stats.pud_rows, sys.coord.stats.fallback_rows);
+    let batch = sys.submit_batch(pid, reqs)?;
+    rep.absorb_batch(&batch);
+    rep.pud_rows += sys.coord.stats.pud_rows - p0;
+    rep.fallback_rows += sys.coord.stats.fallback_rows - f0;
+    Ok(())
+}
+
+/// Fetch a cached program, counting fresh compiles into `rep`.
+fn fetch(
+    sys: &mut System,
+    key: ProgramKey,
+    rep: &mut QueryReport,
+) -> Arc<CompiledMulti> {
+    let (prog, hit) = sys.program(key);
+    if !hit {
+        rep.compiles += prog.stats.compiles;
+    }
+    prog
+}
+
+/// Read one mask plane back and count its live bits, charging the
+/// wall-clock cost to `rep.host_ns`.
+fn popcount_mask(
+    sys: &mut System,
+    pid: Pid,
+    mask: &VerticalLayout,
+    rep: &mut QueryReport,
+) -> Result<u64> {
+    let t0 = Instant::now();
+    let bits = sys.read_virt(pid, mask.planes()[0], mask.plane_len())?;
+    let n = popcount_live(&bits, mask.elems());
+    rep.host_ns += t0.elapsed().as_nanos() as u64;
+    Ok(n)
+}
+
+/// Sharded twin of [`popcount_mask`]: sum the live bits of every
+/// shard's mask plane.
+fn popcount_mask_sharded(
+    sys: &mut System,
+    pid: Pid,
+    mask: &ShardedLayout,
+    rep: &mut QueryReport,
+) -> Result<u64> {
+    let t0 = Instant::now();
+    let mut total = 0;
+    for part in mask.shards() {
+        let bits = sys.read_virt(pid, part.planes()[0], part.plane_len())?;
+        total += popcount_live(&bits, part.elems());
+    }
+    rep.host_ns += t0.elapsed().as_nanos() as u64;
+    Ok(total)
+}
+
+/// Shared request-stream builder for one (shard of a) semi-join: the
+/// per-key `CmpEq` masks land in pool slots `[0, K)`, are OR-folded
+/// into `dst_plane`, then ANDed with the optional predicate mask.
+/// `K == 0` degenerates to a bulk `Zero`; `K == 1` writes the single
+/// compare straight into `dst_plane`.
+#[allow(clippy::too_many_arguments)]
+fn emit_semi_join(
+    sys: &mut System,
+    alloc: &mut dyn Allocator,
+    pid: Pid,
+    progs: &[Arc<CompiledMulti>],
+    operands: &[u64],
+    dst_plane: u64,
+    pred_plane: Option<u64>,
+    len: u64,
+    hint: u64,
+    pool: &mut ScratchPool,
+) -> Result<Vec<BulkRequest>> {
+    let kcount = progs.len();
+    if kcount == 0 {
+        return Ok(vec![BulkRequest::new(PudOp::Zero, dst_plane, vec![], len)]);
+    }
+    let scratch_max =
+        progs.iter().map(|p| p.scratch_needed()).max().unwrap_or(0);
+    let need = kcount + scratch_max;
+    sys.lease_scratch(alloc, pid, pool, need, len, Some(hint))?;
+    let slots = pool.slots().to_vec();
+    let scratch = &slots[kcount..need];
+    let mut reqs = Vec::new();
+    for (i, prog) in progs.iter().enumerate() {
+        let d = if kcount == 1 { dst_plane } else { slots[i] };
+        reqs.extend(prog.emit(operands, &[d], len, scratch)?);
+    }
+    if kcount > 1 {
+        reqs.push(BulkRequest::new(
+            PudOp::Or,
+            dst_plane,
+            vec![slots[0], slots[1]],
+            len,
+        ));
+        for &slot in &slots[2..kcount] {
+            reqs.push(BulkRequest::new(
+                PudOp::Or,
+                dst_plane,
+                vec![dst_plane, slot],
+                len,
+            ));
+        }
+    }
+    if let Some(p) = pred_plane {
+        reqs.push(BulkRequest::new(
+            PudOp::And,
+            dst_plane,
+            vec![dst_plane, p],
+            len,
+        ));
+    }
+    Ok(reqs)
+}
+
+/// Bitmap semi-join `probe ⋉ build_keys`: write a 1-bit mask into
+/// `dst` selecting every probe element whose key appears on the build
+/// side, optionally ANDed with a pre-computed residual predicate mask
+/// plane (`pred`). The whole shape — every per-key compare, the OR
+/// fold, and the predicate AND — is ONE `submit_batch`.
+#[allow(clippy::too_many_arguments)]
+pub fn semi_join_mask(
+    sys: &mut System,
+    alloc: &mut dyn Allocator,
+    pid: Pid,
+    probe: &VerticalLayout,
+    build_keys: &[u64],
+    pred: Option<u64>,
+    dst: &VerticalLayout,
+    pool: &mut ScratchPool,
+) -> Result<QueryReport> {
+    ensure!(dst.width() == 1, "semi-join mask dst must be 1 bit wide");
+    ensure!(
+        dst.elems() == probe.elems(),
+        "dst holds {} element(s), probe {}",
+        dst.elems(),
+        probe.elems()
+    );
+    ensure!(
+        probe.width() <= MAX_WIDTH,
+        "probe width {} exceeds MAX_WIDTH {MAX_WIDTH}",
+        probe.width()
+    );
+    let mut rep = QueryReport::default();
+    let keys = present_keys(build_keys, probe.width());
+    let mut progs = Vec::with_capacity(keys.len());
+    for &k in &keys {
+        progs.push(fetch(
+            sys,
+            ProgramKey::KernelConst(ArithOp::CmpEq, probe.width(), k),
+            &mut rep,
+        ));
+    }
+    let reqs = emit_semi_join(
+        sys,
+        alloc,
+        pid,
+        &progs,
+        probe.planes(),
+        dst.planes()[0],
+        pred,
+        probe.plane_len(),
+        probe.hint(),
+        pool,
+    )?;
+    submit(sys, pid, &reqs, &mut rep)?;
+    Ok(rep)
+}
+
+/// Sharded [`semi_join_mask`]: the same per-key compare + OR-fold
+/// stream is emitted once per bank-disjoint shard (each leasing
+/// scratch from its own per-shard pool, hinted to its own anchor) and
+/// the streams are round-robin-interleaved into ONE batch so the
+/// hazard-wave scheduler overlaps shards across banks.
+#[allow(clippy::too_many_arguments)]
+pub fn semi_join_mask_sharded(
+    sys: &mut System,
+    alloc: &mut dyn Allocator,
+    pid: Pid,
+    probe: &ShardedLayout,
+    build_keys: &[u64],
+    pred: Option<&ShardedLayout>,
+    dst: &ShardedLayout,
+    pools: &mut ShardedScratch,
+) -> Result<QueryReport> {
+    ensure!(dst.width() == 1, "semi-join mask dst must be 1 bit wide");
+    ensure!(
+        dst.n_shards() == probe.n_shards() && dst.elems() == probe.elems(),
+        "dst shape mismatch"
+    );
+    if let Some(p) = pred {
+        ensure!(
+            p.n_shards() == probe.n_shards() && p.elems() == probe.elems(),
+            "pred shape mismatch"
+        );
+    }
+    let mut rep = QueryReport::default();
+    let keys = present_keys(build_keys, probe.width());
+    let mut progs = Vec::with_capacity(keys.len());
+    for &k in &keys {
+        progs.push(fetch(
+            sys,
+            ProgramKey::KernelConst(ArithOp::CmpEq, probe.width(), k),
+            &mut rep,
+        ));
+    }
+    let mut per_shard = Vec::with_capacity(probe.n_shards());
+    for k in 0..probe.n_shards() {
+        let part = probe.shard(k);
+        per_shard.push(emit_semi_join(
+            sys,
+            alloc,
+            pid,
+            &progs,
+            part.planes(),
+            dst.shard(k).planes()[0],
+            pred.map(|p| p.shard(k).planes()[0]),
+            part.plane_len(),
+            part.hint(),
+            pools.pool(k),
+        )?);
+    }
+    let reqs = interleave_rounds(per_shard);
+    submit(sys, pid, &reqs, &mut rep)?;
+    Ok(rep)
+}
+
+/// Per-group equality masks, batched: one cached `CmpEq`-const program
+/// per group key, every emission concatenated into ONE `submit_batch`
+/// (the single host→memory crossing is the point — the groups share
+/// the scratch slots, whose WAW hazards serialize waves, but a
+/// co-located flat layout has no bank parallelism to lose anyway; the
+/// sharded twin keeps per-shard pools so shards still overlap).
+pub fn group_masks(
+    sys: &mut System,
+    alloc: &mut dyn Allocator,
+    pid: Pid,
+    col: &VerticalLayout,
+    groups: &[u64],
+    dsts: &[VerticalLayout],
+    pool: &mut ScratchPool,
+) -> Result<QueryReport> {
+    ensure!(
+        groups.len() == dsts.len(),
+        "{} group(s) but {} mask dst(s)",
+        groups.len(),
+        dsts.len()
+    );
+    let mut rep = QueryReport::default();
+    if groups.is_empty() {
+        return Ok(rep);
+    }
+    let domain = 1u64 << col.width();
+    for (g, dst) in groups.iter().zip(dsts) {
+        ensure!(*g < domain, "group key {g} outside {}-bit domain", col.width());
+        ensure!(dst.width() == 1, "group mask dst must be 1 bit wide");
+        ensure!(
+            dst.elems() == col.elems(),
+            "dst holds {} element(s), column {}",
+            dst.elems(),
+            col.elems()
+        );
+    }
+    let mut progs = Vec::with_capacity(groups.len());
+    for &g in groups {
+        progs.push(fetch(
+            sys,
+            ProgramKey::KernelConst(ArithOp::CmpEq, col.width(), g),
+            &mut rep,
+        ));
+    }
+    let scratch_max =
+        progs.iter().map(|p| p.scratch_needed()).max().unwrap_or(0);
+    let len = col.plane_len();
+    sys.lease_scratch(alloc, pid, pool, scratch_max, len, Some(col.hint()))?;
+    let scratch = pool.slots()[..scratch_max].to_vec();
+    let mut reqs = Vec::new();
+    for (prog, dst) in progs.iter().zip(dsts) {
+        reqs.extend(prog.emit(col.planes(), &[dst.planes()[0]], len, &scratch)?);
+    }
+    submit(sys, pid, &reqs, &mut rep)?;
+    Ok(rep)
+}
+
+/// Sharded [`group_masks`]: per shard, every group's emission is
+/// concatenated (sharing that shard's pool); the per-shard streams are
+/// interleaved into ONE batch.
+pub fn group_masks_sharded(
+    sys: &mut System,
+    alloc: &mut dyn Allocator,
+    pid: Pid,
+    col: &ShardedLayout,
+    groups: &[u64],
+    dsts: &[ShardedLayout],
+    pools: &mut ShardedScratch,
+) -> Result<QueryReport> {
+    ensure!(
+        groups.len() == dsts.len(),
+        "{} group(s) but {} mask dst(s)",
+        groups.len(),
+        dsts.len()
+    );
+    let mut rep = QueryReport::default();
+    if groups.is_empty() {
+        return Ok(rep);
+    }
+    let domain = 1u64 << col.width();
+    for (g, dst) in groups.iter().zip(dsts) {
+        ensure!(*g < domain, "group key {g} outside {}-bit domain", col.width());
+        ensure!(dst.width() == 1, "group mask dst must be 1 bit wide");
+        ensure!(
+            dst.n_shards() == col.n_shards() && dst.elems() == col.elems(),
+            "dst shape mismatch"
+        );
+    }
+    let mut progs = Vec::with_capacity(groups.len());
+    for &g in groups {
+        progs.push(fetch(
+            sys,
+            ProgramKey::KernelConst(ArithOp::CmpEq, col.width(), g),
+            &mut rep,
+        ));
+    }
+    let scratch_max =
+        progs.iter().map(|p| p.scratch_needed()).max().unwrap_or(0);
+    let mut per_shard = Vec::with_capacity(col.n_shards());
+    for k in 0..col.n_shards() {
+        let part = col.shard(k);
+        let len = part.plane_len();
+        sys.lease_scratch(
+            alloc,
+            pid,
+            pools.pool(k),
+            scratch_max,
+            len,
+            Some(part.hint()),
+        )?;
+        let scratch = pools.pool(k).slots()[..scratch_max].to_vec();
+        let mut reqs = Vec::new();
+        for (prog, dst) in progs.iter().zip(dsts) {
+            reqs.extend(prog.emit(
+                part.planes(),
+                &[dst.shard(k).planes()[0]],
+                len,
+                &scratch,
+            )?);
+        }
+        per_shard.push(reqs);
+    }
+    let reqs = interleave_rounds(per_shard);
+    submit(sys, pid, &reqs, &mut rep)?;
+    Ok(rep)
+}
+
+/// Group-by aggregation: batched per-group masks ([`group_masks`]),
+/// then per group a live-bit count and a masked in-DRAM sum over
+/// `values`. Mask planes are transient — allocated hinted to the key
+/// column and freed before returning.
+pub fn group_by_sum(
+    sys: &mut System,
+    alloc: &mut dyn Allocator,
+    pid: Pid,
+    keys: &VerticalLayout,
+    values: &VerticalLayout,
+    groups: &[u64],
+    pool: &mut ScratchPool,
+) -> Result<(Vec<GroupAggregate>, QueryReport)> {
+    ensure!(
+        values.elems() == keys.elems(),
+        "values hold {} element(s), keys {}",
+        values.elems(),
+        keys.elems()
+    );
+    let mut rep = QueryReport::default();
+    if groups.is_empty() {
+        return Ok((Vec::new(), rep));
+    }
+    let mut masks = Vec::with_capacity(groups.len());
+    for _ in groups {
+        masks.push(VerticalLayout::alloc_with_hint(
+            sys,
+            alloc,
+            pid,
+            1,
+            keys.elems(),
+            keys.hint(),
+        )?);
+    }
+    rep.merge(&group_masks(sys, alloc, pid, keys, groups, &masks, pool)?);
+    let mut out = Vec::with_capacity(groups.len());
+    for (&g, mask) in groups.iter().zip(&masks) {
+        let count = popcount_mask(sys, pid, mask, &mut rep)?;
+        let (sum, erep) =
+            sys.arith_sum(alloc, pid, values, Some(mask.planes()[0]), pool)?;
+        if let Some(er) = erep {
+            rep.absorb(&er);
+        }
+        out.push(GroupAggregate { group: g, count, sum });
+    }
+    for mask in &masks {
+        mask.free(sys, alloc, pid)?;
+    }
+    Ok((out, rep))
+}
+
+/// Sharded [`group_by_sum`].
+pub fn group_by_sum_sharded(
+    sys: &mut System,
+    alloc: &mut dyn Allocator,
+    pid: Pid,
+    keys: &ShardedLayout,
+    values: &ShardedLayout,
+    groups: &[u64],
+    pools: &mut ShardedScratch,
+) -> Result<(Vec<GroupAggregate>, QueryReport)> {
+    ensure!(
+        values.elems() == keys.elems() && values.n_shards() == keys.n_shards(),
+        "values/keys shape mismatch"
+    );
+    let mut rep = QueryReport::default();
+    if groups.is_empty() {
+        return Ok((Vec::new(), rep));
+    }
+    let mut masks = Vec::with_capacity(groups.len());
+    for _ in groups {
+        masks.push(ShardedLayout::alloc_like(sys, alloc, pid, 1, keys)?);
+    }
+    rep.merge(&group_masks_sharded(
+        sys, alloc, pid, keys, groups, &masks, pools,
+    )?);
+    let mut out = Vec::with_capacity(groups.len());
+    for (&g, mask) in groups.iter().zip(&masks) {
+        let count = popcount_mask_sharded(sys, pid, mask, &mut rep)?;
+        let (sum, erep) =
+            sys.arith_sum_sharded(alloc, pid, values, Some(mask), pools)?;
+        if let Some(er) = erep {
+            rep.absorb(&er);
+        }
+        out.push(GroupAggregate { group: g, count, sum });
+    }
+    for mask in &masks {
+        mask.free(sys, alloc, pid)?;
+    }
+    Ok((out, rep))
+}
+
+/// Materialize the mask `v ≥ rhs` into `dst` as `NOT (v < rhs)`: the
+/// cached `CmpLt`-const kernel writes into a leased slot and a single
+/// bulk `NOT` flips it into `dst`, all in one batch. `rhs == 0` yields
+/// the all-ones mask through the same path (`v < 0` is vacuously
+/// false). `rhs` must be inside the `width`-bit domain — the compiler
+/// truncates constants to the operand width, so a wrapped `2^w` would
+/// silently become `v ≥ 0`.
+pub fn cmp_ge_mask(
+    sys: &mut System,
+    alloc: &mut dyn Allocator,
+    pid: Pid,
+    col: &VerticalLayout,
+    rhs: u64,
+    dst: &VerticalLayout,
+    pool: &mut ScratchPool,
+) -> Result<QueryReport> {
+    ensure!(dst.width() == 1, "cmp-ge mask dst must be 1 bit wide");
+    ensure!(
+        dst.elems() == col.elems(),
+        "dst holds {} element(s), column {}",
+        dst.elems(),
+        col.elems()
+    );
+    ensure!(
+        rhs < 1u64 << col.width(),
+        "rhs {rhs} outside {}-bit domain",
+        col.width()
+    );
+    let mut rep = QueryReport::default();
+    let prog = fetch(
+        sys,
+        ProgramKey::KernelConst(ArithOp::CmpLt, col.width(), rhs),
+        &mut rep,
+    );
+    let need = 1 + prog.scratch_needed();
+    let len = col.plane_len();
+    sys.lease_scratch(alloc, pid, pool, need, len, Some(col.hint()))?;
+    let slots = pool.slots().to_vec();
+    let mut reqs = prog.emit(col.planes(), &[slots[0]], len, &slots[1..need])?;
+    reqs.push(BulkRequest::new(
+        PudOp::Not,
+        dst.planes()[0],
+        vec![slots[0]],
+        len,
+    ));
+    submit(sys, pid, &reqs, &mut rep)?;
+    Ok(rep)
+}
+
+/// Sharded [`cmp_ge_mask`].
+pub fn cmp_ge_mask_sharded(
+    sys: &mut System,
+    alloc: &mut dyn Allocator,
+    pid: Pid,
+    col: &ShardedLayout,
+    rhs: u64,
+    dst: &ShardedLayout,
+    pools: &mut ShardedScratch,
+) -> Result<QueryReport> {
+    ensure!(dst.width() == 1, "cmp-ge mask dst must be 1 bit wide");
+    ensure!(
+        dst.n_shards() == col.n_shards() && dst.elems() == col.elems(),
+        "dst shape mismatch"
+    );
+    ensure!(
+        rhs < 1u64 << col.width(),
+        "rhs {rhs} outside {}-bit domain",
+        col.width()
+    );
+    let mut rep = QueryReport::default();
+    let prog = fetch(
+        sys,
+        ProgramKey::KernelConst(ArithOp::CmpLt, col.width(), rhs),
+        &mut rep,
+    );
+    let need = 1 + prog.scratch_needed();
+    let mut per_shard = Vec::with_capacity(col.n_shards());
+    for k in 0..col.n_shards() {
+        let part = col.shard(k);
+        let len = part.plane_len();
+        sys.lease_scratch(
+            alloc,
+            pid,
+            pools.pool(k),
+            need,
+            len,
+            Some(part.hint()),
+        )?;
+        let slots = pools.pool(k).slots().to_vec();
+        let mut reqs =
+            prog.emit(part.planes(), &[slots[0]], len, &slots[1..need])?;
+        reqs.push(BulkRequest::new(
+            PudOp::Not,
+            dst.shard(k).planes()[0],
+            vec![slots[0]],
+            len,
+        ));
+        per_shard.push(reqs);
+    }
+    let reqs = interleave_rounds(per_shard);
+    submit(sys, pid, &reqs, &mut rep)?;
+    Ok(rep)
+}
+
+/// Top-k selection by threshold bisection — no sort, at most
+/// `W = log2(domain)` kernel rounds.
+///
+/// Invariant: `lo` always satisfies `count(v ≥ lo) ≥ k` and `hi`
+/// always satisfies `count(v ≥ hi) < k` (`lo = 0` counts all `n`
+/// elements, `hi = 2^w` counts none — both hold without running a
+/// kernel). Each round halves `[lo, hi)` on the popcount of the
+/// cached `CmpLt(mid)` mask, so on exit `lo` is the LARGEST threshold
+/// selecting at least `k` elements — exactly the k-th largest value.
+/// The final `v ≥ lo` mask lands in `dst` via [`cmp_ge_mask`]; ties at
+/// the threshold make it select ≥ k elements, matching the scalar
+/// reference.
+///
+/// Edge cases from the invariant, not special-cased math: `k == 0`
+/// yields threshold `2^w` and an all-zero mask (one bulk `Zero`, since
+/// `2^w` is not representable as a kernel constant); `k ≥ n` yields
+/// threshold 0 and the all-ones mask.
+pub fn top_k(
+    sys: &mut System,
+    alloc: &mut dyn Allocator,
+    pid: Pid,
+    col: &VerticalLayout,
+    k: u64,
+    dst: &VerticalLayout,
+    pool: &mut ScratchPool,
+) -> Result<(TopK, QueryReport)> {
+    ensure!(dst.width() == 1, "top-k mask dst must be 1 bit wide");
+    ensure!(
+        dst.elems() == col.elems(),
+        "dst holds {} element(s), column {}",
+        dst.elems(),
+        col.elems()
+    );
+    ensure!(
+        col.width() <= MAX_WIDTH,
+        "column width {} exceeds MAX_WIDTH {MAX_WIDTH}",
+        col.width()
+    );
+    let n = col.elems() as u64;
+    let w = col.width();
+    let mut rep = QueryReport::default();
+    if k == 0 {
+        let reqs = [BulkRequest::new(
+            PudOp::Zero,
+            dst.planes()[0],
+            vec![],
+            dst.plane_len(),
+        )];
+        submit(sys, pid, &reqs, &mut rep)?;
+        let out = TopK { threshold: 1u64 << w, selected: 0, rounds: 0 };
+        return Ok((out, rep));
+    }
+    let (mut lo, mut hi) = (0u64, 1u64 << w);
+    let mut rounds = 0;
+    if k < n {
+        while hi - lo > 1 {
+            let mid = lo + (hi - lo) / 2;
+            let er =
+                sys.run_arith_const(alloc, pid, ArithOp::CmpLt, mid, col, dst, pool)?;
+            rep.absorb(&er);
+            rounds += 1;
+            let count_lt = popcount_mask(sys, pid, dst, &mut rep)?;
+            if n - count_lt >= k {
+                lo = mid;
+            } else {
+                hi = mid;
+            }
+        }
+    }
+    rep.rounds = rounds;
+    rep.merge(&cmp_ge_mask(sys, alloc, pid, col, lo, dst, pool)?);
+    let selected = popcount_mask(sys, pid, dst, &mut rep)?;
+    Ok((TopK { threshold: lo, selected, rounds }, rep))
+}
+
+/// Sharded [`top_k`]: bisection rounds run through
+/// [`System::run_arith_const_sharded`] (one interleaved batch per
+/// round) and counts sum the live bits across shards.
+pub fn top_k_sharded(
+    sys: &mut System,
+    alloc: &mut dyn Allocator,
+    pid: Pid,
+    col: &ShardedLayout,
+    k: u64,
+    dst: &ShardedLayout,
+    pools: &mut ShardedScratch,
+) -> Result<(TopK, QueryReport)> {
+    ensure!(dst.width() == 1, "top-k mask dst must be 1 bit wide");
+    ensure!(
+        dst.n_shards() == col.n_shards() && dst.elems() == col.elems(),
+        "dst shape mismatch"
+    );
+    let n = col.elems() as u64;
+    let w = col.width();
+    let mut rep = QueryReport::default();
+    if k == 0 {
+        let mut per_shard = Vec::with_capacity(dst.n_shards());
+        for part in dst.shards() {
+            per_shard.push(vec![BulkRequest::new(
+                PudOp::Zero,
+                part.planes()[0],
+                vec![],
+                part.plane_len(),
+            )]);
+        }
+        let reqs = interleave_rounds(per_shard);
+        submit(sys, pid, &reqs, &mut rep)?;
+        let out = TopK { threshold: 1u64 << w, selected: 0, rounds: 0 };
+        return Ok((out, rep));
+    }
+    let (mut lo, mut hi) = (0u64, 1u64 << w);
+    let mut rounds = 0;
+    if k < n {
+        while hi - lo > 1 {
+            let mid = lo + (hi - lo) / 2;
+            let er = sys.run_arith_const_sharded(
+                alloc,
+                pid,
+                ArithOp::CmpLt,
+                mid,
+                col,
+                dst,
+                pools,
+            )?;
+            rep.absorb(&er);
+            rounds += 1;
+            let count_lt = popcount_mask_sharded(sys, pid, dst, &mut rep)?;
+            if n - count_lt >= k {
+                lo = mid;
+            } else {
+                hi = mid;
+            }
+        }
+    }
+    rep.rounds = rounds;
+    rep.merge(&cmp_ge_mask_sharded(sys, alloc, pid, col, lo, dst, pools)?);
+    let selected = popcount_mask_sharded(sys, pid, dst, &mut rep)?;
+    Ok((TopK { threshold: lo, selected, rounds }, rep))
+}
+
+/// Scalar host oracles for the three query shapes — the ground truth
+/// the differential fuzzing harness (`tests/prop_queries.rs`) and the
+/// workload's inline verification compare every PUD result against.
+pub mod reference {
+    use std::collections::HashSet;
+
+    /// `probe[i]` survives iff its key appears in `build_keys` AND the
+    /// optional residual predicate holds.
+    pub fn semi_join(
+        probe: &[u64],
+        build_keys: &[u64],
+        pred: Option<&[bool]>,
+    ) -> Vec<bool> {
+        let set: HashSet<u64> = build_keys.iter().copied().collect();
+        probe
+            .iter()
+            .enumerate()
+            .map(|(i, v)| set.contains(v) && pred.map_or(true, |p| p[i]))
+            .collect()
+    }
+
+    /// Per requested group key: `(count, sum of values)` over the rows
+    /// whose key equals it.
+    pub fn group_by(
+        keys: &[u64],
+        values: &[u64],
+        groups: &[u64],
+    ) -> Vec<(u64, u128)> {
+        groups
+            .iter()
+            .map(|&g| {
+                let mut count = 0u64;
+                let mut sum = 0u128;
+                for (k, v) in keys.iter().zip(values) {
+                    if *k == g {
+                        count += 1;
+                        sum += *v as u128;
+                    }
+                }
+                (count, sum)
+            })
+            .collect()
+    }
+
+    /// `(threshold, selection)` with the same semantics as
+    /// [`super::top_k`]: threshold = k-th largest value (`2^width`
+    /// when `k == 0`, 0 when `k ≥ n`), selection = `v ≥ threshold`.
+    pub fn top_k(values: &[u64], k: u64, width: u32) -> (u64, Vec<bool>) {
+        let n = values.len() as u64;
+        if k == 0 {
+            return (1u64 << width, vec![false; values.len()]);
+        }
+        if k >= n {
+            return (0, vec![true; values.len()]);
+        }
+        let mut sorted = values.to_vec();
+        sorted.sort_unstable_by(|a, b| b.cmp(a));
+        let t = sorted[(k - 1) as usize];
+        (t, values.iter().map(|&v| v >= t).collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn present_keys_dedups_sorts_and_drops_out_of_domain() {
+        let keys = present_keys(&[9, 3, 3, 16, 0, 9, 255], 4);
+        assert_eq!(keys, vec![0, 3, 9]); // 16 and 255 exceed the 4-bit domain
+        assert!(present_keys(&[], 8).is_empty());
+        assert!(present_keys(&[1 << 20], 16).is_empty());
+        // wide-domain fallback path behaves identically
+        let wide = present_keys(&[5, 1, 5, (1 << 20) - 1, 1 << 20], 20);
+        assert_eq!(wide, vec![1, 5, (1 << 20) - 1]);
+    }
+
+    #[test]
+    fn reference_top_k_edges() {
+        let vals = [7u64, 3, 7, 1];
+        let (t, sel) = reference::top_k(&vals, 0, 4);
+        assert_eq!(t, 16);
+        assert!(sel.iter().all(|&s| !s));
+        let (t, sel) = reference::top_k(&vals, 9, 4);
+        assert_eq!(t, 0);
+        assert!(sel.iter().all(|&s| s));
+        // ties straddling the threshold select >= k
+        let (t, sel) = reference::top_k(&vals, 1, 4);
+        assert_eq!(t, 7);
+        assert_eq!(sel, vec![true, false, true, false]);
+        let (t, _) = reference::top_k(&vals, 3, 4);
+        assert_eq!(t, 3);
+    }
+
+    #[test]
+    fn reference_semi_join_and_group_by() {
+        let probe = [1u64, 2, 3, 2];
+        let m = reference::semi_join(&probe, &[2, 9], None);
+        assert_eq!(m, vec![false, true, false, true]);
+        let pred = [true, false, true, true];
+        let m = reference::semi_join(&probe, &[2, 9], Some(&pred));
+        assert_eq!(m, vec![false, false, false, true]);
+        let agg = reference::group_by(&[1, 2, 1], &[10, 20, 30], &[1, 2, 7]);
+        assert_eq!(agg, vec![(2, 40), (1, 20), (0, 0)]);
+    }
+}

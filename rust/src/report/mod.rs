@@ -16,6 +16,7 @@ use crate::workloads::analytics::{AnalyticsResult, ShardedResult};
 use crate::workloads::churn::ChurnResult;
 use crate::workloads::filter::FilterResult;
 use crate::workloads::microbench::{AllocatorKind, Micro};
+use crate::workloads::queries::QueryResult;
 use crate::workloads::sweep::SweepCell;
 
 /// Render the Figure 2 reproduction: PUMA speedup over malloc, one
@@ -605,6 +606,104 @@ pub fn analytics_sharded(
     ))
 }
 
+/// Render the query-engine sweep: one row per allocator x shape x
+/// placement (flat or sharded) cell. `param` is the shape's knob —
+/// build-key count for `semi_join`, group count for `group_by`, `k`
+/// for `top_k`. Writes `queries.csv` when `out_dir` is given.
+pub fn queries(
+    results: &[QueryResult],
+    out_dir: Option<&Path>,
+) -> Result<String> {
+    let mut table = Table::new(vec![
+        "allocator",
+        "shape",
+        "shards",
+        "param",
+        "batches",
+        "waves",
+        "rounds",
+        "pud%",
+        "elapsed",
+        "host ns/elem",
+        "col h/m",
+        "matches",
+        "agg",
+    ])
+    .left(0);
+    let mut csv = Csv::new(vec![
+        "allocator",
+        "shape",
+        "width",
+        "rows",
+        "shards",
+        "param",
+        "matches",
+        "agg",
+        "batches",
+        "waves",
+        "rounds",
+        "compiles",
+        "pud_row_fraction",
+        "sim_ns",
+        "elapsed_sim_ns",
+        "host_ns_per_elem",
+        "col_hits",
+        "col_misses",
+        "pool_leases",
+        "pool_high_water",
+    ]);
+    for r in results {
+        table.row(vec![
+            r.allocator.to_string(),
+            r.shape.to_string(),
+            if r.shards == 0 {
+                "-".to_string()
+            } else {
+                r.shards.to_string()
+            },
+            r.param.to_string(),
+            r.batches.to_string(),
+            r.waves.to_string(),
+            r.rounds.to_string(),
+            format!("{:.0}%", r.pud_row_fraction() * 100.0),
+            fmt_ns(r.elapsed_ns),
+            format!("{:.2}", r.host_ns_per_elem),
+            format!("{}/{}", r.col_hits, r.col_misses),
+            r.matches.to_string(),
+            r.agg.to_string(),
+        ]);
+        csv.row(vec![
+            r.allocator.to_string(),
+            r.shape.to_string(),
+            r.width.to_string(),
+            r.rows.to_string(),
+            r.shards.to_string(),
+            r.param.to_string(),
+            r.matches.to_string(),
+            r.agg.to_string(),
+            r.batches.to_string(),
+            r.waves.to_string(),
+            r.rounds.to_string(),
+            r.compiles.to_string(),
+            format!("{:.6}", r.pud_row_fraction()),
+            format!("{:.1}", r.sim_ns),
+            format!("{:.1}", r.elapsed_ns),
+            format!("{:.4}", r.host_ns_per_elem),
+            r.col_hits.to_string(),
+            r.col_misses.to_string(),
+            r.pool_leases.to_string(),
+            r.pool_high_water.to_string(),
+        ]);
+    }
+    if let Some(dir) = out_dir {
+        csv.write(dir.join("queries.csv"))?;
+    }
+    Ok(format!(
+        "## Queries — semi-join / group-by / top-k over the PUD engine\n\n{}",
+        table.render()
+    ))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -797,6 +896,59 @@ mod tests {
         let dir = std::env::temp_dir().join("puma_report_sharded_test");
         analytics_sharded(&rs, Some(&dir)).unwrap();
         assert!(dir.join("analytics_sharded.csv").exists());
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    fn query_result(
+        alloc: &'static str,
+        shape: &'static str,
+        shards: usize,
+    ) -> QueryResult {
+        QueryResult {
+            allocator: alloc,
+            shape,
+            width: 8,
+            rows: 1 << 14,
+            shards,
+            param: 16,
+            matches: 4100,
+            agg: 523_000,
+            batches: 3,
+            waves: 12,
+            sim_ns: 80_000.0,
+            elapsed_ns: 40_000.0,
+            pud_rows: 990,
+            fallback_rows: 10,
+            compiles: 0,
+            rounds: if shape == "top_k" { 8 } else { 0 },
+            col_hits: 3,
+            col_misses: 1,
+            pool_leases: 20,
+            pool_high_water: 20,
+            host_ns_per_elem: 2.5,
+        }
+    }
+
+    #[test]
+    fn queries_report_renders_and_writes_csv() {
+        let rs = vec![
+            query_result("puma", "semi_join", 0),
+            query_result("puma", "top_k", 4),
+            query_result("malloc", "group_by", 0),
+        ];
+        let s = queries(&rs, None).unwrap();
+        assert!(s.contains("Queries"));
+        assert!(s.contains("semi_join"));
+        assert!(s.contains("top_k"));
+        assert!(s.contains("99%"), "{s}");
+        // flat cells render a dash in the shards column
+        assert!(s.lines().any(|l| l.contains("semi_join") && l.contains(" - ")));
+        let dir = std::env::temp_dir().join("puma_report_queries_test");
+        queries(&rs, Some(&dir)).unwrap();
+        let csv =
+            std::fs::read_to_string(dir.join("queries.csv")).unwrap();
+        assert!(csv.starts_with("allocator,shape,width,rows,shards,param,"));
+        assert!(csv.contains("0.990000"));
         let _ = std::fs::remove_dir_all(dir);
     }
 

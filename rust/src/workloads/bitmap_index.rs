@@ -41,7 +41,7 @@ impl BitmapIndex {
         density: f64,
         seed: u64,
     ) -> Result<BitmapIndex> {
-        let len = table_rows.div_ceil(8);
+        let len = crate::pud::arith::plane_bytes(table_rows as usize);
         let mut rng = Pcg64::new(seed);
         let mut bitmaps = Vec::with_capacity(values.len());
         let mut truth = Vec::with_capacity(values.len());

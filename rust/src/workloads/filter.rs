@@ -260,7 +260,7 @@ pub fn run(
     let pid = sys.spawn();
     let mut alloc = kind.build(&mut sys, cfg.puma_pages)?;
     let (expr, columns) = predicate(cfg.clauses);
-    let len = cfg.rows.div_ceil(8);
+    let len = crate::pud::arith::plane_bytes(cfg.rows as usize);
 
     // columns: first via alloc, the rest hint-aligned (paper protocol)
     let first = sys.alloc(alloc.as_mut(), pid, len)?;

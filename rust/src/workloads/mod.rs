@@ -17,12 +17,17 @@
 //! * [`analytics`] — filter-then-sum aggregate over a vertical
 //!   (bit-transposed) column table: compiled `pud::arith` kernels vs
 //!   the CPU-fallback path, swept over bit-widths and allocators.
+//! * [`queries`] — the analytics query engine end-to-end: bitmap
+//!   semi-join, single-batch group-by aggregation, and top-k
+//!   threshold bisection over a TPC-H-flavored micro-table, verified
+//!   against scalar oracles and swept over allocators.
 
 pub mod analytics;
 pub mod bitmap_index;
 pub mod churn;
 pub mod filter;
 pub mod microbench;
+pub mod queries;
 pub mod setops;
 pub mod sweep;
 pub mod trace;

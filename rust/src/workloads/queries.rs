@@ -1,0 +1,962 @@
+//! TPC-H-flavored analytics query workload over a multi-column
+//! micro-table — the `pud::query` engine driven end-to-end across all
+//! four allocators (DESIGN.md §13).
+//!
+//! The table has three `W`-bit columns with stable column-cache ids:
+//! `custkey` (the semi-join key), `groupkey` (the grouping attribute,
+//! TPC-H's `returnflag` stand-in), and `quantity` (the aggregated
+//! measure). Three query shapes run per allocator:
+//!
+//! * **semi_join** — `lineitem ⋉ customer`-shaped: a residual
+//!   predicate mask (`quantity < T`, cached `CmpLt`-const kernel) is
+//!   ANDed into the key-presence semi-join mask built by
+//!   [`query::semi_join_mask`], then `SUM(quantity)` over the
+//!   survivors runs as a masked in-DRAM sum.
+//! * **group_by** — `SELECT groupkey, COUNT(*), SUM(quantity) GROUP BY
+//!   groupkey`: all per-group masks in ONE batch
+//!   ([`query::group_by_sum`]), then a masked sum per group.
+//! * **top_k** — the `ORDER BY quantity DESC LIMIT k` standin:
+//!   threshold bisection ([`query::top_k`]), no sort, then
+//!   `SUM(quantity)` over the selected rows.
+//!
+//! Every cell is verified inline against the scalar host oracles in
+//! [`query::reference`] — mask bit-for-bit, aggregates exactly — and
+//! the sharded twins are additionally cross-checked against the flat
+//! cells. Columns are fetched through the resident-column cache
+//! (transpose once, query many), kernels through the `(op, width,
+//! const)` program cache, and each cell reports the measured
+//! wall-clock host-boundary cost per row.
+
+use std::time::Instant;
+
+use anyhow::{ensure, Result};
+
+use crate::alloc::scratch::ScratchPool;
+use crate::alloc::traits::Allocator;
+use crate::coordinator::system::{System, SystemConfig};
+use crate::dram::address::InterleaveScheme;
+use crate::os::process::Pid;
+use crate::pud::arith::{
+    self, ArithOp, ShardedLayout, ShardedScratch, VerticalLayout,
+};
+use crate::pud::query::{self, QueryReport};
+use crate::util::rng::Pcg64;
+use crate::workloads::analytics::threshold;
+use crate::workloads::microbench::AllocatorKind;
+
+/// Column-cache ids of the micro-table (versioned by the config seed).
+const CUSTKEY_ID: u64 = 101;
+const GROUPKEY_ID: u64 = 102;
+const QUANTITY_ID: u64 = 103;
+
+/// Query-workload parameters.
+#[derive(Debug, Clone)]
+pub struct QueriesConfig {
+    /// Table rows.
+    pub rows: usize,
+    /// Bit width of all three columns.
+    pub width: u32,
+    /// Distinct group keys (`groupkey = rng % groups`).
+    pub groups: u64,
+    /// Build-side key count for the semi-join (even keys of a key
+    /// space twice that size, so ~half the probe rows match).
+    pub build_keys: usize,
+    /// Top-k selection size.
+    pub k: u64,
+    /// Residual-predicate threshold as a fraction of the value range.
+    pub threshold_frac: f64,
+    /// Shard count for the sharded twin cells (<= 1 skips them).
+    pub shards: usize,
+    pub huge_pages: usize,
+    pub puma_pages: usize,
+    pub churn_rounds: usize,
+    pub seed: u64,
+}
+
+impl Default for QueriesConfig {
+    fn default() -> Self {
+        Self {
+            rows: 64 * 1024,
+            width: 8,
+            groups: 8,
+            build_keys: 16,
+            k: 4096,
+            threshold_frac: 0.5,
+            shards: 4,
+            huge_pages: 16,
+            puma_pages: 8,
+            churn_rounds: 2_000,
+            seed: 0x7C_0F1E,
+        }
+    }
+}
+
+impl QueriesConfig {
+    /// The deterministic micro-table this configuration describes:
+    /// `(custkey, groupkey, quantity, build_keys)`.
+    pub fn table(&self) -> (Vec<u64>, Vec<u64>, Vec<u64>, Vec<u64>) {
+        let domain = 1u64 << self.width;
+        let key_space = (2 * self.build_keys.max(1) as u64).min(domain);
+        // even keys of the key space: present on the build side, so
+        // ~half the probe rows find a partner (duplicates appear when
+        // the domain clamps the key space — the engine dedups)
+        let build: Vec<u64> = (0..self.build_keys)
+            .map(|i| (2 * i as u64) % key_space)
+            .collect();
+        let mut rng = Pcg64::new(self.seed ^ 0xC057);
+        let cust: Vec<u64> =
+            (0..self.rows).map(|_| rng.below(key_space)).collect();
+        let mut rng = Pcg64::new(self.seed ^ 0x6809);
+        let grp: Vec<u64> =
+            (0..self.rows).map(|_| rng.below(self.groups.max(1))).collect();
+        let mut rng = Pcg64::new(self.seed ^ 0x5CA1);
+        let mask = arith::width_mask(self.width);
+        let qty: Vec<u64> =
+            (0..self.rows).map(|_| rng.next_u64() & mask).collect();
+        (cust, grp, qty, build)
+    }
+}
+
+/// One query cell: one shape on one allocator (flat or sharded),
+/// verified inline against the scalar host oracle.
+#[derive(Debug, Clone)]
+pub struct QueryResult {
+    pub allocator: &'static str,
+    /// `"semi_join"`, `"group_by"`, or `"top_k"`.
+    pub shape: &'static str,
+    pub width: u32,
+    pub rows: usize,
+    /// Shard count of the cell; 0 = flat (unsharded) path.
+    pub shards: usize,
+    /// Shape parameter: build-key count / group count / k.
+    pub param: u64,
+    /// Rows the shape's final mask selects (group_by: rows covered by
+    /// the requested groups).
+    pub matches: u64,
+    /// The verified aggregate (`SUM(quantity)` over the selection).
+    pub agg: u128,
+    /// `submit_batch` round trips the shape issued.
+    pub batches: usize,
+    /// Hazard waves across those batches.
+    pub waves: usize,
+    /// Serial-equivalent simulated ns.
+    pub sim_ns: f64,
+    /// Bank-parallel simulated completion ns.
+    pub elapsed_ns: f64,
+    pub pud_rows: u64,
+    pub fallback_rows: u64,
+    /// Fresh kernel compiles (0 once the program cache is warm).
+    pub compiles: usize,
+    /// Top-k bisection rounds (0 for the other shapes).
+    pub rounds: usize,
+    /// Column-cache hits accrued by this cell.
+    pub col_hits: u64,
+    /// Column-cache misses accrued by this cell.
+    pub col_misses: u64,
+    /// Fresh scratch leases taken during this cell.
+    pub pool_leases: u64,
+    /// Scratch-pool resident high water after the cell.
+    pub pool_high_water: usize,
+    /// Measured wall-clock host-boundary cost per row: column fetch +
+    /// mask/popcount readbacks.
+    pub host_ns_per_elem: f64,
+}
+
+impl QueryResult {
+    /// In-DRAM fraction of the cell's batched rows.
+    pub fn pud_row_fraction(&self) -> f64 {
+        let total = self.pud_rows + self.fallback_rows;
+        if total == 0 {
+            0.0
+        } else {
+            self.pud_rows as f64 / total as f64
+        }
+    }
+}
+
+/// Column-cache + pool deltas shared by every cell.
+struct CellMeter {
+    hits0: u64,
+    misses0: u64,
+    leases0: u64,
+}
+
+impl CellMeter {
+    fn start(sys: &System, leases0: u64) -> Self {
+        let s = sys.column_cache_stats();
+        Self {
+            hits0: s.resident_hits + s.host_hits,
+            misses0: s.resident_misses + s.host_misses,
+            leases0,
+        }
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn finish(
+        &self,
+        sys: &System,
+        name: &'static str,
+        shape: &'static str,
+        cfg: &QueriesConfig,
+        shards: usize,
+        param: u64,
+        matches: u64,
+        agg: u128,
+        rep: &QueryReport,
+        leases1: u64,
+        high_water: usize,
+        host_ns: f64,
+    ) -> QueryResult {
+        let s = sys.column_cache_stats();
+        QueryResult {
+            allocator: name,
+            shape,
+            width: cfg.width,
+            rows: cfg.rows,
+            shards,
+            param,
+            matches,
+            agg,
+            batches: rep.batches,
+            waves: rep.waves,
+            sim_ns: rep.total_ns,
+            elapsed_ns: rep.elapsed_ns,
+            pud_rows: rep.pud_rows,
+            fallback_rows: rep.fallback_rows,
+            compiles: rep.compiles,
+            rounds: rep.rounds,
+            col_hits: (s.resident_hits + s.host_hits) - self.hits0,
+            col_misses: (s.resident_misses + s.host_misses) - self.misses0,
+            pool_leases: leases1 - self.leases0,
+            pool_high_water: high_water,
+            host_ns_per_elem: (host_ns + rep.host_ns as f64)
+                / cfg.rows.max(1) as f64,
+        }
+    }
+}
+
+/// Bitmap semi-join with a residual predicate: mask = `custkey ∈
+/// build` AND `quantity < T`, then `SUM(quantity)` over the mask.
+pub fn run_cell_semi_join(
+    sys: &mut System,
+    alloc: &mut dyn Allocator,
+    pid: Pid,
+    name: &'static str,
+    cfg: &QueriesConfig,
+    pool: &mut ScratchPool,
+) -> Result<QueryResult> {
+    ensure!(
+        (1..=arith::MAX_WIDTH).contains(&cfg.width),
+        "width {} out of kernel range",
+        cfg.width
+    );
+    let (cust, _grp, qty, build) = cfg.table();
+    let thr = threshold(cfg.width, cfg.threshold_frac);
+    let meter = CellMeter::start(sys, pool.leases);
+
+    // each column is used immediately after its own fetch (an evicted
+    // column's planes are freed, so holding a layout across another
+    // fetch would break under a tight column budget): quantity first
+    // for the predicate, custkey next for the join
+    let t = Instant::now();
+    let qty_col =
+        sys.cached_column(alloc, pid, QUANTITY_ID, cfg.seed, cfg.width, &qty)?;
+    let mut host_ns = t.elapsed().as_nanos() as f64;
+
+    // residual predicate mask: quantity < T (cached const kernel)
+    let pred = VerticalLayout::alloc_with_hint(
+        sys,
+        alloc,
+        pid,
+        1,
+        cfg.rows,
+        qty_col.hint(),
+    )?;
+    let mut rep = QueryReport::default();
+    let er =
+        sys.run_arith_const(alloc, pid, ArithOp::CmpLt, thr, &qty_col, &pred, pool)?;
+    rep.absorb(&er);
+
+    let t = Instant::now();
+    let cust_col =
+        sys.cached_column(alloc, pid, CUSTKEY_ID, cfg.seed, cfg.width, &cust)?;
+    host_ns += t.elapsed().as_nanos() as f64;
+
+    // key-presence semi-join AND the predicate, one batch
+    let dst = VerticalLayout::alloc_with_hint(
+        sys,
+        alloc,
+        pid,
+        1,
+        cfg.rows,
+        cust_col.hint(),
+    )?;
+    rep.merge(&query::semi_join_mask(
+        sys,
+        alloc,
+        pid,
+        &cust_col,
+        &build,
+        Some(pred.planes()[0]),
+        &dst,
+        pool,
+    )?);
+
+    // verify the mask bit-for-bit against the scalar oracle
+    let t = Instant::now();
+    let mask_row = sys.read_virt(pid, dst.planes()[0], dst.plane_len())?;
+    host_ns += t.elapsed().as_nanos() as f64;
+    let pred_ref: Vec<bool> = qty.iter().map(|&v| v < thr).collect();
+    let want = query::reference::semi_join(&cust, &build, Some(&pred_ref));
+    for (i, &w) in want.iter().enumerate() {
+        let got = (mask_row[i / 8] >> (i % 8)) & 1 == 1;
+        ensure!(got == w, "{name}: semi-join mask bit {i} diverged");
+    }
+    let matches = arith::popcount_live(&mask_row, cfg.rows);
+
+    // SUM(quantity) over the survivors, masked in-DRAM
+    let t = Instant::now();
+    let qty_col =
+        sys.cached_column(alloc, pid, QUANTITY_ID, cfg.seed, cfg.width, &qty)?;
+    host_ns += t.elapsed().as_nanos() as f64;
+    let (agg, sum_rep) =
+        sys.arith_sum(alloc, pid, &qty_col, Some(dst.planes()[0]), pool)?;
+    if let Some(er) = sum_rep {
+        rep.absorb(&er);
+    }
+    let want_agg: u128 = qty
+        .iter()
+        .zip(&want)
+        .filter(|(_, w)| **w)
+        .map(|(v, _)| *v as u128)
+        .sum();
+    ensure!(agg == want_agg, "{name}: semi-join sum diverged ({agg} vs {want_agg})");
+
+    pred.free(sys, alloc, pid)?;
+    dst.free(sys, alloc, pid)?;
+    Ok(meter.finish(
+        sys,
+        name,
+        "semi_join",
+        cfg,
+        0,
+        cfg.build_keys as u64,
+        matches,
+        agg,
+        &rep,
+        pool.leases,
+        pool.high_water,
+        host_ns,
+    ))
+}
+
+/// Group-by aggregation: per-group `(COUNT, SUM(quantity))` with every
+/// group mask in one batch.
+pub fn run_cell_group_by(
+    sys: &mut System,
+    alloc: &mut dyn Allocator,
+    pid: Pid,
+    name: &'static str,
+    cfg: &QueriesConfig,
+    pool: &mut ScratchPool,
+) -> Result<QueryResult> {
+    ensure!(
+        (1..=arith::MAX_WIDTH).contains(&cfg.width),
+        "width {} out of kernel range",
+        cfg.width
+    );
+    ensure!(
+        cfg.groups >= 1 && cfg.groups <= 1u64 << cfg.width,
+        "{} group key(s) exceed the {}-bit domain",
+        cfg.groups,
+        cfg.width
+    );
+    let (_cust, grp, qty, _build) = cfg.table();
+    let groups: Vec<u64> = (0..cfg.groups).collect();
+    let meter = CellMeter::start(sys, pool.leases);
+
+    let t = Instant::now();
+    let grp_col =
+        sys.cached_column(alloc, pid, GROUPKEY_ID, cfg.seed, cfg.width, &grp)?;
+    let qty_col =
+        sys.cached_column(alloc, pid, QUANTITY_ID, cfg.seed, cfg.width, &qty)?;
+    let host_ns = t.elapsed().as_nanos() as f64;
+
+    let (aggs, rep) =
+        query::group_by_sum(sys, alloc, pid, &grp_col, &qty_col, &groups, pool)?;
+
+    let want = query::reference::group_by(&grp, &qty, &groups);
+    ensure!(aggs.len() == want.len(), "{name}: group count diverged");
+    for (a, (wc, ws)) in aggs.iter().zip(&want) {
+        ensure!(
+            a.count == *wc && a.sum == *ws,
+            "{name}: group {} diverged (count {} vs {wc}, sum {} vs {ws})",
+            a.group,
+            a.count,
+            a.sum
+        );
+    }
+    let matches: u64 = aggs.iter().map(|a| a.count).sum();
+    let agg: u128 = aggs.iter().map(|a| a.sum).sum();
+
+    Ok(meter.finish(
+        sys,
+        name,
+        "group_by",
+        cfg,
+        0,
+        cfg.groups,
+        matches,
+        agg,
+        &rep,
+        pool.leases,
+        pool.high_water,
+        host_ns,
+    ))
+}
+
+/// Top-k by threshold bisection, then `SUM(quantity)` over the
+/// selected rows.
+pub fn run_cell_top_k(
+    sys: &mut System,
+    alloc: &mut dyn Allocator,
+    pid: Pid,
+    name: &'static str,
+    cfg: &QueriesConfig,
+    pool: &mut ScratchPool,
+) -> Result<QueryResult> {
+    ensure!(
+        (1..=arith::MAX_WIDTH).contains(&cfg.width),
+        "width {} out of kernel range",
+        cfg.width
+    );
+    let (_cust, _grp, qty, _build) = cfg.table();
+    let meter = CellMeter::start(sys, pool.leases);
+
+    let t = Instant::now();
+    let qty_col =
+        sys.cached_column(alloc, pid, QUANTITY_ID, cfg.seed, cfg.width, &qty)?;
+    let mut host_ns = t.elapsed().as_nanos() as f64;
+
+    let dst = VerticalLayout::alloc_with_hint(
+        sys,
+        alloc,
+        pid,
+        1,
+        cfg.rows,
+        qty_col.hint(),
+    )?;
+    let (tk, mut rep) = query::top_k(sys, alloc, pid, &qty_col, cfg.k, &dst, pool)?;
+
+    let (want_t, want_sel) = query::reference::top_k(&qty, cfg.k, cfg.width);
+    ensure!(
+        tk.threshold == want_t,
+        "{name}: top-k threshold diverged ({} vs {want_t})",
+        tk.threshold
+    );
+    let t = Instant::now();
+    let mask_row = sys.read_virt(pid, dst.planes()[0], dst.plane_len())?;
+    host_ns += t.elapsed().as_nanos() as f64;
+    for (i, &w) in want_sel.iter().enumerate() {
+        let got = (mask_row[i / 8] >> (i % 8)) & 1 == 1;
+        ensure!(got == w, "{name}: top-k mask bit {i} diverged");
+    }
+    ensure!(
+        tk.selected == want_sel.iter().filter(|&&s| s).count() as u64,
+        "{name}: top-k selection count diverged"
+    );
+
+    let t = Instant::now();
+    let qty_col =
+        sys.cached_column(alloc, pid, QUANTITY_ID, cfg.seed, cfg.width, &qty)?;
+    host_ns += t.elapsed().as_nanos() as f64;
+    let (agg, sum_rep) =
+        sys.arith_sum(alloc, pid, &qty_col, Some(dst.planes()[0]), pool)?;
+    if let Some(er) = sum_rep {
+        rep.absorb(&er);
+    }
+    let want_agg: u128 = qty
+        .iter()
+        .zip(&want_sel)
+        .filter(|(_, s)| **s)
+        .map(|(v, _)| *v as u128)
+        .sum();
+    ensure!(agg == want_agg, "{name}: top-k sum diverged ({agg} vs {want_agg})");
+
+    dst.free(sys, alloc, pid)?;
+    Ok(meter.finish(
+        sys,
+        name,
+        "top_k",
+        cfg,
+        0,
+        cfg.k,
+        tk.selected,
+        agg,
+        &rep,
+        pool.leases,
+        pool.high_water,
+        host_ns,
+    ))
+}
+
+/// Sharded twin of [`run_cell_semi_join`].
+pub fn run_cell_semi_join_sharded(
+    sys: &mut System,
+    alloc: &mut dyn Allocator,
+    pid: Pid,
+    name: &'static str,
+    cfg: &QueriesConfig,
+    pools: &mut ShardedScratch,
+) -> Result<QueryResult> {
+    let (cust, _grp, qty, build) = cfg.table();
+    let thr = threshold(cfg.width, cfg.threshold_frac);
+    let meter = CellMeter::start(sys, pools.leases());
+
+    // fetch order mirrors the flat cell: every column is used right
+    // after its own fetch so tight column budgets stay legal
+    let t = Instant::now();
+    let qty_col = sys.cached_column_sharded(
+        alloc, pid, QUANTITY_ID, cfg.seed, cfg.width, &qty, cfg.shards,
+    )?;
+    let mut host_ns = t.elapsed().as_nanos() as f64;
+
+    let pred = ShardedLayout::alloc_like(sys, alloc, pid, 1, &qty_col)?;
+    let mut rep = QueryReport::default();
+    let er = sys.run_arith_const_sharded(
+        alloc,
+        pid,
+        ArithOp::CmpLt,
+        thr,
+        &qty_col,
+        &pred,
+        pools,
+    )?;
+    rep.absorb(&er);
+
+    let t = Instant::now();
+    let cust_col = sys.cached_column_sharded(
+        alloc, pid, CUSTKEY_ID, cfg.seed, cfg.width, &cust, cfg.shards,
+    )?;
+    host_ns += t.elapsed().as_nanos() as f64;
+
+    let dst = ShardedLayout::alloc_like(sys, alloc, pid, 1, &cust_col)?;
+    rep.merge(&query::semi_join_mask_sharded(
+        sys,
+        alloc,
+        pid,
+        &cust_col,
+        &build,
+        Some(&pred),
+        &dst,
+        pools,
+    )?);
+
+    let t = Instant::now();
+    let got = dst.load(sys, pid)?;
+    host_ns += t.elapsed().as_nanos() as f64;
+    let pred_ref: Vec<bool> = qty.iter().map(|&v| v < thr).collect();
+    let want = query::reference::semi_join(&cust, &build, Some(&pred_ref));
+    for (i, (&g, &w)) in got.iter().zip(&want).enumerate() {
+        ensure!(
+            (g == 1) == w,
+            "{name}: S={} semi-join mask bit {i} diverged",
+            cfg.shards
+        );
+    }
+    let matches = got.iter().filter(|&&g| g == 1).count() as u64;
+
+    let t = Instant::now();
+    let qty_col = sys.cached_column_sharded(
+        alloc, pid, QUANTITY_ID, cfg.seed, cfg.width, &qty, cfg.shards,
+    )?;
+    host_ns += t.elapsed().as_nanos() as f64;
+    let (agg, sum_rep) =
+        sys.arith_sum_sharded(alloc, pid, &qty_col, Some(&dst), pools)?;
+    if let Some(er) = sum_rep {
+        rep.absorb(&er);
+    }
+    let want_agg: u128 = qty
+        .iter()
+        .zip(&want)
+        .filter(|(_, w)| **w)
+        .map(|(v, _)| *v as u128)
+        .sum();
+    ensure!(agg == want_agg, "{name}: S={} semi-join sum diverged", cfg.shards);
+
+    pred.free(sys, alloc, pid)?;
+    dst.free(sys, alloc, pid)?;
+    Ok(meter.finish(
+        sys,
+        name,
+        "semi_join",
+        cfg,
+        cfg.shards,
+        cfg.build_keys as u64,
+        matches,
+        agg,
+        &rep,
+        pools.leases(),
+        pools.high_water(),
+        host_ns,
+    ))
+}
+
+/// Sharded twin of [`run_cell_group_by`].
+pub fn run_cell_group_by_sharded(
+    sys: &mut System,
+    alloc: &mut dyn Allocator,
+    pid: Pid,
+    name: &'static str,
+    cfg: &QueriesConfig,
+    pools: &mut ShardedScratch,
+) -> Result<QueryResult> {
+    let (_cust, grp, qty, _build) = cfg.table();
+    let groups: Vec<u64> = (0..cfg.groups).collect();
+    let meter = CellMeter::start(sys, pools.leases());
+
+    let t = Instant::now();
+    let grp_col = sys.cached_column_sharded(
+        alloc, pid, GROUPKEY_ID, cfg.seed, cfg.width, &grp, cfg.shards,
+    )?;
+    let qty_col = sys.cached_column_sharded(
+        alloc, pid, QUANTITY_ID, cfg.seed, cfg.width, &qty, cfg.shards,
+    )?;
+    let host_ns = t.elapsed().as_nanos() as f64;
+
+    let (aggs, rep) = query::group_by_sum_sharded(
+        sys, alloc, pid, &grp_col, &qty_col, &groups, pools,
+    )?;
+
+    let want = query::reference::group_by(&grp, &qty, &groups);
+    for (a, (wc, ws)) in aggs.iter().zip(&want) {
+        ensure!(
+            a.count == *wc && a.sum == *ws,
+            "{name}: S={} group {} diverged",
+            cfg.shards,
+            a.group
+        );
+    }
+    let matches: u64 = aggs.iter().map(|a| a.count).sum();
+    let agg: u128 = aggs.iter().map(|a| a.sum).sum();
+
+    Ok(meter.finish(
+        sys,
+        name,
+        "group_by",
+        cfg,
+        cfg.shards,
+        cfg.groups,
+        matches,
+        agg,
+        &rep,
+        pools.leases(),
+        pools.high_water(),
+        host_ns,
+    ))
+}
+
+/// Sharded twin of [`run_cell_top_k`].
+pub fn run_cell_top_k_sharded(
+    sys: &mut System,
+    alloc: &mut dyn Allocator,
+    pid: Pid,
+    name: &'static str,
+    cfg: &QueriesConfig,
+    pools: &mut ShardedScratch,
+) -> Result<QueryResult> {
+    let (_cust, _grp, qty, _build) = cfg.table();
+    let meter = CellMeter::start(sys, pools.leases());
+
+    let t = Instant::now();
+    let qty_col = sys.cached_column_sharded(
+        alloc, pid, QUANTITY_ID, cfg.seed, cfg.width, &qty, cfg.shards,
+    )?;
+    let mut host_ns = t.elapsed().as_nanos() as f64;
+
+    let dst = ShardedLayout::alloc_like(sys, alloc, pid, 1, &qty_col)?;
+    let (tk, mut rep) =
+        query::top_k_sharded(sys, alloc, pid, &qty_col, cfg.k, &dst, pools)?;
+
+    let (want_t, want_sel) = query::reference::top_k(&qty, cfg.k, cfg.width);
+    ensure!(
+        tk.threshold == want_t,
+        "{name}: S={} top-k threshold diverged ({} vs {want_t})",
+        cfg.shards,
+        tk.threshold
+    );
+    let t = Instant::now();
+    let got = dst.load(sys, pid)?;
+    host_ns += t.elapsed().as_nanos() as f64;
+    for (i, (&g, &w)) in got.iter().zip(&want_sel).enumerate() {
+        ensure!(
+            (g == 1) == w,
+            "{name}: S={} top-k mask bit {i} diverged",
+            cfg.shards
+        );
+    }
+
+    let t = Instant::now();
+    let qty_col = sys.cached_column_sharded(
+        alloc, pid, QUANTITY_ID, cfg.seed, cfg.width, &qty, cfg.shards,
+    )?;
+    host_ns += t.elapsed().as_nanos() as f64;
+    let (agg, sum_rep) =
+        sys.arith_sum_sharded(alloc, pid, &qty_col, Some(&dst), pools)?;
+    if let Some(er) = sum_rep {
+        rep.absorb(&er);
+    }
+    let want_agg: u128 = qty
+        .iter()
+        .zip(&want_sel)
+        .filter(|(_, s)| **s)
+        .map(|(v, _)| *v as u128)
+        .sum();
+    ensure!(agg == want_agg, "{name}: S={} top-k sum diverged", cfg.shards);
+
+    dst.free(sys, alloc, pid)?;
+    Ok(meter.finish(
+        sys,
+        name,
+        "top_k",
+        cfg,
+        cfg.shards,
+        cfg.k,
+        tk.selected,
+        agg,
+        &rep,
+        pools.leases(),
+        pools.high_water(),
+        host_ns,
+    ))
+}
+
+/// Run all three shapes (flat, then sharded twins when `cfg.shards >
+/// 1`) on one allocator: one system, process, scratch pools, and
+/// column cache reused across shapes. Sharded cells are cross-checked
+/// against their flat counterparts.
+pub fn run(
+    scheme: InterleaveScheme,
+    cfg: &QueriesConfig,
+    kind: AllocatorKind,
+) -> Result<Vec<QueryResult>> {
+    let mut sys = System::boot(SystemConfig {
+        scheme,
+        huge_pages: cfg.huge_pages,
+        churn_rounds: cfg.churn_rounds,
+        seed: cfg.seed,
+        artifacts: None,
+        ..Default::default()
+    })?;
+    let pid = sys.spawn();
+    let mut alloc = kind.build(&mut sys, cfg.puma_pages)?;
+    let mut pool = ScratchPool::new();
+    let mut out = Vec::new();
+    let flat = [
+        run_cell_semi_join(&mut sys, alloc.as_mut(), pid, kind.name(), cfg, &mut pool)?,
+        run_cell_group_by(&mut sys, alloc.as_mut(), pid, kind.name(), cfg, &mut pool)?,
+        run_cell_top_k(&mut sys, alloc.as_mut(), pid, kind.name(), cfg, &mut pool)?,
+    ];
+    if cfg.shards > 1 {
+        let mut pools = ShardedScratch::new();
+        let sharded = [
+            run_cell_semi_join_sharded(
+                &mut sys, alloc.as_mut(), pid, kind.name(), cfg, &mut pools,
+            )?,
+            run_cell_group_by_sharded(
+                &mut sys, alloc.as_mut(), pid, kind.name(), cfg, &mut pools,
+            )?,
+            run_cell_top_k_sharded(
+                &mut sys, alloc.as_mut(), pid, kind.name(), cfg, &mut pools,
+            )?,
+        ];
+        for (f, s) in flat.iter().zip(&sharded) {
+            ensure!(
+                f.matches == s.matches && f.agg == s.agg,
+                "{}: sharded {} diverged from the flat path",
+                kind.name(),
+                s.shape
+            );
+        }
+        sys.trim_scratch_sharded(alloc.as_mut(), pid, &mut pools, 0)?;
+        out.extend(flat);
+        out.extend(sharded);
+    } else {
+        out.extend(flat);
+    }
+    sys.release_scratch(alloc.as_mut(), pid, &mut pool)?;
+    sys.flush_columns(alloc.as_mut(), pid)?;
+    Ok(out)
+}
+
+/// Sweep allocators, one fresh system per allocator.
+pub fn sweep(
+    scheme: &InterleaveScheme,
+    cfg: &QueriesConfig,
+    kinds: &[AllocatorKind],
+) -> Result<Vec<QueryResult>> {
+    let mut out = Vec::with_capacity(kinds.len() * 6);
+    for kind in kinds {
+        out.extend(run(scheme.clone(), cfg, *kind)?);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::alloc::puma::FitPolicy;
+    use crate::dram::geometry::DramGeometry;
+
+    fn scheme() -> InterleaveScheme {
+        InterleaveScheme::row_major(DramGeometry::small()) // 64 MiB
+    }
+
+    fn cfg() -> QueriesConfig {
+        QueriesConfig {
+            rows: 16 * 1024,
+            k: 1024,
+            churn_rounds: 500,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn table_is_deterministic_and_in_domain() {
+        let c = cfg();
+        let (cust, grp, qty, build) = c.table();
+        let (cust2, ..) = c.table();
+        assert_eq!(cust, cust2);
+        let domain = 1u64 << c.width;
+        assert!(cust.iter().all(|&v| v < domain));
+        assert!(grp.iter().all(|&v| v < c.groups));
+        assert!(qty.iter().all(|&v| v < domain));
+        assert_eq!(build.len(), c.build_keys);
+        // the build side holds even keys only, so roughly half the
+        // probe rows find a partner
+        assert!(build.iter().all(|&k| k % 2 == 0));
+    }
+
+    #[test]
+    fn puma_cells_run_in_dram_and_verify() {
+        let rs = run(scheme(), &cfg(), AllocatorKind::Puma(FitPolicy::WorstFit))
+            .unwrap();
+        assert_eq!(rs.len(), 6, "3 flat + 3 sharded cells");
+        for r in &rs {
+            assert!(
+                r.pud_row_fraction() > 0.9,
+                "{} S={}: got {}",
+                r.shape,
+                r.shards,
+                r.pud_row_fraction()
+            );
+            assert!(r.matches > 0, "{}: empty selection", r.shape);
+            assert!(r.agg > 0, "{}: empty aggregate", r.shape);
+            assert!(r.host_ns_per_elem > 0.0);
+            assert!(r.batches >= 1);
+        }
+        let tk = rs.iter().find(|r| r.shape == "top_k").unwrap();
+        assert!(tk.rounds >= 1 && tk.rounds <= tk.width as usize);
+        // ties at the threshold are all selected, so >= k but far
+        // from the whole table
+        assert!(tk.matches >= cfg().k && tk.matches < cfg().rows as u64 / 2);
+        // group-by covers every row when the groups span the key space
+        let gb = rs.iter().find(|r| r.shape == "group_by").unwrap();
+        assert_eq!(gb.matches, cfg().rows as u64);
+    }
+
+    #[test]
+    fn malloc_cells_fall_back_but_stay_correct() {
+        let c = QueriesConfig {
+            shards: 0,
+            ..cfg()
+        };
+        let rs = run(scheme(), &c, AllocatorKind::Malloc).unwrap();
+        assert_eq!(rs.len(), 3);
+        for r in &rs {
+            assert!(
+                r.pud_row_fraction() < 0.5,
+                "{}: got {}",
+                r.shape,
+                r.pud_row_fraction()
+            );
+            assert!(r.matches > 0);
+        }
+    }
+
+    #[test]
+    fn warm_repeat_hits_both_caches() {
+        let c = QueriesConfig {
+            shards: 0,
+            ..cfg()
+        };
+        let mut sys = System::boot(SystemConfig {
+            scheme: scheme(),
+            huge_pages: c.huge_pages,
+            churn_rounds: c.churn_rounds,
+            seed: c.seed,
+            artifacts: None,
+            ..Default::default()
+        })
+        .unwrap();
+        let pid = sys.spawn();
+        let kind = AllocatorKind::Puma(FitPolicy::WorstFit);
+        let mut alloc = kind.build(&mut sys, c.puma_pages).unwrap();
+        let mut pool = ScratchPool::new();
+        let cold = run_cell_semi_join(
+            &mut sys, alloc.as_mut(), pid, "puma", &c, &mut pool,
+        )
+        .unwrap();
+        assert!(cold.col_misses >= 1 && cold.compiles >= 1);
+        let warm = run_cell_semi_join(
+            &mut sys, alloc.as_mut(), pid, "puma", &c, &mut pool,
+        )
+        .unwrap();
+        assert_eq!(warm.col_misses, 0, "warm repeat rebuilds no column");
+        assert_eq!(warm.compiles, 0, "warm repeat compiles nothing");
+        assert_eq!(warm.pool_leases, 0, "warm repeat leases nothing");
+        assert_eq!(warm.agg, cold.agg);
+        assert_eq!(warm.matches, cold.matches);
+        sys.release_scratch(alloc.as_mut(), pid, &mut pool).unwrap();
+        sys.flush_columns(alloc.as_mut(), pid).unwrap();
+    }
+
+    #[test]
+    fn sweep_puma_beats_malloc_per_shape() {
+        let c = QueriesConfig {
+            rows: 8 * 1024,
+            k: 512,
+            shards: 0,
+            churn_rounds: 300,
+            ..Default::default()
+        };
+        let rs = sweep(
+            &scheme(),
+            &c,
+            &[
+                AllocatorKind::Malloc,
+                AllocatorKind::Puma(FitPolicy::WorstFit),
+            ],
+        )
+        .unwrap();
+        assert_eq!(rs.len(), 6);
+        for shape in ["semi_join", "group_by", "top_k"] {
+            let puma = rs
+                .iter()
+                .find(|r| r.allocator == "puma" && r.shape == shape)
+                .unwrap();
+            let malloc = rs
+                .iter()
+                .find(|r| r.allocator == "malloc" && r.shape == shape)
+                .unwrap();
+            assert!(
+                puma.pud_row_fraction() > malloc.pud_row_fraction(),
+                "{shape}: puma {} vs malloc {}",
+                puma.pud_row_fraction(),
+                malloc.pud_row_fraction()
+            );
+            assert_eq!(puma.agg, malloc.agg, "results are placement-independent");
+            assert_eq!(puma.matches, malloc.matches);
+        }
+    }
+}

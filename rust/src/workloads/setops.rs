@@ -60,7 +60,7 @@ impl SetUniverse {
     pub fn new(universe_bits: u64, pid: Pid) -> Self {
         Self {
             pid,
-            len: universe_bits.div_ceil(8),
+            len: crate::pud::arith::plane_bytes(universe_bits as usize),
             first_va: None,
             scratch: ScratchPool::new(),
             programs: [

@@ -1,0 +1,609 @@
+//! Differential query fuzzing: every `pud::query` shape (bitmap
+//! semi-join, batched group-by, top-k threshold bisection) over random
+//! multi-column tables — ragged lengths, duplicate/missing/
+//! out-of-domain keys, widths 4/8/16 — verified bit-for-bit against
+//! the scalar host oracles in `pud::query::reference` under all three
+//! placement regimes: co-located (PUMA, hint-aligned, in-DRAM),
+//! deliberately misaligned (malloc, CPU fallback), and bank-sharded.
+//! A fixed-seed regression corpus pins the edge cases (empty build
+//! side, all-rows-match, `k = 0`, `k ≥ N`, single group, all-equal
+//! column, single-row probe), and satellite tests cover column-cache
+//! LRU eviction under budget pressure and the zero-fresh-compiles
+//! warm-sweep guarantee.
+
+use puma::alloc::mallocsim::MallocSim;
+use puma::alloc::puma::{FitPolicy, PumaAlloc};
+use puma::alloc::scratch::ScratchPool;
+use puma::alloc::traits::Allocator;
+use puma::assert_prop;
+use puma::coordinator::system::{System, SystemConfig};
+use puma::dram::address::InterleaveScheme;
+use puma::dram::geometry::DramGeometry;
+use puma::os::process::Pid;
+use puma::proptest::{self, Gen};
+use puma::pud::arith::{
+    self, ArithOp, ShardedLayout, ShardedScratch, VerticalLayout,
+};
+use puma::pud::query::{self, reference};
+use puma::util::rng::Pcg64;
+use puma::workloads::microbench::AllocatorKind;
+use puma::workloads::queries::{self, QueriesConfig};
+
+/// Fuzz boots one system per case, so the pre-aging churn is kept
+/// short — placement legality, not fragmentation realism, is under
+/// test here.
+fn boot() -> System {
+    let scheme = InterleaveScheme::row_major(DramGeometry::small()); // 64 MiB
+    System::boot(SystemConfig {
+        scheme,
+        huge_pages: 12,
+        churn_rounds: 60,
+        seed: 0xA217,
+        artifacts: None,
+        ..Default::default()
+    })
+    .unwrap()
+}
+
+fn boot_puma() -> (System, PumaAlloc) {
+    let mut sys = boot();
+    let row = sys.os.scheme.geometry.row_bytes as u64;
+    let mut puma = PumaAlloc::new(row, FitPolicy::WorstFit);
+    puma.pim_preallocate(&mut sys.os, 8).unwrap();
+    (sys, puma)
+}
+
+/// One random query-fuzz table: three columns plus per-shape inputs.
+#[derive(Debug, Clone)]
+struct Table {
+    width: u32,
+    cust: Vec<u64>,
+    grp: Vec<u64>,
+    qty: Vec<u64>,
+    build: Vec<u64>,
+    groups: Vec<u64>,
+    k: u64,
+    /// Residual semi-join predicate `quantity < thr`; `None` drops the
+    /// predicate leg entirely.
+    thr: Option<u64>,
+}
+
+fn gen_table(g: &mut Gen) -> Table {
+    let width = *g.choose(&[4u32, 8, 16]);
+    let domain = 1u64 << width;
+    // ragged lengths: sub-octet tables hit the padded final byte,
+    // larger ones span partial rows
+    let elems = if g.ratio(1, 5) {
+        g.usize(1..9)
+    } else {
+        g.usize(9..400)
+    };
+    // probe keys cluster in a sub-range so build keys both hit and miss
+    let key_span = g.u64(1..domain + 1);
+    let seed = g.u64(1..u64::MAX);
+    let mut rng = Pcg64::new(seed);
+    let cust: Vec<u64> = (0..elems).map(|_| rng.below(key_span)).collect();
+    let grp_span = g.u64(1..domain.min(16) + 1);
+    let grp: Vec<u64> = (0..elems).map(|_| rng.below(grp_span)).collect();
+    let mask = arith::width_mask(width);
+    let qty: Vec<u64> = (0..elems).map(|_| rng.next_u64() & mask).collect();
+    // build side: possibly empty, duplicates legal, occasionally an
+    // out-of-domain straggler the engine must drop
+    let mut build = g.vec(0..12, |g| g.u64(0..key_span + 2));
+    if g.ratio(1, 8) {
+        build.push(domain);
+    }
+    // requested groups may duplicate or name keys absent from the data
+    let groups = g.vec(0..6, |g| g.u64(0..domain));
+    let k = g.u64(0..elems as u64 + 3);
+    let thr = if g.bool() { Some(g.u64(0..domain)) } else { None };
+    Table {
+        width,
+        cust,
+        grp,
+        qty,
+        build,
+        groups,
+        k,
+        thr,
+    }
+}
+
+/// Allocate a `w`-bit layout, hint-aligned to `hint` when `hinted`
+/// (the PUMA co-location protocol); baselines allocate plainly.
+fn vert(
+    sys: &mut System,
+    alloc: &mut dyn Allocator,
+    pid: Pid,
+    hinted: bool,
+    w: u32,
+    elems: usize,
+    hint: u64,
+) -> VerticalLayout {
+    if hinted {
+        VerticalLayout::alloc_with_hint(sys, alloc, pid, w, elems, hint)
+            .unwrap()
+    } else {
+        VerticalLayout::alloc(sys, alloc, pid, w, elems).unwrap()
+    }
+}
+
+/// Run all three shapes flat over `t` with `alloc` and verify each
+/// against the scalar reference. `hinted` co-locates every plane with
+/// the first column (the PUMA protocol); baselines allocate plainly.
+fn check_flat(sys: &mut System, alloc: &mut dyn Allocator, hinted: bool, t: &Table) {
+    let pid = sys.spawn();
+    let elems = t.cust.len();
+    let cust =
+        VerticalLayout::alloc(sys, alloc, pid, t.width, elems).unwrap();
+    let hint = cust.hint();
+    let grp = vert(sys, alloc, pid, hinted, t.width, elems, hint);
+    let qty = vert(sys, alloc, pid, hinted, t.width, elems, hint);
+    cust.store(sys, pid, &t.cust).unwrap();
+    grp.store(sys, pid, &t.grp).unwrap();
+    qty.store(sys, pid, &t.qty).unwrap();
+    let mut pool = ScratchPool::new();
+
+    // --- semi-join -----------------------------------------------------
+    let pred = t.thr.map(|thr| {
+        let m = vert(sys, alloc, pid, hinted, 1, elems, hint);
+        sys.run_arith_const(alloc, pid, ArithOp::CmpLt, thr, &qty, &m, &mut pool)
+            .unwrap();
+        m
+    });
+    let dst = vert(sys, alloc, pid, hinted, 1, elems, hint);
+    query::semi_join_mask(
+        sys,
+        alloc,
+        pid,
+        &cust,
+        &t.build,
+        pred.as_ref().map(|m| m.planes()[0]),
+        &dst,
+        &mut pool,
+    )
+    .unwrap();
+    let got = dst.load(sys, pid).unwrap();
+    let pred_ref: Option<Vec<bool>> =
+        t.thr.map(|thr| t.qty.iter().map(|&v| v < thr).collect());
+    let want = reference::semi_join(&t.cust, &t.build, pred_ref.as_deref());
+    for (i, (&g, &w)) in got.iter().zip(&want).enumerate() {
+        assert_prop!(
+            (g == 1) == w,
+            "semi-join bit {i} diverged (hinted {hinted}, width {}, \
+             elems {elems}, build {:?}, thr {:?})",
+            t.width,
+            t.build,
+            t.thr
+        );
+    }
+
+    // --- group-by ------------------------------------------------------
+    let (aggs, _) =
+        query::group_by_sum(sys, alloc, pid, &grp, &qty, &t.groups, &mut pool)
+            .unwrap();
+    let want = reference::group_by(&t.grp, &t.qty, &t.groups);
+    assert_prop!(aggs.len() == want.len(), "one aggregate per group");
+    for (i, (a, (wc, ws))) in aggs.iter().zip(&want).enumerate() {
+        assert_prop!(
+            a.group == t.groups[i] && a.count == *wc && a.sum == *ws,
+            "group {} diverged: count {} vs {wc}, sum {} vs {ws} \
+             (hinted {hinted}, width {}, elems {elems})",
+            t.groups[i],
+            a.count,
+            a.sum,
+            t.width
+        );
+    }
+
+    // --- top-k ---------------------------------------------------------
+    let tdst = vert(sys, alloc, pid, hinted, 1, elems, hint);
+    let (tk, _) =
+        query::top_k(sys, alloc, pid, &qty, t.k, &tdst, &mut pool).unwrap();
+    let (want_t, want_sel) = reference::top_k(&t.qty, t.k, t.width);
+    assert_prop!(
+        tk.threshold == want_t,
+        "top-k threshold {} != reference {want_t} (k {}, elems {elems}, \
+         width {}, hinted {hinted})",
+        tk.threshold,
+        t.k,
+        t.width
+    );
+    let got = tdst.load(sys, pid).unwrap();
+    let mut selected = 0u64;
+    for (i, (&g, &w)) in got.iter().zip(&want_sel).enumerate() {
+        assert_prop!(
+            (g == 1) == w,
+            "top-k bit {i} diverged (k {}, threshold {})",
+            t.k,
+            tk.threshold
+        );
+        selected += g;
+    }
+    assert_prop!(
+        tk.selected == selected,
+        "reported selection count {} != mask popcount {selected}",
+        tk.selected
+    );
+
+    for l in [Some(cust), Some(grp), Some(qty), pred, Some(dst), Some(tdst)]
+        .into_iter()
+        .flatten()
+    {
+        l.free(sys, alloc, pid).unwrap();
+    }
+    sys.release_scratch(alloc, pid, &mut pool).unwrap();
+}
+
+/// Sharded twin of [`check_flat`]: the same shapes over bank-sharded
+/// layouts, verified against the same scalar references.
+fn check_sharded(
+    sys: &mut System,
+    alloc: &mut dyn Allocator,
+    shards: usize,
+    t: &Table,
+) {
+    let pid = sys.spawn();
+    let elems = t.cust.len();
+    let cust =
+        ShardedLayout::alloc(sys, alloc, pid, t.width, elems, shards).unwrap();
+    let grp = ShardedLayout::alloc_like(sys, alloc, pid, t.width, &cust).unwrap();
+    let qty = ShardedLayout::alloc_like(sys, alloc, pid, t.width, &cust).unwrap();
+    cust.store(sys, pid, &t.cust).unwrap();
+    grp.store(sys, pid, &t.grp).unwrap();
+    qty.store(sys, pid, &t.qty).unwrap();
+    let mut pools = ShardedScratch::new();
+
+    let pred = t.thr.map(|thr| {
+        let m = ShardedLayout::alloc_like(sys, alloc, pid, 1, &qty).unwrap();
+        sys.run_arith_const_sharded(
+            alloc,
+            pid,
+            ArithOp::CmpLt,
+            thr,
+            &qty,
+            &m,
+            &mut pools,
+        )
+        .unwrap();
+        m
+    });
+    let dst = ShardedLayout::alloc_like(sys, alloc, pid, 1, &cust).unwrap();
+    query::semi_join_mask_sharded(
+        sys,
+        alloc,
+        pid,
+        &cust,
+        &t.build,
+        pred.as_ref(),
+        &dst,
+        &mut pools,
+    )
+    .unwrap();
+    let got = dst.load(sys, pid).unwrap();
+    let pred_ref: Option<Vec<bool>> =
+        t.thr.map(|thr| t.qty.iter().map(|&v| v < thr).collect());
+    let want = reference::semi_join(&t.cust, &t.build, pred_ref.as_deref());
+    for (i, (&g, &w)) in got.iter().zip(&want).enumerate() {
+        assert_prop!(
+            (g == 1) == w,
+            "S={shards}: semi-join bit {i} diverged (width {}, elems {elems})",
+            t.width
+        );
+    }
+
+    let (aggs, _) = query::group_by_sum_sharded(
+        sys, alloc, pid, &grp, &qty, &t.groups, &mut pools,
+    )
+    .unwrap();
+    let want = reference::group_by(&t.grp, &t.qty, &t.groups);
+    for (a, (wc, ws)) in aggs.iter().zip(&want) {
+        assert_prop!(
+            a.count == *wc && a.sum == *ws,
+            "S={shards}: group {} diverged (count {} vs {wc}, sum {} vs {ws})",
+            a.group,
+            a.count,
+            a.sum
+        );
+    }
+
+    let tdst = ShardedLayout::alloc_like(sys, alloc, pid, 1, &qty).unwrap();
+    let (tk, _) =
+        query::top_k_sharded(sys, alloc, pid, &qty, t.k, &tdst, &mut pools)
+            .unwrap();
+    let (want_t, want_sel) = reference::top_k(&t.qty, t.k, t.width);
+    assert_prop!(
+        tk.threshold == want_t,
+        "S={shards}: top-k threshold {} != reference {want_t} (k {})",
+        tk.threshold,
+        t.k
+    );
+    let got = tdst.load(sys, pid).unwrap();
+    for (i, (&g, &w)) in got.iter().zip(&want_sel).enumerate() {
+        assert_prop!((g == 1) == w, "S={shards}: top-k bit {i} diverged");
+    }
+
+    for l in [Some(cust), Some(grp), Some(qty), pred, Some(dst), Some(tdst)]
+        .into_iter()
+        .flatten()
+    {
+        l.free(sys, alloc, pid).unwrap();
+    }
+    sys.trim_scratch_sharded(alloc, pid, &mut pools, 0).unwrap();
+}
+
+#[test]
+fn queries_match_reference_co_located() {
+    proptest::check_cases("co-located queries == scalar reference", 64, |g| {
+        let t = gen_table(g);
+        let (mut sys, mut puma) = boot_puma();
+        check_flat(&mut sys, &mut puma, true, &t);
+    });
+}
+
+#[test]
+fn queries_match_reference_misaligned() {
+    proptest::check_cases("misaligned queries == scalar reference", 64, |g| {
+        let t = gen_table(g);
+        let mut sys = boot();
+        let mut malloc = MallocSim::new();
+        check_flat(&mut sys, &mut malloc, false, &t);
+    });
+}
+
+#[test]
+fn queries_match_reference_sharded() {
+    proptest::check_cases("sharded queries == scalar reference", 64, |g| {
+        let t = gen_table(g);
+        // S may exceed elems: degenerate shard counts collapse
+        let shards = g.usize(1..7);
+        let (mut sys, mut puma) = boot_puma();
+        check_sharded(&mut sys, &mut puma, shards, &t);
+    });
+}
+
+/// Fixed regression corpus: the edge shapes the fuzzer only sometimes
+/// draws, pinned so they run on every commit under every placement.
+fn corpus() -> Vec<Table> {
+    let base = |elems: usize, width: u32, seed: u64| -> (Vec<u64>, Vec<u64>, Vec<u64>) {
+        let mut rng = Pcg64::new(seed);
+        let domain = 1u64 << width;
+        let mask = arith::width_mask(width);
+        let cust = (0..elems).map(|_| rng.below(domain)).collect();
+        let grp = (0..elems).map(|_| rng.below(domain.min(8))).collect();
+        let qty = (0..elems).map(|_| rng.next_u64() & mask).collect();
+        (cust, grp, qty)
+    };
+    let mut out = Vec::new();
+    // empty build side: the semi-join mask must be all-false
+    let (cust, grp, qty) = base(37, 8, 1);
+    out.push(Table {
+        width: 8,
+        cust,
+        grp,
+        qty,
+        build: vec![],
+        groups: vec![0, 3],
+        k: 5,
+        thr: None,
+    });
+    // out-of-domain build keys only: dropped, all-false again
+    let (cust, grp, qty) = base(21, 4, 2);
+    out.push(Table {
+        width: 4,
+        cust,
+        grp,
+        qty,
+        build: vec![16, 17, 99],
+        groups: vec![7],
+        k: 0, // k = 0: empty selection, threshold 2^w
+        thr: Some(8),
+    });
+    // all rows match: the build side spans the whole 4-bit domain
+    let (cust, grp, qty) = base(50, 4, 3);
+    out.push(Table {
+        width: 4,
+        cust,
+        grp,
+        qty,
+        build: (0..16).collect(),
+        groups: (0..8).collect(),
+        k: 50, // k = N: threshold 0, everything selected
+        thr: None,
+    });
+    // k > N and a requested group absent from the data (count 0)
+    let (cust, grp, qty) = base(11, 8, 4);
+    out.push(Table {
+        width: 8,
+        cust,
+        grp,
+        qty,
+        build: vec![0, 0, 1, 1, 2], // duplicate keys dedup
+        groups: vec![200],
+        k: 300,
+        thr: Some(0), // thr = 0: the predicate rejects every row
+    });
+    // all-equal column: top-k ties select every row; one group
+    // covers the whole table
+    out.push(Table {
+        width: 8,
+        cust: vec![5; 30],
+        grp: vec![2; 30],
+        qty: vec![7; 30],
+        build: vec![5],
+        groups: vec![2],
+        k: 4,
+        thr: None,
+    });
+    // single-row probe: layouts reject zero elements, so one row is
+    // the smallest probe side
+    out.push(Table {
+        width: 16,
+        cust: vec![40_000],
+        grp: vec![0],
+        qty: vec![65_535],
+        build: vec![40_000, 9],
+        groups: vec![0, 1],
+        k: 1,
+        thr: Some(1),
+    });
+    out
+}
+
+#[test]
+fn regression_corpus_co_located_flat_and_sharded() {
+    for t in corpus() {
+        let (mut sys, mut puma) = boot_puma();
+        check_flat(&mut sys, &mut puma, true, &t);
+        check_sharded(&mut sys, &mut puma, 3, &t);
+    }
+}
+
+#[test]
+fn regression_corpus_misaligned() {
+    for t in corpus() {
+        let mut sys = boot();
+        let mut malloc = MallocSim::new();
+        check_flat(&mut sys, &mut malloc, false, &t);
+    }
+}
+
+#[test]
+fn column_cache_evicts_under_budget_pressure_and_rebuilds_fresh() {
+    let (mut sys, mut puma) = boot_puma();
+    let pid = sys.spawn();
+    sys.set_column_budget(1);
+    let a: Vec<u64> = (0..100u64).map(|i| i & 0xFF).collect();
+    let b: Vec<u64> = (0..100u64).map(|i| (i * 3) & 0xFF).collect();
+    let ca = sys.cached_column(&mut puma, pid, 1, 7, 8, &a).unwrap();
+    assert_eq!(ca.load(&mut sys, pid).unwrap(), a);
+    // a second column under budget 1 evicts the first
+    let cb = sys.cached_column(&mut puma, pid, 2, 7, 8, &b).unwrap();
+    assert_eq!(cb.load(&mut sys, pid).unwrap(), b);
+    let s = sys.column_cache_stats();
+    assert!(s.evictions >= 1, "budget 1 must evict: {s:?}");
+    // refetching the evicted column is a miss + rebuild, never a
+    // stale-plane hit
+    let miss0 = sys.column_cache_stats().resident_misses;
+    let ca2 = sys.cached_column(&mut puma, pid, 1, 7, 8, &a).unwrap();
+    assert_eq!(
+        sys.column_cache_stats().resident_misses,
+        miss0 + 1,
+        "evicted column must rebuild, not hit"
+    );
+    assert_eq!(ca2.load(&mut sys, pid).unwrap(), a);
+    sys.flush_columns(&mut puma, pid).unwrap();
+}
+
+#[test]
+fn query_cells_stay_correct_with_budget_below_working_set() {
+    let cfg = QueriesConfig {
+        rows: 2048,
+        k: 128,
+        shards: 0,
+        churn_rounds: 60,
+        ..Default::default()
+    };
+
+    // budget 1: the semi-join cell touches two columns but uses each
+    // immediately after its own fetch, so even a single-slot cache
+    // (every fetch evicts and frees the previous column) stays correct
+    let (mut sys, mut puma) = boot_puma();
+    let pid = sys.spawn();
+    sys.set_column_budget(1);
+    let mut pool = ScratchPool::new();
+    let r = queries::run_cell_semi_join(
+        &mut sys, &mut puma, pid, "puma", &cfg, &mut pool,
+    )
+    .unwrap();
+    assert!(r.matches > 0);
+    assert!(r.col_misses >= 2, "budget 1 cannot hold both columns");
+    let s = sys.column_cache_stats();
+    assert!(s.evictions >= 1, "working set 2 under budget 1 must evict: {s:?}");
+    // a repeat still verifies — every fetch is a rebuild, none stale
+    let r2 = queries::run_cell_semi_join(
+        &mut sys, &mut puma, pid, "puma", &cfg, &mut pool,
+    )
+    .unwrap();
+    assert_eq!(r2.matches, r.matches);
+    assert_eq!(r2.agg, r.agg);
+    assert!(r2.col_misses >= 1, "budget 1 cannot serve a warm repeat");
+    sys.release_scratch(&mut puma, pid, &mut pool).unwrap();
+    sys.flush_columns(&mut puma, pid).unwrap();
+
+    // budget 2: the full three-shape sweep needs three distinct
+    // columns, so evictions churn between cells while each cell's own
+    // <= 2-column working set still fits — every inline oracle passes
+    let (mut sys, mut puma) = boot_puma();
+    let pid = sys.spawn();
+    sys.set_column_budget(2);
+    let mut pool = ScratchPool::new();
+    let a = queries::run_cell_semi_join(
+        &mut sys, &mut puma, pid, "puma", &cfg, &mut pool,
+    )
+    .unwrap();
+    let b = queries::run_cell_group_by(
+        &mut sys, &mut puma, pid, "puma", &cfg, &mut pool,
+    )
+    .unwrap();
+    let c = queries::run_cell_top_k(
+        &mut sys, &mut puma, pid, "puma", &cfg, &mut pool,
+    )
+    .unwrap();
+    assert!(a.matches > 0 && b.matches > 0 && c.matches > 0);
+    let s = sys.column_cache_stats();
+    assert!(s.evictions >= 1, "3 columns under budget 2 must evict: {s:?}");
+    sys.release_scratch(&mut puma, pid, &mut pool).unwrap();
+    sys.flush_columns(&mut puma, pid).unwrap();
+}
+
+#[test]
+fn warm_query_sweep_compiles_nothing() {
+    // satellite: after one cold sweep, a full re-sweep must be served
+    // entirely from the program cache — zero fresh kernel compiles,
+    // observed both per-cell and via System::program_cache_stats()
+    let (mut sys, mut puma) = boot_puma();
+    let pid = sys.spawn();
+    let cfg = QueriesConfig {
+        rows: 4096,
+        k: 256,
+        shards: 0,
+        churn_rounds: 60,
+        ..Default::default()
+    };
+    let mut pool = ScratchPool::new();
+    let cold = [
+        queries::run_cell_semi_join(&mut sys, &mut puma, pid, "puma", &cfg, &mut pool)
+            .unwrap(),
+        queries::run_cell_group_by(&mut sys, &mut puma, pid, "puma", &cfg, &mut pool)
+            .unwrap(),
+        queries::run_cell_top_k(&mut sys, &mut puma, pid, "puma", &cfg, &mut pool)
+            .unwrap(),
+    ];
+    assert!(
+        cold.iter().map(|r| r.compiles).sum::<usize>() >= 1,
+        "the cold sweep must compile something"
+    );
+    let warm0 = sys.program_cache_stats();
+    let warm = [
+        queries::run_cell_semi_join(&mut sys, &mut puma, pid, "puma", &cfg, &mut pool)
+            .unwrap(),
+        queries::run_cell_group_by(&mut sys, &mut puma, pid, "puma", &cfg, &mut pool)
+            .unwrap(),
+        queries::run_cell_top_k(&mut sys, &mut puma, pid, "puma", &cfg, &mut pool)
+            .unwrap(),
+    ];
+    for (r, c) in warm.iter().zip(&cold) {
+        assert_eq!(r.compiles, 0, "{}: warm cell compiled", r.shape);
+        assert_eq!(r.agg, c.agg, "{}: warm result diverged", r.shape);
+        assert_eq!(r.matches, c.matches);
+    }
+    let warm1 = sys.program_cache_stats();
+    assert_eq!(
+        warm1.misses, warm0.misses,
+        "a warm sweep must not insert fresh programs"
+    );
+    assert!(warm1.hits > warm0.hits, "warm kernels must be cache hits");
+    sys.release_scratch(&mut puma, pid, &mut pool).unwrap();
+    sys.flush_columns(&mut puma, pid).unwrap();
+}

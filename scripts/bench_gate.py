@@ -65,6 +65,15 @@ def extract(bench):
             "host_ns_per_elem"
         ),
         "analytics_sharded_host_ns_per_elem": sharded.get("host_ns_per_elem"),
+        # query engine (semi-join / group-by / top-k): the PUD-row floor
+        # across every PUMA query cell and the mean host-boundary cost.
+        # Null-seeded until committed.
+        "queries_puma_min_pud_row_fraction": bench.get("queries", {}).get(
+            "min_puma_pud_row_fraction"
+        ),
+        "queries_host_ns_per_elem": bench.get("queries", {}).get(
+            "host_ns_per_elem"
+        ),
     }
 
 
@@ -73,6 +82,7 @@ def extract(bench):
 LOWER_IS_BETTER = {
     "analytics_host_ns_per_elem",
     "analytics_sharded_host_ns_per_elem",
+    "queries_host_ns_per_elem",
 }
 
 
