@@ -668,6 +668,75 @@ fn main() -> anyhow::Result<()> {
             .map(|r| &r.host_ns_per_elem),
     );
 
+    // ---- observability: tracer overhead must stay in budget --------
+    // the same batched pass with the wave tracer off vs on, min-of-N
+    // wall clock on a warm system (min absorbs scheduler noise; the
+    // work itself is deterministic). DESIGN.md §14's <5% budget is
+    // asserted here and `obs_trace_overhead_frac` is gated in CI.
+    println!("\n# observability — tracer overhead + latency percentiles");
+    let measure_obs = |traced: bool| -> anyhow::Result<(f64, System)> {
+        let mut sys = boot();
+        let (pid, reqs) = build_workload(&mut sys, groups)?;
+        sys.coord.obs.tracer.set_enabled(traced);
+        black_box(sys.submit_batch(pid, &reqs)?); // warmup
+        let mut best = f64::INFINITY;
+        for _ in 0..9 {
+            let t0 = std::time::Instant::now();
+            black_box(sys.submit_batch(pid, &reqs)?);
+            best = best.min(t0.elapsed().as_nanos() as f64);
+        }
+        Ok((best, sys))
+    };
+    let (wall_off, _sys_off) = measure_obs(false)?;
+    let (wall_on, sys_on) = measure_obs(true)?;
+    let obs_overhead_frac = (wall_on - wall_off).max(0.0) / wall_off.max(1.0);
+    let tracer = &sys_on.coord.obs.tracer;
+    let mut bank_busy: std::collections::BTreeMap<u32, f64> =
+        std::collections::BTreeMap::new();
+    for ev in tracer.events() {
+        for lane in &ev.lanes {
+            *bank_busy.entry(lane.bank).or_insert(0.0) += lane.busy_ns;
+        }
+    }
+    let busiest = bank_busy.values().copied().fold(0.0f64, f64::max);
+    let idlest = bank_busy
+        .values()
+        .copied()
+        .fold(f64::INFINITY, f64::min);
+    let bank_util_spread = if bank_busy.is_empty() {
+        1.0
+    } else {
+        busiest / idlest.max(1e-9)
+    };
+    let op_sim_ns_p99 = sys_on
+        .coord
+        .obs
+        .registry
+        .hist_by_name("coord/op_sim_ns")
+        .expect("coordinator registers coord/op_sim_ns at boot")
+        .p99();
+    println!(
+        "tracer off {:.0} ns -> on {:.0} ns per pass ({:.2}% overhead); \
+         op p99 {} sim-ns, bank spread {:.2}x, {} wave(s) traced, {} dropped",
+        wall_off,
+        wall_on,
+        obs_overhead_frac * 100.0,
+        op_sim_ns_p99,
+        bank_util_spread,
+        tracer.len(),
+        tracer.dropped
+    );
+    assert!(
+        obs_overhead_frac < 0.05,
+        "wave tracing must cost <5% of the batched pass \
+         (got {:.2}%: off {wall_off:.0} ns, on {wall_on:.0} ns)",
+        obs_overhead_frac * 100.0
+    );
+    assert!(
+        tracer.len() as u64 + tracer.dropped == tracer.total_waves,
+        "ring accounting must cover every wave"
+    );
+
     let json = format!(
         "{{\n  \"bench\": \"bench_runtime\",\n  \"workload\": \
          {{\"groups\": {groups}, \"mix\": \"3:1 puma:malloc, \
@@ -694,7 +763,11 @@ fn main() -> anyhow::Result<()> {
          \"semi_join\": {}, \"group_by\": {}, \"top_k\": {}, \
          \"min_puma_pud_row_fraction\": {:.6}, \
          \"host_ns_per_elem\": {:.4}, \
-         \"cells\": [\n    {}\n  ]}}\n}}\n",
+         \"cells\": [\n    {}\n  ]}},\n  \
+         \"observability\": {{\"obs_trace_overhead_frac\": {:.4}, \
+         \"wall_off_ns\": {:.0}, \"wall_on_ns\": {:.0}, \
+         \"op_sim_ns_p99\": {}, \"bank_util_spread\": {:.4}, \
+         \"waves_traced\": {}, \"waves_dropped\": {}}}\n}}\n",
         json_path(&serial, groups),
         json_path(&batched, groups),
         serial.elapsed_sim_ns / batched.elapsed_sim_ns.max(1e-9),
@@ -750,6 +823,13 @@ fn main() -> anyhow::Result<()> {
             .map(query_json)
             .collect::<Vec<_>>()
             .join(",\n    "),
+        obs_overhead_frac,
+        wall_off,
+        wall_on,
+        op_sim_ns_p99,
+        bank_util_spread,
+        tracer.len(),
+        tracer.dropped,
     );
     std::fs::write("BENCH_runtime.json", &json)?;
     println!("\nwrote BENCH_runtime.json");

@@ -68,7 +68,7 @@ pub fn build_config(cli: &Cli) -> Result<Config> {
     for k in [
         "micro", "alloc", "size", "batch", "tenants", "epochs", "mode",
         "clauses", "widths", "elems", "threshold", "shards", "rows", "width",
-        "groups", "build_keys", "k",
+        "groups", "build_keys", "k", "export",
     ] {
         overrides.remove(k);
     }
@@ -223,6 +223,15 @@ pub fn run(args: &[String]) -> Result<i32> {
                 alloc,
             )
         }
+        "trace" => {
+            let cfg = build_config(&cli)?;
+            let export = cli.flags.get("export").map(String::as_str);
+            cmd_trace(&cfg, export)
+        }
+        "stats" => {
+            let cfg = build_config(&cli)?;
+            cmd_stats(&cfg)
+        }
         "micro" => {
             let cfg = build_config(&cli)?;
             let micro = parse_micro(
@@ -271,6 +280,13 @@ commands:
                micro-table, every cell verified against a scalar oracle:
                --rows N --width W --groups N --build_keys N --k N
                --threshold FRAC --shards N [--alloc NAME]
+  trace        run a small mixed-op batch with the wave tracer enabled
+               and print a pipeline summary; --export DIR also writes
+               trace.json (open in ui.perfetto.dev — one lane per
+               active bank), a replay-checked DDR command stream, and
+               a Prometheus metrics dump (DESIGN.md §14)
+  stats        run the same batch and print the metrics registry as
+               Prometheus text (histograms as p50/p90/p99 summaries)
   info         print machine description and artifact inventory
   help         this text
 
@@ -534,6 +550,119 @@ fn cmd_churn(cfg: &Config, tenants: usize, epochs: usize, mode: &str) -> Result<
     Ok(0)
 }
 
+fn boot_from(cfg: &Config) -> Result<System> {
+    System::boot(SystemConfig {
+        scheme: cfg.scheme.clone(),
+        huge_pages: cfg.huge_pages,
+        churn_rounds: cfg.churn_rounds,
+        seed: cfg.seed,
+        artifacts: cfg.artifacts.clone(),
+        ..Default::default()
+    })
+}
+
+/// Deterministic mixed-op batch behind `trace` and `stats`: two source
+/// columns and two destinations, AND/OR/XOR/COPY/NOT/ZERO with real
+/// hazards between them (so the batch splits into several waves) and
+/// one ragged-length op whose partial trailing row exercises the
+/// fallback path — enough to light up every metric and trace lane.
+fn run_trace_workload(
+    sys: &mut System,
+    puma_pages: usize,
+) -> Result<crate::coordinator::BatchReport> {
+    use crate::pud::isa::{BulkRequest, PudOp};
+    let row = sys.os.scheme.geometry.row_bytes as u64;
+    let size = 4 * row;
+    let pid = sys.spawn();
+    let mut alloc =
+        AllocatorKind::Puma(FitPolicy::WorstFit).build(sys, puma_pages)?;
+    let a = sys.alloc(alloc.as_mut(), pid, size)?;
+    let b = sys.alloc_align(alloc.as_mut(), pid, size, a)?;
+    let c = sys.alloc_align(alloc.as_mut(), pid, size, a)?;
+    let d = sys.alloc_align(alloc.as_mut(), pid, size, a)?;
+    let fill = |seed: u8| -> Vec<u8> {
+        (0..size)
+            .map(|i| (i as u8).wrapping_mul(31).wrapping_add(seed))
+            .collect()
+    };
+    sys.write_virt(pid, a, &fill(0x11))?;
+    sys.write_virt(pid, b, &fill(0x7C))?;
+    let reqs = [
+        BulkRequest::new(PudOp::And, c, vec![a, b], size),
+        BulkRequest::new(PudOp::Or, d, vec![a, b], size),
+        BulkRequest::new(PudOp::Xor, c, vec![a, b], size - row / 2),
+        BulkRequest::new(PudOp::Copy, d, vec![c], size),
+        BulkRequest::new(PudOp::Not, c, vec![a], size),
+        BulkRequest::new(PudOp::Zero, d, vec![], size),
+    ];
+    for req in reqs {
+        sys.enqueue(pid, req);
+    }
+    sys.flush(pid)
+}
+
+fn cmd_trace(cfg: &Config, export: Option<&str>) -> Result<i32> {
+    let mut sys = boot_from(cfg)?;
+    sys.coord.obs.tracer.set_enabled(true);
+    eprintln!("running mixed-op batch with the wave tracer enabled ...");
+    let report = run_trace_workload(&mut sys, cfg.puma_pages.max(2))?;
+    let tracer = &sys.coord.obs.tracer;
+    println!(
+        "waves traced  {} ({} dropped, ring capacity {})",
+        tracer.len(),
+        tracer.dropped,
+        tracer.capacity()
+    );
+    println!(
+        "batch         {} op(s) in {} wave(s), {:.2} ops/wave",
+        report.per_op_ns.len(),
+        report.waves,
+        sys.coord.pipeline.ops_per_wave()
+    );
+    println!(
+        "sim time      {} bank-parallel (vs {} serial-equivalent)",
+        fmt_ns(report.elapsed_ns),
+        fmt_ns(report.total_ns)
+    );
+    println!(
+        "rows          {} PUD / {} fallback",
+        sys.coord.stats.pud_rows, sys.coord.stats.fallback_rows
+    );
+    match export {
+        Some(dir) => {
+            let snap = sys.metrics_snapshot();
+            let (trace, ddr, prom) = crate::obs::export::export_dir(
+                std::path::Path::new(dir),
+                sys.coord.obs.tracer.events(),
+                &snap,
+                &sys.coord.stats,
+            )?;
+            println!("replay        OK (DDR stream reproduces coordinator totals)");
+            println!("wrote         {}", trace.display());
+            println!("              {}", ddr.display());
+            println!("              {}", prom.display());
+            println!(
+                "open {} in https://ui.perfetto.dev (one lane per active bank)",
+                trace.display()
+            );
+        }
+        None => println!(
+            "(pass --export DIR to write trace.json / ddr_stream.txt / metrics.prom)"
+        ),
+    }
+    Ok(0)
+}
+
+fn cmd_stats(cfg: &Config) -> Result<i32> {
+    let mut sys = boot_from(cfg)?;
+    eprintln!("running mixed-op batch to populate the registry ...");
+    run_trace_workload(&mut sys, cfg.puma_pages.max(2))?;
+    let snap = sys.metrics_snapshot();
+    // stdout carries only the Prometheus text so it can be piped
+    print!("{}", crate::obs::export::prometheus(&snap));
+    Ok(0)
+}
+
 fn cmd_micro(
     cfg: &Config,
     micro: Micro,
@@ -541,14 +670,7 @@ fn cmd_micro(
     size: u64,
     batched: bool,
 ) -> Result<i32> {
-    let mut sys = System::boot(SystemConfig {
-        scheme: cfg.scheme.clone(),
-        huge_pages: cfg.huge_pages,
-        churn_rounds: cfg.churn_rounds,
-        seed: cfg.seed,
-        artifacts: cfg.artifacts.clone(),
-        ..Default::default()
-    })?;
+    let mut sys = boot_from(cfg)?;
     let runner = if batched {
         microbench::run_batched
     } else {
@@ -715,6 +837,18 @@ mod tests {
         .unwrap();
         assert_eq!(cli.flags["clauses"], "2");
         // clauses/alloc must not be rejected as unknown config keys
+        let cfg = build_config(&cli).unwrap();
+        assert_eq!(cfg.puma_pages, 4);
+    }
+
+    #[test]
+    fn trace_flags_are_command_specific_not_config() {
+        let cli = parse_args(&args(&[
+            "trace", "--export", "/tmp/t", "--puma_pages", "4",
+        ]))
+        .unwrap();
+        assert_eq!(cli.flags["export"], "/tmp/t");
+        // export must not be rejected as an unknown config key
         let cfg = build_config(&cli).unwrap();
         assert_eq!(cfg.puma_pages, 4);
     }

@@ -14,7 +14,7 @@
 
 use anyhow::{bail, Result};
 
-use crate::pud::exec::PudEngine;
+use crate::pud::exec::{ExecStats, PudEngine};
 use crate::pud::legality::RowPlan;
 use crate::runtime::{XlaRuntime, ROW_BYTES};
 
@@ -33,8 +33,9 @@ pub struct Executor {
 }
 
 impl Executor {
-    /// Run `schedule` over `plans`. Returns per-op simulated ns, in
-    /// batch order.
+    /// Run `schedule` over `plans`. Returns per-op [`ExecStats`], in
+    /// batch order (the dispatcher derives per-op simulated ns and
+    /// feeds the tracer's op slots from them).
     pub fn run(
         &mut self,
         engine: &mut PudEngine,
@@ -43,9 +44,9 @@ impl Executor {
         schedule: &Schedule,
         stats: &mut CoordStats,
         pipeline: &mut PipelineStats,
-    ) -> Result<Vec<f64>> {
+    ) -> Result<Vec<ExecStats>> {
         let scalar = matches!(fallback, FallbackMode::Scalar);
-        let mut per_op_ns = vec![0.0f64; plans.len()];
+        let mut per_op = vec![ExecStats::default(); plans.len()];
         for wave in &schedule.waves {
             // per-op functional execution + accounting, in submission
             // order (identical to N serial submits)
@@ -57,7 +58,7 @@ impl Executor {
                     .ops_fully_pud
                     .record(exec.fallback_rows == 0 && exec.pud_rows > 0);
                 stats.absorb_exec(&exec);
-                per_op_ns[i] = exec.total_ns();
+                per_op[i] = exec;
             }
             // coalesced fallback dispatches. Counted in both modes so
             // coalescing is measurable without compiled artifacts; in
@@ -74,7 +75,7 @@ impl Executor {
                 }
             }
         }
-        Ok(per_op_ns)
+        Ok(per_op)
     }
 }
 

@@ -19,6 +19,10 @@
 //! * [`dispatch`] — [`dispatch::Coordinator`]: `submit` / `submit_batch`.
 //! * [`batch`] — per-op grouping of fallback rows into runs.
 //! * [`stats`] — cumulative counters for reports.
+//!   The coordinator also owns the [`crate::obs::Obs`] bundle
+//!   (metrics registry + wave tracer): `submit_batch` records per-op
+//!   latency/wave-width histograms and, while the tracer is enabled,
+//!   one wave event per hazard wave (DESIGN.md §14).
 //! * [`system`] — [`system::System`]: the fully-assembled machine
 //!   (OS context + PUD engine + allocators + processes + runtime +
 //!   request queues), the top-level object examples and benches drive.

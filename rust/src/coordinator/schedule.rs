@@ -28,6 +28,7 @@ use rustc_hash::FxHashMap;
 
 use crate::dram::address::InterleaveScheme;
 use crate::dram::timing::TimingParams;
+use crate::obs::trace::BankLane;
 use crate::pud::isa::PudOp;
 
 use super::batch::fallback_runs;
@@ -77,6 +78,10 @@ pub struct Wave {
     /// Serial CPU time of the wave's fallback rows (incl. per-op
     /// dispatch overheads).
     pub fallback_ns: f64,
+    /// Per-bank PUD load of the wave (sorted by dense bank id) — the
+    /// same timelines `pud_ns` is the max of, kept for the tracer's
+    /// Perfetto lanes and utilization-spread metrics.
+    pub lanes: Vec<BankLane>,
 }
 
 impl Wave {
@@ -142,7 +147,7 @@ fn build_wave(
     let mut groups: Vec<DispatchGroup> = Vec::new();
     // op kind -> open coalescing group index
     let mut open: FxHashMap<PudOp, usize> = FxHashMap::default();
-    let mut bank_busy: FxHashMap<u32, f64> = FxHashMap::default();
+    let mut bank_busy: FxHashMap<u32, (f64, u64)> = FxHashMap::default();
     let mut pud_overhead = 0.0f64;
     let mut fallback_ns = 0.0f64;
 
@@ -155,7 +160,9 @@ fn build_wave(
         let mut has_fallback = false;
         for row in &plan.rows {
             if let Some(loc) = row.pud_dst() {
-                *bank_busy.entry(geometry.bank_id(loc)).or_insert(0.0) += row_cost;
+                let lane = bank_busy.entry(geometry.bank_id(loc)).or_insert((0.0, 0));
+                lane.0 += row_cost;
+                lane.1 += 1;
                 has_pud = true;
             } else {
                 let arity = row.fallback_arity().unwrap_or(0);
@@ -211,11 +218,18 @@ fn build_wave(
         }
     }
 
+    let mut lanes: Vec<BankLane> = bank_busy
+        .into_iter()
+        .map(|(bank, (busy_ns, rows))| BankLane { bank, rows, busy_ns })
+        .collect();
+    lanes.sort_by_key(|l| l.bank);
+
     Wave {
         op_indices: range.collect(),
         groups,
-        pud_ns: timing.bank_parallel_ns(bank_busy.into_values()) + pud_overhead,
+        pud_ns: timing.bank_parallel_ns(lanes.iter().map(|l| l.busy_ns)) + pud_overhead,
         fallback_ns,
+        lanes,
     }
 }
 
@@ -385,6 +399,30 @@ mod tests {
         );
         assert!(
             (elapsed - (t.rowclone_fpm_ns(1) + t.pud_dispatch_overhead)).abs() < 1e-9
+        );
+    }
+
+    #[test]
+    fn waves_carry_sorted_bank_lanes() {
+        let s = scheme();
+        let t = TimingParams::default();
+        // 2 rows on bank 3, 1 row on bank 0, 1 fallback row
+        let rows = vec![
+            pud_row(3, 8192),
+            pud_row(0, 8192),
+            pud_row(3, 8192),
+            fb_row(0x9000, 8192),
+        ];
+        let p = plan_of(PudOp::Copy, rows, (0x1000, 0x3000), (0x101000, 0x103000));
+        let sched = build(&s, &t, &[p]);
+        let lanes = &sched.waves[0].lanes;
+        assert_eq!(lanes.len(), 2, "fallback rows get no bank lane");
+        assert_eq!((lanes[0].bank, lanes[0].rows), (0, 1));
+        assert_eq!((lanes[1].bank, lanes[1].rows), (3, 2));
+        assert!((lanes[1].busy_ns - 2.0 * t.rowclone_fpm_ns(1)).abs() < 1e-9);
+        // pud_ns is the max lane plus the per-op dispatch overhead
+        assert!(
+            (sched.waves[0].pud_ns - (lanes[1].busy_ns + t.pud_dispatch_overhead)).abs() < 1e-9
         );
     }
 

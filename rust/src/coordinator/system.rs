@@ -12,8 +12,9 @@ use rustc_hash::FxHashMap;
 
 use crate::alloc::puma::{CompactReport, PumaAlloc};
 use crate::alloc::scratch::ScratchPool;
-use crate::alloc::traits::{Allocator, OsCtx};
+use crate::alloc::traits::{AllocStats, Allocator, OsCtx};
 use crate::dram::address::InterleaveScheme;
+use crate::obs::metrics::{CounterId, HistId, Snapshot};
 use crate::dram::device::DramDevice;
 use crate::dram::timing::TimingParams;
 use crate::os::process::{Pid, Process};
@@ -97,6 +98,45 @@ pub struct System {
     /// transposed form across kernels and sweep cells (transpose once,
     /// query many; see `pud::arith::colcache`).
     columns: ColumnCache,
+    /// Pre-registered handles into the coordinator's metrics registry
+    /// for the system-level metrics (allocation latency, hint
+    /// outcomes, cache and scratch traffic; DESIGN.md §14).
+    metric_ids: SysMetricIds,
+}
+
+/// Metric handles registered at boot for the System-owned paths.
+#[derive(Debug, Clone, Copy)]
+struct SysMetricIds {
+    alloc_sim_ns: HistId,
+    hint_missed: CounterId,
+    hint_colocated: CounterId,
+    program_hits: CounterId,
+    program_misses: CounterId,
+    scratch_leases: CounterId,
+    scratch_reuses: CounterId,
+}
+
+impl SysMetricIds {
+    fn register(reg: &mut crate::obs::metrics::Registry) -> Self {
+        SysMetricIds {
+            alloc_sim_ns: reg.hist("alloc/sim_ns"),
+            hint_missed: reg.counter("alloc/hint_missed"),
+            hint_colocated: reg.counter("alloc/hint_colocated"),
+            program_hits: reg.counter("cache/program_hits"),
+            program_misses: reg.counter("cache/program_misses"),
+            scratch_leases: reg.counter("scratch/leases"),
+            scratch_reuses: reg.counter("scratch/reuses"),
+        }
+    }
+}
+
+fn hit_ratio(hits: u64, misses: u64) -> f64 {
+    let total = hits + misses;
+    if total == 0 {
+        0.0
+    } else {
+        hits as f64 / total as f64
+    }
 }
 
 impl System {
@@ -112,15 +152,46 @@ impl System {
             Some(dir) => FallbackMode::Xla(XlaRuntime::load(dir)?),
             None => FallbackMode::Scalar,
         };
+        let mut coord = Coordinator::new(engine, fallback);
+        let metric_ids = SysMetricIds::register(&mut coord.obs.registry);
         Ok(Self {
             os,
-            coord: Coordinator::new(engine, fallback),
+            coord,
             processes: FxHashMap::default(),
             next_pid: 1,
             queued: FxHashMap::default(),
             programs: ProgramCache::new(),
             columns: ColumnCache::new(),
+            metric_ids,
         })
+    }
+
+    /// Snapshot the metrics registry with the cache-hit-rate gauges
+    /// refreshed from the program and column caches. This is what
+    /// `puma stats` and the Prometheus export render.
+    pub fn metrics_snapshot(&mut self) -> Snapshot {
+        let p = self.programs.stats;
+        let c = self.columns.stats;
+        let reg = &mut self.coord.obs.registry;
+        let g = reg.gauge("cache/program_hit_rate");
+        reg.set_gauge(g, hit_ratio(p.hits, p.misses));
+        let g = reg.gauge("cache/column_host_hit_rate");
+        reg.set_gauge(g, hit_ratio(c.host_hits, c.host_misses));
+        let g = reg.gauge("cache/column_resident_hit_rate");
+        reg.set_gauge(g, hit_ratio(c.resident_hits, c.resident_misses));
+        reg.snapshot()
+    }
+
+    /// Fold one allocation call's stat deltas into the registry.
+    fn record_alloc_metrics(&mut self, before: &AllocStats, after: &AllocStats) {
+        let ids = self.metric_ids;
+        let reg = &mut self.coord.obs.registry;
+        reg.observe_ns(ids.alloc_sim_ns, after.alloc_ns - before.alloc_ns);
+        reg.inc(ids.hint_missed, after.hint_missed - before.hint_missed);
+        reg.inc(
+            ids.hint_colocated,
+            after.hint_colocated - before.hint_colocated,
+        );
     }
 
     /// Hit/miss counters of the compiled-program cache.
@@ -136,7 +207,14 @@ impl System {
     /// into one submission without going through `run_arith_const`
     /// once per mask.
     pub fn program(&mut self, key: ProgramKey) -> (Arc<CompiledMulti>, bool) {
-        self.programs.get_or_compile(key)
+        let (program, hit) = self.programs.get_or_compile(key);
+        let id = if hit {
+            self.metric_ids.program_hits
+        } else {
+            self.metric_ids.program_misses
+        };
+        self.coord.obs.registry.inc(id, 1);
+        (program, hit)
     }
 
     /// Drop every cached compiled program (see `ProgramCache::clear`)
@@ -170,7 +248,10 @@ impl System {
         len: u64,
     ) -> Result<u64> {
         let proc = self.processes.get_mut(&pid).expect("live pid");
-        alloc.alloc(&mut self.os, proc, len)
+        let before = alloc.stats();
+        let va = alloc.alloc(&mut self.os, proc, len)?;
+        self.record_alloc_metrics(&before, &alloc.stats());
+        Ok(va)
     }
 
     /// Allocate co-located with `hint` (PUMA's pim_alloc_align; the
@@ -183,7 +264,10 @@ impl System {
         hint: u64,
     ) -> Result<u64> {
         let proc = self.processes.get_mut(&pid).expect("live pid");
-        alloc.alloc_align(&mut self.os, proc, len, hint)
+        let before = alloc.stats();
+        let va = alloc.alloc_align(&mut self.os, proc, len, hint)?;
+        self.record_alloc_metrics(&before, &alloc.stats());
+        Ok(va)
     }
 
     /// Allocate placed for bank-level spreading (shard `spread` of a
@@ -197,7 +281,10 @@ impl System {
         spread: u32,
     ) -> Result<u64> {
         let proc = self.processes.get_mut(&pid).expect("live pid");
-        alloc.alloc_spread(&mut self.os, proc, len, spread)
+        let before = alloc.stats();
+        let va = alloc.alloc_spread(&mut self.os, proc, len, spread)?;
+        self.record_alloc_metrics(&before, &alloc.stats());
+        Ok(va)
     }
 
     /// Free an allocation.
@@ -278,7 +365,13 @@ impl System {
         hint: Option<u64>,
     ) -> Result<()> {
         let proc = self.processes.get_mut(&pid).expect("live pid");
-        pool.ensure(&mut self.os, proc, alloc, n, len, hint)
+        let (leases0, reuses0) = (pool.leases, pool.reuses);
+        pool.ensure(&mut self.os, proc, alloc, n, len, hint)?;
+        let ids = self.metric_ids;
+        let reg = &mut self.coord.obs.registry;
+        reg.inc(ids.scratch_leases, pool.leases - leases0);
+        reg.inc(ids.scratch_reuses, pool.reuses - reuses0);
+        Ok(())
     }
 
     /// Return every buffer of `pool` to `alloc` (see
@@ -609,9 +702,7 @@ impl System {
             op.out_width(a.width()),
             dst.width()
         );
-        let (compiled, hit) = self
-            .programs
-            .get_or_compile(ProgramKey::Kernel(op, a.width()));
+        let (compiled, hit) = self.program(ProgramKey::Kernel(op, a.width()));
         let mut rep = self.run_multi(
             alloc,
             pid,
@@ -664,9 +755,7 @@ impl System {
             dst.width()
         );
         let rhs = rhs & arith::width_mask(a.width());
-        let (compiled, hit) = self
-            .programs
-            .get_or_compile(ProgramKey::KernelConst(op, a.width(), rhs));
+        let (compiled, hit) = self.program(ProgramKey::KernelConst(op, a.width(), rhs));
         let mut rep = self.run_multi(
             alloc,
             pid,
@@ -710,9 +799,7 @@ impl System {
             }
             return Ok((sum, None));
         };
-        let (compiled, hit) = self
-            .programs
-            .get_or_compile(ProgramKey::MaskPlanes(values.width()));
+        let (compiled, hit) = self.program(ProgramKey::MaskPlanes(values.width()));
         // lease the masked output planes and the program's scratch
         // from the same pool: slots [0, w) are dsts, the rest scratch
         let need = w + compiled.scratch_needed();
@@ -842,9 +929,7 @@ impl System {
             op.out_width(a.width()),
             dst.width()
         );
-        let (compiled, hit) = self
-            .programs
-            .get_or_compile(ProgramKey::Kernel(op, a.width()));
+        let (compiled, hit) = self.program(ProgramKey::Kernel(op, a.width()));
         let mut bindings = Vec::with_capacity(a.n_shards());
         for k in 0..a.n_shards() {
             let pa = a.shard(k);
@@ -914,9 +999,7 @@ impl System {
             dst.width()
         );
         let rhs = rhs & arith::width_mask(a.width());
-        let (compiled, hit) = self
-            .programs
-            .get_or_compile(ProgramKey::KernelConst(op, a.width(), rhs));
+        let (compiled, hit) = self.program(ProgramKey::KernelConst(op, a.width(), rhs));
         let mut bindings = Vec::with_capacity(a.n_shards());
         for k in 0..a.n_shards() {
             let pa = a.shard(k);
@@ -976,9 +1059,7 @@ impl System {
             values.elems(),
             values.n_shards()
         );
-        let (compiled, hit) = self
-            .programs
-            .get_or_compile(ProgramKey::MaskPlanes(values.width()));
+        let (compiled, hit) = self.program(ProgramKey::MaskPlanes(values.width()));
         let need = w + compiled.scratch_needed();
         let mut per_shard: Vec<Vec<BulkRequest>> =
             Vec::with_capacity(values.n_shards());
@@ -1207,6 +1288,41 @@ mod tests {
         );
         let want: Vec<u8> = va.iter().zip(&vb).map(|(x, y)| x & y).collect();
         assert_eq!(sys.read_virt(pid, c, len).unwrap(), want);
+    }
+
+    #[test]
+    fn registry_sees_alloc_latency_hint_outcomes_and_export_replays() {
+        let mut sys = small_system();
+        let pid = sys.spawn();
+        let row = sys.os.scheme.geometry.row_bytes as u64;
+        let mut puma = PumaAlloc::new(row, FitPolicy::WorstFit);
+        puma.pim_preallocate(&mut sys.os, 6).unwrap();
+        let len = 4 * row;
+        let a = sys.alloc(&mut puma, pid, len).unwrap();
+        let b = sys.alloc_align(&mut puma, pid, len, a).unwrap();
+        let c = sys.alloc_align(&mut puma, pid, len, a).unwrap();
+        sys.submit(pid, &BulkRequest::new(PudOp::And, c, vec![a, b], len))
+            .unwrap();
+
+        let snap = sys.metrics_snapshot();
+        let alloc_hist = snap.hist("alloc/sim_ns").unwrap();
+        assert_eq!(alloc_hist.count, 3, "three instrumented allocations");
+        assert!(alloc_hist.sum > 0, "allocation burned simulated time");
+        let st = puma.stats();
+        assert_eq!(
+            snap.counter("alloc/hint_colocated"),
+            Some(st.hint_colocated)
+        );
+        assert_eq!(snap.counter("alloc/hint_missed"), Some(st.hint_missed));
+        assert_eq!(
+            snap.hist("coord/op_sim_ns").unwrap().count,
+            sys.coord.stats.ops
+        );
+
+        // full-capture export replays byte-identically
+        let stream = crate::obs::export::ddr_stream(sys.coord.obs.tracer.events());
+        assert_eq!(sys.coord.obs.tracer.dropped, 0);
+        crate::obs::export::verify_replay(&stream, &sys.coord.stats).unwrap();
     }
 
     #[test]

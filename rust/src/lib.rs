@@ -23,6 +23,10 @@
 //!   (cached extent translation + legality), scheduled into hazard
 //!   waves with cross-op fallback coalescing and bank-parallel
 //!   timing, and executed on PUD or the CPU fallback (DESIGN.md §§2-4).
+//! * [`obs`] — observability: the metrics registry (counters, gauges,
+//!   log2 latency histograms), the wave-granularity sim-time tracer,
+//!   and the exporters (Perfetto JSON, replayable DDR command stream,
+//!   Prometheus text; DESIGN.md §14).
 //! * [`runtime`] — XLA/PJRT CPU runtime executing the AOT-compiled
 //!   JAX + Pallas kernels (`artifacts/*.hlo.txt`) for the fallback;
 //!   built against an inert stub unless the `xla-runtime` feature
@@ -40,6 +44,7 @@ pub mod cli;
 pub mod config;
 pub mod coordinator;
 pub mod dram;
+pub mod obs;
 pub mod os;
 pub mod proptest;
 pub mod pud;

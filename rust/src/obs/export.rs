@@ -1,0 +1,497 @@
+//! Exporters for the tracer ring and the metrics registry.
+//!
+//! Three formats (DESIGN.md §14):
+//!
+//! - **Chrome trace-event JSON** ([`chrome_trace`]) — loadable in
+//!   Perfetto / `chrome://tracing`. Each dense bank id is a lane
+//!   (`tid`) under the "PUD banks" process; each wave contributes one
+//!   duration event per active lane, plus a "host fallback" lane for
+//!   the wave's serialized CPU leg. Timestamps are sim-time µs.
+//! - **DDR-style command stream** ([`ddr_stream`]) — a flat text
+//!   record per wave/op with ACT/AAP/TRA counts expanded from the
+//!   `PudOp` cost table and `HOST` records for fallback legs
+//!   (ROADMAP item 3, PiDRAM-style). Floats are serialized with `{:?}`
+//!   so they round-trip bit-exactly; [`replay_ddr`] re-absorbs the
+//!   stream in submission order and reproduces the coordinator-work
+//!   subset of [`CoordStats`] *byte-identically* (verified by
+//!   [`verify_replay`]).
+//! - **Prometheus text dump** ([`prometheus`]) — counters, gauges, and
+//!   histogram summaries (p50/p90/p99) of a registry snapshot.
+
+use anyhow::{bail, Context, Result};
+
+use crate::coordinator::CoordStats;
+use crate::pud::isa::PudOp;
+use crate::util::stats::HitRate;
+
+use super::metrics::Snapshot;
+use super::trace::WaveEvent;
+
+/// Serialize an f64 so it parses back bit-exactly (`{:?}` emits the
+/// shortest representation that round-trips).
+fn f(v: f64) -> String {
+    format!("{v:?}")
+}
+
+// ---------------------------------------------------------------------
+// Chrome trace-event / Perfetto JSON
+// ---------------------------------------------------------------------
+
+const PID_BANKS: u32 = 1;
+const PID_HOST: u32 = 2;
+
+fn push_event(out: &mut String, first: &mut bool, body: &str) {
+    if !*first {
+        out.push(',');
+    }
+    *first = false;
+    out.push('\n');
+    out.push_str("    ");
+    out.push_str(body);
+}
+
+/// Render `events` as Chrome trace-event JSON (µs timestamps).
+pub fn chrome_trace(events: &[WaveEvent]) -> String {
+    let mut out = String::from("{\n  \"displayTimeUnit\": \"ns\",\n  \"traceEvents\": [");
+    let mut first = true;
+    push_event(
+        &mut out,
+        &mut first,
+        &format!(
+            "{{\"ph\":\"M\",\"name\":\"process_name\",\"pid\":{PID_BANKS},\"tid\":0,\
+             \"args\":{{\"name\":\"PUD banks (sim)\"}}}}"
+        ),
+    );
+    push_event(
+        &mut out,
+        &mut first,
+        &format!(
+            "{{\"ph\":\"M\",\"name\":\"process_name\",\"pid\":{PID_HOST},\"tid\":0,\
+             \"args\":{{\"name\":\"host fallback (sim)\"}}}}"
+        ),
+    );
+    push_event(
+        &mut out,
+        &mut first,
+        &format!(
+            "{{\"ph\":\"M\",\"name\":\"thread_name\",\"pid\":{PID_HOST},\"tid\":0,\
+             \"args\":{{\"name\":\"cpu\"}}}}"
+        ),
+    );
+    let mut named_lanes: Vec<u32> = Vec::new();
+    for ev in events {
+        for lane in &ev.lanes {
+            if !named_lanes.contains(&lane.bank) {
+                named_lanes.push(lane.bank);
+                push_event(
+                    &mut out,
+                    &mut first,
+                    &format!(
+                        "{{\"ph\":\"M\",\"name\":\"thread_name\",\"pid\":{PID_BANKS},\
+                         \"tid\":{},\"args\":{{\"name\":\"bank {}\"}}}}",
+                        lane.bank, lane.bank
+                    ),
+                );
+            }
+            push_event(
+                &mut out,
+                &mut first,
+                &format!(
+                    "{{\"ph\":\"X\",\"name\":\"wave {}\",\"pid\":{PID_BANKS},\"tid\":{},\
+                     \"ts\":{},\"dur\":{},\"args\":{{\"batch\":{},\"rows\":{}}}}}",
+                    ev.wave,
+                    lane.bank,
+                    f(ev.start_ns / 1000.0),
+                    f(lane.busy_ns / 1000.0),
+                    ev.batch,
+                    lane.rows
+                ),
+            );
+        }
+        if ev.fallback_ns > 0.0 {
+            let fb_rows: u64 = ev.ops.iter().map(|o| o.fallback_rows).sum();
+            push_event(
+                &mut out,
+                &mut first,
+                &format!(
+                    "{{\"ph\":\"X\",\"name\":\"wave {} fallback\",\"pid\":{PID_HOST},\
+                     \"tid\":0,\"ts\":{},\"dur\":{},\"args\":{{\"batch\":{},\"rows\":{}}}}}",
+                    ev.wave,
+                    f((ev.start_ns + ev.pud_ns) / 1000.0),
+                    f(ev.fallback_ns / 1000.0),
+                    ev.batch,
+                    fb_rows
+                ),
+            );
+        }
+    }
+    out.push_str("\n  ]\n}\n");
+    out
+}
+
+// ---------------------------------------------------------------------
+// DDR-style command stream + replay
+// ---------------------------------------------------------------------
+
+/// Render `events` as a flat DDR-style command stream. Command counts
+/// are aggregated per op slot (`n=` repeat counts) so the stream stays
+/// O(ops), not O(rows x AAPs); each `AAP` is two back-to-back `ACT`s,
+/// which is why `ACT n` is always twice `AAP n`.
+pub fn ddr_stream(events: &[WaveEvent]) -> String {
+    let mut out = String::from("# puma-ddr-stream v1\n");
+    for ev in events {
+        out.push_str(&format!(
+            "WAVE {} batch={} start_ns={} pud_ns={} fallback_ns={}\n",
+            ev.wave,
+            ev.batch,
+            f(ev.start_ns),
+            f(ev.pud_ns),
+            f(ev.fallback_ns)
+        ));
+        for slot in &ev.ops {
+            out.push_str(&format!(
+                "OP {} pud_rows={} fb_rows={} pud_bytes={} fb_bytes={} pud_ns={} fb_ns={}\n",
+                slot.op.kernel_name(),
+                slot.pud_rows,
+                slot.fallback_rows,
+                slot.pud_bytes,
+                slot.fallback_bytes,
+                f(slot.pud_ns),
+                f(slot.fallback_ns)
+            ));
+            let aaps = slot.op.aaps_per_row() * slot.pud_rows;
+            let tras = slot.op.tras_per_row() * slot.pud_rows;
+            if slot.pud_rows > 0 {
+                out.push_str(&format!("ACT n={} t={}\n", 2 * aaps, f(ev.start_ns)));
+                out.push_str(&format!("AAP n={} t={}\n", aaps, f(ev.start_ns)));
+                if tras > 0 {
+                    out.push_str(&format!("TRA n={} t={}\n", tras, f(ev.start_ns)));
+                }
+            }
+            if slot.fallback_rows > 0 {
+                out.push_str(&format!(
+                    "HOST rows={} bytes={} t={}\n",
+                    slot.fallback_rows,
+                    slot.fallback_bytes,
+                    f(ev.start_ns + ev.pud_ns)
+                ));
+            }
+        }
+    }
+    out
+}
+
+fn field<'a>(tokens: &[&'a str], key: &str) -> Result<&'a str> {
+    tokens
+        .iter()
+        .find_map(|t| t.strip_prefix(key).and_then(|r| r.strip_prefix('=')))
+        .with_context(|| format!("missing field {key}"))
+}
+
+fn op_by_kernel(name: &str) -> Result<PudOp> {
+    PudOp::ALL
+        .into_iter()
+        .find(|o| o.kernel_name() == name)
+        .with_context(|| format!("unknown op kernel {name:?}"))
+}
+
+/// Replay a [`ddr_stream`] back into the coordinator-work subset of
+/// [`CoordStats`]. Accumulation happens in stream order with the
+/// bit-exact parsed floats, so the result is byte-identical to the
+/// live stats (see [`coordinator_work`]). The AAP/TRA repeat counts
+/// are cross-checked against the `PudOp` cost table while replaying.
+pub fn replay_ddr(stream: &str) -> Result<CoordStats> {
+    let mut stats = CoordStats::default();
+    let mut line_no = 0usize;
+    let mut cur_op: Option<(PudOp, u64)> = None;
+    for line in stream.lines() {
+        line_no += 1;
+        let parse = |what: &str, v: &str| -> Result<u64> {
+            v.parse::<u64>()
+                .with_context(|| format!("line {line_no}: bad {what} {v:?}"))
+        };
+        let tokens: Vec<&str> = line.split_whitespace().collect();
+        match tokens.first().copied() {
+            Some("OP") => {
+                let op = op_by_kernel(tokens.get(1).copied().unwrap_or(""))
+                    .with_context(|| format!("line {line_no}"))?;
+                let pud_rows = parse("pud_rows", field(&tokens, "pud_rows")?)?;
+                let fb_rows = parse("fb_rows", field(&tokens, "fb_rows")?)?;
+                let pud_ns: f64 = field(&tokens, "pud_ns")?
+                    .parse()
+                    .with_context(|| format!("line {line_no}: bad pud_ns"))?;
+                let fb_ns: f64 = field(&tokens, "fb_ns")?
+                    .parse()
+                    .with_context(|| format!("line {line_no}: bad fb_ns"))?;
+                stats.ops += 1;
+                stats.ops_fully_pud.record(fb_rows == 0 && pud_rows > 0);
+                stats.pud_rows += pud_rows;
+                stats.fallback_rows += fb_rows;
+                stats.pud_bytes += parse("pud_bytes", field(&tokens, "pud_bytes")?)?;
+                stats.fallback_bytes += parse("fb_bytes", field(&tokens, "fb_bytes")?)?;
+                stats.pud_ns += pud_ns;
+                stats.fallback_ns += fb_ns;
+                cur_op = Some((op, pud_rows));
+            }
+            Some("AAP") => {
+                let (op, rows) =
+                    cur_op.with_context(|| format!("line {line_no}: AAP before OP"))?;
+                let n = parse("n", field(&tokens, "n")?)?;
+                let want = op.aaps_per_row() * rows;
+                if n != want {
+                    bail!("line {line_no}: AAP count {n} != {want} for {op:?} x{rows}");
+                }
+            }
+            Some("TRA") => {
+                let (op, rows) =
+                    cur_op.with_context(|| format!("line {line_no}: TRA before OP"))?;
+                let n = parse("n", field(&tokens, "n")?)?;
+                let want = op.tras_per_row() * rows;
+                if n != want {
+                    bail!("line {line_no}: TRA count {n} != {want} for {op:?} x{rows}");
+                }
+            }
+            Some("ACT") => {
+                let (op, rows) =
+                    cur_op.with_context(|| format!("line {line_no}: ACT before OP"))?;
+                let n = parse("n", field(&tokens, "n")?)?;
+                let want = 2 * op.aaps_per_row() * rows;
+                if n != want {
+                    bail!("line {line_no}: ACT count {n} != {want} for {op:?} x{rows}");
+                }
+            }
+            Some("WAVE") | Some("HOST") | Some("#") | None => {}
+            Some(other) => bail!("line {line_no}: unknown record {other:?}"),
+        }
+    }
+    Ok(stats)
+}
+
+/// The coordinator-work subset of `stats`: what the executor absorbed
+/// from `ExecStats`, with the allocation-side and dispatch-shape
+/// counters (`alloc_ns`, `xla_*`) zeroed — those never enter the
+/// command stream.
+pub fn coordinator_work(stats: &CoordStats) -> CoordStats {
+    CoordStats {
+        alloc_ns: 0.0,
+        xla_dispatches: 0,
+        xla_wall_ns: 0,
+        ..stats.clone()
+    }
+}
+
+/// Assert that replaying `stream` reproduces `stats` byte-identically
+/// (coordinator-work subset). Requires a complete capture: the tracer
+/// must have been enabled since the coordinator's stats were last
+/// zero, with no dropped events.
+pub fn verify_replay(stream: &str, stats: &CoordStats) -> Result<()> {
+    let replayed = replay_ddr(stream)?;
+    let want = coordinator_work(stats);
+    if replayed != want {
+        bail!(
+            "DDR replay does not reproduce CoordStats\n  replayed: {replayed:?}\n  \
+             expected: {want:?}"
+        );
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------
+// Prometheus-style text dump
+// ---------------------------------------------------------------------
+
+fn prom_name(name: &str) -> String {
+    let mut out = String::from("puma_");
+    for c in name.chars() {
+        out.push(if c.is_ascii_alphanumeric() { c } else { '_' });
+    }
+    out
+}
+
+/// Render a registry snapshot in the Prometheus text exposition
+/// format (histograms as summaries with p50/p90/p99 quantiles).
+pub fn prometheus(snap: &Snapshot) -> String {
+    let mut out = String::new();
+    for (name, v) in &snap.counters {
+        let n = prom_name(name);
+        out.push_str(&format!("# TYPE {n} counter\n{n} {v}\n"));
+    }
+    for (name, v) in &snap.gauges {
+        let n = prom_name(name);
+        out.push_str(&format!("# TYPE {n} gauge\n{n} {}\n", f(*v)));
+    }
+    for (name, h) in &snap.hists {
+        let n = prom_name(name);
+        out.push_str(&format!("# TYPE {n} summary\n"));
+        for (q, p) in [(0.5, h.p50()), (0.9, h.p90()), (0.99, h.p99())] {
+            out.push_str(&format!("{n}{{quantile=\"{q}\"}} {p}\n"));
+        }
+        out.push_str(&format!("{n}_sum {}\n{n}_count {}\n", h.sum, h.count));
+    }
+    out
+}
+
+/// Convenience used by `puma trace --export <dir>`: write the Chrome
+/// trace, the DDR stream, and the Prometheus dump into `dir` and
+/// verify the stream's replay against `stats`.
+pub fn export_dir(
+    dir: &std::path::Path,
+    events: &[WaveEvent],
+    snap: &Snapshot,
+    stats: &CoordStats,
+) -> Result<(std::path::PathBuf, std::path::PathBuf, std::path::PathBuf)> {
+    std::fs::create_dir_all(dir)
+        .with_context(|| format!("creating export dir {}", dir.display()))?;
+    let trace_path = dir.join("trace.json");
+    let ddr_path = dir.join("ddr_stream.txt");
+    let prom_path = dir.join("metrics.prom");
+    let stream = ddr_stream(events);
+    verify_replay(&stream, stats)?;
+    std::fs::write(&trace_path, chrome_trace(events))?;
+    std::fs::write(&ddr_path, stream)?;
+    std::fs::write(&prom_path, prometheus(snap))?;
+    Ok((trace_path, ddr_path, prom_path))
+}
+
+/// Rebuild the `ops_fully_pud` hit-rate a stream implies — exposed for
+/// tests that want to diff against a live [`HitRate`] directly.
+pub fn replayed_hit_rate(stream: &str) -> Result<HitRate> {
+    Ok(replay_ddr(stream)?.ops_fully_pud)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::trace::{BankLane, OpSlot, Tracer, WaveEvent};
+
+    fn slot(op: PudOp, pud_rows: u64, fb_rows: u64) -> OpSlot {
+        OpSlot {
+            op,
+            pud_rows,
+            fallback_rows: fb_rows,
+            pud_bytes: pud_rows * 8192,
+            fallback_bytes: fb_rows * 8192,
+            pud_ns: pud_rows as f64 * 360.0 + 0.1,
+            fallback_ns: fb_rows as f64 * 1365.333333,
+        }
+    }
+
+    fn sample_events() -> Vec<WaveEvent> {
+        let mut t = Tracer::new(16);
+        t.record(WaveEvent {
+            batch: 0,
+            wave: 0,
+            start_ns: 0.0,
+            pud_ns: 920.0,
+            fallback_ns: 1365.3,
+            lanes: vec![
+                BankLane {
+                    bank: 0,
+                    rows: 2,
+                    busy_ns: 720.0,
+                },
+                BankLane {
+                    bank: 5,
+                    rows: 1,
+                    busy_ns: 360.0,
+                },
+            ],
+            ops: vec![slot(PudOp::And, 2, 0), slot(PudOp::Copy, 1, 1)],
+        });
+        t.record(WaveEvent {
+            batch: 1,
+            wave: 0,
+            start_ns: 0.0,
+            pud_ns: 830.0,
+            fallback_ns: 0.0,
+            lanes: vec![BankLane {
+                bank: 5,
+                rows: 1,
+                busy_ns: 630.0,
+            }],
+            ops: vec![slot(PudOp::Xor, 1, 0)],
+        });
+        t.events().to_vec()
+    }
+
+    fn stats_of(events: &[WaveEvent]) -> CoordStats {
+        // absorb in submission order, exactly like the executor
+        let mut s = CoordStats::default();
+        for ev in events {
+            for o in &ev.ops {
+                s.ops += 1;
+                s.ops_fully_pud.record(o.fallback_rows == 0 && o.pud_rows > 0);
+                s.pud_rows += o.pud_rows;
+                s.fallback_rows += o.fallback_rows;
+                s.pud_bytes += o.pud_bytes;
+                s.fallback_bytes += o.fallback_bytes;
+                s.pud_ns += o.pud_ns;
+                s.fallback_ns += o.fallback_ns;
+            }
+        }
+        s
+    }
+
+    #[test]
+    fn ddr_replay_is_byte_identical() {
+        let events = sample_events();
+        let stream = ddr_stream(&events);
+        let stats = stats_of(&events);
+        verify_replay(&stream, &stats).unwrap();
+        // and the replay notices tampering
+        let tampered = stream.replace("pud_rows=2", "pud_rows=3");
+        assert!(verify_replay(&tampered, &stats).is_err());
+    }
+
+    #[test]
+    fn ddr_replay_checks_command_counts() {
+        let events = sample_events();
+        let stream = ddr_stream(&events);
+        // And = 4 AAPs/row, 2 rows -> AAP n=8; corrupt it
+        let bad = stream.replace("AAP n=8", "AAP n=7");
+        assert_ne!(bad, stream, "expected an AAP n=8 record to corrupt");
+        assert!(replay_ddr(&bad).is_err());
+    }
+
+    #[test]
+    fn ddr_replay_ignores_alloc_and_xla_counters() {
+        let events = sample_events();
+        let stream = ddr_stream(&events);
+        let mut stats = stats_of(&events);
+        stats.alloc_ns = 1234.5;
+        stats.xla_dispatches = 9;
+        stats.xla_wall_ns = 777;
+        verify_replay(&stream, &stats).unwrap();
+    }
+
+    #[test]
+    fn chrome_trace_has_a_lane_per_active_bank() {
+        let events = sample_events();
+        let json = chrome_trace(&events);
+        assert!(json.contains("\"traceEvents\""));
+        assert!(json.contains("\"name\":\"bank 0\""));
+        assert!(json.contains("\"name\":\"bank 5\""));
+        assert!(json.contains("\"name\":\"wave 0\""));
+        assert!(json.contains("fallback"));
+        // second wave starts after the first ends: (920+1365.3)/1000 µs
+        assert!(json.contains(&format!("\"ts\":{}", f((920.0 + 1365.3) / 1000.0))));
+    }
+
+    #[test]
+    fn prometheus_dump_renders_all_kinds() {
+        let mut reg = crate::obs::metrics::Registry::new();
+        let c = reg.counter("coord/ops");
+        let g = reg.gauge("cache/hit_rate");
+        let h = reg.hist("op/sim_ns");
+        reg.inc(c, 42);
+        reg.set_gauge(g, 0.75);
+        reg.observe(h, 100);
+        reg.observe(h, 200);
+        let text = prometheus(&reg.snapshot());
+        assert!(text.contains("# TYPE puma_coord_ops counter"));
+        assert!(text.contains("puma_coord_ops 42"));
+        assert!(text.contains("puma_cache_hit_rate 0.75"));
+        assert!(text.contains("puma_op_sim_ns{quantile=\"0.99\"}"));
+        assert!(text.contains("puma_op_sim_ns_count 2"));
+    }
+}

@@ -1,0 +1,347 @@
+//! Metrics registry: named counters, gauges, and log2-bucketed
+//! histograms with mergeable snapshots.
+//!
+//! Hot paths pre-register by name once and then record through integer
+//! id handles ([`CounterId`]/[`GaugeId`]/[`HistId`]) — a record is a
+//! `Vec` index plus an array increment, no string hashing — so the
+//! registry is cheap enough to stay on in every workload.
+
+/// Number of log2 buckets per histogram. Bucket 0 holds the value 0;
+/// bucket `k >= 1` holds `[2^(k-1), 2^k)`; the last bucket absorbs
+/// everything above its floor.
+pub const HIST_BUCKETS: usize = 64;
+
+/// Handle for a registered counter.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CounterId(usize);
+
+/// Handle for a registered gauge.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct GaugeId(usize);
+
+/// Handle for a registered histogram.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct HistId(usize);
+
+/// A log2-bucketed histogram of non-negative integer samples
+/// (simulated nanoseconds, row counts, ...). Percentile estimates are
+/// bucket upper bounds clamped to the observed max, so an estimate `e`
+/// for a true value `v` always satisfies `v <= e < 2 v` (exact for 0).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Hist {
+    pub buckets: [u64; HIST_BUCKETS],
+    pub count: u64,
+    pub sum: u64,
+    pub min: u64,
+    pub max: u64,
+}
+
+impl Default for Hist {
+    fn default() -> Self {
+        Hist {
+            buckets: [0; HIST_BUCKETS],
+            count: 0,
+            sum: 0,
+            min: u64::MAX,
+            max: 0,
+        }
+    }
+}
+
+impl Hist {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// The bucket index covering `v`.
+    pub fn bucket_index(v: u64) -> usize {
+        if v == 0 {
+            0
+        } else {
+            ((64 - v.leading_zeros()) as usize).min(HIST_BUCKETS - 1)
+        }
+    }
+
+    /// Inclusive upper bound of bucket `idx` (the percentile
+    /// representative before clamping to the observed max).
+    fn bucket_upper(idx: usize) -> u64 {
+        if idx == 0 {
+            0
+        } else if idx >= 63 {
+            u64::MAX
+        } else {
+            (1u64 << idx) - 1
+        }
+    }
+
+    pub fn record(&mut self, v: u64) {
+        self.buckets[Self::bucket_index(v)] += 1;
+        self.count += 1;
+        self.sum = self.sum.saturating_add(v);
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+    }
+
+    /// Record a simulated-ns latency (negative values clamp to 0).
+    pub fn record_ns(&mut self, ns: f64) {
+        self.record(ns.max(0.0) as u64);
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.count as f64
+        }
+    }
+
+    /// Nearest-rank percentile estimate (`p` in `[0, 100]`). Returns 0
+    /// on an empty histogram.
+    pub fn percentile(&self, p: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let rank = ((p / 100.0) * self.count as f64).ceil() as u64;
+        let rank = rank.clamp(1, self.count);
+        let mut seen = 0u64;
+        for (idx, &n) in self.buckets.iter().enumerate() {
+            seen += n;
+            if seen >= rank {
+                return Self::bucket_upper(idx).min(self.max).max(self.min);
+            }
+        }
+        self.max
+    }
+
+    pub fn p50(&self) -> u64 {
+        self.percentile(50.0)
+    }
+
+    pub fn p90(&self) -> u64 {
+        self.percentile(90.0)
+    }
+
+    pub fn p99(&self) -> u64 {
+        self.percentile(99.0)
+    }
+
+    /// Fold another histogram in. Bucket-wise addition, so merging is
+    /// associative and commutative (snapshots from shards can combine
+    /// in any order).
+    pub fn merge(&mut self, other: &Hist) {
+        for (b, o) in self.buckets.iter_mut().zip(other.buckets.iter()) {
+            *b += o;
+        }
+        self.count += other.count;
+        self.sum = self.sum.saturating_add(other.sum);
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+}
+
+/// A point-in-time, mergeable copy of a registry's contents.
+#[derive(Debug, Clone, Default)]
+pub struct Snapshot {
+    pub counters: Vec<(String, u64)>,
+    pub gauges: Vec<(String, f64)>,
+    pub hists: Vec<(String, Hist)>,
+}
+
+impl Snapshot {
+    /// Merge another snapshot in: counters add, histograms merge,
+    /// gauges take the other side's (latest-wins) value. Names absent
+    /// on one side are carried over.
+    pub fn merge(&mut self, other: &Snapshot) {
+        for (name, v) in &other.counters {
+            match self.counters.iter_mut().find(|(n, _)| n == name) {
+                Some((_, mine)) => *mine += v,
+                None => self.counters.push((name.clone(), *v)),
+            }
+        }
+        for (name, v) in &other.gauges {
+            match self.gauges.iter_mut().find(|(n, _)| n == name) {
+                Some((_, mine)) => *mine = *v,
+                None => self.gauges.push((name.clone(), *v)),
+            }
+        }
+        for (name, h) in &other.hists {
+            match self.hists.iter_mut().find(|(n, _)| n == name) {
+                Some((_, mine)) => mine.merge(h),
+                None => self.hists.push((name.clone(), h.clone())),
+            }
+        }
+    }
+
+    pub fn counter(&self, name: &str) -> Option<u64> {
+        self.counters.iter().find(|(n, _)| n == name).map(|(_, v)| *v)
+    }
+
+    pub fn gauge(&self, name: &str) -> Option<f64> {
+        self.gauges.iter().find(|(n, _)| n == name).map(|(_, v)| *v)
+    }
+
+    pub fn hist(&self, name: &str) -> Option<&Hist> {
+        self.hists.iter().find(|(n, _)| n == name).map(|(_, h)| h)
+    }
+}
+
+/// The registry proper. Registration (by name) is slow-path and
+/// idempotent; recording through the returned ids is O(1).
+#[derive(Debug, Default)]
+pub struct Registry {
+    counters: Vec<(String, u64)>,
+    gauges: Vec<(String, f64)>,
+    hists: Vec<(String, Hist)>,
+}
+
+impl Registry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Register (or find) a counter named `name`.
+    pub fn counter(&mut self, name: &str) -> CounterId {
+        if let Some(i) = self.counters.iter().position(|(n, _)| n == name) {
+            return CounterId(i);
+        }
+        self.counters.push((name.to_string(), 0));
+        CounterId(self.counters.len() - 1)
+    }
+
+    /// Register (or find) a gauge named `name`.
+    pub fn gauge(&mut self, name: &str) -> GaugeId {
+        if let Some(i) = self.gauges.iter().position(|(n, _)| n == name) {
+            return GaugeId(i);
+        }
+        self.gauges.push((name.to_string(), 0.0));
+        GaugeId(self.gauges.len() - 1)
+    }
+
+    /// Register (or find) a histogram named `name`.
+    pub fn hist(&mut self, name: &str) -> HistId {
+        if let Some(i) = self.hists.iter().position(|(n, _)| n == name) {
+            return HistId(i);
+        }
+        self.hists.push((name.to_string(), Hist::default()));
+        HistId(self.hists.len() - 1)
+    }
+
+    pub fn inc(&mut self, id: CounterId, by: u64) {
+        self.counters[id.0].1 += by;
+    }
+
+    pub fn set_gauge(&mut self, id: GaugeId, v: f64) {
+        self.gauges[id.0].1 = v;
+    }
+
+    pub fn observe(&mut self, id: HistId, v: u64) {
+        self.hists[id.0].1.record(v);
+    }
+
+    /// Observe a simulated-ns latency (negative clamps to 0).
+    pub fn observe_ns(&mut self, id: HistId, ns: f64) {
+        self.hists[id.0].1.record_ns(ns);
+    }
+
+    pub fn counter_value(&self, id: CounterId) -> u64 {
+        self.counters[id.0].1
+    }
+
+    pub fn gauge_value(&self, id: GaugeId) -> f64 {
+        self.gauges[id.0].1
+    }
+
+    pub fn hist_value(&self, id: HistId) -> &Hist {
+        &self.hists[id.0].1
+    }
+
+    /// Look a histogram up by name without registering it.
+    pub fn hist_by_name(&self, name: &str) -> Option<&Hist> {
+        self.hists.iter().find(|(n, _)| n == name).map(|(_, h)| h)
+    }
+
+    pub fn snapshot(&self) -> Snapshot {
+        Snapshot {
+            counters: self.counters.clone(),
+            gauges: self.gauges.clone(),
+            hists: self.hists.clone(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registration_is_idempotent_and_ids_are_stable() {
+        let mut r = Registry::new();
+        let a = r.counter("a");
+        let b = r.counter("b");
+        assert_eq!(r.counter("a"), a);
+        assert_ne!(a, b);
+        r.inc(a, 3);
+        r.inc(a, 2);
+        assert_eq!(r.counter_value(a), 5);
+        assert_eq!(r.counter_value(b), 0);
+    }
+
+    #[test]
+    fn hist_percentiles_bracket_the_true_value() {
+        let mut h = Hist::new();
+        for v in 1..=1000u64 {
+            h.record(v);
+        }
+        // True p50 of 1..=1000 is 500; the estimate must land in
+        // [500, 1000) by the factor-of-2 bucket guarantee.
+        let p50 = h.p50();
+        assert!((500..1000).contains(&p50), "p50 = {p50}");
+        let p99 = h.p99();
+        assert!((990..=1000).contains(&p99), "p99 = {p99}");
+        assert_eq!(h.count, 1000);
+        assert_eq!(h.min, 1);
+        assert_eq!(h.max, 1000);
+    }
+
+    #[test]
+    fn hist_zero_and_max_edges() {
+        let mut h = Hist::new();
+        h.record(0);
+        assert_eq!(h.p50(), 0);
+        h.record(u64::MAX);
+        assert_eq!(h.max, u64::MAX);
+        assert_eq!(h.p99(), u64::MAX);
+        assert_eq!(Hist::bucket_index(0), 0);
+        assert_eq!(Hist::bucket_index(1), 1);
+        assert_eq!(Hist::bucket_index(2), 2);
+        assert_eq!(Hist::bucket_index(3), 2);
+        assert_eq!(Hist::bucket_index(4), 3);
+        assert_eq!(Hist::bucket_index(u64::MAX), HIST_BUCKETS - 1);
+    }
+
+    #[test]
+    fn snapshot_merge_adds_counters_and_merges_hists() {
+        let mut r1 = Registry::new();
+        let c1 = r1.counter("ops");
+        let h1 = r1.hist("lat");
+        r1.inc(c1, 7);
+        r1.observe(h1, 10);
+        let mut r2 = Registry::new();
+        let c2 = r2.counter("ops");
+        let h2 = r2.hist("lat");
+        r2.inc(c2, 5);
+        r2.observe(h2, 1000);
+
+        let mut s = r1.snapshot();
+        s.merge(&r2.snapshot());
+        assert_eq!(s.counter("ops"), Some(12));
+        let h = s.hist("lat").unwrap();
+        assert_eq!(h.count, 2);
+        assert_eq!(h.min, 10);
+        assert_eq!(h.max, 1000);
+    }
+}

@@ -1,0 +1,68 @@
+//! Observability: metrics registry, sim-time span tracer, exporters.
+//!
+//! Three pieces (DESIGN.md §14):
+//!
+//! - [`metrics`] — named counters/gauges/log2-histograms behind integer
+//!   id handles, cheap enough to stay on in every workload. The
+//!   coordinator, allocator paths, program/column caches, and scratch
+//!   pools all record into one [`metrics::Registry`] owned by the
+//!   [`crate::coordinator::Coordinator`] (reachable as
+//!   `System::coord.obs`).
+//! - [`trace`] — a bounded ring of wave-granularity
+//!   [`trace::WaveEvent`]s capturing each hazard wave's per-bank lanes
+//!   and per-op `ExecStats` totals; O(waves) overhead, drop-counted
+//!   when full.
+//! - [`export`] — Chrome trace-event/Perfetto JSON (one lane per
+//!   active bank), a replayable DDR-style command stream whose replay
+//!   reproduces `CoordStats` totals byte-identically, and a
+//!   Prometheus-style text dump. Surfaced by `puma trace --export`
+//!   and `puma stats`.
+
+pub mod export;
+pub mod metrics;
+pub mod trace;
+
+use metrics::{HistId, Registry};
+use trace::Tracer;
+
+/// Pre-registered handles for the coordinator's own metrics.
+#[derive(Debug, Clone, Copy)]
+pub struct CoordMetricIds {
+    /// Per-op simulated latency (ns), across all batches.
+    pub op_sim_ns: HistId,
+    /// Ops per hazard wave (the scheduler's extracted width).
+    pub wave_ops: HistId,
+    /// Per-wave simulated makespan (ns).
+    pub wave_elapsed_ns: HistId,
+}
+
+/// The observability bundle the coordinator owns: one registry, one
+/// tracer, and the coordinator's pre-registered metric ids.
+#[derive(Debug)]
+pub struct Obs {
+    pub registry: Registry,
+    pub tracer: Tracer,
+    pub coord: CoordMetricIds,
+}
+
+impl Default for Obs {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Obs {
+    pub fn new() -> Self {
+        let mut registry = Registry::new();
+        let coord = CoordMetricIds {
+            op_sim_ns: registry.hist("coord/op_sim_ns"),
+            wave_ops: registry.hist("coord/wave_ops"),
+            wave_elapsed_ns: registry.hist("coord/wave_elapsed_ns"),
+        };
+        Obs {
+            registry,
+            tracer: Tracer::default(),
+            coord,
+        }
+    }
+}

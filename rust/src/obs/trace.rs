@@ -1,0 +1,227 @@
+//! Sim-time span tracer: a bounded ring of wave-granularity events.
+//!
+//! The coordinator records one [`WaveEvent`] per scheduled hazard wave
+//! — not per row — so tracing overhead is O(waves). Each event carries
+//! the wave's per-bank lanes (which banks burned how much sim time on
+//! how many rows) and one [`OpSlot`] per op with its `ExecStats`-
+//! derived totals, which is exactly enough to rebuild Perfetto
+//! timelines and the DDR command stream in `obs::export` without
+//! touching the hot path again.
+//!
+//! Capacity is bounded: once full, new events are *dropped* (newest-
+//! dropped, so the retained prefix stays contiguous from boot) and
+//! counted in [`Tracer::dropped`], so the sink can never distort what
+//! it measures by growing without bound.
+
+use crate::pud::isa::PudOp;
+
+/// One bank's share of a wave: `busy_ns` of PUD work over `rows` rows
+/// on dense bank id `bank` (see `DramGeometry::bank_id`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct BankLane {
+    pub bank: u32,
+    pub rows: u64,
+    pub busy_ns: f64,
+}
+
+/// One op's slot inside a wave, in submission order. The six totals
+/// mirror `pud::exec::ExecStats` field-for-field so a replay can
+/// re-absorb them into `CoordStats` byte-identically.
+#[derive(Debug, Clone, PartialEq)]
+pub struct OpSlot {
+    pub op: PudOp,
+    pub pud_rows: u64,
+    pub fallback_rows: u64,
+    pub pud_bytes: u64,
+    pub fallback_bytes: u64,
+    pub pud_ns: f64,
+    pub fallback_ns: f64,
+}
+
+/// One scheduled hazard wave on the sim-time axis.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WaveEvent {
+    /// Batch index (`PipelineStats::batches` at submission).
+    pub batch: u64,
+    /// Global wave index, aligned with `PipelineStats::waves`.
+    pub wave: u64,
+    /// Sim-time at which this wave begins (waves serialize).
+    pub start_ns: f64,
+    /// Bank-parallel PUD leg duration (incl. dispatch overhead).
+    pub pud_ns: f64,
+    /// Host fallback leg duration, serialized after the PUD leg.
+    pub fallback_ns: f64,
+    /// Per-bank PUD load, sorted by bank id.
+    pub lanes: Vec<BankLane>,
+    /// Per-op totals, in submission order.
+    pub ops: Vec<OpSlot>,
+}
+
+impl WaveEvent {
+    pub fn elapsed_ns(&self) -> f64 {
+        self.pud_ns + self.fallback_ns
+    }
+
+    pub fn end_ns(&self) -> f64 {
+        self.start_ns + self.elapsed_ns()
+    }
+}
+
+/// The bounded event sink.
+#[derive(Debug)]
+pub struct Tracer {
+    events: Vec<WaveEvent>,
+    capacity: usize,
+    enabled: bool,
+    /// Events rejected because the ring was full.
+    pub dropped: u64,
+    /// Total waves offered (recorded + dropped) — stays aligned with
+    /// `PipelineStats::waves` while the tracer is enabled.
+    pub total_waves: u64,
+    /// Sim-time cursor: end of the last recorded wave.
+    pub now_ns: f64,
+}
+
+/// Default ring capacity (waves, not rows — plenty for every workload
+/// in this repo; `puma trace` raises it explicitly).
+pub const DEFAULT_CAPACITY: usize = 4096;
+
+impl Default for Tracer {
+    fn default() -> Self {
+        Self::new(DEFAULT_CAPACITY)
+    }
+}
+
+impl Tracer {
+    pub fn new(capacity: usize) -> Self {
+        Tracer {
+            events: Vec::new(),
+            capacity,
+            enabled: true,
+            dropped: 0,
+            total_waves: 0,
+            now_ns: 0.0,
+        }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.enabled
+    }
+
+    /// Turn capture on/off. Disabling stops the coordinator from even
+    /// assembling events (the overhead-gate path in the bench).
+    pub fn set_enabled(&mut self, on: bool) {
+        self.enabled = on;
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Grow/shrink the ring bound. Existing events are kept (truncated
+    /// if over the new bound, counted as drops).
+    pub fn set_capacity(&mut self, capacity: usize) {
+        self.capacity = capacity;
+        if self.events.len() > capacity {
+            self.dropped += (self.events.len() - capacity) as u64;
+            self.events.truncate(capacity);
+        }
+    }
+
+    pub fn events(&self) -> &[WaveEvent] {
+        &self.events
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Offer a wave. The tracer assigns the global wave id, advances
+    /// the sim-time cursor, and either stores the event or counts a
+    /// drop when the ring is full.
+    pub fn record(&mut self, mut ev: WaveEvent) {
+        ev.wave = self.total_waves;
+        ev.start_ns = self.now_ns;
+        self.now_ns = ev.end_ns();
+        self.total_waves += 1;
+        if self.events.len() < self.capacity {
+            self.events.push(ev);
+        } else {
+            self.dropped += 1;
+        }
+    }
+
+    /// Reset events, drop/wave counters, and the sim-time cursor.
+    pub fn clear(&mut self) {
+        self.events.clear();
+        self.dropped = 0;
+        self.total_waves = 0;
+        self.now_ns = 0.0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(pud_ns: f64, fallback_ns: f64) -> WaveEvent {
+        WaveEvent {
+            batch: 0,
+            wave: 0,
+            start_ns: 0.0,
+            pud_ns,
+            fallback_ns,
+            lanes: vec![BankLane {
+                bank: 0,
+                rows: 1,
+                busy_ns: pud_ns,
+            }],
+            ops: Vec::new(),
+        }
+    }
+
+    #[test]
+    fn ring_drops_newest_and_counts() {
+        let mut t = Tracer::new(4);
+        for _ in 0..7 {
+            t.record(ev(10.0, 0.0));
+        }
+        assert_eq!(t.len(), 4);
+        assert_eq!(t.dropped, 3);
+        assert_eq!(t.total_waves, 7);
+        // The retained prefix is contiguous from wave 0.
+        let ids: Vec<u64> = t.events().iter().map(|e| e.wave).collect();
+        assert_eq!(ids, vec![0, 1, 2, 3]);
+        // The cursor kept advancing through the drops.
+        assert_eq!(t.now_ns, 70.0);
+    }
+
+    #[test]
+    fn cursor_serializes_waves() {
+        let mut t = Tracer::new(8);
+        t.record(ev(100.0, 50.0));
+        t.record(ev(25.0, 0.0));
+        let e = t.events();
+        assert_eq!(e[0].start_ns, 0.0);
+        assert_eq!(e[0].end_ns(), 150.0);
+        assert_eq!(e[1].start_ns, 150.0);
+        assert_eq!(e[1].end_ns(), 175.0);
+    }
+
+    #[test]
+    fn clear_resets_everything() {
+        let mut t = Tracer::new(1);
+        t.record(ev(1.0, 0.0));
+        t.record(ev(1.0, 0.0));
+        assert_eq!(t.dropped, 1);
+        t.clear();
+        assert!(t.is_empty());
+        assert_eq!(t.dropped, 0);
+        assert_eq!(t.total_waves, 0);
+        assert_eq!(t.now_ns, 0.0);
+    }
+}

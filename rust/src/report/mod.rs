@@ -279,6 +279,36 @@ pub fn churn_runs(
             fmt_ns(cmp.samples.iter().map(|s| s.compact_ns).sum()),
         ));
     }
+    // per-tenant latency percentiles, read back from the coordinator's
+    // metrics registry (churn/t{i}/alloc_ns, churn/t{i}/op_ns)
+    let mut lat = Table::new(vec![
+        "mode", "tenant", "allocs", "alloc-p50", "alloc-p99", "ops",
+        "op-p50", "op-p99",
+    ])
+    .left(0)
+    .left(1);
+    for (mode, r) in runs {
+        for t in &r.tenant_latency {
+            lat.row(vec![
+                mode.to_string(),
+                format!("t{}", t.tenant),
+                t.allocs.to_string(),
+                fmt_ns(t.alloc_p50_ns as f64),
+                fmt_ns(t.alloc_p99_ns as f64),
+                t.ops.to_string(),
+                fmt_ns(t.op_p50_ns as f64),
+                fmt_ns(t.op_p99_ns as f64),
+            ]);
+        }
+    }
+    let latency = if lat.is_empty() {
+        String::new()
+    } else {
+        format!(
+            "per-tenant latency (simulated, registry p50/p99):\n\n{}\n",
+            lat.render()
+        )
+    };
     let lifecycle = alloc_lifecycle(
         &runs
             .iter()
@@ -295,9 +325,10 @@ pub fn churn_runs(
             .collect::<Vec<_>>(),
     );
     Ok(format!(
-        "## Churn — allocation lifecycle under multi-tenant aging\n\n{}\n{}\n{}",
+        "## Churn — allocation lifecycle under multi-tenant aging\n\n{}\n{}\n{}{}",
         table.render(),
         summary,
+        latency,
         lifecycle
     ))
 }
@@ -774,6 +805,15 @@ mod tests {
             }],
             alloc: Default::default(),
             coord: Default::default(),
+            tenant_latency: vec![crate::workloads::churn::TenantLatency {
+                tenant: 0,
+                allocs: 6,
+                alloc_p50_ns: 120,
+                alloc_p99_ns: 480,
+                ops: 10,
+                op_p50_ns: 2_000,
+                op_p99_ns: 9_000,
+            }],
             steady_state_pud_fraction: pud,
             pages_returned: pages,
             final_occupancy: 0.1,
@@ -791,6 +831,9 @@ mod tests {
         assert!(s.contains("95.0%"));
         assert!(s.contains("compaction wins"));
         assert!(s.contains("puma (compact)"));
+        assert!(s.contains("per-tenant latency"));
+        assert!(s.contains("alloc-p99"));
+        assert!(s.contains("t0"));
         // off-only rendering works too
         let solo = churn(&off, None, None).unwrap();
         assert!(!solo.contains("compaction wins"));

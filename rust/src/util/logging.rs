@@ -1,52 +1,213 @@
-//! Tiny stderr logger backing the `log` facade.
+//! Tiny self-contained stderr logger (no external `log` crate — see
+//! the offline-dependency doctrine in `util/mod.rs`).
+//!
+//! The level comes from `PUMA_LOG` (`off|error|warn|info|debug|trace`,
+//! default `info`). Unrecognized values fall back to `info` but emit a
+//! one-time stderr warning instead of failing silently. Call sites use
+//! the [`crate::puma_warn!`]/[`crate::puma_info!`]/[`crate::puma_debug!`]
+//! macros, which stamp each line with `module_path!()` so the tracer,
+//! `puma stats`, and ad-hoc logging all share one naming scheme.
 
-use log::{Level, LevelFilter, Metadata, Record};
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::Once;
 
-struct StderrLogger {
-    level: Level,
+/// Log severities, most severe first. `Off` suppresses everything.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    Off = 0,
+    Error = 1,
+    Warn = 2,
+    Info = 3,
+    Debug = 4,
+    Trace = 5,
 }
 
-impl log::Log for StderrLogger {
-    fn enabled(&self, metadata: &Metadata) -> bool {
-        metadata.level() <= self.level
-    }
-
-    fn log(&self, record: &Record) {
-        if self.enabled(record.metadata()) {
-            eprintln!(
-                "[{:<5} {}] {}",
-                record.level(),
-                record.target(),
-                record.args()
-            );
+impl Level {
+    fn from_u8(v: u8) -> Level {
+        match v {
+            0 => Level::Off,
+            1 => Level::Error,
+            2 => Level::Warn,
+            4 => Level::Debug,
+            5 => Level::Trace,
+            _ => Level::Info,
         }
     }
 
-    fn flush(&self) {}
+    fn label(self) -> &'static str {
+        match self {
+            Level::Off => "OFF",
+            Level::Error => "ERROR",
+            Level::Warn => "WARN",
+            Level::Info => "INFO",
+            Level::Debug => "DEBUG",
+            Level::Trace => "TRACE",
+        }
+    }
 }
 
-/// Install the logger once; level from `PUMA_LOG` (error|warn|info|
-/// debug|trace), default `info`. Safe to call repeatedly.
-pub fn init() {
-    let level = match std::env::var("PUMA_LOG").as_deref() {
-        Ok("error") => Level::Error,
-        Ok("warn") => Level::Warn,
-        Ok("debug") => Level::Debug,
-        Ok("trace") => Level::Trace,
-        _ => Level::Info,
-    };
-    let logger = Box::new(StderrLogger { level });
-    if log::set_boxed_logger(logger).is_ok() {
-        log::set_max_level(LevelFilter::Trace);
+static MAX_LEVEL: AtomicU8 = AtomicU8::new(Level::Info as u8);
+static WARN_ONCE: Once = Once::new();
+
+/// Parse a `PUMA_LOG` value. `Ok` carries the level; `Err` carries the
+/// unrecognized input (caller decides how loudly to complain).
+pub fn parse_level(raw: &str) -> Result<Level, String> {
+    match raw.trim().to_ascii_lowercase().as_str() {
+        "off" | "none" | "0" => Ok(Level::Off),
+        "error" => Ok(Level::Error),
+        "warn" | "warning" => Ok(Level::Warn),
+        "info" | "" => Ok(Level::Info),
+        "debug" => Ok(Level::Debug),
+        "trace" => Ok(Level::Trace),
+        other => Err(other.to_string()),
     }
+}
+
+/// Resolve the level from an optional `PUMA_LOG` value without touching
+/// the process environment (pure; unit-testable). The second element is
+/// the one-time warning to emit for unrecognized input, if any.
+pub fn level_from_env(raw: Option<&str>) -> (Level, Option<String>) {
+    match raw {
+        None => (Level::Info, None),
+        Some(v) => match parse_level(v) {
+            Ok(level) => (level, None),
+            Err(bad) => (
+                Level::Info,
+                Some(format!(
+                    "[WARN  puma::util::logging] unrecognized PUMA_LOG={bad:?} \
+                     (expected off|error|warn|info|debug|trace); using info"
+                )),
+            ),
+        },
+    }
+}
+
+/// Install the level from `PUMA_LOG`. Safe to call repeatedly; the
+/// unrecognized-value warning prints at most once per process.
+pub fn init() {
+    let raw = std::env::var("PUMA_LOG").ok();
+    let (level, warning) = level_from_env(raw.as_deref());
+    if let Some(w) = warning {
+        WARN_ONCE.call_once(|| eprintln!("{w}"));
+    }
+    set_level(level);
+}
+
+/// Override the level programmatically (tests, CLI flags).
+pub fn set_level(level: Level) {
+    MAX_LEVEL.store(level as u8, Ordering::Relaxed);
+}
+
+/// The currently installed level.
+pub fn level() -> Level {
+    Level::from_u8(MAX_LEVEL.load(Ordering::Relaxed))
+}
+
+/// Would a record at `at` be emitted?
+pub fn enabled(at: Level) -> bool {
+    at != Level::Off && at <= level()
+}
+
+/// Emit one record. Prefer the `puma_*!` macros, which supply
+/// `module_path!()` as the target.
+pub fn log(at: Level, target: &str, args: std::fmt::Arguments<'_>) {
+    if enabled(at) {
+        eprintln!("[{:<5} {}] {}", at.label(), target, args);
+    }
+}
+
+/// Log at `Error` with the calling module as the target.
+#[macro_export]
+macro_rules! puma_error {
+    ($($arg:tt)*) => {
+        $crate::util::logging::log(
+            $crate::util::logging::Level::Error,
+            module_path!(),
+            format_args!($($arg)*),
+        )
+    };
+}
+
+/// Log at `Warn` with the calling module as the target.
+#[macro_export]
+macro_rules! puma_warn {
+    ($($arg:tt)*) => {
+        $crate::util::logging::log(
+            $crate::util::logging::Level::Warn,
+            module_path!(),
+            format_args!($($arg)*),
+        )
+    };
+}
+
+/// Log at `Info` with the calling module as the target.
+#[macro_export]
+macro_rules! puma_info {
+    ($($arg:tt)*) => {
+        $crate::util::logging::log(
+            $crate::util::logging::Level::Info,
+            module_path!(),
+            format_args!($($arg)*),
+        )
+    };
+}
+
+/// Log at `Debug` with the calling module as the target.
+#[macro_export]
+macro_rules! puma_debug {
+    ($($arg:tt)*) => {
+        $crate::util::logging::log(
+            $crate::util::logging::Level::Debug,
+            module_path!(),
+            format_args!($($arg)*),
+        )
+    };
 }
 
 #[cfg(test)]
 mod tests {
+    use super::*;
+
     #[test]
     fn init_is_idempotent() {
         super::init();
         super::init(); // second call must not panic
-        log::info!("logging smoke test");
+        crate::puma_info!("logging smoke test");
+    }
+
+    #[test]
+    fn recognized_levels_parse() {
+        assert_eq!(parse_level("off"), Ok(Level::Off));
+        assert_eq!(parse_level("ERROR"), Ok(Level::Error));
+        assert_eq!(parse_level(" warn "), Ok(Level::Warn));
+        assert_eq!(parse_level("info"), Ok(Level::Info));
+        assert_eq!(parse_level("debug"), Ok(Level::Debug));
+        assert_eq!(parse_level("trace"), Ok(Level::Trace));
+    }
+
+    #[test]
+    fn unrecognized_value_warns_and_falls_back_to_info() {
+        let (level, warning) = level_from_env(Some("verbose"));
+        assert_eq!(level, Level::Info);
+        let w = warning.expect("unrecognized value must produce a warning");
+        assert!(w.contains("verbose"), "{w}");
+        assert!(w.contains("PUMA_LOG"), "{w}");
+    }
+
+    #[test]
+    fn off_suppresses_everything() {
+        let (level, warning) = level_from_env(Some("off"));
+        assert_eq!(level, Level::Off);
+        assert!(warning.is_none());
+        let prev = super::level();
+        set_level(Level::Off);
+        assert!(!enabled(Level::Error));
+        assert!(!enabled(Level::Off));
+        set_level(prev);
+    }
+
+    #[test]
+    fn unset_env_is_plain_info() {
+        assert_eq!(level_from_env(None), (Level::Info, None));
     }
 }

@@ -110,12 +110,30 @@ pub struct EpochSample {
     pub compact_ns: f64,
 }
 
+/// Per-tenant latency digest, read back from the coordinator's metrics
+/// registry (`churn/t{i}/alloc_ns` and `churn/t{i}/op_ns`; DESIGN.md
+/// §14). Simulated nanoseconds, so the digest is deterministic.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TenantLatency {
+    pub tenant: usize,
+    /// Successful allocations this tenant made.
+    pub allocs: u64,
+    pub alloc_p50_ns: u64,
+    pub alloc_p99_ns: u64,
+    /// Workload ops flushed for this tenant.
+    pub ops: u64,
+    pub op_p50_ns: u64,
+    pub op_p99_ns: u64,
+}
+
 /// Result of one churn run.
 #[derive(Debug, Clone)]
 pub struct ChurnResult {
     pub samples: Vec<EpochSample>,
     pub alloc: AllocStats,
     pub coord: CoordStats,
+    /// Per-tenant alloc/op latency percentiles (one entry per tenant).
+    pub tenant_latency: Vec<TenantLatency>,
     /// Mean workload-op PUD-row fraction over the last half of the
     /// epochs — the paper-metric the compaction comparison is about.
     pub steady_state_pud_fraction: f64,
@@ -142,6 +160,16 @@ pub fn run(scheme: InterleaveScheme, cfg: &ChurnConfig) -> Result<ChurnResult> {
     let mut puma = PumaAlloc::new(row, FitPolicy::WorstFit);
     puma.pim_preallocate(&mut sys.os, cfg.puma_pages)?;
     let pids: Vec<Pid> = (0..cfg.tenants).map(|_| sys.spawn()).collect();
+    // per-tenant latency histograms, registered once and recorded by id
+    let (alloc_h, op_h): (Vec<_>, Vec<_>) = (0..cfg.tenants)
+        .map(|ti| {
+            let reg = &mut sys.coord.obs.registry;
+            (
+                reg.hist(&format!("churn/t{ti}/alloc_ns")),
+                reg.hist(&format!("churn/t{ti}/op_ns")),
+            )
+        })
+        .unzip();
     let mut rng = Pcg64::new(cfg.seed ^ 0x5EED_CAFE);
     let ops = [PudOp::And, PudOp::Or, PudOp::Xor];
 
@@ -166,18 +194,26 @@ pub fn run(scheme: InterleaveScheme, cfg: &ChurnConfig) -> Result<ChurnResult> {
             }
             let rows = rng.range(4, max_rows);
             let len = rows * row;
-            let pid = pids[tenant_rr % pids.len()];
+            let ti = tenant_rr % pids.len();
+            let pid = pids[ti];
             tenant_rr += 1;
+            let t0 = puma.stats().alloc_ns;
             let Ok(a) = sys.alloc(&mut puma, pid, len) else { break };
+            let t1 = puma.stats().alloc_ns;
+            sys.coord.obs.registry.observe_ns(alloc_h[ti], t1 - t0);
             let Ok(b) = sys.alloc_align(&mut puma, pid, len, a) else {
                 sys.free(&mut puma, pid, a)?;
                 break;
             };
+            let t2 = puma.stats().alloc_ns;
+            sys.coord.obs.registry.observe_ns(alloc_h[ti], t2 - t1);
             let Ok(c) = sys.alloc_align(&mut puma, pid, len, a) else {
                 sys.free(&mut puma, pid, b)?;
                 sys.free(&mut puma, pid, a)?;
                 break;
             };
+            let t3 = puma.stats().alloc_ns;
+            sys.coord.obs.registry.observe_ns(alloc_h[ti], t3 - t2);
             let mut buf = vec![0u8; len as usize];
             rng.fill_bytes(&mut buf);
             sys.write_virt(pid, a, &buf)?;
@@ -191,14 +227,18 @@ pub fn run(scheme: InterleaveScheme, cfg: &ChurnConfig) -> Result<ChurnResult> {
         let pud_before = sys.coord.stats.pud_rows;
         let fb_before = sys.coord.stats.fallback_rows;
         let mut op_ns = 0.0;
-        for pid in &pids {
+        for (ti, pid) in pids.iter().enumerate() {
             for g in live.iter().filter(|g| g.pid == *pid) {
                 for k in 0..cfg.ops_per_group {
                     let op = ops[(epoch + k) % ops.len()];
                     sys.enqueue(*pid, BulkRequest::new(op, g.c, vec![g.a, g.b], g.len));
                 }
             }
-            op_ns += sys.flush(*pid)?.total_ns;
+            let report = sys.flush(*pid)?;
+            for &ns in &report.per_op_ns {
+                sys.coord.obs.registry.observe_ns(op_h[ti], ns);
+            }
+            op_ns += report.total_ns;
         }
         let dp = sys.coord.stats.pud_rows - pud_before;
         let df = sys.coord.stats.fallback_rows - fb_before;
@@ -263,10 +303,27 @@ pub fn run(scheme: InterleaveScheme, cfg: &ChurnConfig) -> Result<ChurnResult> {
         .map(|s| s.op_pud_fraction)
         .sum::<f64>()
         / half.max(1) as f64;
+    let tenant_latency: Vec<TenantLatency> = (0..cfg.tenants)
+        .map(|ti| {
+            let reg = &sys.coord.obs.registry;
+            let a = reg.hist_value(alloc_h[ti]);
+            let o = reg.hist_value(op_h[ti]);
+            TenantLatency {
+                tenant: ti,
+                allocs: a.count,
+                alloc_p50_ns: a.p50(),
+                alloc_p99_ns: a.p99(),
+                ops: o.count,
+                op_p50_ns: o.p50(),
+                op_p99_ns: o.p99(),
+            }
+        })
+        .collect();
     Ok(ChurnResult {
         steady_state_pud_fraction: steady,
         alloc: puma.stats(),
         coord: sys.coord.stats.clone(),
+        tenant_latency,
         pages_returned: puma.stats().pages_reclaimed,
         final_occupancy: puma.occupancy(),
         final_pool_available: sys.os.pool.available(),
@@ -314,6 +371,30 @@ mod tests {
         );
         // the fill phase drives the pool to near-exhaustion
         assert!(result.samples.iter().any(|s| s.peak_occupancy > 0.9));
+    }
+
+    #[test]
+    fn per_tenant_latency_digests_are_populated_and_deterministic() {
+        let cfg = ChurnConfig {
+            epochs: 3,
+            ..Default::default()
+        };
+        let x = run(small_scheme(), &cfg).unwrap();
+        let y = run(small_scheme(), &cfg).unwrap();
+        assert_eq!(x.tenant_latency.len(), cfg.tenants);
+        // simulated time, so the digest replays exactly
+        assert_eq!(x.tenant_latency, y.tenant_latency);
+        let recorded: u64 = x.tenant_latency.iter().map(|t| t.allocs).sum();
+        assert!(recorded > 0);
+        // AllocStats counts failed fill-phase attempts too, so the
+        // per-tenant histograms (successes only) can only undershoot
+        assert!(recorded <= x.alloc.allocs, "{recorded} vs {}", x.alloc.allocs);
+        for t in &x.tenant_latency {
+            assert!(t.ops > 0, "tenant {} ran no ops", t.tenant);
+            assert!(t.alloc_p50_ns <= t.alloc_p99_ns);
+            assert!(t.op_p50_ns <= t.op_p99_ns);
+            assert!(t.op_p99_ns > 0);
+        }
     }
 
     #[test]

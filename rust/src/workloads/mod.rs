@@ -32,5 +32,5 @@ pub mod setops;
 pub mod sweep;
 pub mod trace;
 
-pub use churn::{ChurnConfig, ChurnResult, EpochSample};
+pub use churn::{ChurnConfig, ChurnResult, EpochSample, TenantLatency};
 pub use microbench::{AllocatorKind, Micro, MicrobenchResult};

@@ -1,0 +1,256 @@
+//! Properties of the observability layer (DESIGN.md §14):
+//!
+//! * histogram merging is associative and commutative, and percentile
+//!   estimates bracket the true nearest-rank value within the log2
+//!   factor-of-2 guarantee (exact for 0 and for single-sample hists);
+//! * the tracer ring drops excess waves and accounts for every one of
+//!   them;
+//! * a live trace capture agrees with `PipelineStats` wave counts,
+//!   names only real banks, and its DDR stream replays back to the
+//!   coordinator's exact totals.
+
+use puma::alloc::puma::{FitPolicy, PumaAlloc};
+use puma::assert_prop;
+use puma::coordinator::system::{System, SystemConfig};
+use puma::dram::address::InterleaveScheme;
+use puma::dram::geometry::DramGeometry;
+use puma::obs::export;
+use puma::obs::metrics::Hist;
+use puma::obs::trace::{Tracer, WaveEvent};
+use puma::proptest::{self, Gen};
+use puma::pud::isa::{BulkRequest, PudOp};
+
+fn gen_samples(g: &mut Gen) -> Vec<u64> {
+    let n = g.usize(1..64);
+    (0..n)
+        .map(|_| {
+            // mix magnitudes so several buckets populate
+            let shift = g.usize(0..40);
+            g.u64(0..1024) << shift
+        })
+        .collect()
+}
+
+fn hist_of(samples: &[u64]) -> Hist {
+    let mut h = Hist::new();
+    for &v in samples {
+        h.record(v);
+    }
+    h
+}
+
+#[test]
+fn hist_merge_is_associative_and_commutative() {
+    proptest::check_cases("hist merge algebra", 64, |g| {
+        let (a, b, c) = (gen_samples(g), gen_samples(g), gen_samples(g));
+        let (ha, hb, hc) = (hist_of(&a), hist_of(&b), hist_of(&c));
+
+        let mut ab_c = ha.clone();
+        ab_c.merge(&hb);
+        ab_c.merge(&hc);
+        let mut bc = hb.clone();
+        bc.merge(&hc);
+        let mut a_bc = ha.clone();
+        a_bc.merge(&bc);
+        assert_prop!(ab_c == a_bc, "merge must be associative");
+
+        let mut ab = ha.clone();
+        ab.merge(&hb);
+        let mut ba = hb.clone();
+        ba.merge(&ha);
+        assert_prop!(ab == ba, "merge must be commutative");
+
+        // merged hist == hist of concatenated samples
+        let mut all = a.clone();
+        all.extend_from_slice(&b);
+        assert_prop!(ab == hist_of(&all));
+    });
+}
+
+#[test]
+fn hist_percentiles_bracket_the_sorted_reference() {
+    proptest::check_cases("hist percentile bounds", 64, |g| {
+        let samples = gen_samples(g);
+        let h = hist_of(&samples);
+        let mut sorted = samples.clone();
+        sorted.sort_unstable();
+        for p in [50.0, 90.0, 99.0] {
+            let rank = ((p / 100.0) * sorted.len() as f64).ceil() as usize;
+            let truth = sorted[rank.clamp(1, sorted.len()) - 1];
+            let est = h.percentile(p);
+            assert_prop!(
+                est >= truth,
+                "p{p}: estimate {est} under true value {truth}"
+            );
+            if truth == 0 {
+                assert_prop!(est == 0, "p{p}: zero must be exact");
+            } else {
+                assert_prop!(
+                    est < 2 * truth.max(1),
+                    "p{p}: estimate {est} outside [v, 2v) for v={truth}"
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn hist_bucket_boundaries_and_singletons_are_exact() {
+    // log2 bucket edges: 2^(k-1) and 2^k - 1 land in bucket k
+    for k in 1..63u32 {
+        let lo = 1u64 << (k - 1);
+        let hi = (1u64 << k) - 1;
+        assert_eq!(Hist::bucket_index(lo), k as usize, "lower edge of {k}");
+        assert_eq!(Hist::bucket_index(hi), k as usize, "upper edge of {k}");
+    }
+    // a single-sample hist reports that sample exactly at every
+    // percentile (the min/max clamp collapses the bucket range)
+    proptest::check_cases("singleton hists are exact", 64, |g| {
+        let v = g.u64(0..u64::MAX);
+        let h = hist_of(&[v]);
+        for p in [1.0, 50.0, 99.0, 100.0] {
+            assert_prop!(h.percentile(p) == v, "v={v} p={p}");
+        }
+    });
+}
+
+#[test]
+fn tracer_ring_accounts_for_every_wave() {
+    proptest::check_cases("ring overflow accounting", 64, |g| {
+        let capacity = g.usize(1..16);
+        let n = g.usize(0..48);
+        let mut t = Tracer::new(capacity);
+        for _ in 0..n {
+            t.record(WaveEvent {
+                batch: 0,
+                wave: 0,
+                start_ns: 0.0,
+                pud_ns: g.u64(1..1_000) as f64,
+                fallback_ns: 0.0,
+                lanes: vec![],
+                ops: vec![],
+            });
+        }
+        assert_prop!(t.len() == n.min(capacity), "kept = min(n, capacity)");
+        assert_prop!(
+            t.dropped == n.saturating_sub(capacity) as u64,
+            "dropped = overflow (n={n} cap={capacity} dropped={})",
+            t.dropped
+        );
+        assert_prop!(t.total_waves == n as u64);
+        assert_prop!(t.len() as u64 + t.dropped == t.total_waves);
+        // the ring keeps the oldest waves, ids assigned in order
+        for (i, ev) in t.events().iter().enumerate() {
+            assert_prop!(ev.wave == i as u64);
+        }
+        // the sim-time cursor advanced over every wave, kept or not,
+        // so it can never run behind the kept events
+        let kept_ns: f64 =
+            t.events().iter().map(WaveEvent::elapsed_ns).sum();
+        assert_prop!(t.now_ns >= kept_ns);
+    });
+}
+
+fn boot() -> System {
+    let scheme = InterleaveScheme::row_major(DramGeometry::small()); // 64 MiB
+    System::boot(SystemConfig {
+        scheme,
+        huge_pages: 12,
+        churn_rounds: 500,
+        seed: 0x0B5E55ED,
+        artifacts: None,
+        ..Default::default()
+    })
+    .unwrap()
+}
+
+#[test]
+fn live_capture_matches_pipeline_and_replays() {
+    proptest::check_cases("trace capture vs pipeline", 8, |g| {
+        let mut sys = boot();
+        sys.coord.obs.tracer.set_enabled(true);
+        let pid = sys.spawn();
+        let row = sys.os.scheme.geometry.row_bytes as u64;
+        let mut puma = PumaAlloc::new(row, FitPolicy::WorstFit);
+        puma.pim_preallocate(&mut sys.os, 8).unwrap();
+
+        let nbufs = g.usize(3..6);
+        let mut vas = Vec::with_capacity(nbufs);
+        let mut lens = Vec::with_capacity(nbufs);
+        let mut hint = None;
+        for i in 0..nbufs {
+            // some ragged lengths so fallback rows appear too
+            let len = g.u64(1..5) * row
+                + if g.bool() { g.u64(1..row) } else { 0 };
+            let va = match hint {
+                Some(h) => sys.alloc_align(&mut puma, pid, len, h).unwrap(),
+                None => sys.alloc(&mut puma, pid, len).unwrap(),
+            };
+            hint.get_or_insert(va);
+            let data: Vec<u8> =
+                (0..len).map(|j| ((i as u64 * 197 + j) % 253) as u8).collect();
+            sys.write_virt(pid, va, &data).unwrap();
+            vas.push(va);
+            lens.push(len);
+        }
+
+        let nops = g.usize(2..8);
+        for _ in 0..nops {
+            let op = *g.choose(&PudOp::ALL);
+            let dst = g.usize(0..nbufs);
+            let srcs: Vec<usize> =
+                (0..op.arity()).map(|_| g.usize(0..nbufs)).collect();
+            let max_len = srcs
+                .iter()
+                .chain(std::iter::once(&dst))
+                .map(|&i| lens[i])
+                .min()
+                .unwrap();
+            let len = if g.bool() { max_len } else { g.u64(1..max_len + 1) };
+            sys.enqueue(
+                pid,
+                BulkRequest::new(op, vas[dst], srcs.iter().map(|&i| vas[i]).collect(), len),
+            );
+        }
+        sys.flush(pid).unwrap();
+
+        let tracer = &sys.coord.obs.tracer;
+        let p = &sys.coord.pipeline;
+        assert_prop!(
+            tracer.len() as u64 + tracer.dropped == p.waves,
+            "every pipeline wave is traced or counted as dropped"
+        );
+        assert_prop!(tracer.total_waves == p.waves);
+        let banks = sys.os.scheme.geometry.total_banks();
+        let mut slot_ops = 0u64;
+        for (i, ev) in tracer.events().iter().enumerate() {
+            assert_prop!(ev.wave == i as u64, "waves serialize in order");
+            assert_prop!(!ev.ops.is_empty(), "no empty waves");
+            slot_ops += ev.ops.len() as u64;
+            for lane in &ev.lanes {
+                assert_prop!(
+                    lane.bank < banks,
+                    "lane bank {} out of range {banks}",
+                    lane.bank
+                );
+                assert_prop!(lane.rows > 0 && lane.busy_ns > 0.0);
+            }
+        }
+        assert_prop!(slot_ops == sys.coord.stats.ops, "one slot per op");
+
+        // the DDR stream replays to the coordinator's exact totals
+        let stream = export::ddr_stream(tracer.events());
+        export::verify_replay(&stream, &sys.coord.stats).unwrap();
+
+        // the Chrome trace is well-formed enough for Perfetto: a
+        // traceEvents array naming only real banks
+        let json = export::chrome_trace(tracer.events());
+        assert_prop!(json.contains("\"traceEvents\""));
+        for b in banks..banks + 4 {
+            assert_prop!(
+                !json.contains(&format!("\"bank {b}\"")),
+                "phantom bank {b} lane"
+            );
+        }
+    });
+}

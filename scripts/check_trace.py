@@ -1,0 +1,113 @@
+#!/usr/bin/env python3
+"""Validate a `puma trace --export` Chrome trace (trace.json) without
+loading it into Perfetto: structural checks CI can run headlessly.
+
+Checks (stdlib only, mirrors DESIGN.md §14's lane mapping):
+
+* the file is JSON with a non-empty `traceEvents` array;
+* every duration (`ph == "X"`) event carries numeric `ts`/`dur` >= 0;
+* within each lane (pid, tid), events sorted by `ts` never overlap —
+  waves serialize, so `ts[i] + dur[i] <= ts[i+1]` up to a small
+  floating-point epsilon (timestamps are ns scaled to µs);
+* PUD lanes (`process_name == "PUD banks (sim)"`) number at most
+  --banks — one lane per *active* bank, never a phantom bank;
+* the host-fallback process contributes at most one lane.
+
+Usage:
+  python3 scripts/check_trace.py out/trace/trace.json [--banks 16]
+"""
+
+import argparse
+import json
+import sys
+from collections import defaultdict
+
+# ts/dur are ns/1000; f64 formatting keeps ~15 significant digits, so
+# adjacent waves can disagree by rounding dust, never by a real gap
+EPSILON_US = 1e-3
+
+
+def fail(msg):
+    print(f"check_trace: FAIL: {msg}", file=sys.stderr)
+    sys.exit(1)
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("trace", help="path to trace.json")
+    ap.add_argument(
+        "--banks",
+        type=int,
+        default=16,
+        help="geometry bank count upper-bounding the PUD lane count",
+    )
+    args = ap.parse_args()
+
+    with open(args.trace) as f:
+        doc = json.load(f)
+
+    events = doc.get("traceEvents")
+    if not isinstance(events, list) or not events:
+        fail("traceEvents missing or empty")
+
+    # metadata: process/thread names
+    process_names = {}
+    for ev in events:
+        if ev.get("ph") == "M" and ev.get("name") == "process_name":
+            process_names[ev["pid"]] = ev["args"]["name"]
+
+    lanes = defaultdict(list)  # (pid, tid) -> [(ts, dur)]
+    for ev in events:
+        if ev.get("ph") != "X":
+            continue
+        ts, dur = ev.get("ts"), ev.get("dur")
+        if not isinstance(ts, (int, float)) or not isinstance(
+            dur, (int, float)
+        ):
+            fail(f"non-numeric ts/dur in {ev!r}")
+        if ts < 0 or dur < 0:
+            fail(f"negative ts/dur in {ev!r}")
+        lanes[(ev["pid"], ev["tid"])].append((ts, dur))
+
+    if not lanes:
+        fail("no duration events")
+
+    for (pid, tid), spans in lanes.items():
+        spans.sort()
+        for (t0, d0), (t1, _) in zip(spans, spans[1:]):
+            if t0 + d0 > t1 + EPSILON_US:
+                fail(
+                    f"lane pid={pid} tid={tid}: event at {t0}us (+{d0}us) "
+                    f"overlaps event at {t1}us"
+                )
+
+    pud_pids = {
+        pid for pid, name in process_names.items() if name == "PUD banks (sim)"
+    }
+    host_pids = {
+        pid
+        for pid, name in process_names.items()
+        if name == "host fallback (sim)"
+    }
+    if not pud_pids:
+        fail("no 'PUD banks (sim)' process metadata")
+    pud_lanes = {tid for (pid, tid) in lanes if pid in pud_pids}
+    if len(pud_lanes) > args.banks:
+        fail(
+            f"{len(pud_lanes)} PUD lanes exceed the {args.banks}-bank "
+            "geometry (one lane per active bank)"
+        )
+    host_lanes = {tid for (pid, tid) in lanes if pid in host_pids}
+    if len(host_lanes) > 1:
+        fail(f"{len(host_lanes)} host-fallback lanes (expected <= 1)")
+
+    n_events = sum(len(s) for s in lanes.values())
+    print(
+        f"check_trace: OK — {n_events} span(s) across {len(pud_lanes)} PUD "
+        f"lane(s) (<= {args.banks} banks) + {len(host_lanes)} host lane(s), "
+        "monotonic and non-overlapping"
+    )
+
+
+if __name__ == "__main__":
+    main()
