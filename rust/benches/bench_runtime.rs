@@ -22,7 +22,6 @@
 
 use puma::alloc::mallocsim::MallocSim;
 use puma::alloc::puma::{FitPolicy, PumaAlloc};
-use puma::alloc::scratch::ScratchPool;
 use puma::coordinator::system::{System, SystemConfig};
 use puma::dram::address::InterleaveScheme;
 use puma::dram::geometry::DramGeometry;
@@ -38,6 +37,7 @@ use puma::workloads::churn::{self, ChurnConfig, ChurnResult};
 use puma::workloads::filter::{self, FilterConfig, FilterResult};
 use puma::workloads::microbench::AllocatorKind;
 use puma::workloads::queries::{self, QueriesConfig, QueryResult};
+use puma::workloads::serve::{ServeConfig, ServeResult};
 
 fn small_scheme() -> InterleaveScheme {
     InterleaveScheme::row_major(DramGeometry::small()) // 64 MiB
@@ -288,6 +288,32 @@ fn query_shape_json(cells: &[QueryResult], shape: &str) -> String {
     )
 }
 
+fn serve_json(r: &ServeResult) -> String {
+    format!(
+        "{{\"allocator\": \"{}\", \"drr_rounds\": {}, \
+         \"drr_p50_ns\": {:.1}, \"drr_p99_ns\": {:.1}, \
+         \"b2b_p50_ns\": {:.1}, \"b2b_p99_ns\": {:.1}, \
+         \"drr_makespan_ns\": {:.1}, \"b2b_makespan_ns\": {:.1}, \
+         \"p99_speedup\": {:.4}, \"identical\": {}, \
+         \"pud_row_fraction\": {:.6}, \"accepted\": {}, \"queued\": {}, \
+         \"rejected\": {}}}",
+        r.allocator,
+        r.drr_rounds,
+        r.drr_p50_ns,
+        r.drr_p99_ns,
+        r.b2b_p50_ns,
+        r.b2b_p99_ns,
+        r.drr_makespan_ns,
+        r.b2b_makespan_ns,
+        r.p99_speedup(),
+        r.identical,
+        r.pud_row_fraction(),
+        r.admission.accepted,
+        r.admission.queued,
+        r.admission.rejected
+    )
+}
+
 /// Mean host-boundary ns/elem across the PUMA cells — the gated
 /// host-time metric (lower is better).
 fn mean_host_ns<'a, I: Iterator<Item = &'a f64>>(vals: I) -> f64 {
@@ -474,7 +500,7 @@ fn main() -> anyhow::Result<()> {
     let wrow = wsys.os.scheme.geometry.row_bytes as u64;
     let mut walloc = PumaAlloc::new(wrow, FitPolicy::WorstFit);
     walloc.pim_preallocate(&mut wsys.os, warm_cfg.puma_pages)?;
-    let mut wpool = ScratchPool::new();
+    let mut wpool = arith::ShardedScratch::new();
     let cold = analytics::run_cell(
         &mut wsys, &mut walloc, wpid, "puma", &warm_cfg, 16, &mut wpool,
     )?;
@@ -498,7 +524,7 @@ fn main() -> anyhow::Result<()> {
         "both kernels of a warm cell must hit the resident column"
     );
     assert_eq!(warm.sum, cold.sum, "warm repeats stay value-identical");
-    wsys.release_scratch(&mut walloc, wpid, &mut wpool)?;
+    wsys.trim_pools(&mut walloc, wpid, &mut wpool, 0)?;
     wsys.flush_columns(&mut walloc, wpid)?;
 
     // ---- analytics: vertical arithmetic, PUMA vs every baseline ----
@@ -668,6 +694,67 @@ fn main() -> anyhow::Result<()> {
             .map(|r| &r.host_ns_per_elem),
     );
 
+    // ---- serve: multi-tenant DRR fairness vs back-to-back ----------
+    // the default 16-bank geometry: 8 spread-anchored tenants land on
+    // disjoint banks, so the merged DRR rounds overlap their waves;
+    // back-to-back pays each tenant's makespan serially
+    println!("\n# serve — multi-tenant fairness (DRR vs back-to-back)");
+    let svcfg = ServeConfig {
+        tenants: 8,
+        ops_per_tenant: 12,
+        backpressure: 6,
+        churn_rounds: 1_000,
+        ..Default::default()
+    };
+    let serve_scheme = InterleaveScheme::row_major(DramGeometry::default());
+    let serve_puma = puma::workloads::serve::run(
+        serve_scheme.clone(),
+        &svcfg,
+        AllocatorKind::Puma(FitPolicy::WorstFit),
+    )?;
+    let serve_malloc = puma::workloads::serve::run(
+        serve_scheme,
+        &svcfg,
+        AllocatorKind::Malloc,
+    )?;
+    println!(
+        "puma  : DRR p99 {:.0} ns vs b2b p99 {:.0} ns ({:.2}x), \
+         {} round(s), pud_frac {:.3}",
+        serve_puma.drr_p99_ns,
+        serve_puma.b2b_p99_ns,
+        serve_puma.p99_speedup(),
+        serve_puma.drr_rounds,
+        serve_puma.pud_row_fraction()
+    );
+    println!(
+        "malloc: DRR p99 {:.0} ns vs b2b p99 {:.0} ns ({:.2}x)",
+        serve_malloc.drr_p99_ns,
+        serve_malloc.b2b_p99_ns,
+        serve_malloc.p99_speedup()
+    );
+    assert!(
+        serve_puma.identical && serve_malloc.identical,
+        "DRR and back-to-back must produce byte-identical tenant buffers"
+    );
+    assert!(
+        serve_puma.drr_p99_ns < serve_puma.b2b_p99_ns,
+        "DRR p99 tenant completion must strictly beat back-to-back under \
+         PUMA placement (drr {:.0} vs b2b {:.0})",
+        serve_puma.drr_p99_ns,
+        serve_puma.b2b_p99_ns
+    );
+    assert!(
+        serve_puma.pud_row_fraction() > 0.5,
+        "spread anchors + align chaining must keep serve traffic in DRAM \
+         (got {:.3})",
+        serve_puma.pud_row_fraction()
+    );
+    assert_eq!(serve_puma.admission.rejected, 0);
+    assert!(
+        serve_puma.admission.queued > 0,
+        "backpressure threshold below ops_per_tenant must trip Queued"
+    );
+
     // ---- observability: tracer overhead must stay in budget --------
     // the same batched pass with the wave tracer off vs on, min-of-N
     // wall clock on a warm system (min absorbs scheduler noise; the
@@ -764,6 +851,10 @@ fn main() -> anyhow::Result<()> {
          \"min_puma_pud_row_fraction\": {:.6}, \
          \"host_ns_per_elem\": {:.4}, \
          \"cells\": [\n    {}\n  ]}},\n  \
+         \"serve\": {{\"tenants\": {}, \"ops_per_tenant\": {}, \
+         \"quantum\": {}, \"serve_p99_makespan\": {:.1}, \
+         \"serve_puma_pud_row_fraction\": {:.6}, \"p99_speedup\": {:.4}, \
+         \"puma\": {}, \"malloc\": {}}},\n  \
          \"observability\": {{\"obs_trace_overhead_frac\": {:.4}, \
          \"wall_off_ns\": {:.0}, \"wall_on_ns\": {:.0}, \
          \"op_sim_ns_p99\": {}, \"bank_util_spread\": {:.4}, \
@@ -823,6 +914,14 @@ fn main() -> anyhow::Result<()> {
             .map(query_json)
             .collect::<Vec<_>>()
             .join(",\n    "),
+        svcfg.tenants,
+        svcfg.ops_per_tenant,
+        svcfg.quantum,
+        serve_puma.drr_p99_ns,
+        serve_puma.pud_row_fraction(),
+        serve_puma.p99_speedup(),
+        serve_json(&serve_puma),
+        serve_json(&serve_malloc),
         obs_overhead_frac,
         wall_off,
         wall_on,

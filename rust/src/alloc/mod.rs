@@ -15,14 +15,18 @@
 //! All allocators implement [`Allocator`] against the shared
 //! [`OsCtx`], so the benchmarks sweep them interchangeably.
 //! [`scratch`] adds the allocator-agnostic scratch-region lease pool
-//! the expression compiler draws its temporaries from.
+//! the expression compiler draws its temporaries from, and
+//! [`request`] the unified [`AllocRequest`] builder that collapses
+//! `alloc`/`alloc_align`/`alloc_spread` into one request shape.
 
 pub mod hugealloc;
 pub mod mallocsim;
 pub mod memalign;
 pub mod puma;
+pub mod request;
 pub mod scratch;
 pub mod traits;
 
+pub use request::AllocRequest;
 pub use scratch::ScratchPool;
 pub use traits::{AllocStats, Allocator, OsCtx, OsTiming};

@@ -1,0 +1,151 @@
+//! The unified allocation request: one builder covering the paper's
+//! three entry points (`pim_alloc`, `pim_alloc_align`, and the
+//! bank-spread anchor draw) so higher layers — in particular
+//! `serve::Session` — expose a single allocation shape.
+//!
+//! A request is `len` bytes plus at most one placement directive:
+//!
+//! * [`AllocRequest::align_with`] — co-locate with an existing
+//!   allocation (PUMA's `pim_alloc_align`; baselines ignore it);
+//! * [`AllocRequest::spread`] — place the anchor of shard `k` for
+//!   bank-level spreading (`Allocator::alloc_spread`).
+//!
+//! The two directives are mutually exclusive (an allocation cannot be
+//! pinned to a neighbour's subarray *and* drawn on a spread bank);
+//! [`AllocRequest::place`] rejects the combination instead of silently
+//! preferring one.
+
+use anyhow::{ensure, Result};
+
+use crate::os::process::Process;
+
+use super::traits::{Allocator, OsCtx};
+
+/// A single-shape allocation request (see module docs).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct AllocRequest {
+    len: u64,
+    hint: Option<u64>,
+    spread: Option<u32>,
+}
+
+impl AllocRequest {
+    /// Request `len` bytes with no placement directive.
+    pub fn bytes(len: u64) -> Self {
+        Self {
+            len,
+            hint: None,
+            spread: None,
+        }
+    }
+
+    /// Co-locate with the existing allocation at `hint`.
+    pub fn align_with(mut self, hint: u64) -> Self {
+        self.hint = Some(hint);
+        self
+    }
+
+    /// Place for bank-level spreading as shard `spread`'s anchor.
+    pub fn spread(mut self, spread: u32) -> Self {
+        self.spread = Some(spread);
+        self
+    }
+
+    /// Requested size in bytes.
+    pub fn len(&self) -> u64 {
+        self.len
+    }
+
+    /// True when the request is zero-sized.
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// The co-location hint, if any.
+    pub fn hint(&self) -> Option<u64> {
+        self.hint
+    }
+
+    /// The bank-spread directive, if any.
+    pub fn spread_hint(&self) -> Option<u32> {
+        self.spread
+    }
+
+    /// Dispatch the request against `alloc`, routing to the matching
+    /// trait entry point. Errors if both placement directives are set.
+    pub fn place(
+        &self,
+        alloc: &mut dyn Allocator,
+        ctx: &mut OsCtx,
+        proc: &mut Process,
+    ) -> Result<u64> {
+        ensure!(
+            !(self.hint.is_some() && self.spread.is_some()),
+            "an allocation cannot be both hint-aligned and bank-spread"
+        );
+        match (self.hint, self.spread) {
+            (Some(hint), None) => alloc.alloc_align(ctx, proc, self.len, hint),
+            (None, Some(spread)) => alloc.alloc_spread(ctx, proc, self.len, spread),
+            _ => alloc.alloc(ctx, proc, self.len),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::alloc::mallocsim::MallocSim;
+    use crate::dram::address::InterleaveScheme;
+    use crate::dram::geometry::DramGeometry;
+    use crate::os::process::{Pid, Process};
+
+    fn ctx() -> OsCtx {
+        OsCtx::boot(
+            InterleaveScheme::row_major(DramGeometry::small()),
+            2,
+            0,
+            7,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn builder_accumulates_fields() {
+        let r = AllocRequest::bytes(4096).align_with(0x5000);
+        assert_eq!(r.len(), 4096);
+        assert_eq!(r.hint(), Some(0x5000));
+        assert_eq!(r.spread_hint(), None);
+        let s = AllocRequest::bytes(8192).spread(3);
+        assert_eq!(s.spread_hint(), Some(3));
+        assert!(!s.is_empty());
+    }
+
+    #[test]
+    fn conflicting_directives_are_rejected() {
+        let mut ctx = ctx();
+        let mut proc = Process::new(Pid(1));
+        let mut alloc = MallocSim::new();
+        let bad = AllocRequest::bytes(4096).align_with(0x5000).spread(1);
+        assert!(bad.place(&mut alloc, &mut ctx, &mut proc).is_err());
+    }
+
+    #[test]
+    fn plain_and_hinted_requests_place() {
+        let mut ctx = ctx();
+        let mut proc = Process::new(Pid(1));
+        let mut alloc = MallocSim::new();
+        let a = AllocRequest::bytes(4096)
+            .place(&mut alloc, &mut ctx, &mut proc)
+            .unwrap();
+        let b = AllocRequest::bytes(4096)
+            .align_with(a)
+            .place(&mut alloc, &mut ctx, &mut proc)
+            .unwrap();
+        let c = AllocRequest::bytes(4096)
+            .spread(2)
+            .place(&mut alloc, &mut ctx, &mut proc)
+            .unwrap();
+        assert_ne!(a, b);
+        assert_ne!(b, c);
+    }
+}

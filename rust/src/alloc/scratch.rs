@@ -152,6 +152,28 @@ impl ScratchPool {
         self.classes.iter().map(|c| c.parked.len()).sum()
     }
 
+    /// Resident count a subsequent `ensure(n, len, …)` would leave
+    /// behind, assuming buffers of the matching class are reused and
+    /// the shortfall leases fresh — the admission-control bound the
+    /// serving tier checks a tenant's scratch quota against *before*
+    /// any lease happens. A locus-constrained `ensure` can reuse less
+    /// than this estimate assumes (and then leases more), so the bound
+    /// is a steady-state heuristic, not a hard ceiling; admission
+    /// control wants "will this tenant's scratch footprint stay inside
+    /// its quota under normal reuse", which is exactly this number.
+    pub fn projected_len(&self, n: usize, len: u64) -> usize {
+        let class = Self::class_of(len);
+        let reusable = if class == self.active_class {
+            self.active.len()
+        } else {
+            self.classes
+                .iter()
+                .find(|c| c.class == class)
+                .map_or(0, |c| c.parked.len())
+        };
+        self.len() + n.saturating_sub(reusable)
+    }
+
     /// Per-class lifetime counters, in class order.
     pub fn class_stats(&self) -> Vec<ClassStats> {
         let mut out: Vec<ClassStats> = self
@@ -376,6 +398,29 @@ mod tests {
             allocs_after_first,
             "no net allocation growth across repeated ensure calls"
         );
+    }
+
+    #[test]
+    fn projected_len_models_reuse_and_class_changes() {
+        let mut ctx = ctx();
+        let mut proc = Process::new(Pid(1));
+        let row = ctx.scheme.geometry.row_bytes as u64;
+        let mut malloc = MallocSim::new();
+        let mut pool = ScratchPool::new();
+        // empty pool: everything is a fresh lease
+        assert_eq!(pool.projected_len(3, row), 3);
+        pool.ensure(&mut ctx, &mut proc, &mut malloc, 3, row, None).unwrap();
+        // same class: steady-state demand projects no growth
+        assert_eq!(pool.projected_len(3, row), 3);
+        assert_eq!(pool.projected_len(5, row), 5);
+        // class change parks the 3 and leases 2 fresh
+        assert_eq!(pool.projected_len(2, 4 * row), 5);
+        pool.ensure(&mut ctx, &mut proc, &mut malloc, 2, 4 * row, None)
+            .unwrap();
+        assert_eq!(pool.len(), 5);
+        // switching back draws the parked trio instead of leasing
+        assert_eq!(pool.projected_len(3, row), 5);
+        assert_eq!(pool.projected_len(4, row), 6);
     }
 
     #[test]

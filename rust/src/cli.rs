@@ -68,7 +68,7 @@ pub fn build_config(cli: &Cli) -> Result<Config> {
     for k in [
         "micro", "alloc", "size", "batch", "tenants", "epochs", "mode",
         "clauses", "widths", "elems", "threshold", "shards", "rows", "width",
-        "groups", "build_keys", "k", "export",
+        "groups", "build_keys", "k", "export", "ops", "quantum",
     ] {
         overrides.remove(k);
     }
@@ -223,6 +223,24 @@ pub fn run(args: &[String]) -> Result<i32> {
                 alloc,
             )
         }
+        "serve" => {
+            let cfg = build_config(&cli)?;
+            let get = |key: &str, dflt: &str| -> String {
+                cli.flags
+                    .get(key)
+                    .cloned()
+                    .unwrap_or_else(|| dflt.to_string())
+            };
+            let tenants: usize = get("tenants", "8").parse().context("tenants")?;
+            let ops: usize = get("ops", "12").parse().context("ops")?;
+            let quantum: u64 = get("quantum", "8").parse().context("quantum")?;
+            let alloc = cli
+                .flags
+                .get("alloc")
+                .map(|a| parse_alloc(a))
+                .transpose()?;
+            cmd_serve(&cfg, tenants, ops, quantum, alloc)
+        }
         "trace" => {
             let cfg = build_config(&cli)?;
             let export = cli.flags.get("export").map(String::as_str);
@@ -280,6 +298,11 @@ commands:
                micro-table, every cell verified against a scalar oracle:
                --rows N --width W --groups N --build_keys N --k N
                --threshold FRAC --shards N [--alloc NAME]
+  serve        multi-tenant serving study: twin gateways drain identical
+               mixed traffic under the DRR fairness scheduler vs
+               back-to-back, verifying byte-identical results and
+               comparing tenant-completion percentiles:
+               --tenants N --ops N --quantum ROWS [--alloc NAME]
   trace        run a small mixed-op batch with the wave tracer enabled
                and print a pipeline summary; --export DIR also writes
                trace.json (open in ui.perfetto.dev — one lane per
@@ -547,6 +570,52 @@ fn cmd_churn(cfg: &Config, tenants: usize, epochs: usize, mode: &str) -> Result<
     };
     println!("{text}");
     println!("(raw series: {}/churn.csv)", cfg.out.display());
+    Ok(0)
+}
+
+fn cmd_serve(
+    cfg: &Config,
+    tenants: usize,
+    ops: usize,
+    quantum: u64,
+    alloc: Option<AllocatorKind>,
+) -> Result<i32> {
+    let scfg = crate::workloads::serve::ServeConfig {
+        tenants,
+        ops_per_tenant: ops,
+        quantum,
+        huge_pages: cfg.huge_pages,
+        puma_pages: cfg.puma_pages.max(2),
+        churn_rounds: cfg.churn_rounds,
+        seed: cfg.seed,
+        ..Default::default()
+    };
+    let kinds: Vec<AllocatorKind> = match alloc {
+        Some(k) => vec![k],
+        None => vec![
+            AllocatorKind::Malloc,
+            AllocatorKind::Puma(FitPolicy::WorstFit),
+        ],
+    };
+    eprintln!(
+        "running serve study: {} tenant(s) x {} op(s), DRR quantum {} \
+         row(s), {} allocator(s) ...",
+        scfg.tenants,
+        scfg.ops_per_tenant,
+        scfg.quantum,
+        kinds.len()
+    );
+    let results =
+        crate::workloads::serve::sweep(&cfg.scheme, &scfg, &kinds)?;
+    for r in &results {
+        anyhow::ensure!(
+            r.identical,
+            "{}: DRR and back-to-back schedules diverged",
+            r.allocator
+        );
+    }
+    println!("{}", report::serve(&results, Some(&cfg.out))?);
+    println!("(raw series: {}/serve.csv)", cfg.out.display());
     Ok(0)
 }
 
@@ -837,6 +906,20 @@ mod tests {
         .unwrap();
         assert_eq!(cli.flags["clauses"], "2");
         // clauses/alloc must not be rejected as unknown config keys
+        let cfg = build_config(&cli).unwrap();
+        assert_eq!(cfg.puma_pages, 4);
+    }
+
+    #[test]
+    fn serve_flags_are_command_specific_not_config() {
+        let cli = parse_args(&args(&[
+            "serve", "--tenants", "8", "--ops", "6", "--quantum", "4",
+            "--alloc", "puma", "--puma_pages", "4",
+        ]))
+        .unwrap();
+        assert_eq!(cli.flags["ops"], "6");
+        assert_eq!(cli.flags["quantum"], "4");
+        // tenants/ops/quantum/alloc must not be rejected as config keys
         let cfg = build_config(&cli).unwrap();
         assert_eq!(cfg.puma_pages, 4);
     }

@@ -44,6 +44,23 @@ pub struct BatchReport {
     pub elapsed_ns: f64,
     /// Hazard waves the batch was split into.
     pub waves: usize,
+    /// Per-wave bank-parallel time, in wave order (sums to
+    /// `elapsed_ns`). Lets a caller that merged several independent
+    /// streams into one batch recover each stream's completion time:
+    /// a stream finishes at the cumulative end of the wave carrying
+    /// its last op.
+    pub wave_ns: Vec<f64>,
+    /// Wave index each op ran in, indexed like `per_op_ns`.
+    pub op_wave: Vec<usize>,
+}
+
+impl BatchReport {
+    /// Simulated completion time of op `i`: the cumulative end of the
+    /// wave it ran in (waves serialize; within a wave the op's finish
+    /// time is the wave end).
+    pub fn op_completion_ns(&self, i: usize) -> f64 {
+        self.wave_ns[..=self.op_wave[i]].iter().sum()
+    }
 }
 
 /// The coordinator: owns the PUD engine, the fallback runtime, and the
@@ -103,13 +120,29 @@ impl Coordinator {
         proc: &Process,
         reqs: &[BulkRequest],
     ) -> Result<BatchReport> {
-        if reqs.is_empty() {
+        let items: Vec<(&Process, &BulkRequest)> =
+            reqs.iter().map(|r| (proc, r)).collect();
+        self.submit_batch_multi(&items)
+    }
+
+    /// Dispatch a batch whose requests may belong to *different*
+    /// processes — the multi-tenant path: each request is planned
+    /// against its own process's mappings (the extent cache is keyed
+    /// by pid, so tenants never alias), then the whole batch shares
+    /// one hazard-wave schedule so independent tenants' PUD rows
+    /// overlap across banks. Semantics otherwise match
+    /// [`Coordinator::submit_batch`].
+    pub fn submit_batch_multi(
+        &mut self,
+        items: &[(&Process, &BulkRequest)],
+    ) -> Result<BatchReport> {
+        if items.is_empty() {
             return Ok(BatchReport::default());
         }
         // 1. plan
         let t0 = std::time::Instant::now();
-        let mut plans = Vec::with_capacity(reqs.len());
-        for req in reqs {
+        let mut plans = Vec::with_capacity(items.len());
+        for (proc, req) in items {
             plans.push(self.planner.plan(&self.engine.device.scheme, proc, req)?);
         }
         self.pipeline.plan_wall_ns += t0.elapsed().as_nanos() as u64;
@@ -181,13 +214,15 @@ impl Coordinator {
         let elapsed_ns = sched.elapsed_ns();
         self.pipeline.batches += 1;
         self.pipeline.waves += sched.waves.len() as u64;
-        self.pipeline.planned_ops += reqs.len() as u64;
+        self.pipeline.planned_ops += items.len() as u64;
         self.pipeline.elapsed_ns += elapsed_ns;
         self.pipeline.extent_cache = self.planner.cache.lookups;
         Ok(BatchReport {
             total_ns: per_op_ns.iter().sum(),
             elapsed_ns,
             waves: sched.waves.len(),
+            wave_ns: sched.wave_elapsed(),
+            op_wave: sched.op_waves(items.len()),
             per_op_ns,
         })
     }

@@ -107,6 +107,24 @@ impl Schedule {
     pub fn dispatch_groups(&self) -> u64 {
         self.waves.iter().map(|w| w.groups.len() as u64).sum()
     }
+
+    /// Per-wave bank-parallel times, in wave order (sums to
+    /// [`Schedule::elapsed_ns`]).
+    pub fn wave_elapsed(&self) -> Vec<f64> {
+        self.waves.iter().map(Wave::elapsed_ns).collect()
+    }
+
+    /// Wave index of each of the batch's `n_ops` ops (every op is in
+    /// exactly one wave).
+    pub fn op_waves(&self, n_ops: usize) -> Vec<usize> {
+        let mut out = vec![0usize; n_ops];
+        for (w, wave) in self.waves.iter().enumerate() {
+            for &i in &wave.op_indices {
+                out[i] = w;
+            }
+        }
+        out
+    }
 }
 
 /// Build the schedule for `plans` (in submission order).
@@ -423,6 +441,39 @@ mod tests {
         // pud_ns is the max lane plus the per-op dispatch overhead
         assert!(
             (sched.waves[0].pud_ns - (lanes[1].busy_ns + t.pud_dispatch_overhead)).abs() < 1e-9
+        );
+    }
+
+    #[test]
+    fn op_waves_and_wave_elapsed_cover_the_batch() {
+        let s = scheme();
+        let t = TimingParams::default();
+        // p2 reads what p1 writes (wave split); p3 is independent of
+        // p2 and lands in its wave
+        let p1 = plan_of(
+            PudOp::Copy,
+            vec![fb_row(0x1000, 8192)],
+            (0x1000, 0x3000),
+            (0x101000, 0x103000),
+        );
+        let p2 = plan_of(
+            PudOp::Copy,
+            vec![fb_row(0x400000, 8192)],
+            (0x400000, 0x402000),
+            (0x1000, 0x3000),
+        );
+        let p3 = plan_of(
+            PudOp::Copy,
+            vec![fb_row(0x600000, 8192)],
+            (0x600000, 0x602000),
+            (0x701000, 0x703000),
+        );
+        let sched = build(&s, &t, &[p1, p2, p3]);
+        assert_eq!(sched.op_waves(3), vec![0, 1, 1]);
+        let per_wave = sched.wave_elapsed();
+        assert_eq!(per_wave.len(), sched.waves.len());
+        assert!(
+            (per_wave.iter().sum::<f64>() - sched.elapsed_ns()).abs() < 1e-9
         );
     }
 

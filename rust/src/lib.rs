@@ -27,6 +27,11 @@
 //!   log2 latency histograms), the wave-granularity sim-time tracer,
 //!   and the exporters (Perfetto JSON, replayable DDR command stream,
 //!   Prometheus text; DESIGN.md §14).
+//! * [`serve`] — the multi-tenant serving front-end: per-tenant
+//!   [`Session`](serve::Session) handles (pids stay private), a
+//!   deficit-round-robin fairness scheduler merging tenants' requests
+//!   into multi-pid hazard-wave batches, and typed admission control
+//!   with backpressure (DESIGN.md §15).
 //! * [`runtime`] — XLA/PJRT CPU runtime executing the AOT-compiled
 //!   JAX + Pallas kernels (`artifacts/*.hlo.txt`) for the fallback;
 //!   built against an inert stub unless the `xla-runtime` feature
@@ -50,6 +55,7 @@ pub mod proptest;
 pub mod pud;
 pub mod report;
 pub mod runtime;
+pub mod serve;
 pub mod util;
 pub mod workloads;
 

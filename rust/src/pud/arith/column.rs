@@ -1,0 +1,119 @@
+//! The layout-polymorphic column handle.
+//!
+//! PR 9 collapses the flat/sharded method pairs on `System`
+//! (`run_arith`/`run_arith_sharded`, `arith_sum`/`arith_sum_sharded`,
+//! …) behind single entry points that accept a [`Column`]: one handle
+//! that is either a [`VerticalLayout`] (all planes co-located in one
+//! subarray via `pim_alloc_align`) or a [`ShardedLayout`] (anchors
+//! spread across banks for MIMDRAM-style bank parallelism). Callers
+//! pick the placement once, at allocation time, via [`LayoutSpec`];
+//! every kernel thereafter is layout-agnostic.
+
+use crate::pud::arith::layout::VerticalLayout;
+use crate::pud::arith::shard::ShardedLayout;
+
+/// Placement policy for a new column (see module docs).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum LayoutSpec {
+    /// All planes co-located in one subarray (single bank timeline).
+    #[default]
+    Flat,
+    /// Shard anchors spread across `n` banks (disjoint timelines).
+    Sharded(usize),
+}
+
+impl LayoutSpec {
+    /// Shard count this spec materializes (`1` for [`LayoutSpec::Flat`]).
+    pub fn shards(&self) -> usize {
+        match self {
+            LayoutSpec::Flat => 1,
+            LayoutSpec::Sharded(n) => (*n).max(1),
+        }
+    }
+}
+
+/// A transposed bit-serial column under either placement (see module
+/// docs). Cheap to clone — both layouts hold only plane VAs.
+#[derive(Debug, Clone)]
+pub enum Column {
+    /// Co-located single-subarray placement.
+    Flat(VerticalLayout),
+    /// Bank-spread placement with per-shard timelines.
+    Sharded(ShardedLayout),
+}
+
+impl Column {
+    /// Operand width in bits.
+    pub fn width(&self) -> u32 {
+        match self {
+            Column::Flat(l) => l.width(),
+            Column::Sharded(l) => l.width(),
+        }
+    }
+
+    /// Total elements.
+    pub fn elems(&self) -> usize {
+        match self {
+            Column::Flat(l) => l.elems(),
+            Column::Sharded(l) => l.elems(),
+        }
+    }
+
+    /// The [`LayoutSpec`] this column was placed under.
+    pub fn spec(&self) -> LayoutSpec {
+        match self {
+            Column::Flat(_) => LayoutSpec::Flat,
+            Column::Sharded(l) => LayoutSpec::Sharded(l.n_shards()),
+        }
+    }
+
+    /// The co-location hint for further allocations (first plane of
+    /// the first shard).
+    pub fn hint(&self) -> u64 {
+        match self {
+            Column::Flat(l) => l.hint(),
+            Column::Sharded(l) => l.shard(0).hint(),
+        }
+    }
+
+    /// The flat layout, if this column is [`Column::Flat`].
+    pub fn as_flat(&self) -> Option<&VerticalLayout> {
+        match self {
+            Column::Flat(l) => Some(l),
+            Column::Sharded(_) => None,
+        }
+    }
+
+    /// The sharded layout, if this column is [`Column::Sharded`].
+    pub fn as_sharded(&self) -> Option<&ShardedLayout> {
+        match self {
+            Column::Flat(_) => None,
+            Column::Sharded(l) => Some(l),
+        }
+    }
+}
+
+impl From<VerticalLayout> for Column {
+    fn from(l: VerticalLayout) -> Self {
+        Column::Flat(l)
+    }
+}
+
+impl From<ShardedLayout> for Column {
+    fn from(l: ShardedLayout) -> Self {
+        Column::Sharded(l)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn layout_spec_shard_counts() {
+        assert_eq!(LayoutSpec::Flat.shards(), 1);
+        assert_eq!(LayoutSpec::Sharded(4).shards(), 4);
+        assert_eq!(LayoutSpec::Sharded(0).shards(), 1, "degenerate spread");
+        assert_eq!(LayoutSpec::default(), LayoutSpec::Flat);
+    }
+}

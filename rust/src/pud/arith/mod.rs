@@ -21,6 +21,9 @@
 //! * [`colcache`] — [`ColumnCache`]: columns stay resident in
 //!   transposed form across kernels and sweep cells (transpose once,
 //!   query many), with version/epoch invalidation and an LRU budget.
+//! * [`column`] — [`Column`]: the layout-polymorphic handle (flat or
+//!   sharded) the PR-9 unified `System` surface operates on, placed
+//!   once via [`LayoutSpec`].
 //!
 //! Execution goes through
 //! [`System::run_arith`](crate::coordinator::system::System::run_arith)
@@ -28,9 +31,12 @@
 //! filter-then-sum aggregate on top and `puma analytics` reports it.
 
 pub mod colcache;
+pub mod column;
 pub mod kernels;
 pub mod layout;
 pub mod shard;
+
+pub use column::{Column, LayoutSpec};
 
 pub use colcache::{
     ColumnCache, ColumnCacheStats, ColumnKey, ResidentColumn,

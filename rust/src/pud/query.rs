@@ -577,7 +577,7 @@ pub fn group_by_sum(
     for (&g, mask) in groups.iter().zip(&masks) {
         let count = popcount_mask(sys, pid, mask, &mut rep)?;
         let (sum, erep) =
-            sys.arith_sum(alloc, pid, values, Some(mask.planes()[0]), pool)?;
+            sys.arith_sum_impl(alloc, pid, values, Some(mask.planes()[0]), pool)?;
         if let Some(er) = erep {
             rep.absorb(&er);
         }
@@ -618,7 +618,7 @@ pub fn group_by_sum_sharded(
     for (&g, mask) in groups.iter().zip(&masks) {
         let count = popcount_mask_sharded(sys, pid, mask, &mut rep)?;
         let (sum, erep) =
-            sys.arith_sum_sharded(alloc, pid, values, Some(mask), pools)?;
+            sys.arith_sum_sharded_impl(alloc, pid, values, Some(mask), pools)?;
         if let Some(er) = erep {
             rep.absorb(&er);
         }
@@ -792,7 +792,7 @@ pub fn top_k(
         while hi - lo > 1 {
             let mid = lo + (hi - lo) / 2;
             let er =
-                sys.run_arith_const(alloc, pid, ArithOp::CmpLt, mid, col, dst, pool)?;
+                sys.run_arith_const_impl(alloc, pid, ArithOp::CmpLt, mid, col, dst, pool)?;
             rep.absorb(&er);
             rounds += 1;
             let count_lt = popcount_mask(sys, pid, dst, &mut rep)?;
@@ -810,7 +810,7 @@ pub fn top_k(
 }
 
 /// Sharded [`top_k`]: bisection rounds run through
-/// [`System::run_arith_const_sharded`] (one interleaved batch per
+/// [`System::run_arith_const_sharded_impl`] (one interleaved batch per
 /// round) and counts sum the live bits across shards.
 pub fn top_k_sharded(
     sys: &mut System,
@@ -849,7 +849,7 @@ pub fn top_k_sharded(
     if k < n {
         while hi - lo > 1 {
             let mid = lo + (hi - lo) / 2;
-            let er = sys.run_arith_const_sharded(
+            let er = sys.run_arith_const_sharded_impl(
                 alloc,
                 pid,
                 ArithOp::CmpLt,

@@ -17,6 +17,7 @@ use crate::workloads::churn::ChurnResult;
 use crate::workloads::filter::FilterResult;
 use crate::workloads::microbench::{AllocatorKind, Micro};
 use crate::workloads::queries::QueryResult;
+use crate::workloads::serve::ServeResult;
 use crate::workloads::sweep::SweepCell;
 
 /// Render the Figure 2 reproduction: PUMA speedup over malloc, one
@@ -735,6 +736,94 @@ pub fn queries(
     ))
 }
 
+/// Render the multi-tenant serving study: one block per allocator —
+/// per-tenant completion times under the DRR and back-to-back
+/// schedules, then the percentile summary with the fairness win.
+/// Writes `serve.csv` when `out_dir` is given.
+pub fn serve(results: &[ServeResult], out_dir: Option<&Path>) -> Result<String> {
+    let mut table = Table::new(vec![
+        "allocator",
+        "tenant",
+        "traffic",
+        "w",
+        "ops",
+        "drr-done",
+        "b2b-done",
+    ])
+    .left(0)
+    .left(1)
+    .left(2);
+    let mut csv = Csv::new(vec![
+        "allocator",
+        "tenant",
+        "traffic",
+        "weight",
+        "ops",
+        "drr_done_ns",
+        "b2b_done_ns",
+        "drr_p99_ns",
+        "b2b_p99_ns",
+        "identical",
+        "pud_row_fraction",
+    ]);
+    let mut summary = String::new();
+    for r in results {
+        for t in &r.tenants {
+            table.row(vec![
+                r.allocator.to_string(),
+                t.name.clone(),
+                t.traffic.to_string(),
+                t.weight.to_string(),
+                t.ops.to_string(),
+                fmt_ns(t.drr_done_ns),
+                fmt_ns(t.b2b_done_ns),
+            ]);
+            csv.row(vec![
+                r.allocator.to_string(),
+                t.name.clone(),
+                t.traffic.to_string(),
+                t.weight.to_string(),
+                t.ops.to_string(),
+                format!("{:.1}", t.drr_done_ns),
+                format!("{:.1}", t.b2b_done_ns),
+                format!("{:.1}", r.drr_p99_ns),
+                format!("{:.1}", r.b2b_p99_ns),
+                r.identical.to_string(),
+                format!("{:.6}", r.pud_row_fraction()),
+            ]);
+        }
+        summary.push_str(&format!(
+            "{:>14}: DRR p50/p99 {}/{} vs back-to-back {}/{} — \
+             p99 {:.2}x better over {} round(s), results {}, \
+             PUD-row fraction {:.0}%\n",
+            r.allocator,
+            fmt_ns(r.drr_p50_ns),
+            fmt_ns(r.drr_p99_ns),
+            fmt_ns(r.b2b_p50_ns),
+            fmt_ns(r.b2b_p99_ns),
+            r.p99_speedup(),
+            r.drr_rounds,
+            if r.identical { "identical" } else { "DIVERGED" },
+            r.pud_row_fraction() * 100.0,
+        ));
+        summary.push_str(&format!(
+            "{:>14}  admission: {} accepted, {} backpressured, {} rejected\n",
+            "",
+            r.admission.accepted,
+            r.admission.queued,
+            r.admission.rejected,
+        ));
+    }
+    if let Some(dir) = out_dir {
+        csv.write(dir.join("serve.csv"))?;
+    }
+    Ok(format!(
+        "## Serve — multi-tenant fairness (DRR vs back-to-back)\n\n{}\n{}",
+        table.render(),
+        summary
+    ))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -991,6 +1080,64 @@ mod tests {
         let csv =
             std::fs::read_to_string(dir.join("queries.csv")).unwrap();
         assert!(csv.starts_with("allocator,shape,width,rows,shards,param,"));
+        assert!(csv.contains("0.990000"));
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    fn serve_result() -> ServeResult {
+        ServeResult {
+            allocator: "puma",
+            tenants: vec![
+                crate::workloads::serve::TenantSummary {
+                    name: "t0-filter".to_string(),
+                    traffic: "filter",
+                    weight: 1,
+                    ops: 8,
+                    drr_done_ns: 40_000.0,
+                    b2b_done_ns: 90_000.0,
+                },
+                crate::workloads::serve::TenantSummary {
+                    name: "t1-analytics".to_string(),
+                    traffic: "analytics",
+                    weight: 2,
+                    ops: 8,
+                    drr_done_ns: 52_000.0,
+                    b2b_done_ns: 160_000.0,
+                },
+            ],
+            ops_per_tenant: 8,
+            drr_rounds: 5,
+            drr_makespan_ns: 60_000.0,
+            b2b_makespan_ns: 160_000.0,
+            drr_p50_ns: 40_000.0,
+            drr_p99_ns: 52_000.0,
+            b2b_p50_ns: 90_000.0,
+            b2b_p99_ns: 160_000.0,
+            identical: true,
+            admission: crate::serve::AdmissionStats {
+                accepted: 10,
+                queued: 6,
+                rejected: 0,
+            },
+            pud_rows: 990,
+            fallback_rows: 10,
+        }
+    }
+
+    #[test]
+    fn serve_report_renders_fairness_summary() {
+        let rs = vec![serve_result()];
+        let s = serve(&rs, None).unwrap();
+        assert!(s.contains("Serve"));
+        assert!(s.contains("t1-analytics"));
+        assert!(s.contains("3.08x"), "{s}");
+        assert!(s.contains("results identical"));
+        assert!(s.contains("6 backpressured"));
+        assert!(s.contains("99%"), "{s}");
+        let dir = std::env::temp_dir().join("puma_report_serve_test");
+        serve(&rs, Some(&dir)).unwrap();
+        let csv = std::fs::read_to_string(dir.join("serve.csv")).unwrap();
+        assert!(csv.starts_with("allocator,tenant,traffic,weight,ops,"));
         assert!(csv.contains("0.990000"));
         let _ = std::fs::remove_dir_all(dir);
     }

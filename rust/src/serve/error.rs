@@ -1,0 +1,154 @@
+//! Typed errors and submission outcomes at the serving boundary.
+//!
+//! Everything below the serving tier reports failures as `anyhow`
+//! chains — fine for workloads and tests, useless for a front-end that
+//! must tell a tenant *why* it was turned away. The gateway therefore
+//! speaks two typed vocabularies:
+//!
+//! * [`SubmitOutcome`] — the non-error admission verdict of every
+//!   submission: accepted, accepted-but-backpressured, or rejected
+//!   with a [`RejectReason`]. Rejection is not an `Err`: the gateway
+//!   itself is healthy, the tenant is over its limits.
+//! * [`ServeError`] — genuine serving-boundary failures (unknown
+//!   session handles, capacity exhaustion surfacing from the
+//!   allocator, scratch-quota overruns on the synchronous kernel
+//!   path). Carried inside `anyhow::Error` so the rest of the crate
+//!   composes unchanged; callers at the boundary downcast with
+//!   [`ServeError::from_anyhow`].
+
+use std::fmt;
+
+/// Why the gateway turned a submission (or a synchronous kernel run)
+/// away.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum RejectReason {
+    /// The session's submission queue is at its hard cap.
+    QueueFull {
+        /// Queue depth at rejection time.
+        depth: usize,
+        /// The session's configured hard cap.
+        cap: usize,
+    },
+    /// Granting the lease would push the session's resident scratch
+    /// past its quota (see `ScratchPool::projected_len`).
+    ScratchExhausted {
+        /// Projected resident buffers across the session's pools.
+        projected: usize,
+        /// The session's configured quota.
+        quota: usize,
+    },
+    /// The backing allocator (typically the PUMA subarray pool) could
+    /// not place the request.
+    CapacityExhausted {
+        /// The underlying allocator error, flattened to text.
+        detail: String,
+    },
+}
+
+impl fmt::Display for RejectReason {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            RejectReason::QueueFull { depth, cap } => {
+                write!(f, "queue full: {depth} request(s) at cap {cap}")
+            }
+            RejectReason::ScratchExhausted { projected, quota } => write!(
+                f,
+                "scratch quota exhausted: {projected} projected resident \
+                 buffer(s) over quota {quota}"
+            ),
+            RejectReason::CapacityExhausted { detail } => {
+                write!(f, "capacity exhausted: {detail}")
+            }
+        }
+    }
+}
+
+/// A typed serving-boundary failure (see module docs).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ServeError {
+    /// The session handle does not name a live session.
+    UnknownSession(usize),
+    /// A synchronous operation was refused by admission control.
+    Rejected(RejectReason),
+}
+
+impl fmt::Display for ServeError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ServeError::UnknownSession(id) => {
+                write!(f, "unknown session {id}")
+            }
+            ServeError::Rejected(r) => write!(f, "rejected: {r}"),
+        }
+    }
+}
+
+impl std::error::Error for ServeError {}
+
+impl ServeError {
+    /// The typed serving error inside an `anyhow` chain, if any.
+    pub fn from_anyhow(err: &anyhow::Error) -> Option<&ServeError> {
+        err.downcast_ref::<ServeError>()
+    }
+}
+
+/// Admission verdict of one [`Gateway::submit`](super::Gateway::submit).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum SubmitOutcome {
+    /// Enqueued below the backpressure threshold.
+    Accepted {
+        /// Queue depth after the enqueue.
+        depth: usize,
+    },
+    /// Enqueued past the backpressure threshold but under the hard
+    /// cap — the tenant should slow down.
+    Queued {
+        /// Queue depth after the enqueue.
+        depth: usize,
+    },
+    /// Not enqueued.
+    Rejected {
+        /// Why admission control refused it.
+        reason: RejectReason,
+    },
+}
+
+impl SubmitOutcome {
+    /// True when the request was enqueued (accepted or backpressured).
+    pub fn is_admitted(&self) -> bool {
+        !matches!(self, SubmitOutcome::Rejected { .. })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn serve_error_round_trips_through_anyhow() {
+        let err = anyhow::Error::new(ServeError::Rejected(
+            RejectReason::ScratchExhausted { projected: 9, quota: 4 },
+        ));
+        let back = ServeError::from_anyhow(&err).unwrap();
+        assert_eq!(
+            back,
+            &ServeError::Rejected(RejectReason::ScratchExhausted {
+                projected: 9,
+                quota: 4
+            })
+        );
+        assert!(err.to_string().contains("quota 4"));
+        let plain = anyhow::anyhow!("some other failure");
+        assert!(ServeError::from_anyhow(&plain).is_none());
+    }
+
+    #[test]
+    fn outcomes_classify_admission() {
+        assert!(SubmitOutcome::Accepted { depth: 1 }.is_admitted());
+        assert!(SubmitOutcome::Queued { depth: 5 }.is_admitted());
+        assert!(!SubmitOutcome::Rejected {
+            reason: RejectReason::QueueFull { depth: 8, cap: 8 }
+        }
+        .is_admitted());
+    }
+}

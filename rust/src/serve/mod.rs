@@ -1,0 +1,40 @@
+//! Multi-tenant serving front-end (DESIGN.md §15).
+//!
+//! Everything below this layer is single-tenant: workloads boot a
+//! [`System`](crate::coordinator::System), spawn pids, and drive the
+//! machine directly. This module is the redesigned public surface for
+//! *shared* use of one PUMA machine:
+//!
+//! * [`session`] — the per-tenant [`Session`] handle. It owns the
+//!   tenant's `Pid` (raw pids never cross this boundary), its
+//!   submission queue, its scratch pools under a resident-buffer
+//!   quota, and its DRR weight. Kernel calls are admission-checked
+//!   against the quota *before* anything is leased.
+//! * [`sched`] — the deficit-round-robin core: pure queue arithmetic
+//!   that converts per-round credit (`quantum × weight`, in DRAM
+//!   rows) into a released request prefix, FIFO per tenant.
+//! * [`gateway`] — the [`Gateway`] front-end tying both together:
+//!   open/close sessions, [`Gateway::submit`] with admission control
+//!   and backpressure ([`SubmitOutcome`]), and DRR rounds that merge
+//!   tenants' released requests into single multi-pid batches so the
+//!   hazard-wave scheduler overlaps them across PUMA's disjoint
+//!   subarray timelines.
+//! * [`error`] — the typed vocabulary ([`ServeError`],
+//!   [`RejectReason`], [`SubmitOutcome`]) the boundary speaks instead
+//!   of bare `anyhow` strings.
+//!
+//! The fairness claim is measurable: `workloads::serve` runs the same
+//! tenant mix through DRR rounds and through the back-to-back
+//! baseline, asserts byte-identical results, and reports the p99
+//! tenant completion time of each (`serve_p99_makespan` in the bench
+//! gate).
+
+pub mod error;
+pub mod gateway;
+pub mod sched;
+pub mod session;
+
+pub use error::{RejectReason, ServeError, SubmitOutcome};
+pub use gateway::{AdmissionStats, Gateway, GatewayConfig, SessionId};
+pub use sched::{cost_rows, drain_with_deficit};
+pub use session::{Session, SessionConfig};

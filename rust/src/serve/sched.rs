@@ -1,0 +1,132 @@
+//! The deficit-round-robin core of the fairness scheduler.
+//!
+//! Classic DRR (Shreedhar & Varghese): each backlogged tenant queue
+//! holds a *deficit counter* in units of DRAM rows. Every round the
+//! counter grows by the tenant's credit (`quantum × weight`) and the
+//! queue releases requests from its front while the head's row cost
+//! fits the remaining deficit; an emptied queue forfeits its deficit
+//! (no banking credit while idle). Over time each backlogged tenant
+//! drains rows proportionally to its weight regardless of request
+//! sizes, and a tenant whose head request is larger than one credit
+//! simply accumulates deficit across rounds until it fits — no
+//! starvation, no oversized-request privilege.
+//!
+//! The functions here are pure queue arithmetic so the policy is
+//! testable without booting a `System`; `serve::Gateway` owns the
+//! per-round loop, tags each released request with its session's
+//! `Pid`, and merges the streams round-robin into one
+//! `System::submit_batch_tagged` batch per round.
+
+use std::collections::VecDeque;
+
+use crate::pud::isa::BulkRequest;
+
+/// DRR cost of one request: the DRAM rows it touches (minimum 1, so
+/// zero-length requests still consume credit and cannot spin the
+/// scheduler).
+pub fn cost_rows(req: &BulkRequest, row_bytes: u64) -> u64 {
+    req.rows(row_bytes).max(1)
+}
+
+/// One tenant's share of one DRR round: add `credit` to `deficit`,
+/// then release requests from the queue front while the head's cost
+/// fits. The deficit resets to zero whenever the queue goes (or
+/// already was) empty — idle tenants do not bank credit.
+pub fn drain_with_deficit(
+    queue: &mut VecDeque<BulkRequest>,
+    deficit: &mut u64,
+    credit: u64,
+    row_bytes: u64,
+) -> Vec<BulkRequest> {
+    if queue.is_empty() {
+        *deficit = 0;
+        return Vec::new();
+    }
+    *deficit = deficit.saturating_add(credit);
+    let mut out = Vec::new();
+    while let Some(front) = queue.front() {
+        let cost = cost_rows(front, row_bytes);
+        if cost > *deficit {
+            break;
+        }
+        *deficit -= cost;
+        out.push(queue.pop_front().expect("front exists"));
+    }
+    if queue.is_empty() {
+        *deficit = 0;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pud::isa::PudOp;
+
+    const ROW: u64 = 8192;
+
+    fn req(rows: u64) -> BulkRequest {
+        BulkRequest::new(PudOp::Zero, 0x1000, vec![], rows * ROW)
+    }
+
+    #[test]
+    fn fifo_order_is_preserved_within_a_tenant() {
+        let mut q: VecDeque<BulkRequest> =
+            (1..=4u64).map(|i| req(i)).collect();
+        let mut deficit = 0;
+        let mut drained = Vec::new();
+        while !q.is_empty() {
+            drained.extend(drain_with_deficit(&mut q, &mut deficit, 3, ROW));
+        }
+        let lens: Vec<u64> = drained.iter().map(|r| r.len / ROW).collect();
+        assert_eq!(lens, vec![1, 2, 3, 4], "released in submission order");
+    }
+
+    #[test]
+    fn oversized_head_accumulates_deficit_across_rounds() {
+        let mut q: VecDeque<BulkRequest> = [req(5)].into_iter().collect();
+        let mut deficit = 0;
+        // credit 2/round: rounds 1-2 release nothing, round 3 fits (6 >= 5)
+        assert!(drain_with_deficit(&mut q, &mut deficit, 2, ROW).is_empty());
+        assert_eq!(deficit, 2);
+        assert!(drain_with_deficit(&mut q, &mut deficit, 2, ROW).is_empty());
+        assert_eq!(deficit, 4);
+        let out = drain_with_deficit(&mut q, &mut deficit, 2, ROW);
+        assert_eq!(out.len(), 1);
+        assert_eq!(deficit, 0, "queue emptied: leftover credit forfeited");
+    }
+
+    #[test]
+    fn weights_skew_per_round_row_shares() {
+        // two tenants, same backlog, weights 1 vs 3 (credit 2 vs 6)
+        let mut q1: VecDeque<BulkRequest> =
+            std::iter::repeat_with(|| req(2)).take(12).collect();
+        let mut q2 = q1.clone();
+        let (mut d1, mut d2) = (0, 0);
+        let r1 = drain_with_deficit(&mut q1, &mut d1, 2, ROW);
+        let r2 = drain_with_deficit(&mut q2, &mut d2, 6, ROW);
+        let rows = |v: &[BulkRequest]| -> u64 {
+            v.iter().map(|r| cost_rows(r, ROW)).sum()
+        };
+        assert_eq!(rows(&r1), 2);
+        assert_eq!(rows(&r2), 6, "3x the weight drains 3x the rows");
+    }
+
+    #[test]
+    fn zero_length_requests_cost_one_row() {
+        let zero = BulkRequest::new(PudOp::Zero, 0x1000, vec![], 0);
+        assert_eq!(cost_rows(&zero, ROW), 1);
+        let mut q: VecDeque<BulkRequest> = [zero].into_iter().collect();
+        let mut deficit = 0;
+        let out = drain_with_deficit(&mut q, &mut deficit, 1, ROW);
+        assert_eq!(out.len(), 1, "zero-length request still drains");
+    }
+
+    #[test]
+    fn idle_queue_forfeits_deficit() {
+        let mut q = VecDeque::new();
+        let mut deficit = 7;
+        assert!(drain_with_deficit(&mut q, &mut deficit, 4, ROW).is_empty());
+        assert_eq!(deficit, 0, "no banking credit while idle");
+    }
+}

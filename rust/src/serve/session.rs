@@ -1,0 +1,441 @@
+//! The per-tenant session handle.
+//!
+//! A [`Session`] owns everything one tenant needs to use the machine
+//! and nothing it could use to touch another tenant: a private
+//! process address space (the `Pid` stays inside the handle — no
+//! caller above this layer threads raw pids), a submission queue the
+//! fairness scheduler drains, per-shard scratch pools under a
+//! resident-buffer quota, and a DRR weight. The kernel surface
+//! (`arith`/`arith_const`/`column_sum`/`column`) mirrors `System`'s
+//! layout-polymorphic [`Column`] API one-for-one, with admission
+//! control in front: a kernel whose scratch lease would push the
+//! session past its quota is refused with a typed
+//! [`ServeError::Rejected`] *before* anything is leased, and the
+//! tenant recovers by calling [`Session::trim`].
+
+use std::collections::VecDeque;
+
+use anyhow::{ensure, Result};
+
+use crate::alloc::request::AllocRequest;
+use crate::alloc::traits::Allocator;
+use crate::coordinator::dispatch::BatchReport;
+use crate::coordinator::system::{ExprReport, System};
+use crate::obs::metrics::HistId;
+use crate::os::process::Pid;
+use crate::pud::arith::{
+    self, ArithOp, Column, LayoutSpec, ProgramKey, ShardedLayout,
+    ShardedScratch, VerticalLayout,
+};
+use crate::pud::isa::BulkRequest;
+
+use super::error::{RejectReason, ServeError};
+
+/// Construction options for one tenant session.
+#[derive(Debug, Clone)]
+pub struct SessionConfig {
+    /// Tenant name — labels metrics (`serve/{name}/op_ns`) and reports.
+    pub name: String,
+    /// DRR weight: per-round credit is `quantum × weight` rows.
+    pub weight: u32,
+    /// Max resident scratch buffers across the session's pools; kernel
+    /// runs projecting past this are rejected (see module docs).
+    pub scratch_quota: usize,
+    /// Queue depth beyond which submissions report
+    /// `SubmitOutcome::Queued` (soft backpressure).
+    pub backpressure: usize,
+    /// Hard queue cap beyond which submissions are rejected.
+    pub queue_cap: usize,
+}
+
+impl Default for SessionConfig {
+    fn default() -> Self {
+        Self {
+            name: "tenant".to_string(),
+            weight: 1,
+            scratch_quota: 64,
+            backpressure: 64,
+            queue_cap: 256,
+        }
+    }
+}
+
+impl SessionConfig {
+    /// A default-config session named `name`.
+    pub fn named(name: impl Into<String>) -> Self {
+        Self { name: name.into(), ..Self::default() }
+    }
+}
+
+/// One tenant's handle on the machine (see module docs).
+pub struct Session {
+    pub(crate) pid: Pid,
+    name: String,
+    weight: u32,
+    scratch_quota: usize,
+    pub(crate) backpressure: usize,
+    pub(crate) queue_cap: usize,
+    /// Requests admitted but not yet executed, drained front-first by
+    /// the DRR scheduler (per-tenant FIFO order is preserved).
+    pub(crate) queue: VecDeque<BulkRequest>,
+    /// Per-shard scratch pools (flat kernels use pool 0).
+    pub(crate) pools: ShardedScratch,
+    /// DRR deficit counter, in rows.
+    pub(crate) deficit: u64,
+    /// Per-op simulated latency histogram (`serve/{name}/op_ns`).
+    pub(crate) op_hist: HistId,
+    /// Simulated completion time of this tenant's latest executed
+    /// request, on the owning gateway's clock.
+    pub(crate) last_done_ns: f64,
+}
+
+impl Session {
+    /// Open a session: spawns a private address space and registers
+    /// the tenant's latency histogram.
+    pub fn open(sys: &mut System, cfg: SessionConfig) -> Session {
+        let pid = sys.spawn();
+        let op_hist = sys
+            .coord
+            .obs
+            .registry
+            .hist(&format!("serve/{}/op_ns", cfg.name));
+        Session {
+            pid,
+            name: cfg.name,
+            weight: cfg.weight.max(1),
+            scratch_quota: cfg.scratch_quota,
+            backpressure: cfg.backpressure,
+            queue_cap: cfg.queue_cap,
+            queue: VecDeque::new(),
+            pools: ShardedScratch::new(),
+            deficit: 0,
+            op_hist,
+            last_done_ns: 0.0,
+        }
+    }
+
+    /// The tenant's name.
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// The tenant's DRR weight.
+    pub fn weight(&self) -> u32 {
+        self.weight
+    }
+
+    /// The session's resident scratch quota.
+    pub fn scratch_quota(&self) -> usize {
+        self.scratch_quota
+    }
+
+    /// Requests admitted but not yet executed.
+    pub fn pending(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Scratch buffers currently resident across the session's pools.
+    pub fn scratch_resident(&self) -> usize {
+        self.pools.resident()
+    }
+
+    /// Simulated completion time of the tenant's latest executed
+    /// request (gateway clock; 0 until something ran).
+    pub fn completed_ns(&self) -> f64 {
+        self.last_done_ns
+    }
+
+    /// Place one allocation in the session's address space. Placement
+    /// failures surface as typed
+    /// [`RejectReason::CapacityExhausted`] errors.
+    pub fn alloc(
+        &mut self,
+        sys: &mut System,
+        alloc: &mut dyn Allocator,
+        req: AllocRequest,
+    ) -> Result<u64> {
+        sys.alloc_with(alloc, self.pid, req).map_err(capacity)
+    }
+
+    /// Free an allocation made through [`Session::alloc`].
+    pub fn free(
+        &mut self,
+        sys: &mut System,
+        alloc: &mut dyn Allocator,
+        va: u64,
+    ) -> Result<()> {
+        sys.free(alloc, self.pid, va)
+    }
+
+    /// Write bytes through the session's virtual mapping.
+    pub fn write(&self, sys: &mut System, va: u64, data: &[u8]) -> Result<()> {
+        sys.write_virt(self.pid, va, data)
+    }
+
+    /// Read bytes through the session's virtual mapping.
+    pub fn read(&self, sys: &mut System, va: u64, len: u64) -> Result<Vec<u8>> {
+        sys.read_virt(self.pid, va, len)
+    }
+
+    /// Allocate a fresh [`Column`] under placement `spec`.
+    pub fn alloc_column(
+        &mut self,
+        sys: &mut System,
+        alloc: &mut dyn Allocator,
+        width: u32,
+        elems: usize,
+        spec: LayoutSpec,
+    ) -> Result<Column> {
+        match spec {
+            LayoutSpec::Flat => {
+                VerticalLayout::alloc(sys, alloc, self.pid, width, elems)
+                    .map(Column::Flat)
+            }
+            LayoutSpec::Sharded(n) => {
+                ShardedLayout::alloc(sys, alloc, self.pid, width, elems, n)
+                    .map(Column::Sharded)
+            }
+        }
+        .map_err(capacity)
+    }
+
+    /// Allocate a `width`-bit column shaped and placed like `like`
+    /// (flat: co-located with `like`'s planes; sharded: shard-for-shard
+    /// on `like`'s anchors) — the alignment-chaining pattern every
+    /// kernel operand/destination pair uses.
+    pub fn alloc_column_like(
+        &mut self,
+        sys: &mut System,
+        alloc: &mut dyn Allocator,
+        width: u32,
+        like: &Column,
+    ) -> Result<Column> {
+        match like {
+            Column::Flat(l) => VerticalLayout::alloc_with_hint(
+                sys,
+                alloc,
+                self.pid,
+                width,
+                l.elems(),
+                l.hint(),
+            )
+            .map(Column::Flat),
+            Column::Sharded(s) => {
+                ShardedLayout::alloc_like(sys, alloc, self.pid, width, s)
+                    .map(Column::Sharded)
+            }
+        }
+        .map_err(capacity)
+    }
+
+    /// Return a column's planes to the allocator.
+    pub fn free_column(
+        &mut self,
+        sys: &mut System,
+        alloc: &mut dyn Allocator,
+        col: &Column,
+    ) -> Result<()> {
+        match col {
+            Column::Flat(l) => l.free(sys, alloc, self.pid),
+            Column::Sharded(s) => s.free(sys, alloc, self.pid),
+        }
+    }
+
+    /// Transpose `values` into `col`'s planes.
+    pub fn store_column(
+        &self,
+        sys: &mut System,
+        col: &Column,
+        values: &[u64],
+    ) -> Result<()> {
+        match col {
+            Column::Flat(l) => l.store(sys, self.pid, values),
+            Column::Sharded(s) => s.store(sys, self.pid, values),
+        }
+    }
+
+    /// Read `col`'s planes back and untranspose.
+    pub fn load_column(
+        &self,
+        sys: &mut System,
+        col: &Column,
+    ) -> Result<Vec<u64>> {
+        match col {
+            Column::Flat(l) => l.load(sys, self.pid),
+            Column::Sharded(s) => s.load(sys, self.pid),
+        }
+    }
+
+    /// The session's resident cached column (see [`System::column`]).
+    #[allow(clippy::too_many_arguments)]
+    pub fn column(
+        &mut self,
+        sys: &mut System,
+        alloc: &mut dyn Allocator,
+        id: u64,
+        version: u64,
+        width: u32,
+        values: &[u64],
+        spec: LayoutSpec,
+    ) -> Result<Column> {
+        sys.column(alloc, self.pid, id, version, width, values, spec)
+            .map_err(capacity)
+    }
+
+    /// Run `op` over the session's columns (see [`System::arith`]),
+    /// with scratch-quota admission in front.
+    #[allow(clippy::too_many_arguments)]
+    pub fn arith(
+        &mut self,
+        sys: &mut System,
+        alloc: &mut dyn Allocator,
+        op: ArithOp,
+        a: &Column,
+        b: Option<&Column>,
+        dst: &Column,
+    ) -> Result<ExprReport> {
+        self.admit_kernel(sys, ProgramKey::Kernel(op, a.width()), 0, a)?;
+        sys.arith(alloc, self.pid, op, a, b, dst, &mut self.pools)
+    }
+
+    /// Run `op` with a constant rhs (see [`System::arith_const`]),
+    /// with scratch-quota admission in front.
+    #[allow(clippy::too_many_arguments)]
+    pub fn arith_const(
+        &mut self,
+        sys: &mut System,
+        alloc: &mut dyn Allocator,
+        op: ArithOp,
+        rhs: u64,
+        a: &Column,
+        dst: &Column,
+    ) -> Result<ExprReport> {
+        let key = ProgramKey::KernelConst(
+            op,
+            a.width(),
+            rhs & arith::width_mask(a.width()),
+        );
+        self.admit_kernel(sys, key, 0, a)?;
+        sys.arith_const(alloc, self.pid, op, rhs, a, dst, &mut self.pools)
+    }
+
+    /// Filter-then-sum over the session's columns (see
+    /// [`System::column_sum`]), with scratch-quota admission in front
+    /// of the masked path (the unmasked path leases nothing).
+    pub fn column_sum(
+        &mut self,
+        sys: &mut System,
+        alloc: &mut dyn Allocator,
+        values: &Column,
+        mask: Option<&Column>,
+    ) -> Result<(u128, Option<ExprReport>)> {
+        if mask.is_some() {
+            self.admit_kernel(
+                sys,
+                ProgramKey::MaskPlanes(values.width()),
+                values.width() as usize,
+                values,
+            )?;
+        }
+        sys.column_sum(alloc, self.pid, values, mask, &mut self.pools)
+    }
+
+    /// Trim every session pool to at most `keep` resident buffers —
+    /// how a tenant recovers from a scratch-quota rejection.
+    pub fn trim(
+        &mut self,
+        sys: &mut System,
+        alloc: &mut dyn Allocator,
+        keep: usize,
+    ) -> Result<()> {
+        sys.trim_pools(alloc, self.pid, &mut self.pools, keep)
+    }
+
+    /// Drain the session's queue back-to-back as ONE batch (no
+    /// cross-tenant interleaving) — the unfair baseline the DRR
+    /// scheduler is measured against, and the direct path for
+    /// single-tenant use.
+    pub fn flush_direct(&mut self, sys: &mut System) -> Result<BatchReport> {
+        let reqs: Vec<(Pid, BulkRequest)> =
+            self.queue.drain(..).map(|r| (self.pid, r)).collect();
+        if reqs.is_empty() {
+            return Ok(BatchReport::default());
+        }
+        let report = sys.submit_batch_tagged(&reqs)?;
+        for &ns in &report.per_op_ns {
+            sys.coord.obs.registry.observe_ns(self.op_hist, ns);
+        }
+        Ok(report)
+    }
+
+    /// Release every session-held machine resource: pending queue
+    /// entries are forfeited, scratch pools returned, cached columns
+    /// flushed. The session handle stays reusable afterwards.
+    pub fn release(
+        &mut self,
+        sys: &mut System,
+        alloc: &mut dyn Allocator,
+    ) -> Result<()> {
+        self.queue.clear();
+        self.deficit = 0;
+        for k in 0..self.pools.n_pools() {
+            sys.release_scratch(alloc, self.pid, self.pools.pool(k))?;
+        }
+        sys.flush_columns(alloc, self.pid)
+    }
+
+    /// Scratch-quota admission: compute the projected resident buffer
+    /// count across ALL session pools if the kernel behind `key`
+    /// leased `extra + scratch_needed` buffers per operand pool, and
+    /// refuse (typed, nothing leased) when it exceeds the quota.
+    fn admit_kernel(
+        &mut self,
+        sys: &mut System,
+        key: ProgramKey,
+        extra: usize,
+        a: &Column,
+    ) -> Result<()> {
+        ensure!(
+            a.width() <= arith::MAX_WIDTH,
+            "{}-bit operands exceed the {}-bit kernel limit",
+            a.width(),
+            arith::MAX_WIDTH
+        );
+        let (prog, _) = sys.program(key);
+        let need = extra + prog.scratch_needed();
+        let mut projected = 0usize;
+        match a {
+            Column::Flat(l) => {
+                projected += self.pools.pool(0).projected_len(need, l.plane_len());
+                for k in 1..self.pools.n_pools() {
+                    projected += self.pools.pool(k).len();
+                }
+            }
+            Column::Sharded(s) => {
+                for (k, part) in s.shards().iter().enumerate() {
+                    projected +=
+                        self.pools.pool(k).projected_len(need, part.plane_len());
+                }
+                for k in s.n_shards()..self.pools.n_pools() {
+                    projected += self.pools.pool(k).len();
+                }
+            }
+        }
+        if projected > self.scratch_quota {
+            return Err(anyhow::Error::new(ServeError::Rejected(
+                RejectReason::ScratchExhausted {
+                    projected,
+                    quota: self.scratch_quota,
+                },
+            )));
+        }
+        Ok(())
+    }
+}
+
+/// Flatten an allocator failure into the typed capacity rejection.
+fn capacity(e: anyhow::Error) -> anyhow::Error {
+    anyhow::Error::new(ServeError::Rejected(RejectReason::CapacityExhausted {
+        detail: e.to_string(),
+    }))
+}

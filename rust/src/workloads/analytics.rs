@@ -17,7 +17,7 @@
 //! the masked sum value against host-side scalar arithmetic.
 //!
 //! Host-boundary accounting (DESIGN.md §12): columns are fetched
-//! through the system's resident-column cache (`System::cached_column`
+//! through the system's resident-column cache (`System::column`
 //! — transpose once, query many; each kernel of a cell re-fetches by
 //! id, so the second kernel and every warm repeat is a cache hit), the
 //! scratch pool persists across cells (its size-classed free lists
@@ -29,7 +29,6 @@ use std::time::Instant;
 
 use anyhow::{ensure, Result};
 
-use crate::alloc::scratch::ScratchPool;
 use crate::alloc::traits::Allocator;
 use crate::coordinator::system::{System, SystemConfig};
 use crate::dram::address::InterleaveScheme;
@@ -37,7 +36,8 @@ use crate::dram::energy::EnergyParams;
 use crate::dram::timing::TimingParams;
 use crate::os::process::Pid;
 use crate::pud::arith::{
-    self, ArithOp, ShardedLayout, ShardedScratch, VerticalLayout,
+    self, ArithOp, Column, LayoutSpec, ShardedLayout, ShardedScratch,
+    VerticalLayout,
 };
 use crate::pud::compiler::CompileStats;
 use crate::util::rng::Pcg64;
@@ -148,7 +148,7 @@ pub fn run_cell(
     name: &'static str,
     cfg: &AnalyticsConfig,
     width: u32,
-    pool: &mut ScratchPool,
+    pools: &mut ShardedScratch,
 ) -> Result<AnalyticsResult> {
     ensure!(
         (1..=arith::MAX_WIDTH).contains(&width),
@@ -161,23 +161,38 @@ pub fn run_cell(
         (0..cfg.elems).map(|_| rng.next_u64() & mask_bits).collect();
 
     let stats0 = sys.column_cache_stats();
-    let leases0 = pool.leases;
+    let leases0 = pools.leases();
 
     // the column is keyed by width and versioned by the seed that
     // generated it; a miss transposes (blocked) and stores, a hit
     // returns the resident planes untouched
     let t = Instant::now();
-    let col =
-        sys.cached_column(alloc, pid, width as u64, cfg.seed, width, &values)?;
+    let col = sys.column(
+        alloc,
+        pid,
+        width as u64,
+        cfg.seed,
+        width,
+        &values,
+        LayoutSpec::Flat,
+    )?;
     let mut host_ns = t.elapsed().as_nanos() as f64;
     let mask = VerticalLayout::alloc_with_hint(
         sys, alloc, pid, 1, cfg.elems, col.hint(),
     )?;
+    let mask_col = Column::Flat(mask.clone());
 
     // compiled predicate: v < T with T's bits folded at compile time,
     // served from the system's (op, width, T) program cache
-    let rep =
-        sys.run_arith_const(alloc, pid, ArithOp::CmpLt, thr, &col, &mask, pool)?;
+    let rep = sys.arith_const(
+        alloc,
+        pid,
+        ArithOp::CmpLt,
+        thr,
+        &col,
+        &mask_col,
+        pools,
+    )?;
 
     // verify the mask bit-for-bit against scalar compares
     let t = Instant::now();
@@ -195,11 +210,18 @@ pub fn run_cell(
     // filter-then-sum: in-DRAM masking, host tree reduction; the
     // column re-fetch is a resident-cache hit (no transpose, no store)
     let t = Instant::now();
-    let col =
-        sys.cached_column(alloc, pid, width as u64, cfg.seed, width, &values)?;
+    let col = sys.column(
+        alloc,
+        pid,
+        width as u64,
+        cfg.seed,
+        width,
+        &values,
+        LayoutSpec::Flat,
+    )?;
     host_ns += t.elapsed().as_nanos() as f64;
     let (sum, sum_rep) =
-        sys.arith_sum(alloc, pid, &col, Some(mask.planes()[0]), pool)?;
+        sys.column_sum(alloc, pid, &col, Some(&mask_col), pools)?;
     let want: u128 = values
         .iter()
         .filter(|v| **v < thr)
@@ -214,7 +236,7 @@ pub fn run_cell(
     let cost = arith::kernel_cost(
         ArithOp::CmpLt,
         width,
-        col.plane_len(),
+        col.as_flat().expect("flat spec").plane_len(),
         sys.os.scheme.geometry.row_bytes as u64,
         &TimingParams::default(),
         &EnergyParams::default(),
@@ -238,8 +260,8 @@ pub fn run_cell(
         pud_rows: rep.pud_rows + sum_rep.pud_rows,
         fallback_rows: rep.fallback_rows + sum_rep.fallback_rows,
         aaps_per_elem: cost.aaps as f64 / cfg.elems as f64,
-        pool_high_water: pool.high_water,
-        pool_leases: pool.leases - leases0,
+        pool_high_water: pools.high_water(),
+        pool_leases: pools.leases() - leases0,
         col_hits: (stats1.resident_hits + stats1.host_hits)
             - (stats0.resident_hits + stats0.host_hits),
         col_misses: (stats1.resident_misses + stats1.host_misses)
@@ -267,7 +289,7 @@ pub fn run(
     })?;
     let pid = sys.spawn();
     let mut alloc = kind.build(&mut sys, cfg.puma_pages)?;
-    let mut pool = ScratchPool::new();
+    let mut pools = ShardedScratch::new();
     let mut out = Vec::with_capacity(cfg.widths.len());
     for &w in &cfg.widths {
         out.push(run_cell(
@@ -277,10 +299,10 @@ pub fn run(
             kind.name(),
             cfg,
             w,
-            &mut pool,
+            &mut pools,
         )?);
     }
-    sys.release_scratch(alloc.as_mut(), pid, &mut pool)?;
+    sys.trim_pools(alloc.as_mut(), pid, &mut pools, 0)?;
     sys.flush_columns(alloc.as_mut(), pid)?;
     Ok(out)
 }
@@ -438,30 +460,37 @@ pub fn run_cell_sharded(
     // key): a miss slices the flat cell's once-transposed host image
     // into the shards instead of re-transposing the values
     let t = Instant::now();
-    let col = sys.cached_column_sharded(
+    let col = sys.column(
         alloc,
         pid,
         width as u64,
         cfg.seed,
         width,
         &values,
-        shards,
+        LayoutSpec::Sharded(shards),
     )?;
     let mut host_ns = t.elapsed().as_nanos() as f64;
-    let mask = ShardedLayout::alloc_like(sys, alloc, pid, 1, &col)?;
+    let mask = ShardedLayout::alloc_like(
+        sys,
+        alloc,
+        pid,
+        1,
+        col.as_sharded().expect("sharded spec"),
+    )?;
+    let mask_col = Column::Sharded(mask.clone());
 
-    let rep = sys.run_arith_const_sharded(
+    let rep = sys.arith_const(
         alloc,
         pid,
         ArithOp::CmpLt,
         thr,
         &col,
-        &mask,
+        &mask_col,
         pools,
     )?;
 
     // verify the sharded mask bit-for-bit against scalar compares
-    // (arith_sum_sharded below re-reads the shards through the
+    // (the sharded column_sum below re-reads the shards through the
     // padding-safe popcount path; no need to duplicate that here)
     let t = Instant::now();
     let got = mask.load(sys, pid)?;
@@ -477,18 +506,18 @@ pub fn run_cell_sharded(
     // filter-then-sum: every shard's in-DRAM masking in one batch; the
     // column re-fetch is a resident-cache hit
     let t = Instant::now();
-    let col = sys.cached_column_sharded(
+    let col = sys.column(
         alloc,
         pid,
         width as u64,
         cfg.seed,
         width,
         &values,
-        shards,
+        LayoutSpec::Sharded(shards),
     )?;
     host_ns += t.elapsed().as_nanos() as f64;
     let (sum, sum_rep) =
-        sys.arith_sum_sharded(alloc, pid, &col, Some(&mask), pools)?;
+        sys.column_sum(alloc, pid, &col, Some(&mask_col), pools)?;
     let want: u128 = values
         .iter()
         .filter(|v| **v < thr)
@@ -500,7 +529,7 @@ pub fn run_cell_sharded(
     );
     let sum_rep = sum_rep.expect("masked sum submits a batch");
 
-    let shard_count = col.n_shards();
+    let shard_count = col.spec().shards();
     // only the mask is per-cell transient; the sharded column stays
     // resident and scratch stays parked in the per-shard pools
     mask.free(sys, alloc, pid)?;
@@ -553,7 +582,9 @@ pub fn run_sharded(
     let pid = sys.spawn();
     let mut alloc = kind.build(&mut sys, cfg.puma_pages)?;
     let acfg = cfg.as_analytics();
-    let mut pool = ScratchPool::new();
+    // flat cells use pool 0, sharded cells pools 0..S; the size classes
+    // keep the two shapes from evicting each other
+    let mut flat_pools = ShardedScratch::new();
     let mut pools = ShardedScratch::new();
     let mut out = Vec::with_capacity(cfg.widths.len() * cfg.shards.len());
     for &w in &cfg.widths {
@@ -564,7 +595,7 @@ pub fn run_sharded(
             kind.name(),
             &acfg,
             w,
-            &mut pool,
+            &mut flat_pools,
         )?;
         for &s in &cfg.shards {
             let cell = run_cell_sharded(
@@ -585,8 +616,8 @@ pub fn run_sharded(
             out.push(cell);
         }
     }
-    sys.release_scratch(alloc.as_mut(), pid, &mut pool)?;
-    sys.trim_scratch_sharded(alloc.as_mut(), pid, &mut pools, 0)?;
+    sys.trim_pools(alloc.as_mut(), pid, &mut flat_pools, 0)?;
+    sys.trim_pools(alloc.as_mut(), pid, &mut pools, 0)?;
     sys.flush_columns(alloc.as_mut(), pid)?;
     Ok(out)
 }
@@ -678,15 +709,15 @@ mod tests {
         let pid = sys.spawn();
         let kind = AllocatorKind::Puma(FitPolicy::WorstFit);
         let mut alloc = kind.build(&mut sys, cfg.puma_pages).unwrap();
-        let mut pool = ScratchPool::new();
+        let mut pools = ShardedScratch::new();
         let cold = run_cell(
-            &mut sys, alloc.as_mut(), pid, "puma", &cfg, 8, &mut pool,
+            &mut sys, alloc.as_mut(), pid, "puma", &cfg, 8, &mut pools,
         )
         .unwrap();
         assert!(cold.col_misses >= 1, "cold cell builds the column");
         assert!(cold.pool_leases > 0, "cold cell leases scratch");
         let warm = run_cell(
-            &mut sys, alloc.as_mut(), pid, "puma", &cfg, 8, &mut pool,
+            &mut sys, alloc.as_mut(), pid, "puma", &cfg, 8, &mut pools,
         )
         .unwrap();
         assert_eq!(warm.col_misses, 0, "warm repeat rebuilds nothing");
@@ -697,7 +728,7 @@ mod tests {
         );
         assert_eq!(warm.sum, cold.sum);
         assert_eq!(warm.matches, cold.matches);
-        sys.release_scratch(alloc.as_mut(), pid, &mut pool).unwrap();
+        sys.trim_pools(alloc.as_mut(), pid, &mut pools, 0).unwrap();
         sys.flush_columns(alloc.as_mut(), pid).unwrap();
     }
 
@@ -717,24 +748,29 @@ mod tests {
         let mut alloc = kind.build(&mut sys, 4).unwrap();
         let a: Vec<u64> = (0..1000).map(|i| i % 13).collect();
         let col = sys
-            .cached_column(alloc.as_mut(), pid, 1, 0, 4, &a)
+            .column(alloc.as_mut(), pid, 1, 0, 4, &a, LayoutSpec::Flat)
             .unwrap();
-        assert_eq!(col.load(&mut sys, pid).unwrap(), a);
+        let flat = col.as_flat().unwrap();
+        assert_eq!(flat.load(&mut sys, pid).unwrap(), a);
         // an in-place store mutates the planes behind the cache's
         // back; the invalidation hook forces the next fetch to rebuild
         let b: Vec<u64> = (0..1000).map(|i| (i + 5) % 13).collect();
-        col.store(&mut sys, pid, &b).unwrap();
+        flat.store(&mut sys, pid, &b).unwrap();
         sys.invalidate_column(1);
         let col2 = sys
-            .cached_column(alloc.as_mut(), pid, 1, 0, 4, &b)
+            .column(alloc.as_mut(), pid, 1, 0, 4, &b, LayoutSpec::Flat)
             .unwrap();
-        assert_eq!(col2.load(&mut sys, pid).unwrap(), b, "stale plane served");
+        assert_eq!(
+            col2.as_flat().unwrap().load(&mut sys, pid).unwrap(),
+            b,
+            "stale plane served"
+        );
         // a version bump rebuilds too, without an explicit invalidate
         let c: Vec<u64> = (0..1000).map(|i| (i + 9) % 13).collect();
         let col3 = sys
-            .cached_column(alloc.as_mut(), pid, 1, 1, 4, &c)
+            .column(alloc.as_mut(), pid, 1, 1, 4, &c, LayoutSpec::Flat)
             .unwrap();
-        assert_eq!(col3.load(&mut sys, pid).unwrap(), c);
+        assert_eq!(col3.as_flat().unwrap().load(&mut sys, pid).unwrap(), c);
         let stats = sys.column_cache_stats();
         assert!(stats.invalidations >= 1);
         sys.flush_columns(alloc.as_mut(), pid).unwrap();

@@ -21,6 +21,11 @@
 //!   semi-join, single-batch group-by aggregation, and top-k
 //!   threshold bisection over a TPC-H-flavored micro-table, verified
 //!   against scalar oracles and swept over allocators.
+//! * [`serve`] — the multi-tenant serving study: twin gateways drain
+//!   identical mixed traffic (filter/analytics/query/churn tenants)
+//!   under the DRR fairness scheduler vs back-to-back, verifying
+//!   byte-identical results while comparing tenant-completion
+//!   percentiles (DESIGN.md §15).
 
 pub mod analytics;
 pub mod bitmap_index;
@@ -28,6 +33,7 @@ pub mod churn;
 pub mod filter;
 pub mod microbench;
 pub mod queries;
+pub mod serve;
 pub mod setops;
 pub mod sweep;
 pub mod trace;

@@ -31,13 +31,13 @@ use std::time::Instant;
 
 use anyhow::{ensure, Result};
 
-use crate::alloc::scratch::ScratchPool;
 use crate::alloc::traits::Allocator;
 use crate::coordinator::system::{System, SystemConfig};
 use crate::dram::address::InterleaveScheme;
 use crate::os::process::Pid;
 use crate::pud::arith::{
-    self, ArithOp, ShardedLayout, ShardedScratch, VerticalLayout,
+    self, ArithOp, Column, LayoutSpec, ShardedLayout, ShardedScratch,
+    VerticalLayout,
 };
 use crate::pud::query::{self, QueryReport};
 use crate::util::rng::Pcg64;
@@ -243,7 +243,7 @@ pub fn run_cell_semi_join(
     pid: Pid,
     name: &'static str,
     cfg: &QueriesConfig,
-    pool: &mut ScratchPool,
+    pools: &mut ShardedScratch,
 ) -> Result<QueryResult> {
     ensure!(
         (1..=arith::MAX_WIDTH).contains(&cfg.width),
@@ -252,15 +252,22 @@ pub fn run_cell_semi_join(
     );
     let (cust, _grp, qty, build) = cfg.table();
     let thr = threshold(cfg.width, cfg.threshold_frac);
-    let meter = CellMeter::start(sys, pool.leases);
+    let meter = CellMeter::start(sys, pools.leases());
 
     // each column is used immediately after its own fetch (an evicted
     // column's planes are freed, so holding a layout across another
     // fetch would break under a tight column budget): quantity first
     // for the predicate, custkey next for the join
     let t = Instant::now();
-    let qty_col =
-        sys.cached_column(alloc, pid, QUANTITY_ID, cfg.seed, cfg.width, &qty)?;
+    let qty_col = sys.column(
+        alloc,
+        pid,
+        QUANTITY_ID,
+        cfg.seed,
+        cfg.width,
+        &qty,
+        LayoutSpec::Flat,
+    )?;
     let mut host_ns = t.elapsed().as_nanos() as f64;
 
     // residual predicate mask: quantity < T (cached const kernel)
@@ -272,14 +279,29 @@ pub fn run_cell_semi_join(
         cfg.rows,
         qty_col.hint(),
     )?;
+    let pred_col = Column::Flat(pred.clone());
     let mut rep = QueryReport::default();
-    let er =
-        sys.run_arith_const(alloc, pid, ArithOp::CmpLt, thr, &qty_col, &pred, pool)?;
+    let er = sys.arith_const(
+        alloc,
+        pid,
+        ArithOp::CmpLt,
+        thr,
+        &qty_col,
+        &pred_col,
+        pools,
+    )?;
     rep.absorb(&er);
 
     let t = Instant::now();
-    let cust_col =
-        sys.cached_column(alloc, pid, CUSTKEY_ID, cfg.seed, cfg.width, &cust)?;
+    let cust_col = sys.column(
+        alloc,
+        pid,
+        CUSTKEY_ID,
+        cfg.seed,
+        cfg.width,
+        &cust,
+        LayoutSpec::Flat,
+    )?;
     host_ns += t.elapsed().as_nanos() as f64;
 
     // key-presence semi-join AND the predicate, one batch
@@ -295,11 +317,11 @@ pub fn run_cell_semi_join(
         sys,
         alloc,
         pid,
-        &cust_col,
+        cust_col.as_flat().expect("flat spec"),
         &build,
         Some(pred.planes()[0]),
         &dst,
-        pool,
+        pools.pool(0),
     )?);
 
     // verify the mask bit-for-bit against the scalar oracle
@@ -316,11 +338,19 @@ pub fn run_cell_semi_join(
 
     // SUM(quantity) over the survivors, masked in-DRAM
     let t = Instant::now();
-    let qty_col =
-        sys.cached_column(alloc, pid, QUANTITY_ID, cfg.seed, cfg.width, &qty)?;
+    let qty_col = sys.column(
+        alloc,
+        pid,
+        QUANTITY_ID,
+        cfg.seed,
+        cfg.width,
+        &qty,
+        LayoutSpec::Flat,
+    )?;
     host_ns += t.elapsed().as_nanos() as f64;
+    let dst_col = Column::Flat(dst.clone());
     let (agg, sum_rep) =
-        sys.arith_sum(alloc, pid, &qty_col, Some(dst.planes()[0]), pool)?;
+        sys.column_sum(alloc, pid, &qty_col, Some(&dst_col), pools)?;
     if let Some(er) = sum_rep {
         rep.absorb(&er);
     }
@@ -344,8 +374,8 @@ pub fn run_cell_semi_join(
         matches,
         agg,
         &rep,
-        pool.leases,
-        pool.high_water,
+        pools.leases(),
+        pools.high_water(),
         host_ns,
     ))
 }
@@ -358,7 +388,7 @@ pub fn run_cell_group_by(
     pid: Pid,
     name: &'static str,
     cfg: &QueriesConfig,
-    pool: &mut ScratchPool,
+    pools: &mut ShardedScratch,
 ) -> Result<QueryResult> {
     ensure!(
         (1..=arith::MAX_WIDTH).contains(&cfg.width),
@@ -373,17 +403,38 @@ pub fn run_cell_group_by(
     );
     let (_cust, grp, qty, _build) = cfg.table();
     let groups: Vec<u64> = (0..cfg.groups).collect();
-    let meter = CellMeter::start(sys, pool.leases);
+    let meter = CellMeter::start(sys, pools.leases());
 
     let t = Instant::now();
-    let grp_col =
-        sys.cached_column(alloc, pid, GROUPKEY_ID, cfg.seed, cfg.width, &grp)?;
-    let qty_col =
-        sys.cached_column(alloc, pid, QUANTITY_ID, cfg.seed, cfg.width, &qty)?;
+    let grp_col = sys.column(
+        alloc,
+        pid,
+        GROUPKEY_ID,
+        cfg.seed,
+        cfg.width,
+        &grp,
+        LayoutSpec::Flat,
+    )?;
+    let qty_col = sys.column(
+        alloc,
+        pid,
+        QUANTITY_ID,
+        cfg.seed,
+        cfg.width,
+        &qty,
+        LayoutSpec::Flat,
+    )?;
     let host_ns = t.elapsed().as_nanos() as f64;
 
-    let (aggs, rep) =
-        query::group_by_sum(sys, alloc, pid, &grp_col, &qty_col, &groups, pool)?;
+    let (aggs, rep) = query::group_by_sum(
+        sys,
+        alloc,
+        pid,
+        grp_col.as_flat().expect("flat spec"),
+        qty_col.as_flat().expect("flat spec"),
+        &groups,
+        pools.pool(0),
+    )?;
 
     let want = query::reference::group_by(&grp, &qty, &groups);
     ensure!(aggs.len() == want.len(), "{name}: group count diverged");
@@ -409,8 +460,8 @@ pub fn run_cell_group_by(
         matches,
         agg,
         &rep,
-        pool.leases,
-        pool.high_water,
+        pools.leases(),
+        pools.high_water(),
         host_ns,
     ))
 }
@@ -423,7 +474,7 @@ pub fn run_cell_top_k(
     pid: Pid,
     name: &'static str,
     cfg: &QueriesConfig,
-    pool: &mut ScratchPool,
+    pools: &mut ShardedScratch,
 ) -> Result<QueryResult> {
     ensure!(
         (1..=arith::MAX_WIDTH).contains(&cfg.width),
@@ -431,11 +482,18 @@ pub fn run_cell_top_k(
         cfg.width
     );
     let (_cust, _grp, qty, _build) = cfg.table();
-    let meter = CellMeter::start(sys, pool.leases);
+    let meter = CellMeter::start(sys, pools.leases());
 
     let t = Instant::now();
-    let qty_col =
-        sys.cached_column(alloc, pid, QUANTITY_ID, cfg.seed, cfg.width, &qty)?;
+    let qty_col = sys.column(
+        alloc,
+        pid,
+        QUANTITY_ID,
+        cfg.seed,
+        cfg.width,
+        &qty,
+        LayoutSpec::Flat,
+    )?;
     let mut host_ns = t.elapsed().as_nanos() as f64;
 
     let dst = VerticalLayout::alloc_with_hint(
@@ -446,7 +504,15 @@ pub fn run_cell_top_k(
         cfg.rows,
         qty_col.hint(),
     )?;
-    let (tk, mut rep) = query::top_k(sys, alloc, pid, &qty_col, cfg.k, &dst, pool)?;
+    let (tk, mut rep) = query::top_k(
+        sys,
+        alloc,
+        pid,
+        qty_col.as_flat().expect("flat spec"),
+        cfg.k,
+        &dst,
+        pools.pool(0),
+    )?;
 
     let (want_t, want_sel) = query::reference::top_k(&qty, cfg.k, cfg.width);
     ensure!(
@@ -467,11 +533,19 @@ pub fn run_cell_top_k(
     );
 
     let t = Instant::now();
-    let qty_col =
-        sys.cached_column(alloc, pid, QUANTITY_ID, cfg.seed, cfg.width, &qty)?;
+    let qty_col = sys.column(
+        alloc,
+        pid,
+        QUANTITY_ID,
+        cfg.seed,
+        cfg.width,
+        &qty,
+        LayoutSpec::Flat,
+    )?;
     host_ns += t.elapsed().as_nanos() as f64;
+    let dst_col = Column::Flat(dst.clone());
     let (agg, sum_rep) =
-        sys.arith_sum(alloc, pid, &qty_col, Some(dst.planes()[0]), pool)?;
+        sys.column_sum(alloc, pid, &qty_col, Some(&dst_col), pools)?;
     if let Some(er) = sum_rep {
         rep.absorb(&er);
     }
@@ -494,8 +568,8 @@ pub fn run_cell_top_k(
         tk.selected,
         agg,
         &rep,
-        pool.leases,
-        pool.high_water,
+        pools.leases(),
+        pools.high_water(),
         host_ns,
     ))
 }
@@ -516,36 +590,61 @@ pub fn run_cell_semi_join_sharded(
     // fetch order mirrors the flat cell: every column is used right
     // after its own fetch so tight column budgets stay legal
     let t = Instant::now();
-    let qty_col = sys.cached_column_sharded(
-        alloc, pid, QUANTITY_ID, cfg.seed, cfg.width, &qty, cfg.shards,
+    let qty_col = sys.column(
+        alloc,
+        pid,
+        QUANTITY_ID,
+        cfg.seed,
+        cfg.width,
+        &qty,
+        LayoutSpec::Sharded(cfg.shards),
     )?;
     let mut host_ns = t.elapsed().as_nanos() as f64;
 
-    let pred = ShardedLayout::alloc_like(sys, alloc, pid, 1, &qty_col)?;
+    let pred = ShardedLayout::alloc_like(
+        sys,
+        alloc,
+        pid,
+        1,
+        qty_col.as_sharded().expect("sharded spec"),
+    )?;
+    let pred_col = Column::Sharded(pred.clone());
     let mut rep = QueryReport::default();
-    let er = sys.run_arith_const_sharded(
+    let er = sys.arith_const(
         alloc,
         pid,
         ArithOp::CmpLt,
         thr,
         &qty_col,
-        &pred,
+        &pred_col,
         pools,
     )?;
     rep.absorb(&er);
 
     let t = Instant::now();
-    let cust_col = sys.cached_column_sharded(
-        alloc, pid, CUSTKEY_ID, cfg.seed, cfg.width, &cust, cfg.shards,
+    let cust_col = sys.column(
+        alloc,
+        pid,
+        CUSTKEY_ID,
+        cfg.seed,
+        cfg.width,
+        &cust,
+        LayoutSpec::Sharded(cfg.shards),
     )?;
     host_ns += t.elapsed().as_nanos() as f64;
 
-    let dst = ShardedLayout::alloc_like(sys, alloc, pid, 1, &cust_col)?;
+    let dst = ShardedLayout::alloc_like(
+        sys,
+        alloc,
+        pid,
+        1,
+        cust_col.as_sharded().expect("sharded spec"),
+    )?;
     rep.merge(&query::semi_join_mask_sharded(
         sys,
         alloc,
         pid,
-        &cust_col,
+        cust_col.as_sharded().expect("sharded spec"),
         &build,
         Some(&pred),
         &dst,
@@ -567,12 +666,19 @@ pub fn run_cell_semi_join_sharded(
     let matches = got.iter().filter(|&&g| g == 1).count() as u64;
 
     let t = Instant::now();
-    let qty_col = sys.cached_column_sharded(
-        alloc, pid, QUANTITY_ID, cfg.seed, cfg.width, &qty, cfg.shards,
+    let qty_col = sys.column(
+        alloc,
+        pid,
+        QUANTITY_ID,
+        cfg.seed,
+        cfg.width,
+        &qty,
+        LayoutSpec::Sharded(cfg.shards),
     )?;
     host_ns += t.elapsed().as_nanos() as f64;
+    let dst_col = Column::Sharded(dst.clone());
     let (agg, sum_rep) =
-        sys.arith_sum_sharded(alloc, pid, &qty_col, Some(&dst), pools)?;
+        sys.column_sum(alloc, pid, &qty_col, Some(&dst_col), pools)?;
     if let Some(er) = sum_rep {
         rep.absorb(&er);
     }
@@ -616,16 +722,34 @@ pub fn run_cell_group_by_sharded(
     let meter = CellMeter::start(sys, pools.leases());
 
     let t = Instant::now();
-    let grp_col = sys.cached_column_sharded(
-        alloc, pid, GROUPKEY_ID, cfg.seed, cfg.width, &grp, cfg.shards,
+    let grp_col = sys.column(
+        alloc,
+        pid,
+        GROUPKEY_ID,
+        cfg.seed,
+        cfg.width,
+        &grp,
+        LayoutSpec::Sharded(cfg.shards),
     )?;
-    let qty_col = sys.cached_column_sharded(
-        alloc, pid, QUANTITY_ID, cfg.seed, cfg.width, &qty, cfg.shards,
+    let qty_col = sys.column(
+        alloc,
+        pid,
+        QUANTITY_ID,
+        cfg.seed,
+        cfg.width,
+        &qty,
+        LayoutSpec::Sharded(cfg.shards),
     )?;
     let host_ns = t.elapsed().as_nanos() as f64;
 
     let (aggs, rep) = query::group_by_sum_sharded(
-        sys, alloc, pid, &grp_col, &qty_col, &groups, pools,
+        sys,
+        alloc,
+        pid,
+        grp_col.as_sharded().expect("sharded spec"),
+        qty_col.as_sharded().expect("sharded spec"),
+        &groups,
+        pools,
     )?;
 
     let want = query::reference::group_by(&grp, &qty, &groups);
@@ -669,14 +793,33 @@ pub fn run_cell_top_k_sharded(
     let meter = CellMeter::start(sys, pools.leases());
 
     let t = Instant::now();
-    let qty_col = sys.cached_column_sharded(
-        alloc, pid, QUANTITY_ID, cfg.seed, cfg.width, &qty, cfg.shards,
+    let qty_col = sys.column(
+        alloc,
+        pid,
+        QUANTITY_ID,
+        cfg.seed,
+        cfg.width,
+        &qty,
+        LayoutSpec::Sharded(cfg.shards),
     )?;
     let mut host_ns = t.elapsed().as_nanos() as f64;
 
-    let dst = ShardedLayout::alloc_like(sys, alloc, pid, 1, &qty_col)?;
-    let (tk, mut rep) =
-        query::top_k_sharded(sys, alloc, pid, &qty_col, cfg.k, &dst, pools)?;
+    let dst = ShardedLayout::alloc_like(
+        sys,
+        alloc,
+        pid,
+        1,
+        qty_col.as_sharded().expect("sharded spec"),
+    )?;
+    let (tk, mut rep) = query::top_k_sharded(
+        sys,
+        alloc,
+        pid,
+        qty_col.as_sharded().expect("sharded spec"),
+        cfg.k,
+        &dst,
+        pools,
+    )?;
 
     let (want_t, want_sel) = query::reference::top_k(&qty, cfg.k, cfg.width);
     ensure!(
@@ -697,12 +840,19 @@ pub fn run_cell_top_k_sharded(
     }
 
     let t = Instant::now();
-    let qty_col = sys.cached_column_sharded(
-        alloc, pid, QUANTITY_ID, cfg.seed, cfg.width, &qty, cfg.shards,
+    let qty_col = sys.column(
+        alloc,
+        pid,
+        QUANTITY_ID,
+        cfg.seed,
+        cfg.width,
+        &qty,
+        LayoutSpec::Sharded(cfg.shards),
     )?;
     host_ns += t.elapsed().as_nanos() as f64;
+    let dst_col = Column::Sharded(dst.clone());
     let (agg, sum_rep) =
-        sys.arith_sum_sharded(alloc, pid, &qty_col, Some(&dst), pools)?;
+        sys.column_sum(alloc, pid, &qty_col, Some(&dst_col), pools)?;
     if let Some(er) = sum_rep {
         rep.absorb(&er);
     }
@@ -750,12 +900,18 @@ pub fn run(
     })?;
     let pid = sys.spawn();
     let mut alloc = kind.build(&mut sys, cfg.puma_pages)?;
-    let mut pool = ScratchPool::new();
+    let mut flat_pools = ShardedScratch::new();
     let mut out = Vec::new();
     let flat = [
-        run_cell_semi_join(&mut sys, alloc.as_mut(), pid, kind.name(), cfg, &mut pool)?,
-        run_cell_group_by(&mut sys, alloc.as_mut(), pid, kind.name(), cfg, &mut pool)?,
-        run_cell_top_k(&mut sys, alloc.as_mut(), pid, kind.name(), cfg, &mut pool)?,
+        run_cell_semi_join(
+            &mut sys, alloc.as_mut(), pid, kind.name(), cfg, &mut flat_pools,
+        )?,
+        run_cell_group_by(
+            &mut sys, alloc.as_mut(), pid, kind.name(), cfg, &mut flat_pools,
+        )?,
+        run_cell_top_k(
+            &mut sys, alloc.as_mut(), pid, kind.name(), cfg, &mut flat_pools,
+        )?,
     ];
     if cfg.shards > 1 {
         let mut pools = ShardedScratch::new();
@@ -778,13 +934,13 @@ pub fn run(
                 s.shape
             );
         }
-        sys.trim_scratch_sharded(alloc.as_mut(), pid, &mut pools, 0)?;
+        sys.trim_pools(alloc.as_mut(), pid, &mut pools, 0)?;
         out.extend(flat);
         out.extend(sharded);
     } else {
         out.extend(flat);
     }
-    sys.release_scratch(alloc.as_mut(), pid, &mut pool)?;
+    sys.trim_pools(alloc.as_mut(), pid, &mut flat_pools, 0)?;
     sys.flush_columns(alloc.as_mut(), pid)?;
     Ok(out)
 }
@@ -902,14 +1058,14 @@ mod tests {
         let pid = sys.spawn();
         let kind = AllocatorKind::Puma(FitPolicy::WorstFit);
         let mut alloc = kind.build(&mut sys, c.puma_pages).unwrap();
-        let mut pool = ScratchPool::new();
+        let mut pools = ShardedScratch::new();
         let cold = run_cell_semi_join(
-            &mut sys, alloc.as_mut(), pid, "puma", &c, &mut pool,
+            &mut sys, alloc.as_mut(), pid, "puma", &c, &mut pools,
         )
         .unwrap();
         assert!(cold.col_misses >= 1 && cold.compiles >= 1);
         let warm = run_cell_semi_join(
-            &mut sys, alloc.as_mut(), pid, "puma", &c, &mut pool,
+            &mut sys, alloc.as_mut(), pid, "puma", &c, &mut pools,
         )
         .unwrap();
         assert_eq!(warm.col_misses, 0, "warm repeat rebuilds no column");
@@ -917,7 +1073,7 @@ mod tests {
         assert_eq!(warm.pool_leases, 0, "warm repeat leases nothing");
         assert_eq!(warm.agg, cold.agg);
         assert_eq!(warm.matches, cold.matches);
-        sys.release_scratch(alloc.as_mut(), pid, &mut pool).unwrap();
+        sys.trim_pools(alloc.as_mut(), pid, &mut pools, 0).unwrap();
         sys.flush_columns(alloc.as_mut(), pid).unwrap();
     }
 

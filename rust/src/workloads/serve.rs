@@ -1,0 +1,488 @@
+//! The multi-tenant serving workload.
+//!
+//! Boots the SAME machine twice (same seed, same allocator, same
+//! per-tenant traffic) behind two [`Gateway`]s and drains one with the
+//! DRR fairness scheduler ([`Gateway::drain`]) and the other
+//! back-to-back, tenant after tenant
+//! ([`Gateway::drain_back_to_back`]). Because every tenant touches
+//! only its own session's buffers, the two schedules must produce
+//! byte-identical memory images — the driver reads every buffer back
+//! from both machines and records the comparison in
+//! [`ServeResult::identical`] — while their *tenant completion times*
+//! differ: under DRR the p99 tenant completion tracks the interleaved
+//! makespan (PUMA's bank-disjoint placement lets the hazard-wave
+//! scheduler overlap different tenants' rows), whereas back-to-back
+//! the p99 tenant waits for every earlier tenant's full queue.
+//!
+//! Each tenant runs one of four traffic kinds (round-robin by tenant
+//! index — [`Traffic`]): independent boolean *filter* planes, a
+//! dependent *analytics* chain, progressive *query* mask folds, and
+//! RowClone-heavy *churn*. Tenant buffers follow the paper's
+//! allocation protocol through the [`AllocRequest`] builder: the
+//! anchor is drawn with `spread(tenant)` so tenants land on distinct
+//! banks, and the remaining operands chain `align_with(anchor)`.
+
+use anyhow::{ensure, Result};
+
+use crate::alloc::request::AllocRequest;
+use crate::coordinator::system::{System, SystemConfig};
+use crate::dram::address::InterleaveScheme;
+use crate::pud::isa::{BulkRequest, PudOp};
+use crate::serve::{
+    AdmissionStats, Gateway, GatewayConfig, SessionConfig, SessionId,
+};
+use crate::util::rng::Pcg64;
+use crate::workloads::microbench::AllocatorKind;
+
+/// Serving-workload configuration.
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// Concurrent tenant sessions (the paper-style study uses >= 8).
+    pub tenants: usize,
+    /// Requests each tenant submits.
+    pub ops_per_tenant: usize,
+    /// Bytes per tenant buffer (each tenant owns four).
+    pub buf_bytes: u64,
+    /// DRR quantum, in rows per unit weight per round.
+    pub quantum: u64,
+    /// Per-session soft backpressure threshold (see
+    /// [`SessionConfig::backpressure`]); set below `ops_per_tenant` to
+    /// exercise `SubmitOutcome::Queued`.
+    pub backpressure: usize,
+    /// Per-session hard queue cap; the driver requires
+    /// `queue_cap >= ops_per_tenant` so its own traffic is never
+    /// rejected (rejection paths are covered by `tests/prop_serve.rs`).
+    pub queue_cap: usize,
+    /// Boot-time huge-page pool size.
+    pub huge_pages: usize,
+    /// Huge pages PUMA pre-allocates.
+    pub puma_pages: usize,
+    /// Churn rounds for the boot-time pool aging model.
+    pub churn_rounds: usize,
+    /// Seed for tenant data.
+    pub seed: u64,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        Self {
+            tenants: 8,
+            ops_per_tenant: 12,
+            buf_bytes: 64 * 1024,
+            quantum: 8,
+            backpressure: 8,
+            queue_cap: 1024,
+            huge_pages: 24,
+            puma_pages: 16,
+            churn_rounds: 2_000,
+            seed: 0xC0FFEE,
+        }
+    }
+}
+
+/// One tenant's traffic kind, assigned round-robin by tenant index.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Traffic {
+    /// Independent boolean filter planes (AND/OR/XOR over the seeded
+    /// operands).
+    Filter,
+    /// Dependent chain: each op consumes the previous op's output.
+    Analytics,
+    /// Progressive mask folds (semi-join-style AND/OR narrowing).
+    Query,
+    /// RowClone-heavy zero/copy traffic.
+    Churn,
+}
+
+impl Traffic {
+    /// The kind tenant `t` runs.
+    pub fn of(t: usize) -> Traffic {
+        match t % 4 {
+            0 => Traffic::Filter,
+            1 => Traffic::Analytics,
+            2 => Traffic::Query,
+            _ => Traffic::Churn,
+        }
+    }
+
+    /// Display name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Traffic::Filter => "filter",
+            Traffic::Analytics => "analytics",
+            Traffic::Query => "query",
+            Traffic::Churn => "churn",
+        }
+    }
+
+    /// The `j`-th request of this kind over the tenant's four buffers
+    /// `[a, b, c, d]` (a and b are seeded; c and d start zeroed).
+    fn request(&self, j: usize, bufs: [u64; 4], len: u64) -> BulkRequest {
+        let [a, b, c, d] = bufs;
+        match self {
+            Traffic::Filter => match j % 3 {
+                0 => BulkRequest::new(PudOp::And, c, vec![a, b], len),
+                1 => BulkRequest::new(PudOp::Or, d, vec![a, b], len),
+                _ => BulkRequest::new(PudOp::Xor, c, vec![a, b], len),
+            },
+            Traffic::Analytics => match j % 4 {
+                0 => BulkRequest::new(PudOp::And, c, vec![a, b], len),
+                1 => BulkRequest::new(PudOp::Not, d, vec![c], len),
+                2 => BulkRequest::new(PudOp::Or, c, vec![d, a], len),
+                _ => BulkRequest::new(PudOp::Xor, d, vec![c, b], len),
+            },
+            Traffic::Query => match j % 4 {
+                0 => BulkRequest::new(PudOp::And, c, vec![a, b], len),
+                1 => BulkRequest::new(PudOp::Or, d, vec![c, b], len),
+                2 => BulkRequest::new(PudOp::And, c, vec![d, a], len),
+                _ => BulkRequest::new(PudOp::Xor, d, vec![c, a], len),
+            },
+            Traffic::Churn => match j % 4 {
+                0 => BulkRequest::new(PudOp::Zero, c, vec![], len),
+                1 => BulkRequest::new(PudOp::Copy, d, vec![a], len),
+                2 => BulkRequest::new(PudOp::Copy, c, vec![b], len),
+                _ => BulkRequest::new(PudOp::Zero, d, vec![], len),
+            },
+        }
+    }
+}
+
+/// One tenant's completion summary under both schedules.
+#[derive(Debug, Clone)]
+pub struct TenantSummary {
+    /// Session name (`t{i}-{traffic}`).
+    pub name: String,
+    /// Traffic kind name.
+    pub traffic: &'static str,
+    /// DRR weight.
+    pub weight: u32,
+    /// Requests the tenant submitted.
+    pub ops: usize,
+    /// Completion time under the DRR schedule (gateway clock, ns).
+    pub drr_done_ns: f64,
+    /// Completion time under the back-to-back schedule.
+    pub b2b_done_ns: f64,
+}
+
+/// Result of one serving-workload run (both schedules).
+#[derive(Debug, Clone)]
+pub struct ServeResult {
+    /// Allocator under test.
+    pub allocator: &'static str,
+    /// Per-tenant completions, in tenant order.
+    pub tenants: Vec<TenantSummary>,
+    /// Requests per tenant.
+    pub ops_per_tenant: usize,
+    /// DRR rounds the fair gateway executed.
+    pub drr_rounds: u64,
+    /// Fair gateway's total simulated makespan (ns).
+    pub drr_makespan_ns: f64,
+    /// Baseline gateway's total simulated makespan (ns).
+    pub b2b_makespan_ns: f64,
+    /// Exact p50 of per-tenant completion under DRR.
+    pub drr_p50_ns: f64,
+    /// Exact p99 of per-tenant completion under DRR.
+    pub drr_p99_ns: f64,
+    /// Exact p50 of per-tenant completion back-to-back.
+    pub b2b_p50_ns: f64,
+    /// Exact p99 of per-tenant completion back-to-back.
+    pub b2b_p99_ns: f64,
+    /// True when both schedules produced byte-identical buffers for
+    /// every tenant (they must; asserted by callers).
+    pub identical: bool,
+    /// Admission counters of the fair gateway (the baseline's are
+    /// checked equal before it is reported).
+    pub admission: AdmissionStats,
+    /// Rows executed in DRAM by the fair gateway.
+    pub pud_rows: u64,
+    /// Rows that fell back to the CPU on the fair gateway.
+    pub fallback_rows: u64,
+}
+
+impl ServeResult {
+    /// Fraction of rows the fair gateway executed in DRAM.
+    pub fn pud_row_fraction(&self) -> f64 {
+        let total = self.pud_rows + self.fallback_rows;
+        if total == 0 {
+            return 0.0;
+        }
+        self.pud_rows as f64 / total as f64
+    }
+
+    /// How much the DRR schedule improves the p99 tenant completion:
+    /// `b2b_p99 / drr_p99` (> 1 means fairness won).
+    pub fn p99_speedup(&self) -> f64 {
+        self.b2b_p99_ns / self.drr_p99_ns.max(1e-9)
+    }
+}
+
+/// Exact nearest-rank percentile (`p` in 0..=100) of `xs`.
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).expect("completion times are finite"));
+    let rank = ((p / 100.0) * v.len() as f64).ceil() as usize;
+    v[rank.saturating_sub(1).min(v.len() - 1)]
+}
+
+struct Tenant {
+    id: SessionId,
+    bufs: [u64; 4],
+    traffic: Traffic,
+}
+
+/// Boot a gateway, open `cfg.tenants` sessions with their buffers
+/// seeded, and load every tenant's full traffic into its queue.
+fn build_loaded_gateway(
+    scheme: InterleaveScheme,
+    cfg: &ServeConfig,
+    kind: AllocatorKind,
+) -> Result<(Gateway, Vec<Tenant>)> {
+    let mut sys = System::boot(SystemConfig {
+        scheme,
+        huge_pages: cfg.huge_pages,
+        churn_rounds: cfg.churn_rounds,
+        seed: cfg.seed,
+        artifacts: None,
+        ..Default::default()
+    })?;
+    let alloc = kind.build(&mut sys, cfg.puma_pages)?;
+    let mut gw =
+        Gateway::new(sys, alloc, GatewayConfig { quantum: cfg.quantum });
+    let len = cfg.buf_bytes;
+    let mut tenants = Vec::with_capacity(cfg.tenants);
+    for t in 0..cfg.tenants {
+        let traffic = Traffic::of(t);
+        let id = gw.open(SessionConfig {
+            weight: if t % 4 == 1 { 2 } else { 1 },
+            backpressure: cfg.backpressure,
+            queue_cap: cfg.queue_cap,
+            ..SessionConfig::named(format!("t{t}-{}", traffic.name()))
+        });
+        let seed = cfg.seed ^ (t as u64 + 1);
+        let bufs = gw.with_session(id, |sess, sys, alloc| {
+            let a = sess.alloc(
+                sys,
+                alloc,
+                AllocRequest::bytes(len).spread(t as u32),
+            )?;
+            let b =
+                sess.alloc(sys, alloc, AllocRequest::bytes(len).align_with(a))?;
+            let c =
+                sess.alloc(sys, alloc, AllocRequest::bytes(len).align_with(a))?;
+            let d =
+                sess.alloc(sys, alloc, AllocRequest::bytes(len).align_with(a))?;
+            let mut rng = Pcg64::new(seed);
+            let mut pa = vec![0u8; len as usize];
+            let mut pb = vec![0u8; len as usize];
+            rng.fill_bytes(&mut pa);
+            rng.fill_bytes(&mut pb);
+            sess.write(sys, a, &pa)?;
+            sess.write(sys, b, &pb)?;
+            sess.write(sys, c, &vec![0u8; len as usize])?;
+            sess.write(sys, d, &vec![0u8; len as usize])?;
+            Ok([a, b, c, d])
+        })?;
+        tenants.push(Tenant { id, bufs, traffic });
+    }
+    for t in &tenants {
+        for j in 0..cfg.ops_per_tenant {
+            let req = t.traffic.request(j, t.bufs, len);
+            let outcome = gw.submit(t.id, req)?;
+            ensure!(
+                outcome.is_admitted(),
+                "serve driver overflowed its own queue cap \
+                 (queue_cap {} < ops_per_tenant {}?)",
+                cfg.queue_cap,
+                cfg.ops_per_tenant
+            );
+        }
+    }
+    Ok((gw, tenants))
+}
+
+/// Run the serving workload on `kind`: twin gateways, DRR vs
+/// back-to-back, with byte-identical-results verification (see module
+/// docs).
+pub fn run(
+    scheme: InterleaveScheme,
+    cfg: &ServeConfig,
+    kind: AllocatorKind,
+) -> Result<ServeResult> {
+    ensure!(cfg.tenants >= 2, "the serving study needs >= 2 tenants");
+    ensure!(cfg.ops_per_tenant >= 1, "tenants must submit something");
+    ensure!(
+        cfg.queue_cap >= cfg.ops_per_tenant,
+        "driver traffic must fit the queue cap"
+    );
+    let (mut fair, tenants) =
+        build_loaded_gateway(scheme.clone(), cfg, kind)?;
+    let drr_rounds = fair.drain()?;
+    let (mut base, base_tenants) = build_loaded_gateway(scheme, cfg, kind)?;
+    ensure!(
+        fair.admission_stats() == base.admission_stats(),
+        "twin gateways saw different admission outcomes"
+    );
+    base.drain_back_to_back()?;
+
+    let mut identical = true;
+    for (t, u) in tenants.iter().zip(&base_tenants) {
+        for (&fva, &bva) in t.bufs.iter().zip(&u.bufs) {
+            let got = fair.with_session(t.id, |sess, sys, _| {
+                sess.read(sys, fva, cfg.buf_bytes)
+            })?;
+            let want = base.with_session(u.id, |sess, sys, _| {
+                sess.read(sys, bva, cfg.buf_bytes)
+            })?;
+            identical &= got == want;
+        }
+    }
+
+    let drr_done: Vec<f64> =
+        fair.completions().iter().map(|(_, ns)| *ns).collect();
+    let b2b_done: Vec<f64> =
+        base.completions().iter().map(|(_, ns)| *ns).collect();
+    let mut summaries = Vec::with_capacity(tenants.len());
+    for (i, t) in tenants.iter().enumerate() {
+        let sess = fair.session(t.id)?;
+        summaries.push(TenantSummary {
+            name: sess.name().to_string(),
+            traffic: t.traffic.name(),
+            weight: sess.weight(),
+            ops: cfg.ops_per_tenant,
+            drr_done_ns: drr_done[i],
+            b2b_done_ns: b2b_done[i],
+        });
+    }
+    let stats = &fair.sys.coord.stats;
+    Ok(ServeResult {
+        allocator: kind.name(),
+        tenants: summaries,
+        ops_per_tenant: cfg.ops_per_tenant,
+        drr_rounds,
+        drr_makespan_ns: fair.clock_ns(),
+        b2b_makespan_ns: base.clock_ns(),
+        drr_p50_ns: percentile(&drr_done, 50.0),
+        drr_p99_ns: percentile(&drr_done, 99.0),
+        b2b_p50_ns: percentile(&b2b_done, 50.0),
+        b2b_p99_ns: percentile(&b2b_done, 99.0),
+        identical,
+        admission: fair.admission_stats(),
+        pud_rows: stats.pud_rows,
+        fallback_rows: stats.fallback_rows,
+    })
+}
+
+/// Sweep allocators, one twin-gateway run per kind.
+pub fn sweep(
+    scheme: &InterleaveScheme,
+    cfg: &ServeConfig,
+    kinds: &[AllocatorKind],
+) -> Result<Vec<ServeResult>> {
+    kinds
+        .iter()
+        .map(|kind| run(scheme.clone(), cfg, *kind))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::alloc::puma::FitPolicy;
+    use crate::dram::geometry::DramGeometry;
+
+    fn scheme() -> InterleaveScheme {
+        InterleaveScheme::row_major(DramGeometry::small()) // 64 MiB
+    }
+
+    fn cfg() -> ServeConfig {
+        ServeConfig {
+            tenants: 8,
+            ops_per_tenant: 8,
+            buf_bytes: 16 * 1024,
+            backpressure: 4,
+            churn_rounds: 500,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn percentile_is_exact_nearest_rank() {
+        let xs = vec![40.0, 10.0, 30.0, 20.0];
+        assert_eq!(percentile(&xs, 50.0), 20.0);
+        assert_eq!(percentile(&xs, 99.0), 40.0);
+        assert_eq!(percentile(&xs, 100.0), 40.0);
+        assert_eq!(percentile(&[], 99.0), 0.0);
+    }
+
+    #[test]
+    fn traffic_kinds_cycle_by_tenant() {
+        assert_eq!(Traffic::of(0), Traffic::Filter);
+        assert_eq!(Traffic::of(5), Traffic::Analytics);
+        assert_eq!(Traffic::of(7), Traffic::Churn);
+        assert_eq!(Traffic::of(7).name(), "churn");
+    }
+
+    #[test]
+    fn drr_matches_back_to_back_byte_for_byte() {
+        let c = cfg();
+        let r = run(scheme(), &c, AllocatorKind::Puma(FitPolicy::WorstFit))
+            .unwrap();
+        assert!(r.identical, "schedules diverged");
+        assert_eq!(r.tenants.len(), 8);
+        assert!(r.drr_rounds >= 1);
+        for t in &r.tenants {
+            assert!(t.drr_done_ns > 0.0, "{} never completed", t.name);
+            assert!(t.b2b_done_ns > 0.0, "{} never completed", t.name);
+        }
+        // every submission was admitted, and backpressure < ops means
+        // some were soft-queued
+        let st = r.admission;
+        assert_eq!(
+            (st.accepted + st.queued) as usize,
+            c.tenants * c.ops_per_tenant
+        );
+        assert_eq!(st.rejected, 0);
+        assert!(st.queued > 0, "backpressure threshold never tripped");
+    }
+
+    #[test]
+    fn puma_fairness_beats_back_to_back_at_the_tail() {
+        let r = run(scheme(), &cfg(), AllocatorKind::Puma(FitPolicy::WorstFit))
+            .unwrap();
+        assert!(r.identical);
+        // bank-disjoint tenants overlap under DRR, so the tail tenant
+        // finishes strictly earlier than in the serial schedule
+        assert!(
+            r.drr_p99_ns < r.b2b_p99_ns,
+            "drr p99 {} !< b2b p99 {}",
+            r.drr_p99_ns,
+            r.b2b_p99_ns
+        );
+        assert!(r.p99_speedup() > 1.0);
+        // spread anchors + align chaining keep the traffic in DRAM
+        assert!(
+            r.pud_row_fraction() > 0.5,
+            "got {}",
+            r.pud_row_fraction()
+        );
+    }
+
+    #[test]
+    fn malloc_stays_correct_without_pud() {
+        let c = ServeConfig {
+            tenants: 4,
+            ops_per_tenant: 4,
+            ..cfg()
+        };
+        let r = run(scheme(), &c, AllocatorKind::Malloc).unwrap();
+        assert!(r.identical);
+        assert!(
+            r.pud_row_fraction() < 0.5,
+            "got {}",
+            r.pud_row_fraction()
+        );
+    }
+}

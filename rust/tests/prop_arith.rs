@@ -4,6 +4,11 @@
 //! that runs in-DRAM and under deliberately misaligned (malloc)
 //! placement that exercises the CPU fallback.
 
+// These properties pin the deprecated flat/sharded shims on purpose:
+// they must keep producing bit-identical results until removal
+// (tests/prop_serve.rs checks shim == unified-API equivalence).
+#![allow(deprecated)]
+
 use puma::alloc::mallocsim::MallocSim;
 use puma::alloc::puma::{FitPolicy, PumaAlloc};
 use puma::alloc::scratch::ScratchPool;

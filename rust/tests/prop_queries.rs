@@ -11,6 +11,11 @@
 //! LRU eviction under budget pressure and the zero-fresh-compiles
 //! warm-sweep guarantee.
 
+// Several properties pin the deprecated flat/sharded shims on purpose:
+// they must keep producing bit-identical results until removal
+// (tests/prop_serve.rs checks shim == unified-API equivalence).
+#![allow(deprecated)]
+
 use puma::alloc::mallocsim::MallocSim;
 use puma::alloc::puma::{FitPolicy, PumaAlloc};
 use puma::alloc::scratch::ScratchPool;
@@ -511,7 +516,7 @@ fn query_cells_stay_correct_with_budget_below_working_set() {
     let (mut sys, mut puma) = boot_puma();
     let pid = sys.spawn();
     sys.set_column_budget(1);
-    let mut pool = ScratchPool::new();
+    let mut pool = ShardedScratch::new();
     let r = queries::run_cell_semi_join(
         &mut sys, &mut puma, pid, "puma", &cfg, &mut pool,
     )
@@ -528,7 +533,7 @@ fn query_cells_stay_correct_with_budget_below_working_set() {
     assert_eq!(r2.matches, r.matches);
     assert_eq!(r2.agg, r.agg);
     assert!(r2.col_misses >= 1, "budget 1 cannot serve a warm repeat");
-    sys.release_scratch(&mut puma, pid, &mut pool).unwrap();
+    sys.trim_pools(&mut puma, pid, &mut pool, 0).unwrap();
     sys.flush_columns(&mut puma, pid).unwrap();
 
     // budget 2: the full three-shape sweep needs three distinct
@@ -537,7 +542,7 @@ fn query_cells_stay_correct_with_budget_below_working_set() {
     let (mut sys, mut puma) = boot_puma();
     let pid = sys.spawn();
     sys.set_column_budget(2);
-    let mut pool = ScratchPool::new();
+    let mut pool = ShardedScratch::new();
     let a = queries::run_cell_semi_join(
         &mut sys, &mut puma, pid, "puma", &cfg, &mut pool,
     )
@@ -553,7 +558,7 @@ fn query_cells_stay_correct_with_budget_below_working_set() {
     assert!(a.matches > 0 && b.matches > 0 && c.matches > 0);
     let s = sys.column_cache_stats();
     assert!(s.evictions >= 1, "3 columns under budget 2 must evict: {s:?}");
-    sys.release_scratch(&mut puma, pid, &mut pool).unwrap();
+    sys.trim_pools(&mut puma, pid, &mut pool, 0).unwrap();
     sys.flush_columns(&mut puma, pid).unwrap();
 }
 
@@ -571,7 +576,7 @@ fn warm_query_sweep_compiles_nothing() {
         churn_rounds: 60,
         ..Default::default()
     };
-    let mut pool = ScratchPool::new();
+    let mut pool = ShardedScratch::new();
     let cold = [
         queries::run_cell_semi_join(&mut sys, &mut puma, pid, "puma", &cfg, &mut pool)
             .unwrap(),
@@ -604,6 +609,6 @@ fn warm_query_sweep_compiles_nothing() {
         "a warm sweep must not insert fresh programs"
     );
     assert!(warm1.hits > warm0.hits, "warm kernels must be cache hits");
-    sys.release_scratch(&mut puma, pid, &mut pool).unwrap();
+    sys.trim_pools(&mut puma, pid, &mut pool, 0).unwrap();
     sys.flush_columns(&mut puma, pid).unwrap();
 }

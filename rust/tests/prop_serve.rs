@@ -1,0 +1,521 @@
+//! Properties of the multi-tenant serving boundary (DESIGN.md §15):
+//! DRR interleaving preserves every tenant's FIFO program order, the
+//! fair schedule is byte-identical to the back-to-back baseline,
+//! scratch-quota admission rejects typed and leases nothing (and the
+//! tenant recovers with `Session::trim`), and the deprecated
+//! flat/sharded `System` shims stay bit-identical to the unified
+//! `Column` API they delegate to.
+
+// Property 4 pins the deprecated shims on purpose: they must keep
+// producing bit-identical results until removal.
+#![allow(deprecated)]
+
+use anyhow::Result;
+use puma::alloc::mallocsim::MallocSim;
+use puma::alloc::puma::FitPolicy;
+use puma::alloc::request::AllocRequest;
+use puma::alloc::scratch::ScratchPool;
+use puma::assert_prop;
+use puma::coordinator::system::{System, SystemConfig};
+use puma::dram::address::InterleaveScheme;
+use puma::dram::geometry::DramGeometry;
+use puma::proptest;
+use puma::pud::arith::{
+    self, ArithOp, Column, LayoutSpec, ShardedLayout, ShardedScratch,
+    VerticalLayout,
+};
+use puma::pud::isa::{BulkRequest, PudOp};
+use puma::serve::{
+    Gateway, GatewayConfig, RejectReason, ServeError, Session, SessionConfig,
+    SessionId,
+};
+use puma::util::rng::Pcg64;
+use puma::workloads::microbench::AllocatorKind;
+
+fn boot(seed: u64) -> System {
+    let scheme = InterleaveScheme::row_major(DramGeometry::small()); // 64 MiB
+    System::boot(SystemConfig {
+        scheme,
+        huge_pages: 12,
+        churn_rounds: 200,
+        seed,
+        artifacts: None,
+        ..Default::default()
+    })
+    .unwrap()
+}
+
+fn row_bytes() -> u64 {
+    DramGeometry::small().row_bytes as u64
+}
+
+/// One randomly drawn request over a tenant's four buffers: the
+/// destination and sources are always distinct indices, so host-model
+/// semantics are unambiguous.
+fn draw_step(g: &mut proptest::Gen) -> (PudOp, usize, usize, usize) {
+    let op = *g.choose(&PudOp::ALL);
+    let dst = g.usize(0..4);
+    let s1 = (dst + 1 + g.usize(0..3)) % 4;
+    let rest: Vec<usize> =
+        (0..4).filter(|&k| k != dst && k != s1).collect();
+    let s2 = rest[g.usize(0..rest.len())];
+    (op, dst, s1, s2)
+}
+
+/// Scalar reference semantics of one bulk op over the mirrored host
+/// buffers, applied in the tenant's submission order.
+fn apply_step(
+    model: &mut [Vec<u8>],
+    op: PudOp,
+    dst: usize,
+    s1: usize,
+    s2: usize,
+) {
+    for i in 0..model[dst].len() {
+        let a = model[s1][i];
+        let b = model[s2][i];
+        model[dst][i] = match op {
+            PudOp::Zero => 0,
+            PudOp::Copy => a,
+            PudOp::Not => !a,
+            PudOp::And => a & b,
+            PudOp::Or => a | b,
+            PudOp::Xor => a ^ b,
+        };
+    }
+}
+
+fn request_for(
+    op: PudOp,
+    vas: &[u64; 4],
+    dst: usize,
+    s1: usize,
+    s2: usize,
+    len: u64,
+) -> BulkRequest {
+    let srcs = match op.arity() {
+        0 => vec![],
+        1 => vec![vas[s1]],
+        _ => vec![vas[s1], vas[s2]],
+    };
+    BulkRequest::new(op, vas[dst], srcs, len)
+}
+
+/// Open `tenants` sessions, allocate four buffers each, seed them with
+/// random bytes, and return the handles plus a host mirror of every
+/// buffer's contents.
+#[allow(clippy::type_complexity)]
+fn open_tenants(
+    gw: &mut Gateway,
+    tenants: usize,
+    len: u64,
+    rng: &mut Pcg64,
+) -> Vec<(SessionId, [u64; 4], Vec<Vec<u8>>)> {
+    (0..tenants)
+        .map(|t| {
+            let id = gw.open(SessionConfig::named(format!("t{t}")));
+            let (vas, model) = gw
+                .with_session(id, |sess, sys, alloc| {
+                    let mut vas = [0u64; 4];
+                    let mut model = Vec::with_capacity(4);
+                    for (k, slot) in vas.iter_mut().enumerate() {
+                        let va = sess.alloc(
+                            sys,
+                            alloc,
+                            AllocRequest::bytes(len),
+                        )?;
+                        let mut data = vec![0u8; len as usize];
+                        // tenant-and-buffer-specific deterministic fill
+                        let mut r = Pcg64::new(
+                            rng.next_u64() ^ ((t as u64) << 8) ^ k as u64,
+                        );
+                        r.fill_bytes(&mut data);
+                        sess.write(sys, va, &data)?;
+                        *slot = va;
+                        model.push(data);
+                    }
+                    Ok((vas, model))
+                })
+                .unwrap();
+            (id, vas, model)
+        })
+        .collect()
+}
+
+/// Property 1: the DRR scheduler may interleave tenants however it
+/// likes, but each tenant's own requests execute in submission order.
+/// Every tenant's requests form a dependent chain over its four
+/// buffers, so any within-tenant reorder diverges from the host model.
+/// The quantum is drawn strictly below every request's row cost, so a
+/// round releases at most one request per tenant and a full drain is
+/// forced through many interleaved rounds.
+#[test]
+fn per_tenant_fifo_survives_drr_interleaving_property() {
+    proptest::check_cases("per-tenant FIFO under DRR", 8, |g| {
+        let tenants = g.usize(2..5);
+        let ops = g.usize(3..8);
+        let quantum = g.u64(1..3);
+        let len = (quantum + g.u64(1..3)) * row_bytes();
+        let seed = g.u64(1..u64::MAX);
+
+        let mut gw = Gateway::new(
+            boot(0x5EED),
+            Box::new(MallocSim::new()),
+            GatewayConfig { quantum },
+        );
+        let mut rng = Pcg64::new(seed);
+        let mut lanes = open_tenants(&mut gw, tenants, len, &mut rng);
+        for _ in 0..ops {
+            for (id, vas, model) in lanes.iter_mut() {
+                let (op, dst, s1, s2) = draw_step(g);
+                let outcome = gw
+                    .submit(*id, request_for(op, vas, dst, s1, s2, len))
+                    .unwrap();
+                assert_prop!(outcome.is_admitted(), "traffic under the cap");
+                apply_step(model, op, dst, s1, s2);
+            }
+        }
+        let rounds = gw.drain().unwrap();
+        assert_prop!(
+            rounds >= ops as u64,
+            "quantum below request cost must force >= one round per \
+             request ({rounds} rounds for {ops} ops)"
+        );
+        for (id, vas, model) in &lanes {
+            for (k, want) in model.iter().enumerate() {
+                let got = gw
+                    .with_session(*id, |sess, sys, _| {
+                        sess.read(sys, vas[k], len)
+                    })
+                    .unwrap();
+                assert_prop!(
+                    &got == want,
+                    "tenant {id:?} buffer {k} diverged from FIFO order"
+                );
+            }
+        }
+    });
+}
+
+/// Property 2: DRR interleaving and the back-to-back baseline are
+/// byte-identical schedules of the same traffic — on malloc placement
+/// and on PUMA placement alike.
+#[test]
+fn drr_matches_back_to_back_byte_for_byte_property() {
+    proptest::check_cases("DRR == back-to-back", 6, |g| {
+        let tenants = g.usize(2..5);
+        let ops = g.usize(2..7);
+        let len = g.u64(1..3) * row_bytes();
+        let puma = g.bool();
+        let seed = g.u64(1..u64::MAX);
+        let plan: Vec<Vec<(PudOp, usize, usize, usize)>> = (0..tenants)
+            .map(|_| (0..ops).map(|_| draw_step(g)).collect())
+            .collect();
+
+        let build = || -> Gateway {
+            let mut sys = boot(0x7EA);
+            let kind = if puma {
+                AllocatorKind::Puma(FitPolicy::WorstFit)
+            } else {
+                AllocatorKind::Malloc
+            };
+            let alloc = kind.build(&mut sys, 8).unwrap();
+            Gateway::new(sys, alloc, GatewayConfig { quantum: 2 })
+        };
+        let mut fair = build();
+        let mut base = build();
+        let lanes_f =
+            open_tenants(&mut fair, tenants, len, &mut Pcg64::new(seed));
+        let lanes_b =
+            open_tenants(&mut base, tenants, len, &mut Pcg64::new(seed));
+        for (t, steps) in plan.iter().enumerate() {
+            for &(op, dst, s1, s2) in steps {
+                let (idf, vf, _) = &lanes_f[t];
+                fair.submit(*idf, request_for(op, vf, dst, s1, s2, len))
+                    .unwrap();
+                let (idb, vb, _) = &lanes_b[t];
+                base.submit(*idb, request_for(op, vb, dst, s1, s2, len))
+                    .unwrap();
+            }
+        }
+        fair.drain().unwrap();
+        base.drain_back_to_back().unwrap();
+        for t in 0..tenants {
+            let (idf, vf, _) = &lanes_f[t];
+            let fair_bufs: Vec<Vec<u8>> = (0..4)
+                .map(|k| {
+                    let va = vf[k];
+                    fair.with_session(*idf, |sess, sys, _| {
+                        sess.read(sys, va, len)
+                    })
+                    .unwrap()
+                })
+                .collect();
+            let (idb, vb, _) = &lanes_b[t];
+            for (k, fair_buf) in fair_bufs.iter().enumerate() {
+                let va = vb[k];
+                let base_buf = base
+                    .with_session(*idb, |sess, sys, _| {
+                        sess.read(sys, va, len)
+                    })
+                    .unwrap();
+                assert_prop!(
+                    fair_buf == &base_buf,
+                    "tenant {t} buffer {k}: DRR and back-to-back diverged"
+                );
+            }
+        }
+        for (_, done) in
+            fair.completions().iter().chain(base.completions().iter())
+        {
+            assert_prop!(*done > 0.0, "every tenant completed on the clock");
+        }
+    });
+}
+
+/// Property 3: a kernel whose scratch lease would exceed the session
+/// quota is refused with a typed `ScratchExhausted` *before* anything
+/// is leased, and the tenant recovers by trimming its pools. The quota
+/// is calibrated from a probe session running the same kernel, so the
+/// property holds for whatever footprint the compiler assigns.
+#[test]
+fn scratch_quota_rejects_typed_and_recovers_after_trim_property() {
+    proptest::check_cases("scratch quota + trim recovery", 6, |g| {
+        let width = g.usize(4..9) as u32;
+        let elems = g.usize(512..2048);
+        let seed = g.u64(1..u64::MAX);
+        let mask = arith::width_mask(width);
+        let mut rng = Pcg64::new(seed);
+        let va: Vec<u64> = (0..elems).map(|_| rng.next_u64() & mask).collect();
+        let vb: Vec<u64> = (0..elems).map(|_| rng.next_u64() & mask).collect();
+        // 16x the elements => 16x the plane bytes => a different
+        // scratch size class, so the big kernel cannot reuse the small
+        // kernel's resident buffers.
+        let big: usize = elems * 16;
+
+        let mut sys = boot(0xB16);
+        let mut malloc = MallocSim::new();
+        let run = |sess: &mut Session,
+                   sys: &mut System,
+                   alloc: &mut MallocSim,
+                   n: usize|
+         -> Result<(Column, Column, Column)> {
+            let a = sess.alloc_column(sys, alloc, width, n, LayoutSpec::Flat)?;
+            let b = sess.alloc_column_like(sys, alloc, width, &a)?;
+            let dst = sess.alloc_column_like(sys, alloc, width, &a)?;
+            sess.store_column(sys, &a, &va[..n.min(elems)])?;
+            sess.store_column(sys, &b, &vb[..n.min(elems)])?;
+            Ok((a, b, dst))
+        };
+
+        // probe: what does one Add actually keep resident?
+        let mut probe = Session::open(&mut sys, SessionConfig::named("probe"));
+        let (pa, pb, pdst) = run(&mut probe, &mut sys, &mut malloc, elems)
+            .unwrap();
+        probe
+            .arith(&mut sys, &mut malloc, ArithOp::Add, &pa, Some(&pb), &pdst)
+            .unwrap();
+        let footprint = probe.scratch_resident();
+        assert_prop!(footprint > 0, "the Add kernel must lease scratch");
+        probe.release(&mut sys, &mut malloc).unwrap();
+
+        let mut sess = Session::open(
+            &mut sys,
+            SessionConfig {
+                scratch_quota: footprint,
+                ..SessionConfig::named("metered")
+            },
+        );
+        // the small kernel fits the quota exactly
+        let (a, b, dst) = run(&mut sess, &mut sys, &mut malloc, elems).unwrap();
+        sess.arith(&mut sys, &mut malloc, ArithOp::Add, &a, Some(&b), &dst)
+            .unwrap();
+        assert_prop!(sess.scratch_resident() == footprint);
+
+        // the big kernel would double the footprint: typed rejection,
+        // nothing leased
+        let mut rbig = Pcg64::new(seed ^ 1);
+        let wa: Vec<u64> = (0..big).map(|_| rbig.next_u64() & mask).collect();
+        let wb: Vec<u64> = (0..big).map(|_| rbig.next_u64() & mask).collect();
+        let ba = sess
+            .alloc_column(&mut sys, &mut malloc, width, big, LayoutSpec::Flat)
+            .unwrap();
+        let bb = sess
+            .alloc_column_like(&mut sys, &mut malloc, width, &ba)
+            .unwrap();
+        let bdst = sess
+            .alloc_column_like(&mut sys, &mut malloc, width, &ba)
+            .unwrap();
+        sess.store_column(&mut sys, &ba, &wa).unwrap();
+        sess.store_column(&mut sys, &bb, &wb).unwrap();
+        let err = sess
+            .arith(&mut sys, &mut malloc, ArithOp::Add, &ba, Some(&bb), &bdst)
+            .unwrap_err();
+        match ServeError::from_anyhow(&err) {
+            Some(ServeError::Rejected(RejectReason::ScratchExhausted {
+                projected,
+                quota,
+            })) => {
+                assert_prop!(*quota == footprint);
+                assert_prop!(
+                    *projected > *quota,
+                    "projected {projected} must exceed quota {quota}"
+                );
+            }
+            other => panic!("expected ScratchExhausted, got {other:?}: {err}"),
+        }
+        assert_prop!(
+            sess.scratch_resident() == footprint,
+            "a rejected kernel must lease nothing"
+        );
+
+        // recovery: trim the pools, rerun, verify the arithmetic
+        sess.trim(&mut sys, &mut malloc, 0).unwrap();
+        assert_prop!(sess.scratch_resident() == 0, "trim(0) empties the pools");
+        sess.arith(&mut sys, &mut malloc, ArithOp::Add, &ba, Some(&bb), &bdst)
+            .unwrap();
+        let got = sess.load_column(&mut sys, &bdst).unwrap();
+        for (i, &v) in got.iter().enumerate() {
+            assert_prop!(
+                v == arith::reference(ArithOp::Add, width, wa[i], wb[i]),
+                "post-recovery Add diverged at element {i}"
+            );
+        }
+    });
+}
+
+/// Property 4: the deprecated flat/sharded `System` entry points are
+/// bit-identical to the unified layout-polymorphic API they now
+/// delegate to — kernels, constant kernels, and sums, checked against
+/// the scalar reference oracle on separate but identically-booted
+/// machines.
+#[test]
+fn deprecated_shims_match_the_unified_api_property() {
+    proptest::check_cases("shims == unified API", 6, |g| {
+        let width = g.usize(2..9) as u32;
+        let elems = g.usize(64..1500);
+        let shards = g.usize(2..5);
+        let op = *g.choose(&[
+            ArithOp::Add,
+            ArithOp::Sub,
+            ArithOp::CmpLt,
+            ArithOp::CmpEq,
+            ArithOp::Min,
+            ArithOp::Max,
+        ]);
+        let seed = g.u64(1..u64::MAX);
+        let mask = arith::width_mask(width);
+        let rhs = g.u64(0..mask + 1);
+        let mut rng = Pcg64::new(seed);
+        let va: Vec<u64> = (0..elems).map(|_| rng.next_u64() & mask).collect();
+        let vb: Vec<u64> = (0..elems).map(|_| rng.next_u64() & mask).collect();
+
+        // --- the deprecated surface ---------------------------------
+        let mut so = boot(0x01D);
+        let mut ao = MallocSim::new();
+        let po = so.spawn();
+        let la = so.cached_column(&mut ao, po, 1, 0, width, &va).unwrap();
+        let lb = so.cached_column(&mut ao, po, 2, 0, width, &vb).unwrap();
+        let ld =
+            VerticalLayout::alloc(&mut so, &mut ao, po, op.out_width(width), elems)
+                .unwrap();
+        let lc = VerticalLayout::alloc(&mut so, &mut ao, po, width, elems)
+            .unwrap();
+        let mut pool = ScratchPool::new();
+        so.run_arith(&mut ao, po, op, &la, Some(&lb), &ld, &mut pool)
+            .unwrap();
+        so.run_arith_const(&mut ao, po, ArithOp::Add, rhs, &la, &lc, &mut pool)
+            .unwrap();
+        let out_old = ld.load(&mut so, po).unwrap();
+        let out_old_const = lc.load(&mut so, po).unwrap();
+        let (sum_old, _) =
+            so.arith_sum(&mut ao, po, &la, None, &mut pool).unwrap();
+        let sa = so
+            .cached_column_sharded(&mut ao, po, 3, 0, width, &va, shards)
+            .unwrap();
+        let sb = so
+            .cached_column_sharded(&mut ao, po, 4, 0, width, &vb, shards)
+            .unwrap();
+        let sd = ShardedLayout::alloc(
+            &mut so,
+            &mut ao,
+            po,
+            op.out_width(width),
+            elems,
+            shards,
+        )
+        .unwrap();
+        let mut pools_old = ShardedScratch::new();
+        so.run_arith_sharded(&mut ao, po, op, &sa, Some(&sb), &sd, &mut pools_old)
+            .unwrap();
+        let out_old_sh = sd.load(&mut so, po).unwrap();
+
+        // --- the unified surface ------------------------------------
+        let mut sn = boot(0x01D);
+        let mut an = MallocSim::new();
+        let pn = sn.spawn();
+        let ca = sn
+            .column(&mut an, pn, 1, 0, width, &va, LayoutSpec::Flat)
+            .unwrap();
+        let cb = sn
+            .column(&mut an, pn, 2, 0, width, &vb, LayoutSpec::Flat)
+            .unwrap();
+        let cd = Column::Flat(
+            VerticalLayout::alloc(&mut sn, &mut an, pn, op.out_width(width), elems)
+                .unwrap(),
+        );
+        let cc = Column::Flat(
+            VerticalLayout::alloc(&mut sn, &mut an, pn, width, elems).unwrap(),
+        );
+        let mut pools = ShardedScratch::new();
+        sn.arith(&mut an, pn, op, &ca, Some(&cb), &cd, &mut pools)
+            .unwrap();
+        sn.arith_const(&mut an, pn, ArithOp::Add, rhs, &ca, &cc, &mut pools)
+            .unwrap();
+        let load = |sys: &mut System, col: &Column| match col {
+            Column::Flat(l) => l.load(sys, pn).unwrap(),
+            Column::Sharded(s) => s.load(sys, pn).unwrap(),
+        };
+        let out_new = load(&mut sn, &cd);
+        let out_new_const = load(&mut sn, &cc);
+        let (sum_new, _) =
+            sn.column_sum(&mut an, pn, &ca, None, &mut pools).unwrap();
+        let csa = sn
+            .column(&mut an, pn, 3, 0, width, &va, LayoutSpec::Sharded(shards))
+            .unwrap();
+        let csb = sn
+            .column(&mut an, pn, 4, 0, width, &vb, LayoutSpec::Sharded(shards))
+            .unwrap();
+        let csd = Column::Sharded(
+            ShardedLayout::alloc(
+                &mut sn,
+                &mut an,
+                pn,
+                op.out_width(width),
+                elems,
+                shards,
+            )
+            .unwrap(),
+        );
+        sn.arith(&mut an, pn, op, &csa, Some(&csb), &csd, &mut pools)
+            .unwrap();
+        let out_new_sh = load(&mut sn, &csd);
+
+        // --- equivalence, and both against the oracle ---------------
+        assert_prop!(out_old == out_new, "flat {op:?} shim diverged");
+        assert_prop!(out_old_sh == out_new_sh, "sharded {op:?} shim diverged");
+        assert_prop!(
+            out_old_const == out_new_const,
+            "const-add shim diverged"
+        );
+        assert_prop!(sum_old == sum_new, "sum shim diverged");
+        for i in 0..elems {
+            let want = arith::reference(op, width, va[i], vb[i]);
+            assert_prop!(out_new[i] == want, "unified {op:?} off oracle at {i}");
+            assert_prop!(out_old[i] == want, "shim {op:?} off oracle at {i}");
+            assert_prop!(out_new_sh[i] == want, "sharded off oracle at {i}");
+        }
+        let want_sum: u128 = va.iter().map(|&x| x as u128).sum();
+        assert_prop!(sum_new == want_sum, "column_sum off oracle");
+    });
+}

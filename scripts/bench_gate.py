@@ -88,6 +88,15 @@ def extract(bench):
         # the bench asserts the hard cap, the gate tracks the drift).
         # Lower is better; null-seeded until committed.
         "obs_trace_overhead_frac": obs_overhead,
+        # multi-tenant serving: the DRR schedule's p99 tenant completion
+        # (simulated ns, lower is better — the fairness headline the
+        # bench asserts strictly beats back-to-back) and the PUD-row
+        # floor of the spread-anchored tenant placement. Null-seeded
+        # until committed.
+        "serve_p99_makespan": bench.get("serve", {}).get("serve_p99_makespan"),
+        "serve_puma_pud_row_fraction": bench.get("serve", {}).get(
+            "serve_puma_pud_row_fraction"
+        ),
     }
 
 
@@ -98,6 +107,7 @@ LOWER_IS_BETTER = {
     "analytics_sharded_host_ns_per_elem",
     "queries_host_ns_per_elem",
     "obs_trace_overhead_frac",
+    "serve_p99_makespan",
 }
 
 
