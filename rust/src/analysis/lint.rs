@@ -1,0 +1,502 @@
+//! The placement linter: typed diagnostics over planned batches.
+//!
+//! Where the verifier proves a compiled stream *correct*, the linter
+//! explains why it was *slow*: every fallback row in a planned batch
+//! is attributed to the PUMA placement requirement it violated
+//! (misaligned vs fragmented vs cross-subarray vs reserved), and
+//! recurring self-inflicted patterns — fallbacks `AllocRequest`
+//! alignment hints could have avoided, missed hints, lopsided shard
+//! placement, scratch leases that outlive their workload — get their
+//! own diagnostics. `puma lint` renders these as a table and JSON;
+//! the coordinator records them on every batch when
+//! [`super::VerifyLevel`] is `Lint` or higher.
+
+use rustc_hash::FxHashMap;
+
+use crate::alloc::scratch::ScratchPool;
+use crate::alloc::traits::AllocStats;
+use crate::coordinator::plan::OpPlan;
+use crate::pud::legality::{CauseCounts, FallbackCause, RowPlan};
+
+use super::verify::{VerifyError, VerifyErrorKind};
+
+/// How bad a diagnostic is. `Error` means the program is wrong (only
+/// the verifier emits it); `Warning` means measurable performance was
+/// left on the table; `Note` is advisory.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Severity {
+    Note,
+    Warning,
+    Error,
+}
+
+impl Severity {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Severity::Note => "note",
+            Severity::Warning => "warning",
+            Severity::Error => "error",
+        }
+    }
+}
+
+impl std::fmt::Display for Severity {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// What a diagnostic is about.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Lint {
+    /// Rows fell back to the CPU path, attributed to the placement
+    /// requirement that failed.
+    FallbackRow(FallbackCause),
+    /// A fallback the allocator could have prevented (e.g.
+    /// `AllocRequest::align_with` would have co-located the operands).
+    AvoidableFallback,
+    /// An allocation hint was requested but the allocator could not
+    /// honor it.
+    MissedHint,
+    /// PUD rows concentrate on a few banks while others idle.
+    ShardImbalance,
+    /// Scratch leases outlive the workload that took them.
+    LeakedScratchLease,
+    /// The program verifier rejected a compiled stream.
+    VerifyFailed(VerifyErrorKind),
+}
+
+impl Lint {
+    /// Stable slug, used as the JSON `lint` field and the table key.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Lint::FallbackRow(FallbackCause::Fragmented) => {
+                "fallback_row.fragmented"
+            }
+            Lint::FallbackRow(FallbackCause::Misaligned) => {
+                "fallback_row.misaligned"
+            }
+            Lint::FallbackRow(FallbackCause::Reserved) => {
+                "fallback_row.reserved"
+            }
+            Lint::FallbackRow(FallbackCause::CrossSubarray) => {
+                "fallback_row.cross_subarray"
+            }
+            Lint::AvoidableFallback => "avoidable_fallback",
+            Lint::MissedHint => "missed_hint",
+            Lint::ShardImbalance => "shard_imbalance",
+            Lint::LeakedScratchLease => "leaked_scratch_lease",
+            Lint::VerifyFailed(_) => "verify_failed",
+        }
+    }
+}
+
+impl std::fmt::Display for Lint {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Lint::VerifyFailed(k) => write!(f, "verify_failed.{k}"),
+            other => f.write_str(other.name()),
+        }
+    }
+}
+
+/// One linter finding: what, how bad, why, and where.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Diagnostic {
+    pub lint: Lint,
+    pub severity: Severity,
+    pub message: String,
+    /// Where the finding was made — a workload/batch label such as
+    /// `analytics[puma]/cell(w=8)` or `system/run_compiled`.
+    pub site: String,
+}
+
+impl Diagnostic {
+    pub fn new(
+        lint: Lint,
+        severity: Severity,
+        site: impl Into<String>,
+        message: impl Into<String>,
+    ) -> Self {
+        Self {
+            lint,
+            severity,
+            message: message.into(),
+            site: site.into(),
+        }
+    }
+
+    /// Render as one JSON object (hand-rolled; the repo carries no
+    /// serde).
+    pub fn to_json(&self) -> String {
+        format!(
+            "{{\"lint\":\"{}\",\"severity\":\"{}\",\"site\":\"{}\",\"message\":\"{}\"}}",
+            json_escape(&self.lint.to_string()),
+            self.severity.name(),
+            json_escape(&self.site),
+            json_escape(&self.message),
+        )
+    }
+}
+
+impl std::fmt::Display for Diagnostic {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{}[{}] {}: {}",
+            self.severity, self.lint, self.site, self.message
+        )
+    }
+}
+
+/// Render a diagnostic list as a JSON array (one object per line, so
+/// the artifact diffs cleanly).
+pub fn diagnostics_to_json(diags: &[Diagnostic]) -> String {
+    let mut out = String::from("[\n");
+    for (i, d) in diags.iter().enumerate() {
+        out.push_str("  ");
+        out.push_str(&d.to_json());
+        if i + 1 < diags.len() {
+            out.push(',');
+        }
+        out.push('\n');
+    }
+    out.push(']');
+    out
+}
+
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                out.push_str(&format!("\\u{:04x}", c as u32));
+            }
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// What each fallback cause means, and what would have fixed it.
+fn cause_hint(cause: FallbackCause) -> &'static str {
+    match cause {
+        FallbackCause::Fragmented => {
+            "operand rows are not physically contiguous — allocate \
+             row-granular PUD memory (PUMA pimalloc) instead of \
+             page-scattered base pages"
+        }
+        FallbackCause::Misaligned => {
+            "operand rows do not start at column 0 — the allocation \
+             is not row-aligned"
+        }
+        FallbackCause::Reserved => {
+            "operand rows land on reserved Ambit control/temp rows"
+        }
+        FallbackCause::CrossSubarray => {
+            "operands sit in different subarrays — \
+             AllocRequest::align_with (or a scratch hint) would have \
+             co-located them"
+        }
+    }
+}
+
+/// Shard-imbalance thresholds: only speak up when the batch is big
+/// enough to matter and the skew is real.
+const IMBALANCE_MIN_ROWS: u64 = 64;
+const IMBALANCE_MIN_BANKS: usize = 2;
+const IMBALANCE_FACTOR: f64 = 2.0;
+
+/// Lint a planned batch: attribute every fallback row to its cause,
+/// flag avoidable ones, and check the PUD-row spread across banks.
+pub fn lint_plans(plans: &[OpPlan], site: &str) -> Vec<Diagnostic> {
+    let mut diags = Vec::new();
+    let mut causes = CauseCounts::default();
+    let mut per_bank: FxHashMap<(u32, u32, u32), u64> = FxHashMap::default();
+    let mut total_rows = 0u64;
+    for p in plans {
+        total_rows += p.rows.len() as u64;
+        for r in &p.rows {
+            match r {
+                RowPlan::Pud { dst, .. } => {
+                    *per_bank
+                        .entry((dst.channel, dst.rank, dst.bank))
+                        .or_insert(0) += 1;
+                }
+                RowPlan::Fallback { cause, .. } => causes.add(*cause, 1),
+            }
+        }
+    }
+
+    for cause in FallbackCause::ALL {
+        let n = causes.get(cause);
+        if n > 0 {
+            diags.push(Diagnostic::new(
+                Lint::FallbackRow(cause),
+                Severity::Warning,
+                site,
+                format!(
+                    "{n} of {total_rows} row(s) fell back to the CPU \
+                     path: {}",
+                    cause_hint(cause)
+                ),
+            ));
+        }
+    }
+    if causes.get(FallbackCause::CrossSubarray) > 0 {
+        diags.push(Diagnostic::new(
+            Lint::AvoidableFallback,
+            Severity::Note,
+            site,
+            format!(
+                "{} cross-subarray fallback row(s) are avoidable: \
+                 request the operands with AllocRequest::align_with so \
+                 the allocator co-locates them",
+                causes.get(FallbackCause::CrossSubarray)
+            ),
+        ));
+    }
+    if causes.get(FallbackCause::Misaligned) > 0 {
+        diags.push(Diagnostic::new(
+            Lint::AvoidableFallback,
+            Severity::Note,
+            site,
+            format!(
+                "{} misaligned fallback row(s) are avoidable: allocate \
+                 the operands from a row-granular PUD pool so every \
+                 buffer starts at column 0",
+                causes.get(FallbackCause::Misaligned)
+            ),
+        ));
+    }
+
+    let pud_rows: u64 = per_bank.values().sum();
+    if per_bank.len() >= IMBALANCE_MIN_BANKS && pud_rows >= IMBALANCE_MIN_ROWS {
+        let max = per_bank.values().copied().max().unwrap_or(0);
+        let avg = pud_rows as f64 / per_bank.len() as f64;
+        if max as f64 > IMBALANCE_FACTOR * avg {
+            let (&(ch, rk, bk), _) = per_bank
+                .iter()
+                .max_by_key(|(_, &n)| n)
+                .expect("non-empty per_bank");
+            diags.push(Diagnostic::new(
+                Lint::ShardImbalance,
+                Severity::Warning,
+                site,
+                format!(
+                    "PUD rows are imbalanced across banks: \
+                     channel {ch} rank {rk} bank {bk} executes {max} of \
+                     {pud_rows} row(s) ({:.0}% above the {:.1}-row \
+                     per-bank average) — bank-level parallelism is \
+                     being wasted",
+                    100.0 * (max as f64 - avg) / avg.max(1e-9),
+                    avg,
+                ),
+            ));
+        }
+    }
+    diags
+}
+
+/// Lint a scratch pool at a retirement point: resident leases here
+/// mean the workload finished without handing its temporaries back.
+pub fn lint_scratch_pool(pool: &ScratchPool, site: &str) -> Vec<Diagnostic> {
+    let mut diags = Vec::new();
+    if !pool.is_empty() {
+        diags.push(Diagnostic::new(
+            Lint::LeakedScratchLease,
+            Severity::Warning,
+            site,
+            format!(
+                "{} scratch buffer(s) ({} active, {} parked) still \
+                 leased after the workload retired — trim or \
+                 release_all the pool so the allocator gets its rows \
+                 back",
+                pool.len(),
+                pool.slots().len(),
+                pool.parked(),
+            ),
+        ));
+    }
+    diags
+}
+
+/// Lint an allocation-stats delta: hints that the allocator could not
+/// honor usually foreshadow cross-subarray fallbacks later.
+pub fn lint_alloc_hint(
+    before: &AllocStats,
+    after: &AllocStats,
+    site: &str,
+) -> Vec<Diagnostic> {
+    let mut diags = Vec::new();
+    let missed = after.hint_missed.saturating_sub(before.hint_missed);
+    if missed > 0 {
+        diags.push(Diagnostic::new(
+            Lint::MissedHint,
+            Severity::Note,
+            site,
+            format!(
+                "{missed} alignment hint(s) could not be honored — the \
+                 target subarray was full, so these buffers will not \
+                 co-locate with their hint"
+            ),
+        ));
+    }
+    diags
+}
+
+/// Wrap a verifier rejection as an `Error` diagnostic (the only lint
+/// that is an error: the stream is wrong, not just slow).
+pub fn verify_failed(e: &VerifyError, site: &str) -> Diagnostic {
+    Diagnostic::new(
+        Lint::VerifyFailed(e.kind),
+        Severity::Error,
+        site,
+        e.to_string(),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dram::geometry::{Loc, SubarrayId};
+    use crate::os::process::PhysExtent;
+    use crate::pud::isa::PudOp;
+
+    fn pud_row(bank: u32) -> RowPlan {
+        RowPlan::Pud {
+            sid: SubarrayId(0),
+            dst: Loc {
+                channel: 0,
+                rank: 0,
+                bank,
+                subarray: 0,
+                row: 0,
+                column: 0,
+            },
+            srcs: vec![],
+            bytes: 8192,
+        }
+    }
+
+    fn fb_row(cause: FallbackCause) -> RowPlan {
+        RowPlan::Fallback {
+            dst: vec![PhysExtent { paddr: 0, len: 8192 }],
+            srcs: vec![],
+            bytes: 8192,
+            cause,
+        }
+    }
+
+    fn plan_of(rows: Vec<RowPlan>) -> OpPlan {
+        OpPlan {
+            op: PudOp::And,
+            len: rows.len() as u64 * 8192,
+            rows,
+            dst_ranges: vec![],
+            src_ranges: vec![],
+        }
+    }
+
+    #[test]
+    fn clean_plans_produce_no_diagnostics() {
+        let plans = vec![plan_of(vec![pud_row(0), pud_row(1)])];
+        assert!(lint_plans(&plans, "t").is_empty());
+    }
+
+    #[test]
+    fn fallbacks_are_attributed_per_cause() {
+        let plans = vec![plan_of(vec![
+            fb_row(FallbackCause::CrossSubarray),
+            fb_row(FallbackCause::CrossSubarray),
+            fb_row(FallbackCause::Reserved),
+            pud_row(0),
+        ])];
+        let diags = lint_plans(&plans, "t");
+        let names: Vec<&str> = diags.iter().map(|d| d.lint.name()).collect();
+        assert!(names.contains(&"fallback_row.cross_subarray"));
+        assert!(names.contains(&"fallback_row.reserved"));
+        assert!(!names.contains(&"fallback_row.misaligned"));
+        // cross-subarray fallbacks also get the avoidable note
+        assert!(names.contains(&"avoidable_fallback"));
+        let xs = diags
+            .iter()
+            .find(|d| {
+                d.lint == Lint::FallbackRow(FallbackCause::CrossSubarray)
+            })
+            .unwrap();
+        assert_eq!(xs.severity, Severity::Warning);
+        assert!(xs.message.contains("2 of 4"), "{}", xs.message);
+    }
+
+    #[test]
+    fn shard_imbalance_requires_scale_and_skew() {
+        // balanced: no finding
+        let rows: Vec<RowPlan> =
+            (0..128).map(|i| pud_row(i % 4)).collect();
+        assert!(lint_plans(&[plan_of(rows)], "t").is_empty());
+        // skewed but tiny: still quiet
+        let rows: Vec<RowPlan> = (0..8)
+            .map(|i| pud_row(if i == 0 { 1 } else { 0 }))
+            .collect();
+        assert!(lint_plans(&[plan_of(rows)], "t").is_empty());
+        // skewed at scale: one bank does ~all the work
+        let rows: Vec<RowPlan> = (0..128)
+            .map(|i| pud_row(if i < 120 { 0 } else { i % 4 }))
+            .collect();
+        let diags = lint_plans(&[plan_of(rows)], "t");
+        assert!(diags
+            .iter()
+            .any(|d| d.lint == Lint::ShardImbalance), "{diags:?}");
+    }
+
+    #[test]
+    fn scratch_and_hint_lints() {
+        let pool = ScratchPool::new();
+        assert!(lint_scratch_pool(&pool, "t").is_empty());
+
+        let before = AllocStats::default();
+        let mut after = AllocStats::default();
+        assert!(lint_alloc_hint(&before, &after, "t").is_empty());
+        after.hint_missed = 3;
+        let diags = lint_alloc_hint(&before, &after, "t");
+        assert_eq!(diags.len(), 1);
+        assert_eq!(diags[0].lint, Lint::MissedHint);
+        assert_eq!(diags[0].severity, Severity::Note);
+    }
+
+    #[test]
+    fn json_rendering_escapes_and_lists() {
+        let d = Diagnostic::new(
+            Lint::AvoidableFallback,
+            Severity::Note,
+            "site\"x\"",
+            "line1\nline2",
+        );
+        let j = d.to_json();
+        assert!(j.contains("\\\"x\\\""), "{j}");
+        assert!(j.contains("line1\\nline2"), "{j}");
+        let arr = diagnostics_to_json(&[d.clone(), d]);
+        assert!(arr.starts_with("[\n"), "{arr}");
+        assert!(arr.ends_with(']'), "{arr}");
+        assert_eq!(arr.matches("avoidable_fallback").count(), 2);
+        assert!(diagnostics_to_json(&[]).starts_with('['));
+    }
+
+    #[test]
+    fn verify_failures_are_errors() {
+        let e = VerifyError {
+            kind: VerifyErrorKind::UseBeforeDef,
+            message: "x".into(),
+            req_idx: Some(3),
+        };
+        let d = verify_failed(&e, "t");
+        assert_eq!(d.severity, Severity::Error);
+        assert_eq!(d.lint, Lint::VerifyFailed(VerifyErrorKind::UseBeforeDef));
+        assert!(d.to_json().contains("verify_failed.use_before_def"));
+    }
+}

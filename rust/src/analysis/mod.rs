@@ -1,0 +1,99 @@
+//! Static analysis over compiled PUD programs (DESIGN.md §16).
+//!
+//! PUMA's correctness story hinges on placement invariants that the
+//! repo historically discovered only dynamically, one row at a time,
+//! inside `legality::check_rowwise` during execution. This module adds
+//! the verification layer between codegen and the substrate:
+//!
+//! * [`verify`] — a dataflow **program verifier** over the
+//!   `Vec<BulkRequest>` streams that `Compiled`/`CompiledMulti` emit
+//!   (def-before-use, aliasing legality, scratch-lease balance,
+//!   reserved-row safety, hazard-wave consistency), plus a
+//!   **translation-validation** pass that abstractly interprets the
+//!   stream over exhaustive truth-table lanes and proves it
+//!   byte-equivalent to the source expression DAG — no simulator run
+//!   needed.
+//! * [`lint`] — a **placement linter** producing typed
+//!   [`Diagnostic`]s that attribute every fallback row to the PUMA
+//!   requirement it violated (misaligned vs fragmented vs
+//!   cross-subarray vs reserved) and flag avoidable fallbacks, missed
+//!   allocation hints, shard imbalance, and leaked scratch leases.
+//!
+//! Wiring: `System::set_verify` (or the `PUMA_VERIFY` environment
+//! variable) selects a [`VerifyLevel`]; the coordinator runs the
+//! linter on every batch and the `System` compile paths run the
+//! verifier on every emission. `puma lint` replays workloads in
+//! analyze mode and renders the diagnostics.
+
+pub mod lint;
+pub mod verify;
+
+pub use lint::{Diagnostic, Lint, Severity};
+pub use verify::{VerifyError, VerifyErrorKind, VerifyOk};
+
+/// How much analysis runs on the request path.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum VerifyLevel {
+    /// No analysis (the historical behavior).
+    Off,
+    /// Placement linter on every batch: fallback-cause attribution,
+    /// avoidable-fallback and imbalance diagnostics. Cheap — reuses
+    /// the plans the pipeline already built.
+    Lint,
+    /// Lint plus the program verifier (dataflow + translation
+    /// validation) on every compiled emission. "PudSan": in debug
+    /// builds a verifier error also fires a `debug_assert!`.
+    Full,
+}
+
+impl VerifyLevel {
+    pub fn name(&self) -> &'static str {
+        match self {
+            VerifyLevel::Off => "off",
+            VerifyLevel::Lint => "lint",
+            VerifyLevel::Full => "full",
+        }
+    }
+
+    /// Parse a level name; accepts the `PUMA_VERIFY` spellings.
+    pub fn parse(s: &str) -> Option<VerifyLevel> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "off" | "0" | "none" | "" => Some(VerifyLevel::Off),
+            "lint" => Some(VerifyLevel::Lint),
+            "full" | "1" | "on" => Some(VerifyLevel::Full),
+            _ => None,
+        }
+    }
+
+    /// The level the `PUMA_VERIFY` environment variable selects
+    /// (`off` when unset or unparseable) — the default every
+    /// `SystemConfig` boots with, so CI can run the whole test suite
+    /// under `PUMA_VERIFY=full` without touching a single test.
+    pub fn from_env() -> VerifyLevel {
+        std::env::var("PUMA_VERIFY")
+            .ok()
+            .and_then(|s| VerifyLevel::parse(&s))
+            .unwrap_or(VerifyLevel::Off)
+    }
+}
+
+impl std::fmt::Display for VerifyLevel {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_levels() {
+        assert_eq!(VerifyLevel::parse("off"), Some(VerifyLevel::Off));
+        assert_eq!(VerifyLevel::parse("Lint"), Some(VerifyLevel::Lint));
+        assert_eq!(VerifyLevel::parse("FULL"), Some(VerifyLevel::Full));
+        assert_eq!(VerifyLevel::parse("bogus"), None);
+        assert!(VerifyLevel::Full > VerifyLevel::Lint);
+        assert!(VerifyLevel::Lint > VerifyLevel::Off);
+    }
+}

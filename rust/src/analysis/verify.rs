@@ -1,0 +1,664 @@
+//! The compiled-program verifier and translation validator.
+//!
+//! A compiled PUD program is a `Vec<BulkRequest>` bound to concrete
+//! virtual addresses: operand (leaf) buffers, output buffers, and
+//! scratch rows leased from a [`crate::alloc::scratch::ScratchPool`].
+//! [`verify_compiled`]/[`verify_compiled_multi`] prove, without
+//! touching the simulator, that such a stream is well-formed and
+//! byte-equivalent to the source expression DAG:
+//!
+//! 1. **Dataflow** — every request has the right arity and length,
+//!    reads only defined values (operands or earlier writes), writes
+//!    only into the declared binding universe, and never clobbers an
+//!    operand buffer that a later request still reads (the aliasing
+//!    legality `regalloc`'s in-place-dst rule relies on).
+//! 2. **Lease balance** — every scratch slot the program declared it
+//!    needs actually appears in the stream; a leased-but-unused slot
+//!    is a scratch leak (the pool grew for nothing and the
+//!    lease/release ledger no longer balances).
+//! 3. **Reserved rows** — with a resolver from the caller (the
+//!    `System` supplies page-table translation), no operand may land
+//!    on an Ambit control/temp row.
+//! 4. **Hazard-wave consistency** — the stream must match the
+//!    canonical emission of the compiled program position by position
+//!    on `(dst, srcs, len)`; any divergence changes the greedy
+//!    hazard-wave partition `coordinator/schedule.rs` builds (the
+//!    VA-level partition of both streams is reported in the error).
+//! 5. **Translation validation** — the stream is abstractly
+//!    interpreted over truth-table lanes: with `n <= 8` leaves the
+//!    lanes enumerate all `2^n` assignments exhaustively (one bit per
+//!    assignment), so equality with the reference
+//!    `Expr::eval_bytes`/`MultiExpr::eval_bytes` *proves* the
+//!    optimized + regalloc'd + lowered stream computes the source DAG;
+//!    beyond 8 leaves, 256 pseudo-random lanes give a probabilistic
+//!    check.
+//!
+//! The checks run in the order above and report the first failure, so
+//! each systematic fault maps to a stable [`VerifyErrorKind`] (see
+//! `rust/tests/prop_analysis.rs` for the fault-injection matrix).
+
+use rustc_hash::{FxHashMap, FxHashSet};
+
+use crate::pud::compiler::{Compiled, CompiledMulti, MultiExpr};
+use crate::pud::isa::BulkRequest;
+use crate::util::rng::Pcg64;
+
+/// Lane seed for the >8-leaf probabilistic fallback — fixed so runs
+/// are reproducible.
+const LANE_SEED: u64 = 0x7E57_1A9E;
+
+/// Random lane bytes used when exhaustive enumeration is too wide.
+const RANDOM_LANE_BYTES: usize = 256;
+
+/// Exhaustive truth-table enumeration bound: `2^8` assignments fit in
+/// 32 lane bytes.
+pub const EXHAUSTIVE_LEAVES: usize = 8;
+
+/// What went wrong, as a stable kind the fault-injection tests (and
+/// the linter's diagnostics) key on.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum VerifyErrorKind {
+    /// A request's source count does not match its op's arity.
+    ArityMismatch,
+    /// A request's length differs from the program binding length.
+    LengthMismatch,
+    /// A source address is read before anything defined it.
+    UseBeforeDef,
+    /// An address outside the operand/dst/scratch binding universe.
+    UnknownAddress,
+    /// A write clobbers an operand buffer that a later request reads.
+    IllegalAlias,
+    /// A declared output buffer is never written — the stream ends
+    /// early (or lost its defining request).
+    TruncatedStream,
+    /// A scratch slot the program leased is never used by the stream.
+    ScratchLeak,
+    /// An operand resolves onto a reserved (Ambit control/temp) row.
+    ReservedRow,
+    /// The stream diverges from the canonical emission order, which
+    /// changes the scheduler's greedy hazard-wave partition.
+    HazardWaveMismatch,
+    /// Abstract interpretation over truth-table lanes disagrees with
+    /// the reference evaluation of the source DAG.
+    TranslationMismatch,
+}
+
+impl VerifyErrorKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            VerifyErrorKind::ArityMismatch => "arity_mismatch",
+            VerifyErrorKind::LengthMismatch => "length_mismatch",
+            VerifyErrorKind::UseBeforeDef => "use_before_def",
+            VerifyErrorKind::UnknownAddress => "unknown_address",
+            VerifyErrorKind::IllegalAlias => "illegal_alias",
+            VerifyErrorKind::TruncatedStream => "truncated_stream",
+            VerifyErrorKind::ScratchLeak => "scratch_leak",
+            VerifyErrorKind::ReservedRow => "reserved_row",
+            VerifyErrorKind::HazardWaveMismatch => "hazard_wave_mismatch",
+            VerifyErrorKind::TranslationMismatch => "translation_mismatch",
+        }
+    }
+}
+
+impl std::fmt::Display for VerifyErrorKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// A verification failure: the kind, a human-readable message, and
+/// the offending request index when one exists.
+#[derive(Debug, Clone)]
+pub struct VerifyError {
+    pub kind: VerifyErrorKind,
+    pub message: String,
+    pub req_idx: Option<usize>,
+}
+
+impl std::fmt::Display for VerifyError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self.req_idx {
+            Some(i) => write!(f, "{}: {} (request {})", self.kind, self.message, i),
+            None => write!(f, "{}: {}", self.kind, self.message),
+        }
+    }
+}
+
+impl std::error::Error for VerifyError {}
+
+fn err(
+    kind: VerifyErrorKind,
+    req_idx: Option<usize>,
+    message: String,
+) -> VerifyError {
+    VerifyError {
+        kind,
+        message,
+        req_idx,
+    }
+}
+
+/// What a successful verification covered.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct VerifyOk {
+    /// Requests checked.
+    pub ops: usize,
+    /// Truth-table assignments the translation validation evaluated
+    /// (`2^n` exhaustive lanes, or `8 * RANDOM_LANE_BYTES` random
+    /// ones).
+    pub lanes: usize,
+    /// `true` when the lanes enumerate every leaf assignment (a
+    /// proof, not a probabilistic check).
+    pub exhaustive: bool,
+    /// VA-level hazard waves of the stream.
+    pub waves: usize,
+}
+
+/// The address binding a stream was emitted against.
+#[derive(Debug, Clone, Copy)]
+pub struct Binding<'a> {
+    /// `operands[i]` backs `Leaf(i)`; may be longer than the leaf
+    /// count (extra entries are simply unused).
+    pub operands: &'a [u64],
+    /// Output buffers, one per root.
+    pub dsts: &'a [u64],
+    /// Scratch slots handed to `emit` (may exceed `scratch_needed`).
+    pub scratch: &'a [u64],
+    /// How many scratch slots the program actually claims.
+    pub scratch_needed: usize,
+    /// Buffer length in bytes, common to every operand.
+    pub len: u64,
+}
+
+/// Optional per-address predicate: does `va`'s backing storage touch
+/// a reserved row? The `System` answers via page-table translation;
+/// tests inject synthetic placements.
+pub type ReservedProbe<'a> = &'a dyn Fn(u64) -> bool;
+
+/// Do two requests conflict at the VA level (write/write or
+/// write/read overlap)? Mirrors the physical-range test in
+/// `coordinator/plan.rs::OpPlan::conflicts_with`, one level up.
+fn conflicts(a: &BulkRequest, b: &BulkRequest) -> bool {
+    a.dst == b.dst || a.srcs.contains(&b.dst) || b.srcs.contains(&a.dst)
+}
+
+/// Greedy VA-level hazard-wave partition of a request stream — the
+/// abstraction of `coordinator/schedule.rs`'s physical-range
+/// partitioning that the verifier can compute without translation.
+pub fn va_waves(reqs: &[BulkRequest]) -> Vec<Vec<usize>> {
+    let mut waves: Vec<Vec<usize>> = Vec::new();
+    let mut cur: Vec<usize> = Vec::new();
+    for (i, r) in reqs.iter().enumerate() {
+        if cur.iter().any(|&j| conflicts(&reqs[j], r)) {
+            waves.push(std::mem::take(&mut cur));
+        }
+        cur.push(i);
+    }
+    if !cur.is_empty() {
+        waves.push(cur);
+    }
+    waves
+}
+
+/// Dataflow + lease-balance + reserved-row checks (stages 1-3).
+fn check_dataflow(
+    reqs: &[BulkRequest],
+    b: &Binding,
+    reserved: Option<ReservedProbe>,
+) -> Result<(), VerifyError> {
+    let operand_set: FxHashSet<u64> = b.operands.iter().copied().collect();
+    let mut universe: FxHashSet<u64> = operand_set.clone();
+    universe.extend(b.dsts.iter().copied());
+    universe.extend(b.scratch.iter().copied());
+
+    // read positions per VA, for the operand-clobber liveness check
+    let mut reads: FxHashMap<u64, Vec<usize>> = FxHashMap::default();
+    for (i, r) in reqs.iter().enumerate() {
+        for &s in &r.srcs {
+            reads.entry(s).or_default().push(i);
+        }
+    }
+
+    let mut written: FxHashSet<u64> = FxHashSet::default();
+    let mut touched: FxHashSet<u64> = FxHashSet::default();
+    for (i, r) in reqs.iter().enumerate() {
+        if r.srcs.len() != r.op.arity() {
+            return Err(err(
+                VerifyErrorKind::ArityMismatch,
+                Some(i),
+                format!(
+                    "{} takes {} source(s), stream carries {}",
+                    r.op,
+                    r.op.arity(),
+                    r.srcs.len()
+                ),
+            ));
+        }
+        if r.len != b.len {
+            return Err(err(
+                VerifyErrorKind::LengthMismatch,
+                Some(i),
+                format!("request length {} != binding length {}", r.len, b.len),
+            ));
+        }
+        for &s in &r.srcs {
+            if !universe.contains(&s) {
+                return Err(err(
+                    VerifyErrorKind::UnknownAddress,
+                    Some(i),
+                    format!("source {s:#x} is outside the binding universe"),
+                ));
+            }
+            if !written.contains(&s) && !operand_set.contains(&s) {
+                return Err(err(
+                    VerifyErrorKind::UseBeforeDef,
+                    Some(i),
+                    format!("source {s:#x} read before any request defined it"),
+                ));
+            }
+            touched.insert(s);
+        }
+        if !universe.contains(&r.dst) {
+            return Err(err(
+                VerifyErrorKind::UnknownAddress,
+                Some(i),
+                format!("destination {:#x} is outside the binding universe", r.dst),
+            ));
+        }
+        if operand_set.contains(&r.dst) {
+            // Writing an operand buffer is legal only when nothing
+            // reads it afterwards (the single-output root write is
+            // always last; mid-stream clobbers corrupt later reads).
+            let read_later = reads
+                .get(&r.dst)
+                .is_some_and(|ps| ps.iter().any(|&p| p > i));
+            if read_later {
+                return Err(err(
+                    VerifyErrorKind::IllegalAlias,
+                    Some(i),
+                    format!(
+                        "destination {:#x} clobbers an operand a later \
+                         request still reads",
+                        r.dst
+                    ),
+                ));
+            }
+        }
+        written.insert(r.dst);
+        touched.insert(r.dst);
+    }
+
+    for (k, &d) in b.dsts.iter().enumerate() {
+        if !written.contains(&d) {
+            return Err(err(
+                VerifyErrorKind::TruncatedStream,
+                None,
+                format!(
+                    "output {k} ({d:#x}) is never written — the stream \
+                     ends before its defining request"
+                ),
+            ));
+        }
+    }
+    for (k, &s) in b.scratch.iter().take(b.scratch_needed).enumerate() {
+        if !touched.contains(&s) {
+            return Err(err(
+                VerifyErrorKind::ScratchLeak,
+                None,
+                format!(
+                    "scratch slot {k} ({s:#x}) was leased but never used \
+                     — the lease/release ledger no longer balances"
+                ),
+            ));
+        }
+    }
+
+    if let Some(probe) = reserved {
+        let mut seen: FxHashSet<u64> = FxHashSet::default();
+        for (i, r) in reqs.iter().enumerate() {
+            for &va in std::iter::once(&r.dst).chain(r.srcs.iter()) {
+                if seen.insert(va) && probe(va) {
+                    return Err(err(
+                        VerifyErrorKind::ReservedRow,
+                        Some(i),
+                        format!(
+                            "{va:#x} resolves onto a reserved Ambit \
+                             control/temp row"
+                        ),
+                    ));
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Stage 4: the stream must match the canonical emission position by
+/// position on `(dst, srcs, len)` — ops are deliberately ignored so an
+/// op swap falls through to translation validation, which names it
+/// precisely.
+fn check_hazard_order(
+    reqs: &[BulkRequest],
+    expected: &[BulkRequest],
+) -> Result<(), VerifyError> {
+    let diverged = reqs.len() != expected.len()
+        || reqs.iter().zip(expected).any(|(a, e)| {
+            a.dst != e.dst || a.srcs != e.srcs || a.len != e.len
+        });
+    if diverged {
+        return Err(err(
+            VerifyErrorKind::HazardWaveMismatch,
+            None,
+            format!(
+                "stream order diverges from the canonical emission \
+                 ({} vs {} request(s), {} vs {} VA-level wave(s)) — \
+                 the greedy hazard-wave partition no longer matches",
+                reqs.len(),
+                expected.len(),
+                va_waves(reqs).len(),
+                va_waves(expected).len(),
+            ),
+        ));
+    }
+    Ok(())
+}
+
+/// Truth-table lanes for `n` leaves: exhaustive when `n <=
+/// EXHAUSTIVE_LEAVES` (bit `g` of the lane buffers encodes assignment
+/// `g mod 2^n`, so every assignment appears), pseudo-random otherwise.
+fn leaf_lanes(n: usize) -> (Vec<Vec<u8>>, usize, bool) {
+    if n <= EXHAUSTIVE_LEAVES {
+        let assignments = 1usize << n;
+        let len = assignments.div_ceil(8).max(1);
+        let mut lanes = vec![vec![0u8; len]; n];
+        for g in 0..len * 8 {
+            let a = g % assignments;
+            for (i, lane) in lanes.iter_mut().enumerate() {
+                if (a >> i) & 1 == 1 {
+                    lane[g / 8] |= 1 << (g % 8);
+                }
+            }
+        }
+        (lanes, len, true)
+    } else {
+        let mut rng = Pcg64::new(LANE_SEED);
+        let mut lanes = vec![vec![0u8; RANDOM_LANE_BYTES]; n];
+        for lane in &mut lanes {
+            rng.fill_bytes(lane);
+        }
+        (lanes, RANDOM_LANE_BYTES, false)
+    }
+}
+
+/// Stage 5: abstract interpretation of the stream over the lanes,
+/// compared against the reference evaluation of the (optimized) DAG.
+/// `n_leaves` leaves are bound to `binding.operands[..n_leaves]`;
+/// `want[k]` is the reference image of output `k`.
+fn check_translation(
+    reqs: &[BulkRequest],
+    b: &Binding,
+    n_leaves: usize,
+    eval: impl FnOnce(&[&[u8]], usize) -> anyhow::Result<Vec<Vec<u8>>>,
+) -> Result<(usize, bool), VerifyError> {
+    let (lanes, lane_len, exhaustive) = leaf_lanes(n_leaves);
+    // One buffer per VA: duplicate operand bindings collapse exactly
+    // as the hardware would alias them, and the reference is fed the
+    // collapsed images so the proof covers the actual binding.
+    let mut mem: FxHashMap<u64, Vec<u8>> = FxHashMap::default();
+    for (i, &va) in b.operands.iter().take(n_leaves).enumerate() {
+        mem.entry(va).or_insert_with(|| lanes[i].clone());
+    }
+    let leaf_imgs: Vec<Vec<u8>> = b
+        .operands
+        .iter()
+        .take(n_leaves)
+        .map(|va| mem[va].clone())
+        .collect();
+    let leaf_refs: Vec<&[u8]> = leaf_imgs.iter().map(|v| v.as_slice()).collect();
+    let want = eval(&leaf_refs, lane_len).map_err(|e| {
+        err(
+            VerifyErrorKind::TranslationMismatch,
+            None,
+            format!("reference evaluation failed: {e}"),
+        )
+    })?;
+
+    for r in reqs {
+        let srcs: Vec<Vec<u8>> = r
+            .srcs
+            .iter()
+            .map(|s| mem.get(s).cloned().unwrap_or_else(|| vec![0u8; lane_len]))
+            .collect();
+        let refs: Vec<&[u8]> = srcs.iter().map(|v| v.as_slice()).collect();
+        let mut out = vec![0u8; lane_len];
+        r.op.apply_bytes(&refs, &mut out);
+        mem.insert(r.dst, out);
+    }
+
+    for (k, (&d, want_k)) in b.dsts.iter().zip(&want).enumerate() {
+        let got = mem.get(&d);
+        if got != Some(want_k) {
+            let lane = got.map_or(usize::MAX, |g| {
+                g.iter()
+                    .zip(want_k)
+                    .position(|(a, b)| a != b)
+                    .unwrap_or(usize::MAX)
+            });
+            return Err(err(
+                VerifyErrorKind::TranslationMismatch,
+                None,
+                format!(
+                    "output {k} ({d:#x}) disagrees with the reference \
+                     evaluation of the source DAG (first bad lane byte \
+                     {lane}; {} assignment(s) checked{})",
+                    lane_len * 8,
+                    if exhaustive { ", exhaustive" } else { "" },
+                ),
+            ));
+        }
+    }
+    Ok((lane_len * 8, exhaustive))
+}
+
+fn verify_stream(
+    reqs: &[BulkRequest],
+    b: &Binding,
+    reserved: Option<ReservedProbe>,
+    expected: &[BulkRequest],
+    n_leaves: usize,
+    eval: impl FnOnce(&[&[u8]], usize) -> anyhow::Result<Vec<Vec<u8>>>,
+) -> Result<VerifyOk, VerifyError> {
+    check_dataflow(reqs, b, reserved)?;
+    check_hazard_order(reqs, expected)?;
+    let (lanes, exhaustive) = check_translation(reqs, b, n_leaves, eval)?;
+    Ok(VerifyOk {
+        ops: reqs.len(),
+        lanes,
+        exhaustive,
+        waves: va_waves(reqs).len(),
+    })
+}
+
+/// Verify a single-output program's emitted stream against its
+/// compiled form and binding. `reserved` is the optional reserved-row
+/// probe ([`ReservedProbe`]).
+#[allow(clippy::too_many_arguments)]
+pub fn verify_compiled(
+    c: &Compiled,
+    operands: &[u64],
+    dst: u64,
+    len: u64,
+    scratch: &[u64],
+    reqs: &[BulkRequest],
+    reserved: Option<ReservedProbe>,
+) -> Result<VerifyOk, VerifyError> {
+    let dsts = [dst];
+    let b = Binding {
+        operands,
+        dsts: &dsts,
+        scratch,
+        scratch_needed: c.scratch_needed(),
+        len,
+    };
+    let expected = c.emit(operands, dst, len, scratch).map_err(|e| {
+        err(
+            VerifyErrorKind::HazardWaveMismatch,
+            None,
+            format!("canonical re-emission failed: {e}"),
+        )
+    })?;
+    let expr = c.expr();
+    verify_stream(reqs, &b, reserved, &expected, expr.n_leaves(), |lv, n| {
+        expr.eval_bytes(lv, n).map(|one| vec![one])
+    })
+}
+
+/// Verify a multi-output program's emitted stream against its
+/// compiled form and binding.
+#[allow(clippy::too_many_arguments)]
+pub fn verify_compiled_multi(
+    c: &CompiledMulti,
+    operands: &[u64],
+    dsts: &[u64],
+    len: u64,
+    scratch: &[u64],
+    reqs: &[BulkRequest],
+    reserved: Option<ReservedProbe>,
+) -> Result<VerifyOk, VerifyError> {
+    let b = Binding {
+        operands,
+        dsts,
+        scratch,
+        scratch_needed: c.scratch_needed(),
+        len,
+    };
+    let expected = c.emit(operands, dsts, len, scratch).map_err(|e| {
+        err(
+            VerifyErrorKind::HazardWaveMismatch,
+            None,
+            format!("canonical re-emission failed: {e}"),
+        )
+    })?;
+    let expr: &MultiExpr = c.expr();
+    verify_stream(reqs, &b, reserved, &expected, expr.n_leaves(), |lv, n| {
+        expr.eval_bytes(lv, n)
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pud::compiler::{compile, compile_multi, ExprBuilder};
+    use crate::pud::isa::PudOp;
+
+    fn addrs(n: usize, base: u64) -> Vec<u64> {
+        (0..n as u64).map(|i| base + i * 0x1000).collect()
+    }
+
+    #[test]
+    fn accepts_and_proves_a_simple_program() {
+        let mut b = ExprBuilder::new();
+        let (x, y, z) = (b.leaf(0), b.leaf(1), b.leaf(2));
+        let xy = b.and(x, y);
+        let root = b.xor(xy, z);
+        let c = compile(&b.build(root));
+        let ops = addrs(3, 0x10_0000);
+        let scratch = addrs(c.scratch_needed().max(1), 0x20_0000);
+        let reqs = c.emit(&ops, 0x30_0000, 4096, &scratch).unwrap();
+        let ok =
+            verify_compiled(&c, &ops, 0x30_0000, 4096, &scratch, &reqs, None)
+                .unwrap();
+        assert_eq!(ok.ops, reqs.len());
+        assert!(ok.exhaustive);
+        assert_eq!(ok.lanes % 8, 0);
+        assert!(ok.waves >= 1);
+    }
+
+    #[test]
+    fn accepts_multi_output_with_duplicate_roots() {
+        let mut b = ExprBuilder::new();
+        let (x, y) = (b.leaf(0), b.leaf(1));
+        let xy = b.or(x, y);
+        let m = b.build_multi(vec![xy, xy, x]);
+        let c = compile_multi(&m);
+        let ops = addrs(2, 0x10_0000);
+        let dsts = addrs(3, 0x30_0000);
+        let scratch = addrs(c.scratch_needed().max(1), 0x20_0000);
+        let reqs = c.emit(&ops, &dsts, 512, &scratch).unwrap();
+        verify_compiled_multi(&c, &ops, &dsts, 512, &scratch, &reqs, None)
+            .unwrap();
+    }
+
+    #[test]
+    fn swapped_op_is_a_translation_mismatch() {
+        let mut b = ExprBuilder::new();
+        let (x, y) = (b.leaf(0), b.leaf(1));
+        let root = b.and(x, y);
+        let c = compile(&b.build(root));
+        let ops = addrs(2, 0x10_0000);
+        let scratch = addrs(c.scratch_needed().max(1), 0x20_0000);
+        let mut reqs = c.emit(&ops, 0x30_0000, 64, &scratch).unwrap();
+        let i = reqs
+            .iter()
+            .position(|r| matches!(r.op, PudOp::And))
+            .unwrap();
+        reqs[i].op = PudOp::Or;
+        let e = verify_compiled(&c, &ops, 0x30_0000, 64, &scratch, &reqs, None)
+            .unwrap_err();
+        assert_eq!(e.kind, VerifyErrorKind::TranslationMismatch);
+    }
+
+    #[test]
+    fn truncated_stream_is_flagged() {
+        let mut b = ExprBuilder::new();
+        let (x, y) = (b.leaf(0), b.leaf(1));
+        let root = b.and(x, y);
+        let c = compile(&b.build(root));
+        let ops = addrs(2, 0x10_0000);
+        let scratch = addrs(c.scratch_needed().max(1), 0x20_0000);
+        let mut reqs = c.emit(&ops, 0x30_0000, 64, &scratch).unwrap();
+        reqs.pop();
+        let e = verify_compiled(&c, &ops, 0x30_0000, 64, &scratch, &reqs, None)
+            .unwrap_err();
+        assert_eq!(e.kind, VerifyErrorKind::TruncatedStream);
+    }
+
+    #[test]
+    fn reserved_probe_fires() {
+        let mut b = ExprBuilder::new();
+        let (x, y) = (b.leaf(0), b.leaf(1));
+        let root = b.or(x, y);
+        let c = compile(&b.build(root));
+        let ops = addrs(2, 0x10_0000);
+        let scratch = addrs(c.scratch_needed().max(1), 0x20_0000);
+        let reqs = c.emit(&ops, 0x30_0000, 64, &scratch).unwrap();
+        let poisoned = ops[1];
+        let probe = move |va: u64| va == poisoned;
+        let e = verify_compiled(
+            &c,
+            &ops,
+            0x30_0000,
+            64,
+            &scratch,
+            &reqs,
+            Some(&probe),
+        )
+        .unwrap_err();
+        assert_eq!(e.kind, VerifyErrorKind::ReservedRow);
+    }
+
+    #[test]
+    fn va_wave_partition_respects_conflicts() {
+        // two independent copies share a wave; a dependent read opens
+        // a new one
+        let reqs = vec![
+            BulkRequest::new(PudOp::Copy, 0x1000, vec![0x2000], 64),
+            BulkRequest::new(PudOp::Copy, 0x3000, vec![0x4000], 64),
+            BulkRequest::new(PudOp::Not, 0x5000, vec![0x1000], 64),
+        ];
+        let waves = va_waves(&reqs);
+        assert_eq!(waves.len(), 2);
+        assert_eq!(waves[0], vec![0, 1]);
+        assert_eq!(waves[1], vec![2]);
+    }
+}

@@ -17,9 +17,12 @@ use anyhow::{bail, Context, Result};
 use rustc_hash::FxHashMap;
 
 use crate::alloc::puma::FitPolicy;
+use crate::analysis::lint::{self as lint_diag, Diagnostic, Severity};
+use crate::analysis::VerifyLevel;
 use crate::config::Config;
 use crate::coordinator::system::{System, SystemConfig};
 use crate::report;
+use crate::util::table::Table;
 use crate::util::units::{fmt_bytes, fmt_ns, parse_size};
 use crate::workloads::microbench::{self, AllocatorKind, Micro};
 use crate::workloads::sweep;
@@ -68,7 +71,7 @@ pub fn build_config(cli: &Cli) -> Result<Config> {
     for k in [
         "micro", "alloc", "size", "batch", "tenants", "epochs", "mode",
         "clauses", "widths", "elems", "threshold", "shards", "rows", "width",
-        "groups", "build_keys", "k", "export", "ops", "quantum",
+        "groups", "build_keys", "k", "export", "ops", "quantum", "json",
     ] {
         overrides.remove(k);
     }
@@ -241,6 +244,16 @@ pub fn run(args: &[String]) -> Result<i32> {
                 .transpose()?;
             cmd_serve(&cfg, tenants, ops, quantum, alloc)
         }
+        "lint" => {
+            let cfg = build_config(&cli)?;
+            let alloc = cli
+                .flags
+                .get("alloc")
+                .map(|a| parse_alloc(a))
+                .transpose()?;
+            let json = cli.flags.get("json").cloned();
+            cmd_lint(&cfg, alloc, json.as_deref())
+        }
         "trace" => {
             let cfg = build_config(&cli)?;
             let export = cli.flags.get("export").map(String::as_str);
@@ -303,6 +316,14 @@ commands:
                back-to-back, verifying byte-identical results and
                comparing tenant-completion percentiles:
                --tenants N --ops N --quantum ROWS [--alloc NAME]
+  lint         replay the filter/analytics/queries workloads with the
+               static verifier at full strength (every compiled stream
+               re-checked: dataflow, hazard waves, translation
+               validation) and the placement linter attributing every
+               fallback row to the PUMA requirement it violated; prints
+               the diagnostics table, writes them as JSON, and exits
+               nonzero only on verifier errors:
+               [--alloc NAME] [--json FILE]
   trace        run a small mixed-op batch with the wave tracer enabled
                and print a pipeline summary; --export DIR also writes
                trace.json (open in ui.perfetto.dev — one lane per
@@ -509,6 +530,180 @@ fn cmd_query(
     println!("{}", report::queries(&results, Some(&cfg.out))?);
     println!("(raw series: {}/queries.csv)", cfg.out.display());
     Ok(0)
+}
+
+/// Boot a system with the verifier forced to `Full` (independent of
+/// `PUMA_VERIFY`), so `puma lint` always checks what it replays.
+fn boot_verified(cfg: &Config) -> Result<System> {
+    System::boot(SystemConfig {
+        scheme: cfg.scheme.clone(),
+        huge_pages: cfg.huge_pages,
+        churn_rounds: cfg.churn_rounds.min(2_000),
+        seed: cfg.seed,
+        artifacts: None,
+        verify: VerifyLevel::Full,
+        ..Default::default()
+    })
+}
+
+/// Prefix every diagnostic's site with the workload that produced it.
+fn scoped(workload: &str, ds: Vec<Diagnostic>) -> Vec<Diagnostic> {
+    ds.into_iter()
+        .map(|mut d| {
+            d.site = format!("{workload}/{}", d.site);
+            d
+        })
+        .collect()
+}
+
+fn cmd_lint(
+    cfg: &Config,
+    alloc: Option<AllocatorKind>,
+    json: Option<&str>,
+) -> Result<i32> {
+    use crate::alloc::scratch::ScratchPool;
+    use crate::pud::arith::ShardedScratch;
+    use crate::workloads::{analytics, filter, queries};
+
+    let kind = alloc.unwrap_or(AllocatorKind::Puma(FitPolicy::WorstFit));
+    let pages = cfg.puma_pages.max(8);
+    let mut diags: Vec<Diagnostic> = Vec::new();
+
+    // --- filter: the compiled-predicate batch over hint-aligned columns
+    eprintln!("linting filter ({}) ...", kind.name());
+    {
+        let mut sys = boot_verified(cfg)?;
+        let pid = sys.spawn();
+        let mut a = kind.build(&mut sys, pages)?;
+        let (expr, columns) = filter::predicate(3);
+        let len = crate::pud::arith::plane_bytes(16 * 1024);
+        let first = sys.alloc(a.as_mut(), pid, len)?;
+        let mut cols = vec![first];
+        for _ in 1..columns {
+            cols.push(sys.alloc_align(a.as_mut(), pid, len, first)?);
+        }
+        let dst = sys.alloc_align(a.as_mut(), pid, len, first)?;
+        let mut pool = ScratchPool::new();
+        sys.run_expr(a.as_mut(), pid, &expr, &cols, dst, len, &mut pool)?;
+        diags.extend(scoped("filter", sys.take_diagnostics()));
+    }
+
+    // --- analytics: filter-then-sum cells across bit-widths
+    eprintln!("linting analytics ({}) ...", kind.name());
+    {
+        let mut sys = boot_verified(cfg)?;
+        let pid = sys.spawn();
+        let mut a = kind.build(&mut sys, pages)?;
+        let acfg = analytics::AnalyticsConfig {
+            elems: 16 * 1024,
+            widths: vec![4, 8],
+            huge_pages: cfg.huge_pages,
+            puma_pages: pages,
+            churn_rounds: cfg.churn_rounds.min(500),
+            seed: cfg.seed,
+            ..Default::default()
+        };
+        let mut pools = ShardedScratch::new();
+        for &w in &acfg.widths {
+            analytics::run_cell(
+                &mut sys,
+                a.as_mut(),
+                pid,
+                kind.name(),
+                &acfg,
+                w,
+                &mut pools,
+            )?;
+        }
+        sys.trim_pools(a.as_mut(), pid, &mut pools, 0)?;
+        sys.flush_columns(a.as_mut(), pid)?;
+        for k in 0..pools.n_pools() {
+            diags.extend(scoped(
+                "analytics",
+                lint_diag::lint_scratch_pool(pools.pool(k), &format!("pool{k}")),
+            ));
+        }
+        diags.extend(scoped("analytics", sys.take_diagnostics()));
+    }
+
+    // --- queries: semi-join / group-by / top-k over the micro-table
+    eprintln!("linting queries ({}) ...", kind.name());
+    {
+        let mut sys = boot_verified(cfg)?;
+        let pid = sys.spawn();
+        let mut a = kind.build(&mut sys, pages)?;
+        let qcfg = queries::QueriesConfig {
+            rows: 16 * 1024,
+            k: 1024,
+            shards: 0,
+            huge_pages: cfg.huge_pages,
+            puma_pages: pages,
+            churn_rounds: cfg.churn_rounds.min(500),
+            seed: cfg.seed,
+            ..Default::default()
+        };
+        let mut pools = ShardedScratch::new();
+        queries::run_cell_semi_join(
+            &mut sys, a.as_mut(), pid, kind.name(), &qcfg, &mut pools,
+        )?;
+        queries::run_cell_group_by(
+            &mut sys, a.as_mut(), pid, kind.name(), &qcfg, &mut pools,
+        )?;
+        queries::run_cell_top_k(
+            &mut sys, a.as_mut(), pid, kind.name(), &qcfg, &mut pools,
+        )?;
+        sys.trim_pools(a.as_mut(), pid, &mut pools, 0)?;
+        sys.flush_columns(a.as_mut(), pid)?;
+        for k in 0..pools.n_pools() {
+            diags.extend(scoped(
+                "queries",
+                lint_diag::lint_scratch_pool(pools.pool(k), &format!("pool{k}")),
+            ));
+        }
+        diags.extend(scoped("queries", sys.take_diagnostics()));
+    }
+
+    if diags.is_empty() {
+        println!(
+            "lint: clean — every compiled stream verified and every row \
+             placement-attributed ({} placement)",
+            kind.name()
+        );
+    } else {
+        let mut table =
+            Table::new(vec!["severity", "lint", "site", "message"]).left(0);
+        for d in &diags {
+            table.row(vec![
+                d.severity.to_string(),
+                d.lint.to_string(),
+                d.site.clone(),
+                d.message.clone(),
+            ]);
+        }
+        println!("{}", table.render());
+    }
+    let errors =
+        diags.iter().filter(|d| d.severity >= Severity::Error).count();
+    let warnings =
+        diags.iter().filter(|d| d.severity == Severity::Warning).count();
+    let notes = diags.iter().filter(|d| d.severity == Severity::Note).count();
+    println!(
+        "{} diagnostic(s): {errors} error(s), {warnings} warning(s), \
+         {notes} note(s)",
+        diags.len()
+    );
+    let json_path = match json {
+        Some(p) => std::path::PathBuf::from(p),
+        None => cfg.out.join("lint.json"),
+    };
+    if let Some(parent) = json_path.parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent)?;
+        }
+    }
+    std::fs::write(&json_path, lint_diag::diagnostics_to_json(&diags))?;
+    println!("(diagnostics json: {})", json_path.display());
+    Ok(if errors > 0 { 1 } else { 0 })
 }
 
 fn cmd_fig2(cfg: &Config) -> Result<i32> {
@@ -920,6 +1115,19 @@ mod tests {
         assert_eq!(cli.flags["ops"], "6");
         assert_eq!(cli.flags["quantum"], "4");
         // tenants/ops/quantum/alloc must not be rejected as config keys
+        let cfg = build_config(&cli).unwrap();
+        assert_eq!(cfg.puma_pages, 4);
+    }
+
+    #[test]
+    fn lint_flags_are_command_specific_not_config() {
+        let cli = parse_args(&args(&[
+            "lint", "--alloc", "puma", "--json", "/tmp/lint.json",
+            "--puma_pages", "4",
+        ]))
+        .unwrap();
+        assert_eq!(cli.flags["json"], "/tmp/lint.json");
+        // alloc/json must not be rejected as unknown config keys
         let cfg = build_config(&cli).unwrap();
         assert_eq!(cfg.puma_pages, 4);
     }

@@ -87,6 +87,7 @@ mod tests {
             }],
             srcs: vec![],
             bytes,
+            cause: crate::pud::legality::FallbackCause::Misaligned,
         }
     }
 

@@ -11,6 +11,8 @@
 
 use anyhow::Result;
 
+use crate::analysis::lint::{self, Diagnostic};
+use crate::analysis::VerifyLevel;
 use crate::obs::trace::{OpSlot, WaveEvent};
 use crate::obs::Obs;
 use crate::os::process::Process;
@@ -63,6 +65,11 @@ impl BatchReport {
     }
 }
 
+/// Retained-diagnostic ceiling: an analytics sweep submits thousands
+/// of batches, so the buffer is bounded and overflow is counted
+/// instead of stored.
+const DIAG_CAP: usize = 10_000;
+
 /// The coordinator: owns the PUD engine, the fallback runtime, and the
 /// three pipeline stages.
 pub struct Coordinator {
@@ -74,6 +81,15 @@ pub struct Coordinator {
     /// are always on; the tracer can be disabled
     /// (`obs.tracer.set_enabled(false)`) for overhead measurements.
     pub obs: Obs,
+    /// How much static analysis runs on the request path: `Lint` runs
+    /// the placement linter over every batch's plans; `Full` also has
+    /// the `System` compile paths verify every emitted stream.
+    pub verify: VerifyLevel,
+    /// Diagnostics accumulated since the last
+    /// [`Coordinator::take_diagnostics`], capped at `DIAG_CAP`.
+    pub diagnostics: Vec<Diagnostic>,
+    /// Diagnostics dropped after the cap was hit.
+    pub diagnostics_dropped: u64,
     planner: Planner,
     executor: Executor,
 }
@@ -86,9 +102,36 @@ impl Coordinator {
             stats: CoordStats::default(),
             pipeline: PipelineStats::default(),
             obs: Obs::new(),
+            verify: VerifyLevel::Off,
+            diagnostics: Vec::new(),
+            diagnostics_dropped: 0,
             planner: Planner::default(),
             executor: Executor::default(),
         }
+    }
+
+    /// Record diagnostics, bounded by `DIAG_CAP`. An `Error` severity
+    /// fires a `debug_assert!` — the "PudSan" mode: debug builds stop
+    /// at the first wrong stream, release builds keep going and report.
+    pub fn record_diagnostics(&mut self, diags: Vec<Diagnostic>) {
+        for d in diags {
+            debug_assert!(
+                d.severity < lint::Severity::Error,
+                "verifier rejected a compiled stream: {d}"
+            );
+            if self.diagnostics.len() < DIAG_CAP {
+                self.diagnostics.push(d);
+            } else {
+                self.diagnostics_dropped += 1;
+            }
+        }
+    }
+
+    /// Drain the accumulated diagnostics (the dropped counter resets
+    /// with them).
+    pub fn take_diagnostics(&mut self) -> Vec<Diagnostic> {
+        self.diagnostics_dropped = 0;
+        std::mem::take(&mut self.diagnostics)
     }
 
     /// Dispatch one bulk operation for `proc`. Returns the simulated
@@ -146,6 +189,11 @@ impl Coordinator {
             plans.push(self.planner.plan(&self.engine.device.scheme, proc, req)?);
         }
         self.pipeline.plan_wall_ns += t0.elapsed().as_nanos() as u64;
+        if self.verify >= VerifyLevel::Lint {
+            let site = format!("coordinator/batch{}", self.pipeline.batches);
+            let diags = lint::lint_plans(&plans, &site);
+            self.record_diagnostics(diags);
+        }
         // 2. schedule
         let t1 = std::time::Instant::now();
         let sched =
@@ -476,6 +524,40 @@ mod tests {
             fb_ns > 3.0 * pud_ns,
             "fallback {fb_ns} ns should dwarf PUD {pud_ns} ns"
         );
+    }
+
+    #[test]
+    fn lint_level_records_fallback_diagnostics() {
+        use crate::analysis::{Lint, VerifyLevel};
+        use crate::pud::legality::FallbackCause;
+        let mut c = coordinator();
+        c.verify = VerifyLevel::Lint;
+        let scheme = c.engine.device.scheme.clone();
+        let mut proc = Process::new(Pid(1));
+        let row_bytes = scheme.geometry.row_bytes as u64;
+        // clean PUD batch: no diagnostics
+        let dst = map_rows(&mut proc, &scheme, 3, &[10]);
+        let src = map_rows(&mut proc, &scheme, 3, &[20]);
+        c.submit(&proc, &BulkRequest::new(PudOp::Copy, dst, vec![src], row_bytes))
+            .unwrap();
+        assert!(c.diagnostics.is_empty());
+        // cross-subarray batch: attributed fallback + avoidable note
+        let dst2 = map_rows(&mut proc, &scheme, 1, &[5]);
+        let src2 = map_rows(&mut proc, &scheme, 2, &[6]);
+        c.submit(&proc, &BulkRequest::new(PudOp::Copy, dst2, vec![src2], row_bytes))
+            .unwrap();
+        let diags = c.take_diagnostics();
+        assert!(diags
+            .iter()
+            .any(|d| d.lint == Lint::FallbackRow(FallbackCause::CrossSubarray)));
+        assert!(diags.iter().any(|d| d.lint == Lint::AvoidableFallback));
+        assert!(diags[0].site.contains("coordinator/batch"));
+        assert!(c.diagnostics.is_empty(), "take drains the buffer");
+        // off by default: the same traffic records nothing
+        c.verify = VerifyLevel::Off;
+        c.submit(&proc, &BulkRequest::new(PudOp::Copy, dst2, vec![src2], row_bytes))
+            .unwrap();
+        assert!(c.diagnostics.is_empty());
     }
 
     #[test]

@@ -297,6 +297,7 @@ mod tests {
                 len: bytes as u64,
             }]],
             bytes,
+            cause: crate::pud::legality::FallbackCause::Misaligned,
         }
     }
 

@@ -11,6 +11,7 @@
 //! measured.
 
 use crate::pud::exec::ExecStats;
+use crate::pud::legality::CauseCounts;
 use crate::util::stats::HitRate;
 
 /// Counters accumulated across every dispatched bulk operation.
@@ -24,6 +25,8 @@ pub struct CoordStats {
     /// Row-granular split.
     pub pud_rows: u64,
     pub fallback_rows: u64,
+    /// Per-cause breakdown of `fallback_rows` (always sums to it).
+    pub fallback_causes: CauseCounts,
     pub pud_bytes: u64,
     pub fallback_bytes: u64,
     /// Simulated time, by path.
@@ -57,6 +60,7 @@ impl CoordStats {
     pub fn absorb_exec(&mut self, e: &ExecStats) {
         self.pud_rows += e.pud_rows;
         self.fallback_rows += e.fallback_rows;
+        self.fallback_causes.merge(&e.fallback_causes);
         self.pud_bytes += e.pud_bytes;
         self.fallback_bytes += e.fallback_bytes;
         self.pud_ns += e.pud_ns;
@@ -68,6 +72,7 @@ impl CoordStats {
         self.ops_fully_pud.merge(o.ops_fully_pud);
         self.pud_rows += o.pud_rows;
         self.fallback_rows += o.fallback_rows;
+        self.fallback_causes.merge(&o.fallback_causes);
         self.pud_bytes += o.pud_bytes;
         self.fallback_bytes += o.fallback_bytes;
         self.pud_ns += o.pud_ns;
@@ -141,6 +146,7 @@ mod tests {
             fallback_bytes: 100,
             pud_ns: 10.0,
             fallback_ns: 90.0,
+            ..Default::default()
         });
         s.alloc_ns = 5.0;
         assert!((s.pud_row_fraction() - 0.75).abs() < 1e-12);

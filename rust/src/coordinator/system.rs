@@ -12,6 +12,8 @@ use rustc_hash::FxHashMap;
 
 use crate::alloc::puma::{CompactReport, PumaAlloc};
 use crate::alloc::request::AllocRequest;
+use crate::analysis::lint::{self, Diagnostic};
+use crate::analysis::{verify, VerifyLevel};
 use crate::alloc::scratch::ScratchPool;
 use crate::alloc::traits::{AllocStats, Allocator, OsCtx};
 use crate::dram::address::InterleaveScheme;
@@ -27,6 +29,8 @@ use crate::pud::arith::{
 use crate::pud::compiler::{self, Compiled, CompiledMulti, CompileStats, Expr};
 use crate::pud::exec::PudEngine;
 use crate::pud::isa::BulkRequest;
+use crate::pud::legality::CauseCounts;
+use crate::pud::reserved;
 use crate::runtime::XlaRuntime;
 
 use super::dispatch::{BatchReport, Coordinator, FallbackMode};
@@ -43,6 +47,11 @@ pub struct SystemConfig {
     /// Artifacts directory to load the XLA runtime from; None =
     /// scalar fallback (simulation-only).
     pub artifacts: Option<std::path::PathBuf>,
+    /// Static-analysis level on the request path (the placement linter
+    /// and the program verifier; DESIGN.md §16). Defaults to whatever
+    /// `PUMA_VERIFY` selects, so CI can run the entire suite under
+    /// `PUMA_VERIFY=full` without touching any call site.
+    pub verify: VerifyLevel,
 }
 
 impl Default for SystemConfig {
@@ -54,6 +63,7 @@ impl Default for SystemConfig {
             churn_rounds: 20_000,
             seed: 0xDEC0DE,
             artifacts: None,
+            verify: VerifyLevel::from_env(),
         }
     }
 }
@@ -69,6 +79,9 @@ pub struct ExprReport {
     pub pud_rows: u64,
     /// Rows that fell back to the CPU path.
     pub fallback_rows: u64,
+    /// The fallback rows attributed to the PUMA placement requirement
+    /// each violated (sums to `fallback_rows`).
+    pub fallback_causes: CauseCounts,
 }
 
 impl ExprReport {
@@ -140,6 +153,34 @@ fn hit_ratio(hits: u64, misses: u64) -> f64 {
     }
 }
 
+/// Does any physical row backing `va..va+len` of `proc` land on a
+/// reserved Ambit control/temp row? The verifier's reserved-row probe:
+/// translation failures answer `false` (the planner will surface the
+/// unmapped operand as its own error).
+fn va_on_reserved_row(
+    proc: &Process,
+    scheme: &InterleaveScheme,
+    va: u64,
+    len: u64,
+) -> bool {
+    let row_bytes = scheme.geometry.row_bytes as u64;
+    let Ok(extents) = proc.phys_extents(va, len) else {
+        return false;
+    };
+    for e in &extents {
+        let mut pa = e.paddr;
+        let end = e.paddr + e.len;
+        while pa < end {
+            let loc = scheme.decode(pa);
+            if reserved::is_reserved(&scheme.geometry, loc.row) {
+                return true;
+            }
+            pa += row_bytes - pa % row_bytes;
+        }
+    }
+    false
+}
+
 impl System {
     pub fn boot(cfg: SystemConfig) -> Result<Self> {
         let os = OsCtx::boot(
@@ -154,6 +195,7 @@ impl System {
             None => FallbackMode::Scalar,
         };
         let mut coord = Coordinator::new(engine, fallback);
+        coord.verify = cfg.verify;
         let metric_ids = SysMetricIds::register(&mut coord.obs.registry);
         Ok(Self {
             os,
@@ -198,6 +240,103 @@ impl System {
     /// Hit/miss counters of the compiled-program cache.
     pub fn program_cache_stats(&self) -> ProgramCacheStats {
         self.programs.stats
+    }
+
+    /// Select how much static analysis runs on the request path: the
+    /// placement linter on every batch at `Lint`, plus the program
+    /// verifier + translation validator on every compiled emission at
+    /// `Full` (see [`crate::analysis`]).
+    pub fn set_verify(&mut self, level: VerifyLevel) {
+        self.coord.verify = level;
+    }
+
+    /// The active static-analysis level.
+    pub fn verify_level(&self) -> VerifyLevel {
+        self.coord.verify
+    }
+
+    /// Drain the diagnostics accumulated by the linter and verifier
+    /// (see [`Coordinator::take_diagnostics`]).
+    pub fn take_diagnostics(&mut self) -> Vec<Diagnostic> {
+        self.coord.take_diagnostics()
+    }
+
+    /// Run the program verifier over an emitted single-output stream
+    /// when the level is `Full`; failures become `Error` diagnostics
+    /// (and a `debug_assert!` in debug builds — "PudSan").
+    #[allow(clippy::too_many_arguments)]
+    fn verify_emitted(
+        &mut self,
+        pid: Pid,
+        compiled: &Compiled,
+        operands: &[u64],
+        dst: u64,
+        len: u64,
+        scratch: &[u64],
+        reqs: &[BulkRequest],
+        site: &str,
+    ) {
+        if self.coord.verify < VerifyLevel::Full {
+            return;
+        }
+        let failure = {
+            let proc = &self.processes[&pid];
+            let scheme = &self.coord.engine.device.scheme;
+            let probe =
+                |va: u64| va_on_reserved_row(proc, scheme, va, len);
+            verify::verify_compiled(
+                compiled,
+                operands,
+                dst,
+                len,
+                scratch,
+                reqs,
+                Some(&probe),
+            )
+            .err()
+        };
+        if let Some(e) = failure {
+            self.coord
+                .record_diagnostics(vec![lint::verify_failed(&e, site)]);
+        }
+    }
+
+    /// Multi-output twin of [`System::verify_emitted`].
+    #[allow(clippy::too_many_arguments)]
+    fn verify_emitted_multi(
+        &mut self,
+        pid: Pid,
+        compiled: &CompiledMulti,
+        operands: &[u64],
+        dsts: &[u64],
+        len: u64,
+        scratch: &[u64],
+        reqs: &[BulkRequest],
+        site: &str,
+    ) {
+        if self.coord.verify < VerifyLevel::Full {
+            return;
+        }
+        let failure = {
+            let proc = &self.processes[&pid];
+            let scheme = &self.coord.engine.device.scheme;
+            let probe =
+                |va: u64| va_on_reserved_row(proc, scheme, va, len);
+            verify::verify_compiled_multi(
+                compiled,
+                operands,
+                dsts,
+                len,
+                scratch,
+                reqs,
+                Some(&probe),
+            )
+            .err()
+        };
+        if let Some(e) = failure {
+            self.coord
+                .record_diagnostics(vec![lint::verify_failed(&e, site)]);
+        }
     }
 
     /// Fetch (or compile and cache) the program for `key`. Returns the
@@ -253,7 +392,12 @@ impl System {
         let proc = self.processes.get_mut(&pid).expect("live pid");
         let before = alloc.stats();
         let va = req.place(alloc, &mut self.os, proc)?;
-        self.record_alloc_metrics(&before, &alloc.stats());
+        let after = alloc.stats();
+        self.record_alloc_metrics(&before, &after);
+        if self.coord.verify >= VerifyLevel::Lint {
+            let diags = lint::lint_alloc_hint(&before, &after, "system/alloc");
+            self.coord.record_diagnostics(diags);
+        }
         Ok(va)
     }
 
@@ -694,13 +838,25 @@ impl System {
         let hint = operands.first().copied();
         self.lease_scratch(alloc, pid, pool, compiled.scratch_needed(), len, hint)?;
         let reqs = compiled.emit(operands, dst, len, pool.slots())?;
+        self.verify_emitted(
+            pid,
+            compiled,
+            operands,
+            dst,
+            len,
+            pool.slots(),
+            &reqs,
+            "system/run_compiled",
+        );
         let (pud0, fb0) = (self.coord.stats.pud_rows, self.coord.stats.fallback_rows);
+        let causes0 = self.coord.stats.fallback_causes;
         let batch = self.submit_batch(pid, &reqs)?;
         Ok(ExprReport {
             batch,
             stats: compiled.stats.clone(),
             pud_rows: self.coord.stats.pud_rows - pud0,
             fallback_rows: self.coord.stats.fallback_rows - fb0,
+            fallback_causes: self.coord.stats.fallback_causes.delta(&causes0),
         })
     }
 
@@ -721,13 +877,25 @@ impl System {
         let hint = operands.first().copied().or_else(|| dsts.first().copied());
         self.lease_scratch(alloc, pid, pool, compiled.scratch_needed(), len, hint)?;
         let reqs = compiled.emit(operands, dsts, len, pool.slots())?;
+        self.verify_emitted_multi(
+            pid,
+            compiled,
+            operands,
+            dsts,
+            len,
+            pool.slots(),
+            &reqs,
+            "system/run_multi",
+        );
         let (pud0, fb0) = (self.coord.stats.pud_rows, self.coord.stats.fallback_rows);
+        let causes0 = self.coord.stats.fallback_causes;
         let batch = self.submit_batch(pid, &reqs)?;
         Ok(ExprReport {
             batch,
             stats: compiled.stats.clone(),
             pud_rows: self.coord.stats.pud_rows - pud0,
             fallback_rows: self.coord.stats.fallback_rows - fb0,
+            fallback_causes: self.coord.stats.fallback_causes.delta(&causes0),
         })
     }
 
@@ -1041,7 +1209,18 @@ impl System {
         let dsts: Vec<u64> = pool.slots()[..w].to_vec();
         let scratch: Vec<u64> = pool.slots()[w..need].to_vec();
         let reqs = compiled.emit(&operands, &dsts, len, &scratch)?;
+        self.verify_emitted_multi(
+            pid,
+            &compiled,
+            &operands,
+            &dsts,
+            len,
+            &scratch,
+            &reqs,
+            "system/column_sum",
+        );
         let (pud0, fb0) = (self.coord.stats.pud_rows, self.coord.stats.fallback_rows);
+        let causes0 = self.coord.stats.fallback_causes;
         let batch = self.submit_batch(pid, &reqs)?;
         let mut stats = compiled.stats.clone();
         if hit {
@@ -1052,6 +1231,7 @@ impl System {
             stats,
             pud_rows: self.coord.stats.pud_rows - pud0,
             fallback_rows: self.coord.stats.fallback_rows - fb0,
+            fallback_causes: self.coord.stats.fallback_causes.delta(&causes0),
         };
         let mut sum: u128 = 0;
         for (i, &va) in dsts.iter().enumerate() {
@@ -1085,22 +1265,35 @@ impl System {
             Vec::with_capacity(bindings.len());
         for (k, b) in bindings.iter().enumerate() {
             self.lease_scratch(alloc, pid, pools.pool(k), need, b.len, Some(b.hint))?;
-            per_shard.push(compiled.emit(
+            let reqs = compiled.emit(
                 &b.operands,
                 &b.dsts,
                 b.len,
                 pools.pool(k).slots(),
-            )?);
+            )?;
+            self.verify_emitted_multi(
+                pid,
+                compiled,
+                &b.operands,
+                &b.dsts,
+                b.len,
+                pools.pool(k).slots(),
+                &reqs,
+                &format!("system/arith_sharded/shard{k}"),
+            );
+            per_shard.push(reqs);
         }
         let reqs = interleave_rounds(per_shard);
         let (pud0, fb0) =
             (self.coord.stats.pud_rows, self.coord.stats.fallback_rows);
+        let causes0 = self.coord.stats.fallback_causes;
         let batch = self.submit_batch(pid, &reqs)?;
         Ok(ExprReport {
             batch,
             stats: compiled.stats.clone(),
             pud_rows: self.coord.stats.pud_rows - pud0,
             fallback_rows: self.coord.stats.fallback_rows - fb0,
+            fallback_causes: self.coord.stats.fallback_causes.delta(&causes0),
         })
     }
 
@@ -1363,12 +1556,24 @@ impl System {
             let scratch: Vec<u64> = pool.slots()[w..need].to_vec();
             let mut operands: Vec<u64> = part.planes().to_vec();
             operands.push(mask.shard(k).planes()[0]);
-            per_shard.push(compiled.emit(&operands, &dsts, len, &scratch)?);
+            let reqs = compiled.emit(&operands, &dsts, len, &scratch)?;
+            self.verify_emitted_multi(
+                pid,
+                &compiled,
+                &operands,
+                &dsts,
+                len,
+                &scratch,
+                &reqs,
+                &format!("system/column_sum_sharded/shard{k}"),
+            );
+            per_shard.push(reqs);
             dsts_per_shard.push(dsts);
         }
         let reqs = interleave_rounds(per_shard);
         let (pud0, fb0) =
             (self.coord.stats.pud_rows, self.coord.stats.fallback_rows);
+        let causes0 = self.coord.stats.fallback_causes;
         let batch = self.submit_batch(pid, &reqs)?;
         let mut stats = compiled.stats.clone();
         if hit {
@@ -1379,6 +1584,7 @@ impl System {
             stats,
             pud_rows: self.coord.stats.pud_rows - pud0,
             fallback_rows: self.coord.stats.fallback_rows - fb0,
+            fallback_causes: self.coord.stats.fallback_causes.delta(&causes0),
         };
         let mut sum: u128 = 0;
         for (k, part) in values.shards().iter().enumerate() {

@@ -18,6 +18,11 @@
 //!   huge-page reclamation, RowClone-driven compaction; DESIGN.md §8).
 //! * [`pud`] — the processing-using-DRAM substrate (Ambit + RowClone):
 //!   legality checks, functional execution, command timing.
+//! * [`analysis`] — static analysis over compiled PUD programs: the
+//!   dataflow verifier + translation validator that proves emitted
+//!   request streams byte-equivalent to their source expression DAGs,
+//!   and the placement linter that attributes every fallback row to
+//!   the PUMA requirement it violated (DESIGN.md §16).
 //! * [`coordinator`] — the plan/schedule/execute request pipeline:
 //!   batches of bulk operations are planned into the `OpPlan` IR
 //!   (cached extent translation + legality), scheduled into hazard
@@ -45,6 +50,7 @@
 // and examples share it; CI enforces `clippy --all-targets -D warnings`.
 
 pub mod alloc;
+pub mod analysis;
 pub mod cli;
 pub mod config;
 pub mod coordinator;

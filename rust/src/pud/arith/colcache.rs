@@ -27,9 +27,9 @@
 //! of the same allocator/process (only their owner can free their
 //! planes).
 //!
-//! The cache itself is pure bookkeeping — `System::cached_column` /
-//! `cached_column_sharded` orchestrate allocation, stores, and the
-//! freeing of stale or evicted layouts.
+//! The cache itself is pure bookkeeping — `System::column` (the
+//! unified, layout-polymorphic entry point) orchestrates allocation,
+//! stores, and the freeing of stale or evicted layouts.
 
 use std::sync::Arc;
 

@@ -25,10 +25,11 @@
 //!   sharded) the PR-9 unified `System` surface operates on, placed
 //!   once via [`LayoutSpec`].
 //!
-//! Execution goes through
-//! [`System::run_arith`](crate::coordinator::system::System::run_arith)
-//! (and `run_multi`/`arith_sum`); `workloads::analytics` runs the
-//! filter-then-sum aggregate on top and `puma analytics` reports it.
+//! Execution goes through the unified
+//! [`System::arith`](crate::coordinator::system::System::arith)
+//! (and `arith_const`/`column_sum`), which accept a [`Column`] of
+//! either layout; `workloads::analytics` runs the filter-then-sum
+//! aggregate on top and `puma analytics` reports it.
 
 pub mod colcache;
 pub mod column;

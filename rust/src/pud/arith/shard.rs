@@ -19,8 +19,9 @@
 //! * only the *last* shard is ragged (`ceil` partition), and
 //!   [`super::popcount_live`] tolerates its padding.
 //!
-//! Execution goes through `System::{run_arith_sharded,
-//! run_arith_const_sharded, arith_sum_sharded}`: one compiled program
+//! Execution goes through the unified `System::{arith, arith_const,
+//! column_sum}` over a sharded [`Column`](super::column::Column): one
+//! compiled program
 //! per `(ArithOp, width)` (served from the system's program cache),
 //! emitted once per shard, submitted as ONE batch with the per-shard
 //! streams interleaved round-robin so wave `w` carries every shard's

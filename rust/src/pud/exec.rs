@@ -13,7 +13,7 @@ use crate::dram::device::DramDevice;
 use crate::dram::timing::TimingParams;
 
 use super::isa::PudOp;
-use super::legality::RowPlan;
+use super::legality::{CauseCounts, RowPlan};
 use super::{ambit, rowclone};
 
 /// Outcome of running one bulk op's plan through the engine.
@@ -21,6 +21,8 @@ use super::{ambit, rowclone};
 pub struct ExecStats {
     pub pud_rows: u64,
     pub fallback_rows: u64,
+    /// Per-cause breakdown of `fallback_rows` (always sums to it).
+    pub fallback_causes: CauseCounts,
     pub pud_bytes: u64,
     pub fallback_bytes: u64,
     /// Simulated nanoseconds spent on the PUD path.
@@ -38,6 +40,7 @@ impl ExecStats {
     pub fn merge(&mut self, o: &ExecStats) {
         self.pud_rows += o.pud_rows;
         self.fallback_rows += o.fallback_rows;
+        self.fallback_causes.merge(&o.fallback_causes);
         self.pud_bytes += o.pud_bytes;
         self.fallback_bytes += o.fallback_bytes;
         self.pud_ns += o.pud_ns;
@@ -113,8 +116,14 @@ impl PudEngine {
                     stats.pud_bytes += *bytes as u64;
                     pud_rows_by_kind += 1;
                 }
-                RowPlan::Fallback { dst, srcs, bytes } => {
+                RowPlan::Fallback {
+                    dst,
+                    srcs,
+                    bytes,
+                    cause,
+                } => {
                     let b = *bytes as u64;
+                    stats.fallback_causes.add(*cause, 1);
                     // DRAM-side accounting: operands stream to the CPU
                     // and the result streams back, extent by extent.
                     for src in srcs {

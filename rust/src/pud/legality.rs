@@ -19,6 +19,104 @@ use crate::os::process::PhysExtent;
 
 use super::reserved::is_reserved;
 
+/// Which PUMA placement requirement a fallback row violated — the
+/// first failure found, in the order the legality walk checks them
+/// (contiguity, then alignment, then reserved rows, then subarray
+/// co-location). The linter and reports use this to answer "why not
+/// PUD" per row instead of the old undifferentiated fallback count.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum FallbackCause {
+    /// An operand's chunk is not physically contiguous (stitched from
+    /// multiple extents), so it cannot be a single DRAM row.
+    Fragmented,
+    /// An operand's chunk is contiguous but does not start at a DRAM
+    /// row boundary (column != 0).
+    Misaligned,
+    /// An operand's chunk lands in a reserved (Ambit control/temp) row.
+    Reserved,
+    /// Operand rows are individually legal but live in different
+    /// subarrays, so no TRA can reach them together.
+    CrossSubarray,
+}
+
+impl FallbackCause {
+    pub const ALL: [FallbackCause; 4] = [
+        FallbackCause::Fragmented,
+        FallbackCause::Misaligned,
+        FallbackCause::Reserved,
+        FallbackCause::CrossSubarray,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            FallbackCause::Fragmented => "fragmented",
+            FallbackCause::Misaligned => "misaligned",
+            FallbackCause::Reserved => "reserved",
+            FallbackCause::CrossSubarray => "cross_subarray",
+        }
+    }
+}
+
+impl std::fmt::Display for FallbackCause {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Per-cause fallback-row counters, accumulated wherever fallback rows
+/// are counted ([`ExecStats`](crate::pud::exec::ExecStats),
+/// [`CoordStats`](crate::coordinator::stats::CoordStats), workload
+/// reports). `total()` always equals the matching `fallback_rows`.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CauseCounts {
+    pub fragmented: u64,
+    pub misaligned: u64,
+    pub reserved: u64,
+    pub cross_subarray: u64,
+}
+
+impl CauseCounts {
+    pub fn add(&mut self, cause: FallbackCause, rows: u64) {
+        match cause {
+            FallbackCause::Fragmented => self.fragmented += rows,
+            FallbackCause::Misaligned => self.misaligned += rows,
+            FallbackCause::Reserved => self.reserved += rows,
+            FallbackCause::CrossSubarray => self.cross_subarray += rows,
+        }
+    }
+
+    pub fn get(&self, cause: FallbackCause) -> u64 {
+        match cause {
+            FallbackCause::Fragmented => self.fragmented,
+            FallbackCause::Misaligned => self.misaligned,
+            FallbackCause::Reserved => self.reserved,
+            FallbackCause::CrossSubarray => self.cross_subarray,
+        }
+    }
+
+    pub fn merge(&mut self, o: &CauseCounts) {
+        self.fragmented += o.fragmented;
+        self.misaligned += o.misaligned;
+        self.reserved += o.reserved;
+        self.cross_subarray += o.cross_subarray;
+    }
+
+    /// Per-cause deltas `self - earlier` (both from one monotonic
+    /// counter stream, so the subtraction cannot underflow).
+    pub fn delta(&self, earlier: &CauseCounts) -> CauseCounts {
+        CauseCounts {
+            fragmented: self.fragmented - earlier.fragmented,
+            misaligned: self.misaligned - earlier.misaligned,
+            reserved: self.reserved - earlier.reserved,
+            cross_subarray: self.cross_subarray - earlier.cross_subarray,
+        }
+    }
+
+    pub fn total(&self) -> u64 {
+        self.fragmented + self.misaligned + self.reserved + self.cross_subarray
+    }
+}
+
 /// Plan entry for one operation row.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub enum RowPlan {
@@ -37,6 +135,8 @@ pub enum RowPlan {
         dst: Vec<PhysExtent>,
         srcs: Vec<Vec<PhysExtent>>,
         bytes: u32,
+        /// The first placement requirement this row violated.
+        cause: FallbackCause,
     },
 }
 
@@ -65,6 +165,14 @@ impl RowPlan {
     pub fn fallback_arity(&self) -> Option<usize> {
         match self {
             RowPlan::Fallback { srcs, .. } => Some(srcs.len()),
+            RowPlan::Pud { .. } => None,
+        }
+    }
+
+    /// Why this row fell back (`None` for PUD rows).
+    pub fn fallback_cause(&self) -> Option<FallbackCause> {
+        match self {
+            RowPlan::Fallback { cause, .. } => Some(*cause),
             RowPlan::Pud { .. } => None,
         }
     }
@@ -153,30 +261,35 @@ pub fn check_rowwise(
     let mut remaining = len;
     while remaining > 0 {
         let chunk = remaining.min(row_bytes);
-        // try the PUD condition for this row across all operands
+        // try the PUD condition for this row across all operands,
+        // recording the first requirement that fails
         let mut locs: Vec<Loc> = Vec::with_capacity(cursors.len());
-        let mut pud_ok = true;
+        let mut fail: Option<FallbackCause> = None;
         for cur in &cursors {
             match cur.peek_contiguous(chunk) {
                 Some(pa) => {
                     let loc = scheme.decode(pa);
                     // row-aligned, full row (or common tail starting at 0)
-                    if loc.column != 0 || is_reserved(&scheme.geometry, loc.row) {
-                        pud_ok = false;
+                    if loc.column != 0 {
+                        fail = Some(FallbackCause::Misaligned);
+                        break;
+                    }
+                    if is_reserved(&scheme.geometry, loc.row) {
+                        fail = Some(FallbackCause::Reserved);
                         break;
                     }
                     locs.push(loc);
                 }
                 None => {
-                    pud_ok = false;
+                    fail = Some(FallbackCause::Fragmented);
                     break;
                 }
             }
         }
-        if pud_ok {
+        if fail.is_none() {
             // same-subarray across every operand
             let sid0 = scheme.geometry.subarray_id(&locs[0]);
-            pud_ok = locs
+            let co_located = locs
                 .iter()
                 .all(|l| scheme.geometry.subarray_id(l) == sid0);
             // NOTE: operand aliasing (dst row == src row) is fine on
@@ -184,7 +297,7 @@ pub fn check_rowwise(
             // reserved temp rows before the TRA, so in-place ops like
             // `scratch &= b` are legal; RowClone copy-to-self is an
             // identity. No distinctness requirement here.
-            if pud_ok {
+            if co_located {
                 plan.push(RowPlan::Pud {
                     sid: sid0,
                     dst: locs[0],
@@ -197,6 +310,7 @@ pub fn check_rowwise(
                 remaining -= chunk;
                 continue;
             }
+            fail = Some(FallbackCause::CrossSubarray);
         }
         // fallback for this row: capture the scatter lists
         let dst = cursors[0].peek_extents(chunk);
@@ -208,6 +322,7 @@ pub fn check_rowwise(
             dst,
             srcs,
             bytes: chunk as u32,
+            cause: fail.expect("fallback row always has a cause"),
         });
         for cur in &mut cursors {
             cur.advance(chunk);
@@ -369,6 +484,83 @@ mod tests {
         let src = ext(s.row_start_addr(sid, 1), 256);
         let plan = check_rowwise(&s, &[&dst, &src], 256);
         assert!(!plan[0].is_pud());
+    }
+
+    #[test]
+    fn fallback_causes_are_attributed() {
+        let s = scheme();
+        let sid = crate::dram::geometry::SubarrayId(0);
+        // misaligned: contiguous but column != 0
+        let plan =
+            check_rowwise(&s, &[&ext(0, 256), &ext(100, 256)], 256);
+        assert_eq!(
+            plan[0].fallback_cause(),
+            Some(FallbackCause::Misaligned)
+        );
+        // fragmented: chunk stitched from two extents
+        let frag = vec![
+            PhysExtent {
+                paddr: s.row_start_addr(sid, 0),
+                len: 128,
+            },
+            PhysExtent {
+                paddr: s.row_start_addr(sid, 0) + 4096,
+                len: 128,
+            },
+        ];
+        let src = ext(s.row_start_addr(sid, 1), 256);
+        let plan = check_rowwise(&s, &[&frag, &src], 256);
+        assert_eq!(
+            plan[0].fallback_cause(),
+            Some(FallbackCause::Fragmented)
+        );
+        // reserved: row 60 >= 56 usable rows
+        let plan = check_rowwise(
+            &s,
+            &[&ext(s.row_start_addr(sid, 60), 256), &src],
+            256,
+        );
+        assert_eq!(plan[0].fallback_cause(), Some(FallbackCause::Reserved));
+        // cross-subarray: both legal alone, different subarrays
+        let other = ext(
+            s.row_start_addr(crate::dram::geometry::SubarrayId(1), 0),
+            256,
+        );
+        let plan =
+            check_rowwise(&s, &[&ext(s.row_start_addr(sid, 0), 256), &other], 256);
+        assert_eq!(
+            plan[0].fallback_cause(),
+            Some(FallbackCause::CrossSubarray)
+        );
+        // PUD rows carry no cause
+        let plan = check_rowwise(
+            &s,
+            &[&ext(s.row_start_addr(sid, 0), 256), &src],
+            256,
+        );
+        assert_eq!(plan[0].fallback_cause(), None);
+    }
+
+    #[test]
+    fn cause_counts_accumulate_and_delta() {
+        let mut c = CauseCounts::default();
+        c.add(FallbackCause::Misaligned, 3);
+        c.add(FallbackCause::Reserved, 1);
+        let mut d = CauseCounts::default();
+        d.add(FallbackCause::Misaligned, 2);
+        d.add(FallbackCause::CrossSubarray, 4);
+        c.merge(&d);
+        assert_eq!(c.misaligned, 5);
+        assert_eq!(c.reserved, 1);
+        assert_eq!(c.cross_subarray, 4);
+        assert_eq!(c.total(), 10);
+        let delta = c.delta(&d);
+        assert_eq!(delta.misaligned, 3);
+        assert_eq!(delta.cross_subarray, 0);
+        assert_eq!(delta.total(), 4);
+        for cause in FallbackCause::ALL {
+            assert_eq!(c.get(cause) - delta.get(cause), d.get(cause));
+        }
     }
 
     #[test]

@@ -15,7 +15,7 @@
 //! - **Group-by** ([`group_masks`] / [`group_by_sum`]): one
 //!   `CmpEq`-const program per group key, every emission concatenated
 //!   into ONE `submit_batch` (a single host→memory boundary crossing),
-//!   then a masked [`System::arith_sum`] per group.
+//!   then a masked [`System::column_sum`] per group.
 //! - **Top-k** ([`top_k`]): no sort. Bisect the value domain on the
 //!   popcount of cached `CmpLt`-const masks — at most `W = log2(domain)`
 //!   kernel rounds — to find the largest threshold `T` with
@@ -45,6 +45,7 @@ use crate::coordinator::system::{interleave_rounds, ExprReport, System};
 use crate::os::process::Pid;
 use crate::pud::compiler::CompiledMulti;
 use crate::pud::isa::{BulkRequest, PudOp};
+use crate::pud::legality::CauseCounts;
 
 use super::arith::{
     plane_bytes, popcount_live, ArithOp, ProgramKey, ShardedLayout,
@@ -69,6 +70,9 @@ pub struct QueryReport {
     pub pud_rows: u64,
     /// Rows that fell back to the CPU path.
     pub fallback_rows: u64,
+    /// Per-cause attribution of `fallback_rows` (which PUMA placement
+    /// requirement each fallback row violated).
+    pub fallback_causes: CauseCounts,
     /// Fresh kernel compiles (0 once the program cache is warm).
     pub compiles: usize,
     /// Bisection rounds (top-k only; 0 for the other shapes).
@@ -93,6 +97,7 @@ impl QueryReport {
         self.absorb_batch(&rep.batch);
         self.pud_rows += rep.pud_rows;
         self.fallback_rows += rep.fallback_rows;
+        self.fallback_causes.merge(&rep.fallback_causes);
         self.compiles += rep.stats.compiles;
     }
 
@@ -104,6 +109,7 @@ impl QueryReport {
         self.elapsed_ns += other.elapsed_ns;
         self.pud_rows += other.pud_rows;
         self.fallback_rows += other.fallback_rows;
+        self.fallback_causes.merge(&other.fallback_causes);
         self.compiles += other.compiles;
         self.rounds += other.rounds;
         self.host_ns += other.host_ns;
@@ -186,10 +192,13 @@ fn submit(
     rep: &mut QueryReport,
 ) -> Result<()> {
     let (p0, f0) = (sys.coord.stats.pud_rows, sys.coord.stats.fallback_rows);
+    let causes0 = sys.coord.stats.fallback_causes;
     let batch = sys.submit_batch(pid, reqs)?;
     rep.absorb_batch(&batch);
     rep.pud_rows += sys.coord.stats.pud_rows - p0;
     rep.fallback_rows += sys.coord.stats.fallback_rows - f0;
+    rep.fallback_causes
+        .merge(&sys.coord.stats.fallback_causes.delta(&causes0));
     Ok(())
 }
 

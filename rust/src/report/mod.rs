@@ -9,6 +9,7 @@ use crate::alloc::traits::AllocStats;
 use crate::dram::energy::EnergyParams;
 use crate::dram::timing::TimingParams;
 use crate::pud::isa::PudOp;
+use crate::pud::legality::CauseCounts;
 use crate::util::csvio::Csv;
 use crate::util::table::{fnum, Table};
 use crate::util::units::{fmt_bytes, fmt_ns};
@@ -442,6 +443,30 @@ pub fn filter(results: &[FilterResult], out_dir: Option<&Path>) -> Result<String
     ))
 }
 
+/// Compact per-cause fallback attribution for the report tables:
+/// `-` when every row ran in-DRAM, otherwise the non-zero causes
+/// (`mis`=misaligned, `xsub`=cross-subarray, `rsv`=reserved row,
+/// `frag`=fragmented).
+fn fmt_causes(c: &CauseCounts) -> String {
+    if c.total() == 0 {
+        return "-".to_string();
+    }
+    let mut parts = Vec::new();
+    if c.misaligned > 0 {
+        parts.push(format!("mis:{}", c.misaligned));
+    }
+    if c.cross_subarray > 0 {
+        parts.push(format!("xsub:{}", c.cross_subarray));
+    }
+    if c.reserved > 0 {
+        parts.push(format!("rsv:{}", c.reserved));
+    }
+    if c.fragmented > 0 {
+        parts.push(format!("frag:{}", c.fragmented));
+    }
+    parts.join(" ")
+}
+
 /// Render the analytics (filter-then-sum) sweep: one row per
 /// allocator x bit-width cell, compiled vertical-arithmetic execution
 /// with its W-bit op-cost accounting. Writes `analytics.csv` when
@@ -459,6 +484,7 @@ pub fn analytics(
         "waves",
         "aaps/elem",
         "pud%",
+        "fb causes",
         "host ns/elem",
         "col h/m",
         "matches",
@@ -487,6 +513,10 @@ pub fn analytics(
         "matches",
         "sum",
         "pool_high_water",
+        "fb_misaligned",
+        "fb_cross_subarray",
+        "fb_reserved",
+        "fb_fragmented",
     ]);
     for r in results {
         table.row(vec![
@@ -498,6 +528,7 @@ pub fn analytics(
             r.waves.to_string(),
             format!("{:.4}", r.aaps_per_elem),
             format!("{:.0}%", r.pud_row_fraction() * 100.0),
+            fmt_causes(&r.fallback_causes),
             format!("{:.2}", r.host_ns_per_elem),
             format!("{}/{}", r.col_hits, r.col_misses),
             r.matches.to_string(),
@@ -525,6 +556,10 @@ pub fn analytics(
             r.matches.to_string(),
             r.sum.to_string(),
             r.pool_high_water.to_string(),
+            r.fallback_causes.misaligned.to_string(),
+            r.fallback_causes.cross_subarray.to_string(),
+            r.fallback_causes.reserved.to_string(),
+            r.fallback_causes.fragmented.to_string(),
         ]);
     }
     if let Some(dir) = out_dir {
@@ -550,6 +585,7 @@ pub fn analytics_sharded(
         "shards",
         "waves",
         "pud%",
+        "fb causes",
         "elapsed",
         "speedup",
         "host ns/elem",
@@ -579,6 +615,10 @@ pub fn analytics_sharded(
         "matches",
         "sum",
         "pool_high_water",
+        "fb_misaligned",
+        "fb_cross_subarray",
+        "fb_reserved",
+        "fb_fragmented",
     ]);
     let base_of = |r: &ShardedResult| -> Option<f64> {
         results
@@ -599,6 +639,7 @@ pub fn analytics_sharded(
             r.shard_count.to_string(),
             r.waves.to_string(),
             format!("{:.0}%", r.pud_row_fraction() * 100.0),
+            fmt_causes(&r.fallback_causes),
             fmt_ns(r.elapsed_ns),
             speedup_txt,
             format!("{:.2}", r.host_ns_per_elem),
@@ -627,6 +668,10 @@ pub fn analytics_sharded(
             r.matches.to_string(),
             r.sum.to_string(),
             r.pool_high_water.to_string(),
+            r.fallback_causes.misaligned.to_string(),
+            r.fallback_causes.cross_subarray.to_string(),
+            r.fallback_causes.reserved.to_string(),
+            r.fallback_causes.fragmented.to_string(),
         ]);
     }
     if let Some(dir) = out_dir {
@@ -655,6 +700,7 @@ pub fn queries(
         "waves",
         "rounds",
         "pud%",
+        "fb causes",
         "elapsed",
         "host ns/elem",
         "col h/m",
@@ -683,6 +729,10 @@ pub fn queries(
         "col_misses",
         "pool_leases",
         "pool_high_water",
+        "fb_misaligned",
+        "fb_cross_subarray",
+        "fb_reserved",
+        "fb_fragmented",
     ]);
     for r in results {
         table.row(vec![
@@ -698,6 +748,7 @@ pub fn queries(
             r.waves.to_string(),
             r.rounds.to_string(),
             format!("{:.0}%", r.pud_row_fraction() * 100.0),
+            fmt_causes(&r.fallback_causes),
             fmt_ns(r.elapsed_ns),
             format!("{:.2}", r.host_ns_per_elem),
             format!("{}/{}", r.col_hits, r.col_misses),
@@ -725,6 +776,10 @@ pub fn queries(
             r.col_misses.to_string(),
             r.pool_leases.to_string(),
             r.pool_high_water.to_string(),
+            r.fallback_causes.misaligned.to_string(),
+            r.fallback_causes.cross_subarray.to_string(),
+            r.fallback_causes.reserved.to_string(),
+            r.fallback_causes.fragmented.to_string(),
         ]);
     }
     if let Some(dir) = out_dir {
@@ -1010,6 +1065,7 @@ mod tests {
             elapsed_ns,
             pud_rows: 100,
             fallback_rows: 0,
+            fallback_causes: Default::default(),
             pool_high_water: 8,
             pool_leases: 0,
             col_hits: 2,
@@ -1051,6 +1107,10 @@ mod tests {
             elapsed_ns: 40_000.0,
             pud_rows: 990,
             fallback_rows: 10,
+            fallback_causes: CauseCounts {
+                misaligned: 10,
+                ..Default::default()
+            },
             compiles: 0,
             rounds: if shape == "top_k" { 8 } else { 0 },
             col_hits: 3,

@@ -40,6 +40,7 @@ use crate::pud::arith::{
     VerticalLayout,
 };
 use crate::pud::compiler::CompileStats;
+use crate::pud::legality::CauseCounts;
 use crate::util::rng::Pcg64;
 use crate::workloads::microbench::AllocatorKind;
 
@@ -96,6 +97,9 @@ pub struct AnalyticsResult {
     pub elapsed_ns: f64,
     pub pud_rows: u64,
     pub fallback_rows: u64,
+    /// Per-cause attribution of `fallback_rows` (which PUMA placement
+    /// requirement each fallback row violated).
+    pub fallback_causes: CauseCounts,
     /// Analytic in-DRAM AAPs per element of the compare kernel — the
     /// W-bit op-cost accounting (`pud::isa::batch_cost`).
     pub aaps_per_elem: f64,
@@ -259,6 +263,11 @@ pub fn run_cell(
         elapsed_ns: rep.batch.elapsed_ns + sum_rep.batch.elapsed_ns,
         pud_rows: rep.pud_rows + sum_rep.pud_rows,
         fallback_rows: rep.fallback_rows + sum_rep.fallback_rows,
+        fallback_causes: {
+            let mut c = rep.fallback_causes;
+            c.merge(&sum_rep.fallback_causes);
+            c
+        },
         aaps_per_elem: cost.aaps as f64 / cfg.elems as f64,
         pool_high_water: pools.high_water(),
         pool_leases: pools.leases() - leases0,
@@ -399,6 +408,9 @@ pub struct ShardedResult {
     pub elapsed_ns: f64,
     pub pud_rows: u64,
     pub fallback_rows: u64,
+    /// Per-cause attribution of `fallback_rows` (which PUMA placement
+    /// requirement each fallback row violated).
+    pub fallback_causes: CauseCounts,
     /// Total resident high water across the per-shard scratch pools.
     pub pool_high_water: usize,
     /// Fresh allocator leases the per-shard pools took during this
@@ -550,6 +562,11 @@ pub fn run_cell_sharded(
         elapsed_ns: rep.batch.elapsed_ns + sum_rep.batch.elapsed_ns,
         pud_rows: rep.pud_rows + sum_rep.pud_rows,
         fallback_rows: rep.fallback_rows + sum_rep.fallback_rows,
+        fallback_causes: {
+            let mut c = rep.fallback_causes;
+            c.merge(&sum_rep.fallback_causes);
+            c
+        },
         pool_high_water: pools.high_water(),
         pool_leases: pools.leases() - leases0,
         col_hits: (stats1.resident_hits + stats1.host_hits)

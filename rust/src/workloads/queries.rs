@@ -39,6 +39,7 @@ use crate::pud::arith::{
     self, ArithOp, Column, LayoutSpec, ShardedLayout, ShardedScratch,
     VerticalLayout,
 };
+use crate::pud::legality::CauseCounts;
 use crate::pud::query::{self, QueryReport};
 use crate::util::rng::Pcg64;
 use crate::workloads::analytics::threshold;
@@ -145,6 +146,9 @@ pub struct QueryResult {
     pub elapsed_ns: f64,
     pub pud_rows: u64,
     pub fallback_rows: u64,
+    /// Per-cause attribution of `fallback_rows` (which PUMA placement
+    /// requirement each fallback row violated).
+    pub fallback_causes: CauseCounts,
     /// Fresh kernel compiles (0 once the program cache is warm).
     pub compiles: usize,
     /// Top-k bisection rounds (0 for the other shapes).
@@ -223,6 +227,7 @@ impl CellMeter {
             elapsed_ns: rep.elapsed_ns,
             pud_rows: rep.pud_rows,
             fallback_rows: rep.fallback_rows,
+            fallback_causes: rep.fallback_causes,
             compiles: rep.compiles,
             rounds: rep.rounds,
             col_hits: (s.resident_hits + s.host_hits) - self.hits0,

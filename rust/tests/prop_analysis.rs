@@ -1,0 +1,385 @@
+//! Fault-injection properties of `pud::analysis`: the verifier accepts
+//! every stream the compiler emits for the random-DAG corpus (and the
+//! translation validation over exhaustive truth-table lanes *proves*
+//! stream == source DAG), while each class of systematic corruption —
+//! swapped ops, operand-clobbering aliases, leaked scratch leases,
+//! reordered hazards, reserved-row placements, truncated streams — is
+//! rejected with the matching [`VerifyErrorKind`].
+
+use std::cell::Cell;
+
+use puma::alloc::mallocsim::MallocSim;
+use puma::alloc::puma::{FitPolicy, PumaAlloc};
+use puma::alloc::scratch::ScratchPool;
+use puma::analysis::lint::Lint;
+use puma::analysis::verify::{
+    verify_compiled, verify_compiled_multi, VerifyErrorKind,
+};
+use puma::analysis::{Severity, VerifyLevel};
+use puma::assert_prop;
+use puma::coordinator::system::{System, SystemConfig};
+use puma::dram::address::InterleaveScheme;
+use puma::dram::geometry::DramGeometry;
+use puma::proptest::{self, Gen};
+use puma::pud::compiler::{self, Expr, ExprBuilder, ExprId};
+use puma::pud::isa::PudOp;
+use puma::util::rng::Pcg64;
+
+/// A random DAG: <= 6 leaves, <= 24 nodes, real sharing via children
+/// drawn from all earlier nodes (same shape as the prop_compiler
+/// corpus). With <= 6 leaves every translation validation in this file
+/// runs on exhaustive truth-table lanes — acceptance is a proof.
+fn gen_expr(g: &mut Gen) -> Expr {
+    let n_leaves = g.usize(1..7);
+    let mut b = ExprBuilder::new();
+    let mut ids: Vec<ExprId> = (0..n_leaves).map(|i| b.leaf(i)).collect();
+    let interior = g.usize(1..19);
+    for _ in 0..interior {
+        let pick = |g: &mut Gen, ids: &[ExprId]| ids[g.usize(0..ids.len())];
+        let id = match g.usize(0..12) {
+            0 | 1 => {
+                let a = pick(g, &ids);
+                b.not(a)
+            }
+            2 | 3 | 4 => {
+                let (x, y) = (pick(g, &ids), pick(g, &ids));
+                b.and(x, y)
+            }
+            5 | 6 | 7 => {
+                let (x, y) = (pick(g, &ids), pick(g, &ids));
+                b.or(x, y)
+            }
+            8 | 9 => {
+                let (x, y) = (pick(g, &ids), pick(g, &ids));
+                b.xor(x, y)
+            }
+            10 => {
+                let (x, y) = (pick(g, &ids), pick(g, &ids));
+                b.and_not(x, y)
+            }
+            _ => b.constant(g.bool()),
+        };
+        ids.push(id);
+    }
+    let root = *ids.last().unwrap();
+    b.build(root)
+}
+
+fn addrs(n: usize, base: u64) -> Vec<u64> {
+    (0..n as u64).map(|i| base + i * 0x1000).collect()
+}
+
+/// Same-arity replacement candidates for an op swap that survives the
+/// arity and hazard checks and must therefore be caught by translation
+/// validation.
+fn swap_candidates(op: PudOp) -> Vec<PudOp> {
+    [PudOp::And, PudOp::Or, PudOp::Xor, PudOp::Copy, PudOp::Not]
+        .into_iter()
+        .filter(|c| *c != op && c.arity() == op.arity())
+        .collect()
+}
+
+#[test]
+fn verifier_accepts_corpus_and_rejects_every_mutation_class() {
+    // detections are counted across the whole corpus: a single case
+    // can lack a mutation site (one-request streams, scratch-free
+    // programs), but each class must fire somewhere in the run
+    let hit_swap = Cell::new(0u32);
+    let hit_alias = Cell::new(0u32);
+    let hit_leak = Cell::new(0u32);
+    let hit_reorder = Cell::new(0u32);
+    let hit_reserved = Cell::new(0u32);
+    let hit_truncated = Cell::new(0u32);
+
+    proptest::check_cases("verify accepts corpus, rejects faults", 24, |g| {
+        let expr = gen_expr(g);
+        let c = compiler::compile(&expr);
+        let n = expr.n_leaves().max(1);
+        let operands = addrs(n, 0x10_0000);
+        let scratch = addrs(c.scratch_needed().max(1), 0x20_0000);
+        let dst = 0x30_0000u64;
+        let len = g.u64(1..8192);
+        let reqs = c.emit(&operands, dst, len, &scratch).unwrap();
+
+        // 0. acceptance: the pristine stream verifies, and with <= 6
+        //    leaves the lanes enumerate every assignment (a proof)
+        let ok = verify_compiled(&c, &operands, dst, len, &scratch, &reqs, None)
+            .unwrap_or_else(|e| panic!("pristine stream rejected: {e} ({expr})"));
+        assert_prop!(ok.ops == reqs.len(), "every request checked");
+        assert_prop!(ok.exhaustive, "<= 6 leaves must verify exhaustively");
+        assert_prop!(ok.waves >= 1, "a non-empty stream has waves");
+
+        // 1. swapped op on the dst-defining (last) request: same
+        //    (dst, srcs, len) tuple, different function -> translation
+        //    validation must name it. A candidate can escape only when
+        //    both source images are identically zero, which the
+        //    optimizer folds away in practice — counted globally.
+        let last = reqs.len() - 1;
+        for cand in swap_candidates(reqs[last].op) {
+            let mut m = reqs.clone();
+            m[last].op = cand;
+            if let Err(e) =
+                verify_compiled(&c, &operands, dst, len, &scratch, &m, None)
+            {
+                assert_prop!(
+                    e.kind == VerifyErrorKind::TranslationMismatch,
+                    "op swap {} -> {cand:?} flagged as {}, want \
+                     translation_mismatch",
+                    reqs[last].op,
+                    e.kind
+                );
+                hit_swap.set(hit_swap.get() + 1);
+            }
+        }
+
+        // 2. alias a request's dst onto an operand buffer that a later
+        //    request still reads -> the in-place-dst legality rule
+        if let Some((p, va)) = (1..reqs.len()).rev().find_map(|p| {
+            reqs[p]
+                .srcs
+                .iter()
+                .find(|s| operands.contains(*s))
+                .map(|s| (p, *s))
+        }) {
+            let mut m = reqs.clone();
+            m[p - 1].dst = va;
+            let e = verify_compiled(&c, &operands, dst, len, &scratch, &m, None)
+                .expect_err("operand clobber must be rejected");
+            assert_prop!(
+                e.kind == VerifyErrorKind::IllegalAlias,
+                "operand clobber flagged as {}, want illegal_alias",
+                e.kind
+            );
+            hit_alias.set(hit_alias.get() + 1);
+        }
+
+        // 3. phantom scratch lease: a slot the binding claims the
+        //    program needs but the stream never touches
+        if c.scratch_needed() > 0 {
+            let mut leased = vec![0x40_0000u64];
+            leased.extend_from_slice(&scratch);
+            let e =
+                verify_compiled(&c, &operands, dst, len, &leased, &reqs, None)
+                    .expect_err("phantom lease must be rejected");
+            assert_prop!(
+                e.kind == VerifyErrorKind::ScratchLeak,
+                "phantom lease flagged as {}, want scratch_leak",
+                e.kind
+            );
+            hit_leak.set(hit_leak.get() + 1);
+        }
+
+        // 4. reorder an adjacent pair (picked so dataflow still
+        //    passes) -> the greedy hazard-wave partition diverges
+        if let Some(i) = (0..reqs.len().saturating_sub(1)).find(|&i| {
+            let (a, b) = (&reqs[i], &reqs[i + 1]);
+            let differ = a.dst != b.dst || a.srcs != b.srcs || a.len != b.len;
+            differ
+                && !b.srcs.contains(&a.dst)
+                && !(operands.contains(&b.dst) && a.srcs.contains(&b.dst))
+        }) {
+            let mut m = reqs.clone();
+            m.swap(i, i + 1);
+            let e = verify_compiled(&c, &operands, dst, len, &scratch, &m, None)
+                .expect_err("reordered stream must be rejected");
+            assert_prop!(
+                e.kind == VerifyErrorKind::HazardWaveMismatch,
+                "reorder flagged as {}, want hazard_wave_mismatch",
+                e.kind
+            );
+            hit_reorder.set(hit_reorder.get() + 1);
+        }
+
+        // 5. reserved-row poisoning: the probe marks the output
+        //    buffer's row as an Ambit control/temp row
+        {
+            let probe = move |va: u64| va == dst;
+            let e = verify_compiled(
+                &c,
+                &operands,
+                dst,
+                len,
+                &scratch,
+                &reqs,
+                Some(&probe),
+            )
+            .expect_err("reserved placement must be rejected");
+            assert_prop!(
+                e.kind == VerifyErrorKind::ReservedRow,
+                "reserved placement flagged as {}, want reserved_row",
+                e.kind
+            );
+            hit_reserved.set(hit_reserved.get() + 1);
+        }
+
+        // 6. truncated stream: drop the final request. When that was
+        //    the only write to dst the diagnosis is precise; when dst
+        //    doubled as an in-place temp the stream is still rejected
+        //    (as a leak or wave divergence)
+        {
+            let mut m = reqs.clone();
+            let popped = m.pop().unwrap();
+            let dst_writes = reqs.iter().filter(|r| r.dst == dst).count();
+            match verify_compiled(&c, &operands, dst, len, &scratch, &m, None) {
+                Err(e) if dst_writes == 1 && popped.dst == dst => {
+                    assert_prop!(
+                        e.kind == VerifyErrorKind::TruncatedStream,
+                        "truncation flagged as {}, want truncated_stream",
+                        e.kind
+                    );
+                    hit_truncated.set(hit_truncated.get() + 1);
+                }
+                Err(e) => {
+                    assert_prop!(
+                        matches!(
+                            e.kind,
+                            VerifyErrorKind::TruncatedStream
+                                | VerifyErrorKind::ScratchLeak
+                                | VerifyErrorKind::HazardWaveMismatch
+                        ),
+                        "truncation flagged as unexpected kind {}",
+                        e.kind
+                    );
+                    hit_truncated.set(hit_truncated.get() + 1);
+                }
+                Ok(_) => panic!("truncated stream accepted for {expr}"),
+            }
+        }
+    });
+
+    for (name, hits) in [
+        ("op swap", &hit_swap),
+        ("operand alias", &hit_alias),
+        ("scratch leak", &hit_leak),
+        ("hazard reorder", &hit_reorder),
+        ("reserved row", &hit_reserved),
+        ("truncated stream", &hit_truncated),
+    ] {
+        assert!(
+            hits.get() > 0,
+            "mutation class `{name}` never fired across the corpus"
+        );
+    }
+}
+
+#[test]
+fn verifier_accepts_multi_output_corpus() {
+    proptest::check_cases("multi-output corpus verifies", 12, |g| {
+        let n_leaves = g.usize(1..7);
+        let mut b = ExprBuilder::new();
+        let mut ids: Vec<ExprId> =
+            (0..n_leaves).map(|i| b.leaf(i)).collect();
+        for _ in 0..g.usize(1..12) {
+            let x = ids[g.usize(0..ids.len())];
+            let y = ids[g.usize(0..ids.len())];
+            let id = match g.usize(0..3) {
+                0 => b.and(x, y),
+                1 => b.or(x, y),
+                _ => b.xor(x, y),
+            };
+            ids.push(id);
+        }
+        // duplicate roots are legal and must collapse consistently
+        let n_roots = g.usize(1..4);
+        let roots: Vec<ExprId> =
+            (0..n_roots).map(|_| ids[g.usize(0..ids.len())]).collect();
+        let m = b.build_multi(roots);
+        let c = compiler::compile_multi(&m);
+
+        let operands = addrs(n_leaves.max(1), 0x10_0000);
+        let dsts = addrs(n_roots, 0x30_0000);
+        let scratch = addrs(c.scratch_needed().max(1), 0x20_0000);
+        let len = g.u64(1..4096);
+        let reqs = c.emit(&operands, &dsts, len, &scratch).unwrap();
+        let ok = verify_compiled_multi(
+            &c, &operands, &dsts, len, &scratch, &reqs, None,
+        )
+        .unwrap_or_else(|e| panic!("multi stream rejected: {e}"));
+        assert_prop!(ok.exhaustive, "<= 6 leaves must verify exhaustively");
+    });
+}
+
+/// End-to-end PudSan: with `VerifyLevel::Full` the `System` verifies
+/// every emitted stream against the page table, and the linter
+/// attributes fallback rows. PUMA placement must come back clean;
+/// deliberately misaligned placement must be attributed, never
+/// escalated to an error.
+#[test]
+fn full_verification_is_clean_under_puma_and_attributed_under_malloc() {
+    let mut b = ExprBuilder::new();
+    let (x, y, z) = (b.leaf(0), b.leaf(1), b.leaf(2));
+    let xy = b.and(x, y);
+    let root = b.xor(xy, z);
+    let expr = b.build(root);
+
+    let run = |puma_placed: bool| -> Vec<puma::analysis::Diagnostic> {
+        let scheme = InterleaveScheme::row_major(DramGeometry::small());
+        let row = scheme.geometry.row_bytes as u64;
+        let mut sys = System::boot(SystemConfig {
+            scheme,
+            huge_pages: 12,
+            churn_rounds: 400,
+            seed: 0xA11A,
+            artifacts: None,
+            verify: VerifyLevel::Full,
+            ..Default::default()
+        })
+        .unwrap();
+        let pid = sys.spawn();
+        let len = 2 * row;
+        let mut puma_alloc = PumaAlloc::new(row, FitPolicy::WorstFit);
+        let mut malloc = MallocSim::new();
+        let (alloc, hinted): (&mut dyn puma::alloc::traits::Allocator, bool) =
+            if puma_placed {
+                puma_alloc.pim_preallocate(&mut sys.os, 8).unwrap();
+                (&mut puma_alloc, true)
+            } else {
+                (&mut malloc, false)
+            };
+        let first = sys.alloc(alloc, pid, len).unwrap();
+        let mut operands = vec![first];
+        for _ in 1..3 {
+            let va = if hinted {
+                sys.alloc_align(alloc, pid, len, first).unwrap()
+            } else {
+                sys.alloc(alloc, pid, len).unwrap()
+            };
+            operands.push(va);
+        }
+        let dst = if hinted {
+            sys.alloc_align(alloc, pid, len, first).unwrap()
+        } else {
+            sys.alloc(alloc, pid, len).unwrap()
+        };
+        let mut rng = Pcg64::new(7);
+        for &va in &operands {
+            let mut v = vec![0u8; len as usize];
+            rng.fill_bytes(&mut v);
+            sys.write_virt(pid, va, &v).unwrap();
+        }
+        let mut pool = ScratchPool::new();
+        sys.run_expr(alloc, pid, &expr, &operands, dst, len, &mut pool)
+            .unwrap();
+        sys.take_diagnostics()
+    };
+
+    let clean = run(true);
+    assert!(
+        clean.iter().all(|d| d.severity < Severity::Error),
+        "PUMA-placed run must verify without errors: {clean:?}"
+    );
+
+    let attributed = run(false);
+    assert!(
+        attributed.iter().all(|d| d.severity < Severity::Error),
+        "misalignment is a performance fault, not a verify error: \
+         {attributed:?}"
+    );
+    assert!(
+        attributed
+            .iter()
+            .any(|d| matches!(d.lint, Lint::FallbackRow(_))),
+        "malloc placement must produce attributed fallback rows: \
+         {attributed:?}"
+    );
+}

@@ -92,7 +92,10 @@ fn legality_plan_covers_exactly_the_request() {
         assert_prop!(covered == len, "plan covers {covered}, want {len}");
         // every fallback entry's extents cover its bytes
         for p in &plan {
-            if let RowPlan::Fallback { dst, srcs, bytes } = p {
+            if let RowPlan::Fallback {
+                dst, srcs, bytes, ..
+            } = p
+            {
                 let d: u64 = dst.iter().map(|e| e.len).sum();
                 assert_prop!(d == *bytes as u64, "dst extents {d} != {bytes}");
                 for s in srcs {

@@ -1,0 +1,220 @@
+#!/usr/bin/env python3
+"""Architecture lint: enforce the crate's layering invariants with
+plain-text scans that run in CI before any compiler gets involved.
+
+Three rules, each with the rationale it encodes:
+
+1. pid-encapsulation — `Pid` is a coordinator-level capability; the
+   multi-tenant front-end hands sessions out instead.  Raw `Pid`
+   tokens are forbidden in `rust/src/workloads/serve.rs` and
+   `rust/tests/prop_serve.rs`, and `src/serve/` must not re-export a
+   session's pid beyond the crate (`pub pid` is only legal as
+   `pub(crate) pid`).
+
+2. plane-size math — every plane-byte computation must route through
+   `layout::plane_bytes` (or the documented allowlist) so a future
+   change to plane padding has exactly one home.  Open-coded
+   `(x + 7) / 8`, `(x + 7) >> 3`, and `.div_ceil(8)` in `rust/src`
+   are violations outside the allowlist; tests and benches may use
+   the idiom freely when asserting against the layout layer.
+
+3. deprecated-shims — the `#[deprecated]` compatibility shims on
+   `System` may only be called from their defining file or from
+   test files that opt in with a file-level `#![allow(deprecated)]`
+   (the shim-pinning differential suites).  New call sites anywhere
+   else must use the unified `Column`/batch API instead.
+
+Exit status is the number of violations (0 = clean).  Each violation
+prints as `file:line: [rule] message` so editors can jump to it.
+
+Usage:
+  python3 scripts/lint_arch.py [--root REPO_ROOT]
+"""
+
+import argparse
+import os
+import re
+import sys
+
+# Files where raw `Pid` must not appear at all (the serve layer's
+# public seam: workloads and property tests speak Session, not Pid).
+PID_FORBIDDEN = [
+    "rust/src/workloads/serve.rs",
+    "rust/tests/prop_serve.rs",
+]
+
+# Open-coded plane-size math allowed only here (see rule 2 docstring).
+PLANE_MATH_ALLOWLIST = {
+    "rust/src/pud/arith/layout.rs",  # plane_bytes lives here
+    "rust/src/util/units.rs",  # size-string parsing, unrelated to planes
+    "rust/src/analysis/verify.rs",  # truth-table lane sizing, not planes
+}
+
+PLANE_MATH_PATTERNS = [
+    re.compile(r"\+\s*7\s*\)\s*/\s*8"),
+    re.compile(r"\+\s*7\s*\)\s*>>\s*3"),
+    re.compile(r"\.div_ceil\(8\)"),
+]
+
+SHIM_DEF_FILE = "rust/src/coordinator/system.rs"
+
+
+def rel(path, root):
+    return os.path.relpath(path, root).replace(os.sep, "/")
+
+
+def rust_files(root, sub):
+    out = []
+    base = os.path.join(root, sub)
+    for dirpath, _dirnames, filenames in os.walk(base):
+        for name in sorted(filenames):
+            if name.endswith(".rs"):
+                out.append(os.path.join(dirpath, name))
+    return sorted(out)
+
+
+def read_lines(path):
+    with open(path, encoding="utf-8") as f:
+        return f.read().splitlines()
+
+
+def strip_comment(line):
+    """Drop // comments so doc references to shims don't count as calls."""
+    idx = line.find("//")
+    return line if idx < 0 else line[:idx]
+
+
+def check_pid_encapsulation(root):
+    violations = []
+    for relpath in PID_FORBIDDEN:
+        path = os.path.join(root, relpath)
+        if not os.path.exists(path):
+            continue
+        for n, line in enumerate(read_lines(path), 1):
+            if re.search(r"\bPid\b", strip_comment(line)):
+                violations.append(
+                    (relpath, n, "pid-encapsulation",
+                     "raw `Pid` is forbidden here; use the Session API")
+                )
+    # src/serve/: a session's pid must stay crate-private.
+    for path in rust_files(root, "rust/src/serve"):
+        relpath = rel(path, root)
+        for n, line in enumerate(read_lines(path), 1):
+            code = strip_comment(line)
+            if re.search(r"\bpub\s+pid\s*:", code):
+                violations.append(
+                    (relpath, n, "pid-encapsulation",
+                     "`pub pid` leaks the coordinator Pid; "
+                     "use `pub(crate) pid` at most")
+                )
+    return violations
+
+
+def check_plane_math(root):
+    violations = []
+    for path in rust_files(root, "rust/src"):
+        relpath = rel(path, root)
+        if relpath in PLANE_MATH_ALLOWLIST:
+            continue
+        for n, line in enumerate(read_lines(path), 1):
+            code = strip_comment(line)
+            for pat in PLANE_MATH_PATTERNS:
+                if pat.search(code):
+                    violations.append(
+                        (relpath, n, "plane-math",
+                         "open-coded plane-size math; call "
+                         "`layout::plane_bytes` instead")
+                    )
+                    break
+    return violations
+
+
+def deprecated_shim_names(root):
+    """Parse fn names that carry a #[deprecated] attribute in the shim file."""
+    path = os.path.join(root, SHIM_DEF_FILE)
+    if not os.path.exists(path):
+        return []
+    lines = read_lines(path)
+    names = []
+    pending = False
+    for line in lines:
+        stripped = line.strip()
+        if stripped.startswith("#[deprecated"):
+            pending = True
+            continue
+        if pending:
+            m = re.search(r"\bfn\s+([A-Za-z0-9_]+)", stripped)
+            if m:
+                names.append(m.group(1))
+                pending = False
+            elif stripped.startswith("#[") or stripped == "" or \
+                    stripped.startswith("///") or stripped.startswith("//"):
+                continue  # attributes/docs between #[deprecated] and fn
+            else:
+                pending = False
+    return sorted(set(names))
+
+
+def check_deprecated_shims(root):
+    names = deprecated_shim_names(root)
+    if not names:
+        return []
+    call_pat = re.compile(
+        r"\.\s*(?:" + "|".join(re.escape(n) for n in names) + r")\s*\("
+    )
+    violations = []
+    for sub in ("rust/src", "rust/tests", "rust/benches"):
+        for path in rust_files(root, sub):
+            relpath = rel(path, root)
+            if relpath == SHIM_DEF_FILE:
+                continue
+            lines = read_lines(path)
+            gated = any(
+                line.strip().startswith("#![allow(deprecated)]")
+                for line in lines
+            )
+            if gated:
+                continue
+            for n, line in enumerate(lines, 1):
+                code = strip_comment(line)
+                m = call_pat.search(code)
+                if m:
+                    violations.append(
+                        (relpath, n, "deprecated-shims",
+                         "call to a deprecated System shim "
+                         f"({m.group(0).strip()}...) outside an "
+                         "`#![allow(deprecated)]`-gated shim test; "
+                         "use the unified Column API")
+                    )
+    return violations
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument(
+        "--root", default=os.path.join(os.path.dirname(__file__), ".."),
+        help="repository root (default: the script's parent directory)",
+    )
+    args = ap.parse_args()
+    root = os.path.abspath(args.root)
+
+    violations = []
+    violations += check_pid_encapsulation(root)
+    violations += check_plane_math(root)
+    violations += check_deprecated_shims(root)
+
+    for relpath, line, rule, msg in violations:
+        print(f"{relpath}:{line}: [{rule}] {msg}")
+    if violations:
+        print(f"lint_arch: {len(violations)} violation(s)")
+        return min(len(violations), 125)
+    shims = deprecated_shim_names(root)
+    print(
+        "lint_arch: clean "
+        f"({len(shims)} deprecated shim(s) tracked, all call sites gated)"
+    )
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
